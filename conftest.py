@@ -1,0 +1,8 @@
+"""Repo-root pytest shim: the python package lives under python/ (build-time
+only), so running `pytest python/tests/` from the repo root needs python/
+on sys.path for `import compile.*`."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

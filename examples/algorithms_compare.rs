@@ -1,0 +1,48 @@
+//! Side-by-side comparison of all seven algorithms on the Fig. 3 linear
+//! regression, printing the table the paper's evaluation narrates: who
+//! converges linearly, who plateaus, and at what communication cost.
+//!
+//! ```
+//! cargo run --release --example algorithms_compare
+//! ```
+
+use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::data::synth;
+use dore::harness::{compare, TrainSpec};
+
+fn main() {
+    let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);
+    let template = TrainSpec {
+        hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
+        iters: 1500,
+        minibatch: None,
+        eval_every: 100,
+        seed: 42,
+        ..Default::default()
+    };
+
+    println!(
+        "{:<22}{:>13}{:>13}{:>11}{:>17}{:>9}",
+        "algorithm", "f(x)-f*", "dist-to-opt", "rho", "bits/rnd/worker", "wall s"
+    );
+    for (kind, m) in compare(&problem, AlgorithmKind::all(), &template) {
+        let rho = m
+            .empirical_rate(1e-8)
+            .map(|r| format!("{r:.4}"))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "{:<22}{:>13.3e}{:>13.3e}{:>11}{:>17.0}{:>9.2}",
+            kind.name(),
+            m.loss.last().copied().unwrap_or(f64::NAN),
+            m.dist_to_opt.last().copied().unwrap_or(f64::NAN),
+            rho,
+            m.bits_per_round_per_worker(20),
+            m.wall_seconds,
+        );
+    }
+    println!(
+        "\nExpected shape (paper Fig. 3): SGD, DIANA and DORE reach ~machine \
+         precision (linear rate);\nQSGD / MEM-SGD / DoubleSqueeze plateau at a \
+         compression-noise floor; DORE transmits ~5% of SGD's bits."
+    );
+}

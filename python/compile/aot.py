@@ -1,0 +1,155 @@
+"""AOT lowering: JAX → HLO **text** artifacts + manifest.json.
+
+Run once at build time (``make artifacts``); the rust runtime loads the
+text, compiles it on the PJRT CPU client and executes it with no python in
+the loop.
+
+HLO text — NOT ``lowered.compiler_ir("hlo")`` protos or ``.serialize()`` —
+is the interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which the published xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.quantize import quantize_dequantize
+
+MLP_SIZES = [784, 256, 64, 10]
+MLP_BATCH = 32
+LINREG_ROWS = 60  # 1200 rows / 20 workers (§5.1)
+LINREG_DIM = 500
+LINREG_LAMBDA = 0.1
+QUANTIZE_DIM = 4096
+QUANTIZE_BLOCK = 256
+LM_CFG = model.TransformerConfig()
+INIT_SEED = 1234
+
+
+def to_hlo_text(fn, *specs) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_json(s) -> dict:
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[s.dtype]
+    return {"dtype": dt, "shape": list(s.shape)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts go next to it")
+    args = ap.parse_args()
+    outdir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {"artifacts": {}}
+
+    def emit(name, fn, in_specs, out_specs):
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        text = to_hlo_text(fn, *in_specs)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [spec_json(s) for s in in_specs],
+            "outputs": [spec_json(s) for s in out_specs],
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB of HLO text")
+
+    # L1 cross-validation artifact: the Pallas ternary quantizer.
+    emit(
+        "quantize_b256",
+        functools.partial(quantize_dequantize, block_size=QUANTIZE_BLOCK),
+        [f32(QUANTIZE_DIM), i32(QUANTIZE_DIM)],
+        [f32(QUANTIZE_DIM)],
+    )
+
+    # Linear regression shard gradient (§5.1 shapes).
+    emit(
+        "linreg_grad",
+        functools.partial(model.linreg_value_and_grad, lam=LINREG_LAMBDA),
+        [f32(LINREG_DIM), f32(LINREG_ROWS, LINREG_DIM), f32(LINREG_ROWS)],
+        [f32(), f32(LINREG_DIM)],
+    )
+
+    # MLP gradient — mirrors rust/src/models/mlp.rs (cross-check test).
+    mlp_dim = model.shapes_size(model.mlp_shapes(MLP_SIZES))
+    emit(
+        "mlp_grad",
+        functools.partial(model.mlp_value_and_grad, sizes=MLP_SIZES),
+        [f32(mlp_dim), f32(MLP_BATCH, MLP_SIZES[0]), i32(MLP_BATCH)],
+        [f32(), f32(mlp_dim)],
+    )
+    mlp_init = model.mlp_init(MLP_SIZES, INIT_SEED)
+    mlp_init_file = "mlp_init.bin"
+    with open(os.path.join(outdir, mlp_init_file), "wb") as f:
+        f.write(np.asarray(mlp_init, np.float32).tobytes())
+    manifest["mlp"] = {
+        "param_count": int(mlp_dim),
+        "sizes": MLP_SIZES,
+        "batch": MLP_BATCH,
+        "init_file": mlp_init_file,
+    }
+
+    # Transformer LM: loss-only and loss+grad entry points.
+    cfg = LM_CFG
+    d = cfg.param_count()
+    emit(
+        "lm_grad",
+        functools.partial(model.lm_value_and_grad, cfg=cfg),
+        [f32(d), i32(cfg.batch, cfg.seq_len + 1)],
+        [f32(), f32(d)],
+    )
+    emit(
+        "lm_loss",
+        functools.partial(model.lm_loss, cfg=cfg),
+        [f32(d), i32(cfg.batch, cfg.seq_len + 1)],
+        [f32()],
+    )
+    lm_init = model.lm_init(cfg, INIT_SEED)
+    assert lm_init.shape[0] == d
+    lm_init_file = "lm_init.bin"
+    with open(os.path.join(outdir, lm_init_file), "wb") as f:
+        f.write(np.asarray(lm_init, np.float32).tobytes())
+    manifest["lm"] = {
+        "param_count": int(d),
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "init_file": lm_init_file,
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out} ({len(manifest['artifacts'])} artifacts, "
+          f"lm d={d}, mlp d={mlp_dim})")
+
+
+if __name__ == "__main__":
+    main()

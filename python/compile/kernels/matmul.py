@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: tiled matmul with a custom VJP.
+
+The dense projections of the L2 models (MLP layers, transformer QKV/O/MLP
+and the vocabulary projection) run through this kernel, so the paper's
+compute graph genuinely lowers through Pallas. Tiles are sized for VMEM
+(TPU adaptation of the paper's GPU testbed — see DESIGN.md
+§Hardware-Adaptation): one ``(bm × K)``·``(K × bn)`` product per grid step,
+accumulated on the MXU via ``jnp.dot`` with fp32 accumulation.
+
+``pallas_call`` has no automatic transpose rule, so autodiff is wired with
+``jax.custom_vjp``: the backward pass is two more Pallas matmuls
+(``dA = g·Bᵀ``, ``dB = Aᵀ·g``).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of ``n`` that is ≤ target (VMEM-sized tiles)."""
+    b = min(n, target)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _matmul_raw(a, b):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    bm, bn = _pick_block(m), _pick_block(n)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """``a @ b`` through the Pallas kernel, differentiable."""
+    return _matmul_raw(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_raw(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    return _matmul_raw(g, b.T), _matmul_raw(a.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

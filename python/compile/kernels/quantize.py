@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: blockwise Bernoulli ∞-norm ternary quantizer.
+
+This is the paper's compression operator (§3, "Bernoulli p-norm
+quantization" with p = ∞) as a Pallas kernel — the compute hot-spot of every
+DORE round. The kernel is written for the TPU memory hierarchy (one
+quantization block per grid step, staged HBM→VMEM by BlockSpec; see
+DESIGN.md §Hardware-Adaptation) but is lowered with ``interpret=True`` so the
+CPU PJRT client can execute the resulting HLO.
+
+Bit-exact contract with the rust implementation
+(``rust/src/compression/pnorm.rs``):
+
+* randomness enters as ``r24: i32[d]`` with values in ``[0, 2^24)`` — the
+  caller draws ``(next_u32() >> 8)`` from the shared xoshiro stream;
+* the uniform float is ``uf = r24 * 2^-24`` (exactly representable);
+* fire condition ``uf < |x| * (1/norm)``, sign ``x >= 0 ? +1 : -1``;
+* output is the **dequantized** value ``norm * trit`` (what the receiver's
+  ``add_scaled_into`` reconstructs).
+
+All-zero blocks: ``1/norm = inf`` makes ``p`` NaN, every comparison False,
+and ``norm * 0`` stays 0 — identical to the rust fast path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INV_2_24 = float(1.0 / (1 << 24))
+
+
+def _quantize_kernel(x_ref, r_ref, out_ref):
+    """One quantization block per grid step (block resident in VMEM)."""
+    x = x_ref[...]
+    r24 = r_ref[...]
+    norm = jnp.max(jnp.abs(x))
+    inv = 1.0 / norm  # inf for all-zero blocks -> NaN probs -> zero output
+    p = jnp.abs(x) * inv
+    uf = r24.astype(jnp.float32) * INV_2_24
+    fire = uf < p
+    sign = jnp.where(x >= 0.0, 1.0, -1.0).astype(jnp.float32)
+    trit = jnp.where(fire, sign, 0.0)
+    out_ref[...] = norm * trit
+
+
+@functools.partial(jax.jit, static_argnames=("block_size",))
+def quantize_dequantize(x, r24, *, block_size: int = 256):
+    """Quantize-then-decode ``x`` blockwise; shapes must divide evenly.
+
+    Returns the dequantized vector (norm · trit per coordinate). The wire
+    representation (block norms + packed trits) is recoverable from it
+    exactly: norm = max(|out|) per block, trit = sign(out).
+    """
+    (d,) = x.shape
+    assert d % block_size == 0, f"dim {d} not a multiple of block {block_size}"
+    grid = (d // block_size,)
+    spec = pl.BlockSpec((block_size,), lambda i: (i,))
+    return pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((d,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, r24)
+
+
+def block_norms(x, *, block_size: int = 256):
+    """∞-norm of each quantization block (the fp32 side-channel a wire
+    encoder would transmit alongside the trits)."""
+    return jnp.max(jnp.abs(x.reshape(-1, block_size)), axis=1)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest compares kernel vs oracle over shape/seed sweeps)."""
+
+import jax.numpy as jnp
+
+INV_2_24 = float(1.0 / (1 << 24))
+
+
+def quantize_dequantize_ref(x, r24, *, block_size: int = 256):
+    """Reference blockwise Bernoulli ∞-norm ternary quantize→decode."""
+    d = x.shape[0]
+    assert d % block_size == 0
+    xb = x.reshape(-1, block_size)
+    rb = r24.reshape(-1, block_size)
+    norm = jnp.max(jnp.abs(xb), axis=1, keepdims=True)
+    p = jnp.abs(xb) / norm  # NaN rows for zero blocks -> fire False
+    uf = rb.astype(jnp.float32) * INV_2_24
+    fire = uf < p
+    sign = jnp.where(xb >= 0.0, 1.0, -1.0)
+    out = norm * jnp.where(fire, sign, 0.0)
+    return out.reshape(d)
+
+
+def matmul_ref(a, b):
+    """Reference matmul with fp32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)

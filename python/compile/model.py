@@ -1,0 +1,248 @@
+"""L2: the JAX compute graphs lowered to the AOT artifacts.
+
+Every exported function takes the model as a **flat fp32 vector** (plus the
+data batch) and returns ``(loss, flat_grad)`` — the distributed algorithms
+on the rust side treat parameters as opaque ``R^d``, so the flattening
+convention lives here, mirrored exactly by the rust oracles:
+
+* MLP: per layer ``W (in×out, row-major)`` then ``b`` — identical to
+  ``rust/src/models/mlp.rs::MlpArch::offsets``.
+* Transformer: see ``TransformerConfig.shapes`` (order is embedding, pos,
+  per-layer [ln1, qkv, o, ln2, fc1, fc2], final ln, unembed).
+
+All dense projections route through the L1 Pallas matmul kernel
+(``kernels.matmul``), so the artifact HLO genuinely contains the
+Pallas-lowered compute.
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul
+
+# ---------------------------------------------------------------------------
+# Flat-parameter helpers
+# ---------------------------------------------------------------------------
+
+
+def shapes_size(shapes: List[Tuple[int, ...]]) -> int:
+    return sum(int(jnp.prod(jnp.array(s))) if s else 1 for s in shapes)
+
+
+def unflatten(flat, shapes):
+    """Split a flat vector into arrays of the given shapes (row-major)."""
+    out = []
+    off = 0
+    for s in shapes:
+        n = 1
+        for d in s:
+            n *= d
+        out.append(flat[off : off + n].reshape(s))
+        off += n
+    assert off == flat.shape[0], f"flat vector has {flat.shape[0]}, used {off}"
+    return out
+
+
+def flatten(arrays):
+    return jnp.concatenate([a.reshape(-1) for a in arrays])
+
+
+# ---------------------------------------------------------------------------
+# Linear regression (§5.1)
+# ---------------------------------------------------------------------------
+
+
+def linreg_loss(x, a, b, lam: float = 0.1):
+    """Per-shard objective: (1/m)‖A x − b‖² + λ‖x‖² (matches
+    ``rust/src/models/linreg.rs``)."""
+    r = matmul(a, x[:, None])[:, 0] - b
+    return jnp.mean(r * r) + lam * jnp.sum(x * x)
+
+
+def linreg_value_and_grad(x, a, b, lam: float = 0.1):
+    loss, g = jax.value_and_grad(linreg_loss)(x, a, b, lam)
+    return loss, g
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier (Fig. 4/5 stand-in; mirrors rust/src/models/mlp.rs)
+# ---------------------------------------------------------------------------
+
+
+def mlp_shapes(sizes: List[int]):
+    shapes = []
+    for i in range(len(sizes) - 1):
+        shapes.append((sizes[i], sizes[i + 1]))  # W
+        shapes.append((sizes[i + 1],))  # b
+    return shapes
+
+
+def mlp_loss(flat, feats, labels, sizes: List[int]):
+    """Softmax cross-entropy of a ReLU MLP, mean over the batch."""
+    params = unflatten(flat, mlp_shapes(sizes))
+    h = feats
+    nl = len(sizes) - 1
+    for layer in range(nl):
+        w, b = params[2 * layer], params[2 * layer + 1]
+        h = matmul(h, w) + b
+        if layer + 1 < nl:
+            h = jax.nn.relu(h)
+    logp = jax.nn.log_softmax(h, axis=-1)
+    return -jnp.mean(logp[jnp.arange(feats.shape[0]), labels])
+
+
+def mlp_value_and_grad(flat, feats, labels, sizes: List[int]):
+    loss, g = jax.value_and_grad(mlp_loss)(flat, feats, labels, sizes)
+    return loss, g
+
+
+def mlp_init(sizes: List[int], seed: int) -> jnp.ndarray:
+    """He-uniform init (biases zero). The rust MLP has its own init; this
+    one is only used to pick the evaluation point of the L2↔L3 gradient
+    cross-check, so any fixed distribution works."""
+    key = jax.random.PRNGKey(seed)
+    arrays = []
+    for i in range(len(sizes) - 1):
+        key, sub = jax.random.split(key)
+        bound = (6.0 / sizes[i]) ** 0.5
+        arrays.append(
+            jax.random.uniform(
+                sub, (sizes[i], sizes[i + 1]), jnp.float32, -bound, bound
+            )
+        )
+        arrays.append(jnp.zeros((sizes[i + 1],), jnp.float32))
+    return flatten(arrays)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    seq_len: int = 64
+    batch: int = 8
+    d_ff: int = 1024
+
+    def shapes(self):
+        """Parameter shapes, in flat-vector order."""
+        c = self
+        shapes = [
+            (c.vocab, c.d_model),  # token embedding
+            (c.seq_len, c.d_model),  # learned positions
+        ]
+        for _ in range(c.n_layers):
+            shapes += [
+                (c.d_model,),  # ln1 scale
+                (c.d_model,),  # ln1 bias
+                (c.d_model, 3 * c.d_model),  # qkv
+                (c.d_model, c.d_model),  # attn out
+                (c.d_model,),  # ln2 scale
+                (c.d_model,),  # ln2 bias
+                (c.d_model, c.d_ff),  # fc1
+                (c.d_ff,),  # fc1 bias
+                (c.d_ff, c.d_model),  # fc2
+                (c.d_model,),  # fc2 bias
+            ]
+        shapes += [
+            (c.d_model,),  # final ln scale
+            (c.d_model,),  # final ln bias
+            (c.d_model, c.vocab),  # unembed
+        ]
+        return shapes
+
+    def param_count(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for s in self.shapes())
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def transformer_logits(flat, tokens, cfg: TransformerConfig):
+    """Causal LM logits for ``tokens: i32[B, T]``."""
+    c = cfg
+    params = unflatten(flat, c.shapes())
+    it = iter(params)
+    emb = next(it)
+    pos = next(it)
+    b, t = tokens.shape
+    h = emb[tokens] + pos[None, :t, :]
+    hd = c.d_model // c.n_heads
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    for _ in range(c.n_layers):
+        ln1_s, ln1_b = next(it), next(it)
+        w_qkv, w_o = next(it), next(it)
+        ln2_s, ln2_b = next(it), next(it)
+        w1, b1, w2, b2 = next(it), next(it), next(it), next(it)
+        # attention
+        x = _layernorm(h, ln1_s, ln1_b)
+        qkv = matmul(x.reshape(b * t, c.d_model), w_qkv).reshape(b, t, 3, c.n_heads, hd)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (hd**0.5)
+        att = jnp.where(causal[None, None, :, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * t, c.d_model)
+        h = h + matmul(ctx, w_o).reshape(b, t, c.d_model)
+        # mlp
+        x = _layernorm(h, ln2_s, ln2_b)
+        y = matmul(x.reshape(b * t, c.d_model), w1) + b1
+        y = jax.nn.gelu(y)
+        y = matmul(y, w2) + b2
+        h = h + y.reshape(b, t, c.d_model)
+    lnf_s, lnf_b = next(it), next(it)
+    w_out = next(it)
+    h = _layernorm(h, lnf_s, lnf_b)
+    return matmul(h.reshape(b * t, c.d_model), w_out).reshape(b, t, c.vocab)
+
+
+def lm_loss(flat, tokens, cfg: TransformerConfig):
+    """Mean next-token cross-entropy. ``tokens: i32[B, T+1]`` — inputs are
+    ``tokens[:, :-1]``, targets ``tokens[:, 1:]``."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = transformer_logits(flat, inp, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    b, t = tgt.shape
+    picked = jnp.take_along_axis(logp, tgt[:, :, None], axis=-1)[:, :, 0]
+    return -jnp.mean(picked)
+
+
+def lm_value_and_grad(flat, tokens, cfg: TransformerConfig):
+    loss, g = jax.value_and_grad(lm_loss)(flat, tokens, cfg)
+    return loss, g
+
+
+def lm_init(cfg: TransformerConfig, seed: int) -> jnp.ndarray:
+    """GPT-2-style init: N(0, 0.02) for matrices, zeros for biases, ones for
+    layernorm scales."""
+    key = jax.random.PRNGKey(seed)
+    arrays = []
+    for i, s in enumerate(cfg.shapes()):
+        key, sub = jax.random.split(key)
+        if len(s) == 1:
+            # layernorm scales are every first vector of a (scale, bias)
+            # pair; identify scales by construction order.
+            arrays.append(jnp.zeros(s, jnp.float32))
+        else:
+            arrays.append(0.02 * jax.random.normal(sub, s, jnp.float32))
+    flat = flatten(arrays)
+    # set layernorm scales to one: recompute offsets
+    out = list(arrays)
+    shapes = cfg.shapes()
+    idx = 2  # skip emb, pos
+    for _ in range(cfg.n_layers):
+        out[idx] = jnp.ones(shapes[idx], jnp.float32)  # ln1 scale
+        out[idx + 4] = jnp.ones(shapes[idx + 4], jnp.float32)  # ln2 scale
+        idx += 10
+    out[idx] = jnp.ones(shapes[idx], jnp.float32)  # final ln scale
+    return flatten(out)

@@ -1,0 +1,79 @@
+"""AOT pipeline tests: lowering produces loadable HLO text and a manifest
+consistent with the model definitions (without invoking rust — the rust
+side of the contract is covered by rust/tests/integration_runtime.rs)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_to_hlo_text_produces_parseable_module():
+    def fn(x, y):
+        return (x @ y + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(fn, spec, spec)
+    # HLO text shape: a module header and an ENTRY computation
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # inputs appear as parameters
+    assert text.count("parameter(") >= 2
+
+
+def test_to_hlo_text_of_pallas_kernel_contains_no_custom_call():
+    # interpret=True must lower to plain HLO the CPU client can run:
+    # no Mosaic/TPU custom-calls may survive.
+    from compile.kernels.quantize import quantize_dequantize
+    import functools
+
+    text = aot.to_hlo_text(
+        functools.partial(quantize_dequantize, block_size=128),
+        jax.ShapeDtypeStruct((256,), jnp.float32),
+        jax.ShapeDtypeStruct((256,), jnp.int32),
+    )
+    assert "custom-call" not in text.lower(), "Mosaic custom-call leaked into HLO"
+
+
+def test_spec_json_mapping():
+    s = aot.spec_json(aot.f32(3, 4))
+    assert s == {"dtype": "f32", "shape": [3, 4]}
+    s = aot.spec_json(aot.i32())
+    assert s == {"dtype": "i32", "shape": []}
+
+
+def test_lm_config_param_count_matches_manifest_convention():
+    cfg = aot.LM_CFG
+    assert cfg.param_count() == model.lm_init(cfg, 0).shape[0]
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_built_manifest_is_consistent():
+    root = os.path.join(os.path.dirname(__file__), "../../artifacts")
+    with open(os.path.join(root, "manifest.json")) as f:
+        man = json.load(f)
+    # every artifact file exists and is non-trivial HLO text
+    for name, entry in man["artifacts"].items():
+        path = os.path.join(root, entry["file"])
+        assert os.path.exists(path), f"{name} missing"
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{name} is not HLO text"
+        assert entry["inputs"] and entry["outputs"]
+    # init files match declared parameter counts
+    lm = man["lm"]
+    assert os.path.getsize(os.path.join(root, lm["init_file"])) == 4 * lm["param_count"]
+    mlp = man["mlp"]
+    assert os.path.getsize(os.path.join(root, mlp["init_file"])) == 4 * mlp["param_count"]
+    # declared lm shapes match the config used to lower
+    grad = man["artifacts"]["lm_grad"]
+    assert grad["inputs"][0]["shape"] == [lm["param_count"]]
+    assert grad["inputs"][1]["shape"] == [lm["batch"], lm["seq_len"] + 1]

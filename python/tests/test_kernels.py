@@ -1,0 +1,138 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+`hypothesis` is not installed in this offline image, so the shape/seed
+sweeps are explicit parameterized grids — same coverage philosophy
+(kernel == oracle over a randomized family of inputs), deterministic seeds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.matmul import matmul, _pick_block
+from compile.kernels.quantize import block_norms, quantize_dequantize
+from compile.kernels.ref import matmul_ref, quantize_dequantize_ref
+
+
+def rand_f32(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def rand_r24(key, shape):
+    return jax.random.randint(key, shape, 0, 1 << 24, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,block", [(256, 256), (512, 128), (4096, 256),
+                                     (1024, 64), (768, 256), (96, 32)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_quantize_matches_ref(d, block, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = rand_f32(k1, (d,))
+    r = rand_r24(k2, (d,))
+    got = quantize_dequantize(x, r, block_size=block)
+    want = quantize_dequantize_ref(x, r, block_size=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_zero_block_stays_zero():
+    d, block = 512, 256
+    x = jnp.zeros((d,), jnp.float32).at[300].set(1.0)  # first block all-zero
+    r = rand_r24(jax.random.PRNGKey(3), (d,))
+    out = np.asarray(quantize_dequantize(x, r, block_size=block))
+    assert (out[:256] == 0).all()
+
+
+def test_quantize_output_is_ternary_times_norm():
+    d, block = 1024, 128
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    x = rand_f32(k1, (d,), scale=3.0)
+    r = rand_r24(k2, (d,))
+    out = np.asarray(quantize_dequantize(x, r, block_size=block)).reshape(-1, block)
+    norms = np.asarray(block_norms(x, block_size=block))
+    for b in range(out.shape[0]):
+        vals = np.unique(np.abs(out[b]))
+        assert set(vals) <= {0.0, norms[b]}, f"block {b}: {vals} vs {norms[b]}"
+
+
+def test_quantize_is_unbiased_monte_carlo():
+    d, block = 256, 256
+    x = rand_f32(jax.random.PRNGKey(5), (d,))
+    acc = np.zeros(d, np.float64)
+    trials = 3000
+    keys = jax.random.split(jax.random.PRNGKey(6), trials)
+    for k in keys:
+        acc += np.asarray(quantize_dequantize(x, rand_r24(k, (d,)), block_size=block))
+    mean = acc / trials
+    # E Q(x) = x within Monte-Carlo noise (||x||_inf / sqrt(trials) scale)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=0.12)
+
+
+def test_quantize_variance_bound_assumption_1():
+    # E||Q(x)-x||^2 <= C ||x||^2 with C = sqrt(b) - 1 (Remark 1 bound)
+    d, block = 256, 64
+    x = rand_f32(jax.random.PRNGKey(7), (d,))
+    xsq = float(jnp.sum(x * x))
+    trials = 1500
+    err = 0.0
+    keys = jax.random.split(jax.random.PRNGKey(8), trials)
+    for k in keys:
+        q = np.asarray(quantize_dequantize(x, rand_r24(k, (d,)), block_size=block))
+        err += float(((q - np.asarray(x)) ** 2).sum())
+    err /= trials
+    c = block**0.5 - 1
+    assert err <= 1.05 * c * xsq, f"E err {err} vs C||x||^2 {c * xsq}"
+
+
+def test_quantize_rejects_ragged():
+    with pytest.raises(AssertionError):
+        quantize_dequantize(jnp.zeros(100), jnp.zeros(100, jnp.int32),
+                            block_size=64)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 64, 128), (256, 256, 256),
+                                   (512, 128, 64), (7, 13, 5), (1, 1, 1),
+                                   (33, 17, 129)])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_matmul_matches_ref(m, k, n, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = rand_f32(k1, (m, k))
+    b = rand_f32(k2, (k, n))
+    got = matmul(a, b)
+    want = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_gradients_match_ref():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    a = rand_f32(k1, (64, 32))
+    b = rand_f32(k2, (32, 48))
+    co = rand_f32(k3, (64, 48))
+
+    def f_pallas(a, b):
+        return jnp.sum(matmul(a, b) * co)
+
+    def f_ref(a, b):
+        return jnp.sum(matmul_ref(a, b) * co)
+
+    ga, gb = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ra, rb = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(ra), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), rtol=1e-5, atol=1e-5)
+
+
+def test_pick_block_divides():
+    for n in [1, 7, 64, 100, 128, 129, 512, 1000]:
+        b = _pick_block(n)
+        assert n % b == 0 and 1 <= b <= min(n, 128)

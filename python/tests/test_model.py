@@ -1,0 +1,155 @@
+"""L2 correctness: model graphs (shapes, gradients, loss semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+# ---------------------------------------------------------------------------
+# flat-parameter plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_unflatten_flatten_roundtrip():
+    shapes = [(3, 4), (4,), (2, 2)]
+    flat = jnp.arange(20, dtype=jnp.float32)
+    arrays = model.unflatten(flat, shapes)
+    assert [a.shape for a in arrays] == shapes
+    back = model.flatten(arrays)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(flat))
+
+
+def test_mlp_shapes_match_rust_layout():
+    # rust MlpArch [784,256,64,10]: W then b per layer, row-major W
+    sizes = [784, 256, 64, 10]
+    shapes = model.mlp_shapes(sizes)
+    assert shapes == [(784, 256), (256,), (256, 64), (64,), (64, 10), (10,)]
+    d = model.shapes_size(shapes)
+    assert d == 784 * 256 + 256 + 256 * 64 + 64 + 64 * 10 + 10
+
+
+# ---------------------------------------------------------------------------
+# linreg
+# ---------------------------------------------------------------------------
+
+
+def test_linreg_grad_matches_closed_form():
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    m, d, lam = 20, 8, 0.1
+    a = jax.random.normal(k1, (m, d), jnp.float32)
+    b = jax.random.normal(k2, (m,), jnp.float32)
+    x = jax.random.normal(k3, (d,), jnp.float32)
+    loss, g = model.linreg_value_and_grad(x, a, b, lam)
+    r = a @ x - b
+    want_loss = float(jnp.mean(r * r) + lam * jnp.sum(x * x))
+    want_g = np.asarray(2.0 / m * a.T @ r + 2 * lam * x)
+    assert abs(float(loss) - want_loss) < 1e-5
+    np.testing.assert_allclose(np.asarray(g), want_g, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+
+def test_mlp_loss_at_uniform_logits_is_log_k():
+    sizes = [6, 5, 4]
+    d = model.shapes_size(model.mlp_shapes(sizes))
+    flat = jnp.zeros((d,), jnp.float32)  # all-zero params -> uniform logits
+    feats = jax.random.normal(jax.random.PRNGKey(1), (16, 6), jnp.float32)
+    labels = jnp.zeros((16,), jnp.int32)
+    loss = model.mlp_loss(flat, feats, labels, sizes)
+    assert abs(float(loss) - np.log(4)) < 1e-5
+
+
+def test_mlp_grad_matches_finite_differences():
+    sizes = [5, 7, 3]
+    d = model.shapes_size(model.mlp_shapes(sizes))
+    flat = model.mlp_init(sizes, 0)
+    feats = jax.random.normal(jax.random.PRNGKey(2), (8, 5), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(3), (8,), 0, 3, jnp.int32)
+    _, g = model.mlp_value_and_grad(flat, feats, labels, sizes)
+    g = np.asarray(g)
+    eps = 1e-2
+    rng = np.random.RandomState(0)
+    for j in rng.choice(d, size=8, replace=False):
+        e = jnp.zeros((d,), jnp.float32).at[j].set(eps)
+        fp = float(model.mlp_loss(flat + e, feats, labels, sizes))
+        fm = float(model.mlp_loss(flat - e, feats, labels, sizes))
+        fd = (fp - fm) / (2 * eps)
+        assert abs(fd - g[j]) < 2e-2 * (1 + abs(fd)), f"coord {j}: {fd} vs {g[j]}"
+
+
+def test_mlp_training_step_reduces_loss():
+    sizes = [10, 16, 4]
+    flat = model.mlp_init(sizes, 1)
+    feats = jax.random.normal(jax.random.PRNGKey(4), (64, 10), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(5), (64,), 0, 4, jnp.int32)
+    l0, g = model.mlp_value_and_grad(flat, feats, labels, sizes)
+    for _ in range(20):
+        _, g = model.mlp_value_and_grad(flat, feats, labels, sizes)
+        flat = flat - 0.5 * g
+    l1 = model.mlp_loss(flat, feats, labels, sizes)
+    assert float(l1) < 0.6 * float(l0)
+
+
+# ---------------------------------------------------------------------------
+# transformer
+# ---------------------------------------------------------------------------
+
+TINY = model.TransformerConfig(vocab=64, d_model=32, n_layers=2, n_heads=2,
+                               seq_len=16, batch=2, d_ff=64)
+
+
+def test_lm_param_count_matches_shapes():
+    got = TINY.param_count()
+    manual = sum(int(np.prod(s)) for s in TINY.shapes())
+    assert got == manual
+    flat = model.lm_init(TINY, 0)
+    assert flat.shape == (got,)
+
+
+def test_lm_loss_near_log_vocab_at_init():
+    flat = model.lm_init(TINY, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 17), 0, 64, jnp.int32)
+    loss = float(model.lm_loss(flat, toks, TINY))
+    assert abs(loss - np.log(64)) < 0.5, loss
+
+
+def test_lm_causality():
+    # changing a future token must not change the logit at position t
+    flat = model.lm_init(TINY, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0, 64, jnp.int32)
+    logits_a = model.transformer_logits(flat, toks, TINY)
+    toks_b = toks.at[0, 10].set((toks[0, 10] + 1) % 64)
+    logits_b = model.transformer_logits(flat, toks_b, TINY)
+    np.testing.assert_allclose(np.asarray(logits_a[0, :10]),
+                               np.asarray(logits_b[0, :10]), atol=1e-5)
+    assert not np.allclose(np.asarray(logits_a[0, 10:]),
+                           np.asarray(logits_b[0, 10:]), atol=1e-6)
+
+
+def test_lm_grad_is_finite_and_nonzero():
+    flat = model.lm_init(TINY, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 17), 0, 64, jnp.int32)
+    loss, g = model.lm_value_and_grad(flat, toks, TINY)
+    g = np.asarray(g)
+    assert np.isfinite(g).all()
+    assert np.abs(g).max() > 0
+    assert np.isfinite(float(loss))
+
+
+def test_lm_training_reduces_loss_on_fixed_batch():
+    flat = model.lm_init(TINY, 0)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 17), 0, 64, jnp.int32)
+    l0 = float(model.lm_loss(flat, toks, TINY))
+    vg = jax.jit(lambda f: model.lm_value_and_grad(f, toks, TINY))
+    for _ in range(30):
+        _, g = vg(flat)
+        flat = flat - 0.5 * g
+    l1 = float(model.lm_loss(flat, toks, TINY))
+    assert l1 < 0.5 * l0, f"{l0} -> {l1}"

@@ -1,0 +1,63 @@
+//! Figure 2 regeneration: per-iteration time vs network bandwidth at
+//! ResNet18 scale (d = 11,173,962 parameters), 10 workers + 1 PS.
+//!
+//! The payload sizes are **measured** by running one real coordinator round
+//! of each scheme at full dimension (actual compression, actual codecs);
+//! the network time is the star-topology model of `comm::netsim`
+//! (DESIGN.md substitution for the paper's shared Gigabit Ethernet).
+//! `compute_s` stands in for the K80 fwd+bwd time per round; the paper's
+//! Fig. 2 folds the same constant into every scheme.
+//!
+//! ```
+//! cargo bench --bench fig2_bandwidth
+//! ```
+
+use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::harness::{characterize_round, simulated_iteration_time};
+
+fn main() {
+    let d = 11_173_962usize;
+    let n_workers = 10;
+    let compute_s = 0.18;
+    let hp = HyperParams::paper_defaults();
+
+    // Characterize with 2 in-memory workers (payload bits per worker are
+    // identical for any n; n only enters the timing model) to bound RSS.
+    println!("=== Fig. 2: per-iteration time, d={d}, n={n_workers} ===");
+    let schemes = [AlgorithmKind::Sgd, AlgorithmKind::Qsgd, AlgorithmKind::Dore];
+    let chars: Vec<_> = schemes
+        .iter()
+        .map(|&a| {
+            let (up, down, comp) = characterize_round(a, d, 2, &hp);
+            println!(
+                "{:<8} uplink={:>12} bits  downlink={:>12} bits  codec+state={:.3}s",
+                a.name(),
+                up,
+                down,
+                comp
+            );
+            (up, down)
+        })
+        .collect();
+    println!();
+    println!("{:>10},{:>12},{:>12},{:>12},{:>14}", "Mbps", "SGD_s", "QSGD_s", "DORE_s", "DOREspeedup");
+    for bw in [1000e6, 700e6, 500e6, 300e6, 200e6, 100e6, 50e6, 20e6, 10e6] {
+        let t: Vec<f64> = chars
+            .iter()
+            .map(|&(up, down)| simulated_iteration_time(up, down, compute_s, bw, n_workers))
+            .collect();
+        println!(
+            "{:>10},{:>12.4},{:>12.4},{:>12.4},{:>14.1}",
+            (bw / 1e6) as u64,
+            t[0],
+            t[1],
+            t[2],
+            t[0] / t[2]
+        );
+    }
+    println!(
+        "\nExpected shape (paper): near-parity at 1 Gbps (compute-bound); at low \
+         bandwidth SGD is slowest,\nQSGD is ~2x faster than SGD (uplink-only \
+         compression), DORE stays nearly flat (both directions compressed)."
+    );
+}

@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks (§Perf instrument). No criterion in this
+//! offline environment, so this is a small hand-rolled timing harness:
+//! warmup + N timed reps, reporting median wall time and derived
+//! throughput. Used for the EXPERIMENTS.md §Perf before/after ledger.
+//!
+//! ```
+//! cargo bench --bench hotpath
+//! ```
+
+use dore::algorithms::{build, AlgorithmKind, HyperParams};
+use dore::compression::{codec, Compressor, PNormQuantizer, Xoshiro256};
+use dore::models::linalg;
+
+/// Median-of-N timing.
+fn bench<F: FnMut()>(name: &str, bytes_per_iter: Option<u64>, reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let med = times[reps / 2];
+    match bytes_per_iter {
+        Some(b) => println!(
+            "{name:<44}{:>12.3} ms   {:>8.2} GB/s",
+            med * 1e3,
+            b as f64 / med / 1e9
+        ),
+        None => println!("{name:<44}{:>12.3} ms", med * 1e3),
+    }
+    med
+}
+
+fn main() {
+    println!("=== hot-path microbenches (median of 9) ===\n");
+    let d = 1 << 20; // 1M coords = 4 MB
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+    let bytes = 4 * d as u64;
+
+    // -- L3 kernel 1: ternary quantization (the per-round compressor) -----
+    let q = PNormQuantizer::paper_default();
+    let mut sink = 0u64;
+    bench("quantize ternary b=256 (1M f32)", Some(bytes), 9, || {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        let c = q.compress(&x, &mut r);
+        sink ^= c.dim() as u64;
+    });
+
+    // -- L3 kernel 2: wire encode / decode ---------------------------------
+    let mut r = Xoshiro256::seed_from_u64(7);
+    let c = q.compress(&x, &mut r);
+    let enc = codec::encode(&c);
+    println!("  (payload {} bytes = {:.2} bits/coord)", enc.len(), enc.len() as f64 * 8.0 / d as f64);
+    bench("codec encode ternary (1M trits)", Some(bytes), 9, || {
+        let e = codec::encode(&c);
+        sink ^= e.len() as u64;
+    });
+    bench("codec decode ternary (1M trits)", Some(bytes), 9, || {
+        let b = codec::decode(&enc).unwrap();
+        sink ^= b.dim() as u64;
+    });
+
+    // -- L3 kernel 3: decode-and-apply (h += α Δ̂ / x̂ += β q̂) -------------
+    let mut acc = vec![0.0f32; d];
+    bench("add_scaled_into ternary -> dense (1M)", Some(bytes), 9, || {
+        c.add_scaled_into(0.1, &mut acc);
+    });
+
+    // -- L3 kernel 4: dense axpy (the uncompressed baseline op) -----------
+    let y: Vec<f32> = (0..d).map(|_| 0.5).collect();
+    bench("dense axpy (1M f32)", Some(bytes), 9, || {
+        linalg::axpy(0.1, &y, &mut acc);
+    });
+
+    // -- full master round at ResNet18 scale ------------------------------
+    let d_big = 11_173_962usize;
+    println!();
+    for algo in [AlgorithmKind::Dore, AlgorithmKind::Sgd] {
+        let x0 = vec![0.0f32; d_big];
+        let hp = HyperParams::paper_defaults();
+        let (mut ws, mut master) = build(algo, 1, &x0, &hp).unwrap();
+        let mut g_rng = Xoshiro256::seed_from_u64(3);
+        let grad: Vec<f32> = (0..d_big).map(|_| 0.01 * g_rng.next_gaussian()).collect();
+        let mut k = 0u64;
+        bench(
+            &format!("{} full worker+master round (d=11.17M)", algo.name()),
+            Some(4 * d_big as u64),
+            5,
+            || {
+                let mut wr = Xoshiro256::for_site(1, 1, k);
+                let up = ws[0].round(k as usize, &grad, &mut wr);
+                let mut mr = Xoshiro256::for_site(1, 0, k);
+                let down = master.round(k as usize, &[up], &mut mr);
+                ws[0].apply_downlink(k as usize, &down);
+                k += 1;
+            },
+        );
+    }
+    eprintln!("(sink {sink})");
+}

@@ -1,0 +1,100 @@
+//! Table 1 regeneration: empirical counterpart of the paper's rate
+//! comparison, plus the §3.2 bits-per-iteration table.
+//!
+//! Table 1's columns are analytic; the measurable consequences are:
+//! * "Linear rate ✓" → the strongly convex run reaches machine precision
+//!   with a constant step size and a measurable geometric factor ρ̂ < 1;
+//!   "N/A" → the run stalls at a noise floor (rate estimate meaningless).
+//! * "Compression Grad / Grad+Model" → bits moved per iteration.
+//! * Nonconvex column → final train loss on the MLP workload under the
+//!   same budget (all linear-speedup methods should track SGD).
+//!
+//! ```
+//! cargo bench --bench table1_rates
+//! ```
+
+use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::compression::codec::scheme_bits;
+use dore::data::synth;
+use dore::harness::{run_inproc, TrainSpec};
+use dore::models::mlp::{Mlp, MlpArch};
+
+fn main() {
+    // --- strongly convex: empirical linear rate --------------------------
+    let p = synth::linreg_problem(1200, 500, 20, 0.1, 42);
+    let sc_template = TrainSpec {
+        hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
+        iters: 2000,
+        minibatch: None,
+        eval_every: 50,
+        seed: 42,
+        ..Default::default()
+    };
+    // --- nonconvex: MLP final loss ---------------------------------------
+    let (tr, te) = synth::mnist_like(1650, 42).split_test(150);
+    let mlp = Mlp::new(MlpArch::new(&[784, 64, 10]), tr, Some(te), 10, 42);
+    let nc_template = TrainSpec {
+        hp: HyperParams { lr: 0.1, ..HyperParams::paper_defaults() },
+        iters: 300,
+        minibatch: Some(32),
+        eval_every: 50,
+        seed: 42,
+        ..Default::default()
+    };
+
+    println!("=== Table 1 (empirical): d=500 linreg / 784-64-10 MLP ===");
+    println!(
+        "{:<22}{:>12}{:>14}{:>12}{:>16}{:>16}",
+        "algorithm", "compress", "linear rate", "rho_hat", "final ||x-x*||", "nonconvex loss"
+    );
+    for &k in AlgorithmKind::all() {
+        let sc = run_inproc(&p, &TrainSpec { algo: k, ..sc_template.clone() });
+        let nc = run_inproc(&mlp, &TrainSpec { algo: k, ..nc_template.clone() });
+        let fin = sc.dist_to_opt.last().copied().unwrap();
+        let linear = fin.is_finite() && fin < 1e-3;
+        let rho = sc
+            .empirical_rate(1e-8)
+            .map(|r| format!("{r:.4}"))
+            .unwrap_or_else(|| "-".into());
+        let compress = match k {
+            AlgorithmKind::Sgd => "none",
+            AlgorithmKind::Dore | AlgorithmKind::DoubleSqueeze | AlgorithmKind::DoubleSqueezeTopk => {
+                "grad+model"
+            }
+            _ => "grad",
+        };
+        println!(
+            "{:<22}{:>12}{:>14}{:>12}{:>16.3e}{:>16.4}",
+            k.name(),
+            compress,
+            if linear { "yes" } else { "N/A" },
+            rho,
+            fin,
+            nc.loss.last().unwrap(),
+        );
+    }
+
+    // --- §3.2: bits per iteration ----------------------------------------
+    println!("\n=== §3.2 compression-rate table (d = 11,173,962, block 256) ===");
+    let d = 11_173_962u64;
+    let full = 2 * 32 * d;
+    println!("{:<28}{:>16}{:>16}{:>12}", "scheme", "uplink bits", "downlink bits", "saved");
+    for (name, gc, mc) in [
+        ("P-SGD (none)", false, false),
+        ("QSGD/DIANA/MEM-SGD (grad)", true, false),
+        ("DORE (grad+model)", true, true),
+    ] {
+        let (up, down) = scheme_bits(d, 256, gc, mc);
+        println!(
+            "{:<28}{:>16}{:>16}{:>11.1}%",
+            name,
+            up,
+            down,
+            100.0 * (1.0 - (up + down) as f64 / full as f64)
+        );
+    }
+    println!(
+        "\npaper: gradient-only schemes cut ~47%; DORE cuts >94% \
+         (95% at the idealized 1.5 bits/trit; base-243 packing = 1.6)."
+    );
+}

@@ -1,0 +1,320 @@
+//! **DORE** — the paper's contribution (Algorithm 1; Algorithm 2 is the
+//! special case `R = 0`, which this implementation recovers automatically
+//! since `prox_{γ·0}` is the identity).
+//!
+//! Uplink (worker `i`, lines 4–9):
+//! ```text
+//! Δ_i = g_i − h_i            gradient residual
+//! send Δ̂_i = Q(Δ_i)
+//! h_i ← h_i + α·Δ̂_i          (E_Q h_i^{k+1} = (1−α)h_i + α g_i — Lemma 1)
+//! ```
+//!
+//! Downlink (master, lines 13–22):
+//! ```text
+//! ĝ = h + (1/n)Σ Δ̂_i         recovered averaged gradient
+//! h ← h + α·(1/n)Σ Δ̂_i
+//! x^{k+1} = prox_{γR}(x̂ − γ·ĝ)
+//! q = x^{k+1} − x̂ + η·e      model residual, error-compensated
+//! broadcast q̂ = Q_m(q);  e ← q − q̂;  x̂ ← x̂ + β·q̂
+//! ```
+//!
+//! Every worker applies `x̂_i ← x̂_i + β·q̂` (lines 10–11), so all copies of
+//! `x̂` remain bit-identical given the identical initialization (§3.2).
+//! Both residuals vanish as the iterates converge, so the compression
+//! variance vanishes too — the mechanism behind the linear convergence of
+//! Theorem 1 and the exponential residual decay of Fig. 6.
+
+use super::{HyperParams, MasterNode, WorkerNode};
+use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::models::linalg;
+use crate::F;
+
+pub struct DoreWorker {
+    /// Local reference model x̂_i (gradients are evaluated here).
+    x: Vec<F>,
+    /// Gradient state h_i.
+    h: Vec<F>,
+    delta: Vec<F>,
+    q: BoxedCompressor,
+    hp: HyperParams,
+    last_norm: f64,
+}
+
+impl DoreWorker {
+    pub fn new(x0: &[F], q: BoxedCompressor, hp: HyperParams) -> Self {
+        Self {
+            x: x0.to_vec(),
+            h: vec![0.0; x0.len()],
+            delta: vec![0.0; x0.len()],
+            q,
+            hp,
+            last_norm: 0.0,
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn h(&self) -> &[F] {
+        &self.h
+    }
+}
+
+impl WorkerNode for DoreWorker {
+    fn round(&mut self, _round: usize, grad: &[F], rng: &mut Xoshiro256) -> Compressed {
+        // Δ_i = g_i − h_i  (line 5)
+        for (d, (&g, &h)) in self.delta.iter_mut().zip(grad.iter().zip(self.h.iter())) {
+            *d = g - h;
+        }
+        self.last_norm = linalg::norm2(&self.delta);
+        let up = self.q.compress(&self.delta, rng); // line 6
+        up.add_scaled_into(self.hp.alpha, &mut self.h); // line 7
+        up
+    }
+
+    fn apply_downlink(&mut self, _round: usize, down: &Compressed) {
+        // x̂_i ← x̂_i + β·q̂  (line 11)
+        down.add_scaled_into(self.hp.beta, &mut self.x);
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+
+    fn last_compressed_norm(&self) -> f64 {
+        self.last_norm
+    }
+}
+
+pub struct DoreMaster {
+    /// Reference model x̂ (identical to every worker's copy).
+    xhat: Vec<F>,
+    /// Averaged gradient state h = (1/n)Σ h_i.
+    h: Vec<F>,
+    /// Model-residual compression error e.
+    e: Vec<F>,
+    ghat: Vec<F>,
+    xnext: Vec<F>,
+    qbuf: Vec<F>,
+    vel: Vec<F>,
+    n: usize,
+    mq: BoxedCompressor,
+    hp: HyperParams,
+    last_norm: f64,
+}
+
+impl DoreMaster {
+    pub fn new(x0: &[F], n: usize, mq: BoxedCompressor, hp: HyperParams) -> Self {
+        let d = x0.len();
+        Self {
+            xhat: x0.to_vec(),
+            h: vec![0.0; d],
+            e: vec![0.0; d],
+            ghat: vec![0.0; d],
+            xnext: vec![0.0; d],
+            qbuf: vec![0.0; d],
+            vel: Vec::new(),
+            n,
+            mq,
+            hp,
+            last_norm: 0.0,
+        }
+    }
+
+    #[cfg(test)]
+    pub(crate) fn h(&self) -> &[F] {
+        &self.h
+    }
+}
+
+impl MasterNode for DoreMaster {
+    fn round(&mut self, round: usize, uplinks: &[Compressed], rng: &mut Xoshiro256) -> Compressed {
+        debug_assert_eq!(uplinks.len(), self.n);
+        let inv = 1.0 / self.n as F;
+        // ĝ = h + (1/n)Σ Δ̂_i; h ← h + α·avg  (lines 14–15, 17) — one fused
+        // decode pass per uplink instead of two (§Perf).
+        self.ghat.copy_from_slice(&self.h);
+        let alpha_inv = self.hp.alpha * inv;
+        for m in uplinks {
+            let (ghat, h) = (&mut self.ghat, &mut self.h);
+            m.decode_each(|i, v| {
+                ghat[i] += inv * v;
+                h[i] += alpha_inv * v;
+            });
+        }
+        // x^{k+1} = prox_{γR}(x̂ − γĝ) and q = x^{k+1} − x̂ + η·e
+        // (lines 16, 18) fused into one sweep — prox is separable.
+        let gamma = self.hp.lr_at(round);
+        if self.hp.momentum > 0.0 {
+            // extension: heavy-ball on the recovered gradient estimate.
+            super::apply_momentum(self.hp.momentum, &self.ghat, &mut self.vel);
+            self.ghat.copy_from_slice(&self.vel);
+        }
+        let prox = self.hp.prox;
+        let eta = self.hp.eta;
+        let mut qsq = 0.0f64;
+        for ((q, xn), ((&xh, &g), &e)) in self
+            .qbuf
+            .iter_mut()
+            .zip(self.xnext.iter_mut())
+            .zip(self.xhat.iter().zip(self.ghat.iter()).zip(self.e.iter()))
+        {
+            let x_new = prox.apply_one(gamma, xh - gamma * g);
+            *xn = x_new;
+            let qv = x_new - xh + eta * e;
+            *q = qv;
+            qsq += (qv as f64) * (qv as f64);
+        }
+        self.last_norm = qsq.sqrt();
+        let down = self.mq.compress(&self.qbuf, rng); // line 19
+        // e ← q − q̂; x̂ ← x̂ + β·q̂  (lines 20–21) — one fused decode pass.
+        {
+            let (e, qbuf, xhat) = (&mut self.e, &self.qbuf, &mut self.xhat);
+            let beta = self.hp.beta;
+            down.decode_each(|i, dq| {
+                e[i] = qbuf[i] - dq;
+                xhat[i] += beta * dq;
+            });
+        }
+        down
+    }
+
+    fn model(&self) -> &[F] {
+        &self.xhat
+    }
+
+    fn last_compressed_norm(&self) -> f64 {
+        self.last_norm
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{from_spec, Identity};
+    use std::sync::Arc;
+
+    fn hp(lr: F) -> HyperParams {
+        HyperParams { lr, ..HyperParams::paper_defaults() }
+    }
+
+    #[test]
+    fn no_compression_beta1_eta0_is_gradient_descent() {
+        // With identity compressors, β=1, η=0: x̂^{k+1} = x̂ − γ·g exactly.
+        let x0 = vec![1.0, -2.0];
+        let mut hp = hp(0.5);
+        hp.beta = 1.0;
+        hp.eta = 0.0;
+        hp.alpha = 1.0;
+        let mut w = DoreWorker::new(&x0, Arc::new(Identity), hp.clone());
+        let mut m = DoreMaster::new(&x0, 1, Arc::new(Identity), hp);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let g = vec![2.0, 2.0];
+        let up = w.round(0, &g, &mut rng);
+        let down = m.round(0, &[up], &mut rng);
+        w.apply_downlink(0, &down);
+        assert_eq!(m.model(), &[0.0, -3.0]);
+        assert_eq!(w.model(), m.model());
+    }
+
+    #[test]
+    fn worker_and_master_models_stay_bit_identical() {
+        // The central §3.2 invariant: x̂_i == x̂ after every round, without
+        // any model broadcast — both sides apply the same β·q̂.
+        let x0: Vec<F> = (0..32).map(|i| (i as F * 0.1).sin()).collect();
+        let h = hp(0.05);
+        let wq = from_spec("ternary:8").unwrap();
+        let mq = from_spec("ternary:8").unwrap();
+        let mut workers: Vec<DoreWorker> =
+            (0..3).map(|_| DoreWorker::new(&x0, wq.clone(), h.clone())).collect();
+        let mut master = DoreMaster::new(&x0, 3, mq, h);
+        for k in 0..20u64 {
+            let ups: Vec<Compressed> = workers
+                .iter_mut()
+                .enumerate()
+                .map(|(i, w)| {
+                    let g: Vec<F> = (0..32).map(|j| ((i + j) as F + k as F * 0.3).cos()).collect();
+                    let mut rng = Xoshiro256::for_site(3, 1 + i as u64, k);
+                    w.round(k as usize, &g, &mut rng)
+                })
+                .collect();
+            let mut mrng = Xoshiro256::for_site(3, 0, k);
+            let down = master.round(k as usize, &ups, &mut mrng);
+            for w in workers.iter_mut() {
+                w.apply_downlink(k as usize, &down);
+            }
+            for w in &workers {
+                assert_eq!(w.model(), master.model(), "x̂ desync at round {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn master_h_equals_average_of_worker_h() {
+        let x0 = vec![0.0; 16];
+        let h = hp(0.1);
+        let wq = from_spec("ternary:4").unwrap();
+        let mq = from_spec("ternary:4").unwrap();
+        let mut workers: Vec<DoreWorker> =
+            (0..2).map(|_| DoreWorker::new(&x0, wq.clone(), h.clone())).collect();
+        let mut master = DoreMaster::new(&x0, 2, mq, h);
+        for k in 0..8u64 {
+            let ups: Vec<Compressed> = workers
+                .iter_mut()
+                .enumerate()
+                .map(|(i, w)| {
+                    let g: Vec<F> = (0..16).map(|j| (i as F + 1.0) * ((j as F) - 8.0) * 0.1).collect();
+                    let mut rng = Xoshiro256::for_site(8, 1 + i as u64, k);
+                    w.round(k as usize, &g, &mut rng)
+                })
+                .collect();
+            let mut mrng = Xoshiro256::for_site(8, 0, k);
+            let down = master.round(k as usize, &ups, &mut mrng);
+            for w in workers.iter_mut() {
+                w.apply_downlink(k as usize, &down);
+            }
+        }
+        for j in 0..16 {
+            let avg = (workers[0].h()[j] + workers[1].h()[j]) / 2.0;
+            assert!((master.h()[j] - avg).abs() < 1e-5, "h desync at coord {j}");
+        }
+    }
+
+    #[test]
+    fn error_compensation_state_is_consistent() {
+        // e^{k+1} = q^k − q̂^k: reconstruct q from e + decoded broadcast.
+        let x0 = vec![0.5; 12];
+        let mut h = hp(0.2);
+        h.eta = 1.0;
+        let wq = from_spec("ternary:4").unwrap();
+        let mq = from_spec("ternary:4").unwrap();
+        let mut w = DoreWorker::new(&x0, wq, h.clone());
+        let mut m = DoreMaster::new(&x0, 1, mq, h);
+        let mut rng = Xoshiro256::seed_from_u64(44);
+        let g = vec![1.0; 12];
+        let up = w.round(0, &g, &mut rng);
+        let down = m.round(0, &[up], &mut rng);
+        let mut q_rec = m.e.clone();
+        down.add_scaled_into(1.0, &mut q_rec);
+        for (qr, qb) in q_rec.iter().zip(&m.qbuf) {
+            assert!((qr - qb).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prox_l1_produces_sparse_iterates() {
+        use crate::optim::Prox;
+        let x0 = vec![0.0; 8];
+        let mut h = hp(0.5);
+        h.prox = Prox::L1 { lambda: 0.4 };
+        let mut w = DoreWorker::new(&x0, Arc::new(Identity), h.clone());
+        let mut m = DoreMaster::new(&x0, 1, Arc::new(Identity), h);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        // gradient pushing only coords 0/1 strongly; prox should zero the rest
+        let g = vec![-4.0, -3.0, -0.2, 0.1, -0.3, 0.2, -0.1, 0.05];
+        let up = w.round(0, &g, &mut rng);
+        let down = m.round(0, &[up], &mut rng);
+        w.apply_downlink(0, &down);
+        let x = m.model();
+        assert!(x[0] > 0.0 && x[1] > 0.0);
+        assert!(x[2..].iter().all(|&v| v == 0.0), "{x:?}");
+    }
+}

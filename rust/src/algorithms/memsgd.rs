@@ -1,0 +1,135 @@
+//! MEM-SGD (Stich et al., 2018): QSGD with worker-side error feedback.
+//! Each worker accumulates its compression error and folds it into the next
+//! upload: `p_i = γ·g_i + e_i; send Q(p_i); e_i = p_i − Q(p_i)`.
+//! The master adds the decoded average directly to the model (the γ is
+//! already inside the uplink, which is what makes the memory mechanism
+//! step-size-correct under schedules) and broadcasts the dense model.
+
+use super::{average_uplinks, HyperParams, MasterNode, WorkerNode};
+use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::models::linalg;
+use crate::F;
+
+pub struct MemSgdWorker {
+    x: Vec<F>,
+    e: Vec<F>,
+    buf: Vec<F>,
+    q: BoxedCompressor,
+    last_norm: f64,
+    hp: HyperParams,
+}
+
+impl MemSgdWorker {
+    pub fn new(x0: &[F], q: BoxedCompressor) -> Self {
+        Self {
+            x: x0.to_vec(),
+            e: vec![0.0; x0.len()],
+            buf: vec![0.0; x0.len()],
+            q,
+            last_norm: 0.0,
+            hp: HyperParams::paper_defaults(),
+        }
+    }
+
+    pub fn with_hp(x0: &[F], q: BoxedCompressor, hp: HyperParams) -> Self {
+        Self { hp, ..Self::new(x0, q) }
+    }
+}
+
+impl WorkerNode for MemSgdWorker {
+    fn round(&mut self, round: usize, grad: &[F], rng: &mut Xoshiro256) -> Compressed {
+        let gamma = self.hp.lr_at(round);
+        // p = γ g + e
+        self.buf.copy_from_slice(&self.e);
+        linalg::axpy(gamma, grad, &mut self.buf);
+        self.last_norm = linalg::norm2(&self.buf);
+        let up = self.q.compress(&self.buf, rng);
+        // e = p − Q(p)
+        self.e.copy_from_slice(&self.buf);
+        up.add_scaled_into(-1.0, &mut self.e);
+        up
+    }
+
+    fn apply_downlink(&mut self, _round: usize, down: &Compressed) {
+        self.x.fill(0.0);
+        down.add_scaled_into(1.0, &mut self.x);
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+
+    fn last_compressed_norm(&self) -> f64 {
+        self.last_norm
+    }
+}
+
+pub struct MemSgdMaster {
+    x: Vec<F>,
+    dbar: Vec<F>,
+    n: usize,
+    hp: HyperParams,
+}
+
+impl MemSgdMaster {
+    pub fn new(x0: &[F], n: usize, hp: HyperParams) -> Self {
+        Self { x: x0.to_vec(), dbar: vec![0.0; x0.len()], n, hp }
+    }
+}
+
+impl MasterNode for MemSgdMaster {
+    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+        debug_assert_eq!(uplinks.len(), self.n);
+        average_uplinks(uplinks, &mut self.dbar);
+        // the γ is inside the uplinks: x ← x − mean(Q(γg_i + e_i))
+        linalg::axpy(-1.0, &self.dbar, &mut self.x);
+        self.hp.prox.apply(self.hp.lr_at(round), &mut self.x);
+        Compressed::Dense(self.x.clone())
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{Identity, PNorm, PNormQuantizer};
+    use std::sync::Arc;
+
+    #[test]
+    fn error_state_tracks_residual() {
+        let x0 = vec![0.0; 4];
+        let q = Arc::new(PNormQuantizer::new(PNorm::Inf, 4));
+        let mut w = MemSgdWorker::with_hp(
+            &x0,
+            q,
+            HyperParams { lr: 1.0, ..HyperParams::paper_defaults() },
+        );
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let g = vec![1.0, 0.5, -0.25, 0.0];
+        let up = w.round(0, &g, &mut rng);
+        // e + Q(p) must equal p = γg (first round e=0)
+        let mut rec = w.e.clone();
+        up.add_scaled_into(1.0, &mut rec);
+        for (r, &gi) in rec.iter().zip(&g) {
+            assert!((r - gi).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn with_identity_compressor_equals_sgd() {
+        let x0 = vec![1.0, -1.0];
+        let hp = HyperParams { lr: 0.25, ..HyperParams::paper_defaults() };
+        let mut w = MemSgdWorker::with_hp(&x0, Arc::new(Identity), hp.clone());
+        let mut m = MemSgdMaster::new(&x0, 1, hp);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let up = w.round(0, &[4.0, 8.0], &mut rng);
+        let down = m.round(0, &[up], &mut rng);
+        w.apply_downlink(0, &down);
+        assert_eq!(m.model(), &[0.0, -3.0]);
+        // zero residual error with identity compression
+        assert!(w.e.iter().all(|&v| v == 0.0));
+    }
+}

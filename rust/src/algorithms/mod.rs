@@ -1,0 +1,306 @@
+//! The seven distributed SGD algorithms, expressed as transport-independent
+//! state machines (one [`WorkerNode`] per worker + one [`MasterNode`]).
+//!
+//! A synchronous round `k` is:
+//! 1. every worker evaluates a stochastic gradient at its local model copy
+//!    and [`WorkerNode::round`] turns it into an **uplink** payload;
+//! 2. [`MasterNode::round`] consumes all uplinks and produces the
+//!    **downlink** broadcast;
+//! 3. every worker applies the downlink via [`WorkerNode::apply_downlink`].
+//!
+//! Both the in-process bench harness ([`crate::harness`]) and the tokio
+//! parameter-server ([`crate::coordinator`]) drive these same state
+//! machines, so convergence results and the async runtime cannot drift
+//! apart.
+//!
+//! | algorithm | uplink | downlink | paper role |
+//! |---|---|---|---|
+//! | [`psgd`] | dense gradient | dense model | no-compression baseline |
+//! | [`qsgd`] | `Q(g_i)` | dense model | Alistarh et al. 2017 |
+//! | [`memsgd`] | `Q(g_i + e_i)` error-fed | dense model | Stich et al. 2018 |
+//! | [`diana`] | `Q(g_i − h_i)` residual | dense model | Mishchenko et al. 2019 |
+//! | [`doublesqueeze`] | `Q(g_i + e_i)` | `Q(avg + E)` | Tang et al. 2019 |
+//! | [`dore`] | `Q(g_i − h_i)` residual | `Q(Δmodel + ηe)` residual | **this paper, Alg. 1/2** |
+
+pub mod diana;
+pub mod doublesqueeze;
+pub mod dore;
+pub mod memsgd;
+pub mod psgd;
+pub mod qsgd;
+
+use crate::compression::{from_spec, BoxedCompressor, Compressed, TopK, Xoshiro256};
+use crate::optim::{LrSchedule, Prox};
+use crate::F;
+
+/// Hyper-parameters shared by all algorithms. Fields an algorithm does not
+/// use are ignored (e.g. `alpha` for P-SGD).
+#[derive(Clone, Debug)]
+pub struct HyperParams {
+    /// Step size γ (overridden per round by `schedule` if set).
+    pub lr: F,
+    /// DORE/DIANA gradient-state step α.
+    pub alpha: F,
+    /// DORE model-residual step β.
+    pub beta: F,
+    /// DORE error-compensation weight η.
+    pub eta: F,
+    /// Master-side (heavy-ball) momentum on the recovered averaged
+    /// gradient: `v ← m·v + ĝ; step with v`. 0 disables (the paper's
+    /// setting); exposed as an extension since production PS frameworks
+    /// train with momentum.
+    pub momentum: F,
+    /// Worker-side compressor spec (see [`crate::compression::from_spec`]).
+    pub worker_compressor: String,
+    /// Master-side compressor spec (downlink direction).
+    pub master_compressor: String,
+    /// Proximal regularizer `R` (DORE Algorithm 1; others apply it as a
+    /// post-step prox too when set, which is the natural composite variant).
+    pub prox: Prox,
+    /// Optional LR schedule; `None` means constant `lr`.
+    pub schedule: Option<LrSchedule>,
+}
+
+impl HyperParams {
+    /// The paper's experimental settings (§5): α=0.1, β=1, η=1, Bernoulli
+    /// ∞-norm quantization with block size 256 on both sides.
+    pub fn paper_defaults() -> Self {
+        Self {
+            lr: 0.1,
+            alpha: 0.1,
+            beta: 1.0,
+            eta: 1.0,
+            momentum: 0.0,
+            worker_compressor: "ternary:256".into(),
+            master_compressor: "ternary:256".into(),
+            prox: Prox::None,
+            schedule: None,
+        }
+    }
+
+    pub fn lr_at(&self, round: usize) -> F {
+        self.schedule.as_ref().map_or(self.lr, |s| s.at(round))
+    }
+
+    /// Theory-recommended α for a worker compressor with constant `C_q`
+    /// (Eq. 9): `α = 1 / (2(C_q + 1))`.
+    pub fn theory_alpha(c_q: f64) -> F {
+        (1.0 / (2.0 * (c_q + 1.0))) as F
+    }
+
+    /// Theory-recommended β for a master compressor with constant `C_qᵐ`
+    /// (Eq. 9): `β = 1 / (C_qᵐ + 1)`.
+    pub fn theory_beta(c_qm: f64) -> F {
+        (1.0 / (c_qm + 1.0)) as F
+    }
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        Self::paper_defaults()
+    }
+}
+
+/// Worker-side state machine.
+pub trait WorkerNode: Send {
+    /// Consume this round's local stochastic gradient, produce the uplink.
+    fn round(&mut self, round: usize, grad: &[F], rng: &mut Xoshiro256) -> Compressed;
+
+    /// Apply the master's downlink broadcast.
+    fn apply_downlink(&mut self, round: usize, down: &Compressed);
+
+    /// The local model copy gradients are evaluated at (`x̂_i` for DORE).
+    fn model(&self) -> &[F];
+
+    /// ‖variable fed to the worker-side compressor‖ last round (Fig. 6).
+    fn last_compressed_norm(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Master-side state machine.
+pub trait MasterNode: Send {
+    /// Consume all uplinks, produce the downlink broadcast.
+    fn round(&mut self, round: usize, uplinks: &[Compressed], rng: &mut Xoshiro256) -> Compressed;
+
+    /// The iterate to evaluate/report (`x̂ᵏ` for DORE, `xᵏ` otherwise).
+    fn model(&self) -> &[F];
+
+    /// ‖variable fed to the master-side compressor‖ last round (Fig. 6).
+    fn last_compressed_norm(&self) -> f64 {
+        0.0
+    }
+}
+
+/// Which algorithm to instantiate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgorithmKind {
+    /// Vanilla parallel SGD (no compression).
+    Sgd,
+    /// QSGD: quantized gradients, dense model broadcast.
+    Qsgd,
+    /// MEM-SGD: QSGD + worker-side error feedback.
+    MemSgd,
+    /// DIANA: gradient-difference compression, dense model broadcast.
+    Diana,
+    /// DoubleSqueeze: error-compensated compression both directions.
+    DoubleSqueeze,
+    /// DoubleSqueeze with biased top-k compression (Tang et al. 2019 §5).
+    DoubleSqueezeTopk,
+    /// DORE (this paper): double residual compression, Algorithm 1/2.
+    Dore,
+}
+
+impl AlgorithmKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::Sgd => "SGD",
+            AlgorithmKind::Qsgd => "QSGD",
+            AlgorithmKind::MemSgd => "MEM-SGD",
+            AlgorithmKind::Diana => "DIANA",
+            AlgorithmKind::DoubleSqueeze => "DoubleSqueeze",
+            AlgorithmKind::DoubleSqueezeTopk => "DoubleSqueeze(topk)",
+            AlgorithmKind::Dore => "DORE",
+        }
+    }
+
+    pub fn all() -> &'static [AlgorithmKind] {
+        &[
+            AlgorithmKind::Sgd,
+            AlgorithmKind::Qsgd,
+            AlgorithmKind::MemSgd,
+            AlgorithmKind::Diana,
+            AlgorithmKind::DoubleSqueeze,
+            AlgorithmKind::DoubleSqueezeTopk,
+            AlgorithmKind::Dore,
+        ]
+    }
+}
+
+impl std::str::FromStr for AlgorithmKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_lowercase().as_str() {
+            "sgd" | "psgd" => AlgorithmKind::Sgd,
+            "qsgd" => AlgorithmKind::Qsgd,
+            "mem-sgd" | "memsgd" => AlgorithmKind::MemSgd,
+            "diana" => AlgorithmKind::Diana,
+            "double-squeeze" | "doublesqueeze" => AlgorithmKind::DoubleSqueeze,
+            "double-squeeze-topk" | "doublesqueeze-topk" | "doublesqueeze(topk)" => {
+                AlgorithmKind::DoubleSqueezeTopk
+            }
+            "dore" => AlgorithmKind::Dore,
+            other => anyhow::bail!(
+                "unknown algorithm '{other}' \
+                 (sgd|qsgd|mem-sgd|diana|double-squeeze|double-squeeze-topk|dore)"
+            ),
+        })
+    }
+}
+
+/// Instantiate the worker fleet + master for `kind`, all starting from the
+/// identical iterate `x0` (§3.2 Initialization).
+pub fn build(
+    kind: AlgorithmKind,
+    n_workers: usize,
+    x0: &[F],
+    hp: &HyperParams,
+) -> anyhow::Result<(Vec<Box<dyn WorkerNode>>, Box<dyn MasterNode>)> {
+    let wq: BoxedCompressor = match kind {
+        AlgorithmKind::Sgd => from_spec("none")?,
+        AlgorithmKind::DoubleSqueezeTopk => topk_spec(&hp.worker_compressor)?,
+        _ => from_spec(&hp.worker_compressor)?,
+    };
+    let mq: BoxedCompressor = match kind {
+        AlgorithmKind::DoubleSqueezeTopk => topk_spec(&hp.master_compressor)?,
+        AlgorithmKind::DoubleSqueeze | AlgorithmKind::Dore => from_spec(&hp.master_compressor)?,
+        // gradient-only schemes broadcast the dense model
+        _ => from_spec("none")?,
+    };
+    let workers: Vec<Box<dyn WorkerNode>> = (0..n_workers)
+        .map(|_| -> Box<dyn WorkerNode> {
+            match kind {
+                AlgorithmKind::Sgd => Box::new(psgd::PsgdWorker::new(x0, wq.clone())),
+                AlgorithmKind::Qsgd => Box::new(qsgd::QsgdWorker::new(x0, wq.clone())),
+                AlgorithmKind::MemSgd => Box::new(memsgd::MemSgdWorker::new(x0, wq.clone())),
+                AlgorithmKind::Diana => {
+                    Box::new(diana::DianaWorker::new(x0, wq.clone(), hp.alpha))
+                }
+                AlgorithmKind::DoubleSqueeze | AlgorithmKind::DoubleSqueezeTopk => {
+                    Box::new(doublesqueeze::DsWorker::new(x0, wq.clone(), hp.clone()))
+                }
+                AlgorithmKind::Dore => Box::new(dore::DoreWorker::new(x0, wq.clone(), hp.clone())),
+            }
+        })
+        .collect();
+    let master: Box<dyn MasterNode> = match kind {
+        AlgorithmKind::Sgd => Box::new(psgd::PsgdMaster::new(x0, n_workers, hp.clone())),
+        AlgorithmKind::Qsgd => Box::new(qsgd::QsgdMaster::new(x0, n_workers, hp.clone())),
+        AlgorithmKind::MemSgd => Box::new(memsgd::MemSgdMaster::new(x0, n_workers, hp.clone())),
+        AlgorithmKind::Diana => Box::new(diana::DianaMaster::new(x0, n_workers, hp.clone())),
+        AlgorithmKind::DoubleSqueeze | AlgorithmKind::DoubleSqueezeTopk => {
+            Box::new(doublesqueeze::DsMaster::new(x0, n_workers, mq, hp.clone()))
+        }
+        AlgorithmKind::Dore => Box::new(dore::DoreMaster::new(x0, n_workers, mq, hp.clone())),
+    };
+    Ok((workers, master))
+}
+
+/// Map a ternary/quantizer spec to the equivalently-sized top-k compressor
+/// used by the DoubleSqueeze(topk) baseline (Tang et al. use k ≈ d/100; we
+/// honour an explicit `topk:k` spec if given).
+fn topk_spec(spec: &str) -> anyhow::Result<BoxedCompressor> {
+    if spec.starts_with("topk") {
+        from_spec(spec)
+    } else {
+        Ok(std::sync::Arc::new(TopK::new(0)))
+    }
+}
+
+/// Heavy-ball momentum update: `vel ← m·vel + g` (vel lazily sized).
+pub(crate) fn apply_momentum(m: F, g: &[F], vel: &mut Vec<F>) {
+    if m <= 0.0 {
+        return;
+    }
+    if vel.is_empty() {
+        vel.resize(g.len(), 0.0);
+    }
+    for (v, &gi) in vel.iter_mut().zip(g.iter()) {
+        *v = m * *v + gi;
+    }
+}
+
+/// Average all uplinks into a dense buffer: `out = (1/n) Σ decode(m)`.
+pub(crate) fn average_uplinks(uplinks: &[Compressed], out: &mut [F]) {
+    out.fill(0.0);
+    let inv = 1.0 / uplinks.len() as F;
+    for m in uplinks {
+        m.add_scaled_into(inv, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_every_kind() {
+        let x0 = vec![0.0; 32];
+        for &k in AlgorithmKind::all() {
+            let (ws, m) = build(k, 3, &x0, &HyperParams::paper_defaults()).unwrap();
+            assert_eq!(ws.len(), 3);
+            assert_eq!(m.model().len(), 32);
+            for w in &ws {
+                assert_eq!(w.model(), &x0[..]);
+            }
+        }
+    }
+
+    #[test]
+    fn theory_constants() {
+        assert!((HyperParams::theory_alpha(0.0) - 0.5).abs() < 1e-7);
+        assert!((HyperParams::theory_beta(0.0) - 1.0).abs() < 1e-7);
+        assert!((HyperParams::theory_alpha(1.0) - 0.25).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,105 @@
+//! Vanilla parallel SGD (no compression): workers upload dense gradients,
+//! the master steps and broadcasts the dense model. The paper's
+//! full-precision baseline ("SGD" in all figures).
+
+use super::{average_uplinks, HyperParams, MasterNode, WorkerNode};
+use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::models::linalg;
+use crate::F;
+
+pub struct PsgdWorker {
+    x: Vec<F>,
+    q: BoxedCompressor,
+    last_norm: f64,
+}
+
+impl PsgdWorker {
+    pub fn new(x0: &[F], q: BoxedCompressor) -> Self {
+        Self { x: x0.to_vec(), q, last_norm: 0.0 }
+    }
+}
+
+impl WorkerNode for PsgdWorker {
+    fn round(&mut self, _round: usize, grad: &[F], rng: &mut Xoshiro256) -> Compressed {
+        self.last_norm = linalg::norm2(grad);
+        self.q.compress(grad, rng)
+    }
+
+    fn apply_downlink(&mut self, _round: usize, down: &Compressed) {
+        // dense model replacement
+        self.x.fill(0.0);
+        down.add_scaled_into(1.0, &mut self.x);
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+
+    fn last_compressed_norm(&self) -> f64 {
+        self.last_norm
+    }
+}
+
+pub struct PsgdMaster {
+    x: Vec<F>,
+    gbar: Vec<F>,
+    /// heavy-ball velocity (allocated lazily when momentum > 0)
+    vel: Vec<F>,
+    n: usize,
+    hp: HyperParams,
+}
+
+impl PsgdMaster {
+    pub fn new(x0: &[F], n: usize, hp: HyperParams) -> Self {
+        Self { x: x0.to_vec(), gbar: vec![0.0; x0.len()], vel: Vec::new(), n, hp }
+    }
+}
+
+impl MasterNode for PsgdMaster {
+    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+        debug_assert_eq!(uplinks.len(), self.n);
+        average_uplinks(uplinks, &mut self.gbar);
+        let gamma = self.hp.lr_at(round);
+        super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
+        let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
+        linalg::axpy(-gamma, step, &mut self.x);
+        self.hp.prox.apply(gamma, &mut self.x);
+        Compressed::Dense(self.x.clone())
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::Identity;
+    use std::sync::Arc;
+
+    #[test]
+    fn one_round_is_plain_gd_step() {
+        let x0 = vec![1.0, 2.0];
+        let hp = HyperParams { lr: 0.5, ..HyperParams::paper_defaults() };
+        let mut w = PsgdWorker::new(&x0, Arc::new(Identity));
+        let mut m = PsgdMaster::new(&x0, 1, hp);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let up = w.round(0, &[2.0, -2.0], &mut rng);
+        let down = m.round(0, &[up], &mut rng);
+        w.apply_downlink(0, &down);
+        assert_eq!(m.model(), &[0.0, 3.0]);
+        assert_eq!(w.model(), m.model());
+    }
+
+    #[test]
+    fn master_averages_across_workers() {
+        let x0 = vec![0.0];
+        let hp = HyperParams { lr: 1.0, ..HyperParams::paper_defaults() };
+        let mut m = PsgdMaster::new(&x0, 2, hp);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let ups = vec![Compressed::Dense(vec![2.0]), Compressed::Dense(vec![4.0])];
+        m.round(0, &ups, &mut rng);
+        assert_eq!(m.model(), &[-3.0]); // x - 1.0 * mean(2,4)
+    }
+}

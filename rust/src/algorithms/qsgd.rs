@@ -1,0 +1,99 @@
+//! QSGD (Alistarh et al., 2017): workers upload quantized gradients
+//! `Q(g_i)`; the master averages the decoded gradients, steps, and
+//! broadcasts the **dense** model (per §3.2 of the paper, gradient-only
+//! schemes still pay 32·d on the downlink).
+//!
+//! Because `Q(g_i)` has variance ∝ ‖g_i‖² and `∇f_i(x*) ≠ 0` in general,
+//! QSGD converges only to a neighbourhood of `x*` under a constant step
+//! size — exactly the plateau Fig. 3 shows.
+
+use super::{average_uplinks, HyperParams, MasterNode, WorkerNode};
+use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::models::linalg;
+use crate::F;
+
+pub struct QsgdWorker {
+    x: Vec<F>,
+    q: BoxedCompressor,
+    last_norm: f64,
+}
+
+impl QsgdWorker {
+    pub fn new(x0: &[F], q: BoxedCompressor) -> Self {
+        Self { x: x0.to_vec(), q, last_norm: 0.0 }
+    }
+}
+
+impl WorkerNode for QsgdWorker {
+    fn round(&mut self, _round: usize, grad: &[F], rng: &mut Xoshiro256) -> Compressed {
+        self.last_norm = linalg::norm2(grad);
+        self.q.compress(grad, rng)
+    }
+
+    fn apply_downlink(&mut self, _round: usize, down: &Compressed) {
+        self.x.fill(0.0);
+        down.add_scaled_into(1.0, &mut self.x);
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+
+    fn last_compressed_norm(&self) -> f64 {
+        self.last_norm
+    }
+}
+
+pub struct QsgdMaster {
+    x: Vec<F>,
+    gbar: Vec<F>,
+    vel: Vec<F>,
+    n: usize,
+    hp: HyperParams,
+}
+
+impl QsgdMaster {
+    pub fn new(x0: &[F], n: usize, hp: HyperParams) -> Self {
+        Self { x: x0.to_vec(), gbar: vec![0.0; x0.len()], vel: Vec::new(), n, hp }
+    }
+}
+
+impl MasterNode for QsgdMaster {
+    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+        debug_assert_eq!(uplinks.len(), self.n);
+        average_uplinks(uplinks, &mut self.gbar);
+        let gamma = self.hp.lr_at(round);
+        super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
+        let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
+        linalg::axpy(-gamma, step, &mut self.x);
+        self.hp.prox.apply(gamma, &mut self.x);
+        Compressed::Dense(self.x.clone())
+    }
+
+    fn model(&self) -> &[F] {
+        &self.x
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{PNorm, PNormQuantizer};
+    use std::sync::Arc;
+
+    #[test]
+    fn uplink_is_quantized_downlink_dense() {
+        let x0 = vec![0.0; 8];
+        let q = Arc::new(PNormQuantizer::new(PNorm::Inf, 4));
+        let mut w = QsgdWorker::new(&x0, q);
+        let mut m = QsgdMaster::new(&x0, 1, HyperParams::paper_defaults());
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let g = vec![1.0, -0.5, 0.25, 0.0, 2.0, 0.0, -1.0, 0.5];
+        let up = w.round(0, &g, &mut rng);
+        assert!(matches!(up, Compressed::Ternary { .. }));
+        let down = m.round(0, &[up], &mut rng);
+        assert!(matches!(down, Compressed::Dense(_)));
+        w.apply_downlink(0, &down);
+        assert_eq!(w.model(), m.model());
+    }
+}

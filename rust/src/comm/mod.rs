@@ -1,0 +1,54 @@
+//! Communication substrate: exact byte accounting and a network timing
+//! model for the Fig. 2 bandwidth study.
+//!
+//! The paper's testbed is a parameter server + 10 workers on (shared)
+//! Gigabit Ethernet. We replace the physical network with [`NetSim`], a
+//! deterministic timing model over **exactly counted** wire bytes — the
+//! payloads the coordinator moves are real encoded buffers from
+//! [`crate::compression::codec`], so the byte counts are ground truth, and
+//! only the *time* is modelled.
+
+pub mod netsim;
+
+pub use netsim::{LinkSpec, NetSim};
+
+/// Per-direction traffic counters (bits).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TrafficStats {
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    pub uplink_msgs: u64,
+    pub downlink_msgs: u64,
+}
+
+impl TrafficStats {
+    pub fn record_uplink(&mut self, bits: u64) {
+        self.uplink_bits += bits;
+        self.uplink_msgs += 1;
+    }
+
+    pub fn record_downlink(&mut self, bits: u64) {
+        self.downlink_bits += bits;
+        self.downlink_msgs += 1;
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.uplink_bits + self.downlink_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut t = TrafficStats::default();
+        t.record_uplink(100);
+        t.record_uplink(50);
+        t.record_downlink(30);
+        assert_eq!(t.uplink_bits, 150);
+        assert_eq!(t.uplink_msgs, 2);
+        assert_eq!(t.total_bits(), 180);
+    }
+}

@@ -1,0 +1,108 @@
+//! Deterministic network timing model (Fig. 2 substrate).
+//!
+//! Model: the parameter server and `n` workers share a star topology. In a
+//! synchronous round,
+//!
+//! 1. **gather** — all workers transmit their uplinks concurrently; the
+//!    master's ingress NIC is the bottleneck, so gather time is
+//!    `Σ_i bits_i / bandwidth + latency` (serialized at the master, the
+//!    standard PS incast model, matching the paper's observation that the
+//!    master link dominates);
+//! 2. **broadcast** — the master sends the downlink once per worker over
+//!    its egress: `n · bits_down / bandwidth + latency`.
+//!
+//! The round time is `compute + gather + broadcast`. Everything is
+//! deterministic; the harness sweeps `bandwidth` to regenerate Fig. 2.
+
+/// Link characteristics.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSpec {
+    /// Bits per second, e.g. `1e9` for Gigabit Ethernet.
+    pub bandwidth_bps: f64,
+    /// One-way latency per message, seconds.
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    pub fn gigabit() -> Self {
+        Self { bandwidth_bps: 1e9, latency_s: 100e-6 }
+    }
+
+    pub fn with_bandwidth(bps: f64) -> Self {
+        Self { bandwidth_bps: bps, latency_s: 100e-6 }
+    }
+
+    /// Time to move `bits` over this link once.
+    pub fn transfer_time(&self, bits: u64) -> f64 {
+        self.latency_s + bits as f64 / self.bandwidth_bps
+    }
+}
+
+/// Star-topology round-time model.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    pub link: LinkSpec,
+    pub n_workers: usize,
+    /// Simulated seconds elapsed.
+    pub clock_s: f64,
+}
+
+impl NetSim {
+    pub fn new(link: LinkSpec, n_workers: usize) -> Self {
+        Self { link, n_workers, clock_s: 0.0 }
+    }
+
+    /// Advance the clock by one synchronous round and return its duration.
+    ///
+    /// `uplink_bits` is per-worker (all equal-size in the algorithms here),
+    /// `downlink_bits` is the broadcast payload size, `compute_s` the
+    /// max per-node gradient+compression compute time.
+    pub fn round(&mut self, uplink_bits: u64, downlink_bits: u64, compute_s: f64) -> f64 {
+        let gather = self.link.latency_s
+            + (self.n_workers as u64 * uplink_bits) as f64 / self.link.bandwidth_bps;
+        let bcast = self.link.latency_s
+            + (self.n_workers as u64 * downlink_bits) as f64 / self.link.bandwidth_bps;
+        let dt = compute_s + gather + bcast;
+        self.clock_s += dt;
+        dt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_with_bits() {
+        let l = LinkSpec::gigabit();
+        let t1 = l.transfer_time(1_000_000);
+        let t2 = l.transfer_time(2_000_000);
+        assert!((t2 - t1 - 0.001).abs() < 1e-9); // +1 Mbit at 1 Gbps = 1 ms
+    }
+
+    #[test]
+    fn round_time_composition() {
+        let mut net = NetSim::new(LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 }, 2);
+        // 2 workers × 1e6 bits up = 2 s; 2 × 0.5e6 down = 1 s; compute 0.5 s
+        let dt = net.round(1_000_000, 500_000, 0.5);
+        assert!((dt - 3.5).abs() < 1e-9, "dt={dt}");
+        assert!((net.clock_s - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_bandwidth_hurts_uncompressed_more() {
+        // The Fig. 2 qualitative shape: at low bandwidth, a 32d scheme's
+        // round is ~20× slower than a 1.6-bit scheme's.
+        let d = 1_000_000u64;
+        let dense = 32 * d;
+        let tern = 32 * d / 256 + 8 * d.div_ceil(5);
+        for bw in [1e9, 1e8, 1e7] {
+            let mut a = NetSim::new(LinkSpec::with_bandwidth(bw), 10);
+            let mut b = NetSim::new(LinkSpec::with_bandwidth(bw), 10);
+            let ta = a.round(dense, dense, 0.0);
+            let tb = b.round(tern, tern, 0.0);
+            let ratio = ta / tb;
+            assert!(ratio > 15.0, "bw={bw} ratio={ratio}");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! The no-compression operator (`C = 0` in Assumption 1). Used by vanilla
+//! P-SGD and by DIANA/DORE configurations that compress only one direction.
+
+use super::{Compressed, Compressor, Xoshiro256};
+use crate::F;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn compress(&self, x: &[F], _rng: &mut Xoshiro256) -> Compressed {
+        Compressed::Dense(x.to_vec())
+    }
+
+    fn variance_constant(&self, _dim: usize) -> f64 {
+        0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_roundtrip() {
+        let x = vec![1.0, -2.5, 3.25];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = Identity.compress(&x, &mut rng);
+        assert_eq!(c.decompress(), x);
+        // header (tag + dim = 40 bits) + 3 fp32 payload
+        assert_eq!(c.wire_bits(), 40 + 3 * 32);
+    }
+}

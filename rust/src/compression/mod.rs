@@ -1,0 +1,309 @@
+//! Compression operators (Assumption 1 of the paper) and wire formats.
+//!
+//! Every operator implements [`Compressor`]: a stochastic map
+//! `Q : R^d -> R^d` represented compactly as a [`Compressed`] payload that
+//! knows its **exact** wire size in bits ([`Compressed::wire_bits`]) and can
+//! be decompressed or axpy-ed into a dense buffer.
+//!
+//! Unbiased operators satisfy `E Q(x) = x` and
+//! `E ||Q(x) - x||^2 <= C ||x||^2` (Assumption 1); the constant is exposed
+//! via [`Compressor::variance_constant`] so the algorithms can derive the
+//! paper's recommended `alpha`, `beta`, `c` (Eq. 5/9). Top-k is biased and
+//! only used by the DoubleSqueeze(topk) baseline.
+
+pub mod codec;
+pub mod identity;
+pub mod pnorm;
+pub mod qsgd;
+pub mod rng;
+pub mod signsgd;
+pub mod sparsify;
+pub mod topk;
+
+pub use identity::Identity;
+pub use pnorm::{PNorm, PNormQuantizer};
+pub use qsgd::QsgdQuantizer;
+pub use rng::Xoshiro256;
+pub use signsgd::SignSgd;
+pub use sparsify::StochasticSparsifier;
+pub use topk::TopK;
+
+use crate::F;
+
+/// Compact representation of `Q(x)`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Compressed {
+    /// No compression: the dense vector itself (32 bits/coord on the wire).
+    Dense(Vec<F>),
+    /// Blockwise ternary code: per block one fp32 magnitude and one trit
+    /// per coordinate in {-1, 0, +1}. Produced by the Bernoulli p-norm
+    /// quantizer (the paper's default) — decodes to `norm[b] * trit[i]`.
+    Ternary {
+        dim: usize,
+        block_size: usize,
+        norms: Vec<F>,
+        trits: Vec<i8>,
+    },
+    /// Blockwise multi-level code (QSGD): per block one fp32 norm and a
+    /// small signed integer level `l in [-s, s]` per coordinate; decodes to
+    /// `norm[b] * l / s`.
+    Levels {
+        dim: usize,
+        block_size: usize,
+        s: u8,
+        norms: Vec<F>,
+        levels: Vec<i8>,
+    },
+    /// Sparse code: explicit (index, value) pairs; everything else is zero.
+    Sparse {
+        dim: usize,
+        idx: Vec<u32>,
+        vals: Vec<F>,
+    },
+}
+
+impl Compressed {
+    /// Logical dimension of the decoded vector.
+    pub fn dim(&self) -> usize {
+        match self {
+            Compressed::Dense(v) => v.len(),
+            Compressed::Ternary { dim, .. }
+            | Compressed::Levels { dim, .. }
+            | Compressed::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// Decode into a fresh dense vector.
+    pub fn decompress(&self) -> Vec<F> {
+        let mut out = vec![0.0; self.dim()];
+        self.add_scaled_into(1.0, &mut out);
+        out
+    }
+
+    /// `out += scale * decode(self)` without materializing a temporary —
+    /// the hot operation of every algorithm state update
+    /// (`h += alpha * Delta_hat`, `x_hat += beta * q_hat`).
+    pub fn add_scaled_into(&self, scale: F, out: &mut [F]) {
+        assert_eq!(out.len(), self.dim(), "dimension mismatch in decode");
+        match self {
+            Compressed::Dense(v) => {
+                for (o, &x) in out.iter_mut().zip(v.iter()) {
+                    *o += scale * x;
+                }
+            }
+            Compressed::Ternary {
+                block_size,
+                norms,
+                trits,
+                ..
+            } => {
+                for (b, chunk) in trits.chunks(*block_size).enumerate() {
+                    let m = scale * norms[b];
+                    let base = b * block_size;
+                    for (j, &t) in chunk.iter().enumerate() {
+                        // t in {-1,0,1}: multiply, don't branch.
+                        out[base + j] += m * t as F;
+                    }
+                }
+            }
+            Compressed::Levels {
+                block_size,
+                s,
+                norms,
+                levels,
+                ..
+            } => {
+                let inv_s = 1.0 / *s as F;
+                for (b, chunk) in levels.chunks(*block_size).enumerate() {
+                    let m = scale * norms[b] * inv_s;
+                    let base = b * block_size;
+                    for (j, &l) in chunk.iter().enumerate() {
+                        out[base + j] += m * l as F;
+                    }
+                }
+            }
+            Compressed::Sparse { idx, vals, .. } => {
+                for (&i, &v) in idx.iter().zip(vals.iter()) {
+                    out[i as usize] += scale * v;
+                }
+            }
+        }
+    }
+
+    /// Visit **every** coordinate `0..dim` with its decoded value (zeros
+    /// included — sparse payloads interleave stored entries with implicit
+    /// zeros). Enables single-pass fused consumers on the hot path
+    /// (§Perf): e.g. DORE's `e = q − q̂; x̂ += β·q̂` in one sweep.
+    pub fn decode_each(&self, mut f: impl FnMut(usize, F)) {
+        match self {
+            Compressed::Dense(v) => {
+                for (i, &x) in v.iter().enumerate() {
+                    f(i, x);
+                }
+            }
+            Compressed::Ternary { block_size, norms, trits, .. } => {
+                for (b, chunk) in trits.chunks(*block_size).enumerate() {
+                    let m = norms[b];
+                    let base = b * block_size;
+                    for (j, &t) in chunk.iter().enumerate() {
+                        f(base + j, m * t as F);
+                    }
+                }
+            }
+            Compressed::Levels { block_size, s, norms, levels, .. } => {
+                let inv_s = 1.0 / *s as F;
+                for (b, chunk) in levels.chunks(*block_size).enumerate() {
+                    let m = norms[b] * inv_s;
+                    let base = b * block_size;
+                    for (j, &l) in chunk.iter().enumerate() {
+                        f(base + j, m * l as F);
+                    }
+                }
+            }
+            Compressed::Sparse { dim, idx, vals } => {
+                let mut it = idx.iter().zip(vals.iter()).peekable();
+                for i in 0..*dim {
+                    match it.peek() {
+                        Some(&(&j, &v)) if j as usize == i => {
+                            f(i, v);
+                            it.next();
+                        }
+                        _ => f(i, 0.0),
+                    }
+                }
+            }
+        }
+    }
+
+    /// Exact number of bits this payload occupies on the (simulated) wire,
+    /// per the codec in [`codec`]. Used for all communication accounting
+    /// (Fig. 2, §3.2 compression-rate table).
+    pub fn wire_bits(&self) -> u64 {
+        codec::wire_bits(self)
+    }
+}
+
+/// A stochastic compression operator (paper Assumption 1, or biased top-k).
+pub trait Compressor: Send + Sync {
+    /// Compress `x`, drawing randomness from `rng`.
+    fn compress(&self, x: &[F], rng: &mut Xoshiro256) -> Compressed;
+
+    /// Upper bound on the relative variance constant `C` of Assumption 1
+    /// for vectors of dimension `dim` (`E||Q(x)-x||^2 <= C ||x||^2`).
+    /// For biased operators this is the analogous contraction-gap constant.
+    fn variance_constant(&self, dim: usize) -> f64;
+
+    /// `E Q(x) = x`?
+    fn is_unbiased(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Boxed compressor, the form the algorithms hold.
+pub type BoxedCompressor = std::sync::Arc<dyn Compressor>;
+
+/// Parse a compressor spec string (CLI / config):
+/// `none`, `ternary[:block]` (∞-norm), `l2[:block]`, `qsgd[:levels[:block]]`,
+/// `sparse:p`, `topk:k`.
+pub fn from_spec(spec: &str) -> anyhow::Result<BoxedCompressor> {
+    use std::sync::Arc;
+    let parts: Vec<&str> = spec.split(':').collect();
+    Ok(match parts[0] {
+        "none" | "identity" => Arc::new(Identity),
+        "ternary" | "linf" => {
+            let b = parts.get(1).map_or(Ok(256), |s| s.parse())?;
+            Arc::new(PNormQuantizer::new(PNorm::Inf, b))
+        }
+        "l2" => {
+            let b = parts.get(1).map_or(Ok(256), |s| s.parse())?;
+            Arc::new(PNormQuantizer::new(PNorm::L2, b))
+        }
+        "qsgd" => {
+            let s = parts.get(1).map_or(Ok(4), |s| s.parse())?;
+            let b = parts.get(2).map_or(Ok(256), |s| s.parse())?;
+            Arc::new(QsgdQuantizer::new(s, b))
+        }
+        "sparse" => {
+            let p: f64 = parts.get(1).map_or(Ok(0.1), |s| s.parse())?;
+            Arc::new(StochasticSparsifier::new(p))
+        }
+        "sign" | "signsgd" => {
+            let b = parts.get(1).map_or(Ok(256), |s| s.parse())?;
+            Arc::new(SignSgd::new(b))
+        }
+        "topk" => {
+            let k = parts.get(1).map_or(Ok(0), |s| s.parse())?;
+            Arc::new(TopK::new(k))
+        }
+        other => anyhow::bail!("unknown compressor spec '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parsing() {
+        for (spec, name) in [
+            ("none", "identity"),
+            ("ternary:128", "pnorm-inf"),
+            ("l2", "pnorm-l2"),
+            ("qsgd:8:64", "qsgd"),
+            ("sparse:0.25", "stochastic-sparsifier"),
+            ("topk:10", "topk"),
+            ("sign:128", "signsgd"),
+        ] {
+            assert_eq!(from_spec(spec).unwrap().name(), name, "spec {spec}");
+        }
+        assert!(from_spec("bogus").is_err());
+    }
+
+    #[test]
+    fn decode_each_visits_every_coordinate_for_all_variants() {
+        let payloads = vec![
+            Compressed::Dense(vec![1.0, -2.0, 0.0]),
+            Compressed::Ternary {
+                dim: 5,
+                block_size: 2,
+                norms: vec![2.0, 0.5, 1.0],
+                trits: vec![1, 0, -1, 1, 0],
+            },
+            Compressed::Levels {
+                dim: 4,
+                block_size: 4,
+                s: 2,
+                norms: vec![4.0],
+                levels: vec![2, -1, 0, 1],
+            },
+            Compressed::Sparse { dim: 6, idx: vec![0, 3, 5], vals: vec![9.0, -1.0, 2.0] },
+        ];
+        for c in payloads {
+            let want = c.decompress();
+            let mut got = vec![f32::NAN; c.dim()];
+            let mut visits = 0;
+            c.decode_each(|i, v| {
+                got[i] = v;
+                visits += 1;
+            });
+            assert_eq!(visits, c.dim(), "{c:?} did not visit every coord");
+            assert_eq!(got, want, "{c:?} decode_each != decompress");
+        }
+    }
+
+    #[test]
+    fn add_scaled_matches_decompress() {
+        let c = Compressed::Sparse {
+            dim: 6,
+            idx: vec![1, 4],
+            vals: vec![2.0, -3.0],
+        };
+        let d = c.decompress();
+        assert_eq!(d, vec![0.0, 2.0, 0.0, 0.0, -3.0, 0.0]);
+        let mut out = vec![1.0; 6];
+        c.add_scaled_into(0.5, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 1.0, 1.0, -0.5, 1.0]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Bernoulli p-norm quantization — the paper's default compressor (§3).
+//!
+//! `Q_p(x) = ||x||_p * sign(x) ∘ ξ`, with `ξ_i ~ Bernoulli(|x_i| / ||x||_p)`.
+//! Applied independently to blocks of size `b` ("blockwise" in §3.2): each
+//! block transmits one fp32 magnitude plus one trit per coordinate, so the
+//! wire cost is `32·d/b + log2(3)·d` bits instead of `32·d`.
+//!
+//! Unbiasedness: `E Q(x)_i = ||x||_p · sign(x_i) · |x_i|/||x||_p = x_i`.
+//! Variance (per block): `E||Q(x)-x||² = ||x||_p·||x||_1 − ||x||²`, i.e.
+//! Assumption 1 holds with `C = max_x ||x||_1·||x||_p / ||x||² − 1 ≤ √b·b^{1/p}`
+//! (Mishchenko et al. 2019); for the ∞-norm the bound `C ≤ b − 1` is tight
+//! on one-hot-free worst cases but typically far smaller — the benches
+//! measure the empirical ratio.
+
+use super::{Compressed, Compressor, Xoshiro256};
+use crate::F;
+
+/// Which p-norm scales each block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PNorm {
+    /// ∞-norm (the paper's experiments: "Bernoulli ∞-norm quantization").
+    Inf,
+    /// 2-norm (QSGD-flavoured variant).
+    L2,
+}
+
+#[derive(Clone, Debug)]
+pub struct PNormQuantizer {
+    pub norm: PNorm,
+    pub block_size: usize,
+}
+
+impl PNormQuantizer {
+    pub fn new(norm: PNorm, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        Self { norm, block_size }
+    }
+
+    /// The paper's experimental default: ∞-norm, block size 256.
+    pub fn paper_default() -> Self {
+        Self::new(PNorm::Inf, 256)
+    }
+
+    #[inline]
+    fn block_norm(&self, block: &[F]) -> F {
+        match self.norm {
+            // 4 independent accumulators break the serial maxss dependency
+            // chain (§Perf): ~3x on long blocks, same result (max is
+            // order-independent).
+            PNorm::Inf => {
+                let mut acc = [0.0f32; 4];
+                let mut it = block.chunks_exact(4);
+                for c in &mut it {
+                    acc[0] = acc[0].max(c[0].abs());
+                    acc[1] = acc[1].max(c[1].abs());
+                    acc[2] = acc[2].max(c[2].abs());
+                    acc[3] = acc[3].max(c[3].abs());
+                }
+                let mut m = acc[0].max(acc[1]).max(acc[2].max(acc[3]));
+                for &v in it.remainder() {
+                    m = m.max(v.abs());
+                }
+                m
+            }
+            PNorm::L2 => {
+                let mut acc = [0.0f32; 4];
+                let mut it = block.chunks_exact(4);
+                for c in &mut it {
+                    acc[0] += c[0] * c[0];
+                    acc[1] += c[1] * c[1];
+                    acc[2] += c[2] * c[2];
+                    acc[3] += c[3] * c[3];
+                }
+                let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+                for &v in it.remainder() {
+                    s += v * v;
+                }
+                s.sqrt()
+            }
+        }
+    }
+}
+
+impl Compressor for PNormQuantizer {
+    fn compress(&self, x: &[F], rng: &mut Xoshiro256) -> Compressed {
+        let dim = x.len();
+        let nblocks = dim.div_ceil(self.block_size);
+        let mut norms = Vec::with_capacity(nblocks);
+        let mut trits = vec![0i8; dim];
+        // §Perf: randomness is buffered per block so the quantize loop has
+        // no serial RNG dependency and auto-vectorizes (SIMD compare). The
+        // stream consumption (one next_u32 per coordinate of every nonzero
+        // block, in order) is the contract the Pallas cross-validation test
+        // mirrors — bit-identical to calling next_f32() inline.
+        let mut ubuf = vec![0u32; self.block_size];
+        const INV_2_24: f32 = 1.0 / (1 << 24) as f32;
+        for (block, tchunk) in x.chunks(self.block_size).zip(trits.chunks_mut(self.block_size)) {
+            let norm = self.block_norm(block);
+            norms.push(norm);
+            if norm == 0.0 {
+                continue; // all-zero block: trits stay 0, no entropy drawn.
+            }
+            let inv = 1.0 / norm;
+            let u = &mut ubuf[..block.len()];
+            rng.fill_u32(u);
+            for ((t, &v), &r) in tchunk.iter_mut().zip(block.iter()).zip(u.iter()) {
+                // ξ ~ Bernoulli(|v|/norm); trit = sign(v)·ξ, branchless.
+                let p = v.abs() * inv;
+                let uf = (r >> 8) as f32 * INV_2_24;
+                let fire = (uf < p) as i8;
+                // sign bit -> {1, -1} (v >= 0 ? 1 : -1; -0.0 maps to -1
+                // but then |v| = 0 so fire = 0 and the trit is 0 anyway).
+                let sign = 1 - 2 * ((v.to_bits() >> 31) as i8);
+                *t = fire * sign;
+            }
+        }
+        Compressed::Ternary {
+            dim,
+            block_size: self.block_size,
+            norms,
+            trits,
+        }
+    }
+
+    fn variance_constant(&self, dim: usize) -> f64 {
+        // C = max ||x||_1 ||x||_p / ||x||_2^2 - 1 over blocks of size b
+        // (Mishchenko et al. 2019, Remark 1 of the paper).
+        let b = self.block_size.min(dim).max(1) as f64;
+        match self.norm {
+            // ||x||_1 <= sqrt(b)||x||_2 and ||x||_inf <= ||x||_2, so
+            // C = max ||x||_1||x||_inf/||x||_2^2 - 1 <= sqrt(b) - 1.
+            PNorm::Inf => b.sqrt() - 1.0,
+            // ||x||_1||x||_2/||x||_2^2 <= sqrt(b) → C <= sqrt(b) - 1.
+            PNorm::L2 => b.sqrt() - 1.0,
+        }
+        .max(0.0)
+    }
+
+    fn name(&self) -> &'static str {
+        match self.norm {
+            PNorm::Inf => "pnorm-inf",
+            PNorm::L2 => "pnorm-l2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_decode(q: &PNormQuantizer, x: &[F], trials: usize, seed: u64) -> Vec<f64> {
+        let mut acc = vec![0.0f64; x.len()];
+        for t in 0..trials {
+            let mut rng = Xoshiro256::for_site(seed, 0, t as u64);
+            let d = q.compress(x, &mut rng).decompress();
+            for (a, v) in acc.iter_mut().zip(d) {
+                *a += v as f64;
+            }
+        }
+        acc.iter_mut().for_each(|a| *a /= trials as f64);
+        acc
+    }
+
+    #[test]
+    fn unbiased_inf_norm() {
+        let q = PNormQuantizer::new(PNorm::Inf, 4);
+        let x = vec![0.5, -1.0, 0.25, 0.0, 2.0, -0.125, 1.5, 0.75];
+        let m = mean_decode(&q, &x, 20_000, 11);
+        for (mi, xi) in m.iter().zip(&x) {
+            assert!((mi - *xi as f64).abs() < 0.05, "E[Q(x)]={mi} vs x={xi}");
+        }
+    }
+
+    #[test]
+    fn unbiased_l2_norm() {
+        let q = PNormQuantizer::new(PNorm::L2, 8);
+        let x = vec![0.5, -1.0, 0.25, 0.0, 2.0, -0.125, 1.5, 0.75];
+        let m = mean_decode(&q, &x, 20_000, 12);
+        for (mi, xi) in m.iter().zip(&x) {
+            assert!((mi - *xi as f64).abs() < 0.05, "E[Q(x)]={mi} vs x={xi}");
+        }
+    }
+
+    #[test]
+    fn zero_vector_compresses_to_zero() {
+        let q = PNormQuantizer::paper_default();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = q.compress(&[0.0; 300], &mut rng);
+        assert!(c.decompress().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn magnitudes_are_block_norms() {
+        let q = PNormQuantizer::new(PNorm::Inf, 3);
+        let x = vec![1.0, -4.0, 2.0, 0.5, 0.25, -0.125, 7.0];
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        match q.compress(&x, &mut rng) {
+            Compressed::Ternary { norms, .. } => assert_eq!(norms, vec![4.0, 0.5, 7.0]),
+            other => panic!("unexpected payload {other:?}"),
+        }
+    }
+
+    #[test]
+    fn variance_bound_holds_empirically() {
+        // E||Q(x)-x||^2 <= C ||x||^2 with C = variance_constant.
+        let q = PNormQuantizer::new(PNorm::Inf, 16);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let x: Vec<F> = (0..64).map(|_| rng.next_gaussian()).collect();
+        let xsq: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+        let trials = 5000;
+        let mut err = 0.0f64;
+        for t in 0..trials {
+            let mut r = Xoshiro256::for_site(77, 0, t);
+            let d = q.compress(&x, &mut r).decompress();
+            err += d
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                .sum::<f64>();
+        }
+        err /= trials as f64;
+        let c = q.variance_constant(64);
+        assert!(err <= c * xsq * 1.05, "E err {err} > C||x||^2 {}", c * xsq);
+    }
+
+    #[test]
+    fn ragged_tail_block() {
+        let q = PNormQuantizer::new(PNorm::Inf, 4);
+        let x = vec![1.0; 10]; // 2 full blocks + tail of 2
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let c = q.compress(&x, &mut rng);
+        assert_eq!(c.dim(), 10);
+        // all |x_i| == norm → every trit fires → exact reconstruction
+        assert_eq!(c.decompress(), x);
+    }
+}

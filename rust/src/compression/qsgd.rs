@@ -1,0 +1,132 @@
+//! QSGD-style multi-level stochastic quantization (Alistarh et al., 2017).
+//!
+//! Blockwise: each block is scaled by its 2-norm and every coordinate is
+//! stochastically rounded to one of `s` uniform levels in [0, 1]:
+//! `Q(x_i) = ||x|| · sign(x_i) · ζ_i(x, s)` with
+//! `ζ_i = l/s` w.p. `1 − (|x_i|/||x|| · s − l)` and `(l+1)/s` otherwise,
+//! where `l = floor(|x_i|/||x|| · s)`. Unbiased; Assumption 1 holds with
+//! `C ≤ min(b/s², √b/s)` per block of size `b` (QSGD Lemma 3.1).
+
+use super::{Compressed, Compressor, Xoshiro256};
+use crate::F;
+
+#[derive(Clone, Debug)]
+pub struct QsgdQuantizer {
+    /// Number of quantization levels `s >= 1` (s=1 recovers ternary 2-norm).
+    pub levels: u8,
+    pub block_size: usize,
+}
+
+impl QsgdQuantizer {
+    pub fn new(levels: u8, block_size: usize) -> Self {
+        assert!(levels >= 1, "need at least one level");
+        assert!(block_size > 0);
+        Self { levels, block_size }
+    }
+}
+
+impl Compressor for QsgdQuantizer {
+    fn compress(&self, x: &[F], rng: &mut Xoshiro256) -> Compressed {
+        let dim = x.len();
+        let s = self.levels as F;
+        let nblocks = dim.div_ceil(self.block_size);
+        let mut norms = Vec::with_capacity(nblocks);
+        let mut levels = vec![0i8; dim];
+        for (b, block) in x.chunks(self.block_size).enumerate() {
+            let norm = block.iter().map(|&v| v * v).sum::<F>().sqrt();
+            norms.push(norm);
+            if norm == 0.0 {
+                continue;
+            }
+            let base = b * self.block_size;
+            for (j, &v) in block.iter().enumerate() {
+                let r = v.abs() / norm * s; // in [0, s]
+                let l = r.floor();
+                // round up with probability (r - l)
+                let up = rng.next_f32() < (r - l);
+                let q = (l + if up { 1.0 } else { 0.0 }) as i8;
+                levels[base + j] = if v >= 0.0 { q } else { -q };
+            }
+        }
+        Compressed::Levels {
+            dim,
+            block_size: self.block_size,
+            s: self.levels,
+            norms,
+            levels,
+        }
+    }
+
+    fn variance_constant(&self, dim: usize) -> f64 {
+        let b = self.block_size.min(dim).max(1) as f64;
+        let s = self.levels as f64;
+        (b / (s * s)).min(b.sqrt() / s)
+    }
+
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased() {
+        let q = QsgdQuantizer::new(4, 8);
+        let x = vec![0.5, -1.0, 0.25, 0.0, 2.0, -0.125, 1.5, 0.75];
+        let trials = 20_000;
+        let mut acc = vec![0.0f64; x.len()];
+        for t in 0..trials {
+            let mut rng = Xoshiro256::for_site(3, 0, t);
+            for (a, v) in acc.iter_mut().zip(q.compress(&x, &mut rng).decompress()) {
+                *a += v as f64;
+            }
+        }
+        for (a, &xi) in acc.iter().zip(&x) {
+            let m = a / trials as f64;
+            assert!((m - xi as f64).abs() < 0.05, "E[Q]={m} x={xi}");
+        }
+    }
+
+    #[test]
+    fn levels_in_range() {
+        let q = QsgdQuantizer::new(4, 16);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let x: Vec<F> = (0..64).map(|_| rng.next_gaussian()).collect();
+        match q.compress(&x, &mut rng) {
+            Compressed::Levels { levels, s, .. } => {
+                assert!(levels.iter().all(|&l| l.unsigned_abs() <= s));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn s1_exactly_reconstructs_norm_scale() {
+        // With s=1 the only nonzero level is ±1, so decode is ±norm.
+        let q = QsgdQuantizer::new(1, 4);
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let x = vec![3.0, 0.0, 0.0, 0.0];
+        let d = q.compress(&x, &mut rng).decompress();
+        assert_eq!(d, vec![3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn variance_bound_holds_empirically() {
+        let q = QsgdQuantizer::new(2, 16);
+        let mut rng = Xoshiro256::seed_from_u64(13);
+        let x: Vec<F> = (0..48).map(|_| rng.next_gaussian()).collect();
+        let xsq: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+        let trials = 4000;
+        let mut err = 0.0f64;
+        for t in 0..trials {
+            let mut r = Xoshiro256::for_site(14, 0, t);
+            let d = q.compress(&x, &mut r).decompress();
+            err += d.iter().zip(&x).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>();
+        }
+        err /= trials as f64;
+        assert!(err <= q.variance_constant(48) * xsq * 1.05);
+    }
+}

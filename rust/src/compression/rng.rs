@@ -1,0 +1,197 @@
+//! Deterministic RNG streams for all stochastic operations.
+//!
+//! Every stochastic compression / sampling site draws from a seeded
+//! xoshiro256** stream keyed by `(seed, node, round)`. This makes entire
+//! distributed runs bit-reproducible, which the test-suite and the
+//! L1↔L3 cross-validation (same uniform stream fed to the Pallas kernel
+//! and the rust quantizer) rely on.
+
+/// xoshiro256** 1.0 — public-domain generator by Blackman & Vigna.
+///
+/// `next_u32` consumes the 64-bit outputs in halves (low, then high):
+/// the generator's update is a ~7-cycle serial dependency chain, so
+/// halving the number of `next_u64` calls nearly halves the latency of
+/// u32-sized consumers — the ternary quantizer draws one u32 per
+/// coordinate and is the hottest loop in the system (§Perf).
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// Buffered high half of the last u64 drawn by `next_u32`.
+    half: u32,
+    /// Whether `half` is pending.
+    have_half: bool,
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    (x << k) | (x >> (64 - k))
+}
+
+/// splitmix64, used for seeding (recommended by the xoshiro authors).
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Xoshiro256 {
+    /// Seed from a single u64 via splitmix64 (never yields the all-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+            half: 0,
+            have_half: false,
+        }
+    }
+
+    /// Stream keyed by `(seed, node, round)` — the canonical way every
+    /// stochastic site in the system obtains its generator.
+    pub fn for_site(seed: u64, node: u64, round: u64) -> Self {
+        // Mix the three keys through splitmix so adjacent sites decorrelate.
+        let mut sm = seed ^ node.wrapping_mul(0xA24BAED4963EE407) ^ round.wrapping_mul(0x9FB21C651E98DF25);
+        let _ = splitmix64(&mut sm);
+        Self::seed_from_u64(splitmix64(&mut sm))
+    }
+
+    #[inline(always)]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[1].wrapping_mul(5), 7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    #[inline(always)]
+    pub fn next_u32(&mut self) -> u32 {
+        if self.have_half {
+            self.have_half = false;
+            return self.half;
+        }
+        let x = self.next_u64();
+        self.half = (x >> 32) as u32;
+        self.have_half = true;
+        x as u32
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of entropy.
+    #[inline(always)]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of entropy.
+    #[inline(always)]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box–Muller (uses two uniforms; no caching —
+    /// clarity over the last 2x since data synthesis is off the hot path).
+    pub fn next_gaussian(&mut self) -> f32 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        // Lemire's unbiased multiply-shift rejection.
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = {
+                let m = (x as u128) * (n as u128);
+                ((m >> 64) as u64, m as u64)
+            };
+            if lo >= n || lo >= (u64::MAX - n + 1) % n {
+                return hi as usize;
+            }
+        }
+    }
+
+    /// Fill `buf` with uniform u32s — the entropy interface shared with the
+    /// Pallas quantizer (which receives the same u32 buffer as an operand).
+    pub fn fill_u32(&mut self, buf: &mut [u32]) {
+        for b in buf.iter_mut() {
+            *b = self.next_u32();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_site() {
+        let mut a = Xoshiro256::for_site(7, 3, 100);
+        let mut b = Xoshiro256::for_site(7, 3, 100);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn sites_decorrelate() {
+        let mut a = Xoshiro256::for_site(7, 3, 100);
+        let mut b = Xoshiro256::for_site(7, 3, 101);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let f = r.next_f32();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Xoshiro256::seed_from_u64(2);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256::seed_from_u64(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian() as f64).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Xoshiro256::seed_from_u64(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.next_below(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

@@ -1,0 +1,84 @@
+//! Stochastic sparsification (Wen et al., 2017 / §3 of the paper):
+//! each coordinate is dropped with probability `1 − p` and scaled by `1/p`
+//! otherwise. Unbiased; Assumption 1 holds with `C = 1/p − 1` exactly:
+//! `E(Q(x_i) − x_i)² = p·(x_i/p − x_i)² + (1−p)·x_i² = (1/p − 1)·x_i²`.
+
+use super::{Compressed, Compressor, Xoshiro256};
+use crate::F;
+
+#[derive(Clone, Copy, Debug)]
+pub struct StochasticSparsifier {
+    /// Keep probability `p ∈ (0, 1]`.
+    pub p: f64,
+}
+
+impl StochasticSparsifier {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "keep probability must be in (0,1]");
+        Self { p }
+    }
+}
+
+impl Compressor for StochasticSparsifier {
+    fn compress(&self, x: &[F], rng: &mut Xoshiro256) -> Compressed {
+        let scale = (1.0 / self.p) as F;
+        let mut idx = Vec::with_capacity((x.len() as f64 * self.p * 1.2) as usize + 4);
+        let mut vals = Vec::with_capacity(idx.capacity());
+        for (i, &v) in x.iter().enumerate() {
+            if rng.next_f64() < self.p {
+                idx.push(i as u32);
+                vals.push(v * scale);
+            }
+        }
+        Compressed::Sparse {
+            dim: x.len(),
+            idx,
+            vals,
+        }
+    }
+
+    fn variance_constant(&self, _dim: usize) -> f64 {
+        1.0 / self.p - 1.0
+    }
+
+    fn name(&self) -> &'static str {
+        "stochastic-sparsifier"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unbiased_and_exact_variance() {
+        let q = StochasticSparsifier::new(0.25);
+        let x = vec![1.0, -2.0, 0.5, 4.0];
+        let xsq: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+        let trials = 40_000;
+        let mut mean = vec![0.0f64; 4];
+        let mut err = 0.0f64;
+        for t in 0..trials {
+            let mut rng = Xoshiro256::for_site(21, 0, t);
+            let d = q.compress(&x, &mut rng).decompress();
+            for (m, &v) in mean.iter_mut().zip(&d) {
+                *m += v as f64;
+            }
+            err += d.iter().zip(&x).map(|(a, b)| ((a - b) * (a - b)) as f64).sum::<f64>();
+        }
+        for (m, &xi) in mean.iter().zip(&x) {
+            assert!((m / trials as f64 - xi as f64).abs() < 0.08);
+        }
+        let c = q.variance_constant(4); // exactly 3
+        let ratio = (err / trials as f64) / xsq;
+        assert!((ratio - c).abs() < 0.15, "ratio {ratio} vs C {c}");
+    }
+
+    #[test]
+    fn p_one_is_lossless() {
+        let q = StochasticSparsifier::new(1.0);
+        let x = vec![1.0, -2.0, 0.5];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        assert_eq!(q.compress(&x, &mut rng).decompress(), x);
+    }
+}

@@ -1,0 +1,110 @@
+//! Top-k sparsification (Stich et al. 2018; Strom 2015) — keeps the `k`
+//! largest-magnitude coordinates. **Biased** (`E Q(x) ≠ x`), but a
+//! `(1 − k/d)`-contraction: `||Q(x) − x||² ≤ (1 − k/d)||x||²`. Used only by
+//! the DoubleSqueeze(topk) baseline, which the paper reports because
+//! unbiased quantization makes DoubleSqueeze converge poorly (Fig. 3–5).
+
+use super::{Compressed, Compressor, Xoshiro256};
+use crate::F;
+
+#[derive(Clone, Copy, Debug)]
+pub struct TopK {
+    /// Number of coordinates kept. `k == 0` means `d/100` (1 %), matching
+    /// the common top-k default in the error-feedback literature.
+    pub k: usize,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        Self { k }
+    }
+
+    fn effective_k(&self, dim: usize) -> usize {
+        if self.k == 0 {
+            (dim / 100).max(1)
+        } else {
+            self.k.min(dim)
+        }
+    }
+}
+
+impl Compressor for TopK {
+    fn compress(&self, x: &[F], _rng: &mut Xoshiro256) -> Compressed {
+        let k = self.effective_k(x.len());
+        // select_nth_unstable on |x| descending: O(d) average.
+        let mut order: Vec<u32> = (0..x.len() as u32).collect();
+        if k < x.len() {
+            order.select_nth_unstable_by(k, |&a, &b| {
+                x[b as usize]
+                    .abs()
+                    .partial_cmp(&x[a as usize].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            order.truncate(k);
+        }
+        order.sort_unstable(); // ascending index order → gap-codable
+        let vals = order.iter().map(|&i| x[i as usize]).collect();
+        Compressed::Sparse {
+            dim: x.len(),
+            idx: order,
+            vals,
+        }
+    }
+
+    fn variance_constant(&self, dim: usize) -> f64 {
+        // contraction gap, not an unbiased-variance constant
+        1.0 - self.effective_k(dim) as f64 / dim.max(1) as f64
+    }
+
+    fn is_unbiased(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let t = TopK::new(2);
+        let x = vec![0.1, -5.0, 0.2, 3.0, -0.05];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let d = t.compress(&x, &mut rng).decompress();
+        assert_eq!(d, vec![0.0, -5.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn contraction_property() {
+        let t = TopK::new(8);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x: Vec<F> = (0..64).map(|_| rng.next_gaussian()).collect();
+        let d = t.compress(&x, &mut rng).decompress();
+        let err: f64 = d.iter().zip(&x).map(|(a, b)| ((a - b) * (a - b)) as f64).sum();
+        let xsq: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+        assert!(err <= t.variance_constant(64) * xsq + 1e-9);
+    }
+
+    #[test]
+    fn k_zero_defaults_to_one_percent() {
+        let t = TopK::new(0);
+        let x = vec![1.0; 500];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        match t.compress(&x, &mut rng) {
+            Compressed::Sparse { idx, .. } => assert_eq!(idx.len(), 5),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn k_larger_than_dim_is_lossless() {
+        let t = TopK::new(100);
+        let x = vec![1.0, -2.0, 3.0];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        assert_eq!(t.compress(&x, &mut rng).decompress(), x);
+    }
+}

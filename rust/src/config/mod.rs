@@ -1,0 +1,258 @@
+//! Run configuration: a JSON-loadable description of a full training job
+//! (problem, algorithm, hyper-parameters), plus the spec-string parsers the
+//! CLI shares. JSON handling is the in-crate [`json`] module (offline
+//! environment — no serde).
+
+pub mod json;
+
+use crate::algorithms::{AlgorithmKind, HyperParams};
+use crate::optim::{LrSchedule, Prox};
+use json::Json;
+
+/// Which workload to run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProblemConfig {
+    /// §5.1 linear regression.
+    Linreg { rows: usize, dim: usize, lambda: f32, data_seed: u64 },
+    /// Synthetic-MNIST MLP (Fig. 4 stand-in).
+    MnistMlp { n_examples: usize, hidden: Vec<usize>, data_seed: u64 },
+    /// Synthetic-CIFAR MLP (Fig. 5 stand-in).
+    CifarMlp { n_examples: usize, hidden: Vec<usize>, data_seed: u64 },
+    /// AOT transformer LM via PJRT artifacts (see `python/compile`).
+    TransformerLm { artifact_dir: String, corpus_len: usize, data_seed: u64 },
+}
+
+impl ProblemConfig {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let kind = v.req_str("kind")?;
+        let seed = v.opt_u64("data_seed", 42);
+        Ok(match kind {
+            "linreg" => ProblemConfig::Linreg {
+                rows: v.req_usize("rows")?,
+                dim: v.req_usize("dim")?,
+                lambda: v.req_f64("lambda")? as f32,
+                data_seed: seed,
+            },
+            "mnist_mlp" => ProblemConfig::MnistMlp {
+                n_examples: v.opt_usize("n_examples", 4096),
+                hidden: parse_usize_array(v.get("hidden"), &[256, 64])?,
+                data_seed: seed,
+            },
+            "cifar_mlp" => ProblemConfig::CifarMlp {
+                n_examples: v.opt_usize("n_examples", 2048),
+                hidden: parse_usize_array(v.get("hidden"), &[512, 256])?,
+                data_seed: seed,
+            },
+            "transformer_lm" => ProblemConfig::TransformerLm {
+                artifact_dir: v.opt_str("artifact_dir", "artifacts").to_string(),
+                corpus_len: v.opt_usize("corpus_len", 200_000),
+                data_seed: seed,
+            },
+            other => anyhow::bail!("unknown problem kind '{other}'"),
+        })
+    }
+}
+
+fn parse_usize_array(v: Option<&Json>, default: &[usize]) -> anyhow::Result<Vec<usize>> {
+    match v {
+        None => Ok(default.to_vec()),
+        Some(j) => j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("expected array"))?
+            .iter()
+            .map(|e| e.as_usize().ok_or_else(|| anyhow::anyhow!("expected integer")))
+            .collect(),
+    }
+}
+
+/// Parse `none` | `l1[:λ]` | `l2[:λ]` | `box[:r]`.
+pub fn parse_prox(spec: &str) -> anyhow::Result<Prox> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    Ok(match parts[0] {
+        "none" | "" => Prox::None,
+        "l1" => Prox::L1 { lambda: parts.get(1).map_or(Ok(1e-4), |s| s.parse())? },
+        "l2" => Prox::L2 { lambda: parts.get(1).map_or(Ok(1e-4), |s| s.parse())? },
+        "box" => Prox::BoxConstraint { radius: parts.get(1).map_or(Ok(1.0), |s| s.parse())? },
+        other => anyhow::bail!("unknown prox spec '{other}'"),
+    })
+}
+
+/// Parse `const` | `decay[:factor[:every]]` | `warmup[:rounds]`.
+pub fn parse_schedule(spec: &str, base: f32) -> anyhow::Result<LrSchedule> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    Ok(match parts[0] {
+        "const" | "constant" => LrSchedule::Constant(base),
+        "decay" => LrSchedule::StepDecay {
+            base,
+            factor: parts.get(1).map_or(Ok(0.1), |s| s.parse())?,
+            every: parts.get(2).map_or(Ok(25), |s| s.parse())?,
+        },
+        "warmup" => LrSchedule::Warmup {
+            base,
+            warmup: parts.get(1).map_or(Ok(100), |s| s.parse())?,
+        },
+        other => anyhow::bail!("unknown schedule spec '{other}'"),
+    })
+}
+
+/// Hyper-parameter block of a job config.
+#[derive(Clone, Debug)]
+pub struct HyperConfig {
+    pub lr: f32,
+    pub alpha: f32,
+    pub beta: f32,
+    pub eta: f32,
+    pub momentum: f32,
+    pub worker_compressor: String,
+    pub master_compressor: String,
+    pub prox: String,
+    pub schedule: Option<String>,
+}
+
+impl HyperConfig {
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            lr: v.req_f64("lr")? as f32,
+            alpha: v.opt_f64("alpha", 0.1) as f32,
+            beta: v.opt_f64("beta", 1.0) as f32,
+            eta: v.opt_f64("eta", 1.0) as f32,
+            momentum: v.opt_f64("momentum", 0.0) as f32,
+            worker_compressor: v.opt_str("worker_compressor", "ternary:256").to_string(),
+            master_compressor: v.opt_str("master_compressor", "ternary:256").to_string(),
+            prox: v.opt_str("prox", "none").to_string(),
+            schedule: v.get("schedule").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+
+    pub fn to_hyperparams(&self) -> anyhow::Result<HyperParams> {
+        Ok(HyperParams {
+            lr: self.lr,
+            alpha: self.alpha,
+            beta: self.beta,
+            eta: self.eta,
+            momentum: self.momentum,
+            worker_compressor: self.worker_compressor.clone(),
+            master_compressor: self.master_compressor.clone(),
+            prox: parse_prox(&self.prox)?,
+            schedule: match &self.schedule {
+                None => None,
+                Some(s) => Some(parse_schedule(s, self.lr)?),
+            },
+        })
+    }
+}
+
+/// A complete training job.
+#[derive(Clone, Debug)]
+pub struct JobConfig {
+    pub problem: ProblemConfig,
+    pub algorithm: String,
+    pub hyper: HyperConfig,
+    pub n_workers: usize,
+    pub iters: usize,
+    pub minibatch: Option<usize>,
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl JobConfig {
+    pub fn from_json(s: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(s)?;
+        Ok(Self {
+            problem: ProblemConfig::from_json(
+                v.get("problem").ok_or_else(|| anyhow::anyhow!("missing 'problem'"))?,
+            )?,
+            algorithm: v.req_str("algorithm")?.to_string(),
+            hyper: HyperConfig::from_json(
+                v.get("hyper").ok_or_else(|| anyhow::anyhow!("missing 'hyper'"))?,
+            )?,
+            n_workers: v.req_usize("n_workers")?,
+            iters: v.req_usize("iters")?,
+            minibatch: v.get("minibatch").and_then(Json::as_usize),
+            eval_every: v.opt_usize("eval_every", 10),
+            seed: v.opt_u64("seed", 42),
+        })
+    }
+
+    pub fn from_file(path: &str) -> anyhow::Result<Self> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn algorithm_kind(&self) -> anyhow::Result<AlgorithmKind> {
+        self.algorithm.parse()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_job_parses() {
+        let s = r#"{
+            "problem": {"kind": "linreg", "rows": 1200, "dim": 500, "lambda": 0.1},
+            "algorithm": "dore",
+            "hyper": {"lr": 0.05, "alpha": 0.1, "beta": 1.0, "eta": 1.0,
+                      "worker_compressor": "ternary:256", "schedule": "decay:0.1:25"},
+            "n_workers": 20,
+            "iters": 1000,
+            "minibatch": 64
+        }"#;
+        let job = JobConfig::from_json(s).unwrap();
+        assert_eq!(job.n_workers, 20);
+        assert_eq!(job.minibatch, Some(64));
+        assert_eq!(job.algorithm_kind().unwrap(), AlgorithmKind::Dore);
+        assert_eq!(
+            job.problem,
+            ProblemConfig::Linreg { rows: 1200, dim: 500, lambda: 0.1, data_seed: 42 }
+        );
+        let hp = job.hyper.to_hyperparams().unwrap();
+        assert!(hp.schedule.is_some());
+    }
+
+    #[test]
+    fn minimal_json_uses_defaults() {
+        let s = r#"{
+            "problem": {"kind": "mnist_mlp"},
+            "algorithm": "diana",
+            "hyper": {"lr": 0.1},
+            "n_workers": 4,
+            "iters": 100
+        }"#;
+        let job = JobConfig::from_json(s).unwrap();
+        assert_eq!(job.eval_every, 10);
+        assert_eq!(job.minibatch, None);
+        match &job.problem {
+            ProblemConfig::MnistMlp { hidden, n_examples, .. } => {
+                assert_eq!(hidden, &[256, 64]);
+                assert_eq!(*n_examples, 4096);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn prox_and_schedule_specs() {
+        assert_eq!(parse_prox("l1:0.5").unwrap(), Prox::L1 { lambda: 0.5 });
+        assert_eq!(parse_prox("none").unwrap(), Prox::None);
+        assert!(parse_prox("huh").is_err());
+        match parse_schedule("decay:0.1:25", 0.1).unwrap() {
+            LrSchedule::StepDecay { factor, every, .. } => {
+                assert_eq!(factor, 0.1);
+                assert_eq!(every, 25);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(parse_schedule("huh", 0.1).is_err());
+    }
+
+    #[test]
+    fn bad_configs_are_rejected() {
+        assert!(JobConfig::from_json("{}").is_err());
+        assert!(JobConfig::from_json(
+            r#"{"problem": {"kind": "nope"}, "algorithm": "dore",
+                "hyper": {"lr": 0.1}, "n_workers": 1, "iters": 1}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Checkpointing: serialize / restore a training run's full state (round
+//! counter, master iterate, RNG-reconstructible by design) so long jobs can
+//! resume after preemption — a framework feature the paper's testbed
+//! runs would need in practice.
+//!
+//! Format (little-endian): magic, version, algo name, round, dim, the
+//! master's model vector, plus an integrity checksum. Because every
+//! stochastic site is keyed by `(seed, node, round)`, resuming from
+//! `(round, model)` with the same seed reproduces the exact trajectory the
+//! uninterrupted run would have taken for algorithms whose state is
+//! recoverable from the model (P-SGD/QSGD); for stateful algorithms
+//! (DORE/DIANA h, e) the checkpoint stores those vectors too.
+
+use crate::F;
+use std::io::Read;
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"DORECKPT";
+const VERSION: u32 = 1;
+
+/// A snapshot of a training run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub algo: String,
+    pub round: u64,
+    pub seed: u64,
+    /// Master iterate x̂.
+    pub model: Vec<F>,
+    /// Named auxiliary state vectors (h, e, per-worker h_i, ...).
+    pub aux: Vec<(String, Vec<F>)>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn put_vec(out: &mut Vec<u8>, v: &[F]) {
+    out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_vec(r: &mut impl Read) -> anyhow::Result<Vec<F>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let len = u64::from_le_bytes(len8) as usize;
+    anyhow::ensure!(len <= (1 << 31), "absurd vector length in checkpoint");
+    let mut buf = vec![0u8; 4 * len];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| F::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(r: &mut impl Read) -> anyhow::Result<String> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    anyhow::ensure!(len <= 4096, "absurd string length in checkpoint");
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(String::from_utf8(buf)?)
+}
+
+impl Checkpoint {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        put_str(&mut body, &self.algo);
+        body.extend_from_slice(&self.round.to_le_bytes());
+        body.extend_from_slice(&self.seed.to_le_bytes());
+        put_vec(&mut body, &self.model);
+        body.extend_from_slice(&(self.aux.len() as u32).to_le_bytes());
+        for (name, v) in &self.aux {
+            put_str(&mut body, name);
+            put_vec(&mut body, v);
+        }
+        let mut out = Vec::with_capacity(body.len() + 24);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&fnv1a(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(bytes.len() > 20, "checkpoint too short");
+        anyhow::ensure!(&bytes[..8] == MAGIC, "bad checkpoint magic");
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let checksum = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let body = &bytes[20..];
+        anyhow::ensure!(fnv1a(body) == checksum, "checkpoint checksum mismatch (corrupt file)");
+        let mut r = body;
+        let algo = get_str(&mut r)?;
+        let mut u8buf = [0u8; 8];
+        r.read_exact(&mut u8buf)?;
+        let round = u64::from_le_bytes(u8buf);
+        r.read_exact(&mut u8buf)?;
+        let seed = u64::from_le_bytes(u8buf);
+        let model = get_vec(&mut r)?;
+        let mut n4 = [0u8; 4];
+        r.read_exact(&mut n4)?;
+        let n_aux = u32::from_le_bytes(n4) as usize;
+        anyhow::ensure!(n_aux <= 4096, "absurd aux count");
+        let mut aux = Vec::with_capacity(n_aux);
+        for _ in 0..n_aux {
+            let name = get_str(&mut r)?;
+            aux.push((name, get_vec(&mut r)?));
+        }
+        Ok(Self { algo, round, seed, model, aux })
+    }
+
+    /// Atomic write: temp file + rename, so a crash never leaves a torn
+    /// checkpoint at the destination path.
+    pub fn save(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_bytes())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            algo: "DORE".into(),
+            round: 1234,
+            seed: 42,
+            model: vec![1.0, -2.5, 3.25, 0.0],
+            aux: vec![("h".into(), vec![0.5; 4]), ("e".into(), vec![-0.25; 4])],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let c = sample();
+        let back = Checkpoint::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let mut bytes = sample().to_bytes();
+        let at = bytes.len() - 3;
+        bytes[at] ^= 0xff;
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut bytes = sample().to_bytes();
+        bytes[0] = b'X';
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        let mut bytes2 = sample().to_bytes();
+        bytes2[8] = 99;
+        assert!(Checkpoint::from_bytes(&bytes2).is_err());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let dir = std::env::temp_dir().join(format!("dore-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap(), c);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

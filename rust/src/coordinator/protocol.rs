@@ -1,0 +1,36 @@
+//! Message types between workers and the master. Payloads are encoded wire
+//! bytes (see [`crate::compression::codec`]); the structs carry the minimal
+//! control metadata a real deployment would put in a frame header.
+
+/// Worker → master, one per round per worker.
+#[derive(Clone, Debug)]
+pub struct UplinkMsg {
+    pub worker: usize,
+    pub round: usize,
+    /// Encoded compressed payload.
+    pub bytes: Vec<u8>,
+    /// ‖variable fed to the compressor‖ — diagnostic for Fig. 6, carried
+    /// out-of-band (a real system would piggyback it the same way).
+    pub residual_norm: f64,
+}
+
+/// Master → every worker, one broadcast per round.
+#[derive(Clone, Debug)]
+pub struct DownlinkMsg {
+    pub round: usize,
+    pub bytes: Vec<u8>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_are_cloneable_and_sized() {
+        let m = UplinkMsg { worker: 1, round: 2, bytes: vec![1, 2, 3], residual_norm: 0.5 };
+        let m2 = m.clone();
+        assert_eq!(m2.bytes.len(), 3);
+        let d = DownlinkMsg { round: 2, bytes: vec![9] };
+        assert_eq!(d.clone().round, 2);
+    }
+}

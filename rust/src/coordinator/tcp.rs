@@ -1,0 +1,230 @@
+//! TCP transport for the parameter server: the same master/worker state
+//! machines as the in-process harness and the channel-based coordinator,
+//! but over real sockets with a length-prefixed frame protocol — the
+//! deployment shape the paper's testbed used (PS + workers on Ethernet).
+//!
+//! Frame layout (little-endian):
+//! ```text
+//! [u32 payload_len][u8 kind][u32 round][u32 worker][f64 residual][payload]
+//! ```
+//! `kind` is 0 = uplink, 1 = downlink; `payload` is a
+//! [`crate::compression::codec`] buffer. Byte accounting counts payload
+//! bytes only (header bytes are fixed per message and reported separately),
+//! keeping the numbers comparable with the other two drivers.
+
+use crate::algorithms::build;
+use crate::compression::{codec, Xoshiro256};
+use crate::harness::TrainSpec;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::models::{linalg, Problem};
+use crate::F;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+const KIND_UPLINK: u8 = 0;
+const KIND_DOWNLINK: u8 = 1;
+/// Fixed header bytes per frame (len + kind + round + worker + residual).
+pub const HEADER_BYTES: u64 = 4 + 1 + 4 + 4 + 8;
+
+struct Frame {
+    kind: u8,
+    round: u32,
+    worker: u32,
+    residual: f64,
+    payload: Vec<u8>,
+}
+
+fn write_frame(s: &mut TcpStream, f: &Frame) -> anyhow::Result<()> {
+    let mut head = [0u8; HEADER_BYTES as usize];
+    head[0..4].copy_from_slice(&(f.payload.len() as u32).to_le_bytes());
+    head[4] = f.kind;
+    head[5..9].copy_from_slice(&f.round.to_le_bytes());
+    head[9..13].copy_from_slice(&f.worker.to_le_bytes());
+    head[13..21].copy_from_slice(&f.residual.to_le_bytes());
+    s.write_all(&head)?;
+    s.write_all(&f.payload)?;
+    Ok(())
+}
+
+fn read_frame(s: &mut TcpStream) -> anyhow::Result<Frame> {
+    let mut head = [0u8; HEADER_BYTES as usize];
+    s.read_exact(&mut head)?;
+    let len = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(len <= (1 << 30), "absurd frame length {len}");
+    let mut payload = vec![0u8; len];
+    s.read_exact(&mut payload)?;
+    Ok(Frame {
+        kind: head[4],
+        round: u32::from_le_bytes(head[5..9].try_into().unwrap()),
+        worker: u32::from_le_bytes(head[9..13].try_into().unwrap()),
+        residual: f64::from_le_bytes(head[13..21].try_into().unwrap()),
+        payload,
+    })
+}
+
+/// Run a training job over localhost TCP: binds an ephemeral port, spawns
+/// one OS thread per worker (each with its own socket), drives the master
+/// on the calling thread. Produces iterates bit-identical to
+/// [`super::run_distributed`] and the in-process harness.
+pub fn run_distributed_tcp(
+    problem: Arc<dyn Problem>,
+    spec: TrainSpec,
+) -> anyhow::Result<RunMetrics> {
+    let n = problem.n_workers();
+    let x0 = problem.init();
+    let (workers, mut master) = build(spec.algo, n, &x0, &spec.hp)?;
+
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+
+    // worker threads: connect, then run the synchronous round loop
+    let mut handles = Vec::with_capacity(n);
+    for (id, mut node) in workers.into_iter().enumerate() {
+        let problem = problem.clone();
+        let spec = spec.clone();
+        handles.push(std::thread::Builder::new().name(format!("dore-tcp-{id}")).spawn(
+            move || -> anyhow::Result<()> {
+                let mut sock = TcpStream::connect(addr)?;
+                sock.set_nodelay(true)?;
+                // identify ourselves once
+                write_frame(
+                    &mut sock,
+                    &Frame { kind: KIND_UPLINK, round: u32::MAX, worker: id as u32, residual: 0.0, payload: vec![] },
+                )?;
+                let d = problem.dim();
+                let mut grad = vec![0.0 as F; d];
+                for k in 0..spec.iters {
+                    let mut grad_rng =
+                        Xoshiro256::for_site(spec.seed ^ 0x5eed, 1 + id as u64, k as u64);
+                    problem.local_grad(id, node.model(), spec.minibatch, &mut grad_rng, &mut grad);
+                    let mut qrng = Xoshiro256::for_site(spec.seed, 1 + id as u64, k as u64);
+                    let up = node.round(k, &grad, &mut qrng);
+                    write_frame(
+                        &mut sock,
+                        &Frame {
+                            kind: KIND_UPLINK,
+                            round: k as u32,
+                            worker: id as u32,
+                            residual: node.last_compressed_norm(),
+                            payload: codec::encode(&up),
+                        },
+                    )?;
+                    let down = read_frame(&mut sock)?;
+                    anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
+                    anyhow::ensure!(down.round == k as u32, "round skew");
+                    node.apply_downlink(k, &codec::decode(&down.payload)?);
+                }
+                Ok(())
+            },
+        )?);
+    }
+
+    // master: accept n connections, map them to worker ids via hello frames
+    let mut socks: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+    for _ in 0..n {
+        let (mut s, _) = listener.accept()?;
+        s.set_nodelay(true)?;
+        let hello = read_frame(&mut s)?;
+        anyhow::ensure!(hello.round == u32::MAX, "expected hello frame");
+        let id = hello.worker as usize;
+        anyhow::ensure!(id < n && socks[id].is_none(), "bad hello worker id");
+        socks[id] = Some(s);
+    }
+    let mut socks: Vec<TcpStream> = socks.into_iter().map(Option::unwrap).collect();
+
+    let sw = Stopwatch::start();
+    let mut metrics = RunMetrics::new(spec.algo.name());
+    for k in 0..spec.iters {
+        let mut uplinks = Vec::with_capacity(n);
+        let mut res_sum = 0.0;
+        for s in socks.iter_mut() {
+            let f = read_frame(s)?;
+            anyhow::ensure!(f.kind == KIND_UPLINK && f.round == k as u32, "protocol skew");
+            metrics.uplink_bits += f.payload.len() as u64 * 8;
+            res_sum += f.residual;
+            uplinks.push(codec::decode(&f.payload)?);
+        }
+        let mut mrng = Xoshiro256::for_site(spec.seed, 0, k as u64);
+        let down = master.round(k, &uplinks, &mut mrng);
+        let bytes = codec::encode(&down);
+        metrics.downlink_bits += bytes.len() as u64 * 8 * n as u64;
+        for s in socks.iter_mut() {
+            write_frame(
+                s,
+                &Frame {
+                    kind: KIND_DOWNLINK,
+                    round: k as u32,
+                    worker: 0,
+                    residual: master.last_compressed_norm(),
+                    payload: bytes.clone(),
+                },
+            )?;
+        }
+        if k % spec.eval_every == 0 || k + 1 == spec.iters {
+            let x = master.model();
+            metrics.rounds.push(k);
+            metrics.loss.push(problem.loss(x));
+            if let Some(xs) = problem.optimum() {
+                metrics.dist_to_opt.push(linalg::dist2(x, xs));
+            }
+            if let Some(tl) = problem.test_loss(x) {
+                metrics.test_loss.push(tl);
+            }
+            if let Some(ta) = problem.test_accuracy(x) {
+                metrics.test_acc.push(ta);
+            }
+            metrics.worker_residual_norm.push(res_sum / n as f64);
+            metrics.master_residual_norm.push(master.last_compressed_norm());
+        }
+    }
+    metrics.total_rounds = spec.iters;
+    metrics.wall_seconds = sw.seconds();
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
+    }
+    Ok(metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::AlgorithmKind;
+    use crate::data::synth::linreg_problem;
+    use crate::harness::run_inproc;
+
+    #[test]
+    fn tcp_matches_inproc_bit_for_bit() {
+        let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
+        for algo in [AlgorithmKind::Dore, AlgorithmKind::Diana] {
+            let spec = TrainSpec { algo, iters: 20, eval_every: 5, ..Default::default() };
+            let a = run_inproc(p.as_ref(), &spec);
+            let b = run_distributed_tcp(p.clone(), spec).unwrap();
+            assert_eq!(a.loss, b.loss, "{}", algo.name());
+            assert_eq!(a.dist_to_opt, b.dist_to_opt);
+        }
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        // loopback socket pair via a throwaway listener
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (mut server, _) = listener.accept().unwrap();
+        let f = Frame {
+            kind: KIND_DOWNLINK,
+            round: 7,
+            worker: 3,
+            residual: 2.5,
+            payload: vec![1, 2, 3, 4, 5],
+        };
+        write_frame(&mut client, &f).unwrap();
+        let g = read_frame(&mut server).unwrap();
+        assert_eq!(g.kind, KIND_DOWNLINK);
+        assert_eq!(g.round, 7);
+        assert_eq!(g.worker, 3);
+        assert_eq!(g.residual, 2.5);
+        assert_eq!(g.payload, vec![1, 2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,97 @@
+//! Synthetic dataset generation and sharding.
+//!
+//! The paper's real datasets (MNIST, CIFAR10) are not available in this
+//! environment; per the substitution rule, [`synth`] generates datasets of
+//! the same *shape* (dimensions, class count, per-worker batch structure)
+//! so that the communication/compression path — the thing the experiments
+//! actually measure — is exercised identically. See DESIGN.md §2.
+
+pub mod synth;
+
+use crate::F;
+
+/// A labelled classification dataset (dense features, integer labels).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub features: Vec<F>,
+    pub labels: Vec<u32>,
+    pub n: usize,
+    pub input_dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn example(&self, i: usize) -> (&[F], u32) {
+        (
+            &self.features[i * self.input_dim..(i + 1) * self.input_dim],
+            self.labels[i],
+        )
+    }
+
+    /// Split off the last `n_test` examples as a test set.
+    pub fn split_test(mut self, n_test: usize) -> (Dataset, Dataset) {
+        assert!(n_test < self.n);
+        let n_train = self.n - n_test;
+        let test = Dataset {
+            features: self.features.split_off(n_train * self.input_dim),
+            labels: self.labels.split_off(n_train),
+            n: n_test,
+            input_dim: self.input_dim,
+            n_classes: self.n_classes,
+        };
+        self.n = n_train;
+        (self, test)
+    }
+}
+
+/// Contiguous even sharding of `n` items over `w` workers (remainder spread
+/// over the first shards, matching the paper's "allocated evenly").
+pub fn shard_ranges(n: usize, w: usize) -> Vec<(usize, usize)> {
+    let base = n / w;
+    let extra = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut lo = 0;
+    for i in 0..w {
+        let len = base + usize::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_cover_and_partition() {
+        for (n, w) in [(10, 3), (20, 4), (7, 7), (100, 9)] {
+            let s = shard_ranges(n, w);
+            assert_eq!(s.len(), w);
+            assert_eq!(s[0].0, 0);
+            assert_eq!(s[w - 1].1, n);
+            for i in 1..w {
+                assert_eq!(s[i].0, s[i - 1].1);
+            }
+            let sizes: Vec<usize> = s.iter().map(|(a, b)| b - a).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(mx - mn <= 1, "uneven shards {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn split_test_partitions() {
+        let ds = Dataset {
+            features: (0..20).map(|i| i as F).collect(),
+            labels: (0..10).collect(),
+            n: 10,
+            input_dim: 2,
+            n_classes: 10,
+        };
+        let (tr, te) = ds.split_test(3);
+        assert_eq!(tr.n, 7);
+        assert_eq!(te.n, 3);
+        assert_eq!(te.labels, vec![7, 8, 9]);
+        assert_eq!(te.example(0).0, &[14.0, 15.0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Synthetic workload generators matching the paper's experimental shapes.
+
+use super::Dataset;
+use crate::compression::Xoshiro256;
+use crate::models::linalg;
+use crate::models::linreg::LinReg;
+use crate::F;
+
+/// §5.1 linear-regression problem: random `A ∈ R^{rows×dim}`, random
+/// planted solution `x*`, `b ~ N(A x*, noise)`; rows sharded evenly over
+/// `n_workers`. The paper uses `rows = 1200, dim = 500, n_workers = 20`.
+pub fn linreg_problem(rows: usize, dim: usize, n_workers: usize, lambda: F, seed: u64) -> LinReg {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut a = vec![0.0; rows * dim];
+    for v in a.iter_mut() {
+        *v = rng.next_gaussian() / (dim as F).sqrt();
+    }
+    let x_star: Vec<F> = (0..dim).map(|_| rng.next_gaussian()).collect();
+    let mut b = vec![0.0; rows];
+    linalg::matvec(&a, rows, dim, &x_star, &mut b);
+    for v in b.iter_mut() {
+        *v += 0.05 * rng.next_gaussian(); // observation noise
+    }
+    LinReg::new(a, b, rows, dim, lambda, n_workers)
+}
+
+/// The paper's exact Fig. 3 shape: `A ∈ R^{1200×500}`, 20 workers.
+pub fn paper_linreg(seed: u64) -> LinReg {
+    linreg_problem(1200, 500, 20, 0.1, seed)
+}
+
+/// Gaussian-cluster classification dataset standing in for MNIST
+/// (`input_dim = 784`, 10 classes) or CIFAR10 (`input_dim = 3072`): each
+/// class `c` has a random unit-norm prototype `μ_c`; examples are
+/// `μ_c + spread · ε`. Linearly-nonseparable enough (spread ≥ 1) that an
+/// MLP trains nontrivially, while small enough to run hundreds of epochs
+/// in benches.
+pub fn cluster_classification(
+    n: usize,
+    input_dim: usize,
+    n_classes: usize,
+    spread: F,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let inv = 1.0 / (input_dim as F).sqrt();
+    let protos: Vec<F> = (0..n_classes * input_dim)
+        .map(|_| rng.next_gaussian() * inv * 4.0)
+        .collect();
+    let mut features = vec![0.0; n * input_dim];
+    let mut labels = vec![0u32; n];
+    for i in 0..n {
+        let c = rng.next_below(n_classes);
+        labels[i] = c as u32;
+        let proto = &protos[c * input_dim..(c + 1) * input_dim];
+        let row = &mut features[i * input_dim..(i + 1) * input_dim];
+        for (r, &p) in row.iter_mut().zip(proto.iter()) {
+            *r = p + spread * rng.next_gaussian() * inv;
+        }
+    }
+    Dataset {
+        features,
+        labels,
+        n,
+        input_dim,
+        n_classes,
+    }
+}
+
+/// MNIST-shaped synthetic set (784 → 10).
+pub fn mnist_like(n: usize, seed: u64) -> Dataset {
+    cluster_classification(n, 784, 10, 2.0, seed)
+}
+
+/// CIFAR10-shaped synthetic set (3072 → 10), harder (larger spread).
+pub fn cifar_like(n: usize, seed: u64) -> Dataset {
+    cluster_classification(n, 3072, 10, 3.0, seed)
+}
+
+/// Token stream for the transformer LM: a synthetic order-2 Markov corpus
+/// over `vocab` symbols so the LM has real structure to learn (loss drops
+/// well below `ln(vocab)`).
+pub fn markov_corpus(len: usize, vocab: usize, seed: u64) -> Vec<u32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    // sparse transition structure: each (prev) maps to 4 likely successors
+    let succ: Vec<u32> = (0..vocab * 4).map(|_| rng.next_below(vocab) as u32).collect();
+    let mut out = Vec::with_capacity(len);
+    let mut prev = 0usize;
+    for _ in 0..len {
+        let t = if rng.next_f32() < 0.85 {
+            succ[prev * 4 + rng.next_below(4)]
+        } else {
+            rng.next_below(vocab) as u32
+        };
+        out.push(t);
+        prev = t as usize;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Problem;
+
+    #[test]
+    fn linreg_shapes() {
+        let p = linreg_problem(60, 10, 3, 0.1, 1);
+        assert_eq!(p.dim(), 10);
+        assert_eq!(p.n_workers(), 3);
+        assert!(p.optimum().is_some());
+    }
+
+    #[test]
+    fn clusters_have_all_classes() {
+        let ds = cluster_classification(500, 16, 10, 1.0, 3);
+        let mut seen = [false; 10];
+        for &l in &ds.labels {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(ds.features.len(), 500 * 16);
+    }
+
+    #[test]
+    fn markov_corpus_in_vocab_and_structured() {
+        let v = 64;
+        let c = markov_corpus(10_000, v, 5);
+        assert!(c.iter().all(|&t| (t as usize) < v));
+        // structure check: empirical bigram entropy must be well below log v
+        let mut counts = vec![0u32; v * v];
+        for w in c.windows(2) {
+            counts[w[0] as usize * v + w[1] as usize] += 1;
+        }
+        let mut h = 0.0f64;
+        let total = (c.len() - 1) as f64;
+        // conditional entropy H(next | prev)
+        for p in 0..v {
+            let row = &counts[p * v..(p + 1) * v];
+            let rn: u32 = row.iter().sum();
+            if rn == 0 {
+                continue;
+            }
+            for &cnt in row {
+                if cnt > 0 {
+                    let pj = cnt as f64 / total;
+                    h -= pj * (cnt as f64 / rn as f64).ln();
+                }
+            }
+        }
+        assert!(h < 0.8 * (v as f64).ln(), "H(next|prev)={h}, ln v={}", (v as f64).ln());
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = mnist_like(50, 9);
+        let b = mnist_like(50, 9);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,240 @@
+//! Experiment harness: drives the algorithm state machines over a
+//! [`Problem`] with exact bit accounting, producing the series every paper
+//! figure plots. Shared by the benches, the examples and the CLI; the
+//! tokio coordinator ([`crate::coordinator`]) runs the *same* state
+//! machines over real channels.
+
+use crate::algorithms::{build, AlgorithmKind, HyperParams};
+use crate::comm::{LinkSpec, NetSim, TrafficStats};
+use crate::compression::Xoshiro256;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::models::{linalg, Problem};
+use crate::F;
+
+/// A training-run specification.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub algo: AlgorithmKind,
+    pub hp: HyperParams,
+    /// Number of synchronous rounds.
+    pub iters: usize,
+    /// Per-worker minibatch size; `None` = full local gradient (σ = 0).
+    pub minibatch: Option<usize>,
+    /// Evaluate metrics every this many rounds (loss evaluation can dwarf
+    /// the training work on small problems).
+    pub eval_every: usize,
+    /// Seed for all stochastic sites (sampling + quantization).
+    pub seed: u64,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        Self {
+            algo: AlgorithmKind::Dore,
+            hp: HyperParams::paper_defaults(),
+            iters: 500,
+            minibatch: None,
+            eval_every: 10,
+            seed: 42,
+        }
+    }
+}
+
+/// Run one algorithm on one problem, in-process (no transport), collecting
+/// the full metric series. Deterministic given `spec.seed`.
+pub fn run_inproc(problem: &dyn Problem, spec: &TrainSpec) -> RunMetrics {
+    let sw = Stopwatch::start();
+    let n = problem.n_workers();
+    let d = problem.dim();
+    let x0 = problem.init();
+    let (mut workers, mut master) =
+        build(spec.algo, n, &x0, &spec.hp).expect("algorithm construction");
+    let mut metrics = RunMetrics::new(spec.algo.name());
+    let mut grad = vec![0.0 as F; d];
+    let mut traffic = TrafficStats::default();
+
+    for k in 0..spec.iters {
+        // 1. workers: gradient at local model → uplink
+        let mut uplinks = Vec::with_capacity(n);
+        for (i, w) in workers.iter_mut().enumerate() {
+            let mut grad_rng = Xoshiro256::for_site(spec.seed ^ 0x5eed, 1 + i as u64, k as u64);
+            problem.local_grad(i, w.model(), spec.minibatch, &mut grad_rng, &mut grad);
+            let mut qrng = Xoshiro256::for_site(spec.seed, 1 + i as u64, k as u64);
+            let up = w.round(k, &grad, &mut qrng);
+            traffic.record_uplink(up.wire_bits());
+            uplinks.push(up);
+        }
+        // 2. master: aggregate → downlink broadcast
+        let mut mrng = Xoshiro256::for_site(spec.seed, 0, k as u64);
+        let down = master.round(k, &uplinks, &mut mrng);
+        // the broadcast is received by every worker
+        traffic.record_downlink(n as u64 * down.wire_bits());
+        // 3. workers apply
+        for w in workers.iter_mut() {
+            w.apply_downlink(k, &down);
+        }
+        // 4. metrics
+        if k % spec.eval_every == 0 || k + 1 == spec.iters {
+            let x = master.model();
+            metrics.rounds.push(k);
+            metrics.loss.push(problem.loss(x));
+            if let Some(xs) = problem.optimum() {
+                metrics.dist_to_opt.push(linalg::dist2(x, xs));
+            }
+            if let Some(tl) = problem.test_loss(x) {
+                metrics.test_loss.push(tl);
+            }
+            if let Some(ta) = problem.test_accuracy(x) {
+                metrics.test_acc.push(ta);
+            }
+            let wres = workers.iter().map(|w| w.last_compressed_norm()).sum::<f64>() / n as f64;
+            metrics.worker_residual_norm.push(wres);
+            metrics.master_residual_norm.push(master.last_compressed_norm());
+        }
+    }
+    metrics.uplink_bits = traffic.uplink_bits;
+    metrics.downlink_bits = traffic.downlink_bits;
+    metrics.total_rounds = spec.iters;
+    metrics.wall_seconds = sw.seconds();
+    metrics
+}
+
+/// Run every algorithm in `kinds` with the same spec template; returns
+/// `(kind, metrics)` pairs. Used by the comparison figures.
+pub fn compare(
+    problem: &dyn Problem,
+    kinds: &[AlgorithmKind],
+    template: &TrainSpec,
+) -> Vec<(AlgorithmKind, RunMetrics)> {
+    kinds
+        .iter()
+        .map(|&k| {
+            let spec = TrainSpec { algo: k, ..template.clone() };
+            (k, run_inproc(problem, &spec))
+        })
+        .collect()
+}
+
+/// Fig. 2 model: measured per-round uplink/downlink bits + measured compute
+/// time, pushed through the [`NetSim`] star model at a given bandwidth.
+/// Returns simulated seconds per iteration.
+pub fn simulated_iteration_time(
+    bits_up_per_worker: u64,
+    bits_down_broadcast: u64,
+    compute_s: f64,
+    bandwidth_bps: f64,
+    n_workers: usize,
+) -> f64 {
+    let mut net = NetSim::new(LinkSpec::with_bandwidth(bandwidth_bps), n_workers);
+    net.round(bits_up_per_worker, bits_down_broadcast, compute_s)
+}
+
+/// Measure one representative round of an algorithm on a synthetic gradient
+/// of dimension `d`: returns (uplink bits per worker, downlink broadcast
+/// bits, compute seconds per round). Used by Fig. 2 to characterize each
+/// scheme at ResNet18 scale without running a real model of that size.
+pub fn characterize_round(
+    algo: AlgorithmKind,
+    d: usize,
+    n_workers: usize,
+    hp: &HyperParams,
+) -> (u64, u64, f64) {
+    let x0 = vec![0.0 as F; d];
+    let (mut workers, mut master) = build(algo, n_workers, &x0, hp).expect("build");
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let grad: Vec<F> = (0..d).map(|_| rng.next_gaussian() * 0.01).collect();
+    // warm one round, then time the second (states populated)
+    let mut bits_up = 0u64;
+    let mut bits_down = 0u64;
+    let mut compute = 0.0f64;
+    for k in 0..2 {
+        let sw = Stopwatch::start();
+        let ups: Vec<_> = workers
+            .iter_mut()
+            .enumerate()
+            .map(|(i, w)| {
+                let mut q = Xoshiro256::for_site(1, 1 + i as u64, k);
+                w.round(k as usize, &grad, &mut q)
+            })
+            .collect();
+        let mut mrng = Xoshiro256::for_site(1, 0, k);
+        let down = master.round(k as usize, &ups, &mut mrng);
+        for w in workers.iter_mut() {
+            w.apply_downlink(k as usize, &down);
+        }
+        if k == 1 {
+            bits_up = ups[0].wire_bits();
+            bits_down = down.wire_bits();
+            compute = sw.seconds();
+        }
+    }
+    (bits_up, bits_down, compute)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::linreg_problem;
+
+    #[test]
+    fn run_is_deterministic() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 50, eval_every: 10, ..Default::default() };
+        let a = run_inproc(&p, &spec);
+        let b = run_inproc(&p, &spec);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+    }
+
+    #[test]
+    fn all_algorithms_reduce_linreg_loss() {
+        let p = linreg_problem(120, 20, 4, 0.1, 9);
+        for &k in AlgorithmKind::all() {
+            let spec = TrainSpec {
+                algo: k,
+                hp: HyperParams { lr: 0.1, ..HyperParams::paper_defaults() },
+                iters: 300,
+                eval_every: 50,
+                ..Default::default()
+            };
+            let m = run_inproc(&p, &spec);
+            let first = m.loss.first().copied().unwrap();
+            let last = m.loss.last().copied().unwrap();
+            assert!(
+                last < first * 0.5,
+                "{} did not reduce loss: {first} -> {last}",
+                k.name()
+            );
+        }
+    }
+
+    #[test]
+    fn dore_uses_far_fewer_bits_than_sgd() {
+        let p = linreg_problem(60, 40, 3, 0.1, 2);
+        let spec = TrainSpec { iters: 20, eval_every: 5, ..Default::default() };
+        let sgd = run_inproc(&p, &TrainSpec { algo: AlgorithmKind::Sgd, ..spec.clone() });
+        let dore = run_inproc(&p, &TrainSpec { algo: AlgorithmKind::Dore, ..spec });
+        // >90% saving even at this tiny dim (block 40 via spec default 256→one block)
+        assert!(
+            (dore.total_bits() as f64) < 0.2 * sgd.total_bits() as f64,
+            "dore {} vs sgd {}",
+            dore.total_bits(),
+            sgd.total_bits()
+        );
+    }
+
+    #[test]
+    fn characterize_round_bits_match_scheme() {
+        let hp = HyperParams::paper_defaults();
+        let d = 10_000;
+        let (up_sgd, down_sgd, _) = characterize_round(AlgorithmKind::Sgd, d, 2, &hp);
+        assert!(up_sgd >= 32 * d as u64);
+        assert!(down_sgd >= 32 * d as u64);
+        let (up_dore, down_dore, _) = characterize_round(AlgorithmKind::Dore, d, 2, &hp);
+        assert!(up_dore < up_sgd / 10);
+        assert!(down_dore < down_sgd / 10);
+        let (up_q, down_q, _) = characterize_round(AlgorithmKind::Qsgd, d, 2, &hp);
+        assert!(up_q < up_sgd / 10);
+        assert!(down_q >= 32 * d as u64, "QSGD downlink must stay dense");
+    }
+}

@@ -1,0 +1,59 @@
+//! # DORE — Double Residual Compression SGD
+//!
+//! A full-system reproduction of *"A Double Residual Compression Algorithm
+//! for Efficient Distributed Learning"* (Liu, Li, Tang, Yan, 2019).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — a tokio parameter-server runtime: one master,
+//!   `n` workers, a byte-accurate simulated network, seven distributed SGD
+//!   algorithms (P-SGD, QSGD, MEM-SGD, DIANA, DoubleSqueeze,
+//!   DoubleSqueeze-topk, DORE) expressed as transport-independent state
+//!   machines, wire codecs with bit-exact accounting, metrics and a CLI.
+//! * **L2 (python/compile, build time only)** — JAX loss/gradient graphs
+//!   (linear regression, MLP classifier, transformer LM) lowered once to
+//!   HLO text under `artifacts/`.
+//! * **L1 (python/compile/kernels)** — Pallas kernels (blockwise ternary
+//!   quantizer, fused tiled matmul) called from the L2 graphs and checked
+//!   against pure-jnp oracles.
+//!
+//! At train time the rust binary loads the AOT artifacts through the PJRT
+//! CPU client ([`runtime`]); python never runs on the request path.
+//!
+//! ## Quick example
+//!
+//! ```no_run
+//! use dore::algorithms::{AlgorithmKind, HyperParams};
+//! use dore::harness::{TrainSpec, run_inproc};
+//! use dore::models::linreg::LinReg;
+//! use dore::data::synth::linreg_problem;
+//!
+//! let problem = linreg_problem(1200, 500, 20, 0.1, 42);
+//! let spec = TrainSpec {
+//!     algo: AlgorithmKind::Dore,
+//!     hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
+//!     iters: 1000,
+//!     ..TrainSpec::default()
+//! };
+//! let out = run_inproc(&problem, &spec);
+//! println!("final loss gap {:.3e}", out.loss.last().unwrap());
+//! ```
+
+pub mod algorithms;
+pub mod comm;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+
+/// Crate-wide float type for model/gradient vectors. The paper's experiments
+/// are fp32 end-to-end; all wire-cost arithmetic assumes 32-bit floats.
+pub type F = f32;
+
+/// Bits needed to represent one uncompressed coordinate (fp32).
+pub const FLOAT_BITS: u64 = 32;

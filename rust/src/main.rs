@@ -1,0 +1,306 @@
+//! `dore` — launcher CLI for the DORE reproduction.
+//!
+//! ```text
+//! dore train --config job.json [--csv out.csv] [--distributed]
+//! dore train --problem linreg --algorithm dore --lr 0.05 --iters 1000 ...
+//! dore compare --problem linreg --iters 1000       # all 7 algorithms
+//! dore bandwidth --dim 11173962                    # Fig. 2 style sweep
+//! dore artifacts --dir artifacts                   # inspect AOT artifacts
+//! ```
+//!
+//! Flag parsing is hand-rolled (offline environment, no clap): every flag
+//! is `--name value` except boolean `--distributed`.
+
+use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::config::{parse_prox, parse_schedule, JobConfig, ProblemConfig};
+use dore::data::synth;
+use dore::harness::{characterize_round, compare, run_inproc, simulated_iteration_time, TrainSpec};
+use dore::models::mlp::{Mlp, MlpArch};
+use dore::models::Problem;
+use dore::runtime::lm::TransformerLm;
+use dore::runtime::XlaRuntime;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// `--key value` flags plus bare boolean flags.
+struct Flags {
+    vals: HashMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> anyhow::Result<Self> {
+        let mut vals = HashMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            anyhow::ensure!(a.starts_with("--"), "unexpected argument '{a}'");
+            let key = a.trim_start_matches("--").to_string();
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                vals.insert(key, args[i + 1].clone());
+                i += 2;
+            } else {
+                bools.push(key);
+                i += 1;
+            }
+        }
+        Ok(Self { vals, bools })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key} {s}: {e}")),
+        }
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+fn build_problem(name: &str, workers: usize, seed: u64) -> anyhow::Result<Arc<dyn Problem>> {
+    Ok(match name {
+        "linreg" => Arc::new(synth::linreg_problem(1200, 500, workers, 0.1, seed)),
+        "mnist" => {
+            let (tr, te) = synth::mnist_like(4096, seed).split_test(512);
+            Arc::new(Mlp::new(MlpArch::new(&[784, 256, 64, 10]), tr, Some(te), workers, seed))
+        }
+        "cifar" => {
+            let (tr, te) = synth::cifar_like(2048, seed).split_test(256);
+            Arc::new(Mlp::new(MlpArch::new(&[3072, 512, 256, 10]), tr, Some(te), workers, seed))
+        }
+        "transformer" => {
+            let corpus = synth::markov_corpus(200_000, 512, seed);
+            Arc::new(TransformerLm::load(
+                dore::runtime::default_artifact_dir(),
+                corpus,
+                workers,
+                seed,
+            )?)
+        }
+        other => anyhow::bail!("unknown problem '{other}' (linreg|mnist|cifar|transformer)"),
+    })
+}
+
+fn problem_from_config(cfg: &ProblemConfig, workers: usize) -> anyhow::Result<Arc<dyn Problem>> {
+    Ok(match cfg {
+        ProblemConfig::Linreg { rows, dim, lambda, data_seed } => {
+            Arc::new(synth::linreg_problem(*rows, *dim, workers, *lambda, *data_seed))
+        }
+        ProblemConfig::MnistMlp { n_examples, hidden, data_seed } => {
+            let (tr, te) = synth::mnist_like(*n_examples, *data_seed).split_test(n_examples / 8);
+            let mut sizes = vec![784];
+            sizes.extend(hidden);
+            sizes.push(10);
+            Arc::new(Mlp::new(MlpArch::new(&sizes), tr, Some(te), workers, *data_seed))
+        }
+        ProblemConfig::CifarMlp { n_examples, hidden, data_seed } => {
+            let (tr, te) = synth::cifar_like(*n_examples, *data_seed).split_test(n_examples / 8);
+            let mut sizes = vec![3072];
+            sizes.extend(hidden);
+            sizes.push(10);
+            Arc::new(Mlp::new(MlpArch::new(&sizes), tr, Some(te), workers, *data_seed))
+        }
+        ProblemConfig::TransformerLm { artifact_dir, corpus_len, data_seed } => {
+            let corpus = synth::markov_corpus(*corpus_len, 512, *data_seed);
+            Arc::new(TransformerLm::load(artifact_dir, corpus, workers, *data_seed)?)
+        }
+    })
+}
+
+fn print_run_summary(m: &dore::metrics::RunMetrics, workers: usize) {
+    println!(
+        "algo={} rounds={} wall={:.2}s final_loss={:.4e} bits/round/worker={:.0} total_MB={:.2}",
+        m.algo,
+        m.total_rounds,
+        m.wall_seconds,
+        m.loss.last().copied().unwrap_or(f64::NAN),
+        m.bits_per_round_per_worker(workers),
+        m.total_bits() as f64 / 8e6,
+    );
+    if let Some(rho) = m.empirical_rate(1e-9) {
+        println!("empirical per-round contraction rho = {rho:.5}");
+    }
+}
+
+const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
+  train      --config job.json | --problem P --algorithm A --lr F --iters N
+             [--alpha F --beta F --eta F --compressor SPEC --prox SPEC
+              --schedule SPEC --workers N --minibatch N --eval-every N
+              --seed N --distributed --csv FILE]
+  compare    --problem P --lr F --workers N --iters N [--minibatch N --seed N]
+  bandwidth  [--dim N --workers N --compute SECS]
+  artifacts  [--dir DIR]";
+
+fn cmd_train(f: &Flags) -> anyhow::Result<()> {
+    let (prob, spec): (Arc<dyn Problem>, TrainSpec) = if let Some(path) = f.get("config") {
+        let job = JobConfig::from_file(path)?;
+        let prob = problem_from_config(&job.problem, job.n_workers)?;
+        let spec = TrainSpec {
+            algo: job.algorithm_kind()?,
+            hp: job.hyper.to_hyperparams()?,
+            iters: job.iters,
+            minibatch: job.minibatch,
+            eval_every: job.eval_every,
+            seed: job.seed,
+        };
+        (prob, spec)
+    } else {
+        let lr: f32 = f.num("lr", 0.05)?;
+        let compressor = f.get("compressor").unwrap_or("ternary:256").to_string();
+        let hp = HyperParams {
+            lr,
+            alpha: f.num("alpha", 0.1)?,
+            beta: f.num("beta", 1.0)?,
+            eta: f.num("eta", 1.0)?,
+            momentum: f.num("momentum", 0.0)?,
+            worker_compressor: compressor.clone(),
+            master_compressor: compressor,
+            prox: parse_prox(f.get("prox").unwrap_or("none"))?,
+            schedule: match f.get("schedule") {
+                None => None,
+                Some(s) => Some(parse_schedule(s, lr)?),
+            },
+        };
+        let workers: usize = f.num("workers", 20)?;
+        let seed: u64 = f.num("seed", 42)?;
+        let prob = build_problem(f.get("problem").unwrap_or("linreg"), workers, seed)?;
+        let spec = TrainSpec {
+            algo: f.get("algorithm").unwrap_or("dore").parse()?,
+            hp,
+            iters: f.num("iters", 1000)?,
+            minibatch: f.get("minibatch").map(|s| s.parse()).transpose()?,
+            eval_every: f.num("eval-every", 10)?,
+            seed,
+        };
+        (prob, spec)
+    };
+    let n = prob.n_workers();
+    // --transport inproc (default) | threads | tcp — all three produce
+    // bit-identical iterates; they differ only in what carries the bytes.
+    let transport = f.get("transport").unwrap_or(if f.flag("distributed") {
+        "threads"
+    } else {
+        "inproc"
+    });
+    let metrics = match transport {
+        "inproc" => run_inproc(prob.as_ref(), &spec),
+        "threads" => dore::coordinator::run_distributed(prob, spec)?,
+        "tcp" => dore::coordinator::tcp::run_distributed_tcp(prob, spec)?,
+        other => anyhow::bail!("unknown transport '{other}' (inproc|threads|tcp)"),
+    };
+    print_run_summary(&metrics, n);
+    if let Some(path) = f.get("csv") {
+        metrics.write_csv(std::fs::File::create(path)?)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(f: &Flags) -> anyhow::Result<()> {
+    let workers: usize = f.num("workers", 20)?;
+    let iters: usize = f.num("iters", 1000)?;
+    let seed: u64 = f.num("seed", 42)?;
+    let prob = build_problem(f.get("problem").unwrap_or("linreg"), workers, seed)?;
+    let template = TrainSpec {
+        hp: HyperParams { lr: f.num("lr", 0.05)?, ..HyperParams::paper_defaults() },
+        iters,
+        minibatch: f.get("minibatch").map(|s| s.parse()).transpose()?,
+        eval_every: (iters / 20).max(1),
+        seed,
+        ..Default::default()
+    };
+    println!(
+        "{:<22}{:>14}{:>14}{:>18}{:>12}",
+        "algorithm", "final loss", "dist-to-opt", "bits/rnd/worker", "wall s"
+    );
+    for (kind, m) in compare(prob.as_ref(), AlgorithmKind::all(), &template) {
+        println!(
+            "{:<22}{:>14.4e}{:>14.4e}{:>18.0}{:>12.2}",
+            kind.name(),
+            m.loss.last().copied().unwrap_or(f64::NAN),
+            m.dist_to_opt.last().copied().unwrap_or(f64::NAN),
+            m.bits_per_round_per_worker(workers),
+            m.wall_seconds,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bandwidth(f: &Flags) -> anyhow::Result<()> {
+    let dim: usize = f.num("dim", 11_173_962)?;
+    let workers: usize = f.num("workers", 10)?;
+    let compute: f64 = f.num("compute", 0.18)?;
+    let hp = HyperParams::paper_defaults();
+    println!("Fig. 2 sweep: d={dim}, n={workers}, compute={compute}s/round");
+    println!("{:<12}{:>14}{:>14}{:>14}", "bandwidth", "SGD s/it", "QSGD s/it", "DORE s/it");
+    let schemes = [AlgorithmKind::Sgd, AlgorithmKind::Qsgd, AlgorithmKind::Dore];
+    let chars: Vec<_> =
+        schemes.iter().map(|&a| characterize_round(a, dim, workers, &hp)).collect();
+    for bw in [1e9, 500e6, 200e6, 100e6, 50e6, 20e6, 10e6] {
+        let mut row = format!("{:<12}", format!("{}Mbps", (bw / 1e6) as u64));
+        for (up, down, _) in &chars {
+            let t = simulated_iteration_time(*up, *down, compute, bw, workers);
+            row += &format!("{t:>14.3}");
+        }
+        println!("{row}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(f: &Flags) -> anyhow::Result<()> {
+    let rt = XlaRuntime::load(f.get("dir").unwrap_or("artifacts"))?;
+    println!("platform: {}", rt.platform());
+    let mut names = rt.artifact_names();
+    names.sort();
+    for n in names {
+        let e = &rt.manifest.artifacts[n];
+        let fmt_specs = |specs: &[dore::runtime::TensorSpec]| {
+            specs
+                .iter()
+                .map(|s| format!("{}{:?}", s.dtype, s.shape))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        println!("  {n}: {} -> {} ({})", fmt_specs(&e.inputs), fmt_specs(&e.outputs), e.file);
+    }
+    if let Some(lm) = &rt.manifest.lm {
+        println!(
+            "lm: {} params, vocab {}, d_model {}, {} layers",
+            lm.param_count, lm.vocab, lm.d_model, lm.n_layers
+        );
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{USAGE}");
+        std::process::exit(2);
+    };
+    let flags = Flags::parse(&args[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "compare" => cmd_compare(&flags),
+        "bandwidth" => cmd_bandwidth(&flags),
+        "artifacts" => cmd_artifacts(&flags),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Run metrics: loss curves, distance-to-optimum, residual norms, exact
+//! communication bits, and wall-clock timings — everything the paper's
+//! figures plot. Emits CSV for external plotting and ASCII charts
+//! ([`plot`]) for the bench logs.
+
+pub mod plot;
+
+use std::io::Write;
+
+/// Time series collected over a training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub algo: String,
+    /// Evaluation round indices (may be strided).
+    pub rounds: Vec<usize>,
+    /// Global objective (optimality gap for problems exposing `optimum`).
+    pub loss: Vec<f64>,
+    /// `‖x̂ − x*‖` when the optimum is known.
+    pub dist_to_opt: Vec<f64>,
+    /// Held-out loss (nonconvex experiments).
+    pub test_loss: Vec<f64>,
+    /// Held-out accuracy.
+    pub test_acc: Vec<f64>,
+    /// ‖worker-side compressed variable‖ (averaged over workers) per eval.
+    pub worker_residual_norm: Vec<f64>,
+    /// ‖master-side compressed variable‖ per eval.
+    pub master_residual_norm: Vec<f64>,
+    /// Cumulative uplink bits (sum over workers) after each eval round.
+    pub uplink_bits: u64,
+    /// Cumulative downlink bits (broadcast counted once per worker).
+    pub downlink_bits: u64,
+    /// Rounds actually executed.
+    pub total_rounds: usize,
+    /// Wall-clock seconds of the whole run.
+    pub wall_seconds: f64,
+}
+
+impl RunMetrics {
+    pub fn new(algo: &str) -> Self {
+        Self { algo: algo.to_string(), ..Default::default() }
+    }
+
+    /// Total bits over both directions.
+    pub fn total_bits(&self) -> u64 {
+        self.uplink_bits + self.downlink_bits
+    }
+
+    /// Average bits per round per worker (both directions).
+    pub fn bits_per_round_per_worker(&self, n_workers: usize) -> f64 {
+        if self.total_rounds == 0 {
+            return 0.0;
+        }
+        self.total_bits() as f64 / self.total_rounds as f64 / n_workers as f64
+    }
+
+    /// Estimate the empirical linear convergence factor ρ̂ from the tail of
+    /// the `dist_to_opt` curve: least-squares slope of `log d_k` over the
+    /// window where the curve is above `floor` (σ-neighbourhood / fp noise).
+    pub fn empirical_rate(&self, floor: f64) -> Option<f64> {
+        let pts: Vec<(f64, f64)> = self
+            .rounds
+            .iter()
+            .zip(self.dist_to_opt.iter())
+            .filter(|(_, &d)| d > floor && d.is_finite())
+            .map(|(&k, &d)| (k as f64, d.ln()))
+            .collect();
+        if pts.len() < 3 {
+            return None;
+        }
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let denom = n * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return None;
+        }
+        let slope = (n * sxy - sx * sy) / denom;
+        Some(slope.exp()) // per-round contraction factor ρ̂
+    }
+
+    /// Write the series as CSV (one row per eval round).
+    pub fn write_csv<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        writeln!(
+            w,
+            "round,loss,dist_to_opt,test_loss,test_acc,worker_residual,master_residual"
+        )?;
+        for i in 0..self.rounds.len() {
+            let get = |v: &Vec<f64>| v.get(i).copied().unwrap_or(f64::NAN);
+            writeln!(
+                w,
+                "{},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
+                self.rounds[i],
+                get(&self.loss),
+                get(&self.dist_to_opt),
+                get(&self.test_loss),
+                get(&self.test_acc),
+                get(&self.worker_residual_norm),
+                get(&self.master_residual_norm),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Simple monotonic stopwatch.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+    pub fn seconds(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_rate_recovers_geometric_decay() {
+        let mut m = RunMetrics::new("test");
+        let rho: f64 = 0.9;
+        for k in 0..100 {
+            m.rounds.push(k);
+            m.dist_to_opt.push(rho.powi(k as i32));
+        }
+        let est = m.empirical_rate(1e-12).unwrap();
+        assert!((est - rho).abs() < 1e-6, "est {est}");
+    }
+
+    #[test]
+    fn empirical_rate_ignores_floor() {
+        let mut m = RunMetrics::new("test");
+        for k in 0..50 {
+            m.rounds.push(k);
+            // decays to 1e-3 then flat noise
+            m.dist_to_opt.push((0.8f64.powi(k as i32)).max(1e-3));
+        }
+        let est = m.empirical_rate(2e-3).unwrap();
+        assert!((est - 0.8).abs() < 0.02, "est {est}");
+    }
+
+    #[test]
+    fn csv_emits_header_and_rows() {
+        let mut m = RunMetrics::new("x");
+        m.rounds = vec![0, 1];
+        m.loss = vec![1.0, 0.5];
+        m.dist_to_opt = vec![2.0, 1.0];
+        let mut buf = Vec::new();
+        m.write_csv(&mut buf).unwrap();
+        let s = String::from_utf8(buf).unwrap();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.starts_with("round,loss"));
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let mut m = RunMetrics::new("x");
+        m.uplink_bits = 1000;
+        m.downlink_bits = 500;
+        m.total_rounds = 10;
+        assert_eq!(m.total_bits(), 1500);
+        assert!((m.bits_per_round_per_worker(5) - 30.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,111 @@
+//! Terminal plotting: render metric series as ASCII charts so the bench
+//! targets can show the *shape* of each paper figure directly in the
+//! terminal/log, next to the CSV rows external tools consume.
+
+/// Render one or more (label, series) pairs as an ASCII line chart.
+/// `log_y` plots log10 of the values (the natural scale for the paper's
+/// convergence figures). NaN/non-positive values are skipped in log mode.
+pub fn ascii_chart(series: &[(&str, &[f64])], width: usize, height: usize, log_y: bool) -> String {
+    assert!(width >= 8 && height >= 2);
+    let marks = ['*', '+', 'o', 'x', '#', '@', '%', '&'];
+    let tf = |v: f64| if log_y { v.log10() } else { v };
+    // global y-range over finite transformed points
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    let mut max_len = 0usize;
+    for (_, s) in series {
+        max_len = max_len.max(s.len());
+        for &v in *s {
+            let t = tf(v);
+            if t.is_finite() {
+                lo = lo.min(t);
+                hi = hi.max(t);
+            }
+        }
+    }
+    if !lo.is_finite() || !hi.is_finite() {
+        return "(no finite data)\n".to_string();
+    }
+    if hi - lo < 1e-12 {
+        hi = lo + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, s)) in series.iter().enumerate() {
+        let mark = marks[si % marks.len()];
+        for (i, &v) in s.iter().enumerate() {
+            let t = tf(v);
+            if !t.is_finite() {
+                continue;
+            }
+            let xpos = if max_len <= 1 { 0 } else { i * (width - 1) / (max_len - 1) };
+            let ynorm = (t - lo) / (hi - lo);
+            let ypos = height - 1 - ((ynorm * (height - 1) as f64).round() as usize).min(height - 1);
+            grid[ypos][xpos] = mark;
+        }
+    }
+    let mut out = String::new();
+    let label = |v: f64| {
+        if log_y {
+            format!("1e{v:.1}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+    for (r, row) in grid.iter().enumerate() {
+        let y = hi - (hi - lo) * r as f64 / (height - 1) as f64;
+        let tag = if r == 0 || r == height - 1 { label(y) } else { String::new() };
+        out.push_str(&format!("{tag:>9} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>9} +{}\n", "", "-".repeat(width)));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {}", marks[i % marks.len()], name))
+        .collect();
+    out.push_str(&format!("{:>11}{}\n", "", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_monotone_series() {
+        let s: Vec<f64> = (0..50).map(|i| (0.9f64).powi(i)).collect();
+        let chart = ascii_chart(&[("decay", &s)], 40, 10, true);
+        assert!(chart.contains('*'));
+        assert!(chart.lines().count() == 12);
+        // decaying series: first column mark should be above last column mark
+        let lines: Vec<&str> = chart.lines().collect();
+        let first_row = lines.iter().position(|l| l.contains('*')).unwrap();
+        let last_row = lines.iter().rposition(|l| l.contains('*')).unwrap();
+        assert!(first_row < last_row);
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_marks() {
+        let a = vec![1.0, 2.0, 3.0];
+        let b = vec![3.0, 2.0, 1.0];
+        let chart = ascii_chart(&[("up", &a), ("down", &b)], 20, 6, false);
+        assert!(chart.contains('*') && chart.contains('+'));
+        assert!(chart.contains("up") && chart.contains("down"));
+    }
+
+    #[test]
+    fn handles_empty_and_nan() {
+        let s = vec![f64::NAN, f64::NAN];
+        assert!(ascii_chart(&[("nan", &s)], 20, 5, false).contains("no finite data"));
+        let z: Vec<f64> = vec![];
+        assert!(ascii_chart(&[("empty", &z)], 20, 5, true).contains("no finite data"));
+    }
+
+    #[test]
+    fn constant_series_does_not_divide_by_zero() {
+        let s = vec![5.0; 10];
+        let chart = ascii_chart(&[("flat", &s)], 20, 5, false);
+        assert!(chart.contains('*'));
+    }
+}

@@ -1,0 +1,282 @@
+//! Minimal dense linear algebra used by the model substrates: BLAS-1
+//! helpers, a cache-blocked GEMM for the MLP, and a Cholesky solver for the
+//! linreg closed-form optimum. No external dependencies — this *is* the
+//! substrate.
+
+use crate::F;
+
+/// `y += a * x`
+#[inline]
+pub fn axpy(a: F, x: &[F], y: &mut [F]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+/// `x · y`
+#[inline]
+pub fn dot(x: &[F], y: &[F]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y.iter()).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// `‖x‖₂²`
+#[inline]
+pub fn norm2sq(x: &[F]) -> f64 {
+    dot(x, x)
+}
+
+/// `‖x‖₂`
+#[inline]
+pub fn norm2(x: &[F]) -> f64 {
+    norm2sq(x).sqrt()
+}
+
+/// `‖x − y‖₂`
+pub fn dist2(x: &[F], y: &[F]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y.iter())
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// Scale in place: `x *= a`.
+#[inline]
+pub fn scal(a: F, x: &mut [F]) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Row-major mat-vec: `out = A x`, `A` is `rows × cols`.
+pub fn matvec(a: &[F], rows: usize, cols: usize, x: &[F], out: &mut [F]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(x.len(), cols);
+    debug_assert_eq!(out.len(), rows);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = dot(&a[r * cols..(r + 1) * cols], x) as F;
+    }
+}
+
+/// Row-major transposed mat-vec: `out = Aᵀ y`.
+pub fn matvec_t(a: &[F], rows: usize, cols: usize, y: &[F], out: &mut [F]) {
+    debug_assert_eq!(a.len(), rows * cols);
+    debug_assert_eq!(y.len(), rows);
+    debug_assert_eq!(out.len(), cols);
+    out.fill(0.0);
+    for (r, &yr) in y.iter().enumerate() {
+        axpy(yr, &a[r * cols..(r + 1) * cols], out);
+    }
+}
+
+/// Row-major GEMM `C = A·B (+ C if accumulate)`, `A: m×k`, `B: k×n`,
+/// `C: m×n`. ikj loop order with the inner j-loop vectorizable; good enough
+/// for the MLP substrate (hundreds of MFLOPs per bench step).
+pub fn gemm(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[F],
+    b: &[F],
+    c: &mut [F],
+    accumulate: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if !accumulate {
+        c.fill(0.0);
+    }
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let aip = a[i * k + p];
+            if aip == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ·B`, `A: k×m`, `B: k×n`, `C: m×n` (used for weight gradients).
+pub fn gemm_at_b(m: usize, k: usize, n: usize, a: &[F], b: &[F], c: &mut [F]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for p in 0..k {
+        let arow = &a[p * m..(p + 1) * m];
+        let brow = &b[p * n..(p + 1) * n];
+        for i in 0..m {
+            let aip = arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cj, &bj) in crow.iter_mut().zip(brow.iter()) {
+                *cj += aip * bj;
+            }
+        }
+    }
+}
+
+/// `C = A·Bᵀ`, `A: m×k`, `B: n×k`, `C: m×n` (used for backprop through W).
+pub fn gemm_a_bt(m: usize, k: usize, n: usize, a: &[F], b: &[F], c: &mut [F]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            c[i * n + j] = dot(arow, &b[j * k..(j + 1) * k]) as F;
+        }
+    }
+}
+
+/// Solve the SPD system `M z = rhs` by Cholesky (`M = L Lᵀ`), in-place on a
+/// copy. `M` is `d × d` row-major. Panics if `M` is not positive definite.
+pub fn cholesky_solve(m: &[F], d: usize, rhs: &[F]) -> Vec<F> {
+    debug_assert_eq!(m.len(), d * d);
+    debug_assert_eq!(rhs.len(), d);
+    // factor in f64 for stability on ill-conditioned AᵀA
+    let mut l = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut s = m[i * d + j] as f64;
+            for p in 0..j {
+                s -= l[i * d + p] * l[j * d + p];
+            }
+            if i == j {
+                assert!(s > 0.0, "matrix not positive definite at pivot {i} (s={s})");
+                l[i * d + i] = s.sqrt();
+            } else {
+                l[i * d + j] = s / l[j * d + j];
+            }
+        }
+    }
+    // forward substitution L y = rhs
+    let mut y = vec![0.0f64; d];
+    for i in 0..d {
+        let mut s = rhs[i] as f64;
+        for p in 0..i {
+            s -= l[i * d + p] * y[p];
+        }
+        y[i] = s / l[i * d + i];
+    }
+    // back substitution Lᵀ z = y
+    let mut z = vec![0.0f64; d];
+    for i in (0..d).rev() {
+        let mut s = y[i];
+        for p in i + 1..d {
+            s -= l[p * d + i] * z[p];
+        }
+        z[i] = s / l[i * d + i];
+    }
+    z.into_iter().map(|v| v as F).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blas1_basics() {
+        let mut y = vec![1.0, 2.0];
+        axpy(2.0, &[3.0, -1.0], &mut y);
+        assert_eq!(y, vec![7.0, 0.0]);
+        assert_eq!(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dist2(&[1.0, 1.0], &[4.0, 5.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        // A = [[1,2,3],[4,5,6]]
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let mut out = vec![0.0; 2];
+        matvec(&a, 2, 3, &[1.0, 0.0, -1.0], &mut out);
+        assert_eq!(out, vec![-2.0, -2.0]);
+        let mut out_t = vec![0.0; 3];
+        matvec_t(&a, 2, 3, &[1.0, 1.0], &mut out_t);
+        assert_eq!(out_t, vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn gemm_variants_agree() {
+        let m = 3;
+        let k = 4;
+        let n = 2;
+        let a: Vec<F> = (0..m * k).map(|i| i as F * 0.5 - 2.0).collect();
+        let b: Vec<F> = (0..k * n).map(|i| 1.0 - i as F * 0.25).collect();
+        let mut c = vec![0.0; m * n];
+        gemm(m, k, n, &a, &b, &mut c, false);
+        // reference
+        for i in 0..m {
+            for j in 0..n {
+                let want: F = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                assert!((c[i * n + j] - want).abs() < 1e-5);
+            }
+        }
+        // A^T B against gemm on transposed data
+        let mut at = vec![0.0; k * m];
+        for i in 0..m {
+            for p in 0..k {
+                at[p * m + i] = a[i * k + p];
+            }
+        }
+        let mut c2 = vec![0.0; m * n];
+        gemm_at_b(m, k, n, &at, &b, &mut c2);
+        for (x, y) in c.iter().zip(&c2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        // A B^T
+        let mut bt = vec![0.0; n * k];
+        for p in 0..k {
+            for j in 0..n {
+                bt[j * k + p] = b[p * n + j];
+            }
+        }
+        let mut c3 = vec![0.0; m * n];
+        gemm_a_bt(m, k, n, &a, &bt, &mut c3);
+        for (x, y) in c.iter().zip(&c3) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cholesky_solves_spd_system() {
+        // M = B^T B + I is SPD
+        let d = 5;
+        let mut rng = crate::compression::Xoshiro256::seed_from_u64(42);
+        let b: Vec<F> = (0..d * d).map(|_| rng.next_gaussian()).collect();
+        let mut m = vec![0.0; d * d];
+        gemm_at_b(d, d, d, &b, &b, &mut m);
+        for i in 0..d {
+            m[i * d + i] += 1.0;
+        }
+        let z_true: Vec<F> = (0..d).map(|i| i as F - 2.0).collect();
+        let mut rhs = vec![0.0; d];
+        matvec(&m, d, d, &z_true, &mut rhs);
+        let z = cholesky_solve(&m, d, &rhs);
+        for (a, b) in z.iter().zip(&z_true) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not positive definite")]
+    fn cholesky_rejects_indefinite() {
+        let m = vec![1.0, 0.0, 0.0, -1.0];
+        cholesky_solve(&m, 2, &[1.0, 1.0]);
+    }
+}

@@ -1,0 +1,257 @@
+//! The paper's strongly convex benchmark (§5.1): ridge-regularized linear
+//! regression `f(x) = (1/N)‖Ax − b‖² + λ‖x‖²`, rows of `A` allocated evenly
+//! to `n` workers, so `f_i(x) = (1/N_i)‖A_i x − b_i‖² + λ‖x‖²` and
+//! `f = (1/n) Σ f_i` for even shards. The exact minimizer
+//! `x* = (AᵀA/N + λI)⁻¹ Aᵀb/N` is computed by Cholesky at construction,
+//! enabling the `‖x̂ − x*‖` curves of Fig. 3/6 and the empirical linear-rate
+//! estimates of Table 1.
+
+use super::linalg;
+use super::Problem;
+use crate::compression::Xoshiro256;
+use crate::F;
+
+pub struct LinReg {
+    /// `N × d` design matrix, row-major.
+    pub a: Vec<F>,
+    /// Targets, length `N`.
+    pub b: Vec<F>,
+    pub rows: usize,
+    pub dim: usize,
+    /// Ridge coefficient λ (part of `f`, not of the proximal `R`).
+    pub lambda: F,
+    pub n_workers: usize,
+    /// Closed-form minimizer.
+    x_star: Vec<F>,
+    /// `f(x*)` — subtracted to report the optimality gap `f(x) − f*`.
+    f_star: f64,
+}
+
+impl LinReg {
+    pub fn new(a: Vec<F>, b: Vec<F>, rows: usize, dim: usize, lambda: F, n_workers: usize) -> Self {
+        assert_eq!(a.len(), rows * dim);
+        assert_eq!(b.len(), rows);
+        assert!(n_workers > 0 && rows % n_workers == 0, "rows must shard evenly");
+        // Normal equations: (AᵀA/N + λI) x* = Aᵀ b / N.
+        let mut m = vec![0.0; dim * dim];
+        linalg::gemm_at_b(dim, rows, dim, &a, &a, &mut m);
+        let inv_n = 1.0 / rows as F;
+        for v in m.iter_mut() {
+            *v *= inv_n;
+        }
+        for i in 0..dim {
+            m[i * dim + i] += lambda;
+        }
+        let mut rhs = vec![0.0; dim];
+        linalg::matvec_t(&a, rows, dim, &b, &mut rhs);
+        linalg::scal(inv_n, &mut rhs);
+        let x_star = linalg::cholesky_solve(&m, dim, &rhs);
+        let mut s = Self {
+            a,
+            b,
+            rows,
+            dim,
+            lambda,
+            n_workers,
+            x_star,
+            f_star: 0.0,
+        };
+        s.f_star = s.raw_loss(&s.x_star);
+        s
+    }
+
+    /// Rows `[lo, hi)` of worker `i`'s shard.
+    fn shard(&self, i: usize) -> (usize, usize) {
+        let per = self.rows / self.n_workers;
+        (i * per, (i + 1) * per)
+    }
+
+    fn raw_loss(&self, x: &[F]) -> f64 {
+        let mut r = vec![0.0; self.rows];
+        linalg::matvec(&self.a, self.rows, self.dim, x, &mut r);
+        let mut s = 0.0f64;
+        for (ri, &bi) in r.iter().zip(self.b.iter()) {
+            let d = (*ri - bi) as f64;
+            s += d * d;
+        }
+        s / self.rows as f64 + self.lambda as f64 * linalg::norm2sq(x)
+    }
+
+    /// Smoothness / strong-convexity constants of the *global* objective:
+    /// `L = 2 λ_max(AᵀA/N) + 2λ`, `μ = 2 λ_min(AᵀA/N) + 2λ` (power/inverse
+    /// iteration estimates). Used to pick the paper's theoretical step size.
+    pub fn smoothness(&self) -> (f64, f64) {
+        let d = self.dim;
+        let mut m = vec![0.0; d * d];
+        linalg::gemm_at_b(d, self.rows, d, &self.a, &self.a, &mut m);
+        let inv_n = 1.0 / self.rows as F;
+        for v in m.iter_mut() {
+            *v *= inv_n;
+        }
+        // power iteration for λ_max
+        let mut v = vec![1.0 as F; d];
+        let mut lmax = 0.0f64;
+        for _ in 0..200 {
+            let mut w = vec![0.0; d];
+            linalg::matvec(&m, d, d, &v, &mut w);
+            lmax = linalg::norm2(&w);
+            let inv = 1.0 / lmax.max(1e-30) as F;
+            for (vi, &wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi * inv;
+            }
+        }
+        // λ_min via power iteration on (λ_max I − M)
+        let mut v2 = vec![1.0 as F; d];
+        v2[0] = -1.0;
+        let mut shift_max = 0.0f64;
+        for _ in 0..400 {
+            let mut w = vec![0.0; d];
+            linalg::matvec(&m, d, d, &v2, &mut w);
+            for i in 0..d {
+                w[i] = lmax as F * v2[i] - w[i];
+            }
+            shift_max = linalg::norm2(&w);
+            let inv = 1.0 / shift_max.max(1e-30) as F;
+            for (vi, &wi) in v2.iter_mut().zip(w.iter()) {
+                *vi = wi * inv;
+            }
+        }
+        let lmin = (lmax - shift_max).max(0.0);
+        (
+            2.0 * lmax + 2.0 * self.lambda as f64,
+            2.0 * lmin + 2.0 * self.lambda as f64,
+        )
+    }
+}
+
+impl Problem for LinReg {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn local_grad(
+        &self,
+        i: usize,
+        x: &[F],
+        minibatch: Option<usize>,
+        rng: &mut Xoshiro256,
+        out: &mut [F],
+    ) {
+        let (lo, hi) = self.shard(i);
+        let d = self.dim;
+        out.fill(0.0);
+        let rows: Vec<usize> = match minibatch {
+            None => (lo..hi).collect(),
+            Some(m) => (0..m).map(|_| lo + rng.next_below(hi - lo)).collect(),
+        };
+        // ∇f_i = (2/m) Σ_r (a_rᵀx − b_r) a_r + 2λx
+        let scale = 2.0 / rows.len() as F;
+        for &r in &rows {
+            let row = &self.a[r * d..(r + 1) * d];
+            let resid = (linalg::dot(row, x) as F - self.b[r]) * scale;
+            linalg::axpy(resid, row, out);
+        }
+        linalg::axpy(2.0 * self.lambda, x, out);
+    }
+
+    /// Optimality gap `f(x) − f(x*)` (the quantity Fig. 3 plots).
+    fn loss(&self, x: &[F]) -> f64 {
+        (self.raw_loss(x) - self.f_star).max(0.0)
+    }
+
+    fn optimum(&self) -> Option<&[F]> {
+        Some(&self.x_star)
+    }
+
+    fn name(&self) -> &str {
+        "linreg"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::linreg_problem;
+
+    #[test]
+    fn gradient_vanishes_at_optimum() {
+        let p = linreg_problem(120, 20, 4, 0.1, 7);
+        let xs = p.optimum().unwrap().to_vec();
+        // average of full local gradients should be ~0 at x*
+        let mut g = vec![0.0; p.dim()];
+        let mut acc = vec![0.0; p.dim()];
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        for i in 0..p.n_workers() {
+            p.local_grad(i, &xs, None, &mut rng, &mut g);
+            linalg::axpy(1.0 / p.n_workers() as F, &g, &mut acc);
+        }
+        assert!(linalg::norm2(&acc) < 1e-3, "‖∇f(x*)‖ = {}", linalg::norm2(&acc));
+    }
+
+    #[test]
+    fn full_grad_equals_average_of_shards() {
+        // one worker holding everything == average of 4 workers' gradients
+        let p4 = linreg_problem(120, 20, 4, 0.1, 7);
+        let p1 = LinReg::new(p4.a.clone(), p4.b.clone(), 120, 20, 0.1, 1);
+        let x: Vec<F> = (0..20).map(|i| (i as F * 0.37).sin()).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let mut g1 = vec![0.0; 20];
+        p1.local_grad(0, &x, None, &mut rng, &mut g1);
+        let mut avg = vec![0.0; 20];
+        let mut g = vec![0.0; 20];
+        for i in 0..4 {
+            p4.local_grad(i, &x, None, &mut rng, &mut g);
+            linalg::axpy(0.25, &g, &mut avg);
+        }
+        for (a, b) in g1.iter().zip(&avg) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn loss_gap_zero_at_optimum_positive_elsewhere() {
+        let p = linreg_problem(60, 10, 3, 0.05, 1);
+        let xs = p.optimum().unwrap().to_vec();
+        assert!(p.loss(&xs) < 1e-9);
+        let x0 = vec![0.0; 10];
+        assert!(p.loss(&x0) > 1e-3);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = linreg_problem(40, 8, 2, 0.2, 3);
+        let x: Vec<F> = (0..8).map(|i| 0.1 * i as F - 0.3).collect();
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        // global grad = avg of local grads; check against FD of raw_loss
+        let mut g = vec![0.0; 8];
+        let mut acc = vec![0.0f64; 8];
+        for i in 0..2 {
+            p.local_grad(i, &x, None, &mut rng, &mut g);
+            for (a, &gi) in acc.iter_mut().zip(g.iter()) {
+                *a += gi as f64 / 2.0;
+            }
+        }
+        let eps = 1e-3;
+        for j in 0..8 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (p.raw_loss(&xp) - p.raw_loss(&xm)) / (2.0 * eps as f64);
+            assert!((fd - acc[j]).abs() < 2e-2, "coord {j}: fd {fd} vs {})", acc[j]);
+        }
+    }
+
+    #[test]
+    fn smoothness_constants_sane() {
+        let p = linreg_problem(200, 30, 4, 0.1, 11);
+        let (l, mu) = p.smoothness();
+        assert!(l >= mu && mu > 0.0, "L={l} mu={mu}");
+        // ridge alone contributes 2λ to both
+        assert!(mu >= 2.0 * 0.1 - 1e-6);
+    }
+}

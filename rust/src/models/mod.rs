@@ -1,0 +1,68 @@
+//! Problem substrates: the objective functions the distributed algorithms
+//! optimize.
+//!
+//! * [`linreg`] — the paper's §5.1 strongly convex benchmark
+//!   `f(x) = (1/N)||Ax − b||² + λ||x||²` with a closed-form optimum
+//!   (dense Cholesky in [`linalg`]), row-sharded over workers.
+//! * [`mlp`] — a pure-rust multi-layer perceptron classifier with backprop,
+//!   the nonconvex workload standing in for LeNet/ResNet18 (see DESIGN.md
+//!   §Hardware-Adaptation).
+//! * [`Problem`] — the trait the coordinator and bench harness consume; the
+//!   PJRT-backed problems in [`crate::runtime`] implement it too, so the
+//!   same algorithms drive rust-native oracles and AOT XLA executables.
+
+pub mod linalg;
+pub mod linreg;
+pub mod mlp;
+
+use crate::compression::Xoshiro256;
+use crate::F;
+
+/// A distributed optimization problem: `f(x) = (1/n) Σ_i f_i(x) (+ R(x))`,
+/// where worker `i` can evaluate stochastic gradients of its local `f_i`.
+pub trait Problem: Send + Sync {
+    /// Model dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Number of workers the data is sharded over.
+    fn n_workers(&self) -> usize;
+
+    /// Write worker `i`'s stochastic gradient of `f_i` at `x` into `out`.
+    /// `minibatch = None` requests the full local gradient (σ = 0, as in
+    /// the paper's Fig. 3 experiment); `Some(m)` samples `m` examples from
+    /// the worker's shard using `rng`.
+    fn local_grad(
+        &self,
+        i: usize,
+        x: &[F],
+        minibatch: Option<usize>,
+        rng: &mut Xoshiro256,
+        out: &mut [F],
+    );
+
+    /// Global training objective `f(x)` (excluding any proximal `R`).
+    fn loss(&self, x: &[F]) -> f64;
+
+    /// Held-out loss, if the problem has a test split.
+    fn test_loss(&self, _x: &[F]) -> Option<f64> {
+        None
+    }
+
+    /// Classification accuracy on the test split, if applicable.
+    fn test_accuracy(&self, _x: &[F]) -> Option<f64> {
+        None
+    }
+
+    /// The exact minimizer, when computable (linreg): enables `‖x − x*‖`
+    /// curves (Fig. 3) and empirical linear-rate estimation (Table 1).
+    fn optimum(&self) -> Option<&[F]> {
+        None
+    }
+
+    /// Initial iterate `x̂⁰` (identical across nodes — §3.2 Initialization).
+    fn init(&self) -> Vec<F> {
+        vec![0.0; self.dim()]
+    }
+
+    fn name(&self) -> &str;
+}

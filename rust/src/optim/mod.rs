@@ -1,0 +1,9 @@
+//! Optimizer substrate: proximal operators for the regularizer `R` in
+//! Algorithm 1, and learning-rate schedules used by the nonconvex
+//! experiments (step decay ×0.1 every 25/100 epochs, §5.2).
+
+pub mod prox;
+pub mod schedule;
+
+pub use prox::Prox;
+pub use schedule::LrSchedule;

@@ -1,0 +1,59 @@
+//! Learning-rate schedules. §5.2 uses step decay: initial lr 0.1 (LeNet) /
+//! 0.01 (ResNet18) decayed ×0.1 every 25 / 100 epochs.
+
+use crate::F;
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant(F),
+    /// `base · factor^{⌊round / every⌋}`
+    StepDecay { base: F, factor: F, every: usize },
+    /// Linear warmup to `base` over `warmup` rounds, constant after.
+    Warmup { base: F, warmup: usize },
+}
+
+impl LrSchedule {
+    pub fn at(&self, round: usize) -> F {
+        match *self {
+            LrSchedule::Constant(lr) => lr,
+            LrSchedule::StepDecay { base, factor, every } => {
+                base * factor.powi((round / every.max(1)) as i32)
+            }
+            LrSchedule::Warmup { base, warmup } => {
+                if round < warmup {
+                    base * (round + 1) as F / warmup as F
+                } else {
+                    base
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant() {
+        assert_eq!(LrSchedule::Constant(0.1).at(1000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_matches_paper_settings() {
+        // lr 0.1, ×0.1 every 25 epochs
+        let s = LrSchedule::StepDecay { base: 0.1, factor: 0.1, every: 25 };
+        assert!((s.at(0) - 0.1).abs() < 1e-9);
+        assert!((s.at(24) - 0.1).abs() < 1e-9);
+        assert!((s.at(25) - 0.01).abs() < 1e-9);
+        assert!((s.at(50) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::Warmup { base: 1.0, warmup: 4 };
+        assert!((s.at(0) - 0.25).abs() < 1e-7);
+        assert!((s.at(3) - 1.0).abs() < 1e-7);
+        assert!((s.at(10) - 1.0).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,180 @@
+//! Transformer-LM [`Problem`] backed by the AOT XLA artifacts — the
+//! end-to-end compute path: rust coordinator (L3) → `lm_grad.hlo.txt`
+//! (L2 JAX graph) → Pallas matmul kernels lowered inline (L1).
+//!
+//! The artifact's exported function takes the **flat** parameter vector
+//! `f32[d]` plus a token batch `i32[B, T+1]` and returns
+//! `(mean CE loss, flat gradient)`, so the distributed algorithms treat the
+//! transformer exactly like any other `R^d` objective.
+
+use super::{Arg, Out, XlaRuntime};
+use crate::compression::Xoshiro256;
+use crate::data::shard_ranges;
+use crate::models::Problem;
+use crate::F;
+use std::path::Path;
+use std::sync::Mutex;
+
+pub struct TransformerLm {
+    /// PJRT state, serialized behind a mutex.
+    ///
+    /// SAFETY rationale for the `unsafe impl` below: the `xla` crate's
+    /// wrappers hold raw pointers and are not auto-Send/Sync, but the PJRT
+    /// CPU client is thread-safe for compilation and execution (it is the
+    /// same client JAX uses from multi-threaded python). We still serialize
+    /// all access through this mutex, so cross-thread use is exclusive.
+    rt: Mutex<XlaRuntime>,
+    corpus: Vec<u32>,
+    shards: Vec<(usize, usize)>,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    n_workers: usize,
+    init: Vec<F>,
+    /// Fixed evaluation batch (token windows) for `loss()`.
+    eval_tokens: Vec<i32>,
+}
+
+unsafe impl Send for TransformerLm {}
+unsafe impl Sync for TransformerLm {}
+
+impl TransformerLm {
+    /// `artifact_dir` must contain `lm_grad` + `lm_loss` entries and the
+    /// init-weights file (see `python/compile/aot.py`).
+    pub fn load(
+        artifact_dir: impl AsRef<Path>,
+        corpus: Vec<u32>,
+        n_workers: usize,
+        seed: u64,
+    ) -> anyhow::Result<Self> {
+        let rt = XlaRuntime::load(artifact_dir)?;
+        let meta = rt
+            .manifest
+            .lm
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("manifest has no `lm` section; re-run make artifacts"))?;
+        let init = rt.read_f32_file(&meta.init_file)?;
+        anyhow::ensure!(
+            init.len() == meta.param_count,
+            "init file has {} params, manifest says {}",
+            init.len(),
+            meta.param_count
+        );
+        let window = meta.seq_len + 1;
+        anyhow::ensure!(
+            corpus.len() >= n_workers * meta.batch * window,
+            "corpus too small for {n_workers} workers"
+        );
+        let vocab = meta.vocab as u32;
+        anyhow::ensure!(corpus.iter().all(|&t| t < vocab), "token out of vocab");
+        let shards = shard_ranges(corpus.len(), n_workers);
+        // fixed eval batch drawn from the whole corpus
+        let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xe7a1);
+        let eval_tokens = sample_windows(&corpus, 0, corpus.len(), meta.batch, window, &mut rng);
+        Ok(Self {
+            rt: Mutex::new(rt),
+            corpus,
+            shards,
+            param_count: meta.param_count,
+            batch: meta.batch,
+            seq_len: meta.seq_len,
+            n_workers,
+            init,
+            eval_tokens,
+        })
+    }
+}
+
+/// Sample `batch` contiguous windows of `window` tokens from
+/// `corpus[lo..hi]`, flattened row-major as i32.
+fn sample_windows(
+    corpus: &[u32],
+    lo: usize,
+    hi: usize,
+    batch: usize,
+    window: usize,
+    rng: &mut Xoshiro256,
+) -> Vec<i32> {
+    let span = hi - lo;
+    assert!(span >= window, "shard smaller than one window");
+    let mut out = Vec::with_capacity(batch * window);
+    for _ in 0..batch {
+        let start = lo + rng.next_below(span - window + 1);
+        out.extend(corpus[start..start + window].iter().map(|&t| t as i32));
+    }
+    out
+}
+
+impl Problem for TransformerLm {
+    fn dim(&self) -> usize {
+        self.param_count
+    }
+
+    fn n_workers(&self) -> usize {
+        self.n_workers
+    }
+
+    fn local_grad(
+        &self,
+        i: usize,
+        x: &[F],
+        _minibatch: Option<usize>,
+        rng: &mut Xoshiro256,
+        out: &mut [F],
+    ) {
+        let (lo, hi) = self.shards[i];
+        let tokens = sample_windows(&self.corpus, lo, hi, self.batch, self.seq_len + 1, rng);
+        let rt = self.rt.lock().unwrap();
+        let res = rt
+            .execute("lm_grad", &[Arg::F32(x), Arg::I32(&tokens)])
+            .expect("lm_grad execution");
+        match &res[1] {
+            Out::F32(g) => out.copy_from_slice(g),
+            _ => panic!("lm_grad output 1 must be f32 grad"),
+        }
+    }
+
+    fn loss(&self, x: &[F]) -> f64 {
+        let rt = self.rt.lock().unwrap();
+        let res = rt
+            .execute("lm_loss", &[Arg::F32(x), Arg::I32(&self.eval_tokens)])
+            .expect("lm_loss execution");
+        res[0].scalar_f32() as f64
+    }
+
+    fn init(&self) -> Vec<F> {
+        self.init.clone()
+    }
+
+    fn name(&self) -> &str {
+        "transformer-lm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_windows_bounds_and_shape() {
+        let corpus: Vec<u32> = (0..100).collect();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let w = sample_windows(&corpus, 20, 80, 5, 8, &mut rng);
+        assert_eq!(w.len(), 40);
+        for row in w.chunks(8) {
+            assert!(row[0] >= 20 && row[7] < 80);
+            // windows are contiguous
+            for j in 1..8 {
+                assert_eq!(row[j], row[j - 1] + 1);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "shard smaller")]
+    fn sample_windows_rejects_tiny_shard() {
+        let corpus: Vec<u32> = (0..10).collect();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        sample_windows(&corpus, 0, 4, 1, 8, &mut rng);
+    }
+}

@@ -1,0 +1,347 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO **text** — see DESIGN.md §2 for why not serialized protos) and
+//! executes them on the XLA CPU client from the L3 hot path. Python never
+//! runs at train time.
+//!
+//! * [`Manifest`] — `artifacts/manifest.json`, describing each HLO entry
+//!   point (input/output dtypes+shapes) plus model metadata (parameter
+//!   counts, init-weight files).
+//! * [`XlaRuntime`] — PJRT client + compiled-executable cache.
+//! * [`lm::TransformerLm`] — a [`crate::models::Problem`] backed by the
+//!   transformer-LM gradient artifact: the end-to-end path
+//!   (rust coordinator → XLA executable → Pallas-kernel HLO).
+
+pub mod lm;
+
+use crate::config::json::Json;
+use crate::F;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One tensor argument/result of an artifact.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            dtype: v.req_str("dtype")?.to_string(),
+            shape: v
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("tensor spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+}
+
+/// One compiled entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        let specs = |key: &str| -> anyhow::Result<Vec<TensorSpec>> {
+            v.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing '{key}'"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: v.req_str("file")?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Transformer-LM metadata recorded by `aot.py`.
+#[derive(Clone, Debug)]
+pub struct LmMeta {
+    pub param_count: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub init_file: String,
+}
+
+impl LmMeta {
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            param_count: v.req_usize("param_count")?,
+            vocab: v.req_usize("vocab")?,
+            d_model: v.req_usize("d_model")?,
+            n_layers: v.req_usize("n_layers")?,
+            n_heads: v.req_usize("n_heads")?,
+            seq_len: v.req_usize("seq_len")?,
+            batch: v.req_usize("batch")?,
+            init_file: v.req_str("init_file")?.to_string(),
+        })
+    }
+}
+
+/// MLP metadata recorded by `aot.py` (used by the L2↔L3 gradient
+/// cross-check test).
+#[derive(Clone, Debug)]
+pub struct MlpMeta {
+    pub param_count: usize,
+    pub sizes: Vec<usize>,
+    pub batch: usize,
+    pub init_file: String,
+}
+
+impl MlpMeta {
+    fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(Self {
+            param_count: v.req_usize("param_count")?,
+            sizes: v
+                .get("sizes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("mlp meta missing sizes"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad size")))
+                .collect::<anyhow::Result<_>>()?,
+            batch: v.req_usize("batch")?,
+            init_file: v.req_str("init_file")?.to_string(),
+        })
+    }
+}
+
+/// `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactEntry>,
+    pub lm: Option<LmMeta>,
+    pub mlp: Option<MlpMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}; run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let v = Json::parse(text)?;
+        let mut artifacts = HashMap::new();
+        for (name, entry) in v
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?
+        {
+            artifacts.insert(name.clone(), ArtifactEntry::from_json(entry)?);
+        }
+        Ok(Self {
+            artifacts,
+            lm: v.get("lm").map(LmMeta::from_json).transpose()?,
+            mlp: v.get("mlp").map(MlpMeta::from_json).transpose()?,
+        })
+    }
+}
+
+/// An input value for [`XlaRuntime::execute`].
+pub enum Arg<'a> {
+    F32(&'a [F]),
+    I32(&'a [i32]),
+}
+
+/// An output value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Out {
+    F32(Vec<F>),
+    I32(Vec<i32>),
+}
+
+impl Out {
+    pub fn as_f32(&self) -> &[F] {
+        match self {
+            Out::F32(v) => v,
+            Out::I32(_) => panic!("expected f32 output"),
+        }
+    }
+
+    /// Scalar convenience (losses).
+    pub fn scalar_f32(&self) -> F {
+        let v = self.as_f32();
+        assert_eq!(v.len(), 1, "expected scalar");
+        v[0]
+    }
+}
+
+/// PJRT CPU client plus compiled executables for every manifest entry.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Load the manifest and compile every artifact eagerly (AOT-of-AOT:
+    /// the HLO was lowered at build time; PJRT compilation happens once at
+    /// startup, never per step).
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        let mut executables = HashMap::new();
+        for (name, entry) in &manifest.artifacts {
+            let path = dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling artifact '{name}': {e}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Self { client, manifest, dir, executables })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Read a raw little-endian f32 weight file referenced by the manifest.
+    pub fn read_f32_file(&self, rel: &str) -> anyhow::Result<Vec<F>> {
+        let bytes = std::fs::read(self.dir.join(rel))?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "f32 file length not divisible by 4");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| F::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Execute artifact `name` with `args` (checked against the manifest
+    /// specs), returning all tuple outputs.
+    pub fn execute(&self, name: &str, args: &[Arg]) -> anyhow::Result<Vec<Out>> {
+        let entry = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        let exe = &self.executables[name];
+        anyhow::ensure!(
+            args.len() == entry.inputs.len(),
+            "artifact '{name}' wants {} inputs, got {}",
+            entry.inputs.len(),
+            args.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (arg, spec) in args.iter().zip(entry.inputs.iter()) {
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (arg, spec.dtype.as_str()) {
+                (Arg::F32(v), "f32") => {
+                    anyhow::ensure!(
+                        v.len() == spec.elements(),
+                        "f32 arg size mismatch for '{name}'"
+                    );
+                    let l = xla::Literal::vec1(v);
+                    if dims.len() == 1 { l } else { l.reshape(&dims).map_err(wrap)? }
+                }
+                (Arg::I32(v), "i32") => {
+                    anyhow::ensure!(
+                        v.len() == spec.elements(),
+                        "i32 arg size mismatch for '{name}'"
+                    );
+                    let l = xla::Literal::vec1(v);
+                    if dims.len() == 1 { l } else { l.reshape(&dims).map_err(wrap)? }
+                }
+                _ => anyhow::bail!("arg dtype mismatch for '{name}' (spec {})", spec.dtype),
+            };
+            literals.push(lit);
+        }
+        let result = exe.execute::<xla::Literal>(&literals).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        // aot.py lowers with return_tuple=True → always a tuple literal.
+        let parts = result.to_tuple().map_err(wrap)?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "artifact '{name}' returned {} outputs, manifest says {}",
+            parts.len(),
+            entry.outputs.len()
+        );
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, spec) in parts.into_iter().zip(entry.outputs.iter()) {
+            outs.push(match spec.dtype.as_str() {
+                "f32" => Out::F32(lit.to_vec::<F>().map_err(wrap)?),
+                "i32" => Out::I32(lit.to_vec::<i32>().map_err(wrap)?),
+                other => anyhow::bail!("unsupported output dtype '{other}'"),
+            });
+        }
+        Ok(outs)
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// Default artifact directory: `$DORE_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("DORE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(
+            r#"{
+            "artifacts": {
+                "lm_grad": {
+                    "file": "lm_grad.hlo.txt",
+                    "inputs": [{"dtype": "f32", "shape": [100]},
+                               {"dtype": "i32", "shape": [4, 65]}],
+                    "outputs": [{"dtype": "f32", "shape": []},
+                                {"dtype": "f32", "shape": [100]}]
+                }
+            },
+            "lm": {"param_count": 100, "vocab": 512, "d_model": 16,
+                   "n_layers": 2, "n_heads": 2, "seq_len": 64, "batch": 4,
+                   "init_file": "lm_init.bin"}
+        }"#,
+        )
+        .unwrap();
+        let e = &m.artifacts["lm_grad"];
+        assert_eq!(e.inputs[1].elements(), 4 * 65);
+        assert_eq!(e.outputs[0].elements(), 1); // scalar: empty shape
+        assert_eq!(m.lm.as_ref().unwrap().vocab, 512);
+        assert!(m.mlp.is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {"x": {"file": "f"}}}"#).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Cross-layer integration: rust (L3) against the AOT XLA artifacts
+//! (L2 JAX graphs + L1 Pallas kernels).
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it).
+//! If the artifact directory is missing the tests fail with a clear
+//! message rather than silently passing.
+
+use dore::compression::{Compressor, PNormQuantizer, Xoshiro256};
+use dore::data::synth;
+use dore::models::mlp::{Mlp, MlpArch};
+use dore::models::{linreg::LinReg, Problem};
+use dore::runtime::{lm::TransformerLm, Arg, XlaRuntime};
+
+fn artifact_dir() -> std::path::PathBuf {
+    // tests run from the crate root
+    let dir = dore::runtime::default_artifact_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing at {dir:?} — run `make artifacts` first"
+    );
+    dir
+}
+
+/// L1 ↔ L3 cross-validation: the Pallas ternary quantizer and the rust
+/// quantizer implement the same math over the same uniform stream, so their
+/// dequantized outputs must agree bit-for-bit.
+#[test]
+fn pallas_quantizer_matches_rust_quantizer_bitwise() {
+    let rt = XlaRuntime::load(artifact_dir()).unwrap();
+    let d = 4096;
+    let block = 256;
+    for seed in [1u64, 7, 42] {
+        let mut data_rng = Xoshiro256::seed_from_u64(seed);
+        let x: Vec<f32> = (0..d).map(|_| data_rng.next_gaussian()).collect();
+        // Shared entropy: the rust quantizer draws next_f32() per element =
+        // (next_u32() >> 8) * 2^-24; feed the same u32 stream to the kernel.
+        let mut q_rng = Xoshiro256::for_site(seed, 1, 0);
+        let r24: Vec<i32> = (0..d).map(|_| (q_rng.next_u32() >> 8) as i32).collect();
+        let outs = rt.execute("quantize_b256", &[Arg::F32(&x), Arg::I32(&r24)]).unwrap();
+        let kernel_out = outs[0].as_f32();
+
+        let q = PNormQuantizer::paper_default();
+        let mut q_rng2 = Xoshiro256::for_site(seed, 1, 0);
+        let rust_out = q.compress(&x, &mut q_rng2).decompress();
+
+        assert_eq!(block, q.block_size);
+        let mismatches = kernel_out
+            .iter()
+            .zip(&rust_out)
+            .filter(|(a, b)| a.to_bits() != b.to_bits())
+            .count();
+        assert_eq!(mismatches, 0, "seed {seed}: {mismatches}/{d} coordinates differ");
+    }
+}
+
+/// L2 ↔ L3 cross-validation: the JAX linreg shard gradient equals the rust
+/// closed-form oracle on identical data.
+#[test]
+fn xla_linreg_grad_matches_rust_oracle() {
+    let rt = XlaRuntime::load(artifact_dir()).unwrap();
+    // artifact shapes: x f32[500], a f32[60,500], b f32[60]
+    let (rows, dim) = (60, 500);
+    let p = synth::linreg_problem(rows, dim, 1, 0.1, 33);
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let x: Vec<f32> = (0..dim).map(|_| 0.3 * rng.next_gaussian()).collect();
+    let outs = rt
+        .execute("linreg_grad", &[Arg::F32(&x), Arg::F32(&p.a), Arg::F32(&p.b)])
+        .unwrap();
+    let xla_grad = outs[1].as_f32();
+
+    let mut rust_grad = vec![0.0f32; dim];
+    p.local_grad(0, &x, None, &mut rng, &mut rust_grad);
+    for (j, (a, b)) in xla_grad.iter().zip(&rust_grad).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "grad coord {j}: xla {a} vs rust {b}"
+        );
+    }
+    // loss value too: rust raw shard loss vs artifact loss
+    let xla_loss = outs[0].scalar_f32() as f64;
+    let single = LinReg::new(p.a.clone(), p.b.clone(), rows, dim, 0.1, 1);
+    // Problem::loss reports the gap; reconstruct raw = gap + f*
+    let raw = single.loss(&x) + {
+        let xs = single.optimum().unwrap().to_vec();
+        // f* = raw_loss(x*): gap(x*) = 0 so compute via loss identity
+        // loss(x) = raw(x) - f*, hence raw(x) = loss(x) + raw(x*) and
+        // raw(x*) = raw(0) - loss(0) evaluated through the same API:
+        let zero = vec![0.0f32; dim];
+        let raw0_minus_fstar = single.loss(&zero);
+        // raw(0) = mean(b^2)
+        let raw0: f64 =
+            p.b.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / rows as f64;
+        let _ = xs;
+        raw0 - raw0_minus_fstar
+    };
+    assert!(
+        (xla_loss - raw).abs() < 1e-3 * (1.0 + raw.abs()),
+        "loss: xla {xla_loss} vs rust {raw}"
+    );
+}
+
+/// L2 ↔ L3 cross-validation: the JAX MLP gradient (Pallas matmuls inside)
+/// equals the pure-rust backprop at the same parameters on the same batch.
+#[test]
+fn xla_mlp_grad_matches_rust_backprop() {
+    let rt = XlaRuntime::load(artifact_dir()).unwrap();
+    let meta = rt.manifest.mlp.clone().expect("mlp meta");
+    let params = rt.read_f32_file(&meta.init_file).unwrap();
+    assert_eq!(params.len(), meta.param_count);
+
+    // one batch of synthetic data, worker 0 holding exactly `batch` examples
+    let ds = synth::cluster_classification(meta.batch, meta.sizes[0], 10, 2.0, 77);
+    let feats = ds.features.clone();
+    let labels: Vec<i32> = ds.labels.iter().map(|&l| l as i32).collect();
+    let outs = rt
+        .execute("mlp_grad", &[Arg::F32(&params), Arg::F32(&feats), Arg::I32(&labels)])
+        .unwrap();
+    let xla_loss = outs[0].scalar_f32() as f64;
+    let xla_grad = outs[1].as_f32();
+
+    let mlp = Mlp::new(MlpArch::new(&meta.sizes), ds, None, 1, 0);
+    let mut rust_grad = vec![0.0f32; meta.param_count];
+    let mut rng = Xoshiro256::seed_from_u64(0);
+    mlp.local_grad(0, &params, None, &mut rng, &mut rust_grad);
+    let rust_loss = mlp.loss(&params);
+
+    assert!(
+        (xla_loss - rust_loss).abs() < 1e-4 * (1.0 + rust_loss.abs()),
+        "loss: xla {xla_loss} vs rust {rust_loss}"
+    );
+    let mut worst = 0.0f32;
+    for (a, b) in xla_grad.iter().zip(&rust_grad) {
+        worst = worst.max((a - b).abs());
+    }
+    assert!(worst < 1e-3, "max |Δgrad| = {worst}");
+}
+
+/// End-to-end smoke: DORE trains the AOT transformer through the full
+/// coordinator for a few rounds and the training loss drops.
+#[test]
+fn dore_trains_transformer_artifact() {
+    use dore::algorithms::{AlgorithmKind, HyperParams};
+    use dore::harness::{run_inproc, TrainSpec};
+    let corpus = synth::markov_corpus(60_000, 512, 3);
+    let lm = TransformerLm::load(artifact_dir(), corpus, 2, 3).unwrap();
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
+        iters: 12,
+        minibatch: None,
+        eval_every: 11,
+        seed: 9,
+    };
+    let m = run_inproc(&lm, &spec);
+    let first = m.loss.first().copied().unwrap();
+    let last = m.loss.last().copied().unwrap();
+    assert!(last < first, "LM loss did not drop: {first} -> {last}");
+    // compression is active: far fewer cumulative bits than uncompressed
+    // P-SGD (2 directions × 32 bits × d × workers × rounds)
+    let dense_total = m.total_rounds as u64 * 2 * 32 * lm.param_count as u64 * 2 /* workers */;
+    assert!(
+        m.total_bits() < dense_total / 5,
+        "{} vs dense {}",
+        m.total_bits(),
+        dense_total
+    );
+}

@@ -1,0 +1,94 @@
+//! Parameter-server + config + CLI-path integration tests.
+
+use dore::algorithms::AlgorithmKind;
+use dore::config::JobConfig;
+use dore::coordinator::run_distributed;
+use dore::data::synth::{linreg_problem, mnist_like};
+use dore::harness::{run_inproc, TrainSpec};
+use dore::models::mlp::{Mlp, MlpArch};
+use std::sync::Arc;
+
+#[test]
+fn threaded_server_equals_inproc_for_every_algorithm() {
+    let p = Arc::new(linreg_problem(120, 24, 4, 0.1, 17));
+    for &algo in AlgorithmKind::all() {
+        let spec = TrainSpec { algo, iters: 25, eval_every: 6, ..Default::default() };
+        let a = run_inproc(p.as_ref(), &spec);
+        let b = run_distributed(p.clone(), spec).unwrap();
+        assert_eq!(a.loss, b.loss, "{}", algo.name());
+        assert_eq!(a.dist_to_opt, b.dist_to_opt, "{}", algo.name());
+        assert_eq!(a.worker_residual_norm, b.worker_residual_norm, "{}", algo.name());
+    }
+}
+
+#[test]
+fn threaded_server_with_minibatch_mlp() {
+    let (tr, te) = mnist_like(256, 5).split_test(64);
+    let p = Arc::new(Mlp::new(MlpArch::new(&[784, 32, 10]), tr, Some(te), 4, 5));
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters: 30,
+        minibatch: Some(16),
+        eval_every: 10,
+        ..Default::default()
+    };
+    let a = run_inproc(p.as_ref(), &spec);
+    let b = run_distributed(p.clone(), spec).unwrap();
+    assert_eq!(a.loss, b.loss);
+    assert!(b.loss.last().unwrap() < &b.loss[0]);
+}
+
+#[test]
+fn job_config_end_to_end() {
+    let json = r#"{
+        "problem": {"kind": "linreg", "rows": 120, "dim": 20, "lambda": 0.1, "data_seed": 3},
+        "algorithm": "dore",
+        "hyper": {"lr": 0.1, "alpha": 0.1, "beta": 1.0, "eta": 1.0},
+        "n_workers": 4,
+        "iters": 200,
+        "eval_every": 40,
+        "seed": 9
+    }"#;
+    let job = JobConfig::from_json(json).unwrap();
+    let p = match &job.problem {
+        dore::config::ProblemConfig::Linreg { rows, dim, lambda, data_seed } => {
+            linreg_problem(*rows, *dim, job.n_workers, *lambda, *data_seed)
+        }
+        other => panic!("{other:?}"),
+    };
+    let spec = TrainSpec {
+        algo: job.algorithm_kind().unwrap(),
+        hp: job.hyper.to_hyperparams().unwrap(),
+        iters: job.iters,
+        minibatch: job.minibatch,
+        eval_every: job.eval_every,
+        seed: job.seed,
+    };
+    let m = run_inproc(&p, &spec);
+    assert!(m.loss.last().unwrap() < &(m.loss[0] * 1e-2));
+}
+
+#[test]
+fn csv_export_has_all_series() {
+    let p = linreg_problem(60, 10, 3, 0.1, 2);
+    let spec = TrainSpec { iters: 30, eval_every: 10, ..Default::default() };
+    let m = run_inproc(&p, &spec);
+    let mut buf = Vec::new();
+    m.write_csv(&mut buf).unwrap();
+    let s = String::from_utf8(buf).unwrap();
+    let lines: Vec<&str> = s.lines().collect();
+    assert!(lines[0].contains("worker_residual"));
+    assert_eq!(lines.len(), 1 + m.rounds.len());
+}
+
+#[test]
+fn compare_helper_covers_all_algorithms() {
+    let p = linreg_problem(60, 10, 3, 0.1, 2);
+    let template = TrainSpec { iters: 40, eval_every: 10, ..Default::default() };
+    let results = dore::harness::compare(&p, AlgorithmKind::all(), &template);
+    assert_eq!(results.len(), 7);
+    for (kind, m) in results {
+        assert!(m.loss.last().unwrap().is_finite(), "{}", kind.name());
+        assert!(m.total_bits() > 0);
+    }
+}

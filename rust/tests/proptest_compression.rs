@@ -1,0 +1,257 @@
+//! Property-based tests over the compression stack. The environment has no
+//! proptest crate, so this is a hand-rolled property driver: each property
+//! is checked over a few hundred randomized cases drawn from the crate's
+//! own deterministic RNG, and failures print the offending case seed.
+
+use dore::compression::{
+    codec, from_spec, Compressed, Compressor, PNorm, PNormQuantizer, QsgdQuantizer,
+    StochasticSparsifier, TopK, Xoshiro256,
+};
+
+/// Draw a random test vector with occasional adversarial structure:
+/// zero blocks, single spikes, constant blocks, denormal-ish scales.
+fn arb_vector(rng: &mut Xoshiro256) -> Vec<f32> {
+    let d = 1 + rng.next_below(600);
+    let style = rng.next_below(5);
+    (0..d)
+        .map(|j| match style {
+            0 => rng.next_gaussian(),
+            1 => {
+                // mostly zeros with spikes
+                if rng.next_f32() < 0.05 {
+                    10.0 * rng.next_gaussian()
+                } else {
+                    0.0
+                }
+            }
+            2 => (j as f32 * 0.37).sin() * 1e-6, // tiny magnitudes
+            3 => {
+                if j < d / 2 {
+                    0.0
+                } else {
+                    rng.next_gaussian() * 1e4
+                }
+            } // zero prefix block
+            _ => rng.next_gaussian() as f32 * (j % 7) as f32,
+        })
+        .collect()
+}
+
+fn arb_compressor(rng: &mut Xoshiro256) -> Box<dyn Compressor> {
+    match rng.next_below(5) {
+        0 => Box::new(PNormQuantizer::new(PNorm::Inf, 1 + rng.next_below(300))),
+        1 => Box::new(PNormQuantizer::new(PNorm::L2, 1 + rng.next_below(300))),
+        2 => Box::new(QsgdQuantizer::new(1 + rng.next_below(7) as u8, 1 + rng.next_below(128))),
+        3 => Box::new(StochasticSparsifier::new(0.05 + 0.95 * rng.next_f64())),
+        _ => Box::new(TopK::new(rng.next_below(64))),
+    }
+}
+
+/// Property: decode(encode(Q(x))) == Q(x) for every compressor and payload.
+#[test]
+fn prop_codec_roundtrip_exact() {
+    let mut rng = Xoshiro256::seed_from_u64(0xC0DEC);
+    for case in 0..400 {
+        let x = arb_vector(&mut rng);
+        let q = arb_compressor(&mut rng);
+        let c = q.compress(&x, &mut rng);
+        let bytes = codec::encode(&c);
+        let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("case {case}: decode {e}"));
+        assert_eq!(back, c, "case {case} ({}, d={})", q.name(), x.len());
+    }
+}
+
+/// Property: wire_bits() is within one padding byte per section of the real
+/// encoded length, and never underestimates by more than padding.
+#[test]
+fn prop_wire_bits_matches_encoding() {
+    let mut rng = Xoshiro256::seed_from_u64(0xB17);
+    for case in 0..400 {
+        let x = arb_vector(&mut rng);
+        let q = arb_compressor(&mut rng);
+        let c = q.compress(&x, &mut rng);
+        let actual = codec::encode(&c).len() as u64 * 8;
+        let predicted = c.wire_bits();
+        assert!(
+            actual >= predicted && actual - predicted < 16,
+            "case {case} ({}): predicted {predicted} actual {actual}",
+            q.name()
+        );
+    }
+}
+
+/// Property: decompress() equals add_scaled_into(1.0) on zeros, and
+/// add_scaled_into is linear in its scale argument.
+#[test]
+fn prop_decode_linearity() {
+    let mut rng = Xoshiro256::seed_from_u64(0x11EA);
+    for _ in 0..300 {
+        let x = arb_vector(&mut rng);
+        let q = arb_compressor(&mut rng);
+        let c = q.compress(&x, &mut rng);
+        let d1 = c.decompress();
+        let mut d2 = vec![0.0; c.dim()];
+        c.add_scaled_into(2.0, &mut d2);
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!((2.0 * a - b).abs() <= 1e-5 * b.abs().max(1.0));
+        }
+    }
+}
+
+/// Property (Assumption 1 support): unbiased compressors never enlarge a
+/// coordinate beyond the block magnitude bound, and the support of ternary
+/// codes is {−norm, 0, +norm} per block.
+#[test]
+fn prop_ternary_support() {
+    let mut rng = Xoshiro256::seed_from_u64(0x7E6);
+    for _ in 0..200 {
+        let x = arb_vector(&mut rng);
+        let bs = 1 + rng.next_below(100);
+        let q = PNormQuantizer::new(PNorm::Inf, bs);
+        match q.compress(&x, &mut rng) {
+            Compressed::Ternary { norms, trits, block_size, .. } => {
+                assert_eq!(block_size, bs);
+                for (b, chunk) in trits.chunks(bs).enumerate() {
+                    for &t in chunk {
+                        assert!(t == -1 || t == 0 || t == 1);
+                    }
+                    // norm is the true block ∞-norm
+                    let lo = b * bs;
+                    let hi = (lo + bs).min(x.len());
+                    let want = x[lo..hi].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    assert_eq!(norms[b], want);
+                }
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+    }
+}
+
+/// Property: every unbiased compressor's empirical mean over repeated
+/// compression converges to x (coarse Monte-Carlo check per case).
+#[test]
+fn prop_unbiasedness_montecarlo() {
+    let mut rng = Xoshiro256::seed_from_u64(0x0B1A5);
+    for case in 0..12 {
+        // small dims so 4000 trials give tight means
+        let d = 4 + rng.next_below(12);
+        let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+        let q: Box<dyn Compressor> = match case % 3 {
+            0 => Box::new(PNormQuantizer::new(PNorm::Inf, 1 + rng.next_below(d))),
+            1 => Box::new(QsgdQuantizer::new(2, d)),
+            _ => Box::new(StochasticSparsifier::new(0.4)),
+        };
+        assert!(q.is_unbiased());
+        let trials = 4000;
+        let mut acc = vec![0.0f64; d];
+        for t in 0..trials {
+            let mut r = Xoshiro256::for_site(case as u64, 3, t);
+            for (a, v) in acc.iter_mut().zip(q.compress(&x, &mut r).decompress()) {
+                *a += v as f64;
+            }
+        }
+        let scale = x.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(0.1) as f64;
+        for (j, (a, &xi)) in acc.iter().zip(&x).enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - xi as f64).abs() < 0.12 * scale,
+                "case {case} coord {j}: mean {mean} vs {xi}"
+            );
+        }
+    }
+}
+
+/// Property: variance bound E‖Q(x)−x‖² ≤ C‖x‖² holds empirically for the
+/// spec-built compressors across random vectors.
+#[test]
+fn prop_variance_bound() {
+    let specs = ["ternary:32", "l2:32", "qsgd:2:32", "sparse:0.25"];
+    let mut rng = Xoshiro256::seed_from_u64(0xA11CE);
+    for spec in specs {
+        let q = from_spec(spec).unwrap();
+        for case in 0..4 {
+            let d = 16 + rng.next_below(80);
+            let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
+            let xsq: f64 = x.iter().map(|&v| (v * v) as f64).sum();
+            let trials = 2000;
+            let mut err = 0.0;
+            for t in 0..trials {
+                let mut r = Xoshiro256::for_site(case, 5, t);
+                let dvec = q.compress(&x, &mut r).decompress();
+                err += dvec
+                    .iter()
+                    .zip(&x)
+                    .map(|(a, b)| ((a - b) * (a - b)) as f64)
+                    .sum::<f64>();
+            }
+            err /= trials as f64;
+            let c = q.variance_constant(d);
+            assert!(
+                err <= 1.08 * c * xsq + 1e-9,
+                "{spec} case {case}: E err {err} > C‖x‖² = {}",
+                c * xsq
+            );
+        }
+    }
+}
+
+/// Property: top-k decode differs from x only off the kept support, and
+/// keeps exactly min(k, d) coordinates.
+#[test]
+fn prop_topk_support_size() {
+    let mut rng = Xoshiro256::seed_from_u64(0x70);
+    for _ in 0..200 {
+        let x = arb_vector(&mut rng);
+        let k = 1 + rng.next_below(x.len());
+        let q = TopK::new(k);
+        match q.compress(&x, &mut rng) {
+            Compressed::Sparse { idx, vals, dim } => {
+                assert_eq!(dim, x.len());
+                assert_eq!(idx.len(), k.min(x.len()));
+                assert_eq!(idx.len(), vals.len());
+                // indices strictly increasing (codec relies on it)
+                for w in idx.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+                // kept values are the original coordinates
+                for (&i, &v) in idx.iter().zip(&vals) {
+                    assert_eq!(v, x[i as usize]);
+                }
+            }
+            other => panic!("unexpected payload {other:?}"),
+        }
+    }
+}
+
+/// Property (robustness): decode never panics on corrupted or truncated
+/// wire bytes — it returns Err or a payload, but the process survives. The
+/// coordinator trusts this when talking to remote peers.
+#[test]
+fn prop_decode_survives_fuzzed_bytes() {
+    let mut rng = Xoshiro256::seed_from_u64(0xF422);
+    // truncations of valid messages
+    for _ in 0..150 {
+        let x = arb_vector(&mut rng);
+        let q = arb_compressor(&mut rng);
+        let bytes = codec::encode(&q.compress(&x, &mut rng));
+        let cut = rng.next_below(bytes.len().max(1));
+        let _ = codec::decode(&bytes[..cut]); // must not panic
+    }
+    // random garbage
+    for _ in 0..300 {
+        let len = rng.next_below(200);
+        let junk: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        let _ = codec::decode(&junk); // must not panic
+    }
+    // bit-flips in valid messages
+    for _ in 0..150 {
+        let x = arb_vector(&mut rng);
+        let q = arb_compressor(&mut rng);
+        let mut bytes = codec::encode(&q.compress(&x, &mut rng));
+        if !bytes.is_empty() {
+            let at = rng.next_below(bytes.len());
+            bytes[at] ^= 1 << rng.next_below(8);
+            let _ = codec::decode(&bytes); // must not panic
+        }
+    }
+}
