@@ -8,7 +8,8 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth;
-use dore::harness::{compare, TrainSpec};
+use dore::engine::TrainSpec;
+use dore::harness::compare;
 
 fn main() {
     let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);

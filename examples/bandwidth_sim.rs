@@ -4,7 +4,10 @@
 //!
 //! The wire bits are **measured** from real compressed payloads at full
 //! dimension (the compute characterization runs the actual rust hot path);
-//! only the network transfer time is modelled (DESIGN.md §2).
+//! only the network transfer time is modelled (DESIGN.md §2). To compose
+//! the same latency model with a full training run instead of a one-round
+//! characterization, attach the `dore::engine::SimNet` transport to a
+//! `Session` (see `cargo bench --bench fig2_bandwidth` for an example).
 //!
 //! ```
 //! cargo run --release --example bandwidth_sim
@@ -36,7 +39,8 @@ fn main() {
         })
         .collect();
 
-    println!("\n{:<12}{:>12}{:>12}{:>12}{:>18}", "bandwidth", "SGD", "QSGD", "DORE", "DORE speedup");
+    let header = ("bandwidth", "SGD", "QSGD", "DORE", "DORE speedup");
+    println!("\n{:<12}{:>12}{:>12}{:>12}{:>18}", header.0, header.1, header.2, header.3, header.4);
     for bw in [1e9, 500e6, 200e6, 100e6, 50e6, 20e6, 10e6] {
         let times: Vec<f64> = chars
             .iter()

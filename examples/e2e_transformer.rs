@@ -15,9 +15,8 @@
 //! ```
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
-use dore::coordinator::run_distributed;
 use dore::data::synth;
-use dore::harness::TrainSpec;
+use dore::engine::{Session, Threaded, TrainSpec};
 use dore::runtime::lm::TransformerLm;
 use std::sync::Arc;
 
@@ -64,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let t0 = std::time::Instant::now();
-    let m = run_distributed(lm.clone(), spec)?;
+    let m = Session::shared(lm.clone()).spec(spec).transport(Threaded::new()).run()?;
     let wall = t0.elapsed().as_secs_f64();
 
     println!("\nstep    eval CE loss");
@@ -74,7 +73,8 @@ fn main() -> anyhow::Result<()> {
     let d = lm.param_count as u64;
     let dense_per_round = 2 * 32 * d * n_workers as u64;
     println!("\n--- ledger ---");
-    println!("steps: {}   wall: {wall:.1}s   ({:.2} s/step incl. eval)", m.total_rounds, wall / m.total_rounds as f64);
+    let per_step = wall / m.total_rounds as f64;
+    println!("steps: {}   wall: {wall:.1}s   ({per_step:.2} s/step incl. eval)", m.total_rounds);
     println!(
         "bits moved: {:.1} MB total ({:.0} bits/round/worker)",
         m.total_bits() as f64 / 8e6,

@@ -1,5 +1,6 @@
 //! Quickstart: train the paper's §5.1 linear-regression problem with DORE
-//! and print the loss curve plus the communication savings.
+//! through the `Session` builder, stream progress through a custom
+//! `Observer`, and print the loss curve plus the communication savings.
 //!
 //! ```
 //! cargo run --release --example quickstart
@@ -7,10 +8,27 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth;
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{EvalEvent, Observer, Session, TrainSpec};
 use dore::models::Problem;
 
-fn main() {
+/// A custom event sink: prints each evaluation point as it happens instead
+/// of picking fields out of the final metrics. Anything implementing
+/// `Observer` can be attached with `.observer(..)` — CSV writers, live
+/// plots, bit-budget guards.
+struct LivePrinter;
+
+impl Observer for LivePrinter {
+    fn on_eval(&mut self, e: &EvalEvent) {
+        println!(
+            "{:>5}   {:<12.4e}   {:<12.4e}",
+            e.round,
+            e.loss,
+            e.dist_to_opt.unwrap_or(f64::NAN)
+        );
+    }
+}
+
+fn main() -> anyhow::Result<()> {
     // The paper's shape: A ∈ R^{1200×500}, 20 workers, full local gradients.
     let problem = synth::paper_linreg(42);
     println!(
@@ -20,29 +38,33 @@ fn main() {
         problem.n_workers()
     );
 
-    let spec = TrainSpec {
-        algo: AlgorithmKind::Dore,
-        hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
-        iters: 1000,
-        minibatch: None, // σ = 0, as in Fig. 3
-        eval_every: 100,
-        seed: 42,
-    };
-    let m = run_inproc(&problem, &spec);
-
     println!("\nround   f(x)-f*        ‖x-x*‖");
-    for i in 0..m.rounds.len() {
-        println!("{:>5}   {:<12.4e}   {:<12.4e}", m.rounds[i], m.loss[i], m.dist_to_opt[i]);
-    }
+    let m = Session::new(&problem)
+        .algo(AlgorithmKind::Dore)
+        .hp(HyperParams { lr: 0.05, ..HyperParams::paper_defaults() })
+        .iters(1000)
+        .minibatch(None) // σ = 0, as in Fig. 3
+        .eval_every(100)
+        .seed(42)
+        .observer(LivePrinter)
+        .run()?;
+
     if let Some(rho) = m.empirical_rate(1e-10) {
         println!("\nempirical linear rate: ρ̂ = {rho:.4} per round");
     }
 
-    // communication accounting vs uncompressed P-SGD
-    let sgd = run_inproc(
-        &problem,
-        &TrainSpec { algo: AlgorithmKind::Sgd, iters: 10, eval_every: 10, ..spec.clone() },
-    );
+    // communication accounting vs uncompressed P-SGD — the `.spec(..)`
+    // form takes a whole TrainSpec when you already have one.
+    let sgd = Session::new(&problem)
+        .spec(TrainSpec {
+            algo: AlgorithmKind::Sgd,
+            hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
+            iters: 10,
+            minibatch: None,
+            eval_every: 10,
+            seed: 42,
+        })
+        .run()?;
     let dore_bits = m.bits_per_round_per_worker(problem.n_workers());
     let sgd_bits = sgd.bits_per_round_per_worker(problem.n_workers());
     println!(
@@ -51,4 +73,5 @@ fn main() {
         sgd_bits,
         100.0 * (1.0 - dore_bits / sgd_bits)
     );
+    Ok(())
 }

@@ -13,6 +13,8 @@
 //! ```
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::data::synth;
+use dore::engine::{Session, SimNet, TrainSpec};
 use dore::harness::{characterize_round, simulated_iteration_time};
 
 fn main() {
@@ -40,7 +42,8 @@ fn main() {
         })
         .collect();
     println!();
-    println!("{:>10},{:>12},{:>12},{:>12},{:>14}", "Mbps", "SGD_s", "QSGD_s", "DORE_s", "DOREspeedup");
+    let cols = ("Mbps", "SGD_s", "QSGD_s", "DORE_s", "DOREspeedup");
+    println!("{:>10},{:>12},{:>12},{:>12},{:>14}", cols.0, cols.1, cols.2, cols.3, cols.4);
     for bw in [1000e6, 700e6, 500e6, 300e6, 200e6, 100e6, 50e6, 20e6, 10e6] {
         let t: Vec<f64> = chars
             .iter()
@@ -60,4 +63,28 @@ fn main() {
          bandwidth SGD is slowest,\nQSGD is ~2x faster than SGD (uplink-only \
          compression), DORE stays nearly flat (both directions compressed)."
     );
+
+    // The composed variant: the same latency model riding along with *real*
+    // training through the SimNet transport (measured payloads per round,
+    // not a one-round characterization) — small dim so it runs in seconds.
+    println!("\n=== composed check: real linreg training through SimNet ===");
+    let problem = synth::linreg_problem(600, 400, 10, 0.1, 42);
+    println!("{:<10}{:>16}{:>16}", "Mbps", "SGD s/round", "DORE s/round");
+    for bw in [1000e6, 100e6, 10e6] {
+        let sim_per_round = |algo| {
+            let spec = TrainSpec { algo, iters: 20, eval_every: 20, ..Default::default() };
+            let m = Session::new(&problem)
+                .spec(spec)
+                .transport(SimNet::with_bandwidth(bw))
+                .run()
+                .expect("simnet run");
+            m.simulated_seconds.expect("simnet reports a clock") / m.total_rounds as f64
+        };
+        println!(
+            "{:<10}{:>16.5}{:>16.5}",
+            (bw / 1e6) as u64,
+            sim_per_round(AlgorithmKind::Sgd),
+            sim_per_round(AlgorithmKind::Dore)
+        );
+    }
 }

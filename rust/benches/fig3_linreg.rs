@@ -16,7 +16,7 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth;
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, TrainSpec};
 
 fn main() {
     let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);
@@ -32,7 +32,10 @@ fn main() {
         };
         let runs: Vec<_> = AlgorithmKind::all()
             .iter()
-            .map(|&k| (k, run_inproc(&problem, &TrainSpec { algo: k, ..template.clone() })))
+            .map(|&k| {
+                let spec = TrainSpec { algo: k, ..template.clone() };
+                (k, Session::new(&problem).spec(spec).run().expect("fig3 run"))
+            })
             .collect();
 
         // header

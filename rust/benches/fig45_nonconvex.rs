@@ -15,7 +15,7 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth;
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, TrainSpec};
 use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
 use dore::optim::LrSchedule;
@@ -72,7 +72,10 @@ fn run_fig(f: &FigSpec) {
     };
     let runs: Vec<_> = AlgorithmKind::all()
         .iter()
-        .map(|&k| (k, run_inproc(&p, &TrainSpec { algo: k, ..template.clone() })))
+        .map(|&k| {
+            let spec = TrainSpec { algo: k, ..template.clone() };
+            (k, Session::new(&p).spec(spec).run().expect("fig4/5 run"))
+        })
         .collect();
     print!("{:>6}", "epoch");
     for (k, _) in &runs {

@@ -13,7 +13,7 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth;
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, TrainSpec};
 
 fn main() {
     let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);
@@ -25,14 +25,14 @@ fn main() {
         seed: 42,
         ..Default::default()
     };
-    let dore = run_inproc(
-        &problem,
-        &TrainSpec { algo: AlgorithmKind::Dore, ..template.clone() },
-    );
-    let ds = run_inproc(
-        &problem,
-        &TrainSpec { algo: AlgorithmKind::DoubleSqueeze, ..template.clone() },
-    );
+    let run = |algo| {
+        Session::new(&problem)
+            .spec(TrainSpec { algo, ..template.clone() })
+            .run()
+            .expect("fig6 run")
+    };
+    let dore = run(AlgorithmKind::Dore);
+    let ds = run(AlgorithmKind::DoubleSqueeze);
 
     println!("=== Fig. 6: norm of the compressed variable ===");
     println!(
@@ -51,8 +51,10 @@ fn main() {
     }
     let ratio = |v: &[f64]| v.last().unwrap() / v[1].max(1e-300);
     println!("\n-- decay factors (last / round-100) --");
-    println!("DORE worker residual:   {:.3e} (exponential decay expected)", ratio(&dore.worker_residual_norm));
+    let dore_w = ratio(&dore.worker_residual_norm);
+    println!("DORE worker residual:   {dore_w:.3e} (exponential decay expected)");
     println!("DORE master residual:   {:.3e}", ratio(&dore.master_residual_norm));
-    println!("DS    worker variable:  {:.3e} (no decay expected)", ratio(&ds.worker_residual_norm));
+    let ds_w = ratio(&ds.worker_residual_norm);
+    println!("DS    worker variable:  {ds_w:.3e} (no decay expected)");
     println!("DS    master variable:  {:.3e}", ratio(&ds.master_residual_norm));
 }

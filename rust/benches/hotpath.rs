@@ -54,7 +54,8 @@ fn main() {
     let mut r = Xoshiro256::seed_from_u64(7);
     let c = q.compress(&x, &mut r);
     let enc = codec::encode(&c);
-    println!("  (payload {} bytes = {:.2} bits/coord)", enc.len(), enc.len() as f64 * 8.0 / d as f64);
+    let bits_per_coord = enc.len() as f64 * 8.0 / d as f64;
+    println!("  (payload {} bytes = {bits_per_coord:.2} bits/coord)", enc.len());
     bench("codec encode ternary (1M trits)", Some(bytes), 9, || {
         let e = codec::encode(&c);
         sink ^= e.len() as u64;

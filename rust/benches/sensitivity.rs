@@ -11,7 +11,7 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth;
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, TrainSpec};
 use dore::models::mlp::{Mlp, MlpArch};
 
 fn base_hp() -> HyperParams {
@@ -27,7 +27,7 @@ fn run(p: &Mlp, hp: HyperParams, label: String, rounds_per_epoch: usize) {
         eval_every: rounds_per_epoch,
         seed: 42,
     };
-    let m = run_inproc(p, &spec);
+    let m = Session::new(p).spec(spec).run().expect("sensitivity run");
     print!("{label:<24}");
     for l in &m.loss {
         print!(",{l:.4}");

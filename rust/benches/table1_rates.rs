@@ -16,7 +16,7 @@
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::compression::codec::scheme_bits;
 use dore::data::synth;
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, TrainSpec};
 use dore::models::mlp::{Mlp, MlpArch};
 
 fn main() {
@@ -48,8 +48,14 @@ fn main() {
         "algorithm", "compress", "linear rate", "rho_hat", "final ||x-x*||", "nonconvex loss"
     );
     for &k in AlgorithmKind::all() {
-        let sc = run_inproc(&p, &TrainSpec { algo: k, ..sc_template.clone() });
-        let nc = run_inproc(&mlp, &TrainSpec { algo: k, ..nc_template.clone() });
+        let sc = Session::new(&p)
+            .spec(TrainSpec { algo: k, ..sc_template.clone() })
+            .run()
+            .expect("table1 convex run");
+        let nc = Session::new(&mlp)
+            .spec(TrainSpec { algo: k, ..nc_template.clone() })
+            .run()
+            .expect("table1 nonconvex run");
         let fin = sc.dist_to_opt.last().copied().unwrap();
         let linear = fin.is_finite() && fin < 1e-3;
         let rho = sc
@@ -58,7 +64,9 @@ fn main() {
             .unwrap_or_else(|| "-".into());
         let compress = match k {
             AlgorithmKind::Sgd => "none",
-            AlgorithmKind::Dore | AlgorithmKind::DoubleSqueeze | AlgorithmKind::DoubleSqueezeTopk => {
+            AlgorithmKind::Dore
+            | AlgorithmKind::DoubleSqueeze
+            | AlgorithmKind::DoubleSqueezeTopk => {
                 "grad+model"
             }
             _ => "grad",

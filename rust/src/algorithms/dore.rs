@@ -261,7 +261,8 @@ mod tests {
                 .iter_mut()
                 .enumerate()
                 .map(|(i, w)| {
-                    let g: Vec<F> = (0..16).map(|j| (i as F + 1.0) * ((j as F) - 8.0) * 0.1).collect();
+                    let g: Vec<F> =
+                        (0..16).map(|j| (i as F + 1.0) * ((j as F) - 8.0) * 0.1).collect();
                     let mut rng = Xoshiro256::for_site(8, 1 + i as u64, k);
                     w.round(k as usize, &g, &mut rng)
                 })

@@ -8,10 +8,10 @@
 //!    **downlink** broadcast;
 //! 3. every worker applies the downlink via [`WorkerNode::apply_downlink`].
 //!
-//! Both the in-process bench harness ([`crate::harness`]) and the tokio
-//! parameter-server ([`crate::coordinator`]) drive these same state
-//! machines, so convergence results and the async runtime cannot drift
-//! apart.
+//! Every transport of the round engine ([`crate::engine`]) — in-process,
+//! OS-thread channels, simulated network, TCP sockets — drives these same
+//! state machines through the same loop, so convergence results and the
+//! distributed runtime cannot drift apart.
 //!
 //! | algorithm | uplink | downlink | paper role |
 //! |---|---|---|---|
@@ -29,7 +29,7 @@ pub mod memsgd;
 pub mod psgd;
 pub mod qsgd;
 
-use crate::compression::{from_spec, BoxedCompressor, Compressed, TopK, Xoshiro256};
+use crate::compression::{Compressed, Xoshiro256};
 use crate::optim::{LrSchedule, Prox};
 use crate::F;
 
@@ -200,62 +200,17 @@ impl std::str::FromStr for AlgorithmKind {
 }
 
 /// Instantiate the worker fleet + master for `kind`, all starting from the
-/// identical iterate `x0` (§3.2 Initialization).
+/// identical iterate `x0` (§3.2 Initialization). Construction is
+/// registry-based ([`crate::engine::registry`]): each algorithm's entry owns
+/// its compressor policy, and new schemes register without editing this
+/// module.
 pub fn build(
     kind: AlgorithmKind,
     n_workers: usize,
     x0: &[F],
     hp: &HyperParams,
 ) -> anyhow::Result<(Vec<Box<dyn WorkerNode>>, Box<dyn MasterNode>)> {
-    let wq: BoxedCompressor = match kind {
-        AlgorithmKind::Sgd => from_spec("none")?,
-        AlgorithmKind::DoubleSqueezeTopk => topk_spec(&hp.worker_compressor)?,
-        _ => from_spec(&hp.worker_compressor)?,
-    };
-    let mq: BoxedCompressor = match kind {
-        AlgorithmKind::DoubleSqueezeTopk => topk_spec(&hp.master_compressor)?,
-        AlgorithmKind::DoubleSqueeze | AlgorithmKind::Dore => from_spec(&hp.master_compressor)?,
-        // gradient-only schemes broadcast the dense model
-        _ => from_spec("none")?,
-    };
-    let workers: Vec<Box<dyn WorkerNode>> = (0..n_workers)
-        .map(|_| -> Box<dyn WorkerNode> {
-            match kind {
-                AlgorithmKind::Sgd => Box::new(psgd::PsgdWorker::new(x0, wq.clone())),
-                AlgorithmKind::Qsgd => Box::new(qsgd::QsgdWorker::new(x0, wq.clone())),
-                AlgorithmKind::MemSgd => Box::new(memsgd::MemSgdWorker::new(x0, wq.clone())),
-                AlgorithmKind::Diana => {
-                    Box::new(diana::DianaWorker::new(x0, wq.clone(), hp.alpha))
-                }
-                AlgorithmKind::DoubleSqueeze | AlgorithmKind::DoubleSqueezeTopk => {
-                    Box::new(doublesqueeze::DsWorker::new(x0, wq.clone(), hp.clone()))
-                }
-                AlgorithmKind::Dore => Box::new(dore::DoreWorker::new(x0, wq.clone(), hp.clone())),
-            }
-        })
-        .collect();
-    let master: Box<dyn MasterNode> = match kind {
-        AlgorithmKind::Sgd => Box::new(psgd::PsgdMaster::new(x0, n_workers, hp.clone())),
-        AlgorithmKind::Qsgd => Box::new(qsgd::QsgdMaster::new(x0, n_workers, hp.clone())),
-        AlgorithmKind::MemSgd => Box::new(memsgd::MemSgdMaster::new(x0, n_workers, hp.clone())),
-        AlgorithmKind::Diana => Box::new(diana::DianaMaster::new(x0, n_workers, hp.clone())),
-        AlgorithmKind::DoubleSqueeze | AlgorithmKind::DoubleSqueezeTopk => {
-            Box::new(doublesqueeze::DsMaster::new(x0, n_workers, mq, hp.clone()))
-        }
-        AlgorithmKind::Dore => Box::new(dore::DoreMaster::new(x0, n_workers, mq, hp.clone())),
-    };
-    Ok((workers, master))
-}
-
-/// Map a ternary/quantizer spec to the equivalently-sized top-k compressor
-/// used by the DoubleSqueeze(topk) baseline (Tang et al. use k ≈ d/100; we
-/// honour an explicit `topk:k` spec if given).
-fn topk_spec(spec: &str) -> anyhow::Result<BoxedCompressor> {
-    if spec.starts_with("topk") {
-        from_spec(spec)
-    } else {
-        Ok(std::sync::Arc::new(TopK::new(0)))
-    }
+    crate::engine::registry::build_algorithm(kind, n_workers, x0, hp)
 }
 
 /// Heavy-ball momentum update: `vel ← m·vel + g` (vel lazily sized).

@@ -344,7 +344,9 @@ pub fn scheme_bits(d: u64, b: u64, grad_compressed: bool, model_compressed: bool
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compression::{Compressor, PNorm, PNormQuantizer, QsgdQuantizer, StochasticSparsifier, Xoshiro256};
+    use crate::compression::{
+        Compressor, PNorm, PNormQuantizer, QsgdQuantizer, StochasticSparsifier, Xoshiro256,
+    };
 
     fn roundtrip(c: &Compressed) {
         let bytes = encode(c);

@@ -204,41 +204,145 @@ pub trait Compressor: Send + Sync {
 /// Boxed compressor, the form the algorithms hold.
 pub type BoxedCompressor = std::sync::Arc<dyn Compressor>;
 
+// ---------------------------------------------------------------------------
+// Spec registry: open construction with validated arguments.
+// ---------------------------------------------------------------------------
+
+/// Factory for one spec family: receives the `:`-separated arguments after
+/// the name (`"ternary:128"` → `["128"]`) and validates them — degenerate
+/// specs must fail here with a clear error, never panic later in blockwise
+/// math.
+pub type CompressorFactory = fn(&[&str]) -> anyhow::Result<BoxedCompressor>;
+
+static COMPRESSORS: std::sync::OnceLock<std::sync::RwLock<Vec<(String, CompressorFactory)>>> =
+    std::sync::OnceLock::new();
+
+fn compressors() -> &'static std::sync::RwLock<Vec<(String, CompressorFactory)>> {
+    COMPRESSORS.get_or_init(|| std::sync::RwLock::new(builtin_compressors()))
+}
+
+/// Register a new spec family under `name` (and use it anywhere a spec
+/// string is accepted — CLI, JSON configs, `HyperParams`). Errors on name
+/// collisions; `:` is the argument separator and cannot appear in names.
+pub fn register_compressor(name: &str, factory: CompressorFactory) -> anyhow::Result<()> {
+    anyhow::ensure!(!name.is_empty() && !name.contains(':'), "bad compressor name '{name}'");
+    let mut reg = compressors().write().expect("compressor registry poisoned");
+    anyhow::ensure!(
+        !reg.iter().any(|(n, _)| n.eq_ignore_ascii_case(name)),
+        "compressor '{name}' already registered"
+    );
+    reg.push((name.to_string(), factory));
+    Ok(())
+}
+
+/// Names of every registered spec family, registration order.
+pub fn registered_compressors() -> Vec<String> {
+    let reg = compressors().read().expect("compressor registry poisoned");
+    reg.iter().map(|(n, _)| n.clone()).collect()
+}
+
 /// Parse a compressor spec string (CLI / config):
 /// `none`, `ternary[:block]` (∞-norm), `l2[:block]`, `qsgd[:levels[:block]]`,
-/// `sparse:p`, `topk:k`.
+/// `sparse:p`, `sign[:block]`, `topk[:k]` (bare `topk` = 1 % of `d`), plus
+/// anything added via [`register_compressor`]. Degenerate arguments
+/// (`ternary:0`, `qsgd:0`, `sparse:0`, negative `k`, …) are rejected with a
+/// clear error.
 pub fn from_spec(spec: &str) -> anyhow::Result<BoxedCompressor> {
-    use std::sync::Arc;
     let parts: Vec<&str> = spec.split(':').collect();
-    Ok(match parts[0] {
-        "none" | "identity" => Arc::new(Identity),
-        "ternary" | "linf" => {
-            let b = parts.get(1).map_or(Ok(256), |s| s.parse())?;
-            Arc::new(PNormQuantizer::new(PNorm::Inf, b))
+    let factory = {
+        let reg = compressors().read().expect("compressor registry poisoned");
+        match reg.iter().find(|(n, _)| n.eq_ignore_ascii_case(parts[0])) {
+            Some((_, f)) => *f,
+            None => anyhow::bail!(
+                "unknown compressor spec '{}' (registered: {})",
+                parts[0],
+                reg.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join("|")
+            ),
         }
-        "l2" => {
-            let b = parts.get(1).map_or(Ok(256), |s| s.parse())?;
-            Arc::new(PNormQuantizer::new(PNorm::L2, b))
-        }
-        "qsgd" => {
-            let s = parts.get(1).map_or(Ok(4), |s| s.parse())?;
-            let b = parts.get(2).map_or(Ok(256), |s| s.parse())?;
-            Arc::new(QsgdQuantizer::new(s, b))
-        }
-        "sparse" => {
-            let p: f64 = parts.get(1).map_or(Ok(0.1), |s| s.parse())?;
-            Arc::new(StochasticSparsifier::new(p))
-        }
-        "sign" | "signsgd" => {
-            let b = parts.get(1).map_or(Ok(256), |s| s.parse())?;
-            Arc::new(SignSgd::new(b))
-        }
-        "topk" => {
-            let k = parts.get(1).map_or(Ok(0), |s| s.parse())?;
-            Arc::new(TopK::new(k))
-        }
-        other => anyhow::bail!("unknown compressor spec '{other}'"),
-    })
+    };
+    factory(&parts[1..]).map_err(|e| e.context(format!("compressor spec '{spec}'")))
+}
+
+/// Parse an optional positive count argument (block sizes, k, levels).
+/// Parsed as `i64` first so `"-4"` reports "must be ≥ 1" instead of an
+/// opaque unsigned-parse failure.
+fn parse_count(args: &[&str], at: usize, what: &str, default: i64) -> anyhow::Result<i64> {
+    let v: i64 = match args.get(at) {
+        None => default,
+        Some(s) => s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad {what} '{s}': {e}"))?,
+    };
+    anyhow::ensure!(v >= 1, "degenerate spec: {what} {v} must be ≥ 1");
+    Ok(v)
+}
+
+fn make_identity(_args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    Ok(std::sync::Arc::new(Identity))
+}
+
+fn make_ternary(args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    let b = parse_count(args, 0, "block size", 256)?;
+    Ok(std::sync::Arc::new(PNormQuantizer::new(PNorm::Inf, b as usize)))
+}
+
+fn make_l2(args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    let b = parse_count(args, 0, "block size", 256)?;
+    Ok(std::sync::Arc::new(PNormQuantizer::new(PNorm::L2, b as usize)))
+}
+
+fn make_qsgd(args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    let s = parse_count(args, 0, "level count", 4)?;
+    anyhow::ensure!(s <= 127, "level count {s} exceeds the i8 wire format (max 127)");
+    let b = parse_count(args, 1, "block size", 256)?;
+    Ok(std::sync::Arc::new(QsgdQuantizer::new(s as u8, b as usize)))
+}
+
+fn make_sparse(args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    let p: f64 = match args.first() {
+        None => 0.1,
+        Some(s) => s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad keep probability '{s}': {e}"))?,
+    };
+    anyhow::ensure!(
+        p.is_finite() && p > 0.0 && p <= 1.0,
+        "degenerate spec: keep probability {p} must be in (0, 1]"
+    );
+    Ok(std::sync::Arc::new(StochasticSparsifier::new(p)))
+}
+
+fn make_sign(args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    let b = parse_count(args, 0, "block size", 256)?;
+    Ok(std::sync::Arc::new(SignSgd::new(b as usize)))
+}
+
+fn make_topk(args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+    // bare `topk` means the literature-standard 1 % of d (k resolved at
+    // compress time); an explicit k must be ≥ 1.
+    let k = match args.first() {
+        None => 0,
+        Some(_) => parse_count(args, 0, "k", 0)? as usize,
+    };
+    Ok(std::sync::Arc::new(TopK::new(k)))
+}
+
+fn builtin_compressors() -> Vec<(String, CompressorFactory)> {
+    [
+        ("none", make_identity as CompressorFactory),
+        ("identity", make_identity),
+        ("ternary", make_ternary),
+        ("linf", make_ternary),
+        ("l2", make_l2),
+        ("qsgd", make_qsgd),
+        ("sparse", make_sparse),
+        ("sign", make_sign),
+        ("signsgd", make_sign),
+        ("topk", make_topk),
+    ]
+    .into_iter()
+    .map(|(n, f)| (n.to_string(), f))
+    .collect()
 }
 
 #[cfg(test)]
@@ -259,6 +363,37 @@ mod tests {
             assert_eq!(from_spec(spec).unwrap().name(), name, "spec {spec}");
         }
         assert!(from_spec("bogus").is_err());
+    }
+
+    #[test]
+    fn degenerate_specs_are_rejected_with_clear_errors() {
+        for bad in [
+            "ternary:0", "linf:0", "l2:0", "sign:0", "qsgd:0", "qsgd:4:0", "qsgd:200",
+            "topk:0", "topk:-3", "ternary:-16", "sparse:0", "sparse:-0.5", "sparse:1.5",
+            "sparse:nan",
+        ] {
+            let err = match from_spec(bad) {
+                Ok(_) => panic!("degenerate spec '{bad}' should be rejected"),
+                Err(e) => e,
+            };
+            let msg = format!("{err:#}");
+            assert!(msg.contains(bad), "error for '{bad}' should cite the spec: {msg}");
+        }
+        // bare topk keeps the documented 1 %-of-d default
+        assert_eq!(from_spec("topk").unwrap().name(), "topk");
+    }
+
+    #[test]
+    fn registry_is_open_for_extension() {
+        fn make_half_sparse(_args: &[&str]) -> anyhow::Result<BoxedCompressor> {
+            Ok(std::sync::Arc::new(StochasticSparsifier::new(0.5)))
+        }
+        register_compressor("half-sparse-test", make_half_sparse).unwrap();
+        assert_eq!(from_spec("half-sparse-test").unwrap().name(), "stochastic-sparsifier");
+        // collisions (case-insensitive) and malformed names are rejected
+        assert!(register_compressor("TERNARY", make_half_sparse).is_err());
+        assert!(register_compressor("with:colon", make_half_sparse).is_err());
+        assert!(registered_compressors().iter().any(|n| n == "half-sparse-test"));
     }
 
     #[test]

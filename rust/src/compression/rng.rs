@@ -57,7 +57,8 @@ impl Xoshiro256 {
     /// stochastic site in the system obtains its generator.
     pub fn for_site(seed: u64, node: u64, round: u64) -> Self {
         // Mix the three keys through splitmix so adjacent sites decorrelate.
-        let mut sm = seed ^ node.wrapping_mul(0xA24BAED4963EE407) ^ round.wrapping_mul(0x9FB21C651E98DF25);
+        let mut sm =
+            seed ^ node.wrapping_mul(0xA24BAED4963EE407) ^ round.wrapping_mul(0x9FB21C651E98DF25);
         let _ = splitmix64(&mut sm);
         Self::seed_from_u64(splitmix64(&mut sm))
     }

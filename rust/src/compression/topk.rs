@@ -12,11 +12,22 @@ pub struct TopK {
     /// Number of coordinates kept. `k == 0` means `d/100` (1 %), matching
     /// the common top-k default in the error-feedback literature.
     pub k: usize,
+    /// True when this operator was substituted for a non-top-k spec (the
+    /// DoubleSqueeze(topk) baseline replaces e.g. the ternary default); the
+    /// substitution is surfaced in [`Compressor::name`] so run labels and
+    /// logs show it instead of it happening silently.
+    substituted: bool,
 }
 
 impl TopK {
     pub fn new(k: usize) -> Self {
-        Self { k }
+        Self { k, substituted: false }
+    }
+
+    /// The 1 %-of-`d` default, marked as a substitution for an unrelated
+    /// spec (see [`crate::engine::registry`]'s DoubleSqueeze(topk) builder).
+    pub fn substituted_default() -> Self {
+        Self { k: 0, substituted: true }
     }
 
     fn effective_k(&self, dim: usize) -> usize {
@@ -61,7 +72,11 @@ impl Compressor for TopK {
     }
 
     fn name(&self) -> &'static str {
-        "topk"
+        if self.substituted {
+            "topk(1%,substituted)"
+        } else {
+            "topk"
+        }
     }
 }
 

@@ -1,192 +1,52 @@
-//! Threaded parameter-server runtime.
+//! Distributed-deployment surface: checkpointing, the wire protocol types
+//! and the TCP socket transport.
 //!
-//! One master thread plus `n` worker threads, connected by std mpsc
-//! channels. Payloads cross the channels as **real encoded wire bytes**
-//! ([`crate::compression::codec`]), so the byte counts used for
-//! communication accounting are the lengths of buffers that actually moved
-//! — the same path a TCP deployment would take, minus the socket. (The
-//! design brief suggests tokio; this environment is offline and has no
-//! tokio crate, so the runtime uses OS threads — for a barrier-synchronous
-//! PS with a handful of nodes the semantics and scheduling are identical.)
+//! The threaded parameter-server round loop that used to live here (one
+//! master plus `n` OS-thread workers over std mpsc channels — *not* tokio;
+//! this offline environment has no tokio crate, and for a
+//! barrier-synchronous PS the OS-thread semantics are identical) moved into
+//! the round engine as [`crate::engine::Threaded`]. What remains here is
+//! deployment machinery:
 //!
-//! The coordinator drives the identical [`WorkerNode`]/[`MasterNode`] state
-//! machines as the in-process harness; an integration test asserts the two
-//! paths produce bit-identical iterates.
+//! * [`protocol`] — the worker↔master message types (re-exported from
+//!   [`crate::engine::protocol`], where the channel transport lives now);
+//! * [`tcp`] — [`tcp::TcpTransport`], the same engine over real localhost
+//!   sockets with a length-prefixed frame protocol;
+//! * [`checkpoint`] — master-model snapshots with integrity checksums.
+//!
+//! [`run_distributed`] survives as a deprecated shim delegating to
+//! [`crate::engine::Session`] with the [`crate::engine::Threaded`]
+//! transport; an integration test asserts all transports produce
+//! bit-identical iterates.
 
 pub mod checkpoint;
-pub mod protocol;
 pub mod tcp;
 
-use crate::algorithms::{build, MasterNode, WorkerNode};
-use crate::compression::{codec, Xoshiro256};
-use crate::harness::TrainSpec;
-use crate::metrics::{RunMetrics, Stopwatch};
-use crate::models::{linalg, Problem};
-use crate::F;
-use protocol::{DownlinkMsg, UplinkMsg};
-use std::sync::mpsc::{Receiver, Sender, SyncSender};
+pub use crate::engine::protocol;
+
+use crate::engine::{Session, Threaded, TrainSpec};
+use crate::metrics::RunMetrics;
+use crate::models::Problem;
 use std::sync::Arc;
 
-struct WorkerTask {
-    id: usize,
-    node: Box<dyn WorkerNode>,
-    problem: Arc<dyn Problem>,
-    spec: TrainSpec,
-    to_master: Sender<UplinkMsg>,
-    from_master: Receiver<DownlinkMsg>,
-}
-
-impl WorkerTask {
-    fn run(mut self) -> anyhow::Result<()> {
-        let d = self.problem.dim();
-        let mut grad = vec![0.0 as F; d];
-        for k in 0..self.spec.iters {
-            // gradient at the local model copy
-            let mut grad_rng =
-                Xoshiro256::for_site(self.spec.seed ^ 0x5eed, 1 + self.id as u64, k as u64);
-            self.problem.local_grad(
-                self.id,
-                self.node.model(),
-                self.spec.minibatch,
-                &mut grad_rng,
-                &mut grad,
-            );
-            let mut qrng = Xoshiro256::for_site(self.spec.seed, 1 + self.id as u64, k as u64);
-            let up = self.node.round(k, &grad, &mut qrng);
-            let bytes = codec::encode(&up);
-            let residual_norm = self.node.last_compressed_norm();
-            self.to_master
-                .send(UplinkMsg { worker: self.id, round: k, bytes, residual_norm })
-                .map_err(|_| anyhow::anyhow!("master hung up"))?;
-            let down = self
-                .from_master
-                .recv()
-                .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
-            anyhow::ensure!(down.round == k, "round skew: worker {k} got {}", down.round);
-            let payload = codec::decode(&down.bytes)?;
-            self.node.apply_downlink(k, &payload);
-        }
-        Ok(())
-    }
-}
-
-struct MasterTask {
-    node: Box<dyn MasterNode>,
-    problem: Arc<dyn Problem>,
-    spec: TrainSpec,
-    from_workers: Receiver<UplinkMsg>,
-    to_workers: Vec<SyncSender<DownlinkMsg>>,
-}
-
-impl MasterTask {
-    fn run(mut self) -> anyhow::Result<RunMetrics> {
-        let sw = Stopwatch::start();
-        let n = self.to_workers.len();
-        let mut metrics = RunMetrics::new(self.spec.algo.name());
-        for k in 0..self.spec.iters {
-            // barrier gather: one uplink from every worker
-            let mut slots: Vec<Option<UplinkMsg>> = (0..n).map(|_| None).collect();
-            let mut got = 0;
-            while got < n {
-                let msg = self
-                    .from_workers
-                    .recv()
-                    .map_err(|_| anyhow::anyhow!("all workers hung up"))?;
-                anyhow::ensure!(msg.round == k, "round skew: master {k} got {}", msg.round);
-                anyhow::ensure!(slots[msg.worker].is_none(), "duplicate uplink");
-                metrics.uplink_bits += msg.bytes.len() as u64 * 8;
-                let w = msg.worker;
-                slots[w] = Some(msg);
-                got += 1;
-            }
-            let worker_res_norm =
-                slots.iter().map(|s| s.as_ref().unwrap().residual_norm).sum::<f64>() / n as f64;
-            let uplinks: Vec<_> = slots
-                .into_iter()
-                .map(|s| codec::decode(&s.unwrap().bytes))
-                .collect::<Result<_, _>>()?;
-            let mut mrng = Xoshiro256::for_site(self.spec.seed, 0, k as u64);
-            let down = self.node.round(k, &uplinks, &mut mrng);
-            let bytes = codec::encode(&down);
-            metrics.downlink_bits += (bytes.len() as u64 * 8) * n as u64;
-            for tx in &self.to_workers {
-                tx.send(DownlinkMsg { round: k, bytes: bytes.clone() })
-                    .map_err(|_| anyhow::anyhow!("worker hung up"))?;
-            }
-            if k % self.spec.eval_every == 0 || k + 1 == self.spec.iters {
-                let x = self.node.model();
-                metrics.rounds.push(k);
-                metrics.loss.push(self.problem.loss(x));
-                if let Some(xs) = self.problem.optimum() {
-                    metrics.dist_to_opt.push(linalg::dist2(x, xs));
-                }
-                if let Some(tl) = self.problem.test_loss(x) {
-                    metrics.test_loss.push(tl);
-                }
-                if let Some(ta) = self.problem.test_accuracy(x) {
-                    metrics.test_acc.push(ta);
-                }
-                metrics.worker_residual_norm.push(worker_res_norm);
-                metrics.master_residual_norm.push(self.node.last_compressed_norm());
-            }
-        }
-        metrics.total_rounds = self.spec.iters;
-        metrics.wall_seconds = sw.seconds();
-        Ok(metrics)
-    }
-}
-
-/// Run a full distributed training job: spawns the master on the calling
-/// thread and one OS thread per worker, returns the master's metrics.
+/// Run a full distributed training job over OS-thread workers and mpsc
+/// channels, returning the master's metrics.
+#[deprecated(
+    note = "use engine::Session::shared(problem).spec(spec).transport(Threaded::new()).run()"
+)]
 pub fn run_distributed(problem: Arc<dyn Problem>, spec: TrainSpec) -> anyhow::Result<RunMetrics> {
-    let n = problem.n_workers();
-    let x0 = problem.init();
-    let (workers, master) = build(spec.algo, n, &x0, &spec.hp)?;
-
-    let (up_tx, up_rx) = std::sync::mpsc::channel::<UplinkMsg>();
-    let mut down_txs = Vec::with_capacity(n);
-    let mut handles = Vec::with_capacity(n);
-    for (id, node) in workers.into_iter().enumerate() {
-        // depth-1 sync channel: one in-flight round per link, which is all
-        // the barrier-synchronous algorithms ever need.
-        let (dtx, drx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(1);
-        down_txs.push(dtx);
-        let task = WorkerTask {
-            id,
-            node,
-            problem: problem.clone(),
-            spec: spec.clone(),
-            to_master: up_tx.clone(),
-            from_master: drx,
-        };
-        handles.push(
-            std::thread::Builder::new()
-                .name(format!("dore-worker-{id}"))
-                .spawn(move || task.run())?,
-        );
-    }
-    drop(up_tx);
-
-    let master_task = MasterTask {
-        node: master,
-        problem,
-        spec,
-        from_workers: up_rx,
-        to_workers: down_txs,
-    };
-    let metrics = master_task.run()?;
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
-    }
-    Ok(metrics)
+    Session::shared(problem).spec(spec).transport(Threaded::new()).run()
 }
 
 /// Alias kept for API symmetry with async runtimes.
+#[deprecated(
+    note = "use engine::Session::shared(problem).spec(spec).transport(Threaded::new()).run()"
+)]
 pub fn run_distributed_blocking(
     problem: Arc<dyn Problem>,
     spec: TrainSpec,
 ) -> anyhow::Result<RunMetrics> {
-    run_distributed(problem, spec)
+    Session::shared(problem).spec(spec).transport(Threaded::new()).run()
 }
 
 #[cfg(test)]
@@ -194,17 +54,17 @@ mod tests {
     use super::*;
     use crate::algorithms::AlgorithmKind;
     use crate::data::synth::linreg_problem;
-    use crate::harness::run_inproc;
 
+    /// The deprecated shim must stay bit-identical to the engine it wraps —
+    /// and to the in-process path (same state machines, same RNG sites,
+    /// real codec in between; encode/decode is exact for every payload).
     #[test]
-    fn distributed_matches_inproc_bit_for_bit() {
-        // The threaded path and the in-proc harness must produce identical
-        // iterates: same state machines, same RNG sites, real codec in
-        // between (encode/decode is exact for every payload type).
+    #[allow(deprecated)]
+    fn run_distributed_shim_matches_inproc_bit_for_bit() {
         let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
         for algo in [AlgorithmKind::Dore, AlgorithmKind::Sgd, AlgorithmKind::DoubleSqueeze] {
             let spec = TrainSpec { algo, iters: 30, eval_every: 10, ..Default::default() };
-            let a = run_inproc(p.as_ref(), &spec);
+            let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
             let b = run_distributed(p.clone(), spec).unwrap();
             assert_eq!(a.loss, b.loss, "{} loss mismatch", algo.name());
             assert_eq!(a.dist_to_opt, b.dist_to_opt);
@@ -218,8 +78,8 @@ mod tests {
         let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
         let spec =
             TrainSpec { algo: AlgorithmKind::Dore, iters: 10, eval_every: 5, ..Default::default() };
-        let a = run_inproc(p.as_ref(), &spec);
-        let b = run_distributed(p.clone(), spec).unwrap();
+        let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+        let b = Session::shared(p.clone()).spec(spec).transport(Threaded::new()).run().unwrap();
         let tol = |x: u64, y: u64| (x as f64 - y as f64).abs() / (x as f64) < 0.05;
         assert!(tol(a.uplink_bits, b.uplink_bits), "{} vs {}", a.uplink_bits, b.uplink_bits);
         assert!(tol(a.downlink_bits, b.downlink_bits));
@@ -230,7 +90,7 @@ mod tests {
         let p = Arc::new(linreg_problem(120, 12, 12, 0.1, 8));
         let spec =
             TrainSpec { algo: AlgorithmKind::Dore, iters: 15, eval_every: 5, ..Default::default() };
-        let m = run_distributed(p, spec).unwrap();
+        let m = Session::shared(p).spec(spec).transport(Threaded::new()).run().unwrap();
         assert_eq!(m.total_rounds, 15);
         assert!(m.loss.last().unwrap().is_finite());
     }

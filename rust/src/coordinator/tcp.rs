@@ -1,7 +1,8 @@
-//! TCP transport for the parameter server: the same master/worker state
-//! machines as the in-process harness and the channel-based coordinator,
-//! but over real sockets with a length-prefixed frame protocol — the
-//! deployment shape the paper's testbed used (PS + workers on Ethernet).
+//! TCP transport for the round engine: the same master/worker state
+//! machines and the same [`crate::engine::Session`] loop as every other
+//! transport, but over real sockets with a length-prefixed frame protocol —
+//! the deployment shape the paper's testbed used (PS + workers on
+//! Ethernet).
 //!
 //! Frame layout (little-endian):
 //! ```text
@@ -10,17 +11,20 @@
 //! `kind` is 0 = uplink, 1 = downlink; `payload` is a
 //! [`crate::compression::codec`] buffer. Byte accounting counts payload
 //! bytes only (header bytes are fixed per message and reported separately),
-//! keeping the numbers comparable with the other two drivers.
+//! keeping the numbers comparable with the other transports.
 
-use crate::algorithms::build;
-use crate::compression::{codec, Xoshiro256};
-use crate::harness::TrainSpec;
-use crate::metrics::{RunMetrics, Stopwatch};
-use crate::models::{linalg, Problem};
+use crate::algorithms::WorkerNode;
+use crate::compression::{codec, Compressed};
+use crate::engine::{
+    worker_uplink, RoundCtx, Session, TrainSpec, Transport, UplinkFrame, WirePayload,
+};
+use crate::metrics::RunMetrics;
+use crate::models::Problem;
 use crate::F;
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
+use std::thread::JoinHandle;
 
 const KIND_UPLINK: u8 = 0;
 const KIND_DOWNLINK: u8 = 1;
@@ -63,127 +67,176 @@ fn read_frame(s: &mut TcpStream) -> anyhow::Result<Frame> {
     })
 }
 
-/// Run a training job over localhost TCP: binds an ephemeral port, spawns
-/// one OS thread per worker (each with its own socket), drives the master
-/// on the calling thread. Produces iterates bit-identical to
-/// [`super::run_distributed`] and the in-process harness.
-pub fn run_distributed_tcp(
+fn tcp_worker_loop(
+    id: usize,
+    mut node: Box<dyn WorkerNode>,
     problem: Arc<dyn Problem>,
     spec: TrainSpec,
-) -> anyhow::Result<RunMetrics> {
-    let n = problem.n_workers();
-    let x0 = problem.init();
-    let (workers, mut master) = build(spec.algo, n, &x0, &spec.hp)?;
-
-    let listener = TcpListener::bind("127.0.0.1:0")?;
-    let addr = listener.local_addr()?;
-
-    // worker threads: connect, then run the synchronous round loop
-    let mut handles = Vec::with_capacity(n);
-    for (id, mut node) in workers.into_iter().enumerate() {
-        let problem = problem.clone();
-        let spec = spec.clone();
-        handles.push(std::thread::Builder::new().name(format!("dore-tcp-{id}")).spawn(
-            move || -> anyhow::Result<()> {
-                let mut sock = TcpStream::connect(addr)?;
-                sock.set_nodelay(true)?;
-                // identify ourselves once
-                write_frame(
-                    &mut sock,
-                    &Frame { kind: KIND_UPLINK, round: u32::MAX, worker: id as u32, residual: 0.0, payload: vec![] },
-                )?;
-                let d = problem.dim();
-                let mut grad = vec![0.0 as F; d];
-                for k in 0..spec.iters {
-                    let mut grad_rng =
-                        Xoshiro256::for_site(spec.seed ^ 0x5eed, 1 + id as u64, k as u64);
-                    problem.local_grad(id, node.model(), spec.minibatch, &mut grad_rng, &mut grad);
-                    let mut qrng = Xoshiro256::for_site(spec.seed, 1 + id as u64, k as u64);
-                    let up = node.round(k, &grad, &mut qrng);
-                    write_frame(
-                        &mut sock,
-                        &Frame {
-                            kind: KIND_UPLINK,
-                            round: k as u32,
-                            worker: id as u32,
-                            residual: node.last_compressed_norm(),
-                            payload: codec::encode(&up),
-                        },
-                    )?;
-                    let down = read_frame(&mut sock)?;
-                    anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
-                    anyhow::ensure!(down.round == k as u32, "round skew");
-                    node.apply_downlink(k, &codec::decode(&down.payload)?);
-                }
-                Ok(())
-            },
-        )?);
-    }
-
-    // master: accept n connections, map them to worker ids via hello frames
-    let mut socks: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-    for _ in 0..n {
-        let (mut s, _) = listener.accept()?;
-        s.set_nodelay(true)?;
-        let hello = read_frame(&mut s)?;
-        anyhow::ensure!(hello.round == u32::MAX, "expected hello frame");
-        let id = hello.worker as usize;
-        anyhow::ensure!(id < n && socks[id].is_none(), "bad hello worker id");
-        socks[id] = Some(s);
-    }
-    let mut socks: Vec<TcpStream> = socks.into_iter().map(Option::unwrap).collect();
-
-    let sw = Stopwatch::start();
-    let mut metrics = RunMetrics::new(spec.algo.name());
+    addr: SocketAddr,
+) -> anyhow::Result<()> {
+    let mut sock = TcpStream::connect(addr)?;
+    sock.set_nodelay(true)?;
+    // identify ourselves once
+    write_frame(
+        &mut sock,
+        &Frame {
+            kind: KIND_UPLINK,
+            round: u32::MAX,
+            worker: id as u32,
+            residual: 0.0,
+            payload: vec![],
+        },
+    )?;
+    let mut grad = vec![0.0 as F; problem.dim()];
     for k in 0..spec.iters {
-        let mut uplinks = Vec::with_capacity(n);
-        let mut res_sum = 0.0;
-        for s in socks.iter_mut() {
-            let f = read_frame(s)?;
-            anyhow::ensure!(f.kind == KIND_UPLINK && f.round == k as u32, "protocol skew");
-            metrics.uplink_bits += f.payload.len() as u64 * 8;
-            res_sum += f.residual;
-            uplinks.push(codec::decode(&f.payload)?);
+        let (up, residual) =
+            worker_uplink(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad);
+        write_frame(
+            &mut sock,
+            &Frame {
+                kind: KIND_UPLINK,
+                round: k as u32,
+                worker: id as u32,
+                residual,
+                payload: codec::encode(&up),
+            },
+        )?;
+        let down = read_frame(&mut sock)?;
+        anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
+        anyhow::ensure!(down.round == k as u32, "round skew");
+        node.apply_downlink(k, &codec::decode(&down.payload)?);
+    }
+    Ok(())
+}
+
+/// Socket transport: binds an ephemeral localhost port, runs one OS thread
+/// per worker (each with its own socket) and drives the master side from
+/// the engine loop. Bit-identical iterates to every other transport.
+#[derive(Default)]
+pub struct TcpTransport {
+    socks: Vec<TcpStream>,
+    handles: Vec<JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TcpTransport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn start(
+        &mut self,
+        workers: Vec<Box<dyn WorkerNode>>,
+        shared_problem: Option<Arc<dyn Problem>>,
+        spec: &TrainSpec,
+    ) -> anyhow::Result<()> {
+        let problem = shared_problem.ok_or_else(|| {
+            anyhow::anyhow!(
+                "the tcp transport runs workers on their own threads and needs a shared \
+                 problem: build the session with Session::shared(Arc<dyn Problem>)"
+            )
+        })?;
+        let n = workers.len();
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+
+        for (id, node) in workers.into_iter().enumerate() {
+            let p = problem.clone();
+            let s = spec.clone();
+            self.handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dore-tcp-{id}"))
+                    .spawn(move || tcp_worker_loop(id, node, p, s, addr))?,
+            );
         }
-        let mut mrng = Xoshiro256::for_site(spec.seed, 0, k as u64);
-        let down = master.round(k, &uplinks, &mut mrng);
-        let bytes = codec::encode(&down);
-        metrics.downlink_bits += bytes.len() as u64 * 8 * n as u64;
-        for s in socks.iter_mut() {
+
+        // accept n connections, map them to worker ids via hello frames
+        let mut socks: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (mut s, _) = listener.accept()?;
+            s.set_nodelay(true)?;
+            let hello = read_frame(&mut s)?;
+            anyhow::ensure!(hello.round == u32::MAX, "expected hello frame");
+            let id = hello.worker as usize;
+            anyhow::ensure!(id < n && socks[id].is_none(), "bad hello worker id");
+            socks[id] = Some(s);
+        }
+        self.socks = socks.into_iter().map(|s| s.expect("accepted every id")).collect();
+        Ok(())
+    }
+
+    fn send_uplink(&mut self, _frame: UplinkFrame) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "tcp transport: uplinks originate on worker sockets; engine-side injection \
+             is not supported"
+        )
+    }
+
+    fn gather(&mut self, round: usize, _ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+        let mut frames = Vec::with_capacity(self.socks.len());
+        for (i, s) in self.socks.iter_mut().enumerate() {
+            let f = read_frame(s)?;
+            anyhow::ensure!(
+                f.kind == KIND_UPLINK && f.round == round as u32 && f.worker as usize == i,
+                "protocol skew on worker {i} at round {round}"
+            );
+            frames.push(UplinkFrame {
+                worker: i,
+                round,
+                payload: WirePayload::Encoded(f.payload),
+                residual_norm: f.residual,
+                compute_seconds: 0.0,
+            });
+        }
+        Ok(frames)
+    }
+
+    fn broadcast(
+        &mut self,
+        round: usize,
+        down: &Compressed,
+        _ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<u64> {
+        let bytes = codec::encode(down);
+        let bits = bytes.len() as u64 * 8;
+        for s in self.socks.iter_mut() {
             write_frame(
                 s,
                 &Frame {
                     kind: KIND_DOWNLINK,
-                    round: k as u32,
+                    round: round as u32,
                     worker: 0,
-                    residual: master.last_compressed_norm(),
+                    residual: 0.0,
                     payload: bytes.clone(),
                 },
             )?;
         }
-        if k % spec.eval_every == 0 || k + 1 == spec.iters {
-            let x = master.model();
-            metrics.rounds.push(k);
-            metrics.loss.push(problem.loss(x));
-            if let Some(xs) = problem.optimum() {
-                metrics.dist_to_opt.push(linalg::dist2(x, xs));
-            }
-            if let Some(tl) = problem.test_loss(x) {
-                metrics.test_loss.push(tl);
-            }
-            if let Some(ta) = problem.test_accuracy(x) {
-                metrics.test_acc.push(ta);
-            }
-            metrics.worker_residual_norm.push(res_sum / n as f64);
-            metrics.master_residual_norm.push(master.last_compressed_norm());
+        Ok(bits)
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.socks.clear();
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
         }
+        Ok(())
     }
-    metrics.total_rounds = spec.iters;
-    metrics.wall_seconds = sw.seconds();
-    for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
-    }
-    Ok(metrics)
+}
+
+/// Run a training job over localhost TCP.
+#[deprecated(
+    note = "use engine::Session::shared(problem).spec(spec).transport(TcpTransport::new()).run()"
+)]
+pub fn run_distributed_tcp(
+    problem: Arc<dyn Problem>,
+    spec: TrainSpec,
+) -> anyhow::Result<RunMetrics> {
+    Session::shared(problem).spec(spec).transport(TcpTransport::new()).run()
 }
 
 #[cfg(test)]
@@ -191,18 +244,37 @@ mod tests {
     use super::*;
     use crate::algorithms::AlgorithmKind;
     use crate::data::synth::linreg_problem;
-    use crate::harness::run_inproc;
+    use crate::engine::Threaded;
 
     #[test]
-    fn tcp_matches_inproc_bit_for_bit() {
+    fn tcp_matches_inproc_and_threaded_bit_for_bit() {
         let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
         for algo in [AlgorithmKind::Dore, AlgorithmKind::Diana] {
             let spec = TrainSpec { algo, iters: 20, eval_every: 5, ..Default::default() };
-            let a = run_inproc(p.as_ref(), &spec);
-            let b = run_distributed_tcp(p.clone(), spec).unwrap();
+            let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+            let b = Session::shared(p.clone())
+                .spec(spec.clone())
+                .transport(TcpTransport::new())
+                .run()
+                .unwrap();
+            let c = Session::shared(p.clone())
+                .spec(spec)
+                .transport(Threaded::new())
+                .run()
+                .unwrap();
             assert_eq!(a.loss, b.loss, "{}", algo.name());
             assert_eq!(a.dist_to_opt, b.dist_to_opt);
+            assert_eq!(b.loss, c.loss);
         }
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_tcp_shim_still_runs() {
+        let p = Arc::new(linreg_problem(60, 16, 2, 0.1, 4));
+        let spec = TrainSpec { iters: 5, eval_every: 2, ..Default::default() };
+        let m = run_distributed_tcp(p, spec).unwrap();
+        assert_eq!(m.total_rounds, 5);
     }
 
     #[test]

@@ -1,0 +1,65 @@
+//! The execution engine: **one** canonical synchronous-round loop behind a
+//! pluggable [`Transport`], driven through the [`Session`] builder.
+//!
+//! DORE's claim (and this repo's north star) is that the same double-residual
+//! state machines cut >95 % of traffic *regardless of how bytes move*. The
+//! engine makes that literal: RNG-site seeding, exact bit accounting, the
+//! eval cadence and metric emission live in exactly one place
+//! ([`Session::run`]), and the byte motion is abstracted behind
+//! [`Transport`]:
+//!
+//! * [`InProc`] — zero-copy, single-threaded: payloads never touch the
+//!   codec; bits are accounted analytically via
+//!   [`crate::compression::Compressed::wire_bits`].
+//! * [`Threaded`] — one OS thread per worker over std mpsc channels;
+//!   payloads cross as **real encoded wire bytes**
+//!   ([`crate::compression::codec`]), so accounting is the length of
+//!   buffers that actually moved. (No tokio in this offline environment;
+//!   for a barrier-synchronous PS the OS-thread semantics are identical.)
+//! * [`SimNet`] — inline execution composed with the [`crate::comm::NetSim`]
+//!   star-topology timing model, so Fig. 2 latency modeling rides along with
+//!   *real* training instead of living in a side formula
+//!   ([`crate::metrics::RunMetrics::simulated_seconds`]).
+//! * [`crate::coordinator::tcp::TcpTransport`] — the same engine over real
+//!   localhost sockets with a length-prefixed frame protocol.
+//!
+//! Every transport produces **bit-identical iterates** for every algorithm
+//! (`rust/tests/integration_engine.rs` asserts it for all seven), because
+//! the engine owns all stochastic sites and the codec round-trip is exact.
+//!
+//! Progress is emitted as events to [`Observer`]s; [`RunMetrics`] is itself
+//! an observer, so benches can attach custom sinks instead of post-hoc
+//! field picking.
+//!
+//! Algorithms and compressors are constructed through open registries
+//! ([`registry`], [`crate::compression::register_compressor`]): new schemes
+//! register at runtime without editing core files.
+//!
+//! ```no_run
+//! use dore::engine::Session;
+//! use dore::algorithms::{AlgorithmKind, HyperParams};
+//! use dore::data::synth;
+//!
+//! let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);
+//! let metrics = Session::new(&problem)
+//!     .algo(AlgorithmKind::Dore)
+//!     .hp(HyperParams { lr: 0.05, ..HyperParams::paper_defaults() })
+//!     .iters(1000)
+//!     .run()
+//!     .unwrap();
+//! println!("final loss gap {:.3e}", metrics.loss.last().unwrap());
+//! ```
+
+pub mod observer;
+pub mod protocol;
+pub mod registry;
+pub mod session;
+pub mod transport;
+
+pub use observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
+pub use session::{Session, TrainSpec};
+pub use transport::{
+    worker_uplink, InProc, RoundCtx, SimNet, Threaded, Transport, UplinkFrame, WirePayload,
+};
+
+pub use crate::metrics::RunMetrics;

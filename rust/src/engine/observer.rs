@@ -1,0 +1,156 @@
+//! Run-progress events and the [`Observer`] trait.
+//!
+//! The engine narrates a run as a stream of typed events: one
+//! [`RunInfo`] at start, a [`RoundEvent`] per synchronous round, an
+//! [`EvalEvent`] at every evaluation point, and a [`RunSummary`] at the
+//! end. [`crate::metrics::RunMetrics`] implements [`Observer`] and is how
+//! [`super::Session::run`] assembles its return value; benches and tools
+//! attach additional observers via [`super::Session::observer`] to stream
+//! series into custom sinks (CSV writers, live plots, budget guards)
+//! without re-running or post-hoc field picking.
+
+use crate::metrics::RunMetrics;
+
+/// Static facts about a run, emitted once before round 0.
+#[derive(Clone, Debug)]
+pub struct RunInfo<'a> {
+    /// Algorithm display name (e.g. `"DORE"`).
+    pub algo: &'a str,
+    /// Transport display name (e.g. `"inproc"`, `"threaded"`, `"simnet"`).
+    pub transport: &'static str,
+    pub n_workers: usize,
+    /// Model dimension `d`.
+    pub dim: usize,
+    /// Rounds that will be executed.
+    pub iters: usize,
+}
+
+/// Per-round accounting, emitted after every synchronous round.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundEvent {
+    pub round: usize,
+    /// Uplink bits moved this round, summed over workers.
+    pub uplink_bits: u64,
+    /// Downlink bits this round (broadcast counted once per worker).
+    pub downlink_bits: u64,
+    /// ‖variable fed to the worker-side compressor‖, averaged over workers.
+    pub worker_residual_norm: f64,
+    /// ‖variable fed to the master-side compressor‖.
+    pub master_residual_norm: f64,
+    /// Simulated clock after this round, for transports that model time
+    /// ([`super::SimNet`]); `None` on wall-clock-only transports.
+    pub simulated_seconds: Option<f64>,
+}
+
+/// Metric snapshot at an evaluation round (every `eval_every` rounds plus
+/// the final round).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalEvent {
+    pub round: usize,
+    /// Global training objective (optimality gap where the optimum is known).
+    pub loss: f64,
+    /// `‖x̂ − x*‖²` when the problem exposes its optimum.
+    pub dist_to_opt: Option<f64>,
+    pub test_loss: Option<f64>,
+    pub test_acc: Option<f64>,
+    pub worker_residual_norm: f64,
+    pub master_residual_norm: f64,
+}
+
+/// Final run accounting, emitted once after the last round.
+#[derive(Clone, Copy, Debug)]
+pub struct RunSummary {
+    pub total_rounds: usize,
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    pub wall_seconds: f64,
+    pub simulated_seconds: Option<f64>,
+}
+
+/// A sink for engine events. All methods default to no-ops so observers
+/// implement only what they consume.
+pub trait Observer: Send {
+    fn on_start(&mut self, _info: &RunInfo) {}
+    fn on_round(&mut self, _event: &RoundEvent) {}
+    fn on_eval(&mut self, _event: &EvalEvent) {}
+    fn on_finish(&mut self, _summary: &RunSummary) {}
+}
+
+/// [`RunMetrics`] collects the event stream into the series every paper
+/// figure plots. Bits accumulate per round; the summary stamps totals.
+impl Observer for RunMetrics {
+    fn on_start(&mut self, info: &RunInfo) {
+        if self.algo.is_empty() {
+            self.algo = info.algo.to_string();
+        }
+    }
+
+    fn on_round(&mut self, e: &RoundEvent) {
+        self.uplink_bits += e.uplink_bits;
+        self.downlink_bits += e.downlink_bits;
+    }
+
+    fn on_eval(&mut self, e: &EvalEvent) {
+        self.rounds.push(e.round);
+        self.loss.push(e.loss);
+        if let Some(d) = e.dist_to_opt {
+            self.dist_to_opt.push(d);
+        }
+        if let Some(tl) = e.test_loss {
+            self.test_loss.push(tl);
+        }
+        if let Some(ta) = e.test_acc {
+            self.test_acc.push(ta);
+        }
+        self.worker_residual_norm.push(e.worker_residual_norm);
+        self.master_residual_norm.push(e.master_residual_norm);
+    }
+
+    fn on_finish(&mut self, s: &RunSummary) {
+        self.total_rounds = s.total_rounds;
+        self.wall_seconds = s.wall_seconds;
+        self.simulated_seconds = s.simulated_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_metrics_collects_event_stream() {
+        let mut m = RunMetrics::new("X");
+        m.on_round(&RoundEvent {
+            round: 0,
+            uplink_bits: 100,
+            downlink_bits: 40,
+            worker_residual_norm: 1.0,
+            master_residual_norm: 0.5,
+            simulated_seconds: None,
+        });
+        m.on_eval(&EvalEvent {
+            round: 0,
+            loss: 2.0,
+            dist_to_opt: Some(3.0),
+            test_loss: None,
+            test_acc: None,
+            worker_residual_norm: 1.0,
+            master_residual_norm: 0.5,
+        });
+        m.on_finish(&RunSummary {
+            total_rounds: 1,
+            uplink_bits: 100,
+            downlink_bits: 40,
+            wall_seconds: 0.1,
+            simulated_seconds: Some(2.5),
+        });
+        assert_eq!(m.uplink_bits, 100);
+        assert_eq!(m.downlink_bits, 40);
+        assert_eq!(m.rounds, vec![0]);
+        assert_eq!(m.loss, vec![2.0]);
+        assert_eq!(m.dist_to_opt, vec![3.0]);
+        assert!(m.test_loss.is_empty());
+        assert_eq!(m.total_rounds, 1);
+        assert_eq!(m.simulated_seconds, Some(2.5));
+    }
+}

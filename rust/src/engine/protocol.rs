@@ -1,6 +1,9 @@
 //! Message types between workers and the master. Payloads are encoded wire
 //! bytes (see [`crate::compression::codec`]); the structs carry the minimal
-//! control metadata a real deployment would put in a frame header.
+//! control metadata a real deployment would put in a frame header. Used by
+//! the channel-backed [`super::Threaded`] transport; the TCP transport
+//! ([`crate::coordinator::tcp`]) serializes the same fields into its frame
+//! header.
 
 /// Worker → master, one per round per worker.
 #[derive(Clone, Debug)]

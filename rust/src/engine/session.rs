@@ -1,0 +1,349 @@
+//! The [`Session`] builder and the **one** canonical round loop.
+//!
+//! Everything a training run shares — RNG-site seeding, exact bit
+//! accounting, the eval cadence, metric/event emission — lives in
+//! [`Session::run`]. Transports only move bytes; observers only consume
+//! events. The deprecated entry points `harness::run_inproc` and
+//! `coordinator::run_distributed` are thin shims over this loop.
+
+use super::observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
+use super::registry;
+use super::transport::{InProc, RoundCtx, Transport};
+use crate::algorithms::{AlgorithmKind, HyperParams};
+use crate::compression::Xoshiro256;
+use crate::metrics::{RunMetrics, Stopwatch};
+use crate::models::{linalg, Problem};
+use std::sync::Arc;
+
+/// A training-run specification.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub algo: AlgorithmKind,
+    pub hp: HyperParams,
+    /// Number of synchronous rounds.
+    pub iters: usize,
+    /// Per-worker minibatch size; `None` = full local gradient (σ = 0).
+    pub minibatch: Option<usize>,
+    /// Evaluate metrics every this many rounds (loss evaluation can dwarf
+    /// the training work on small problems).
+    pub eval_every: usize,
+    /// Seed for all stochastic sites (sampling + quantization).
+    pub seed: u64,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        Self {
+            algo: AlgorithmKind::Dore,
+            hp: HyperParams::paper_defaults(),
+            iters: 500,
+            minibatch: None,
+            eval_every: 10,
+            seed: 42,
+        }
+    }
+}
+
+/// How the session holds its problem: borrowed (inline transports only) or
+/// shared behind an `Arc` (required by transports that run workers on other
+/// threads).
+enum ProblemRef<'p> {
+    Borrowed(&'p dyn Problem),
+    Shared(Arc<dyn Problem>),
+}
+
+impl ProblemRef<'_> {
+    fn get(&self) -> &dyn Problem {
+        match self {
+            ProblemRef::Borrowed(p) => *p,
+            ProblemRef::Shared(a) => a.as_ref(),
+        }
+    }
+
+    fn shared(&self) -> Option<Arc<dyn Problem>> {
+        match self {
+            ProblemRef::Borrowed(_) => None,
+            ProblemRef::Shared(a) => Some(a.clone()),
+        }
+    }
+}
+
+/// Builder for one training run:
+///
+/// ```no_run
+/// # fn main() -> anyhow::Result<()> {
+/// # use dore::engine::{Session, Threaded};
+/// # use dore::algorithms::{AlgorithmKind, HyperParams};
+/// # use dore::data::synth;
+/// # use std::sync::Arc;
+/// let problem = Arc::new(synth::linreg_problem(1200, 500, 20, 0.1, 42));
+/// let metrics = Session::shared(problem)
+///     .algo(AlgorithmKind::Dore)
+///     .hp(HyperParams::paper_defaults())
+///     .iters(1000)
+///     .eval_every(100)
+///     .transport(Threaded::new())
+///     .run()?;
+/// println!("final loss {:?}", metrics.loss.last());
+/// # Ok(())
+/// # }
+/// ```
+pub struct Session<'p> {
+    problem: ProblemRef<'p>,
+    spec: TrainSpec,
+    /// When set, the algorithm is resolved through the registry by this
+    /// name instead of `spec.algo` — the route for schemes registered at
+    /// runtime ([`registry::register_algorithm`]).
+    algo_name: Option<String>,
+    transport: Box<dyn Transport>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl<'p> Session<'p> {
+    /// Session over a borrowed problem. Inline transports ([`InProc`],
+    /// [`super::SimNet`]) only; thread/socket transports need
+    /// [`Session::shared`].
+    pub fn new(problem: &'p dyn Problem) -> Self {
+        Self {
+            problem: ProblemRef::Borrowed(problem),
+            spec: TrainSpec::default(),
+            algo_name: None,
+            transport: Box::new(InProc::new()),
+            observers: Vec::new(),
+        }
+    }
+
+    /// Session over a shared problem; works with every transport.
+    pub fn shared(problem: Arc<dyn Problem>) -> Session<'static> {
+        Session {
+            problem: ProblemRef::Shared(problem),
+            spec: TrainSpec::default(),
+            algo_name: None,
+            transport: Box::new(InProc::new()),
+            observers: Vec::new(),
+        }
+    }
+
+    pub fn algo(mut self, algo: AlgorithmKind) -> Self {
+        self.spec.algo = algo;
+        self.algo_name = None;
+        self
+    }
+
+    /// Select the algorithm by registry name or alias — the route for
+    /// schemes registered at runtime via
+    /// [`registry::register_algorithm`], which have no [`AlgorithmKind`].
+    pub fn algo_name(mut self, name: impl Into<String>) -> Self {
+        self.algo_name = Some(name.into());
+        self
+    }
+
+    pub fn hp(mut self, hp: HyperParams) -> Self {
+        self.spec.hp = hp;
+        self
+    }
+
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.spec.iters = iters;
+        self
+    }
+
+    pub fn minibatch(mut self, minibatch: Option<usize>) -> Self {
+        self.spec.minibatch = minibatch;
+        self
+    }
+
+    pub fn eval_every(mut self, eval_every: usize) -> Self {
+        self.spec.eval_every = eval_every;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.spec.seed = seed;
+        self
+    }
+
+    /// Replace the whole spec at once (migration aid for callers that
+    /// already assemble a [`TrainSpec`]). Like [`Session::algo`], this
+    /// resets any earlier [`Session::algo_name`] override — the spec's
+    /// `algo` wins.
+    pub fn spec(mut self, spec: TrainSpec) -> Self {
+        self.spec = spec;
+        self.algo_name = None;
+        self
+    }
+
+    /// Select the transport (default: [`InProc`]).
+    pub fn transport(mut self, transport: impl Transport + 'static) -> Self {
+        self.transport = Box::new(transport);
+        self
+    }
+
+    /// Attach an additional event sink (may be called repeatedly).
+    pub fn observer(mut self, observer: impl Observer + 'static) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Execute the run: the one synchronous-round loop every entry point in
+    /// the crate shares. Deterministic given `spec.seed` for every
+    /// transport; all transports yield bit-identical iterates.
+    pub fn run(self) -> anyhow::Result<RunMetrics> {
+        let Session { problem, spec, algo_name, mut transport, mut observers } = self;
+        let p = problem.get();
+        let n = p.n_workers();
+        let d = p.dim();
+        anyhow::ensure!(n > 0, "problem declares zero workers");
+        let eval_every = spec.eval_every.max(1);
+
+        let x0 = p.init();
+        let display = algo_name.as_deref().unwrap_or_else(|| spec.algo.name());
+        let (workers, mut master) = match &algo_name {
+            Some(name) => registry::build_by_name(name, n, &x0, &spec.hp)?,
+            None => registry::build_algorithm(spec.algo, n, &x0, &spec.hp)?,
+        };
+        transport.start(workers, problem.shared(), &spec)?;
+
+        let info = RunInfo {
+            algo: display,
+            transport: transport.name(),
+            n_workers: n,
+            dim: d,
+            iters: spec.iters,
+        };
+        let mut metrics = RunMetrics::new(display);
+        metrics.on_start(&info);
+        for o in observers.iter_mut() {
+            o.on_start(&info);
+        }
+
+        let sw = Stopwatch::start();
+        for k in 0..spec.iters {
+            // 1. workers: gradient at the local model → uplink (executed by
+            //    the transport, inline or on worker threads).
+            let frames = transport.gather(k, RoundCtx { problem: p, spec: &spec })?;
+            anyhow::ensure!(
+                frames.len() == n,
+                "transport returned {} uplinks for {n} workers",
+                frames.len()
+            );
+            let mut round_up_bits = 0u64;
+            let mut res_sum = 0.0f64;
+            let mut uplinks = Vec::with_capacity(n);
+            for (i, f) in frames.into_iter().enumerate() {
+                anyhow::ensure!(f.worker == i, "uplink frames out of worker order");
+                anyhow::ensure!(f.round == k, "round skew: engine at {k}, frame at {}", f.round);
+                round_up_bits += f.payload.wire_bits();
+                res_sum += f.residual_norm;
+                uplinks.push(f.payload.into_compressed()?);
+            }
+
+            // 2. master: aggregate → downlink broadcast (site 0 RNG).
+            let mut mrng = Xoshiro256::for_site(spec.seed, 0, k as u64);
+            let down = master.round(k, &uplinks, &mut mrng);
+
+            // 3. broadcast, received by every worker.
+            let bits_per_copy =
+                transport.broadcast(k, &down, RoundCtx { problem: p, spec: &spec })?;
+            let round_down_bits = n as u64 * bits_per_copy;
+
+            // 4. events + eval cadence.
+            let worker_res = res_sum / n as f64;
+            let master_res = master.last_compressed_norm();
+            let rev = RoundEvent {
+                round: k,
+                uplink_bits: round_up_bits,
+                downlink_bits: round_down_bits,
+                worker_residual_norm: worker_res,
+                master_residual_norm: master_res,
+                simulated_seconds: transport.simulated_seconds(),
+            };
+            metrics.on_round(&rev);
+            for o in observers.iter_mut() {
+                o.on_round(&rev);
+            }
+            if k % eval_every == 0 || k + 1 == spec.iters {
+                let x = master.model();
+                let eev = EvalEvent {
+                    round: k,
+                    loss: p.loss(x),
+                    dist_to_opt: p.optimum().map(|xs| linalg::dist2(x, xs)),
+                    test_loss: p.test_loss(x),
+                    test_acc: p.test_accuracy(x),
+                    worker_residual_norm: worker_res,
+                    master_residual_norm: master_res,
+                };
+                metrics.on_eval(&eev);
+                for o in observers.iter_mut() {
+                    o.on_eval(&eev);
+                }
+            }
+        }
+        transport.finish()?;
+
+        // metrics accumulated the per-round bits through its Observer impl;
+        // the summary reuses those totals rather than keeping a second
+        // accumulator that could drift from what observers saw.
+        let summary = RunSummary {
+            total_rounds: spec.iters,
+            uplink_bits: metrics.uplink_bits,
+            downlink_bits: metrics.downlink_bits,
+            wall_seconds: sw.seconds(),
+            simulated_seconds: transport.simulated_seconds(),
+        };
+        metrics.on_finish(&summary);
+        for o in observers.iter_mut() {
+            o.on_finish(&summary);
+        }
+        Ok(metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::linreg_problem;
+    use crate::engine::transport::{SimNet, Threaded};
+
+    #[test]
+    fn session_is_deterministic() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 50, eval_every: 10, ..Default::default() };
+        let a = Session::new(&p).spec(spec.clone()).run().unwrap();
+        let b = Session::new(&p).spec(spec).run().unwrap();
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+    }
+
+    #[test]
+    fn threaded_transport_requires_shared_problem() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let err = Session::new(&p)
+            .spec(TrainSpec { iters: 2, ..Default::default() })
+            .transport(Threaded::new())
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("Session::shared"), "{err}");
+    }
+
+    #[test]
+    fn simnet_advances_a_clock() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 20, eval_every: 5, ..Default::default() };
+        let m = Session::new(&p)
+            .spec(spec)
+            .transport(SimNet::with_bandwidth(1e6))
+            .run()
+            .unwrap();
+        let sim = m.simulated_seconds.expect("simnet reports a clock");
+        assert!(sim > 0.0, "clock did not advance: {sim}");
+    }
+
+    #[test]
+    fn zero_eval_every_is_clamped_not_a_panic() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 3, eval_every: 0, ..Default::default() };
+        let m = Session::new(&p).spec(spec).run().unwrap();
+        assert_eq!(m.rounds, vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,556 @@
+//! The [`Transport`] trait and its three in-tree implementations.
+//!
+//! A transport moves one round's payloads between the engine (which drives
+//! the master state machine) and the worker fleet. The engine only ever
+//! calls [`Transport::gather`] and [`Transport::broadcast`]; how the worker
+//! side executes — inline on the engine thread ([`InProc`], [`SimNet`]) or
+//! on its own OS threads ([`Threaded`], TCP) — is the transport's business.
+//! [`Transport::send_uplink`] is the worker→master data-plane entry point
+//! for inline transports and for future drivers that inject uplinks
+//! (partial participation, straggler simulation); thread/socket transports
+//! receive uplinks on their own channels instead.
+//!
+//! Worker-side round execution is the shared [`worker_uplink`] helper, so
+//! the RNG sites (gradient sampling and quantization) are seeded in exactly
+//! one place no matter which transport runs them.
+
+use super::protocol::{DownlinkMsg, UplinkMsg};
+use super::session::TrainSpec;
+use crate::algorithms::WorkerNode;
+use crate::comm::{LinkSpec, NetSim};
+use crate::compression::{codec, Compressed, Xoshiro256};
+use crate::models::Problem;
+use crate::F;
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A payload as it exists on a transport: either the in-memory
+/// representation (zero-copy transports, bits accounted analytically) or
+/// real encoded wire bytes (channel/socket transports, bits = buffer
+/// length).
+#[derive(Clone, Debug)]
+pub enum WirePayload {
+    /// Zero-copy: the payload itself; wire size is the exact analytic
+    /// [`Compressed::wire_bits`].
+    Inline(Compressed),
+    /// Encoded bytes as produced by [`codec::encode`]; wire size is the
+    /// length of the buffer that actually moved (differs from the analytic
+    /// count only by per-message byte padding).
+    Encoded(Vec<u8>),
+}
+
+impl WirePayload {
+    /// Exact wire size of this payload in bits.
+    pub fn wire_bits(&self) -> u64 {
+        match self {
+            WirePayload::Inline(c) => c.wire_bits(),
+            WirePayload::Encoded(b) => b.len() as u64 * 8,
+        }
+    }
+
+    /// Recover the in-memory payload (decoding if necessary; the codec
+    /// round-trip is exact for every payload type).
+    pub fn into_compressed(self) -> anyhow::Result<Compressed> {
+        match self {
+            WirePayload::Inline(c) => Ok(c),
+            WirePayload::Encoded(b) => codec::decode(&b),
+        }
+    }
+}
+
+/// One worker's uplink for one round.
+#[derive(Clone, Debug)]
+pub struct UplinkFrame {
+    pub worker: usize,
+    pub round: usize,
+    pub payload: WirePayload,
+    /// ‖variable fed to the worker-side compressor‖ (Fig. 6 diagnostic).
+    pub residual_norm: f64,
+    /// Measured seconds this worker spent on its gradient + compression
+    /// step. Filled by inline transports (the [`SimNet`] clock feeds the
+    /// *maximum* over workers — the straggler — into the star model, per
+    /// [`NetSim::round`]'s contract); thread/socket transports report 0.
+    pub compute_seconds: f64,
+}
+
+/// Borrowed per-round context the engine hands to transport calls, so
+/// transports that execute workers inline can reach the problem without
+/// owning it (which would force problem lifetimes into `Box<dyn Transport>`).
+#[derive(Clone, Copy)]
+pub struct RoundCtx<'a> {
+    pub problem: &'a dyn Problem,
+    pub spec: &'a TrainSpec,
+}
+
+/// How bytes move between the engine and the worker fleet.
+pub trait Transport: Send {
+    /// Display name (shown in [`super::RunInfo`] and CLI summaries).
+    fn name(&self) -> &'static str;
+
+    /// Take ownership of the worker fleet before round 0. `shared_problem`
+    /// is `Some` when the session holds the problem behind an `Arc`
+    /// ([`super::Session::shared`]); transports that run workers on other
+    /// threads require it.
+    fn start(
+        &mut self,
+        workers: Vec<Box<dyn WorkerNode>>,
+        shared_problem: Option<Arc<dyn Problem>>,
+        spec: &TrainSpec,
+    ) -> anyhow::Result<()>;
+
+    /// Worker → master: submit one uplink frame. Inline transports route
+    /// their own worker steps through this; injection-style drivers may call
+    /// it externally. Transports whose workers push from other threads
+    /// (channels, sockets) reject it.
+    fn send_uplink(&mut self, frame: UplinkFrame) -> anyhow::Result<()>;
+
+    /// Master barrier: return every worker's round-`round` uplink, ordered
+    /// by worker id. Inline transports execute the worker steps here.
+    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>>;
+
+    /// Master → workers: broadcast the downlink and (for inline transports)
+    /// apply it. Returns the wire bits of one broadcast copy — the engine
+    /// multiplies by the worker count for accounting, matching the star
+    /// topology where every worker receives the payload.
+    fn broadcast(
+        &mut self,
+        round: usize,
+        down: &Compressed,
+        ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<u64>;
+
+    /// Tear down after the final round (join worker threads, close sockets).
+    fn finish(&mut self) -> anyhow::Result<()>;
+
+    /// Simulated clock, for transports that model network time.
+    fn simulated_seconds(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// One worker-side round step, shared by every transport so the stochastic
+/// sites are seeded in exactly one place:
+///
+/// * gradient sampling: `Xoshiro256::for_site(seed ^ 0x5eed, 1 + i, k)`
+/// * quantization:      `Xoshiro256::for_site(seed,          1 + i, k)`
+///
+/// (site 0 is the master's, seeded by the engine loop). Returns the uplink
+/// payload and the worker's compressed-variable norm.
+pub fn worker_uplink(
+    node: &mut dyn WorkerNode,
+    problem: &dyn Problem,
+    spec: &TrainSpec,
+    round: usize,
+    worker: usize,
+    grad: &mut [F],
+) -> (Compressed, f64) {
+    let mut grad_rng =
+        Xoshiro256::for_site(spec.seed ^ 0x5eed, 1 + worker as u64, round as u64);
+    problem.local_grad(worker, node.model(), spec.minibatch, &mut grad_rng, grad);
+    let mut qrng = Xoshiro256::for_site(spec.seed, 1 + worker as u64, round as u64);
+    let up = node.round(round, grad, &mut qrng);
+    let residual_norm = node.last_compressed_norm();
+    (up, residual_norm)
+}
+
+// ---------------------------------------------------------------------------
+// InProc: zero-copy, single-threaded.
+// ---------------------------------------------------------------------------
+
+/// Zero-copy transport: workers execute inline on the engine thread and
+/// payloads never touch the codec. The fastest path, and the reference the
+/// other transports are tested bit-for-bit against.
+#[derive(Default)]
+pub struct InProc {
+    workers: Vec<Box<dyn WorkerNode>>,
+    grad: Vec<F>,
+    pending: Vec<UplinkFrame>,
+}
+
+impl InProc {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for InProc {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn start(
+        &mut self,
+        workers: Vec<Box<dyn WorkerNode>>,
+        _shared_problem: Option<Arc<dyn Problem>>,
+        _spec: &TrainSpec,
+    ) -> anyhow::Result<()> {
+        self.workers = workers;
+        Ok(())
+    }
+
+    /// Queue a frame that stands in for that worker's next computed uplink:
+    /// at the next [`Transport::gather`], an injected frame suppresses the
+    /// worker's own round step (its state does not advance) — the hook for
+    /// partial-participation / stale-worker / replay drivers.
+    fn send_uplink(&mut self, frame: UplinkFrame) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            frame.worker < self.workers.len(),
+            "injected uplink for unknown worker {}",
+            frame.worker
+        );
+        self.pending.push(frame);
+        Ok(())
+    }
+
+    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+        let d = ctx.problem.dim();
+        if self.grad.len() != d {
+            self.grad = vec![0.0; d];
+        }
+        let mut injected: Vec<Option<UplinkFrame>> =
+            (0..self.workers.len()).map(|_| None).collect();
+        for f in std::mem::take(&mut self.pending) {
+            injected[f.worker] = Some(f);
+        }
+        let mut frames = Vec::with_capacity(self.workers.len());
+        for (i, node) in self.workers.iter_mut().enumerate() {
+            frames.push(match injected[i].take() {
+                Some(f) => f,
+                None => {
+                    let t0 = std::time::Instant::now();
+                    let (up, residual_norm) = worker_uplink(
+                        node.as_mut(),
+                        ctx.problem,
+                        ctx.spec,
+                        round,
+                        i,
+                        &mut self.grad,
+                    );
+                    UplinkFrame {
+                        worker: i,
+                        round,
+                        payload: WirePayload::Inline(up),
+                        residual_norm,
+                        compute_seconds: t0.elapsed().as_secs_f64(),
+                    }
+                }
+            });
+        }
+        Ok(frames)
+    }
+
+    fn broadcast(
+        &mut self,
+        round: usize,
+        down: &Compressed,
+        _ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<u64> {
+        for node in self.workers.iter_mut() {
+            node.apply_downlink(round, down);
+        }
+        Ok(down.wire_bits())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Threaded: one OS thread per worker over std mpsc channels.
+// ---------------------------------------------------------------------------
+
+/// Channel transport: one master-side engine plus one OS thread per worker,
+/// payloads crossing as real encoded wire bytes. The deployment shape of a
+/// parameter server, minus the sockets (see
+/// [`crate::coordinator::tcp::TcpTransport`] for those).
+#[derive(Default)]
+pub struct Threaded {
+    n: usize,
+    up_rx: Option<Receiver<UplinkMsg>>,
+    down_txs: Vec<SyncSender<DownlinkMsg>>,
+    handles: Vec<JoinHandle<anyhow::Result<()>>>,
+}
+
+impl Threaded {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+fn threaded_worker_loop(
+    id: usize,
+    mut node: Box<dyn WorkerNode>,
+    problem: Arc<dyn Problem>,
+    spec: TrainSpec,
+    to_master: Sender<UplinkMsg>,
+    from_master: Receiver<DownlinkMsg>,
+) -> anyhow::Result<()> {
+    let mut grad = vec![0.0 as F; problem.dim()];
+    for k in 0..spec.iters {
+        let (up, residual_norm) =
+            worker_uplink(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad);
+        let bytes = codec::encode(&up);
+        to_master
+            .send(UplinkMsg { worker: id, round: k, bytes, residual_norm })
+            .map_err(|_| anyhow::anyhow!("master hung up"))?;
+        let down = from_master
+            .recv()
+            .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
+        anyhow::ensure!(down.round == k, "round skew: worker {k} got {}", down.round);
+        let payload = codec::decode(&down.bytes)?;
+        node.apply_downlink(k, &payload);
+    }
+    Ok(())
+}
+
+impl Transport for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn start(
+        &mut self,
+        workers: Vec<Box<dyn WorkerNode>>,
+        shared_problem: Option<Arc<dyn Problem>>,
+        spec: &TrainSpec,
+    ) -> anyhow::Result<()> {
+        let problem = shared_problem.ok_or_else(|| {
+            anyhow::anyhow!(
+                "the threaded transport runs workers on their own threads and needs a \
+                 shared problem: build the session with Session::shared(Arc<dyn Problem>)"
+            )
+        })?;
+        self.n = workers.len();
+        let (up_tx, up_rx) = std::sync::mpsc::channel::<UplinkMsg>();
+        for (id, node) in workers.into_iter().enumerate() {
+            // depth-1 sync channel: one in-flight round per link, which is
+            // all the barrier-synchronous algorithms ever need.
+            let (dtx, drx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(1);
+            self.down_txs.push(dtx);
+            let tx = up_tx.clone();
+            let p = problem.clone();
+            let s = spec.clone();
+            self.handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dore-worker-{id}"))
+                    .spawn(move || threaded_worker_loop(id, node, p, s, tx, drx))?,
+            );
+        }
+        // keep no sender on the engine side: gather must observe
+        // disconnection if the whole fleet dies.
+        drop(up_tx);
+        self.up_rx = Some(up_rx);
+        Ok(())
+    }
+
+    fn send_uplink(&mut self, _frame: UplinkFrame) -> anyhow::Result<()> {
+        anyhow::bail!(
+            "threaded transport: uplinks originate on worker threads; \
+             engine-side injection is not supported"
+        )
+    }
+
+    fn gather(&mut self, round: usize, _ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+        let rx = self
+            .up_rx
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("transport not started"))?;
+        let mut slots: Vec<Option<UplinkMsg>> = (0..self.n).map(|_| None).collect();
+        let mut got = 0;
+        while got < self.n {
+            let msg = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("all workers hung up"))?;
+            anyhow::ensure!(msg.round == round, "round skew: master {round} got {}", msg.round);
+            anyhow::ensure!(msg.worker < self.n, "bogus worker id {}", msg.worker);
+            anyhow::ensure!(slots[msg.worker].is_none(), "duplicate uplink");
+            let w = msg.worker;
+            slots[w] = Some(msg);
+            got += 1;
+        }
+        Ok(slots
+            .into_iter()
+            .map(|s| {
+                let m = s.expect("barrier counted every slot");
+                UplinkFrame {
+                    worker: m.worker,
+                    round: m.round,
+                    payload: WirePayload::Encoded(m.bytes),
+                    residual_norm: m.residual_norm,
+                    compute_seconds: 0.0,
+                }
+            })
+            .collect())
+    }
+
+    fn broadcast(
+        &mut self,
+        round: usize,
+        down: &Compressed,
+        _ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<u64> {
+        let bytes = codec::encode(down);
+        let bits = bytes.len() as u64 * 8;
+        for tx in &self.down_txs {
+            tx.send(DownlinkMsg { round, bytes: bytes.clone() })
+                .map_err(|_| anyhow::anyhow!("worker hung up"))?;
+        }
+        Ok(bits)
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.down_txs.clear();
+        self.up_rx = None;
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("worker thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SimNet: inline execution + the Fig. 2 network timing model.
+// ---------------------------------------------------------------------------
+
+/// Inline transport composed with the [`NetSim`] star-topology timing model:
+/// real training, simulated wall-clock. Each round advances the clock by
+/// `compute + gather + broadcast`, where the transfer terms are exact
+/// deterministic functions of the **measured** payload bits of that round —
+/// Fig. 2's latency model riding along with an actual run instead of a side
+/// formula — and the compute term is the measured *straggler* step time
+/// (max per-worker seconds, the quantity [`NetSim::round`] expects), so it
+/// tracks real compute and varies run-to-run the way wall time does. The
+/// clock is exposed via [`Transport::simulated_seconds`] and lands in
+/// [`crate::metrics::RunMetrics::simulated_seconds`].
+pub struct SimNet {
+    inner: InProc,
+    link: LinkSpec,
+    net: Option<NetSim>,
+    /// Measured worker+master compute seconds of the round in flight.
+    round_compute_s: f64,
+    /// Largest per-worker uplink of the round in flight (the straggler the
+    /// barrier waits for).
+    round_uplink_bits: u64,
+}
+
+impl SimNet {
+    pub fn new(link: LinkSpec) -> Self {
+        Self {
+            inner: InProc::new(),
+            link,
+            net: None,
+            round_compute_s: 0.0,
+            round_uplink_bits: 0,
+        }
+    }
+
+    /// Gigabit Ethernet, the paper's testbed link.
+    pub fn gigabit() -> Self {
+        Self::new(LinkSpec::gigabit())
+    }
+
+    pub fn with_bandwidth(bps: f64) -> Self {
+        Self::new(LinkSpec::with_bandwidth(bps))
+    }
+}
+
+impl Transport for SimNet {
+    fn name(&self) -> &'static str {
+        "simnet"
+    }
+
+    fn start(
+        &mut self,
+        workers: Vec<Box<dyn WorkerNode>>,
+        shared_problem: Option<Arc<dyn Problem>>,
+        spec: &TrainSpec,
+    ) -> anyhow::Result<()> {
+        let n = workers.len();
+        self.net = Some(NetSim::new(self.link, n));
+        self.inner.start(workers, shared_problem, spec)
+    }
+
+    fn send_uplink(&mut self, frame: UplinkFrame) -> anyhow::Result<()> {
+        self.inner.send_uplink(frame)
+    }
+
+    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+        let frames = self.inner.gather(round, ctx)?;
+        self.round_uplink_bits = frames.iter().map(|f| f.payload.wire_bits()).max().unwrap_or(0);
+        // the barrier waits for the slowest worker, not the sum of all of
+        // them — the inline loop runs workers sequentially, so take the max
+        // of the per-worker measurements rather than the loop's wall time.
+        self.round_compute_s =
+            frames.iter().map(|f| f.compute_seconds).fold(0.0, f64::max);
+        Ok(frames)
+    }
+
+    fn broadcast(
+        &mut self,
+        round: usize,
+        down: &Compressed,
+        ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<u64> {
+        let t0 = std::time::Instant::now();
+        let bits = self.inner.broadcast(round, down, ctx)?;
+        let net = self.net.as_mut().expect("started before broadcast");
+        // per-node downlink-apply cost: the inline loop applies all n
+        // sequentially, a real node pays 1/n of that.
+        self.round_compute_s += t0.elapsed().as_secs_f64() / net.n_workers.max(1) as f64;
+        net.round(self.round_uplink_bits, bits, self.round_compute_s);
+        Ok(bits)
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.inner.finish()
+    }
+
+    fn simulated_seconds(&self) -> Option<f64> {
+        self.net.as_ref().map(|n| n.clock_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::AlgorithmKind;
+    use crate::data::synth::linreg_problem;
+    use crate::engine::registry;
+
+    #[test]
+    fn inproc_injected_uplink_replaces_worker_step() {
+        let p = linreg_problem(40, 8, 2, 0.1, 3);
+        let spec = TrainSpec { algo: AlgorithmKind::Sgd, iters: 1, ..Default::default() };
+        let x0 = p.init();
+        let (workers, _master) =
+            registry::build_algorithm(AlgorithmKind::Sgd, 2, &x0, &spec.hp).unwrap();
+        let mut t = InProc::new();
+        t.start(workers, None, &spec).unwrap();
+        t.send_uplink(UplinkFrame {
+            worker: 1,
+            round: 0,
+            payload: WirePayload::Inline(Compressed::Dense(vec![0.0; 8])),
+            residual_norm: 9.0,
+            compute_seconds: 0.0,
+        })
+        .unwrap();
+        let frames = t.gather(0, RoundCtx { problem: &p, spec: &spec }).unwrap();
+        assert_eq!(frames.len(), 2);
+        // worker 0 computed its own uplink; worker 1's was the injected one
+        assert_ne!(frames[0].residual_norm, 9.0);
+        assert_eq!(frames[1].residual_norm, 9.0);
+        // dense payload: 40-bit header + 8 × 32-bit coords
+        assert_eq!(frames[1].payload.wire_bits(), 40 + 8 * 32);
+        // injecting for a worker that doesn't exist is rejected up front
+        let bad = UplinkFrame {
+            worker: 7,
+            round: 0,
+            payload: WirePayload::Encoded(vec![]),
+            residual_norm: 0.0,
+            compute_seconds: 0.0,
+        };
+        assert!(t.send_uplink(bad).is_err());
+    }
+}

@@ -1,102 +1,35 @@
-//! Experiment harness: drives the algorithm state machines over a
-//! [`Problem`] with exact bit accounting, producing the series every paper
-//! figure plots. Shared by the benches, the examples and the CLI; the
-//! tokio coordinator ([`crate::coordinator`]) runs the *same* state
-//! machines over real channels.
+//! Legacy experiment-harness entry points, now thin shims over the round
+//! engine ([`crate::engine`]), plus the Fig. 2 round-characterization
+//! helpers that don't need a full training loop.
+//!
+//! The round loop that used to live here — RNG sites, bit accounting, eval
+//! cadence — is [`crate::engine::Session::run`]; `run_inproc` survives as a
+//! deprecated delegating wrapper so old callers keep compiling while they
+//! migrate to the builder:
+//!
+//! ```text
+//! run_inproc(&problem, &spec)
+//!   ⇢ Session::new(&problem).spec(spec).run()
+//! ```
 
 use crate::algorithms::{build, AlgorithmKind, HyperParams};
-use crate::comm::{LinkSpec, NetSim, TrafficStats};
+use crate::comm::{LinkSpec, NetSim};
 use crate::compression::Xoshiro256;
+use crate::engine::Session;
 use crate::metrics::{RunMetrics, Stopwatch};
-use crate::models::{linalg, Problem};
 use crate::F;
 
-/// A training-run specification.
-#[derive(Clone, Debug)]
-pub struct TrainSpec {
-    pub algo: AlgorithmKind,
-    pub hp: HyperParams,
-    /// Number of synchronous rounds.
-    pub iters: usize,
-    /// Per-worker minibatch size; `None` = full local gradient (σ = 0).
-    pub minibatch: Option<usize>,
-    /// Evaluate metrics every this many rounds (loss evaluation can dwarf
-    /// the training work on small problems).
-    pub eval_every: usize,
-    /// Seed for all stochastic sites (sampling + quantization).
-    pub seed: u64,
-}
-
-impl Default for TrainSpec {
-    fn default() -> Self {
-        Self {
-            algo: AlgorithmKind::Dore,
-            hp: HyperParams::paper_defaults(),
-            iters: 500,
-            minibatch: None,
-            eval_every: 10,
-            seed: 42,
-        }
-    }
-}
+pub use crate::engine::TrainSpec;
+use crate::models::Problem;
 
 /// Run one algorithm on one problem, in-process (no transport), collecting
 /// the full metric series. Deterministic given `spec.seed`.
+#[deprecated(note = "use engine::Session::new(problem).spec(spec).run()")]
 pub fn run_inproc(problem: &dyn Problem, spec: &TrainSpec) -> RunMetrics {
-    let sw = Stopwatch::start();
-    let n = problem.n_workers();
-    let d = problem.dim();
-    let x0 = problem.init();
-    let (mut workers, mut master) =
-        build(spec.algo, n, &x0, &spec.hp).expect("algorithm construction");
-    let mut metrics = RunMetrics::new(spec.algo.name());
-    let mut grad = vec![0.0 as F; d];
-    let mut traffic = TrafficStats::default();
-
-    for k in 0..spec.iters {
-        // 1. workers: gradient at local model → uplink
-        let mut uplinks = Vec::with_capacity(n);
-        for (i, w) in workers.iter_mut().enumerate() {
-            let mut grad_rng = Xoshiro256::for_site(spec.seed ^ 0x5eed, 1 + i as u64, k as u64);
-            problem.local_grad(i, w.model(), spec.minibatch, &mut grad_rng, &mut grad);
-            let mut qrng = Xoshiro256::for_site(spec.seed, 1 + i as u64, k as u64);
-            let up = w.round(k, &grad, &mut qrng);
-            traffic.record_uplink(up.wire_bits());
-            uplinks.push(up);
-        }
-        // 2. master: aggregate → downlink broadcast
-        let mut mrng = Xoshiro256::for_site(spec.seed, 0, k as u64);
-        let down = master.round(k, &uplinks, &mut mrng);
-        // the broadcast is received by every worker
-        traffic.record_downlink(n as u64 * down.wire_bits());
-        // 3. workers apply
-        for w in workers.iter_mut() {
-            w.apply_downlink(k, &down);
-        }
-        // 4. metrics
-        if k % spec.eval_every == 0 || k + 1 == spec.iters {
-            let x = master.model();
-            metrics.rounds.push(k);
-            metrics.loss.push(problem.loss(x));
-            if let Some(xs) = problem.optimum() {
-                metrics.dist_to_opt.push(linalg::dist2(x, xs));
-            }
-            if let Some(tl) = problem.test_loss(x) {
-                metrics.test_loss.push(tl);
-            }
-            if let Some(ta) = problem.test_accuracy(x) {
-                metrics.test_acc.push(ta);
-            }
-            let wres = workers.iter().map(|w| w.last_compressed_norm()).sum::<f64>() / n as f64;
-            metrics.worker_residual_norm.push(wres);
-            metrics.master_residual_norm.push(master.last_compressed_norm());
-        }
-    }
-    metrics.uplink_bits = traffic.uplink_bits;
-    metrics.downlink_bits = traffic.downlink_bits;
-    metrics.total_rounds = spec.iters;
-    metrics.wall_seconds = sw.seconds();
-    metrics
+    Session::new(problem)
+        .spec(spec.clone())
+        .run()
+        .expect("in-process session cannot fail on a well-formed spec")
 }
 
 /// Run every algorithm in `kinds` with the same spec template; returns
@@ -110,14 +43,20 @@ pub fn compare(
         .iter()
         .map(|&k| {
             let spec = TrainSpec { algo: k, ..template.clone() };
-            (k, run_inproc(problem, &spec))
+            let m = Session::new(problem)
+                .spec(spec)
+                .run()
+                .expect("in-process session cannot fail on a well-formed spec");
+            (k, m)
         })
         .collect()
 }
 
 /// Fig. 2 model: measured per-round uplink/downlink bits + measured compute
 /// time, pushed through the [`NetSim`] star model at a given bandwidth.
-/// Returns simulated seconds per iteration.
+/// Returns simulated seconds per iteration. (For the composed variant —
+/// latency model riding along with real training — use the
+/// [`crate::engine::SimNet`] transport.)
 pub fn simulated_iteration_time(
     bits_up_per_worker: u64,
     bits_down_broadcast: u64,
@@ -176,14 +115,18 @@ mod tests {
     use super::*;
     use crate::data::synth::linreg_problem;
 
+    /// The deprecated shim must stay bit-identical to the engine it wraps.
     #[test]
-    fn run_is_deterministic() {
+    #[allow(deprecated)]
+    fn run_inproc_shim_matches_session() {
         let p = linreg_problem(60, 10, 3, 0.1, 5);
         let spec = TrainSpec { iters: 50, eval_every: 10, ..Default::default() };
         let a = run_inproc(&p, &spec);
-        let b = run_inproc(&p, &spec);
+        let b = Session::new(&p).spec(spec).run().unwrap();
         assert_eq!(a.loss, b.loss);
+        assert_eq!(a.dist_to_opt, b.dist_to_opt);
         assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.downlink_bits, b.downlink_bits);
     }
 
     #[test]
@@ -197,7 +140,7 @@ mod tests {
                 eval_every: 50,
                 ..Default::default()
             };
-            let m = run_inproc(&p, &spec);
+            let m = Session::new(&p).spec(spec).run().unwrap();
             let first = m.loss.first().copied().unwrap();
             let last = m.loss.last().copied().unwrap();
             assert!(
@@ -212,8 +155,14 @@ mod tests {
     fn dore_uses_far_fewer_bits_than_sgd() {
         let p = linreg_problem(60, 40, 3, 0.1, 2);
         let spec = TrainSpec { iters: 20, eval_every: 5, ..Default::default() };
-        let sgd = run_inproc(&p, &TrainSpec { algo: AlgorithmKind::Sgd, ..spec.clone() });
-        let dore = run_inproc(&p, &TrainSpec { algo: AlgorithmKind::Dore, ..spec });
+        let sgd = Session::new(&p)
+            .spec(TrainSpec { algo: AlgorithmKind::Sgd, ..spec.clone() })
+            .run()
+            .unwrap();
+        let dore = Session::new(&p)
+            .spec(TrainSpec { algo: AlgorithmKind::Dore, ..spec })
+            .run()
+            .unwrap();
         // >90% saving even at this tiny dim (block 40 via spec default 256→one block)
         assert!(
             (dore.total_bits() as f64) < 0.2 * sgd.total_bits() as f64,

@@ -5,11 +5,16 @@
 //!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
 //!
-//! * **L3 (this crate)** — a tokio parameter-server runtime: one master,
-//!   `n` workers, a byte-accurate simulated network, seven distributed SGD
-//!   algorithms (P-SGD, QSGD, MEM-SGD, DIANA, DoubleSqueeze,
-//!   DoubleSqueeze-topk, DORE) expressed as transport-independent state
-//!   machines, wire codecs with bit-exact accounting, metrics and a CLI.
+//! * **L3 (this crate)** — a single round engine ([`engine::Session`])
+//!   behind pluggable transports (in-process zero-copy, OS-thread channels,
+//!   a deterministic simulated network, localhost TCP sockets — the worker
+//!   runtime is OS threads, not tokio: this offline environment has no
+//!   tokio crate, and for a barrier-synchronous PS with a handful of nodes
+//!   the semantics are identical). Seven distributed SGD algorithms (P-SGD,
+//!   QSGD, MEM-SGD, DIANA, DoubleSqueeze, DoubleSqueeze-topk, DORE)
+//!   expressed as transport-independent state machines, constructed through
+//!   open registries, with wire codecs, bit-exact accounting, observer-based
+//!   metrics and a CLI.
 //! * **L2 (python/compile, build time only)** — JAX loss/gradient graphs
 //!   (linear regression, MLP classifier, transformer LM) lowered once to
 //!   HLO text under `artifacts/`.
@@ -24,20 +29,41 @@
 //!
 //! ```no_run
 //! use dore::algorithms::{AlgorithmKind, HyperParams};
-//! use dore::harness::{TrainSpec, run_inproc};
-//! use dore::models::linreg::LinReg;
-//! use dore::data::synth::linreg_problem;
+//! use dore::engine::Session;
+//! use dore::data::synth;
 //!
-//! let problem = linreg_problem(1200, 500, 20, 0.1, 42);
-//! let spec = TrainSpec {
-//!     algo: AlgorithmKind::Dore,
-//!     hp: HyperParams { lr: 0.05, ..HyperParams::paper_defaults() },
-//!     iters: 1000,
-//!     ..TrainSpec::default()
-//! };
-//! let out = run_inproc(&problem, &spec);
+//! let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);
+//! let out = Session::new(&problem)
+//!     .algo(AlgorithmKind::Dore)
+//!     .hp(HyperParams { lr: 0.05, ..HyperParams::paper_defaults() })
+//!     .iters(1000)
+//!     .run()
+//!     .unwrap();
 //! println!("final loss gap {:.3e}", out.loss.last().unwrap());
 //! ```
+//!
+//! To change how bytes move, swap the transport; with the same spec, every
+//! transport yields bit-identical iterates:
+//!
+//! ```no_run
+//! # use dore::engine::{Session, Threaded, TrainSpec};
+//! # use dore::data::synth;
+//! # use std::sync::Arc;
+//! let spec = TrainSpec { iters: 1000, ..TrainSpec::default() };
+//! let problem = synth::linreg_problem(1200, 500, 20, 0.1, 42);
+//! let inproc = Session::new(&problem).spec(spec.clone()).run().unwrap();
+//! let shared = Arc::new(synth::linreg_problem(1200, 500, 20, 0.1, 42));
+//! let threaded = Session::shared(shared)
+//!     .spec(spec)
+//!     .transport(Threaded::new())
+//!     .run()
+//!     .unwrap();
+//! assert_eq!(inproc.loss, threaded.loss);
+//! ```
+//!
+//! The pre-engine entry points (`harness::run_inproc`,
+//! `coordinator::run_distributed`) remain as deprecated shims delegating to
+//! the session.
 
 pub mod algorithms;
 pub mod comm;
@@ -45,6 +71,7 @@ pub mod compression;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod engine;
 pub mod harness;
 pub mod metrics;
 pub mod models;

@@ -13,8 +13,10 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::config::{parse_prox, parse_schedule, JobConfig, ProblemConfig};
+use dore::coordinator::tcp::TcpTransport;
 use dore::data::synth;
-use dore::harness::{characterize_round, compare, run_inproc, simulated_iteration_time, TrainSpec};
+use dore::engine::{Session, SimNet, Threaded, TrainSpec};
+use dore::harness::{characterize_round, compare, simulated_iteration_time};
 use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
 use dore::runtime::lm::TransformerLm;
@@ -127,6 +129,10 @@ fn print_run_summary(m: &dore::metrics::RunMetrics, workers: usize) {
         m.bits_per_round_per_worker(workers),
         m.total_bits() as f64 / 8e6,
     );
+    if let Some(sim) = m.simulated_seconds {
+        let per_round = sim / m.total_rounds.max(1) as f64;
+        println!("simulated network time: {sim:.3}s ({per_round:.4} s/round)");
+    }
     if let Some(rho) = m.empirical_rate(1e-9) {
         println!("empirical per-round contraction rho = {rho:.5}");
     }
@@ -136,7 +142,8 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
   train      --config job.json | --problem P --algorithm A --lr F --iters N
              [--alpha F --beta F --eta F --compressor SPEC --prox SPEC
               --schedule SPEC --workers N --minibatch N --eval-every N
-              --seed N --distributed --csv FILE]
+              --seed N --transport inproc|threads|tcp|simnet
+              [--bandwidth BPS] --distributed --csv FILE]
   compare    --problem P --lr F --workers N --iters N [--minibatch N --seed N]
   bandwidth  [--dim N --workers N --compute SECS]
   artifacts  [--dir DIR]";
@@ -185,18 +192,24 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
         (prob, spec)
     };
     let n = prob.n_workers();
-    // --transport inproc (default) | threads | tcp — all three produce
-    // bit-identical iterates; they differ only in what carries the bytes.
+    // --transport inproc (default) | threads | tcp | simnet — all produce
+    // bit-identical iterates; they differ only in what carries the bytes
+    // (and, for simnet, in also advancing a modelled network clock).
     let transport = f.get("transport").unwrap_or(if f.flag("distributed") {
         "threads"
     } else {
         "inproc"
     });
+    let session = Session::shared(prob).spec(spec);
     let metrics = match transport {
-        "inproc" => run_inproc(prob.as_ref(), &spec),
-        "threads" => dore::coordinator::run_distributed(prob, spec)?,
-        "tcp" => dore::coordinator::tcp::run_distributed_tcp(prob, spec)?,
-        other => anyhow::bail!("unknown transport '{other}' (inproc|threads|tcp)"),
+        "inproc" => session.run()?,
+        "threads" => session.transport(Threaded::new()).run()?,
+        "tcp" => session.transport(TcpTransport::new()).run()?,
+        "simnet" => {
+            let bw: f64 = f.num("bandwidth", 1e9)?;
+            session.transport(SimNet::with_bandwidth(bw)).run()?
+        }
+        other => anyhow::bail!("unknown transport '{other}' (inproc|threads|tcp|simnet)"),
     };
     print_run_summary(&metrics, n);
     if let Some(path) = f.get("csv") {

@@ -33,6 +33,9 @@ pub struct RunMetrics {
     pub total_rounds: usize,
     /// Wall-clock seconds of the whole run.
     pub wall_seconds: f64,
+    /// Simulated seconds, when the run used a time-modelling transport
+    /// ([`crate::engine::SimNet`]); `None` otherwise.
+    pub simulated_seconds: Option<f64>,
 }
 
 impl RunMetrics {

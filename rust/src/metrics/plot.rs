@@ -39,7 +39,8 @@ pub fn ascii_chart(series: &[(&str, &[f64])], width: usize, height: usize, log_y
             }
             let xpos = if max_len <= 1 { 0 } else { i * (width - 1) / (max_len - 1) };
             let ynorm = (t - lo) / (hi - lo);
-            let ypos = height - 1 - ((ynorm * (height - 1) as f64).round() as usize).min(height - 1);
+            let ypos =
+                height - 1 - ((ynorm * (height - 1) as f64).round() as usize).min(height - 1);
             grid[ypos][xpos] = mark;
         }
     }

@@ -74,7 +74,13 @@ pub struct Mlp {
 }
 
 impl Mlp {
-    pub fn new(arch: MlpArch, train: Dataset, test: Option<Dataset>, n_workers: usize, init_seed: u64) -> Self {
+    pub fn new(
+        arch: MlpArch,
+        train: Dataset,
+        test: Option<Dataset>,
+        n_workers: usize,
+        init_seed: u64,
+    ) -> Self {
         assert_eq!(arch.sizes[0], train.input_dim);
         assert_eq!(*arch.sizes.last().unwrap(), train.n_classes);
         let shards = shard_ranges(train.n, n_workers);

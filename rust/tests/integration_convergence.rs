@@ -5,13 +5,19 @@
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth::{cluster_classification, linreg_problem};
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, TrainSpec};
 use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
 use dore::optim::Prox;
 
 fn hp(lr: f32) -> HyperParams {
     HyperParams { lr, ..HyperParams::paper_defaults() }
+}
+
+/// One in-process engine run (the old `run_inproc` call sites, on the
+/// `Session` API).
+fn run_inproc(problem: &dyn Problem, spec: &TrainSpec) -> dore::metrics::RunMetrics {
+    Session::new(problem).spec(spec.clone()).run().unwrap()
 }
 
 /// Fig. 3 headline: with full gradients and a constant step size, DORE

@@ -140,7 +140,7 @@ fn xla_mlp_grad_matches_rust_backprop() {
 #[test]
 fn dore_trains_transformer_artifact() {
     use dore::algorithms::{AlgorithmKind, HyperParams};
-    use dore::harness::{run_inproc, TrainSpec};
+    use dore::engine::{Session, TrainSpec};
     let corpus = synth::markov_corpus(60_000, 512, 3);
     let lm = TransformerLm::load(artifact_dir(), corpus, 2, 3).unwrap();
     let spec = TrainSpec {
@@ -151,7 +151,7 @@ fn dore_trains_transformer_artifact() {
         eval_every: 11,
         seed: 9,
     };
-    let m = run_inproc(&lm, &spec);
+    let m = Session::new(&lm).spec(spec).run().unwrap();
     let first = m.loss.first().copied().unwrap();
     let last = m.loss.last().copied().unwrap();
     assert!(last < first, "LM loss did not drop: {first} -> {last}");

@@ -2,9 +2,8 @@
 
 use dore::algorithms::AlgorithmKind;
 use dore::config::JobConfig;
-use dore::coordinator::run_distributed;
 use dore::data::synth::{linreg_problem, mnist_like};
-use dore::harness::{run_inproc, TrainSpec};
+use dore::engine::{Session, Threaded, TrainSpec};
 use dore::models::mlp::{Mlp, MlpArch};
 use std::sync::Arc;
 
@@ -13,8 +12,8 @@ fn threaded_server_equals_inproc_for_every_algorithm() {
     let p = Arc::new(linreg_problem(120, 24, 4, 0.1, 17));
     for &algo in AlgorithmKind::all() {
         let spec = TrainSpec { algo, iters: 25, eval_every: 6, ..Default::default() };
-        let a = run_inproc(p.as_ref(), &spec);
-        let b = run_distributed(p.clone(), spec).unwrap();
+        let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+        let b = Session::shared(p.clone()).spec(spec).transport(Threaded::new()).run().unwrap();
         assert_eq!(a.loss, b.loss, "{}", algo.name());
         assert_eq!(a.dist_to_opt, b.dist_to_opt, "{}", algo.name());
         assert_eq!(a.worker_residual_norm, b.worker_residual_norm, "{}", algo.name());
@@ -32,8 +31,8 @@ fn threaded_server_with_minibatch_mlp() {
         eval_every: 10,
         ..Default::default()
     };
-    let a = run_inproc(p.as_ref(), &spec);
-    let b = run_distributed(p.clone(), spec).unwrap();
+    let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+    let b = Session::shared(p.clone()).spec(spec).transport(Threaded::new()).run().unwrap();
     assert_eq!(a.loss, b.loss);
     assert!(b.loss.last().unwrap() < &b.loss[0]);
 }
@@ -64,7 +63,7 @@ fn job_config_end_to_end() {
         eval_every: job.eval_every,
         seed: job.seed,
     };
-    let m = run_inproc(&p, &spec);
+    let m = Session::new(&p).spec(spec).run().unwrap();
     assert!(m.loss.last().unwrap() < &(m.loss[0] * 1e-2));
 }
 
@@ -72,7 +71,7 @@ fn job_config_end_to_end() {
 fn csv_export_has_all_series() {
     let p = linreg_problem(60, 10, 3, 0.1, 2);
     let spec = TrainSpec { iters: 30, eval_every: 10, ..Default::default() };
-    let m = run_inproc(&p, &spec);
+    let m = Session::new(&p).spec(spec).run().unwrap();
     let mut buf = Vec::new();
     m.write_csv(&mut buf).unwrap();
     let s = String::from_utf8(buf).unwrap();

@@ -47,6 +47,137 @@ fn arb_compressor(rng: &mut Xoshiro256) -> Box<dyn Compressor> {
     }
 }
 
+/// Draw a random *raw* payload of any variant, independent of any
+/// compressor — exercises codec corners compressors rarely hit: odd dims,
+/// partial last blocks, empty sparse payloads, extreme norms.
+fn arb_payload(rng: &mut Xoshiro256) -> Compressed {
+    // odd dims on purpose (1, primes, 5k+1, …) so the base-243 packing and
+    // blockwise norms always see a partial tail.
+    let dim = 1 + rng.next_below(601);
+    match rng.next_below(4) {
+        0 => Compressed::Dense((0..dim).map(|_| rng.next_gaussian()).collect()),
+        1 => {
+            let block_size = 1 + rng.next_below(dim + 16); // may exceed dim
+            let nblocks = dim.div_ceil(block_size);
+            Compressed::Ternary {
+                dim,
+                block_size,
+                norms: (0..nblocks).map(|_| rng.next_f32() * 1e3).collect(),
+                trits: (0..dim).map(|_| rng.next_below(3) as i8 - 1).collect(),
+            }
+        }
+        2 => {
+            let block_size = 1 + rng.next_below(dim + 16);
+            let nblocks = dim.div_ceil(block_size);
+            let s = 1 + rng.next_below(127) as u8;
+            Compressed::Levels {
+                dim,
+                block_size,
+                s,
+                norms: (0..nblocks).map(|_| rng.next_f32()).collect(),
+                levels: (0..dim)
+                    .map(|_| rng.next_below(2 * s as usize + 1) as i16 - s as i16)
+                    .map(|l| l as i8)
+                    .collect(),
+            }
+        }
+        _ => {
+            // sparse with k ∈ [0, dim] — k = 0 (empty payload) included
+            let k = rng.next_below(dim + 1);
+            let mut idx: Vec<u32> = {
+                let mut all: Vec<u32> = (0..dim as u32).collect();
+                // Fisher–Yates prefix shuffle, take k
+                for i in 0..k {
+                    let j = i + rng.next_below(dim - i);
+                    all.swap(i, j);
+                }
+                all.truncate(k);
+                all
+            };
+            idx.sort_unstable();
+            Compressed::Sparse {
+                dim,
+                vals: idx.iter().map(|_| rng.next_gaussian()).collect(),
+                idx,
+            }
+        }
+    }
+}
+
+/// Property (raw payloads): `decode(encode(c)) == c` for randomized
+/// payloads of every variant — including odd dims, partial last blocks and
+/// empty sparse payloads that no compressor in the crate happens to emit.
+#[test]
+fn prop_raw_payload_roundtrip_exact() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EED_C0DE);
+    for case in 0..600 {
+        let c = arb_payload(&mut rng);
+        let bytes = codec::encode(&c);
+        let back = codec::decode(&bytes).unwrap_or_else(|e| panic!("case {case}: decode {e}"));
+        assert_eq!(back, c, "case {case}, dim {}", c.dim());
+    }
+}
+
+/// Property (raw payloads): `wire_bits()` equals `8 * encode().len()` up to
+/// the sub-byte padding of the bit-packed sections (< 2 bytes total).
+#[test]
+fn prop_raw_payload_wire_bits_matches_encoding() {
+    let mut rng = Xoshiro256::seed_from_u64(0xB17_5EED);
+    for case in 0..600 {
+        let c = arb_payload(&mut rng);
+        let actual = codec::encode(&c).len() as u64 * 8;
+        let predicted = c.wire_bits();
+        assert!(
+            actual >= predicted && actual - predicted < 16,
+            "case {case} (dim {}): predicted {predicted}, actual {actual}",
+            c.dim()
+        );
+    }
+}
+
+/// Edge cases worth pinning explicitly (the random driver covers them with
+/// high probability, but a regression here should name the culprit).
+#[test]
+fn codec_edge_payloads_roundtrip() {
+    let cases = vec![
+        Compressed::Dense(vec![]),
+        Compressed::Dense(vec![f32::MIN_POSITIVE, -0.0, f32::MAX]),
+        // dim 1 with a huge block: single partial block
+        Compressed::Ternary { dim: 1, block_size: 256, norms: vec![3.5], trits: vec![-1] },
+        // dim not divisible by 5 (base-243 tail) nor by block
+        Compressed::Ternary {
+            dim: 7,
+            block_size: 3,
+            norms: vec![1.0, 2.0, 4.0],
+            trits: vec![1, 0, -1, 1, 1, 0, -1],
+        },
+        Compressed::Levels {
+            dim: 3,
+            block_size: 2,
+            s: 1,
+            norms: vec![0.5, 9.0],
+            levels: vec![1, -1, 0],
+        },
+        // empty sparse payload
+        Compressed::Sparse { dim: 17, idx: vec![], vals: vec![] },
+        // sparse with first index 0 and last index dim-1
+        Compressed::Sparse { dim: 9, idx: vec![0, 8], vals: vec![-1.5, 2.5] },
+        // fully dense sparse payload
+        Compressed::Sparse {
+            dim: 4,
+            idx: vec![0, 1, 2, 3],
+            vals: vec![1.0, 2.0, 3.0, 4.0],
+        },
+    ];
+    for c in cases {
+        let bytes = codec::encode(&c);
+        assert_eq!(codec::decode(&bytes).unwrap(), c, "{c:?}");
+        let bits = c.wire_bits();
+        let actual = bytes.len() as u64 * 8;
+        assert!(actual >= bits && actual - bits < 16, "{c:?}: {bits} vs {actual}");
+    }
+}
+
 /// Property: decode(encode(Q(x))) == Q(x) for every compressor and payload.
 #[test]
 fn prop_codec_roundtrip_exact() {
