@@ -1,0 +1,29 @@
+# Build/test entry points. The AOT artifacts (JAX → HLO text + manifest)
+# are produced by the python toolchain once and consumed by the rust
+# runtime; `integration_runtime` refuses to run without them.
+
+PY ?= python3
+ARTIFACT_DIR ?= artifacts
+
+.PHONY: artifacts test test-rust clean-artifacts
+
+# Lower the JAX graphs + Pallas quantizer to HLO text and write the
+# manifest the rust XlaRuntime loads (see python/compile/aot.py).
+artifacts:
+	cd python && $(PY) -m compile.aot --out ../$(ARTIFACT_DIR)/manifest.json
+
+# Rust-only lane (no python toolchain needed): everything except the
+# artifact-dependent runtime tests.
+test-rust:
+	cargo test -q --lib --bins --examples \
+	  --test integration_convergence --test integration_engine \
+	  --test integration_server --test integration_tcp \
+	  --test proptest_compression --test proptest_participation \
+	  --test golden_series
+
+# Full suite: guarantees the artifacts exist first.
+test: artifacts
+	cargo test -q
+
+clean-artifacts:
+	rm -rf $(ARTIFACT_DIR)

@@ -60,6 +60,7 @@ fn main() -> anyhow::Result<()> {
         minibatch: None, // the artifact's batch (8×64 tokens) per worker-round
         eval_every: (steps / 20).max(1),
         seed: 42,
+        ..Default::default()
     };
 
     let t0 = std::time::Instant::now();

@@ -1,0 +1,68 @@
+//! DORE under partial participation: k-of-n gathers, dropout, stale-frame
+//! replay, and straggler-aware simulated time.
+//!
+//! ```
+//! cargo run --release --example partial_participation
+//! ```
+//!
+//! The headline: DORE's gradient state `h` absorbs absentees natively — a
+//! missing uplink is exactly `Δ̂_i = 0`, the master keeps stepping with the
+//! absentee's stale gradient estimate — so at 50 % participation it still
+//! converges while uploading half the bits, and on a straggler-ridden
+//! fleet the k-of-n barrier stops paying for the slowest worker.
+
+use dore::algorithms::AlgorithmKind;
+use dore::comm::StragglerSpec;
+use dore::data::synth;
+use dore::engine::{Participation, Session, SimNet, StalePolicy, TrainSpec};
+use dore::models::Problem;
+
+fn main() -> anyhow::Result<()> {
+    let n = 8usize;
+    let problem = synth::linreg_problem(800, 300, n, 0.1, 42);
+    println!(
+        "problem: {} (d={}, {n} workers), DORE, 1200 rounds\n",
+        problem.name(),
+        problem.dim()
+    );
+
+    // a heterogeneous fleet on a 100 Mbps link: a quarter of the workers
+    // compute 4x slower, every uplink jitters by up to 2 ms
+    let straggler = StragglerSpec { slow_factor: 4.0, slow_fraction: 0.25, jitter_s: 0.002 };
+    let run = |label: &str, participation, stale| -> anyhow::Result<()> {
+        let m = Session::new(&problem)
+            .spec(TrainSpec {
+                algo: AlgorithmKind::Dore,
+                iters: 1200,
+                eval_every: 100,
+                participation,
+                stale,
+                ..Default::default()
+            })
+            .transport(SimNet::with_bandwidth(100e6).straggler(straggler))
+            .run()?;
+        println!(
+            "{label:<28} final_loss={:<12.4e} uplink_MB={:<8.2} sim_time={:.3}s",
+            m.loss.last().copied().unwrap_or(f64::NAN),
+            m.uplink_bits as f64 / 8e6,
+            m.simulated_seconds.unwrap_or(f64::NAN),
+        );
+        Ok(())
+    };
+
+    run("full participation", Participation::Full, StalePolicy::Skip)?;
+    run("k-of-n (k = n/2), skip", Participation::KOfN { k: n / 2 }, StalePolicy::Skip)?;
+    run(
+        "k-of-n (k = n/2), reuse-last",
+        Participation::KOfN { k: n / 2 },
+        StalePolicy::ReuseLast,
+    )?;
+    run("dropout p = 0.3, skip", Participation::Dropout { p: 0.3 }, StalePolicy::Skip)?;
+
+    println!(
+        "\nhalf the fleet per round → roughly half the uplink traffic, and the\n\
+         barrier waits for the slowest *selected* worker, so rounds that dodge\n\
+         the 4x-slow slice finish early. Same seed → bit-identical replay."
+    );
+    Ok(())
+}

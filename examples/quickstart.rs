@@ -63,6 +63,7 @@ fn main() -> anyhow::Result<()> {
             minibatch: None,
             eval_every: 10,
             seed: 42,
+            ..Default::default()
         })
         .run()?;
     let dore_bits = m.bits_per_round_per_worker(problem.n_workers());

@@ -95,7 +95,7 @@ fn main() {
                 let mut wr = Xoshiro256::for_site(1, 1, k);
                 let up = ws[0].round(k as usize, &grad, &mut wr);
                 let mut mr = Xoshiro256::for_site(1, 0, k);
-                let down = master.round(k as usize, &[up], &mut mr);
+                let down = master.round(k as usize, &[Some(up)], &mut mr);
                 ws[0].apply_downlink(k as usize, &down);
                 k += 1;
             },

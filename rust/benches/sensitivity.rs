@@ -26,6 +26,7 @@ fn run(p: &Mlp, hp: HyperParams, label: String, rounds_per_epoch: usize) {
         minibatch: Some(32),
         eval_every: rounds_per_epoch,
         seed: 42,
+        ..Default::default()
     };
     let m = Session::new(p).spec(spec).run().expect("sensitivity run");
     print!("{label:<24}");

@@ -6,7 +6,7 @@
 //! of communication is saved (§1). DIANA is exactly DORE with an identity
 //! master-side compressor.
 
-use super::{HyperParams, MasterNode, WorkerNode};
+use super::{digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
 use crate::models::linalg;
 use crate::F;
@@ -51,6 +51,16 @@ impl WorkerNode for DianaWorker {
         down.add_scaled_into(1.0, &mut self.x);
     }
 
+    fn on_reused(&mut self, _round: usize, payload: &Compressed) {
+        // the master folded the replayed Δ̂ into its h; mirror it so
+        // h = (1/n)Σ h_i stays exact
+        payload.add_scaled_into(self.alpha, &mut self.h);
+    }
+
+    fn residual_digest(&self) -> u64 {
+        digest_f32(&self.h)
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -84,16 +94,24 @@ impl DianaMaster {
 }
 
 impl MasterNode for DianaMaster {
-    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        _rng: &mut Xoshiro256,
+    ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
-        // ĝ = h + (1/n) Σ Q(Δ_i)
+        // ĝ = h + (1/n) Σ_{i∈S} Q(Δ_i): an absent slot is Δ̂_i = 0 — its
+        // stale h_i is already inside h — so the normalization stays 1/n
+        // under partial participation.
         self.ghat.copy_from_slice(&self.h);
         let inv = 1.0 / self.n as F;
-        for m in uplinks {
+        for m in uplinks.iter().flatten() {
             m.add_scaled_into(inv, &mut self.ghat);
         }
-        // h ← h + α · avg(Q(Δ))
-        for m in uplinks {
+        // h ← h + α · (1/n) Σ_{i∈S} Q(Δ_i) — mirrors exactly the h_i
+        // updates the participants applied, keeping h = (1/n)Σ h_i
+        for m in uplinks.iter().flatten() {
             m.add_scaled_into(self.hp.alpha * inv, &mut self.h);
         }
         let gamma = self.hp.lr_at(round);
@@ -140,9 +158,58 @@ mod tests {
             let g: Vec<F> = (0..8).map(|j| ((j + k) as F * 0.3).sin()).collect();
             let up = w.round(k, &g, &mut wrng);
             let mut mrng = Xoshiro256::for_site(1, 0, k as u64);
-            m.round(k, &[up], &mut mrng);
+            m.round(k, &[Some(up)], &mut mrng);
             for (a, b) in w.h.iter().zip(&m.h) {
                 assert!((a - b).abs() < 1e-6, "h desync at round {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn h_stays_in_sync_across_skipped_and_reused_rounds() {
+        let x0 = vec![0.0; 6];
+        let q = Arc::new(PNormQuantizer::new(PNorm::Inf, 3));
+        let hp = HyperParams { alpha: 0.2, lr: 0.05, ..HyperParams::paper_defaults() };
+        let mut ws: Vec<DianaWorker> =
+            (0..2).map(|_| DianaWorker::new(&x0, q.clone(), 0.2)).collect();
+        let mut m = DianaMaster::new(&x0, 2, hp);
+        let mut last: Vec<Option<Compressed>> = vec![None, None];
+        for k in 0..10usize {
+            // worker 1 sits out odd rounds; even rounds everyone uploads
+            let mask = [true, k % 2 == 0];
+            let mut skipped_digest: Option<u64> = None;
+            let mut slots: Vec<Option<Compressed>> = Vec::new();
+            for (i, w) in ws.iter_mut().enumerate() {
+                if mask[i] {
+                    let g: Vec<F> = (0..6).map(|j| ((i + j + k) as F * 0.4).sin()).collect();
+                    let mut rng = Xoshiro256::for_site(6, 1 + i as u64, k as u64);
+                    let up = w.round(k, &g, &mut rng);
+                    last[i] = Some(up.clone());
+                    slots.push(Some(up));
+                } else if k % 4 == 1 {
+                    // reuse-last on some skipped rounds
+                    let stale = last[i].clone().unwrap();
+                    w.on_reused(k, &stale);
+                    slots.push(Some(stale));
+                } else {
+                    skipped_digest = Some(w.residual_digest());
+                    slots.push(None);
+                }
+            }
+            let mut mrng = Xoshiro256::for_site(6, 0, k as u64);
+            let down = m.round(k, &slots, &mut mrng);
+            for w in ws.iter_mut() {
+                w.apply_downlink(k, &down);
+            }
+            if let Some(before) = skipped_digest {
+                // plain skip: the whole round must leave the absentee's h
+                // untouched (the dense downlink replaces x only)
+                assert_eq!(ws[1].residual_digest(), before, "skip moved h at round {k}");
+            }
+            // the central invariant: master h == (1/n) Σ worker h, every round
+            for j in 0..6 {
+                let avg = (ws[0].h[j] + ws[1].h[j]) / 2.0;
+                assert!((m.h[j] - avg).abs() < 1e-6, "h desync at round {k} coord {j}");
             }
         }
     }
@@ -155,7 +222,7 @@ mod tests {
         let mut m = DianaMaster::new(&x0, 1, hp);
         let mut rng = Xoshiro256::seed_from_u64(0);
         let up = w.round(0, &[2.0], &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         w.apply_downlink(0, &down);
         assert_eq!(m.model(), &[1.0]); // 2 − 0.5·2
         assert_eq!(w.model(), m.model());

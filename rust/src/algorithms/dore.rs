@@ -24,7 +24,7 @@
 //! variance vanishes too — the mechanism behind the linear convergence of
 //! Theorem 1 and the exponential residual decay of Fig. 6.
 
-use super::{HyperParams, MasterNode, WorkerNode};
+use super::{digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
 use crate::models::linalg;
 use crate::F;
@@ -73,6 +73,17 @@ impl WorkerNode for DoreWorker {
     fn apply_downlink(&mut self, _round: usize, down: &Compressed) {
         // x̂_i ← x̂_i + β·q̂  (line 11)
         down.add_scaled_into(self.hp.beta, &mut self.x);
+    }
+
+    fn on_reused(&mut self, _round: usize, payload: &Compressed) {
+        // the master folded the replayed Δ̂ into its h (line 17's update
+        // is indistinguishable from a fresh frame); mirror line 7 so
+        // h = (1/n)Σ h_i stays exact
+        payload.add_scaled_into(self.hp.alpha, &mut self.h);
+    }
+
+    fn residual_digest(&self) -> u64 {
+        digest_f32(&self.h)
     }
 
     fn model(&self) -> &[F] {
@@ -126,14 +137,23 @@ impl DoreMaster {
 }
 
 impl MasterNode for DoreMaster {
-    fn round(&mut self, round: usize, uplinks: &[Compressed], rng: &mut Xoshiro256) -> Compressed {
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        rng: &mut Xoshiro256,
+    ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
         let inv = 1.0 / self.n as F;
-        // ĝ = h + (1/n)Σ Δ̂_i; h ← h + α·avg  (lines 14–15, 17) — one fused
-        // decode pass per uplink instead of two (§Perf).
+        // ĝ = h + (1/n)Σ_{i∈S} Δ̂_i; h ← h + α·(1/n)Σ_{i∈S} Δ̂_i (lines
+        // 14–15, 17) — one fused decode pass per uplink instead of two
+        // (§Perf). An absent slot is Δ̂_i = 0: the worker that sat out
+        // left its h_i alone, its stale gradient estimate is already
+        // inside h, and the normalization stays 1/n — this is how DORE's
+        // gradient state absorbs partial participation natively.
         self.ghat.copy_from_slice(&self.h);
         let alpha_inv = self.hp.alpha * inv;
-        for m in uplinks {
+        for m in uplinks.iter().flatten() {
             let (ghat, h) = (&mut self.ghat, &mut self.h);
             m.decode_each(|i, v| {
                 ghat[i] += inv * v;
@@ -209,7 +229,7 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(0);
         let g = vec![2.0, 2.0];
         let up = w.round(0, &g, &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         w.apply_downlink(0, &down);
         assert_eq!(m.model(), &[0.0, -3.0]);
         assert_eq!(w.model(), m.model());
@@ -227,13 +247,13 @@ mod tests {
             (0..3).map(|_| DoreWorker::new(&x0, wq.clone(), h.clone())).collect();
         let mut master = DoreMaster::new(&x0, 3, mq, h);
         for k in 0..20u64 {
-            let ups: Vec<Compressed> = workers
+            let ups: Vec<Option<Compressed>> = workers
                 .iter_mut()
                 .enumerate()
                 .map(|(i, w)| {
                     let g: Vec<F> = (0..32).map(|j| ((i + j) as F + k as F * 0.3).cos()).collect();
                     let mut rng = Xoshiro256::for_site(3, 1 + i as u64, k);
-                    w.round(k as usize, &g, &mut rng)
+                    Some(w.round(k as usize, &g, &mut rng))
                 })
                 .collect();
             let mut mrng = Xoshiro256::for_site(3, 0, k);
@@ -257,14 +277,14 @@ mod tests {
             (0..2).map(|_| DoreWorker::new(&x0, wq.clone(), h.clone())).collect();
         let mut master = DoreMaster::new(&x0, 2, mq, h);
         for k in 0..8u64 {
-            let ups: Vec<Compressed> = workers
+            let ups: Vec<Option<Compressed>> = workers
                 .iter_mut()
                 .enumerate()
                 .map(|(i, w)| {
                     let g: Vec<F> =
                         (0..16).map(|j| (i as F + 1.0) * ((j as F) - 8.0) * 0.1).collect();
                     let mut rng = Xoshiro256::for_site(8, 1 + i as u64, k);
-                    w.round(k as usize, &g, &mut rng)
+                    Some(w.round(k as usize, &g, &mut rng))
                 })
                 .collect();
             let mut mrng = Xoshiro256::for_site(8, 0, k);
@@ -292,11 +312,76 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(44);
         let g = vec![1.0; 12];
         let up = w.round(0, &g, &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         let mut q_rec = m.e.clone();
         down.add_scaled_into(1.0, &mut q_rec);
         for (qr, qb) in q_rec.iter().zip(&m.qbuf) {
             assert!((qr - qb).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn partial_participation_preserves_h_and_model_invariants() {
+        // the §3.2 invariants under k-of-n rounds: x̂_i == x̂ always (the
+        // broadcast reaches everyone), and h == (1/n)Σ h_i under both the
+        // skip (absent slot) and reuse-last (replayed slot + on_reused)
+        // policies.
+        let x0: Vec<F> = (0..24).map(|i| (i as F * 0.2).cos()).collect();
+        let h = hp(0.05);
+        let wq = from_spec("ternary:8").unwrap();
+        let mq = from_spec("ternary:8").unwrap();
+        let mut workers: Vec<DoreWorker> =
+            (0..3).map(|_| DoreWorker::new(&x0, wq.clone(), h.clone())).collect();
+        let mut master = DoreMaster::new(&x0, 3, mq, h);
+        let mut last: Vec<Option<Compressed>> = vec![None; 3];
+        for k in 0..24usize {
+            // rotate one absentee per round; alternate skip/reuse rounds
+            let absent = k % 3;
+            let reuse = k % 2 == 1;
+            let mut skipped_digest: Option<u64> = None;
+            let mut slots: Vec<Option<Compressed>> = Vec::new();
+            for (i, w) in workers.iter_mut().enumerate() {
+                if i != absent {
+                    let g: Vec<F> =
+                        (0..24).map(|j| ((i + j) as F + k as F * 0.7).sin()).collect();
+                    let mut rng = Xoshiro256::for_site(11, 1 + i as u64, k as u64);
+                    let up = w.round(k, &g, &mut rng);
+                    last[i] = Some(up.clone());
+                    slots.push(Some(up));
+                } else if reuse && last[i].is_some() {
+                    let stale = last[i].clone().unwrap();
+                    w.on_reused(k, &stale);
+                    slots.push(Some(stale));
+                } else {
+                    skipped_digest = Some(w.residual_digest());
+                    slots.push(None);
+                }
+            }
+            let mut mrng = Xoshiro256::for_site(11, 0, k as u64);
+            let down = master.round(k, &slots, &mut mrng);
+            for w in workers.iter_mut() {
+                w.apply_downlink(k, &down);
+            }
+            if let Some(before) = skipped_digest {
+                // the full round — master step included — must not have
+                // moved the skipped worker's h (the downlink touches x̂ only)
+                assert_eq!(
+                    workers[absent].residual_digest(),
+                    before,
+                    "skip moved worker {absent}'s h at round {k}"
+                );
+            }
+            for w in &workers {
+                assert_eq!(w.model(), master.model(), "x̂ desync at round {k}");
+            }
+            for j in 0..24 {
+                let avg: F = workers.iter().map(|w| w.h()[j]).sum::<F>() / 3.0;
+                assert!(
+                    (master.h()[j] - avg).abs() < 1e-5,
+                    "h desync at round {k} coord {j}: {} vs {avg}",
+                    master.h()[j]
+                );
+            }
         }
     }
 
@@ -312,7 +397,7 @@ mod tests {
         // gradient pushing only coords 0/1 strongly; prox should zero the rest
         let g = vec![-4.0, -3.0, -0.2, 0.1, -0.3, 0.2, -0.1, 0.05];
         let up = w.round(0, &g, &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         w.apply_downlink(0, &down);
         let x = m.model();
         assert!(x[0] > 0.0 && x[1] > 0.0);

@@ -12,7 +12,7 @@
 //! (and diverges at lr 0.05 in Fig. 3); with biased top-k it behaves much
 //! better — both regimes are reproduced by choosing the compressor.
 
-use super::{HyperParams, MasterNode, WorkerNode};
+use super::{digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
 use crate::models::linalg;
 use crate::F;
@@ -57,6 +57,14 @@ impl WorkerNode for DsWorker {
         down.add_scaled_into(-1.0, &mut self.x);
     }
 
+    // a replayed frame was already error-compensated when first sent; the
+    // worker's e_i needs no correction, so the default no-op `on_reused`
+    // is the right semantics.
+
+    fn residual_digest(&self) -> u64 {
+        digest_f32(&self.e)
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -92,12 +100,20 @@ impl DsMaster {
 }
 
 impl MasterNode for DsMaster {
-    fn round(&mut self, round: usize, uplinks: &[Compressed], rng: &mut Xoshiro256) -> Compressed {
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        rng: &mut Xoshiro256,
+    ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
-        // v = mean(Q(p_i)) + E
+        // v = mean over participants of Q(p_i), plus E — the γ lives
+        // inside the uplinks, so averaging over |S| keeps the step size
+        // right under partial participation
         self.v.copy_from_slice(&self.err);
-        let inv = 1.0 / self.n as F;
-        for m in uplinks {
+        let present = uplinks.iter().flatten().count();
+        let inv = 1.0 / present.max(1) as F;
+        for m in uplinks.iter().flatten() {
             m.add_scaled_into(inv, &mut self.v);
         }
         self.last_norm = linalg::norm2(&self.v);
@@ -134,7 +150,7 @@ mod tests {
         let mut m = DsMaster::new(&x0, 1, Arc::new(Identity), hp);
         let mut rng = Xoshiro256::seed_from_u64(0);
         let up = w.round(0, &[4.0, 8.0], &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         w.apply_downlink(0, &down);
         assert_eq!(m.model(), &[0.0, -3.0]);
         assert_eq!(w.model(), m.model());
@@ -163,7 +179,7 @@ mod tests {
             up.add_scaled_into(1.0, &mut v);
             v
         };
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         let mut rec2 = m.err.clone();
         down.add_scaled_into(1.0, &mut rec2);
         for (r, p) in rec2.iter().zip(&v_before) {
@@ -184,7 +200,7 @@ mod tests {
             let mut wr = Xoshiro256::for_site(9, 1, k);
             let up = w.round(k as usize, &g, &mut wr);
             let mut mr = Xoshiro256::for_site(9, 0, k);
-            let down = m.round(k as usize, &[up], &mut mr);
+            let down = m.round(k as usize, &[Some(up)], &mut mr);
             w.apply_downlink(k as usize, &down);
             for (a, b) in w.model().iter().zip(m.model()) {
                 assert!((a - b).abs() < 1e-6, "model desync at round {k}");

@@ -5,7 +5,7 @@
 //! already inside the uplink, which is what makes the memory mechanism
 //! step-size-correct under schedules) and broadcasts the dense model.
 
-use super::{average_uplinks, HyperParams, MasterNode, WorkerNode};
+use super::{average_present, digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
 use crate::models::linalg;
 use crate::F;
@@ -55,6 +55,14 @@ impl WorkerNode for MemSgdWorker {
         down.add_scaled_into(1.0, &mut self.x);
     }
 
+    // a replayed frame was already error-compensated when first sent; the
+    // worker's e_i needs no correction, so the default no-op `on_reused`
+    // is the right semantics.
+
+    fn residual_digest(&self) -> u64 {
+        digest_f32(&self.e)
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -78,9 +86,15 @@ impl MemSgdMaster {
 }
 
 impl MasterNode for MemSgdMaster {
-    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        _rng: &mut Xoshiro256,
+    ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
-        average_uplinks(uplinks, &mut self.dbar);
+        // partial participation: average over whoever showed up
+        average_present(uplinks, &mut self.dbar);
         // the γ is inside the uplinks: x ← x − mean(Q(γg_i + e_i))
         linalg::axpy(-1.0, &self.dbar, &mut self.x);
         self.hp.prox.apply(self.hp.lr_at(round), &mut self.x);
@@ -126,7 +140,7 @@ mod tests {
         let mut m = MemSgdMaster::new(&x0, 1, hp);
         let mut rng = Xoshiro256::seed_from_u64(0);
         let up = w.round(0, &[4.0, 8.0], &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         w.apply_downlink(0, &down);
         assert_eq!(m.model(), &[0.0, -3.0]);
         // zero residual error with identity compression

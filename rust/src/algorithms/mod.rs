@@ -109,6 +109,24 @@ pub trait WorkerNode: Send {
     /// Apply the master's downlink broadcast.
     fn apply_downlink(&mut self, round: usize, down: &Compressed);
 
+    /// Notification that the transport replayed this worker's cached
+    /// uplink `payload` for round `round` while the worker sat out
+    /// ([`crate::engine::StalePolicy::ReuseLast`]). Algorithms whose
+    /// master folds every received frame into shared state must mirror
+    /// the fold here so the worker/master invariants survive partial
+    /// participation (DORE/DIANA: `h_i ← h_i + α·payload`, keeping
+    /// `h = (1/n)Σ h_i` exact). Error-feedback and stateless schemes need
+    /// no correction — the default is a no-op.
+    fn on_reused(&mut self, _round: usize, _payload: &Compressed) {}
+
+    /// Order-sensitive digest of the worker's residual / error-feedback
+    /// state (DORE/DIANA `h_i`, MEM-SGD/DoubleSqueeze `e_i`). The
+    /// participation invariance tests assert it is unchanged across a
+    /// skipped round; stateless workers return 0.
+    fn residual_digest(&self) -> u64 {
+        0
+    }
+
     /// The local model copy gradients are evaluated at (`x̂_i` for DORE).
     fn model(&self) -> &[F];
 
@@ -120,8 +138,19 @@ pub trait WorkerNode: Send {
 
 /// Master-side state machine.
 pub trait MasterNode: Send {
-    /// Consume all uplinks, produce the downlink broadcast.
-    fn round(&mut self, round: usize, uplinks: &[Compressed], rng: &mut Xoshiro256) -> Compressed;
+    /// Consume one round's gathered uplinks — one slot per worker, `None`
+    /// for a worker that sat the round out under
+    /// [`crate::engine::StalePolicy::Skip`] — and produce the downlink
+    /// broadcast. Residual schemes treat an absent slot as `Δ̂_i = 0`
+    /// (their `h` state already carries the absentee) and keep normalizing
+    /// by `n`; gradient-averaging schemes normalize by the number of
+    /// present slots instead.
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        rng: &mut Xoshiro256,
+    ) -> Compressed;
 
     /// The iterate to evaluate/report (`x̂ᵏ` for DORE, `xᵏ` otherwise).
     fn model(&self) -> &[F];
@@ -226,13 +255,32 @@ pub(crate) fn apply_momentum(m: F, g: &[F], vel: &mut Vec<F>) {
     }
 }
 
-/// Average all uplinks into a dense buffer: `out = (1/n) Σ decode(m)`.
-pub(crate) fn average_uplinks(uplinks: &[Compressed], out: &mut [F]) {
+/// Average the *present* uplinks into a dense buffer:
+/// `out = (1/|S|) Σ_{i∈S} decode(m_i)` where `S` is the set of `Some`
+/// slots. An empty round leaves `out` zero (the step is a no-op).
+pub(crate) fn average_present(uplinks: &[Option<Compressed>], out: &mut [F]) {
     out.fill(0.0);
-    let inv = 1.0 / uplinks.len() as F;
-    for m in uplinks {
+    let present = uplinks.iter().flatten().count();
+    if present == 0 {
+        return;
+    }
+    let inv = 1.0 / present as F;
+    for m in uplinks.iter().flatten() {
         m.add_scaled_into(inv, out);
     }
+}
+
+/// FNV-1a over the f32 bit patterns — the cheap order-sensitive digest
+/// behind [`WorkerNode::residual_digest`].
+pub fn digest_f32(xs: &[F]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
 }
 
 #[cfg(test)]

@@ -2,7 +2,7 @@
 //! the master steps and broadcasts the dense model. The paper's
 //! full-precision baseline ("SGD" in all figures).
 
-use super::{average_uplinks, HyperParams, MasterNode, WorkerNode};
+use super::{average_present, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
 use crate::models::linalg;
 use crate::F;
@@ -56,9 +56,15 @@ impl PsgdMaster {
 }
 
 impl MasterNode for PsgdMaster {
-    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        _rng: &mut Xoshiro256,
+    ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
-        average_uplinks(uplinks, &mut self.gbar);
+        // partial participation: average over whoever showed up
+        average_present(uplinks, &mut self.gbar);
         let gamma = self.hp.lr_at(round);
         super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
         let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
@@ -86,7 +92,7 @@ mod tests {
         let mut m = PsgdMaster::new(&x0, 1, hp);
         let mut rng = Xoshiro256::seed_from_u64(0);
         let up = w.round(0, &[2.0, -2.0], &mut rng);
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         w.apply_downlink(0, &down);
         assert_eq!(m.model(), &[0.0, 3.0]);
         assert_eq!(w.model(), m.model());
@@ -98,8 +104,23 @@ mod tests {
         let hp = HyperParams { lr: 1.0, ..HyperParams::paper_defaults() };
         let mut m = PsgdMaster::new(&x0, 2, hp);
         let mut rng = Xoshiro256::seed_from_u64(0);
-        let ups = vec![Compressed::Dense(vec![2.0]), Compressed::Dense(vec![4.0])];
+        let ups = vec![Some(Compressed::Dense(vec![2.0])), Some(Compressed::Dense(vec![4.0]))];
         m.round(0, &ups, &mut rng);
         assert_eq!(m.model(), &[-3.0]); // x - 1.0 * mean(2,4)
+    }
+
+    #[test]
+    fn master_averages_over_participants_only() {
+        let x0 = vec![0.0];
+        let hp = HyperParams { lr: 1.0, ..HyperParams::paper_defaults() };
+        let mut m = PsgdMaster::new(&x0, 2, hp);
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        // worker 0 sat out: the step uses worker 1's gradient alone
+        m.round(0, &[None, Some(Compressed::Dense(vec![4.0]))], &mut rng);
+        assert_eq!(m.model(), &[-4.0]);
+        // an empty round is a no-op step, not a NaN
+        let mut m2 = PsgdMaster::new(&x0, 2, HyperParams { lr: 1.0, ..HyperParams::paper_defaults() });
+        m2.round(0, &[None, None], &mut rng);
+        assert_eq!(m2.model(), &[0.0]);
     }
 }

@@ -7,7 +7,7 @@
 //! QSGD converges only to a neighbourhood of `x*` under a constant step
 //! size — exactly the plateau Fig. 3 shows.
 
-use super::{average_uplinks, HyperParams, MasterNode, WorkerNode};
+use super::{average_present, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
 use crate::models::linalg;
 use crate::F;
@@ -59,9 +59,15 @@ impl QsgdMaster {
 }
 
 impl MasterNode for QsgdMaster {
-    fn round(&mut self, round: usize, uplinks: &[Compressed], _rng: &mut Xoshiro256) -> Compressed {
+    fn round(
+        &mut self,
+        round: usize,
+        uplinks: &[Option<Compressed>],
+        _rng: &mut Xoshiro256,
+    ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
-        average_uplinks(uplinks, &mut self.gbar);
+        // partial participation: average over whoever showed up
+        average_present(uplinks, &mut self.gbar);
         let gamma = self.hp.lr_at(round);
         super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
         let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
@@ -91,7 +97,7 @@ mod tests {
         let g = vec![1.0, -0.5, 0.25, 0.0, 2.0, 0.0, -1.0, 0.5];
         let up = w.round(0, &g, &mut rng);
         assert!(matches!(up, Compressed::Ternary { .. }));
-        let down = m.round(0, &[up], &mut rng);
+        let down = m.round(0, &[Some(up)], &mut rng);
         assert!(matches!(down, Compressed::Dense(_)));
         w.apply_downlink(0, &down);
         assert_eq!(w.model(), m.model());

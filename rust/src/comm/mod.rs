@@ -10,7 +10,7 @@
 
 pub mod netsim;
 
-pub use netsim::{LinkSpec, NetSim};
+pub use netsim::{LinkSpec, NetSim, StragglerSpec};
 
 /// Per-direction traffic counters (bits).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]

@@ -13,6 +13,15 @@
 //!
 //! The round time is `compute + gather + broadcast`. Everything is
 //! deterministic; the harness sweeps `bandwidth` to regenerate Fig. 2.
+//!
+//! [`StragglerSpec`] adds per-worker heterogeneity on top of the link
+//! model: a compute multiplier for a deterministic slice of the fleet and
+//! seeded per-round latency jitter. Combined with k-of-n partial
+//! participation (see [`crate::engine::Participation`]) the gather term
+//! waits only for the slowest *awaited* uplink — the k-th arrival, not the
+//! n-th — which is the whole point of straggler-aware rounds.
+
+use crate::compression::Xoshiro256;
 
 /// Link characteristics.
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +44,124 @@ impl LinkSpec {
     /// Time to move `bits` over this link once.
     pub fn transfer_time(&self, bits: u64) -> f64 {
         self.latency_s + bits as f64 / self.bandwidth_bps
+    }
+}
+
+/// Per-worker compute/latency heterogeneity for the simulated network.
+///
+/// Workers `0..⌈slow_fraction·n⌉` are the permanently slow slice of the
+/// fleet (assignment is deterministic so runs replay bit-for-bit); every
+/// worker additionally draws uniform per-round latency jitter in
+/// `[0, jitter_s)` from the run seed.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StragglerSpec {
+    /// Compute-time multiplier applied to the slow slice (≥ 1).
+    pub slow_factor: f64,
+    /// Fraction of the fleet that is permanently slow.
+    pub slow_fraction: f64,
+    /// Upper bound of the per-worker per-round uniform latency jitter, in
+    /// seconds.
+    pub jitter_s: f64,
+}
+
+/// Salt separating the jitter RNG stream from the training sites.
+const JITTER_SALT: u64 = 0x6a69_7474_6572; // "jitter"
+
+impl Default for StragglerSpec {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl StragglerSpec {
+    /// A homogeneous fleet: multiplier 1, no jitter.
+    pub fn none() -> Self {
+        Self { slow_factor: 1.0, slow_fraction: 0.0, jitter_s: 0.0 }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.slow_factor >= 1.0 && self.slow_factor.is_finite(),
+            "straggler slow_factor must be ≥ 1, got {}",
+            self.slow_factor
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.slow_fraction),
+            "straggler slow_fraction must be in [0, 1], got {}",
+            self.slow_fraction
+        );
+        anyhow::ensure!(
+            self.jitter_s >= 0.0 && self.jitter_s.is_finite(),
+            "straggler jitter_s must be ≥ 0, got {}",
+            self.jitter_s
+        );
+        Ok(())
+    }
+
+    /// How many of `n` workers are in the slow slice.
+    pub fn slow_count(&self, n: usize) -> usize {
+        ((self.slow_fraction * n as f64).ceil() as usize).min(n)
+    }
+
+    /// Compute-time multiplier for `worker` in a fleet of `n`.
+    pub fn compute_factor(&self, worker: usize, n: usize) -> f64 {
+        if worker < self.slow_count(n) {
+            self.slow_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Deterministic per-round latency jitter for `worker`, seconds.
+    pub fn jitter(&self, seed: u64, worker: usize, round: usize) -> f64 {
+        if self.jitter_s <= 0.0 {
+            return 0.0;
+        }
+        let mut rng = Xoshiro256::for_site(seed ^ JITTER_SALT, 1 + worker as u64, round as u64);
+        rng.next_f64() * self.jitter_s
+    }
+
+    /// Readiness time of one worker's uplink: measured compute scaled by
+    /// the straggler multiplier plus that round's jitter draw.
+    pub fn ready_time(
+        &self,
+        seed: u64,
+        worker: usize,
+        n: usize,
+        round: usize,
+        compute_s: f64,
+    ) -> f64 {
+        compute_s * self.compute_factor(worker, n) + self.jitter(seed, worker, round)
+    }
+}
+
+/// `mult[:fraction[:jitter_s]]`, e.g. `--straggler 4:0.25:0.002` — the slow
+/// quarter of the fleet computes 4× slower and every uplink jitters by up
+/// to 2 ms.
+impl std::str::FromStr for StragglerSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut parts = s.split(':');
+        let mut spec = StragglerSpec::none();
+        if let Some(m) = parts.next().filter(|p| !p.is_empty()) {
+            spec.slow_factor =
+                m.parse().map_err(|e| anyhow::anyhow!("straggler factor '{m}': {e}"))?;
+            // a bare multiplier with no fraction defaults to "half the fleet
+            // is slow" so `--straggler 4` does something visible
+            spec.slow_fraction = 0.5;
+        }
+        if let Some(f) = parts.next() {
+            spec.slow_fraction =
+                f.parse().map_err(|e| anyhow::anyhow!("straggler fraction '{f}': {e}"))?;
+        }
+        if let Some(j) = parts.next() {
+            spec.jitter_s =
+                j.parse().map_err(|e| anyhow::anyhow!("straggler jitter '{j}': {e}"))?;
+        }
+        anyhow::ensure!(parts.next().is_none(), "straggler spec '{s}' has too many fields");
+        spec.validate()?;
+        Ok(spec)
     }
 }
 
@@ -66,6 +193,29 @@ impl NetSim {
         self.clock_s += dt;
         dt
     }
+
+    /// Advance the clock by one *partial-participation* round.
+    ///
+    /// `slowest_ready_s` is the readiness time of the slowest uplink the
+    /// barrier actually waited for (the k-th arrival under k-of-n, not the
+    /// fleet-wide straggler), `gathered_uplink_bits` the total fresh bits
+    /// that crossed the master's ingress this round (reused stale frames
+    /// move nothing), `downlink_bits` the broadcast payload (still sent to
+    /// all `n` workers).
+    pub fn gather_round(
+        &mut self,
+        slowest_ready_s: f64,
+        gathered_uplink_bits: u64,
+        downlink_bits: u64,
+    ) -> f64 {
+        let gather =
+            self.link.latency_s + gathered_uplink_bits as f64 / self.link.bandwidth_bps;
+        let bcast = self.link.latency_s
+            + (self.n_workers as u64 * downlink_bits) as f64 / self.link.bandwidth_bps;
+        let dt = slowest_ready_s + gather + bcast;
+        self.clock_s += dt;
+        dt
+    }
 }
 
 #[cfg(test)]
@@ -87,6 +237,42 @@ mod tests {
         let dt = net.round(1_000_000, 500_000, 0.5);
         assert!((dt - 3.5).abs() < 1e-9, "dt={dt}");
         assert!((net.clock_s - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gather_round_charges_only_gathered_bits() {
+        let mut net = NetSim::new(LinkSpec { bandwidth_bps: 1e6, latency_s: 0.0 }, 4);
+        // barrier waited 0.25 s for its slowest awaited worker; 2 of 4
+        // workers uploaded 1e6 bits each; broadcast 0.5e6 to all 4.
+        let dt = net.gather_round(0.25, 2_000_000, 500_000);
+        assert!((dt - (0.25 + 2.0 + 2.0)).abs() < 1e-9, "dt={dt}");
+    }
+
+    #[test]
+    fn straggler_slice_and_jitter_are_deterministic() {
+        let s = StragglerSpec { slow_factor: 4.0, slow_fraction: 0.25, jitter_s: 0.01 };
+        assert_eq!(s.slow_count(8), 2);
+        assert_eq!(s.compute_factor(1, 8), 4.0);
+        assert_eq!(s.compute_factor(2, 8), 1.0);
+        let a = s.jitter(42, 3, 17);
+        let b = s.jitter(42, 3, 17);
+        assert_eq!(a, b, "jitter must replay bit-for-bit");
+        assert!((0.0..0.01).contains(&a));
+        assert_ne!(s.jitter(42, 3, 18), a, "jitter varies per round");
+        assert_eq!(StragglerSpec::none().jitter(42, 3, 17), 0.0);
+    }
+
+    #[test]
+    fn straggler_spec_parses() {
+        let s: StragglerSpec = "4".parse().unwrap();
+        assert_eq!(s, StragglerSpec { slow_factor: 4.0, slow_fraction: 0.5, jitter_s: 0.0 });
+        let s: StragglerSpec = "4:0.25".parse().unwrap();
+        assert_eq!(s.slow_fraction, 0.25);
+        let s: StragglerSpec = "4:0.25:0.002".parse().unwrap();
+        assert_eq!(s.jitter_s, 0.002);
+        assert!("0.5".parse::<StragglerSpec>().is_err(), "factor < 1 rejected");
+        assert!("4:2".parse::<StragglerSpec>().is_err(), "fraction > 1 rejected");
+        assert!("4:0.5:1:1".parse::<StragglerSpec>().is_err());
     }
 
     #[test]

@@ -15,8 +15,9 @@
 
 use crate::algorithms::WorkerNode;
 use crate::compression::{codec, Compressed};
+use crate::engine::transport::WorkerRoundDriver;
 use crate::engine::{
-    worker_uplink, RoundCtx, Session, TrainSpec, Transport, UplinkFrame, WirePayload,
+    RoundCtx, Session, StalePolicy, TrainSpec, Transport, UplinkFrame, WirePayload,
 };
 use crate::metrics::RunMetrics;
 use crate::models::Problem;
@@ -69,6 +70,7 @@ fn read_frame(s: &mut TcpStream) -> anyhow::Result<Frame> {
 
 fn tcp_worker_loop(
     id: usize,
+    n: usize,
     mut node: Box<dyn WorkerNode>,
     problem: Arc<dyn Problem>,
     spec: TrainSpec,
@@ -88,19 +90,16 @@ fn tcp_worker_loop(
         },
     )?;
     let mut grad = vec![0.0 as F; problem.dim()];
+    let mut driver = WorkerRoundDriver::new(&spec, n);
     for k in 0..spec.iters {
-        let (up, residual) =
-            worker_uplink(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad);
-        write_frame(
-            &mut sock,
-            &Frame {
-                kind: KIND_UPLINK,
-                round: k as u32,
-                worker: id as u32,
-                residual,
-                payload: codec::encode(&up),
-            },
-        )?;
+        if let Some((payload, residual)) =
+            driver.round(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad)
+        {
+            write_frame(
+                &mut sock,
+                &Frame { kind: KIND_UPLINK, round: k as u32, worker: id as u32, residual, payload },
+            )?;
+        }
         let down = read_frame(&mut sock)?;
         anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
         anyhow::ensure!(down.round == k as u32, "round skew");
@@ -116,6 +115,9 @@ fn tcp_worker_loop(
 pub struct TcpTransport {
     socks: Vec<TcpStream>,
     handles: Vec<JoinHandle<anyhow::Result<()>>>,
+    /// Master-side replay cache: each worker's last fresh encoded uplink,
+    /// kept only under [`StalePolicy::ReuseLast`].
+    byte_cache: Vec<Option<Vec<u8>>>,
 }
 
 impl TcpTransport {
@@ -142,6 +144,7 @@ impl Transport for TcpTransport {
             )
         })?;
         let n = workers.len();
+        self.byte_cache = (0..n).map(|_| None).collect();
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
 
@@ -151,7 +154,7 @@ impl Transport for TcpTransport {
             self.handles.push(
                 std::thread::Builder::new()
                     .name(format!("dore-tcp-{id}"))
-                    .spawn(move || tcp_worker_loop(id, node, p, s, addr))?,
+                    .spawn(move || tcp_worker_loop(id, n, node, p, s, addr))?,
             );
         }
 
@@ -177,18 +180,40 @@ impl Transport for TcpTransport {
         )
     }
 
-    fn gather(&mut self, round: usize, _ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
-        let mut frames = Vec::with_capacity(self.socks.len());
+    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+        let n = self.socks.len();
+        let mask = ctx.mask;
+        anyhow::ensure!(mask.len() == n, "round mask covers {} of {n} workers", mask.len());
+        let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
+        let mut frames = Vec::with_capacity(n);
         for (i, s) in self.socks.iter_mut().enumerate() {
+            // only selected workers transmit this round; absentees' slots
+            // are filled from the replay cache (reuse-last) or left empty
+            if !mask[i] {
+                frames.push(UplinkFrame {
+                    worker: i,
+                    round,
+                    payload: self.byte_cache[i]
+                        .as_ref()
+                        .filter(|_| reuse)
+                        .map(|b| WirePayload::Encoded(b.clone())),
+                    residual_norm: 0.0,
+                    compute_seconds: 0.0,
+                });
+                continue;
+            }
             let f = read_frame(s)?;
             anyhow::ensure!(
                 f.kind == KIND_UPLINK && f.round == round as u32 && f.worker as usize == i,
                 "protocol skew on worker {i} at round {round}"
             );
+            if reuse {
+                self.byte_cache[i] = Some(f.payload.clone());
+            }
             frames.push(UplinkFrame {
                 worker: i,
                 round,
-                payload: WirePayload::Encoded(f.payload),
+                payload: Some(WirePayload::Encoded(f.payload)),
                 residual_norm: f.residual,
                 compute_seconds: 0.0,
             });

@@ -27,6 +27,14 @@
 //! (`rust/tests/integration_engine.rs` asserts it for all seven), because
 //! the engine owns all stochastic sites and the codec round-trip is exact.
 //!
+//! Rounds need not be full gathers: a [`Participation`] policy on the
+//! [`TrainSpec`] selects a per-round subset of uploaders (k-of-n sampling
+//! or Bernoulli dropout, both pure functions of `(seed, round, n)`), a
+//! [`StalePolicy`] decides what stands in for the absentees (skip, or
+//! replay of their last frame), and [`SimNet`] models straggler
+//! heterogeneity ([`crate::comm::StragglerSpec`]) so the simulated clock
+//! reflects the k-th — not n-th — slowest uplink.
+//!
 //! Progress is emitted as events to [`Observer`]s; [`RunMetrics`] is itself
 //! an observer, so benches can attach custom sinks instead of post-hoc
 //! field picking.
@@ -51,12 +59,14 @@
 //! ```
 
 pub mod observer;
+pub mod participation;
 pub mod protocol;
 pub mod registry;
 pub mod session;
 pub mod transport;
 
 pub use observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
+pub use participation::{Participation, StalePolicy};
 pub use session::{Session, TrainSpec};
 pub use transport::{
     worker_uplink, InProc, RoundCtx, SimNet, Threaded, Transport, UplinkFrame, WirePayload,

@@ -29,7 +29,12 @@ pub struct RunInfo<'a> {
 #[derive(Clone, Copy, Debug)]
 pub struct RoundEvent {
     pub round: usize,
-    /// Uplink bits moved this round, summed over workers.
+    /// Workers whose fresh uplink the barrier waited for this round
+    /// (= `n_workers` under full participation; fewer under
+    /// [`crate::engine::Participation`] policies).
+    pub participants: usize,
+    /// Uplink bits moved this round, summed over participating workers
+    /// (replayed stale frames move no bytes and count zero).
     pub uplink_bits: u64,
     /// Downlink bits this round (broadcast counted once per worker).
     pub downlink_bits: u64,
@@ -88,6 +93,7 @@ impl Observer for RunMetrics {
     fn on_round(&mut self, e: &RoundEvent) {
         self.uplink_bits += e.uplink_bits;
         self.downlink_bits += e.downlink_bits;
+        self.participant_uplinks += e.participants as u64;
     }
 
     fn on_eval(&mut self, e: &EvalEvent) {
@@ -122,6 +128,7 @@ mod tests {
         let mut m = RunMetrics::new("X");
         m.on_round(&RoundEvent {
             round: 0,
+            participants: 2,
             uplink_bits: 100,
             downlink_bits: 40,
             worker_residual_norm: 1.0,
@@ -146,6 +153,7 @@ mod tests {
         });
         assert_eq!(m.uplink_bits, 100);
         assert_eq!(m.downlink_bits, 40);
+        assert_eq!(m.participant_uplinks, 2);
         assert_eq!(m.rounds, vec![0]);
         assert_eq!(m.loss, vec![2.0]);
         assert_eq!(m.dist_to_opt, vec![3.0]);

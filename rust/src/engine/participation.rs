@@ -1,0 +1,208 @@
+//! Partial participation: which workers upload each round, and what the
+//! master does about the ones that don't.
+//!
+//! DORE's analysis assumes a full synchronous gather, but real fleets have
+//! stragglers and dropouts. A [`Participation`] policy decides, per round,
+//! the subset of workers whose uplinks the barrier waits for; the
+//! [`StalePolicy`] decides what stands in for everyone else. Selection is a
+//! **pure function of `(seed, round, n)`** — no channel traffic, no shared
+//! state — so the engine, every transport, and every worker thread compute
+//! the identical mask independently and runs replay bit-for-bit.
+//!
+//! State correctness under partial rounds is the algorithms' business
+//! (see [`crate::algorithms::WorkerNode::on_reused`] and each master's
+//! normalization policy); this module only owns *who* participates.
+
+use crate::compression::Xoshiro256;
+
+/// Salt separating the selection RNG stream from the training sites
+/// (gradient sampling, quantization, jitter).
+const SELECT_SALT: u64 = 0x7061_7274_6963_6970; // "particip"
+
+/// Which workers upload each round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub enum Participation {
+    /// Every worker uploads every round (the paper's setting).
+    #[default]
+    Full,
+    /// Exactly `k` workers upload each round, drawn without replacement
+    /// from a seeded per-round shuffle (FedAvg-style client sampling).
+    KOfN { k: usize },
+    /// Each worker independently sits out with probability `p` each round
+    /// (Bernoulli dropout). If the whole fleet would sit out, worker
+    /// `round % n` is kept so the round is never empty.
+    Dropout { p: f64 },
+}
+
+impl Participation {
+    /// Reject specs that cannot select a non-empty subset of `n` workers.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        match *self {
+            Participation::Full => Ok(()),
+            Participation::KOfN { k } => {
+                anyhow::ensure!(
+                    (1..=n).contains(&k),
+                    "participation k:{k} out of range for {n} workers (need 1 ≤ k ≤ n)"
+                );
+                Ok(())
+            }
+            Participation::Dropout { p } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&p),
+                    "dropout probability {p} out of range (need 0 ≤ p < 1)"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Per-round participation mask: `mask[i]` is whether worker `i`
+    /// uploads at `round`. Deterministic given `(seed, round, n)` and
+    /// independent of every training RNG site.
+    pub fn mask(&self, seed: u64, round: usize, n: usize) -> Vec<bool> {
+        match *self {
+            Participation::Full => vec![true; n],
+            Participation::KOfN { k } if k >= n => vec![true; n],
+            Participation::KOfN { k } => {
+                let mut rng = Xoshiro256::for_site(seed ^ SELECT_SALT, u64::MAX, round as u64);
+                // partial Fisher–Yates: the first k slots of a seeded
+                // shuffle are a uniform k-subset
+                let mut idx: Vec<usize> = (0..n).collect();
+                let mut mask = vec![false; n];
+                for i in 0..k {
+                    let j = i + rng.next_below(n - i);
+                    idx.swap(i, j);
+                    mask[idx[i]] = true;
+                }
+                mask
+            }
+            Participation::Dropout { p } => {
+                let mut rng = Xoshiro256::for_site(seed ^ SELECT_SALT, u64::MAX, round as u64);
+                let mut mask: Vec<bool> = (0..n).map(|_| rng.next_f64() >= p).collect();
+                if !mask.iter().any(|&m| m) {
+                    mask[round % n] = true;
+                }
+                mask
+            }
+        }
+    }
+}
+
+/// `full`, `k:<K>`, or `dropout:<p>`.
+impl std::str::FromStr for Participation {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("full") {
+            return Ok(Participation::Full);
+        }
+        if let Some(k) = s.strip_prefix("k:").or_else(|| s.strip_prefix("kofn:")) {
+            let k = k.parse().map_err(|e| anyhow::anyhow!("participation k '{k}': {e}"))?;
+            return Ok(Participation::KOfN { k });
+        }
+        if let Some(p) = s.strip_prefix("dropout:") {
+            let p = p.parse().map_err(|e| anyhow::anyhow!("dropout probability '{p}': {e}"))?;
+            return Ok(Participation::Dropout { p });
+        }
+        anyhow::bail!("unknown participation spec '{s}' (full | k:<K> | dropout:<p>)")
+    }
+}
+
+/// What the master feeds itself for a worker that sat a round out.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StalePolicy {
+    /// The worker contributes nothing: its slot reaches the master as
+    /// `None`. For residual schemes (DORE/DIANA) this is exactly
+    /// `Δ̂_i = 0` — the master's `h` state already carries the absentee's
+    /// stale gradient — so no state correction is needed anywhere.
+    #[default]
+    Skip,
+    /// The master replays its cached copy of the worker's last fresh
+    /// uplink (no bytes move). The sitting-out worker is notified via
+    /// [`crate::algorithms::WorkerNode::on_reused`] so algorithms whose
+    /// master folds every received frame into shared state (DORE/DIANA
+    /// `h`) mirror the fold locally. Before a worker's first upload this
+    /// degrades to [`StalePolicy::Skip`].
+    ReuseLast,
+}
+
+/// `skip` or `reuse`.
+impl std::str::FromStr for StalePolicy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "skip" => Ok(StalePolicy::Skip),
+            "reuse" | "reuse-last" | "reuselast" => Ok(StalePolicy::ReuseLast),
+            other => anyhow::bail!("unknown stale policy '{other}' (skip | reuse)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_mask_is_all_true() {
+        assert_eq!(Participation::Full.mask(1, 0, 4), vec![true; 4]);
+    }
+
+    #[test]
+    fn kofn_selects_exactly_k_deterministically() {
+        let p = Participation::KOfN { k: 3 };
+        for round in 0..50 {
+            let a = p.mask(9, round, 8);
+            let b = p.mask(9, round, 8);
+            assert_eq!(a, b, "selection must replay");
+            assert_eq!(a.iter().filter(|&&m| m).count(), 3, "round {round}");
+        }
+        // selection varies across rounds (a fixed subset would defeat the
+        // point of sampling)
+        let masks: std::collections::HashSet<Vec<bool>> =
+            (0..50).map(|r| p.mask(9, r, 8)).collect();
+        assert!(masks.len() > 1);
+    }
+
+    #[test]
+    fn kofn_with_k_ge_n_is_full() {
+        assert_eq!(Participation::KOfN { k: 9 }.mask(1, 3, 4), vec![true; 4]);
+    }
+
+    #[test]
+    fn dropout_never_empties_a_round() {
+        let p = Participation::Dropout { p: 0.99 };
+        for round in 0..200 {
+            let mask = p.mask(5, round, 3);
+            assert!(mask.iter().any(|&m| m), "round {round} had no participants");
+        }
+    }
+
+    #[test]
+    fn selection_is_independent_of_training_sites() {
+        // the mask stream must not collide with site-0/site-i draws
+        let mask = Participation::KOfN { k: 2 }.mask(42, 7, 6);
+        let mut site = Xoshiro256::for_site(42, 0, 7);
+        let _ = site.next_u64(); // just exercise both paths; no panic = ok
+        assert_eq!(mask.len(), 6);
+    }
+
+    #[test]
+    fn specs_parse_and_validate() {
+        assert_eq!("full".parse::<Participation>().unwrap(), Participation::Full);
+        assert_eq!("k:4".parse::<Participation>().unwrap(), Participation::KOfN { k: 4 });
+        assert_eq!(
+            "dropout:0.3".parse::<Participation>().unwrap(),
+            Participation::Dropout { p: 0.3 }
+        );
+        assert!("bogus".parse::<Participation>().is_err());
+        assert!(Participation::KOfN { k: 0 }.validate(4).is_err());
+        assert!(Participation::KOfN { k: 5 }.validate(4).is_err());
+        assert!(Participation::Dropout { p: 1.0 }.validate(4).is_err());
+        assert!(Participation::Dropout { p: 0.5 }.validate(4).is_ok());
+        assert_eq!("skip".parse::<StalePolicy>().unwrap(), StalePolicy::Skip);
+        assert_eq!("reuse".parse::<StalePolicy>().unwrap(), StalePolicy::ReuseLast);
+        assert!("hold".parse::<StalePolicy>().is_err());
+    }
+}

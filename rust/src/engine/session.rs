@@ -7,10 +7,11 @@
 //! `coordinator::run_distributed` are thin shims over this loop.
 
 use super::observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
+use super::participation::{Participation, StalePolicy};
 use super::registry;
 use super::transport::{InProc, RoundCtx, Transport};
 use crate::algorithms::{AlgorithmKind, HyperParams};
-use crate::compression::Xoshiro256;
+use crate::compression::{Compressed, Xoshiro256};
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::models::{linalg, Problem};
 use std::sync::Arc;
@@ -27,8 +28,22 @@ pub struct TrainSpec {
     /// Evaluate metrics every this many rounds (loss evaluation can dwarf
     /// the training work on small problems).
     pub eval_every: usize,
-    /// Seed for all stochastic sites (sampling + quantization).
+    /// Seed for all stochastic sites (sampling + quantization +
+    /// participation selection).
     pub seed: u64,
+    /// Which workers upload each round (default: everyone).
+    pub participation: Participation,
+    /// What stands in for a worker that sat a round out.
+    pub stale: StalePolicy,
+}
+
+impl TrainSpec {
+    /// This round's participation mask for a fleet of `n` — the pure
+    /// function of `(seed, round, n)` the engine, every transport, and
+    /// every worker thread evaluate independently (and identically).
+    pub fn round_mask(&self, round: usize, n: usize) -> Vec<bool> {
+        self.participation.mask(self.seed, round, n)
+    }
 }
 
 impl Default for TrainSpec {
@@ -40,6 +55,8 @@ impl Default for TrainSpec {
             minibatch: None,
             eval_every: 10,
             seed: 42,
+            participation: Participation::Full,
+            stale: StalePolicy::Skip,
         }
     }
 }
@@ -163,6 +180,19 @@ impl<'p> Session<'p> {
         self
     }
 
+    /// Partial-participation policy (default: [`Participation::Full`]).
+    pub fn participation(mut self, participation: Participation) -> Self {
+        self.spec.participation = participation;
+        self
+    }
+
+    /// Stale-uplink policy for workers that sit a round out (default:
+    /// [`StalePolicy::Skip`]).
+    pub fn stale(mut self, stale: StalePolicy) -> Self {
+        self.spec.stale = stale;
+        self
+    }
+
     /// Replace the whole spec at once (migration aid for callers that
     /// already assemble a [`TrainSpec`]). Like [`Session::algo`], this
     /// resets any earlier [`Session::algo_name`] override — the spec's
@@ -194,6 +224,7 @@ impl<'p> Session<'p> {
         let n = p.n_workers();
         let d = p.dim();
         anyhow::ensure!(n > 0, "problem declares zero workers");
+        spec.participation.validate(n)?;
         let eval_every = spec.eval_every.max(1);
 
         let x0 = p.init();
@@ -220,22 +251,40 @@ impl<'p> Session<'p> {
         let sw = Stopwatch::start();
         for k in 0..spec.iters {
             // 1. workers: gradient at the local model → uplink (executed by
-            //    the transport, inline or on worker threads).
-            let frames = transport.gather(k, RoundCtx { problem: p, spec: &spec })?;
+            //    the transport, inline or on worker threads). Under partial
+            //    participation the barrier waits only for the masked
+            //    subset; the other slots carry a replayed stale frame
+            //    (reuse-last) or nothing (skip).
+            let mask = spec.round_mask(k, n);
+            let frames =
+                transport.gather(k, RoundCtx { problem: p, spec: &spec, mask: &mask })?;
             anyhow::ensure!(
                 frames.len() == n,
-                "transport returned {} uplinks for {n} workers",
+                "transport returned {} uplink slots for {n} workers",
                 frames.len()
             );
             let mut round_up_bits = 0u64;
             let mut res_sum = 0.0f64;
-            let mut uplinks = Vec::with_capacity(n);
+            let mut participants = 0usize;
+            let mut uplinks: Vec<Option<Compressed>> = Vec::with_capacity(n);
             for (i, f) in frames.into_iter().enumerate() {
                 anyhow::ensure!(f.worker == i, "uplink frames out of worker order");
                 anyhow::ensure!(f.round == k, "round skew: engine at {k}, frame at {}", f.round);
-                round_up_bits += f.payload.wire_bits();
-                res_sum += f.residual_norm;
-                uplinks.push(f.payload.into_compressed()?);
+                if mask[i] {
+                    // a selected worker must have uploaded a fresh frame
+                    let payload = f.payload.ok_or_else(|| {
+                        anyhow::anyhow!("worker {i} was selected for round {k} but sent no uplink")
+                    })?;
+                    round_up_bits += payload.wire_bits();
+                    res_sum += f.residual_norm;
+                    participants += 1;
+                    uplinks.push(Some(payload.into_compressed()?));
+                } else {
+                    // an unselected slot may still carry data — a replayed
+                    // stale frame or an externally injected uplink — which
+                    // feeds the master but moves no fresh wire bits
+                    uplinks.push(f.payload.map(|p| p.into_compressed()).transpose()?);
+                }
             }
 
             // 2. master: aggregate → downlink broadcast (site 0 RNG).
@@ -243,15 +292,19 @@ impl<'p> Session<'p> {
             let down = master.round(k, &uplinks, &mut mrng);
 
             // 3. broadcast, received by every worker.
-            let bits_per_copy =
-                transport.broadcast(k, &down, RoundCtx { problem: p, spec: &spec })?;
+            let bits_per_copy = transport.broadcast(
+                k,
+                &down,
+                RoundCtx { problem: p, spec: &spec, mask: &mask },
+            )?;
             let round_down_bits = n as u64 * bits_per_copy;
 
             // 4. events + eval cadence.
-            let worker_res = res_sum / n as f64;
+            let worker_res = res_sum / participants.max(1) as f64;
             let master_res = master.last_compressed_norm();
             let rev = RoundEvent {
                 round: k,
+                participants,
                 uplink_bits: round_up_bits,
                 downlink_bits: round_down_bits,
                 worker_residual_norm: worker_res,
@@ -337,6 +390,64 @@ mod tests {
             .unwrap();
         let sim = m.simulated_seconds.expect("simnet reports a clock");
         assert!(sim > 0.0, "clock did not advance: {sim}");
+    }
+
+    #[test]
+    fn partial_participation_is_deterministic_and_converges() {
+        let p = linreg_problem(120, 20, 4, 0.1, 5);
+        for stale in [StalePolicy::Skip, StalePolicy::ReuseLast] {
+            let spec = TrainSpec {
+                iters: 300,
+                eval_every: 50,
+                participation: Participation::KOfN { k: 2 },
+                stale,
+                ..Default::default()
+            };
+            let a = Session::new(&p).spec(spec.clone()).run().unwrap();
+            let b = Session::new(&p).spec(spec).run().unwrap();
+            assert_eq!(a.loss, b.loss, "{stale:?}: replay must be bit-identical");
+            assert_eq!(a.uplink_bits, b.uplink_bits);
+            assert_eq!(a.participant_uplinks, 300 * 2, "{stale:?}");
+            let (first, last) = (a.loss[0], *a.loss.last().unwrap());
+            assert!(last < first * 0.5, "{stale:?} did not converge: {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn half_participation_halves_uplink_traffic() {
+        let p = linreg_problem(120, 20, 4, 0.1, 5);
+        let run = |participation| {
+            Session::new(&p)
+                .spec(TrainSpec {
+                    iters: 50,
+                    eval_every: 10,
+                    participation,
+                    ..Default::default()
+                })
+                .run()
+                .unwrap()
+        };
+        let full = run(Participation::Full);
+        let half = run(Participation::KOfN { k: 2 });
+        let ratio = half.uplink_bits as f64 / full.uplink_bits as f64;
+        assert!(
+            (0.4..=0.6).contains(&ratio),
+            "k = n/2 should move ~half the uplink bits, got {ratio}"
+        );
+        // the broadcast still reaches everyone — downlink traffic is not cut
+        assert!(half.downlink_bits > 0);
+        assert_eq!(half.participant_uplinks, 50 * 2);
+        assert_eq!(full.participant_uplinks, 50 * 4);
+    }
+
+    #[test]
+    fn invalid_participation_is_rejected_up_front() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let err = Session::new(&p)
+            .participation(Participation::KOfN { k: 9 })
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]

@@ -93,7 +93,7 @@ pub fn characterize_round(
             .enumerate()
             .map(|(i, w)| {
                 let mut q = Xoshiro256::for_site(1, 1 + i as u64, k);
-                w.round(k as usize, &grad, &mut q)
+                Some(w.round(k as usize, &grad, &mut q))
             })
             .collect();
         let mut mrng = Xoshiro256::for_site(1, 0, k);
@@ -102,7 +102,7 @@ pub fn characterize_round(
             w.apply_downlink(k as usize, &down);
         }
         if k == 1 {
-            bits_up = ups[0].wire_bits();
+            bits_up = ups[0].as_ref().expect("full round").wire_bits();
             bits_down = down.wire_bits();
             compute = sw.seconds();
         }

@@ -12,10 +12,11 @@
 //! is `--name value` except boolean `--distributed`.
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::comm::StragglerSpec;
 use dore::config::{parse_prox, parse_schedule, JobConfig, ProblemConfig};
 use dore::coordinator::tcp::TcpTransport;
 use dore::data::synth;
-use dore::engine::{Session, SimNet, Threaded, TrainSpec};
+use dore::engine::{Participation, Session, SimNet, StalePolicy, Threaded, TrainSpec};
 use dore::harness::{characterize_round, compare, simulated_iteration_time};
 use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
@@ -142,14 +143,16 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
   train      --config job.json | --problem P --algorithm A --lr F --iters N
              [--alpha F --beta F --eta F --compressor SPEC --prox SPEC
               --schedule SPEC --workers N --minibatch N --eval-every N
-              --seed N --transport inproc|threads|tcp|simnet
-              [--bandwidth BPS] --distributed --csv FILE]
+              --seed N --participation full|k:<K>|dropout:<p> --stale skip|reuse
+              --transport inproc|threads|tcp|simnet
+              [--bandwidth BPS --straggler MULT[:FRAC[:JITTER_S]]]
+              --distributed --csv FILE]
   compare    --problem P --lr F --workers N --iters N [--minibatch N --seed N]
   bandwidth  [--dim N --workers N --compute SECS]
   artifacts  [--dir DIR]";
 
 fn cmd_train(f: &Flags) -> anyhow::Result<()> {
-    let (prob, spec): (Arc<dyn Problem>, TrainSpec) = if let Some(path) = f.get("config") {
+    let (prob, mut spec): (Arc<dyn Problem>, TrainSpec) = if let Some(path) = f.get("config") {
         let job = JobConfig::from_file(path)?;
         let prob = problem_from_config(&job.problem, job.n_workers)?;
         let spec = TrainSpec {
@@ -159,6 +162,7 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
             minibatch: job.minibatch,
             eval_every: job.eval_every,
             seed: job.seed,
+            ..Default::default()
         };
         (prob, spec)
     } else {
@@ -188,9 +192,18 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
             minibatch: f.get("minibatch").map(|s| s.parse()).transpose()?,
             eval_every: f.num("eval-every", 10)?,
             seed,
+            ..Default::default()
         };
         (prob, spec)
     };
+    // partial participation + stale-uplink policy apply on either path
+    // (config file or flags) and on every transport
+    if let Some(p) = f.get("participation") {
+        spec.participation = p.parse::<Participation>()?;
+    }
+    if let Some(s) = f.get("stale") {
+        spec.stale = s.parse::<StalePolicy>()?;
+    }
     let n = prob.n_workers();
     // --transport inproc (default) | threads | tcp | simnet — all produce
     // bit-identical iterates; they differ only in what carries the bytes
@@ -200,6 +213,10 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     } else {
         "inproc"
     });
+    anyhow::ensure!(
+        f.get("straggler").is_none() || transport == "simnet",
+        "--straggler models simulated network time and requires --transport simnet"
+    );
     let session = Session::shared(prob).spec(spec);
     let metrics = match transport {
         "inproc" => session.run()?,
@@ -207,7 +224,11 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
         "tcp" => session.transport(TcpTransport::new()).run()?,
         "simnet" => {
             let bw: f64 = f.num("bandwidth", 1e9)?;
-            session.transport(SimNet::with_bandwidth(bw)).run()?
+            let straggler = match f.get("straggler") {
+                None => StragglerSpec::none(),
+                Some(s) => s.parse::<StragglerSpec>()?,
+            };
+            session.transport(SimNet::with_bandwidth(bw).straggler(straggler)).run()?
         }
         other => anyhow::bail!("unknown transport '{other}' (inproc|threads|tcp|simnet)"),
     };

@@ -27,6 +27,9 @@ pub struct RunMetrics {
     pub master_residual_norm: Vec<f64>,
     /// Cumulative uplink bits (sum over workers) after each eval round.
     pub uplink_bits: u64,
+    /// Fresh uplink frames gathered across the run (= Σ per-round
+    /// participants; `iters · n_workers` under full participation).
+    pub participant_uplinks: u64,
     /// Cumulative downlink bits (broadcast counted once per worker).
     pub downlink_bits: u64,
     /// Rounds actually executed.

@@ -33,6 +33,7 @@ fn fig3_property_linear_vs_plateau() {
         minibatch: None,
         eval_every: 50,
         seed: 7,
+        ..Default::default()
     };
     let dore = run_inproc(&p, &spec(AlgorithmKind::Dore));
     let sgd = run_inproc(&p, &spec(AlgorithmKind::Sgd));
@@ -65,6 +66,7 @@ fn dore_rate_comparable_to_sgd() {
         minibatch: None,
         eval_every: 25,
         seed: 3,
+        ..Default::default()
     };
     let dore = run_inproc(&p, &spec(AlgorithmKind::Dore));
     let sgd = run_inproc(&p, &spec(AlgorithmKind::Sgd));
@@ -92,6 +94,7 @@ fn fig6_property_residuals_vanish_for_dore_not_doublesqueeze() {
         minibatch: None,
         eval_every: 100,
         seed: 11,
+        ..Default::default()
     };
     let dore = run_inproc(&p, &spec(AlgorithmKind::Dore));
     let ds = run_inproc(&p, &spec(AlgorithmKind::DoubleSqueeze));
@@ -123,6 +126,7 @@ fn stochastic_neighbourhood_convergence() {
         minibatch: Some(8),
         eval_every: 40,
         seed: 5,
+        ..Default::default()
     };
     let m = run_inproc(&p, &spec);
     let d0 = m.dist_to_opt[0];
@@ -145,6 +149,7 @@ fn nonconvex_mlp_dore_tracks_sgd() {
         minibatch: Some(16),
         eval_every: 50,
         seed: 13,
+        ..Default::default()
     };
     let sgd = run_inproc(&p, &spec(AlgorithmKind::Sgd));
     let dore = run_inproc(&p, &spec(AlgorithmKind::Dore));
@@ -175,6 +180,7 @@ fn dore_prox_l1_gives_sparse_solution() {
         minibatch: None,
         eval_every: 100,
         seed: 2,
+        ..Default::default()
     };
     let m = run_inproc(&p, &spec);
     assert!(m.loss.last().unwrap().is_finite());
@@ -193,7 +199,7 @@ fn dore_prox_l1_gives_sparse_solution() {
                 let mut gr = Xoshiro256::for_site(spec.seed ^ 0x5eed, 1 + i as u64, k);
                 p.local_grad(i, w.model(), None, &mut gr, &mut grad);
                 let mut qr = Xoshiro256::for_site(spec.seed, 1 + i as u64, k);
-                w.round(k as usize, &grad, &mut qr)
+                Some(w.round(k as usize, &grad, &mut qr))
             })
             .collect();
         let mut mr = Xoshiro256::for_site(spec.seed, 0, k);
@@ -225,7 +231,7 @@ fn model_consistency_across_all_algorithms() {
                     let mut gr = Xoshiro256::for_site(1, 1 + i as u64, k);
                     p.local_grad(i, w.model(), None, &mut gr, &mut grad);
                     let mut qr = Xoshiro256::for_site(2, 1 + i as u64, k);
-                    w.round(k as usize, &grad, &mut qr)
+                    Some(w.round(k as usize, &grad, &mut qr))
                 })
                 .collect();
             let mut mr = Xoshiro256::for_site(2, 0, k);
@@ -257,6 +263,7 @@ fn momentum_extension_accelerates_and_stays_stable() {
         minibatch: None,
         eval_every: 50,
         seed: 4,
+        ..Default::default()
     };
     let plain = run_inproc(&p, &mk(0.0));
     let mom = run_inproc(&p, &mk(0.6));

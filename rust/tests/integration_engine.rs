@@ -11,7 +11,8 @@ use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth::linreg_problem;
 use dore::engine::registry::{register_algorithm, registered_algorithms, AlgorithmEntry};
 use dore::engine::{
-    EvalEvent, Observer, RoundEvent, RunInfo, RunSummary, Session, SimNet, Threaded, TrainSpec,
+    EvalEvent, Observer, Participation, RoundEvent, RunInfo, RunSummary, Session, SimNet,
+    StalePolicy, Threaded, TrainSpec,
 };
 use std::sync::{Arc, Mutex};
 
@@ -67,6 +68,61 @@ fn all_seven_algorithms_bit_identical_on_all_transports() {
         assert_eq!(inproc.uplink_bits, simnet.uplink_bits);
         assert!(simnet.simulated_seconds.unwrap() > 0.0);
         assert!(inproc.simulated_seconds.is_none());
+    }
+}
+
+/// Partial participation is transport-independent: the mask is a pure
+/// function of `(seed, round, n)`, so k-of-n and dropout rounds — under
+/// both stale policies — produce bit-identical series whether workers run
+/// inline, on OS threads, or through the simulated network.
+#[test]
+fn partial_participation_bit_identical_on_all_transports() {
+    let p = Arc::new(linreg_problem(60, 16, 4, 0.1, 4));
+    let cases = [
+        (Participation::KOfN { k: 2 }, StalePolicy::Skip),
+        (Participation::KOfN { k: 2 }, StalePolicy::ReuseLast),
+        (Participation::Dropout { p: 0.4 }, StalePolicy::Skip),
+        (Participation::Dropout { p: 0.4 }, StalePolicy::ReuseLast),
+    ];
+    for &algo in &[AlgorithmKind::Dore, AlgorithmKind::Diana, AlgorithmKind::MemSgd] {
+        for &(participation, stale) in &cases {
+            let spec = TrainSpec {
+                algo,
+                iters: 25,
+                eval_every: 6,
+                participation,
+                stale,
+                ..Default::default()
+            };
+            let inproc = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+            let threaded = Session::shared(p.clone())
+                .spec(spec.clone())
+                .transport(Threaded::new())
+                .run()
+                .unwrap();
+            let simnet = Session::new(p.as_ref())
+                .spec(spec)
+                .transport(SimNet::gigabit())
+                .run()
+                .unwrap();
+            let tag = format!("{} {participation:?} {stale:?}", algo.name());
+            assert_eq!(inproc.loss, threaded.loss, "{tag}: loss differs on threaded");
+            assert_eq!(inproc.loss, simnet.loss, "{tag}: loss differs on simnet");
+            assert_eq!(
+                inproc.worker_residual_norm, threaded.worker_residual_norm,
+                "{tag}: residuals differ on threaded"
+            );
+            assert_eq!(
+                inproc.participant_uplinks, threaded.participant_uplinks,
+                "{tag}: participant accounting differs"
+            );
+            // analytic (inproc) and simnet accounting agree exactly
+            assert_eq!(inproc.uplink_bits, simnet.uplink_bits, "{tag}");
+            assert!(
+                inproc.participant_uplinks < 25 * 4,
+                "{tag}: some worker should have sat out"
+            );
+        }
     }
 }
 

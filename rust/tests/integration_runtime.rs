@@ -150,6 +150,7 @@ fn dore_trains_transformer_artifact() {
         minibatch: None,
         eval_every: 11,
         seed: 9,
+        ..Default::default()
     };
     let m = Session::new(&lm).spec(spec).run().unwrap();
     let first = m.loss.first().copied().unwrap();

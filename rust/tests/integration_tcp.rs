@@ -1,0 +1,78 @@
+//! TCP-transport smoke tests: the real localhost socket path (length-
+//! prefixed frames, one OS thread + one socket per worker) driven through
+//! the same `Session` loop as every other transport.
+//!
+//! Gated behind `DORE_TCP_TESTS=1` so sandboxed/loopback-restricted local
+//! runs stay green by default while CI (which sets the variable — see
+//! `.github/workflows/ci.yml`) always exercises `TcpTransport`.
+
+use dore::algorithms::AlgorithmKind;
+use dore::coordinator::tcp::TcpTransport;
+use dore::data::synth::linreg_problem;
+use dore::engine::{Participation, Session, StalePolicy, TrainSpec};
+use std::sync::Arc;
+
+fn enabled(test: &str) -> bool {
+    match std::env::var("DORE_TCP_TESTS") {
+        Ok(v) if v == "1" => true,
+        _ => {
+            eprintln!("{test}: skipped (set DORE_TCP_TESTS=1 to run the TCP smoke tests)");
+            false
+        }
+    }
+}
+
+/// The smoke: 2 workers, small dim, DORE over real sockets, bit-identical
+/// to the in-process reference.
+#[test]
+fn tcp_smoke_two_workers_small_dim() {
+    if !enabled("tcp_smoke_two_workers_small_dim") {
+        return;
+    }
+    let p = Arc::new(linreg_problem(40, 8, 2, 0.1, 7));
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters: 12,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let inproc = Session::shared(p.clone()).spec(spec.clone()).run().unwrap();
+    let tcp = Session::shared(p)
+        .spec(spec)
+        .transport(TcpTransport::new())
+        .run()
+        .unwrap();
+    assert_eq!(inproc.loss, tcp.loss, "tcp run must match inproc bit-for-bit");
+    assert_eq!(inproc.dist_to_opt, tcp.dist_to_opt);
+    assert!(tcp.loss.last().unwrap() < &tcp.loss[0], "training went backwards");
+}
+
+/// Partial participation over sockets: only selected workers transmit each
+/// round (the master reads just their sockets), under both stale policies,
+/// and the series still replays the in-process reference exactly.
+#[test]
+fn tcp_partial_participation_matches_inproc() {
+    if !enabled("tcp_partial_participation_matches_inproc") {
+        return;
+    }
+    let p = Arc::new(linreg_problem(40, 8, 2, 0.1, 7));
+    for stale in [StalePolicy::Skip, StalePolicy::ReuseLast] {
+        let spec = TrainSpec {
+            algo: AlgorithmKind::Dore,
+            iters: 12,
+            eval_every: 4,
+            participation: Participation::KOfN { k: 1 },
+            stale,
+            ..Default::default()
+        };
+        let inproc = Session::shared(p.clone()).spec(spec.clone()).run().unwrap();
+        let tcp = Session::shared(p.clone())
+            .spec(spec)
+            .transport(TcpTransport::new())
+            .run()
+            .unwrap();
+        assert_eq!(inproc.loss, tcp.loss, "{stale:?}: tcp diverged from inproc");
+        assert_eq!(inproc.participant_uplinks, tcp.participant_uplinks, "{stale:?}");
+        assert_eq!(tcp.participant_uplinks, 12, "{stale:?}: k=1 over 12 rounds");
+    }
+}

@@ -1,0 +1,244 @@
+//! Property-based tests over partial participation. Like
+//! `proptest_compression.rs`, the environment has no proptest crate, so
+//! this is a hand-rolled driver: each property is checked over randomized
+//! cases drawn from the crate's own deterministic RNG, and failures print
+//! the offending case parameters.
+//!
+//! The properties (ISSUE 2):
+//! 1. k-of-n selection picks **exactly k** workers, for any `(seed, k, n)`.
+//! 2. Selection is **deterministic** given the seed (and varies across
+//!    rounds / seeds).
+//! 3. The **residual state of skipped workers is unchanged** across a full
+//!    round (uplink + master step + broadcast) under the skip policy, for
+//!    every algorithm.
+//! 4. Worker/master model consistency survives partial rounds, and
+//!    engine runs under partial participation replay bit-identically
+//!    across transports.
+
+use dore::algorithms::{build, AlgorithmKind, MasterNode, WorkerNode};
+use dore::compression::{Compressed, Xoshiro256};
+use dore::data::synth::linreg_problem;
+use dore::engine::{worker_uplink, Participation, Session, StalePolicy, Threaded, TrainSpec};
+use dore::models::Problem;
+use std::sync::Arc;
+
+/// Exactly-k and determinism, over randomized `(seed, k, n, round)`.
+#[test]
+fn prop_kofn_selects_exactly_k_and_replays() {
+    let mut rng = Xoshiro256::seed_from_u64(0xA11CE);
+    for case in 0..500 {
+        let n = 1 + rng.next_below(40);
+        let k = 1 + rng.next_below(n);
+        let seed = rng.next_u64();
+        let round = rng.next_below(10_000);
+        let p = Participation::KOfN { k };
+        let mask = p.mask(seed, round, n);
+        assert_eq!(mask.len(), n, "case {case}: mask length");
+        assert_eq!(
+            mask.iter().filter(|&&m| m).count(),
+            k,
+            "case {case}: seed={seed} k={k} n={n} round={round} selected wrong count"
+        );
+        assert_eq!(
+            mask,
+            p.mask(seed, round, n),
+            "case {case}: selection not deterministic (seed={seed})"
+        );
+    }
+}
+
+/// Selection varies with round and seed (a constant subset would starve
+/// the unselected workers forever).
+#[test]
+fn prop_kofn_selection_varies() {
+    let mut rng = Xoshiro256::seed_from_u64(0xB0B);
+    for case in 0..50 {
+        let n = 4 + rng.next_below(20);
+        let k = 1 + rng.next_below(n / 2);
+        let seed = rng.next_u64();
+        let p = Participation::KOfN { k };
+        let distinct: std::collections::HashSet<Vec<bool>> =
+            (0..64).map(|r| p.mask(seed, r, n)).collect();
+        assert!(
+            distinct.len() > 1,
+            "case {case}: seed={seed} k={k} n={n}: 64 rounds, one subset"
+        );
+        // over 64 rounds of uniform k-subsets, every worker participates
+        // at least once with overwhelming probability
+        let mut ever = vec![false; n];
+        for r in 0..64 {
+            for (i, &m) in p.mask(seed, r, n).iter().enumerate() {
+                ever[i] |= m;
+            }
+        }
+        let starved = ever.iter().filter(|&&e| !e).count();
+        assert!(
+            starved * 10 < n,
+            "case {case}: {starved}/{n} workers never selected in 64 rounds"
+        );
+    }
+}
+
+/// Dropout masks are never empty and replay deterministically.
+#[test]
+fn prop_dropout_nonempty_and_deterministic() {
+    let mut rng = Xoshiro256::seed_from_u64(0xD20);
+    for case in 0..300 {
+        let n = 1 + rng.next_below(20);
+        let p_drop = 0.95 * rng.next_f64();
+        let seed = rng.next_u64();
+        let round = rng.next_below(1000);
+        let p = Participation::Dropout { p: p_drop };
+        let mask = p.mask(seed, round, n);
+        assert_eq!(mask.len(), n);
+        assert!(
+            mask.iter().any(|&m| m),
+            "case {case}: empty round (seed={seed} p={p_drop} n={n})"
+        );
+        assert_eq!(mask, p.mask(seed, round, n), "case {case}: dropout not deterministic");
+    }
+}
+
+/// Drive one manual engine round over the raw state machines, with
+/// explicit control of who participates. Mirrors `Session::run`'s
+/// call sequence (including the RNG sites).
+fn manual_partial_round(
+    problem: &dyn Problem,
+    spec: &TrainSpec,
+    workers: &mut [Box<dyn WorkerNode>],
+    master: &mut Box<dyn MasterNode>,
+    mask: &[bool],
+    round: usize,
+    grad: &mut [f32],
+) {
+    let mut slots: Vec<Option<Compressed>> = Vec::with_capacity(workers.len());
+    for (i, w) in workers.iter_mut().enumerate() {
+        slots.push(if mask[i] {
+            let (up, _norm) = worker_uplink(w.as_mut(), problem, spec, round, i, grad);
+            Some(up)
+        } else {
+            None
+        });
+    }
+    let mut mrng = Xoshiro256::for_site(spec.seed, 0, round as u64);
+    let down = master.round(round, &slots, &mut mrng);
+    for w in workers.iter_mut() {
+        w.apply_downlink(round, &down);
+    }
+}
+
+/// Property 3: under the skip policy, a skipped worker's residual /
+/// error-feedback state digest is unchanged across the whole round — the
+/// downlink may move its model, but h_i / e_i must not budge. Checked for
+/// all seven algorithms over randomized masks.
+#[test]
+fn prop_skipped_workers_residual_state_unchanged() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EED5);
+    for case in 0..40 {
+        let n = 2 + rng.next_below(4);
+        let seed = rng.next_u64();
+        let problem = linreg_problem(40 + rng.next_below(40), 8 + rng.next_below(16), n, 0.1, seed);
+        let spec = TrainSpec { seed, ..Default::default() };
+        for &algo in AlgorithmKind::all() {
+            let x0 = problem.init();
+            let (mut workers, mut master) = build(algo, n, &x0, &spec.hp).unwrap();
+            let mut grad = vec![0.0f32; problem.dim()];
+            for round in 0..8 {
+                // random non-empty mask (possibly full, possibly one worker)
+                let k = 1 + rng.next_below(n);
+                let mask = Participation::KOfN { k }.mask(rng.next_u64(), round, n);
+                let before: Vec<u64> = workers.iter().map(|w| w.residual_digest()).collect();
+                manual_partial_round(
+                    &problem, &spec, &mut workers, &mut master, &mask, round, &mut grad,
+                );
+                for (i, w) in workers.iter().enumerate() {
+                    if !mask[i] {
+                        assert_eq!(
+                            w.residual_digest(),
+                            before[i],
+                            "case {case} {}: skipped worker {i} residual state moved \
+                             at round {round} (n={n}, mask {mask:?})",
+                            algo.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Model consistency under partial rounds: every worker's model equals the
+/// master's bit-for-bit after each round, for all seven algorithms — the
+/// broadcast reaches everyone even when uplinks don't.
+#[test]
+fn prop_model_consistency_under_partial_rounds() {
+    let mut rng = Xoshiro256::seed_from_u64(0xC0DE);
+    for case in 0..25 {
+        let n = 2 + rng.next_below(4);
+        let seed = rng.next_u64();
+        let problem = linreg_problem(60, 12, n, 0.1, seed);
+        let spec = TrainSpec { seed, ..Default::default() };
+        for &algo in AlgorithmKind::all() {
+            let x0 = problem.init();
+            let (mut workers, mut master) = build(algo, n, &x0, &spec.hp).unwrap();
+            let mut grad = vec![0.0f32; problem.dim()];
+            for round in 0..10 {
+                let k = 1 + rng.next_below(n);
+                let mask = Participation::KOfN { k }.mask(rng.next_u64(), round, n);
+                manual_partial_round(
+                    &problem, &spec, &mut workers, &mut master, &mask, round, &mut grad,
+                );
+                // DORE reports x̂ which every node also tracks; the dense-
+                // broadcast schemes replace the model wholesale — either
+                // way the copies must agree bitwise
+                for (i, w) in workers.iter().enumerate() {
+                    assert_eq!(
+                        w.model(),
+                        master.model(),
+                        "case {case} {}: worker {i} model desync at round {round}",
+                        algo.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// End-to-end determinism + transport invariance with randomized
+/// participation specs through the real `Session` loop.
+#[test]
+fn prop_session_partial_runs_replay_across_transports() {
+    let mut rng = Xoshiro256::seed_from_u64(0xFEED);
+    for case in 0..8 {
+        let n = 2 + rng.next_below(3);
+        let k = 1 + rng.next_below(n);
+        let seed = rng.next_u64();
+        let stale = if rng.next_below(2) == 0 { StalePolicy::Skip } else { StalePolicy::ReuseLast };
+        let participation = if rng.next_below(2) == 0 {
+            Participation::KOfN { k }
+        } else {
+            Participation::Dropout { p: 0.6 * rng.next_f64() }
+        };
+        let p = Arc::new(linreg_problem(60, 10, n, 0.1, seed));
+        let spec = TrainSpec {
+            iters: 15,
+            eval_every: 5,
+            seed,
+            participation,
+            stale,
+            ..Default::default()
+        };
+        let a = Session::shared(p.clone()).spec(spec.clone()).run().unwrap();
+        let b = Session::shared(p.clone()).spec(spec.clone()).run().unwrap();
+        let c = Session::shared(p.clone())
+            .spec(spec)
+            .transport(Threaded::new())
+            .run()
+            .unwrap();
+        let tag = format!("case {case}: n={n} {participation:?} {stale:?} seed={seed}");
+        assert_eq!(a.loss, b.loss, "{tag}: same-seed replay diverged");
+        assert_eq!(a.uplink_bits, b.uplink_bits, "{tag}");
+        assert_eq!(a.loss, c.loss, "{tag}: threaded transport diverged");
+        assert_eq!(a.participant_uplinks, c.participant_uplinks, "{tag}");
+    }
+}
