@@ -5,7 +5,7 @@
 PY ?= python3
 ARTIFACT_DIR ?= artifacts
 
-.PHONY: artifacts test test-rust clean-artifacts
+.PHONY: artifacts test test-rust golden clean-artifacts
 
 # Lower the JAX graphs + Pallas quantizer to HLO text and write the
 # manifest the rust XlaRuntime loads (see python/compile/aot.py).
@@ -19,7 +19,13 @@ test-rust:
 	  --test integration_convergence --test integration_engine \
 	  --test integration_server --test integration_tcp \
 	  --test proptest_compression --test proptest_participation \
-	  --test golden_series
+	  --test proptest_reduce --test golden_series
+
+# Regenerate the golden trajectory baseline (rust/tests/golden/series.txt)
+# after an *intentional* numerical change, then commit the diff. A missing
+# file fails the suite loudly; this is the sanctioned regeneration path.
+golden:
+	DORE_GOLDEN_REGEN=1 cargo test --test golden_series
 
 # Full suite: guarantees the artifacts exist first.
 test: artifacts

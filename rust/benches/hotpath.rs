@@ -4,12 +4,28 @@
 //! throughput. Used for the EXPERIMENTS.md §Perf before/after ledger.
 //!
 //! ```
-//! cargo bench --bench hotpath
+//! cargo bench --bench hotpath                      # full run (d = 10^7)
+//! cargo bench --bench hotpath -- --quick           # CI smoke (small d)
+//! cargo bench --bench hotpath -- --json out.json   # machine-readable snapshot
 //! ```
+//!
+//! The headline section is the **sharded master reduction**: one full
+//! master pass (decode all uplinks → average → recompress downlink) at
+//! large `d`, serial vs `--reduce-threads`-style sharded — the ROADMAP
+//! scale item. The sharded pass is bit-identical to the serial one
+//! (`proptest_reduce`, `golden_series`); this bench measures what the
+//! determinism costs, which should be nothing: target ≥ 2× at d = 10⁷
+//! with 8 reduce threads.
 
-use dore::algorithms::{build, AlgorithmKind, HyperParams};
-use dore::compression::{codec, Compressor, PNormQuantizer, Xoshiro256};
+#![deny(deprecated)]
+
+use dore::algorithms::dore::DoreMaster;
+use dore::algorithms::psgd::PsgdMaster;
+use dore::algorithms::{AlgorithmKind, HyperParams, MasterNode};
+use dore::compression::{codec, from_spec, Compressed, Compressor, PNormQuantizer, Xoshiro256};
+use dore::engine::ReducePool;
 use dore::models::linalg;
+use std::fmt::Write as _;
 
 /// Median-of-N timing.
 fn bench<F: FnMut()>(name: &str, bytes_per_iter: Option<u64>, reps: usize, mut f: F) -> f64 {
@@ -34,8 +50,43 @@ fn bench<F: FnMut()>(name: &str, bytes_per_iter: Option<u64>, reps: usize, mut f
     med
 }
 
+/// One full master pass (decode every uplink → average → downlink) over
+/// `n` uplinks of dimension `d`, timed with the given reduce pool. A
+/// fresh master per call keeps serial and sharded runs on identical state
+/// evolution.
+fn master_pass(
+    label: &str,
+    d: usize,
+    ups: &[Option<Compressed>],
+    mut master: Box<dyn MasterNode>,
+    pool: ReducePool,
+    reps: usize,
+) -> f64 {
+    master.set_reduce_pool(pool);
+    let mut k = 0u64;
+    bench(
+        &format!("{label} master pass n={} ({} threads)", ups.len(), pool.threads()),
+        Some(ups.len() as u64 * 4 * d as u64),
+        reps,
+        || {
+            let mut mr = Xoshiro256::for_site(1, 0, k);
+            let down = master.round(k as usize, ups, &mut mr);
+            k += 1;
+            std::hint::black_box(down.dim());
+        },
+    )
+}
+
 fn main() {
-    println!("=== hot-path microbenches (median of 9) ===\n");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    println!("=== hot-path microbenches (median of 9{}) ===\n", if quick { ", --quick" } else { "" });
     let d = 1 << 20; // 1M coords = 4 MB
     let mut rng = Xoshiro256::seed_from_u64(1);
     let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
@@ -76,21 +127,58 @@ fn main() {
     bench("dense axpy (1M f32)", Some(bytes), 9, || {
         linalg::axpy(0.1, &y, &mut acc);
     });
+    drop(acc);
+    drop(y);
 
-    // -- full master round at ResNet18 scale ------------------------------
-    let d_big = 11_173_962usize;
+    // -- sharded master reduction (the ROADMAP scale item) ----------------
+    // One full master pass over n ternary uplinks at large d: the pass the
+    // `hotpath` ledger showed dominating the round. Serial vs 8 reduce
+    // threads, bit-identical results (proptest_reduce), target >= 2x.
+    let (d_r, n_r, reps_r) = if quick { (1 << 18, 4, 3) } else { (10_000_000, 8, 5) };
+    let threads = 8usize;
+    println!("\n--- sharded master reduction: d={d_r}, {n_r} workers ---");
+    let grad: Vec<f32> = {
+        let mut g_rng = Xoshiro256::seed_from_u64(3);
+        (0..d_r).map(|_| 0.01 * g_rng.next_gaussian()).collect()
+    };
+    let ups: Vec<Option<Compressed>> = (0..n_r)
+        .map(|i| Some(q.compress(&grad, &mut Xoshiro256::for_site(2, 1 + i as u64, 0))))
+        .collect();
+    drop(grad);
+    let x0_r = vec![0.0f32; d_r];
+    let hp_r = HyperParams::paper_defaults();
+    let mk_dore = || -> Box<dyn MasterNode> {
+        let mq = from_spec(&hp_r.master_compressor).expect("master compressor");
+        Box::new(DoreMaster::new(&x0_r, n_r, mq, hp_r.clone()))
+    };
+    let mk_avg = || -> Box<dyn MasterNode> { Box::new(PsgdMaster::new(&x0_r, n_r, hp_r.clone())) };
+    let dore_serial = master_pass("DORE", d_r, &ups, mk_dore(), ReducePool::serial(), reps_r);
+    let dore_sharded = master_pass("DORE", d_r, &ups, mk_dore(), ReducePool::new(threads), reps_r);
+    let avg_serial = master_pass("avg", d_r, &ups, mk_avg(), ReducePool::serial(), reps_r);
+    let avg_sharded = master_pass("avg", d_r, &ups, mk_avg(), ReducePool::new(threads), reps_r);
+    println!(
+        "  speedup: DORE {:.2}x, avg {:.2}x ({} reduce threads)",
+        dore_serial / dore_sharded,
+        avg_serial / avg_sharded,
+        threads
+    );
+    drop(ups);
+    drop(x0_r);
+
+    // -- full worker+master round at ResNet18 scale -----------------------
+    let d_big = if quick { 1 << 18 } else { 11_173_962usize };
     println!();
     for algo in [AlgorithmKind::Dore, AlgorithmKind::Sgd] {
         let x0 = vec![0.0f32; d_big];
         let hp = HyperParams::paper_defaults();
-        let (mut ws, mut master) = build(algo, 1, &x0, &hp).unwrap();
+        let (mut ws, mut master) = dore::algorithms::build(algo, 1, &x0, &hp).unwrap();
         let mut g_rng = Xoshiro256::seed_from_u64(3);
         let grad: Vec<f32> = (0..d_big).map(|_| 0.01 * g_rng.next_gaussian()).collect();
         let mut k = 0u64;
         bench(
-            &format!("{} full worker+master round (d=11.17M)", algo.name()),
+            &format!("{} full worker+master round (d={d_big})", algo.name()),
             Some(4 * d_big as u64),
-            5,
+            if quick { 3 } else { 5 },
             || {
                 let mut wr = Xoshiro256::for_site(1, 1, k);
                 let up = ws[0].round(k as usize, &grad, &mut wr);
@@ -102,4 +190,23 @@ fn main() {
         );
     }
     eprintln!("(sink {sink})");
+
+    if let Some(path) = json_path {
+        // hand-rolled JSON (no serde in this environment); times in ms
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"bench\": \"hotpath/master_reduce\",");
+        let _ = writeln!(out, "  \"quick\": {quick},");
+        let _ = writeln!(out, "  \"d\": {d_r},");
+        let _ = writeln!(out, "  \"workers\": {n_r},");
+        let _ = writeln!(out, "  \"reduce_threads\": {threads},");
+        let _ = writeln!(out, "  \"dore_serial_ms\": {:.3},", dore_serial * 1e3);
+        let _ = writeln!(out, "  \"dore_sharded_ms\": {:.3},", dore_sharded * 1e3);
+        let _ = writeln!(out, "  \"dore_speedup\": {:.3},", dore_serial / dore_sharded);
+        let _ = writeln!(out, "  \"avg_serial_ms\": {:.3},", avg_serial * 1e3);
+        let _ = writeln!(out, "  \"avg_sharded_ms\": {:.3},", avg_sharded * 1e3);
+        let _ = writeln!(out, "  \"avg_speedup\": {:.3}", avg_serial / avg_sharded);
+        out.push_str("}\n");
+        std::fs::write(&path, out).expect("write json snapshot");
+        println!("wrote {path}");
+    }
 }

@@ -8,6 +8,7 @@
 
 use super::{digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::models::linalg;
 use crate::F;
 
@@ -78,6 +79,7 @@ pub struct DianaMaster {
     vel: Vec<F>,
     n: usize,
     hp: HyperParams,
+    pool: ReducePool,
 }
 
 impl DianaMaster {
@@ -89,6 +91,7 @@ impl DianaMaster {
             vel: Vec::new(),
             n,
             hp,
+            pool: ReducePool::serial(),
         }
     }
 }
@@ -101,18 +104,27 @@ impl MasterNode for DianaMaster {
         _rng: &mut Xoshiro256,
     ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
-        // ĝ = h + (1/n) Σ_{i∈S} Q(Δ_i): an absent slot is Δ̂_i = 0 — its
-        // stale h_i is already inside h — so the normalization stays 1/n
-        // under partial participation.
-        self.ghat.copy_from_slice(&self.h);
+        // ĝ = h + (1/n) Σ_{i∈S} Q(Δ_i) and h ← h + α·(1/n) Σ_{i∈S} Q(Δ_i),
+        // fused into one sweep over the pool's dimension shards. An absent
+        // slot is Δ̂_i = 0 — its stale h_i is already inside h — so the
+        // normalization stays 1/n under partial participation. Within each
+        // shard the uplinks decode straight into the (ĝ, h) slices in slot
+        // order, so every coordinate accumulates exactly as on the serial
+        // path for any reduce-thread count.
         let inv = 1.0 / self.n as F;
-        for m in uplinks.iter().flatten() {
-            m.add_scaled_into(inv, &mut self.ghat);
-        }
-        // h ← h + α · (1/n) Σ_{i∈S} Q(Δ_i) — mirrors exactly the h_i
-        // updates the participants applied, keeping h = (1/n)Σ h_i
-        for m in uplinks.iter().flatten() {
-            m.add_scaled_into(self.hp.alpha * inv, &mut self.h);
+        let alpha_inv = self.hp.alpha * inv;
+        let pool = self.pool;
+        {
+            let (ghat, h) = (&mut self.ghat, &mut self.h);
+            pool.sweep2(ghat, h, |lo, gc, hc| {
+                gc.copy_from_slice(hc);
+                for m in uplinks.iter().flatten() {
+                    m.add_scaled_range_into(inv, lo, gc);
+                }
+                for m in uplinks.iter().flatten() {
+                    m.add_scaled_range_into(alpha_inv, lo, hc);
+                }
+            });
         }
         let gamma = self.hp.lr_at(round);
         super::apply_momentum(self.hp.momentum, &self.ghat, &mut self.vel);
@@ -124,6 +136,10 @@ impl MasterNode for DianaMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn set_reduce_pool(&mut self, pool: ReducePool) {
+        self.pool = pool;
     }
 }
 

@@ -26,6 +26,7 @@
 
 use super::{digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::models::linalg;
 use crate::F;
 
@@ -110,6 +111,7 @@ pub struct DoreMaster {
     mq: BoxedCompressor,
     hp: HyperParams,
     last_norm: f64,
+    pool: ReducePool,
 }
 
 impl DoreMaster {
@@ -127,6 +129,7 @@ impl DoreMaster {
             mq,
             hp,
             last_norm: 0.0,
+            pool: ReducePool::serial(),
         }
     }
 
@@ -145,23 +148,33 @@ impl MasterNode for DoreMaster {
     ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
         let inv = 1.0 / self.n as F;
-        // ĝ = h + (1/n)Σ_{i∈S} Δ̂_i; h ← h + α·(1/n)Σ_{i∈S} Δ̂_i (lines
-        // 14–15, 17) — one fused decode pass per uplink instead of two
-        // (§Perf). An absent slot is Δ̂_i = 0: the worker that sat out
-        // left its h_i alone, its stale gradient estimate is already
-        // inside h, and the normalization stays 1/n — this is how DORE's
-        // gradient state absorbs partial participation natively.
-        self.ghat.copy_from_slice(&self.h);
         let alpha_inv = self.hp.alpha * inv;
-        for m in uplinks.iter().flatten() {
+        let pool = self.pool;
+        // ĝ = h + (1/n)Σ_{i∈S} Δ̂_i; h ← h + α·(1/n)Σ_{i∈S} Δ̂_i (lines
+        // 14–15, 17) — one fused decode pass per uplink instead of two,
+        // swept over the pool's dimension shards (§Perf). An absent slot
+        // is Δ̂_i = 0: the worker that sat out left its h_i alone, its
+        // stale gradient estimate is already inside h, and the
+        // normalization stays 1/n — this is how DORE's gradient state
+        // absorbs partial participation natively. Within a shard the
+        // uplinks fold in slot order, so every coordinate sees the serial
+        // accumulation order for any reduce-thread count.
+        {
             let (ghat, h) = (&mut self.ghat, &mut self.h);
-            m.decode_each(|i, v| {
-                ghat[i] += inv * v;
-                h[i] += alpha_inv * v;
+            pool.sweep2(ghat, h, |lo, gc, hc| {
+                gc.copy_from_slice(hc);
+                for m in uplinks.iter().flatten() {
+                    m.decode_each_range(lo, lo + gc.len(), |i, v| {
+                        gc[i - lo] += inv * v;
+                        hc[i - lo] += alpha_inv * v;
+                    });
+                }
             });
         }
         // x^{k+1} = prox_{γR}(x̂ − γĝ) and q = x^{k+1} − x̂ + η·e
-        // (lines 16, 18) fused into one sweep — prox is separable.
+        // (lines 16, 18) fused into one sharded sweep — prox is separable,
+        // so shards are independent; ‖q‖ is folded from fixed per-shard
+        // partials (deterministic for any thread count).
         let gamma = self.hp.lr_at(round);
         if self.hp.momentum > 0.0 {
             // extension: heavy-ball on the recovered gradient estimate.
@@ -170,28 +183,48 @@ impl MasterNode for DoreMaster {
         }
         let prox = self.hp.prox;
         let eta = self.hp.eta;
-        let mut qsq = 0.0f64;
-        for ((q, xn), ((&xh, &g), &e)) in self
-            .qbuf
-            .iter_mut()
-            .zip(self.xnext.iter_mut())
-            .zip(self.xhat.iter().zip(self.ghat.iter()).zip(self.e.iter()))
+        let shard = pool.shard_width();
+        let d = self.qbuf.len();
+        let mut qsq = vec![0.0f64; d.div_ceil(shard)];
         {
-            let x_new = prox.apply_one(gamma, xh - gamma * g);
-            *xn = x_new;
-            let qv = x_new - xh + eta * e;
-            *q = qv;
-            qsq += (qv as f64) * (qv as f64);
+            let (qbuf, xnext) = (&mut self.qbuf, &mut self.xnext);
+            let (xhat, ghat, e) = (&self.xhat, &self.ghat, &self.e);
+            let items: Vec<(usize, &mut [F], &mut [F], &mut f64)> = qbuf
+                .chunks_mut(shard)
+                .zip(xnext.chunks_mut(shard))
+                .zip(qsq.iter_mut())
+                .enumerate()
+                .map(|(c, ((qc, xc), sq))| (c * shard, qc, xc, sq))
+                .collect();
+            pool.run(items, |(lo, qc, xc, sq)| {
+                let mut acc = 0.0f64;
+                for (j, (q, xn)) in qc.iter_mut().zip(xc.iter_mut()).enumerate() {
+                    let i = lo + j;
+                    let x_new = prox.apply_one(gamma, xhat[i] - gamma * ghat[i]);
+                    *xn = x_new;
+                    let qv = x_new - xhat[i] + eta * e[i];
+                    *q = qv;
+                    acc += (qv as f64) * (qv as f64);
+                }
+                *sq = acc;
+            });
         }
-        self.last_norm = qsq.sqrt();
-        let down = self.mq.compress(&self.qbuf, rng); // line 19
-        // e ← q − q̂; x̂ ← x̂ + β·q̂  (lines 20–21) — one fused decode pass.
+        self.last_norm = qsq.iter().sum::<f64>().sqrt();
+        // line 19 — the model-residual downlink, compressed over the same
+        // shards (identical payload + RNG stream as the serial compress).
+        let down = self.mq.compress_sharded(&self.qbuf, rng, &pool);
+        // e ← q − q̂; x̂ ← x̂ + β·q̂  (lines 20–21) — one fused decode
+        // sweep over the shards.
         {
-            let (e, qbuf, xhat) = (&mut self.e, &self.qbuf, &mut self.xhat);
+            let (e, xhat) = (&mut self.e, &mut self.xhat);
+            let qbuf = &self.qbuf;
             let beta = self.hp.beta;
-            down.decode_each(|i, dq| {
-                e[i] = qbuf[i] - dq;
-                xhat[i] += beta * dq;
+            let down_ref = &down;
+            pool.sweep2(e, xhat, |lo, ec, xc| {
+                down_ref.decode_each_range(lo, lo + ec.len(), |i, dq| {
+                    ec[i - lo] = qbuf[i] - dq;
+                    xc[i - lo] += beta * dq;
+                });
             });
         }
         down
@@ -199,6 +232,10 @@ impl MasterNode for DoreMaster {
 
     fn model(&self) -> &[F] {
         &self.xhat
+    }
+
+    fn set_reduce_pool(&mut self, pool: ReducePool) {
+        self.pool = pool;
     }
 
     fn last_compressed_norm(&self) -> f64 {

@@ -14,6 +14,7 @@
 
 use super::{digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::models::linalg;
 use crate::F;
 
@@ -83,6 +84,7 @@ pub struct DsMaster {
     mq: BoxedCompressor,
     hp: HyperParams,
     last_norm: f64,
+    pool: ReducePool,
 }
 
 impl DsMaster {
@@ -95,6 +97,7 @@ impl DsMaster {
             mq,
             hp,
             last_norm: 0.0,
+            pool: ReducePool::serial(),
         }
     }
 }
@@ -109,26 +112,58 @@ impl MasterNode for DsMaster {
         debug_assert_eq!(uplinks.len(), self.n);
         // v = mean over participants of Q(p_i), plus E — the γ lives
         // inside the uplinks, so averaging over |S| keeps the step size
-        // right under partial participation
-        self.v.copy_from_slice(&self.err);
+        // right under partial participation. Decoded shard-by-shard
+        // straight into v (slot order within each shard = the serial
+        // accumulation order), with ‖v‖ folded from fixed per-shard
+        // partials.
         let present = uplinks.iter().flatten().count();
         let inv = 1.0 / present.max(1) as F;
-        for m in uplinks.iter().flatten() {
-            m.add_scaled_into(inv, &mut self.v);
+        let pool = self.pool;
+        let shard = pool.shard_width();
+        let mut vsq = vec![0.0f64; self.v.len().div_ceil(shard)];
+        {
+            let err = &self.err;
+            let items: Vec<(usize, &mut [F], &mut f64)> = self
+                .v
+                .chunks_mut(shard)
+                .zip(vsq.iter_mut())
+                .enumerate()
+                .map(|(c, (vc, sq))| (c * shard, vc, sq))
+                .collect();
+            pool.run(items, |(lo, vc, sq)| {
+                vc.copy_from_slice(&err[lo..lo + vc.len()]);
+                for m in uplinks.iter().flatten() {
+                    m.add_scaled_range_into(inv, lo, vc);
+                }
+                *sq = vc.iter().map(|&x| (x as f64) * (x as f64)).sum();
+            });
         }
-        self.last_norm = linalg::norm2(&self.v);
-        let down = self.mq.compress(&self.v, rng);
-        // E = v − Q(v)
-        self.err.copy_from_slice(&self.v);
-        down.add_scaled_into(-1.0, &mut self.err);
-        // x ← x − Q(v)
-        down.add_scaled_into(-1.0, &mut self.x);
+        self.last_norm = vsq.iter().sum::<f64>().sqrt();
+        // the downlink, compressed over the same shards (bit-identical
+        // payload + RNG stream to the serial compress)
+        let down = self.mq.compress_sharded(&self.v, rng, &pool);
+        // E = v − Q(v);  x ← x − Q(v) — one fused decode sweep.
+        {
+            let (err, x) = (&mut self.err, &mut self.x);
+            let v = &self.v;
+            let down_ref = &down;
+            pool.sweep2(err, x, |lo, ec, xc| {
+                down_ref.decode_each_range(lo, lo + ec.len(), |i, dq| {
+                    ec[i - lo] = v[i] - dq;
+                    xc[i - lo] -= dq;
+                });
+            });
+        }
         self.hp.prox.apply(self.hp.lr_at(round), &mut self.x);
         down
     }
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn set_reduce_pool(&mut self, pool: ReducePool) {
+        self.pool = pool;
     }
 
     fn last_compressed_norm(&self) -> f64 {

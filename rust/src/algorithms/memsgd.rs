@@ -7,6 +7,7 @@
 
 use super::{average_present, digest_f32, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::models::linalg;
 use crate::F;
 
@@ -77,11 +78,12 @@ pub struct MemSgdMaster {
     dbar: Vec<F>,
     n: usize,
     hp: HyperParams,
+    pool: ReducePool,
 }
 
 impl MemSgdMaster {
     pub fn new(x0: &[F], n: usize, hp: HyperParams) -> Self {
-        Self { x: x0.to_vec(), dbar: vec![0.0; x0.len()], n, hp }
+        Self { x: x0.to_vec(), dbar: vec![0.0; x0.len()], n, hp, pool: ReducePool::serial() }
     }
 }
 
@@ -94,7 +96,7 @@ impl MasterNode for MemSgdMaster {
     ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
         // partial participation: average over whoever showed up
-        average_present(uplinks, &mut self.dbar);
+        average_present(uplinks, &mut self.dbar, &self.pool);
         // the γ is inside the uplinks: x ← x − mean(Q(γg_i + e_i))
         linalg::axpy(-1.0, &self.dbar, &mut self.x);
         self.hp.prox.apply(self.hp.lr_at(round), &mut self.x);
@@ -103,6 +105,10 @@ impl MasterNode for MemSgdMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn set_reduce_pool(&mut self, pool: ReducePool) {
+        self.pool = pool;
     }
 }
 

@@ -30,6 +30,7 @@ pub mod psgd;
 pub mod qsgd;
 
 use crate::compression::{Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::optim::{LrSchedule, Prox};
 use crate::F;
 
@@ -155,6 +156,15 @@ pub trait MasterNode: Send {
     /// The iterate to evaluate/report (`x̂ᵏ` for DORE, `xᵏ` otherwise).
     fn model(&self) -> &[F];
 
+    /// Install the dimension-sharded pool that drives this master's
+    /// decode→average→compress sweeps ([`crate::engine::reduce`]). Called
+    /// by the engine before round 0 with the pool configured on the
+    /// [`crate::engine::TrainSpec`]; results must be bit-identical for
+    /// every pool (the built-in masters shard by fixed dimension chunks,
+    /// so they are). The default ignores the pool — external masters that
+    /// never look at it simply stay serial.
+    fn set_reduce_pool(&mut self, _pool: ReducePool) {}
+
     /// ‖variable fed to the master-side compressor‖ last round (Fig. 6).
     fn last_compressed_norm(&self) -> f64 {
         0.0
@@ -257,17 +267,18 @@ pub(crate) fn apply_momentum(m: F, g: &[F], vel: &mut Vec<F>) {
 
 /// Average the *present* uplinks into a dense buffer:
 /// `out = (1/|S|) Σ_{i∈S} decode(m_i)` where `S` is the set of `Some`
-/// slots. An empty round leaves `out` zero (the step is a no-op).
-pub(crate) fn average_present(uplinks: &[Option<Compressed>], out: &mut [F]) {
+/// slots. An empty round leaves `out` zero (the step is a no-op). The sum
+/// is swept over `pool`'s dimension shards, each payload decoding straight
+/// into the destination shard; per coordinate the slots fold in order, so
+/// the result is bit-identical for every thread count.
+pub(crate) fn average_present(uplinks: &[Option<Compressed>], out: &mut [F], pool: &ReducePool) {
     out.fill(0.0);
     let present = uplinks.iter().flatten().count();
     if present == 0 {
         return;
     }
     let inv = 1.0 / present as F;
-    for m in uplinks.iter().flatten() {
-        m.add_scaled_into(inv, out);
-    }
+    pool.accumulate(uplinks, inv, out);
 }
 
 /// FNV-1a over the f32 bit patterns — the cheap order-sensitive digest

@@ -4,6 +4,7 @@
 
 use super::{average_present, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::models::linalg;
 use crate::F;
 
@@ -47,11 +48,19 @@ pub struct PsgdMaster {
     vel: Vec<F>,
     n: usize,
     hp: HyperParams,
+    pool: ReducePool,
 }
 
 impl PsgdMaster {
     pub fn new(x0: &[F], n: usize, hp: HyperParams) -> Self {
-        Self { x: x0.to_vec(), gbar: vec![0.0; x0.len()], vel: Vec::new(), n, hp }
+        Self {
+            x: x0.to_vec(),
+            gbar: vec![0.0; x0.len()],
+            vel: Vec::new(),
+            n,
+            hp,
+            pool: ReducePool::serial(),
+        }
     }
 }
 
@@ -64,7 +73,7 @@ impl MasterNode for PsgdMaster {
     ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
         // partial participation: average over whoever showed up
-        average_present(uplinks, &mut self.gbar);
+        average_present(uplinks, &mut self.gbar, &self.pool);
         let gamma = self.hp.lr_at(round);
         super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
         let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
@@ -75,6 +84,10 @@ impl MasterNode for PsgdMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn set_reduce_pool(&mut self, pool: ReducePool) {
+        self.pool = pool;
     }
 }
 

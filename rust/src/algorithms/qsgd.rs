@@ -9,6 +9,7 @@
 
 use super::{average_present, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{BoxedCompressor, Compressed, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::models::linalg;
 use crate::F;
 
@@ -50,11 +51,19 @@ pub struct QsgdMaster {
     vel: Vec<F>,
     n: usize,
     hp: HyperParams,
+    pool: ReducePool,
 }
 
 impl QsgdMaster {
     pub fn new(x0: &[F], n: usize, hp: HyperParams) -> Self {
-        Self { x: x0.to_vec(), gbar: vec![0.0; x0.len()], vel: Vec::new(), n, hp }
+        Self {
+            x: x0.to_vec(),
+            gbar: vec![0.0; x0.len()],
+            vel: Vec::new(),
+            n,
+            hp,
+            pool: ReducePool::serial(),
+        }
     }
 }
 
@@ -67,7 +76,7 @@ impl MasterNode for QsgdMaster {
     ) -> Compressed {
         debug_assert_eq!(uplinks.len(), self.n);
         // partial participation: average over whoever showed up
-        average_present(uplinks, &mut self.gbar);
+        average_present(uplinks, &mut self.gbar, &self.pool);
         let gamma = self.hp.lr_at(round);
         super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
         let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
@@ -78,6 +87,10 @@ impl MasterNode for QsgdMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn set_reduce_pool(&mut self, pool: ReducePool) {
+        self.pool = pool;
     }
 }
 

@@ -35,6 +35,17 @@ pub fn wire_bits(c: &Compressed) -> u64 {
 /// Header: 1 byte tag + 4 bytes dim.
 const HEADER_BITS: u64 = 8 + 32;
 
+/// Bit width of one stored level in a [`Compressed::Levels`] payload:
+/// each level lives in `[-s, s]`, so `ceil(log2(2s + 1))` bits (min 1).
+/// The single source of truth shared by [`wire_bits_with`], [`encode`]
+/// and [`decode`] — they previously re-derived it independently (with
+/// different integer widths), which is exactly how accounting and codec
+/// drift apart.
+#[inline]
+pub fn levels_bits_per(s: u8) -> u32 {
+    (2 * s as u32 + 1).next_power_of_two().trailing_zeros().max(1)
+}
+
 pub fn wire_bits_with(c: &Compressed, packing: TritPacking) -> u64 {
     match c {
         Compressed::Dense(v) => HEADER_BITS + 32 * v.len() as u64,
@@ -47,9 +58,7 @@ pub fn wire_bits_with(c: &Compressed, packing: TritPacking) -> u64 {
             HEADER_BITS + 32 + 32 * norms.len() as u64 + payload
         }
         Compressed::Levels { norms, levels, s, .. } => {
-            // Each level ∈ [-s, s]: ceil(log2(2s+1)) bits, bit-packed.
-            let bits_per = (2 * *s as u64 + 1).next_power_of_two().trailing_zeros() as u64;
-            let bits_per = bits_per.max(1);
+            let bits_per = levels_bits_per(*s) as u64;
             HEADER_BITS + 32 + 8 + 32 * norms.len() as u64 + bits_per * levels.len() as u64
         }
         Compressed::Sparse { idx, vals, .. } => {
@@ -193,7 +202,7 @@ pub fn encode(c: &Compressed) -> Vec<u8> {
             for &n in norms {
                 put_f32(&mut out, n);
             }
-            let bits_per = ((2 * *s as u64 + 1).next_power_of_two().trailing_zeros() as u32).max(1);
+            let bits_per = levels_bits_per(*s);
             let mut bw = BitWriter::new();
             for &l in levels {
                 bw.write((l as i16 + *s as i16) as u64, bits_per);
@@ -278,7 +287,7 @@ pub fn decode(buf: &[u8]) -> anyhow::Result<Compressed> {
             let s = buf[pos];
             pos += 1;
             let nblocks = dim.div_ceil(block_size);
-            let bits_per = ((2 * s as u64 + 1).next_power_of_two().trailing_zeros() as u32).max(1);
+            let bits_per = levels_bits_per(s);
             anyhow::ensure!(
                 buf.len() >= pos + 4 * nblocks + (bits_per as usize * dim).div_ceil(8),
                 "truncated levels payload"
@@ -399,6 +408,51 @@ mod tests {
         let bytes = encode(&c).len() as u64 * 8;
         let bits = wire_bits(&c);
         assert!(bytes >= bits && bytes - bits < 16, "bytes={bytes} bits={bits}");
+    }
+
+    #[test]
+    fn levels_bits_per_boundary_values() {
+        // (s, expected ceil(log2(2s+1)).max(1))
+        for (s, want) in
+            [(1u8, 2u32), (2, 3), (3, 3), (4, 4), (7, 4), (8, 5), (63, 7), (64, 8), (127, 8)]
+        {
+            assert_eq!(levels_bits_per(s), want, "s={s}");
+        }
+    }
+
+    /// The satellite pin: the one shared `bits_per` makes the analytic
+    /// accounting equal the real encoder output, `wire_bits == 8 × encoded
+    /// length`, at every boundary `s` (bit widths 2..=8). Dims are chosen
+    /// as multiples of 8 so the level bitstream is byte-aligned and the
+    /// equality is exact, not padding-fuzzy.
+    #[test]
+    fn wire_bits_equals_encoded_bits_for_boundary_levels() {
+        for s in [1u8, 2, 3, 4, 7, 8, 63, 64, 127] {
+            let dim = 24;
+            let levels: Vec<i8> =
+                (0..dim).map(|i| ((i % (2 * s as usize + 1)) as i16 - s as i16) as i8).collect();
+            let c = Compressed::Levels {
+                dim,
+                block_size: 8,
+                s,
+                norms: vec![1.5, 0.25, 3.0],
+                levels,
+            };
+            let bytes = encode(&c);
+            assert_eq!(wire_bits(&c), bytes.len() as u64 * 8, "s={s}");
+            assert_eq!(decode(&bytes).unwrap(), c, "s={s} roundtrip");
+        }
+        // ternary base-243 packs 5 trits/byte, so its accounting is exact
+        // at every dim; sparse/dense headers are byte-aligned too.
+        let t = Compressed::Ternary {
+            dim: 11,
+            block_size: 4,
+            norms: vec![2.0, 0.5, 1.0],
+            trits: vec![1, 0, -1, 1, 0, 0, 1, -1, -1, 0, 1],
+        };
+        assert_eq!(wire_bits(&t), encode(&t).len() as u64 * 8);
+        let d = Compressed::Dense(vec![1.0, -2.0, 3.5]);
+        assert_eq!(wire_bits(&d), encode(&d).len() as u64 * 8);
     }
 
     #[test]

@@ -175,6 +175,121 @@ impl Compressed {
         }
     }
 
+    /// Chunked decode: `out[j − lo] += scale * decode(self)[j]` for
+    /// `j ∈ [lo, lo + out.len())` — [`Compressed::add_scaled_into`]
+    /// restricted to one dimension shard, decoding straight into a slice
+    /// of the destination buffer so the sharded master reduction
+    /// ([`crate::engine::reduce`]) never materializes a dense per-worker
+    /// temporary. Performs the identical floating-point operation per
+    /// coordinate as the full-vector form (sparse payloads touch only
+    /// their stored indices, ternary/levels multiply through zeros), so
+    /// accumulating a vector shard-by-shard is bit-identical to one
+    /// whole-vector pass.
+    pub fn add_scaled_range_into(&self, scale: F, lo: usize, out: &mut [F]) {
+        let hi = lo + out.len();
+        assert!(hi <= self.dim(), "range {lo}..{hi} exceeds dim {}", self.dim());
+        match self {
+            Compressed::Dense(v) => {
+                for (o, &x) in out.iter_mut().zip(v[lo..hi].iter()) {
+                    *o += scale * x;
+                }
+            }
+            Compressed::Ternary { block_size, norms, trits, .. } => {
+                let bs = *block_size;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    let m = scale * norms[b];
+                    for (o, &t) in out[j - lo..end - lo].iter_mut().zip(&trits[j..end]) {
+                        *o += m * t as F;
+                    }
+                    j = end;
+                }
+            }
+            Compressed::Levels { block_size, s, norms, levels, .. } => {
+                let bs = *block_size;
+                let inv_s = 1.0 / *s as F;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    let m = scale * norms[b] * inv_s;
+                    for (o, &l) in out[j - lo..end - lo].iter_mut().zip(&levels[j..end]) {
+                        *o += m * l as F;
+                    }
+                    j = end;
+                }
+            }
+            Compressed::Sparse { idx, vals, .. } => {
+                let start = idx.partition_point(|&i| (i as usize) < lo);
+                for (&i, &v) in idx[start..].iter().zip(vals[start..].iter()) {
+                    if i as usize >= hi {
+                        break;
+                    }
+                    out[i as usize - lo] += scale * v;
+                }
+            }
+        }
+    }
+
+    /// Chunked [`Compressed::decode_each`]: visit **every** coordinate in
+    /// `[lo, hi)` (zeros included) with its decoded value, producing the
+    /// identical `(index, value)` sequence as the sub-range of a
+    /// full-vector `decode_each` — the fused-consumer hook of the sharded
+    /// master folds.
+    pub fn decode_each_range(&self, lo: usize, hi: usize, mut f: impl FnMut(usize, F)) {
+        debug_assert!(lo <= hi);
+        assert!(hi <= self.dim(), "range {lo}..{hi} exceeds dim {}", self.dim());
+        match self {
+            Compressed::Dense(v) => {
+                for (i, &x) in v[lo..hi].iter().enumerate() {
+                    f(lo + i, x);
+                }
+            }
+            Compressed::Ternary { block_size, norms, trits, .. } => {
+                let bs = *block_size;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    let m = norms[b];
+                    for (i, &t) in (j..end).zip(&trits[j..end]) {
+                        f(i, m * t as F);
+                    }
+                    j = end;
+                }
+            }
+            Compressed::Levels { block_size, s, norms, levels, .. } => {
+                let bs = *block_size;
+                let inv_s = 1.0 / *s as F;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    let m = norms[b] * inv_s;
+                    for (i, &l) in (j..end).zip(&levels[j..end]) {
+                        f(i, m * l as F);
+                    }
+                    j = end;
+                }
+            }
+            Compressed::Sparse { idx, vals, .. } => {
+                let start = idx.partition_point(|&i| (i as usize) < lo);
+                let mut it = idx[start..].iter().zip(vals[start..].iter()).peekable();
+                for i in lo..hi {
+                    match it.peek() {
+                        Some(&(&j, &v)) if j as usize == i => {
+                            f(i, v);
+                            it.next();
+                        }
+                        _ => f(i, 0.0),
+                    }
+                }
+            }
+        }
+    }
+
     /// Exact number of bits this payload occupies on the (simulated) wire,
     /// per the codec in [`codec`]. Used for all communication accounting
     /// (Fig. 2, §3.2 compression-rate table).
@@ -187,6 +302,24 @@ impl Compressed {
 pub trait Compressor: Send + Sync {
     /// Compress `x`, drawing randomness from `rng`.
     fn compress(&self, x: &[F], rng: &mut Xoshiro256) -> Compressed;
+
+    /// Sharded variant of [`Compressor::compress`] for the master's fused
+    /// downlink pass ([`crate::engine::reduce`]): must produce the
+    /// **identical payload** and leave `rng` in the **identical state** as
+    /// the serial `compress`, with the per-coordinate work free to run
+    /// across the pool's dimension shards. The default falls back to the
+    /// serial path, which is trivially conformant; operators with a
+    /// parallel implementation (the blockwise ternary quantizer) override
+    /// it.
+    fn compress_sharded(
+        &self,
+        x: &[F],
+        rng: &mut Xoshiro256,
+        pool: &crate::engine::reduce::ReducePool,
+    ) -> Compressed {
+        let _ = pool;
+        self.compress(x, rng)
+    }
 
     /// Upper bound on the relative variance constant `C` of Assumption 1
     /// for vectors of dimension `dim` (`E||Q(x)-x||^2 <= C ||x||^2`).
@@ -426,6 +559,56 @@ mod tests {
             assert_eq!(visits, c.dim(), "{c:?} did not visit every coord");
             assert_eq!(got, want, "{c:?} decode_each != decompress");
         }
+    }
+
+    /// Every payload variant, odd dims and partial blocks: sharding a
+    /// buffer into arbitrary ranges and decoding range-by-range is
+    /// bit-identical to one whole-vector pass, for both the `+= scale·`
+    /// form and the visit-every-coordinate form.
+    #[test]
+    fn range_decode_is_bit_identical_to_full_decode() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let mut cases: Vec<Compressed> = Vec::new();
+        for dim in [1usize, 7, 23, 64, 100] {
+            let x: Vec<F> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            cases.push(Compressed::Dense(x.clone()));
+            cases.push(PNormQuantizer::new(PNorm::Inf, 7).compress(&x, &mut rng));
+            cases.push(QsgdQuantizer::new(5, 9).compress(&x, &mut rng));
+            cases.push(StochasticSparsifier::new(0.4).compress(&x, &mut rng));
+        }
+        // sparse edge cases: empty, first/last index stored
+        cases.push(Compressed::Sparse { dim: 9, idx: vec![], vals: vec![] });
+        cases.push(Compressed::Sparse { dim: 9, idx: vec![0, 8], vals: vec![2.0, -3.0] });
+        for c in &cases {
+            let d = c.dim();
+            // reference: one whole-vector pass of each serial form
+            let mut want_add = vec![0.125f32; d];
+            c.add_scaled_into(0.7, &mut want_add);
+            let mut want_each = vec![f32::NAN; d];
+            c.decode_each(|i, v| want_each[i] = v);
+            for width in [1usize, 3, 8, 64, 1000] {
+                let mut got_add = vec![0.125f32; d];
+                let mut got_each = vec![f32::NAN; d];
+                let mut lo = 0;
+                while lo < d {
+                    let hi = d.min(lo + width);
+                    c.add_scaled_range_into(0.7, lo, &mut got_add[lo..hi]);
+                    c.decode_each_range(lo, hi, |i, v| got_each[i] = v);
+                    lo = hi;
+                }
+                let bits = |v: &[F]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+                assert_eq!(bits(&got_add), bits(&want_add), "{c:?} width {width}");
+                assert_eq!(bits(&got_each), bits(&want_each), "{c:?} width {width}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds dim")]
+    fn range_decode_rejects_out_of_range() {
+        let c = Compressed::Dense(vec![1.0; 4]);
+        let mut out = vec![0.0; 3];
+        c.add_scaled_range_into(1.0, 2, &mut out);
     }
 
     #[test]

@@ -13,7 +13,12 @@
 //! measure the empirical ratio.
 
 use super::{Compressed, Compressor, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::F;
+
+/// 24-bit uniform scaling shared by the serial and sharded quantize loops
+/// (they must compare the identical `uf` against the identical `p`).
+const INV_2_24: f32 = 1.0 / (1 << 24) as f32;
 
 /// Which p-norm scales each block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -93,7 +98,6 @@ impl Compressor for PNormQuantizer {
         // block, in order) is the contract the Pallas cross-validation test
         // mirrors — bit-identical to calling next_f32() inline.
         let mut ubuf = vec![0u32; self.block_size];
-        const INV_2_24: f32 = 1.0 / (1 << 24) as f32;
         for (block, tchunk) in x.chunks(self.block_size).zip(trits.chunks_mut(self.block_size)) {
             let norm = self.block_norm(block);
             norms.push(norm);
@@ -120,6 +124,88 @@ impl Compressor for PNormQuantizer {
             norms,
             trits,
         }
+    }
+
+    /// Sharded compress for the master's fused downlink pass: per-block
+    /// norms and the trit draw sweep the pool's shards in parallel, while
+    /// the entropy stream is materialized by **one** serial `fill_u32`
+    /// whose consumption (one u32 per coordinate of every nonzero block,
+    /// in block order) is exactly the serial path's — so the payload and
+    /// the RNG's exit state are bit-identical to [`Compressor::compress`]
+    /// for every thread count.
+    fn compress_sharded(&self, x: &[F], rng: &mut Xoshiro256, pool: &ReducePool) -> Compressed {
+        if pool.threads() <= 1 {
+            return self.compress(x, rng);
+        }
+        let dim = x.len();
+        let bs = self.block_size;
+        let nblocks = dim.div_ceil(bs);
+        // shard unit: whole blocks, ~one pool shard of coordinates each
+        let blocks_per_shard = (pool.shard_width() / bs).max(1);
+
+        // 1. per-block norms in parallel (each block runs the identical
+        //    serial kernel, and blocks never straddle shards).
+        let mut norms = vec![0.0f32; nblocks];
+        {
+            let items: Vec<(usize, &mut [F])> = norms
+                .chunks_mut(blocks_per_shard)
+                .enumerate()
+                .map(|(c, chunk)| (c * blocks_per_shard, chunk))
+                .collect();
+            pool.run(items, |(b0, chunk)| {
+                for (j, nv) in chunk.iter_mut().enumerate() {
+                    let lo = (b0 + j) * bs;
+                    *nv = self.block_norm(&x[lo..dim.min(lo + bs)]);
+                }
+            });
+        }
+
+        // 2. entropy: one packed serial fill. The serial compress draws
+        //    block.len() u32s per nonzero block in block order; filling the
+        //    concatenation consumes the identical stream.
+        let mut offs = Vec::with_capacity(nblocks);
+        let mut total = 0usize;
+        for (b, &norm) in norms.iter().enumerate() {
+            offs.push(total);
+            if norm != 0.0 {
+                total += bs.min(dim - b * bs);
+            }
+        }
+        let mut entropy = vec![0u32; total];
+        rng.fill_u32(&mut entropy);
+
+        // 3. trit draw in parallel over block-aligned shards — the same
+        //    branchless compare as the serial loop on the same (r, v) pairs.
+        let mut trits = vec![0i8; dim];
+        {
+            let (norms, offs, entropy) = (&norms, &offs, &entropy);
+            let items: Vec<(usize, &mut [i8])> = trits
+                .chunks_mut(blocks_per_shard * bs)
+                .enumerate()
+                .map(|(c, chunk)| (c * blocks_per_shard, chunk))
+                .collect();
+            pool.run(items, |(b0, chunk)| {
+                for (j, tchunk) in chunk.chunks_mut(bs).enumerate() {
+                    let b = b0 + j;
+                    let norm = norms[b];
+                    if norm == 0.0 {
+                        continue; // all-zero block: trits stay 0, no entropy.
+                    }
+                    let inv = 1.0 / norm;
+                    let lo = b * bs;
+                    let u = &entropy[offs[b]..offs[b] + tchunk.len()];
+                    let block = &x[lo..lo + tchunk.len()];
+                    for ((t, &v), &r) in tchunk.iter_mut().zip(block.iter()).zip(u.iter()) {
+                        let p = v.abs() * inv;
+                        let uf = (r >> 8) as f32 * INV_2_24;
+                        let fire = (uf < p) as i8;
+                        let sign = 1 - 2 * ((v.to_bits() >> 31) as i8);
+                        *t = fire * sign;
+                    }
+                }
+            });
+        }
+        Compressed::Ternary { dim, block_size: bs, norms, trits }
     }
 
     fn variance_constant(&self, dim: usize) -> f64 {
@@ -221,6 +307,38 @@ mod tests {
         err /= trials as f64;
         let c = q.variance_constant(64);
         assert!(err <= c * xsq * 1.05, "E err {err} > C||x||^2 {}", c * xsq);
+    }
+
+    /// The fused-downlink contract: for every thread count and shard
+    /// width, `compress_sharded` emits the identical payload and leaves
+    /// the RNG in the identical state as the serial `compress` — including
+    /// all-zero blocks (which draw no entropy) and a ragged tail block.
+    #[test]
+    fn sharded_compress_is_bit_identical_to_serial() {
+        for (dim, block) in [(10usize, 4usize), (37, 7), (256, 256), (1000, 16), (530, 256)] {
+            let q = PNormQuantizer::new(PNorm::Inf, block);
+            let mut base = Xoshiro256::seed_from_u64(dim as u64);
+            let mut x: Vec<F> = (0..dim).map(|_| base.next_gaussian()).collect();
+            // carve an all-zero block mid-vector so the entropy stream skips
+            if dim > 2 * block {
+                x[block..2 * block].fill(0.0);
+            }
+            let mut want_rng = Xoshiro256::seed_from_u64(99);
+            let want = q.compress(&x, &mut want_rng);
+            for threads in [2usize, 7] {
+                for shard in [1usize, 8, 64, 16384] {
+                    let pool = crate::engine::reduce::ReducePool::with_shard(threads, shard);
+                    let mut rng = Xoshiro256::seed_from_u64(99);
+                    let got = q.compress_sharded(&x, &mut rng, &pool);
+                    assert_eq!(got, want, "dim={dim} block={block} threads={threads}");
+                    assert_eq!(
+                        rng.next_u64(),
+                        want_rng.clone().next_u64(),
+                        "RNG exit state drifted (dim={dim} block={block} threads={threads})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

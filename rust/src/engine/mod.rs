@@ -35,6 +35,12 @@
 //! heterogeneity ([`crate::comm::StragglerSpec`]) so the simulated clock
 //! reflects the k-th — not n-th — slowest uplink.
 //!
+//! The master-side aggregation itself scales across cores: a
+//! [`ReducePool`] (builder knob [`Session::reduce_threads`], CLI
+//! `--reduce-threads`) sweeps the decode→average→compress pass over fixed
+//! dimension shards on scoped threads, with results **bit-identical** to
+//! the serial path for every thread count (see [`reduce`]).
+//!
 //! Progress is emitted as events to [`Observer`]s; [`RunMetrics`] is itself
 //! an observer, so benches can attach custom sinks instead of post-hoc
 //! field picking.
@@ -61,12 +67,14 @@
 pub mod observer;
 pub mod participation;
 pub mod protocol;
+pub mod reduce;
 pub mod registry;
 pub mod session;
 pub mod transport;
 
 pub use observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
 pub use participation::{Participation, StalePolicy};
+pub use reduce::ReducePool;
 pub use session::{Session, TrainSpec};
 pub use transport::{
     worker_uplink, InProc, RoundCtx, SimNet, Threaded, Transport, UplinkFrame, WirePayload,

@@ -1,0 +1,254 @@
+//! Deterministic dimension-sharded master reduction (ROADMAP "scale" item).
+//!
+//! For large models the `hotpath` bench shows the master's serial
+//! decode → average → compress pass dominating the round — the aggregation
+//! wall ScaleCom describes: every uplink must be decoded into the average
+//! buffer, and the downlink residual recompressed, all on one core while n
+//! workers idle. [`ReducePool`] removes that wall without touching the
+//! numerics:
+//!
+//! * the model's `0..d` coordinates are cut into **fixed-width shards**
+//!   ([`DEFAULT_SHARD`] coordinates each). Shard boundaries are a function
+//!   of the dimension alone — never of the thread count — and within one
+//!   shard every uplink is folded in worker order, exactly as the serial
+//!   loop does. Floating-point accumulation per coordinate therefore
+//!   happens in the identical order for 1, 2, or N reduce threads, so the
+//!   reduction is **bit-identical** to the serial path (`golden_series` and
+//!   `proptest_reduce` prove it for all seven algorithms).
+//! * shards are driven across a scoped OS-thread pool
+//!   (`std::thread::scope`; thread count from
+//!   [`TrainSpec::reduce_threads`](super::TrainSpec)). Threads only decide
+//!   *who* executes a shard, never *what* a shard computes.
+//!
+//! The payload-side halves of the machinery are
+//! [`Compressed::add_scaled_range_into`] /
+//! [`Compressed::decode_each_range`] (chunked decode directly into a shard
+//! of the destination buffer — no dense per-worker temporaries) and
+//! [`crate::compression::Compressor::compress_sharded`] (the master-side
+//! recompression swept over the same shards, consuming the identical RNG
+//! stream as the serial compressor).
+
+use crate::compression::Compressed;
+use crate::F;
+
+/// Default shard width in coordinates. Wide enough that the per-shard
+/// dispatch cost vanishes against the decode work, narrow enough that a
+/// ResNet18-scale model (d ≈ 1.1 × 10⁷) splits into ~700 shards — plenty
+/// of parallel slack for any sane thread count. The width is a
+/// *determinism-neutral* tuning knob: per-coordinate accumulation order
+/// does not depend on it (see module docs), it only shapes scheduling
+/// granularity.
+pub const DEFAULT_SHARD: usize = 16_384;
+
+/// A dimension-sharded reduction driver: fixed shard boundaries, scoped
+/// OS threads, bit-identical results for every thread count.
+#[derive(Clone, Copy, Debug)]
+pub struct ReducePool {
+    threads: usize,
+    shard: usize,
+}
+
+impl Default for ReducePool {
+    fn default() -> Self {
+        Self::serial()
+    }
+}
+
+impl ReducePool {
+    /// The serial pool: one thread, default shards. What every master
+    /// starts with until [`super::Session`] installs the configured pool.
+    pub fn serial() -> Self {
+        Self::with_shard(1, DEFAULT_SHARD)
+    }
+
+    /// Pool with `threads` reduce threads (`0` = all available cores) and
+    /// the default shard width.
+    pub fn new(threads: usize) -> Self {
+        Self::with_shard(threads, DEFAULT_SHARD)
+    }
+
+    /// Pool with an explicit shard width — test hook: small widths let
+    /// small-dimension problems exercise multi-shard scheduling. Iterates,
+    /// payloads and wire accounting are bit-identical for every
+    /// `(threads, shard)` combination; the one shard-width-sensitive value
+    /// is the Fig. 6 residual-norm *diagnostic* (DORE ‖q‖ / DoubleSqueeze
+    /// ‖v‖), whose f64 partials are grouped per shard — still invariant in
+    /// the thread count, since the width is fixed per pool.
+    pub fn with_shard(threads: usize, shard: usize) -> Self {
+        let threads = if threads == 0 {
+            std::thread::available_parallelism().map_or(1, |n| n.get())
+        } else {
+            threads
+        };
+        Self { threads, shard: shard.max(1) }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn shard_width(&self) -> usize {
+        self.shard
+    }
+
+    /// Execute one closure call per work item, distributing items across
+    /// the pool's scoped threads. Items must touch pairwise-disjoint data;
+    /// the assignment of items to threads is unspecified and must not
+    /// affect results (which holds for disjoint shards by construction).
+    /// Serial pools (or a single item) run inline with zero overhead;
+    /// otherwise the calling thread works the first contiguous run of
+    /// items itself (it would only block in the scope anyway) and spawns
+    /// `threads − 1` helpers, each owning a contiguous run for locality.
+    pub fn run<T: Send>(&self, items: Vec<T>, f: impl Fn(T) + Sync) {
+        if self.threads <= 1 || items.len() <= 1 {
+            for it in items {
+                f(it);
+            }
+            return;
+        }
+        let nt = self.threads.min(items.len());
+        let len = items.len();
+        let mut own = items;
+        // peel contiguous tail runs for the helper threads, back to front;
+        // what remains in `own` is the calling thread's share
+        let mut buckets: Vec<Vec<T>> = Vec::with_capacity(nt - 1);
+        for t in (1..nt).rev() {
+            buckets.push(own.split_off(t * len / nt));
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                s.spawn(move || {
+                    for it in bucket {
+                        f(it);
+                    }
+                });
+            }
+            for it in own {
+                f(it);
+            }
+        });
+    }
+
+    /// Sweep one buffer in fixed shards: `f(lo, shard)` receives the
+    /// shard's first absolute coordinate and the mutable sub-slice
+    /// `buf[lo .. lo + shard.len()]`.
+    pub fn sweep1(&self, buf: &mut [F], f: impl Fn(usize, &mut [F]) + Sync) {
+        let shard = self.shard;
+        let items: Vec<(usize, &mut [F])> = buf
+            .chunks_mut(shard)
+            .enumerate()
+            .map(|(c, chunk)| (c * shard, chunk))
+            .collect();
+        self.run(items, |(lo, chunk)| f(lo, chunk));
+    }
+
+    /// Sweep two equal-length buffers in lock-step shards: `f(lo, a, b)`.
+    /// The workhorse of the fused master folds (`ĝ`/`h` for DORE/DIANA,
+    /// `e`/`x̂` after the downlink compress).
+    pub fn sweep2(
+        &self,
+        a: &mut [F],
+        b: &mut [F],
+        f: impl Fn(usize, &mut [F], &mut [F]) + Sync,
+    ) {
+        assert_eq!(a.len(), b.len(), "sweep2 buffers must match");
+        let shard = self.shard;
+        let items: Vec<(usize, &mut [F], &mut [F])> = a
+            .chunks_mut(shard)
+            .zip(b.chunks_mut(shard))
+            .enumerate()
+            .map(|(c, (ca, cb))| (c * shard, ca, cb))
+            .collect();
+        self.run(items, |(lo, ca, cb)| f(lo, ca, cb));
+    }
+
+    /// Sharded `out[j] += scale · Σ_i decode(m_i)[j]` over the present
+    /// uplink slots, decoding each payload directly into the destination
+    /// shard (no dense per-worker temporaries). Within every shard the
+    /// uplinks fold in slot order, so each coordinate accumulates in
+    /// exactly the serial order — bit-identical for any thread count.
+    pub fn accumulate(&self, uplinks: &[Option<Compressed>], scale: F, out: &mut [F]) {
+        self.sweep1(out, |lo, chunk| {
+            for m in uplinks.iter().flatten() {
+                m.add_scaled_range_into(scale, lo, chunk);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compression::{from_spec, Xoshiro256};
+
+    fn payloads(d: usize, n: usize) -> Vec<Option<Compressed>> {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let specs = ["ternary:7", "qsgd:4:5", "sparse:0.4", "none"];
+        (0..n)
+            .map(|i| {
+                if i % 5 == 4 {
+                    return None; // absent slot under partial participation
+                }
+                let q = from_spec(specs[i % specs.len()]).unwrap();
+                let x: Vec<F> = (0..d).map(|_| rng.next_gaussian()).collect();
+                Some(q.compress(&x, &mut rng))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn accumulate_is_bit_identical_to_serial_for_any_threads_and_shards() {
+        for d in [1, 5, 37, 100, 257] {
+            let ups = payloads(d, 7);
+            // the serial reference: whole-vector add_scaled_into per slot
+            let mut want = vec![0.25f32; d];
+            for m in ups.iter().flatten() {
+                m.add_scaled_into(0.5, &mut want);
+            }
+            for threads in [1, 2, 7] {
+                for shard in [1, 8, 16, DEFAULT_SHARD] {
+                    let pool = ReducePool::with_shard(threads, shard);
+                    let mut got = vec![0.25f32; d];
+                    pool.accumulate(&ups, 0.5, &mut got);
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "d={d} threads={threads} shard={shard}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep2_covers_every_coordinate_once() {
+        let d = 100;
+        let pool = ReducePool::with_shard(4, 7);
+        let mut a = vec![0.0f32; d];
+        let mut b = vec![0.0f32; d];
+        pool.sweep2(&mut a, &mut b, |lo, ca, cb| {
+            for (j, (x, y)) in ca.iter_mut().zip(cb.iter_mut()).enumerate() {
+                *x += (lo + j) as f32;
+                *y += 1.0;
+            }
+        });
+        for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x, i as f32);
+            assert_eq!(y, 1.0);
+        }
+    }
+
+    #[test]
+    fn zero_threads_means_available_parallelism() {
+        assert!(ReducePool::new(0).threads() >= 1);
+        assert_eq!(ReducePool::serial().threads(), 1);
+        assert_eq!(ReducePool::with_shard(3, 0).shard_width(), 1, "shard width is clamped");
+    }
+
+    #[test]
+    fn empty_buffers_are_a_no_op() {
+        let pool = ReducePool::new(4);
+        let mut empty: Vec<F> = Vec::new();
+        pool.sweep1(&mut empty, |_, _| panic!("no shards expected"));
+        pool.accumulate(&[], 1.0, &mut empty);
+    }
+}

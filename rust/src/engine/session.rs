@@ -8,6 +8,7 @@
 
 use super::observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
 use super::participation::{Participation, StalePolicy};
+use super::reduce::ReducePool;
 use super::registry;
 use super::transport::{InProc, RoundCtx, Transport};
 use crate::algorithms::{AlgorithmKind, HyperParams};
@@ -35,6 +36,12 @@ pub struct TrainSpec {
     pub participation: Participation,
     /// What stands in for a worker that sat a round out.
     pub stale: StalePolicy,
+    /// Threads for the master-side sharded reduction
+    /// ([`crate::engine::reduce`]): the decode→average→compress pass is
+    /// swept over fixed dimension shards on this many scoped OS threads.
+    /// `0` = all available cores. Results are **bit-identical** for every
+    /// value — this knob trades wall-clock only (default: 1, serial).
+    pub reduce_threads: usize,
 }
 
 impl TrainSpec {
@@ -57,6 +64,7 @@ impl Default for TrainSpec {
             seed: 42,
             participation: Participation::Full,
             stale: StalePolicy::Skip,
+            reduce_threads: 1,
         }
     }
 }
@@ -193,6 +201,14 @@ impl<'p> Session<'p> {
         self
     }
 
+    /// Reduce-thread count for the master-side sharded reduction
+    /// (default: 1 = serial; `0` = all available cores). Bit-identical
+    /// results for every value — see [`crate::engine::reduce`].
+    pub fn reduce_threads(mut self, threads: usize) -> Self {
+        self.spec.reduce_threads = threads;
+        self
+    }
+
     /// Replace the whole spec at once (migration aid for callers that
     /// already assemble a [`TrainSpec`]). Like [`Session::algo`], this
     /// resets any earlier [`Session::algo_name`] override — the spec's
@@ -233,6 +249,7 @@ impl<'p> Session<'p> {
             Some(name) => registry::build_by_name(name, n, &x0, &spec.hp)?,
             None => registry::build_algorithm(spec.algo, n, &x0, &spec.hp)?,
         };
+        master.set_reduce_pool(ReducePool::new(spec.reduce_threads));
         transport.start(workers, problem.shared(), &spec)?;
 
         let info = RunInfo {
@@ -366,6 +383,23 @@ mod tests {
         let b = Session::new(&p).spec(spec).run().unwrap();
         assert_eq!(a.loss, b.loss);
         assert_eq!(a.uplink_bits, b.uplink_bits);
+    }
+
+    #[test]
+    fn reduce_threads_do_not_change_a_single_bit() {
+        let p = linreg_problem(60, 33, 3, 0.1, 5); // odd dim: partial blocks
+        let spec = TrainSpec { iters: 40, eval_every: 10, ..Default::default() };
+        let serial = Session::new(&p).spec(spec.clone()).run().unwrap();
+        for threads in [0usize, 2, 7] {
+            let m = Session::new(&p)
+                .spec(spec.clone())
+                .reduce_threads(threads)
+                .run()
+                .unwrap();
+            assert_eq!(serial.loss, m.loss, "reduce_threads={threads}");
+            assert_eq!(serial.uplink_bits, m.uplink_bits, "reduce_threads={threads}");
+            assert_eq!(serial.downlink_bits, m.downlink_bits, "reduce_threads={threads}");
+        }
     }
 
     #[test]

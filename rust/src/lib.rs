@@ -63,7 +63,12 @@
 //!
 //! The pre-engine entry points (`harness::run_inproc`,
 //! `coordinator::run_distributed`) remain as deprecated shims delegating to
-//! the session.
+//! the session. Calling them from anywhere inside this crate is a hard
+//! error (`deny(deprecated)` below): the only sanctioned internal callers
+//! are the shims' own equivalence tests, which opt back in with a local
+//! `#[allow(deprecated)]` — so migration drift cannot silently reappear.
+
+#![deny(deprecated)]
 
 pub mod algorithms;
 pub mod comm;

@@ -11,6 +11,8 @@
 //! Flag parsing is hand-rolled (offline environment, no clap): every flag
 //! is `--name value` except boolean `--distributed`.
 
+#![deny(deprecated)]
+
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::comm::StragglerSpec;
 use dore::config::{parse_prox, parse_schedule, JobConfig, ProblemConfig};
@@ -144,6 +146,7 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
              [--alpha F --beta F --eta F --compressor SPEC --prox SPEC
               --schedule SPEC --workers N --minibatch N --eval-every N
               --seed N --participation full|k:<K>|dropout:<p> --stale skip|reuse
+              --reduce-threads N (master-side sharded reduction; 0 = all cores)
               --transport inproc|threads|tcp|simnet
               [--bandwidth BPS --straggler MULT[:FRAC[:JITTER_S]]]
               --distributed --csv FILE]
@@ -204,6 +207,9 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     if let Some(s) = f.get("stale") {
         spec.stale = s.parse::<StalePolicy>()?;
     }
+    // master-side sharded reduction: thread count only — results are
+    // bit-identical for every value (0 = all available cores)
+    spec.reduce_threads = f.num("reduce-threads", 1)?;
     let n = prob.n_workers();
     // --transport inproc (default) | threads | tcp | simnet — all produce
     // bit-identical iterates; they differ only in what carries the bytes

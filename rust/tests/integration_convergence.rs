@@ -3,6 +3,8 @@
 //! suite stays fast. The full-size figure regenerations live in
 //! `rust/benches/`.
 
+#![deny(deprecated)]
+
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth::{cluster_classification, linreg_problem};
 use dore::engine::{Session, TrainSpec};

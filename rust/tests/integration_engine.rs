@@ -5,7 +5,14 @@
 //! in-process zero-copy, OS-thread channels, and the simulated network —
 //! because the engine owns every stochastic site and the codec round-trip
 //! is exact. Plus: observer event-stream contracts, registry extension, and
-//! deprecated-shim equivalence.
+//! sharded-reduction invariance.
+//!
+//! This suite is deliberately shim-free: the deprecated pre-engine entry
+//! points are exercised only by the equivalence tests inside their own
+//! modules (`harness`, `coordinator`, `coordinator::tcp`), and the deny
+//! below keeps them from creeping back in here.
+
+#![deny(deprecated)]
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
 use dore::data::synth::linreg_problem;
@@ -243,19 +250,30 @@ fn registered_algorithm_runs_through_session() {
     assert!(custom.total_bits() > 0);
 }
 
-/// The deprecated pre-engine entry points delegate to the session and stay
-/// bit-identical to it.
+/// The sharded master reduction composes with every transport: a
+/// multi-threaded reduce on one transport matches the serial reduce on
+/// another, bit for bit — thread count and byte carrier are both
+/// numerics-neutral.
 #[test]
-#[allow(deprecated)]
-fn deprecated_shims_delegate_to_engine() {
-    use dore::coordinator::run_distributed;
-    use dore::harness::run_inproc;
+fn sharded_reduce_bit_identical_across_transports() {
     let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
-    let spec = TrainSpec { iters: 15, eval_every: 5, ..Default::default() };
-    let engine = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
-    let shim_inproc = run_inproc(p.as_ref(), &spec);
-    let shim_threaded = run_distributed(p.clone(), spec).unwrap();
-    assert_eq!(engine.loss, shim_inproc.loss);
-    assert_eq!(engine.uplink_bits, shim_inproc.uplink_bits);
-    assert_eq!(engine.loss, shim_threaded.loss);
+    for &algo in &[AlgorithmKind::Dore, AlgorithmKind::DoubleSqueeze, AlgorithmKind::Sgd] {
+        let spec = TrainSpec { algo, iters: 20, eval_every: 5, ..Default::default() };
+        let serial = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+        let sharded_inproc = Session::new(p.as_ref())
+            .spec(spec.clone())
+            .reduce_threads(3)
+            .run()
+            .unwrap();
+        let sharded_threaded = Session::shared(p.clone())
+            .spec(spec)
+            .reduce_threads(3)
+            .transport(Threaded::new())
+            .run()
+            .unwrap();
+        assert_eq!(serial.loss, sharded_inproc.loss, "{}: inproc", algo.name());
+        assert_eq!(serial.dist_to_opt, sharded_inproc.dist_to_opt, "{}", algo.name());
+        assert_eq!(serial.loss, sharded_threaded.loss, "{}: threaded", algo.name());
+        assert_eq!(serial.downlink_bits, sharded_inproc.downlink_bits, "{}", algo.name());
+    }
 }

@@ -5,6 +5,8 @@
 //! If the artifact directory is missing the tests fail with a clear
 //! message rather than silently passing.
 
+#![deny(deprecated)]
+
 use dore::compression::{Compressor, PNormQuantizer, Xoshiro256};
 use dore::data::synth;
 use dore::models::mlp::{Mlp, MlpArch};

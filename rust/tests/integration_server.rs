@@ -1,5 +1,7 @@
 //! Parameter-server + config + CLI-path integration tests.
 
+#![deny(deprecated)]
+
 use dore::algorithms::AlgorithmKind;
 use dore::config::JobConfig;
 use dore::data::synth::{linreg_problem, mnist_like};

@@ -6,6 +6,8 @@
 //! runs stay green by default while CI (which sets the variable — see
 //! `.github/workflows/ci.yml`) always exercises `TcpTransport`.
 
+#![deny(deprecated)]
+
 use dore::algorithms::AlgorithmKind;
 use dore::coordinator::tcp::TcpTransport;
 use dore::data::synth::linreg_problem;

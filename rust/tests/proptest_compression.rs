@@ -3,6 +3,8 @@
 //! is checked over a few hundred randomized cases drawn from the crate's
 //! own deterministic RNG, and failures print the offending case seed.
 
+#![deny(deprecated)]
+
 use dore::compression::{
     codec, from_spec, Compressed, Compressor, PNorm, PNormQuantizer, QsgdQuantizer,
     StochasticSparsifier, TopK, Xoshiro256,

@@ -15,6 +15,8 @@
 //!    engine runs under partial participation replay bit-identically
 //!    across transports.
 
+#![deny(deprecated)]
+
 use dore::algorithms::{build, AlgorithmKind, MasterNode, WorkerNode};
 use dore::compression::{Compressed, Xoshiro256};
 use dore::data::synth::linreg_problem;

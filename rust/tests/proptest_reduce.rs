@@ -1,0 +1,134 @@
+//! Property tests for the dimension-sharded master reduction
+//! (`engine::reduce`): for **all seven algorithms**, the sharded
+//! decode→average→compress pass must be bit-identical to the serial path —
+//! same downlink payloads, same iterates — for every reduce-thread count,
+//! on odd / partial-block dimensions, and with absent slots under partial
+//! participation.
+//!
+//! Like the other proptest suites, the environment has no proptest crate,
+//! so this is a hand-rolled driver: two identically-constructed fleets run
+//! in lock-step, one master serial, the other sharded with a deliberately
+//! tiny shard width (16 coordinates) so every test dimension spans many
+//! shards and blocks straddle shard boundaries. Compressor specs rotate
+//! per case so ternary, multi-level, sparse, and dense payloads all cross
+//! the chunked-decode APIs.
+
+#![deny(deprecated)]
+
+use dore::algorithms::{build, AlgorithmKind, HyperParams, MasterNode, WorkerNode};
+use dore::compression::{Compressed, Xoshiro256};
+use dore::engine::{Participation, ReducePool};
+
+/// Rotate worker/master compressor families so every payload variant
+/// (Ternary, Levels, Sparse, Dense) flows through the sharded reduction.
+/// (DoubleSqueeze(topk) ignores these and substitutes top-k — which is the
+/// Sparse-payload coverage on both directions.)
+fn hp_for(case: usize) -> HyperParams {
+    let specs = ["ternary:8", "qsgd:4:16", "sparse:0.3", "none"];
+    HyperParams {
+        lr: 0.05,
+        worker_compressor: specs[case % specs.len()].into(),
+        master_compressor: specs[(case + 1) % specs.len()].into(),
+        ..HyperParams::paper_defaults()
+    }
+}
+
+/// Drive two identical fleets for `rounds` lock-step rounds — master A
+/// serial, master B sharded — asserting bit-equal downlinks and master
+/// iterates after every round. Partial participation: a rotating k-of-n
+/// mask leaves absent (`None`) slots in the gather.
+fn assert_sharded_matches_serial(
+    algo: AlgorithmKind,
+    d: usize,
+    n: usize,
+    threads: usize,
+    case: usize,
+) {
+    let hp = hp_for(case);
+    let x0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    let (mut ws_a, mut master_a) = build(algo, n, &x0, &hp).unwrap();
+    let (mut ws_b, mut master_b) = build(algo, n, &x0, &hp).unwrap();
+    master_b.set_reduce_pool(ReducePool::with_shard(threads, 16));
+    let mut grad_rng = Xoshiro256::seed_from_u64(1234 + case as u64);
+    let tag = format!("{} d={d} n={n} threads={threads} case={case}", algo.name());
+    for round in 0..10usize {
+        let mask = Participation::KOfN { k: 1 + round % n }.mask(99, round, n);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| grad_rng.next_gaussian() * 0.1).collect())
+            .collect();
+        let step = |ws: &mut Vec<Box<dyn WorkerNode>>,
+                    master: &mut Box<dyn MasterNode>|
+         -> (Compressed, Vec<u32>) {
+            let ups: Vec<Option<Compressed>> = ws
+                .iter_mut()
+                .enumerate()
+                .map(|(i, w)| {
+                    if !mask[i] {
+                        return None; // absent slot (skip policy)
+                    }
+                    let mut rng = Xoshiro256::for_site(7, 1 + i as u64, round as u64);
+                    Some(w.round(round, &grads[i], &mut rng))
+                })
+                .collect();
+            let mut mrng = Xoshiro256::for_site(7, 0, round as u64);
+            let down = master.round(round, &ups, &mut mrng);
+            for w in ws.iter_mut() {
+                w.apply_downlink(round, &down);
+            }
+            let model_bits = master.model().iter().map(|v| v.to_bits()).collect();
+            (down, model_bits)
+        };
+        let (down_a, model_a) = step(&mut ws_a, &mut master_a);
+        let (down_b, model_b) = step(&mut ws_b, &mut master_b);
+        assert_eq!(down_a, down_b, "{tag}: downlink diverged at round {round}");
+        assert_eq!(model_a, model_b, "{tag}: master iterate diverged at round {round}");
+    }
+}
+
+/// The headline sweep: 7 algorithms × reduce-threads ∈ {1, 2, 7} ×
+/// odd/partial-block dims, absent slots every round. `threads = 1` with
+/// the tiny shard width also pins chunk-at-a-time serial decoding against
+/// the whole-vector serial path.
+#[test]
+fn sharded_reduction_bit_identical_for_all_algorithms() {
+    let mut case = 0usize;
+    for &algo in AlgorithmKind::all() {
+        for &d in &[33usize, 57, 130] {
+            for &threads in &[1usize, 2, 7] {
+                assert_sharded_matches_serial(algo, d, 4, threads, case);
+                case += 1;
+            }
+        }
+    }
+}
+
+/// An entirely absent round (every slot `None`) must be handled
+/// identically by serial and sharded masters: averaging schemes take a
+/// no-op step, residual schemes fold nothing into h.
+#[test]
+fn empty_rounds_are_identical_too() {
+    for &algo in AlgorithmKind::all() {
+        let hp = hp_for(1);
+        let x0: Vec<f32> = (0..45).map(|i| (i as f32 * 0.11).cos()).collect();
+        let (_, mut master_a) = build(algo, 3, &x0, &hp).unwrap();
+        let (_, mut master_b) = build(algo, 3, &x0, &hp).unwrap();
+        master_b.set_reduce_pool(ReducePool::with_shard(5, 16));
+        let empty: Vec<Option<Compressed>> = vec![None, None, None];
+        for round in 0..3usize {
+            let mut ra = Xoshiro256::for_site(3, 0, round as u64);
+            let mut rb = Xoshiro256::for_site(3, 0, round as u64);
+            let down_a = master_a.round(round, &empty, &mut ra);
+            let down_b = master_b.round(round, &empty, &mut rb);
+            assert_eq!(down_a, down_b, "{}: empty-round downlink", algo.name());
+            let bits = |m: &dyn MasterNode| -> Vec<u32> {
+                m.model().iter().map(|v| v.to_bits()).collect()
+            };
+            assert_eq!(
+                bits(master_a.as_ref()),
+                bits(master_b.as_ref()),
+                "{}: empty-round iterate",
+                algo.name()
+            );
+        }
+    }
+}
