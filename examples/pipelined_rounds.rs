@@ -1,0 +1,64 @@
+//! Pipelined rounds: hide wire latency behind the master pass.
+//!
+//! DORE already shrinks the payloads to ~1.6 bits/coordinate, so on a thin
+//! link the round time is dominated by *latency*, not bandwidth — and
+//! latency doesn't compress. `--pipeline-depth D` (here:
+//! `Session::pipeline_depth`) keeps `D` rounds in flight per link: round
+//! `t + 1`'s uplink is computed and transmitted while the master reduces
+//! round `t`, at the price of gradients evaluated at a model `D − 1`
+//! downlinks stale. This example runs the same DORE scenario on a 50 ms
+//! link at depths 1, 2 and 4 and prints the simulated wall-clock next to
+//! the reached loss, so the latency-hiding / staleness trade is visible in
+//! one table.
+//!
+//! ```
+//! cargo run --release --example pipelined_rounds
+//! ```
+
+use dore::algorithms::AlgorithmKind;
+use dore::comm::LinkSpec;
+use dore::data::synth;
+use dore::engine::{Session, SimNet};
+
+fn main() -> anyhow::Result<()> {
+    let problem = synth::linreg_problem(600, 200, 8, 0.1, 42);
+    // a long thin pipe: 50 ms one-way latency, 100 Mbps
+    let link = LinkSpec { bandwidth_bps: 100e6, latency_s: 0.05 };
+    let iters = 400;
+
+    println!(
+        "DORE on a {:.0} ms / {:.0} Mbps link, {iters} rounds, 8 workers",
+        link.latency_s * 1e3,
+        link.bandwidth_bps / 1e6
+    );
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>12}",
+        "depth", "sim seconds", "s/round", "final loss", "stale rnds"
+    );
+    for depth in [1usize, 2, 4] {
+        let m = Session::new(&problem)
+            .algo(AlgorithmKind::Dore)
+            .iters(iters)
+            .eval_every(50)
+            .seed(42)
+            .pipeline_depth(depth)
+            .transport(SimNet::new(link))
+            .run()?;
+        let sim = m.simulated_seconds.unwrap_or(f64::NAN);
+        println!(
+            "{:>6} {:>14.2} {:>14.4} {:>14.4e} {:>12}",
+            depth,
+            sim,
+            sim / iters as f64,
+            m.loss.last().copied().unwrap_or(f64::NAN),
+            m.stale_uplink_rounds,
+        );
+    }
+    println!(
+        "\ndepth 1 pays compute + uplink latency + downlink latency every round;\n\
+         depth ≥ 2 overlaps the uplink leg with the previous master pass, so each\n\
+         steady-state round costs roughly one broadcast leg — the DoubleSqueeze-style\n\
+         compute/communication overlap composed with DORE's double residual compression."
+    );
+    Ok(())
+}

@@ -103,9 +103,39 @@ impl Default for HyperParams {
 }
 
 /// Worker-side state machine.
+///
+/// # Round-ordering and staleness contract
+///
+/// The engine guarantees, on every transport and at every pipeline depth:
+///
+/// * [`WorkerNode::round`] / [`WorkerNode::on_reused`] fire exactly once
+///   per round, in strictly increasing round order;
+/// * [`WorkerNode::apply_downlink`] also arrives in round order, but under
+///   pipelined execution ([`crate::engine::TrainSpec::pipeline_depth`]
+///   `= D ≥ 2`) it may **lag**: when `round(k)` is invoked, downlinks have
+///   been applied only through round `k − D` — the local model is up to
+///   `D − 1` rounds stale.
+///
+/// Because the per-round uplink folds (DORE/DIANA's
+/// `h_i ← h_i + α·Δ̂_i`, the error-feedback `e_i` updates) depend only on
+/// that round's payload — never on the downlink — the
+/// `h = (1/n)Σ h_i` invariant survives the lag exactly; only the point the
+/// gradient is evaluated at moves. [`WorkerNode::accept_staleness`] is the
+/// explicit opt-in the engine collects before running with `D ≥ 2`.
 pub trait WorkerNode: Send {
     /// Consume this round's local stochastic gradient, produce the uplink.
     fn round(&mut self, round: usize, grad: &[F], rng: &mut Xoshiro256) -> Compressed;
+
+    /// Pipelined-execution staleness contract: before round 0 of a run with
+    /// `pipeline_depth = D ≥ 2`, the engine announces `lag = D − 1` — the
+    /// number of downlinks the local model may be missing when a gradient
+    /// is evaluated (see the trait-level contract). Return an error to veto
+    /// the run for algorithms whose analysis genuinely requires the
+    /// synchronous model point. All seven built-in schemes tolerate any
+    /// lag (their state folds are payload-driven), so the default accepts.
+    fn accept_staleness(&mut self, _lag: usize) -> anyhow::Result<()> {
+        Ok(())
+    }
 
     /// Apply the master's downlink broadcast.
     fn apply_downlink(&mut self, round: usize, down: &Compressed);

@@ -172,11 +172,15 @@ pub struct NetSim {
     pub n_workers: usize,
     /// Simulated seconds elapsed.
     pub clock_s: f64,
+    /// Broadcast-completion times of the most recent rounds (at most the
+    /// pipeline depth of them) — the [`NetSim::pipelined_round`] state that
+    /// anchors when a round's uplink leg may start.
+    down_done: std::collections::VecDeque<f64>,
 }
 
 impl NetSim {
     pub fn new(link: LinkSpec, n_workers: usize) -> Self {
-        Self { link, n_workers, clock_s: 0.0 }
+        Self { link, n_workers, clock_s: 0.0, down_done: std::collections::VecDeque::new() }
     }
 
     /// Advance the clock by one synchronous round and return its duration.
@@ -214,6 +218,59 @@ impl NetSim {
             + (self.n_workers as u64 * downlink_bits) as f64 / self.link.bandwidth_bps;
         let dt = slowest_ready_s + gather + bcast;
         self.clock_s += dt;
+        dt
+    }
+
+    /// Advance the clock by one round of a **pipelined** schedule with
+    /// `depth` rounds in flight per link; returns the round's marginal
+    /// clock advance. Call once per round, in round order.
+    ///
+    /// Model: round `t`'s workers start computing once they applied
+    /// downlink `t − depth` (time `down_done[t − depth]`, 0 for the first
+    /// `depth` rounds), so its uplink has fully arrived at
+    /// `start + slowest_ready_s + (L + up_bits/bw)`. The master's egress
+    /// serializes broadcasts across rounds (it is busy until the previous
+    /// round's broadcast finished at the current `clock_s`), while its
+    /// ingress is full-duplex — uplinks of round `t` stream in *behind*
+    /// the broadcasts of rounds `t − depth + 1 .. t − 1`. The round's
+    /// broadcast therefore runs over
+    /// `[max(uplink_done, clock_s), … + (L + n·down_bits/bw)]`, and the
+    /// clock advances to its end: on a latency-bound link the whole uplink
+    /// leg hides behind the in-flight window and each steady-state round
+    /// costs one broadcast leg instead of `ready + gather + bcast`.
+    ///
+    /// `depth = 1` reduces exactly to [`NetSim::gather_round`] (kept as
+    /// the separate synchronous entry point so depth-1 clock arithmetic is
+    /// bit-identical to the pre-pipeline model).
+    pub fn pipelined_round(
+        &mut self,
+        depth: usize,
+        slowest_ready_s: f64,
+        gathered_uplink_bits: u64,
+        downlink_bits: u64,
+    ) -> f64 {
+        if depth <= 1 {
+            return self.gather_round(slowest_ready_s, gathered_uplink_bits, downlink_bits);
+        }
+        // completing round t: down_done holds rounds t-L..t-1 (L ≤ depth),
+        // so its front is round t - depth exactly when the window is full
+        let start = if self.down_done.len() >= depth {
+            *self.down_done.front().expect("non-empty at depth")
+        } else {
+            0.0
+        };
+        let gather =
+            self.link.latency_s + gathered_uplink_bits as f64 / self.link.bandwidth_bps;
+        let uplink_done = start + slowest_ready_s + gather;
+        let bcast = self.link.latency_s
+            + (self.n_workers as u64 * downlink_bits) as f64 / self.link.bandwidth_bps;
+        let end = uplink_done.max(self.clock_s) + bcast;
+        let dt = end - self.clock_s;
+        self.clock_s = end;
+        self.down_done.push_back(end);
+        if self.down_done.len() > depth {
+            self.down_done.pop_front();
+        }
         dt
     }
 }
@@ -273,6 +330,59 @@ mod tests {
         assert!("0.5".parse::<StragglerSpec>().is_err(), "factor < 1 rejected");
         assert!("4:2".parse::<StragglerSpec>().is_err(), "fraction > 1 rejected");
         assert!("4:0.5:1:1".parse::<StragglerSpec>().is_err());
+    }
+
+    #[test]
+    fn pipelined_depth_one_is_exactly_the_synchronous_model() {
+        let link = LinkSpec { bandwidth_bps: 1e6, latency_s: 0.01 };
+        let mut sync = NetSim::new(link, 4);
+        let mut pipe = NetSim::new(link, 4);
+        for _ in 0..5 {
+            sync.gather_round(0.25, 2_000_000, 500_000);
+            pipe.pipelined_round(1, 0.25, 2_000_000, 500_000);
+        }
+        assert_eq!(sync.clock_s.to_bits(), pipe.clock_s.to_bits());
+    }
+
+    #[test]
+    fn pipelined_rounds_hide_the_uplink_leg_behind_the_broadcast() {
+        // latency-dominated link: transfer terms are negligible, so a
+        // synchronous round costs two latencies while a steady-state
+        // depth-2 round costs one (the uplink leg of round t+1 rides
+        // behind the broadcast of round t).
+        let link = LinkSpec { bandwidth_bps: 1e9, latency_s: 0.1 };
+        let mut sync = NetSim::new(link, 2);
+        let mut pipe = NetSim::new(link, 2);
+        let mut steady_dt = 0.0;
+        for _ in 0..10 {
+            sync.gather_round(0.0, 100, 100);
+            steady_dt = pipe.pipelined_round(2, 0.0, 100, 100);
+        }
+        assert!(
+            pipe.clock_s < 0.6 * sync.clock_s,
+            "depth 2 {} vs depth 1 {}",
+            pipe.clock_s,
+            sync.clock_s
+        );
+        // steady state: one broadcast leg (latency + n·bits/bw) per round
+        let bcast = link.latency_s + 2.0 * 100.0 / link.bandwidth_bps;
+        assert!((steady_dt - bcast).abs() < 1e-9, "steady dt {steady_dt} vs bcast {bcast}");
+    }
+
+    #[test]
+    fn pipelined_round_never_outruns_the_compute_chain() {
+        // compute-bound fleet: ready dominates both legs, so pipelining
+        // cannot beat ~ready/round by more than the hidden wire time —
+        // round t still waits for downlink t−2 before computing.
+        let link = LinkSpec { bandwidth_bps: 1e9, latency_s: 1e-4 };
+        let mut pipe = NetSim::new(link, 2);
+        for _ in 0..10 {
+            pipe.pipelined_round(2, 1.0, 100, 100);
+        }
+        // 10 rounds of 1 s compute on a 2-deep pipeline: every other round
+        // chains on the previous-but-one, so the clock is ≥ 5 s and ≤ ~6 s
+        assert!(pipe.clock_s >= 5.0, "{}", pipe.clock_s);
+        assert!(pipe.clock_s <= 6.5, "{}", pipe.clock_s);
     }
 
     #[test]

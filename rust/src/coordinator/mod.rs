@@ -14,58 +14,38 @@
 //!   sockets with a length-prefixed frame protocol;
 //! * [`checkpoint`] — master-model snapshots with integrity checksums.
 //!
-//! [`run_distributed`] survives as a deprecated shim delegating to
-//! [`crate::engine::Session`] with the [`crate::engine::Threaded`]
-//! transport; an integration test asserts all transports produce
-//! bit-identical iterates.
+//! The pre-engine `run_distributed(_blocking)` shims were removed once
+//! every caller migrated to the builder (`Session::shared(problem)
+//! .spec(spec).transport(Threaded::new()).run()` — see the README
+//! migration table); the equivalence tests below pin the channel transport
+//! against the in-process path directly.
 
 pub mod checkpoint;
 pub mod tcp;
 
 pub use crate::engine::protocol;
 
-use crate::engine::{Session, Threaded, TrainSpec};
-use crate::metrics::RunMetrics;
-use crate::models::Problem;
-use std::sync::Arc;
-
-/// Run a full distributed training job over OS-thread workers and mpsc
-/// channels, returning the master's metrics.
-#[deprecated(
-    note = "use engine::Session::shared(problem).spec(spec).transport(Threaded::new()).run()"
-)]
-pub fn run_distributed(problem: Arc<dyn Problem>, spec: TrainSpec) -> anyhow::Result<RunMetrics> {
-    Session::shared(problem).spec(spec).transport(Threaded::new()).run()
-}
-
-/// Alias kept for API symmetry with async runtimes.
-#[deprecated(
-    note = "use engine::Session::shared(problem).spec(spec).transport(Threaded::new()).run()"
-)]
-pub fn run_distributed_blocking(
-    problem: Arc<dyn Problem>,
-    spec: TrainSpec,
-) -> anyhow::Result<RunMetrics> {
-    Session::shared(problem).spec(spec).transport(Threaded::new()).run()
-}
-
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::algorithms::AlgorithmKind;
     use crate::data::synth::linreg_problem;
+    use crate::engine::{Session, Threaded, TrainSpec};
+    use std::sync::Arc;
 
-    /// The deprecated shim must stay bit-identical to the engine it wraps —
-    /// and to the in-process path (same state machines, same RNG sites,
-    /// real codec in between; encode/decode is exact for every payload).
+    /// The channel transport must stay bit-identical to the in-process
+    /// path (same state machines, same RNG sites, real codec in between;
+    /// encode/decode is exact for every payload).
     #[test]
-    #[allow(deprecated)]
-    fn run_distributed_shim_matches_inproc_bit_for_bit() {
+    fn threaded_transport_matches_inproc_bit_for_bit() {
         let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
         for algo in [AlgorithmKind::Dore, AlgorithmKind::Sgd, AlgorithmKind::DoubleSqueeze] {
             let spec = TrainSpec { algo, iters: 30, eval_every: 10, ..Default::default() };
             let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
-            let b = run_distributed(p.clone(), spec).unwrap();
+            let b = Session::shared(p.clone())
+                .spec(spec)
+                .transport(Threaded::new())
+                .run()
+                .unwrap();
             assert_eq!(a.loss, b.loss, "{} loss mismatch", algo.name());
             assert_eq!(a.dist_to_opt, b.dist_to_opt);
         }

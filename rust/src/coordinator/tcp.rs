@@ -12,18 +12,30 @@
 //! [`crate::compression::codec`] buffer. Byte accounting counts payload
 //! bytes only (header bytes are fixed per message and reported separately),
 //! keeping the numbers comparable with the other transports.
+//!
+//! Pipelining rides the sockets naturally: each worker writes its
+//! round-`k` uplink after reading the round-`k − depth` downlink, so up to
+//! `depth` uplinks are on the wire per link while the master reduces older
+//! rounds. Because a worker emits its uplink frames in round order, the
+//! next unread uplink frame on a socket is always the oldest round the
+//! master still needs — per-socket sequential reads need no reordering
+//! buffer. Downlinks are written by one dedicated writer thread per worker
+//! (fed from an unbounded channel), so the master's read loop never blocks
+//! on a full send buffer: with `depth ≥ 2` a worker can be mid-write of
+//! uplink `t + 1` while the master broadcasts round `t`, and payloads
+//! larger than the kernel socket buffers would otherwise deadlock the two
+//! blocking writes against each other.
 
 use crate::algorithms::WorkerNode;
 use crate::compression::{codec, Compressed};
-use crate::engine::transport::WorkerRoundDriver;
-use crate::engine::{
-    RoundCtx, Session, StalePolicy, TrainSpec, Transport, UplinkFrame, WirePayload,
-};
-use crate::metrics::RunMetrics;
+use crate::engine::protocol::DownlinkMsg;
+use crate::engine::transport::{absent_slot_frame, RoundWindow, WorkerRoundDriver};
+use crate::engine::{RoundCtx, StalePolicy, TrainSpec, Transport, UplinkFrame, WirePayload};
 use crate::models::Problem;
 use crate::F;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -89,9 +101,26 @@ fn tcp_worker_loop(
             payload: vec![],
         },
     )?;
+    fn read_apply(
+        sock: &mut TcpStream,
+        node: &mut dyn WorkerNode,
+        round: usize,
+    ) -> anyhow::Result<()> {
+        let down = read_frame(sock)?;
+        anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
+        anyhow::ensure!(down.round == round as u32, "round skew");
+        node.apply_downlink(round, &codec::decode(&down.payload)?);
+        Ok(())
+    }
+    let depth = spec.pipeline_depth.max(1);
     let mut grad = vec![0.0 as F; problem.dim()];
     let mut driver = WorkerRoundDriver::new(&spec, n);
     for k in 0..spec.iters {
+        // the round-k uplink is computed against the model with downlinks
+        // through k − depth applied — the pipelined staleness contract
+        if k >= depth {
+            read_apply(&mut sock, node.as_mut(), k - depth)?;
+        }
         if let Some((payload, residual)) =
             driver.round(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad)
         {
@@ -100,21 +129,54 @@ fn tcp_worker_loop(
                 &Frame { kind: KIND_UPLINK, round: k as u32, worker: id as u32, residual, payload },
             )?;
         }
-        let down = read_frame(&mut sock)?;
-        anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
-        anyhow::ensure!(down.round == k as u32, "round skew");
-        node.apply_downlink(k, &codec::decode(&down.payload)?);
+    }
+    // drain the tail so every downlink is applied and the final model
+    // copies agree with the master's
+    for t in spec.iters.saturating_sub(depth)..spec.iters {
+        read_apply(&mut sock, node.as_mut(), t)?;
+    }
+    Ok(())
+}
+
+/// The per-worker downlink writer: drains queued broadcasts onto its write
+/// half of the socket so the master's read loop never blocks on a full
+/// send buffer (the depth ≥ 2 deadlock guard — see the module docs). The
+/// feeding channel is bounded at the pipeline depth: a worker that keeps
+/// consuming downlinks never backs the master up (selected workers are at
+/// most `depth` broadcasts behind by the pacing contract), while a wedged
+/// fleet exerts backpressure instead of queueing the whole run's
+/// broadcasts in memory. Exits when the master drops its sender;
+/// remaining queued frames are flushed first.
+fn tcp_downlink_writer(mut sock: TcpStream, rx: Receiver<DownlinkMsg>) -> anyhow::Result<()> {
+    while let Ok(m) = rx.recv() {
+        write_frame(
+            &mut sock,
+            &Frame {
+                kind: KIND_DOWNLINK,
+                round: m.round as u32,
+                worker: 0,
+                residual: 0.0,
+                payload: m.bytes,
+            },
+        )?;
     }
     Ok(())
 }
 
 /// Socket transport: binds an ephemeral localhost port, runs one OS thread
 /// per worker (each with its own socket) and drives the master side from
-/// the engine loop. Bit-identical iterates to every other transport.
+/// the engine loop. Bit-identical iterates to every other transport, at
+/// every pipeline depth.
 #[derive(Default)]
 pub struct TcpTransport {
+    /// Master-side read halves, one per worker.
     socks: Vec<TcpStream>,
+    /// Queues feeding the per-worker downlink writer threads (bounded at
+    /// the pipeline depth).
+    writer_txs: Vec<SyncSender<DownlinkMsg>>,
+    writer_handles: Vec<JoinHandle<anyhow::Result<()>>>,
     handles: Vec<JoinHandle<anyhow::Result<()>>>,
+    window: RoundWindow,
     /// Master-side replay cache: each worker's last fresh encoded uplink,
     /// kept only under [`StalePolicy::ReuseLast`].
     byte_cache: Vec<Option<Vec<u8>>>,
@@ -145,6 +207,7 @@ impl Transport for TcpTransport {
         })?;
         let n = workers.len();
         self.byte_cache = (0..n).map(|_| None).collect();
+        self.window.reset();
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
 
@@ -170,38 +233,52 @@ impl Transport for TcpTransport {
             socks[id] = Some(s);
         }
         self.socks = socks.into_iter().map(|s| s.expect("accepted every id")).collect();
+        // one downlink writer per worker, on a cloned write half
+        let depth = spec.pipeline_depth.max(1);
+        for (id, s) in self.socks.iter().enumerate() {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(depth);
+            let w = s.try_clone()?;
+            self.writer_txs.push(tx);
+            self.writer_handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dore-tcp-down-{id}"))
+                    .spawn(move || tcp_downlink_writer(w, rx))?,
+            );
+        }
         Ok(())
     }
 
-    fn send_uplink(&mut self, _frame: UplinkFrame) -> anyhow::Result<()> {
-        anyhow::bail!(
-            "tcp transport: uplinks originate on worker sockets; engine-side injection \
-             is not supported"
-        )
+    fn begin_round(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+        inject: Vec<UplinkFrame>,
+    ) -> anyhow::Result<()> {
+        self.window.begin(round, self.socks.len(), ctx.mask, ctx.spec.stale, inject)
     }
 
-    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+    fn poll_uplinks(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
+        self.window.ensure_open(round)?;
         let n = self.socks.len();
         let mask = ctx.mask;
         anyhow::ensure!(mask.len() == n, "round mask covers {} of {n} workers", mask.len());
         let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
+        let mut injected = self.window.take_injected(round, n);
         let mut frames = Vec::with_capacity(n);
         for (i, s) in self.socks.iter_mut().enumerate() {
             // only selected workers transmit this round; absentees' slots
-            // are filled from the replay cache (reuse-last) or left empty
+            // are filled by an injected stand-in, the replay cache
+            // (reuse-last), or left empty
             if !mask[i] {
-                frames.push(UplinkFrame {
-                    worker: i,
-                    round,
-                    payload: self.byte_cache[i]
-                        .as_ref()
-                        .filter(|_| reuse)
-                        .map(|b| WirePayload::Encoded(b.clone())),
-                    residual_norm: 0.0,
-                    compute_seconds: 0.0,
-                });
+                frames.push(absent_slot_frame(&mut injected, &self.byte_cache, reuse, round, i));
                 continue;
             }
+            // workers emit uplinks in round order, so the next unread
+            // uplink frame on this socket is exactly round `round`
             let f = read_frame(s)?;
             anyhow::ensure!(
                 f.kind == KIND_UPLINK && f.round == round as u32 && f.worker as usize == i,
@@ -218,10 +295,10 @@ impl Transport for TcpTransport {
                 compute_seconds: 0.0,
             });
         }
-        Ok(frames)
+        Ok(Some(frames))
     }
 
-    fn broadcast(
+    fn push_downlink(
         &mut self,
         round: usize,
         down: &Compressed,
@@ -229,39 +306,30 @@ impl Transport for TcpTransport {
     ) -> anyhow::Result<u64> {
         let bytes = codec::encode(down);
         let bits = bytes.len() as u64 * 8;
-        for s in self.socks.iter_mut() {
-            write_frame(
-                s,
-                &Frame {
-                    kind: KIND_DOWNLINK,
-                    round: round as u32,
-                    worker: 0,
-                    residual: 0.0,
-                    payload: bytes.clone(),
-                },
-            )?;
+        // hand off to the per-worker writer threads: the master's loop
+        // stays free to keep reading uplinks, which is what prevents the
+        // depth ≥ 2 write/write deadlock on large payloads
+        for tx in &self.writer_txs {
+            tx.send(DownlinkMsg { round, bytes: bytes.clone() })
+                .map_err(|_| anyhow::anyhow!("downlink writer hung up"))?;
         }
         Ok(bits)
     }
 
     fn finish(&mut self) -> anyhow::Result<()> {
-        self.socks.clear();
+        // dropping the senders lets each writer flush its queued downlinks
+        // and exit; join writers before workers so the tail broadcasts the
+        // workers are draining actually reach them
+        self.writer_txs.clear();
+        for h in self.writer_handles.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("tcp downlink writer panicked"))??;
+        }
         for h in self.handles.drain(..) {
             h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
         }
+        self.socks.clear();
         Ok(())
     }
-}
-
-/// Run a training job over localhost TCP.
-#[deprecated(
-    note = "use engine::Session::shared(problem).spec(spec).transport(TcpTransport::new()).run()"
-)]
-pub fn run_distributed_tcp(
-    problem: Arc<dyn Problem>,
-    spec: TrainSpec,
-) -> anyhow::Result<RunMetrics> {
-    Session::shared(problem).spec(spec).transport(TcpTransport::new()).run()
 }
 
 #[cfg(test)]
@@ -269,7 +337,7 @@ mod tests {
     use super::*;
     use crate::algorithms::AlgorithmKind;
     use crate::data::synth::linreg_problem;
-    use crate::engine::Threaded;
+    use crate::engine::{Session, Threaded};
 
     #[test]
     fn tcp_matches_inproc_and_threaded_bit_for_bit() {
@@ -294,12 +362,25 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_tcp_shim_still_runs() {
+    fn tcp_pipelined_depths_match_inproc_bit_for_bit() {
         let p = Arc::new(linreg_problem(60, 16, 2, 0.1, 4));
-        let spec = TrainSpec { iters: 5, eval_every: 2, ..Default::default() };
-        let m = run_distributed_tcp(p, spec).unwrap();
-        assert_eq!(m.total_rounds, 5);
+        for depth in [2usize, 3] {
+            let spec = TrainSpec {
+                algo: AlgorithmKind::Dore,
+                iters: 15,
+                eval_every: 5,
+                pipeline_depth: depth,
+                ..Default::default()
+            };
+            let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+            let b = Session::shared(p.clone())
+                .spec(spec)
+                .transport(TcpTransport::new())
+                .run()
+                .unwrap();
+            assert_eq!(a.loss, b.loss, "depth {depth}: tcp diverged from inproc");
+            assert_eq!(a.dist_to_opt, b.dist_to_opt, "depth {depth}");
+        }
     }
 
     #[test]

@@ -27,6 +27,19 @@
 //! (`rust/tests/integration_engine.rs` asserts it for all seven), because
 //! the engine owns all stochastic sites and the codec round-trip is exact.
 //!
+//! The transport protocol is **two-phase** ([`Transport::begin_round`] →
+//! [`Transport::poll_uplinks`] → [`Transport::push_downlink`]), and the
+//! loop is a round state machine keeping up to
+//! [`TrainSpec::pipeline_depth`] rounds in flight per link. Depth 1 is the
+//! classic synchronous schedule (bit-identical to the pre-pipeline
+//! engine); depth `D ≥ 2` overlaps the uplink of round `t + 1` with the
+//! master pass of round `t` — workers compute round-`t` gradients against
+//! the round-`t − D + 1` model under the explicit
+//! [`crate::algorithms::WorkerNode::accept_staleness`] contract, [`SimNet`]
+//! models the hidden wire latency, and [`RoundEvent`] /
+//! [`RunMetrics`] carry in-flight and staleness accounting
+//! (`rust/tests/proptest_pipeline.rs` pins both regimes).
+//!
 //! Rounds need not be full gathers: a [`Participation`] policy on the
 //! [`TrainSpec`] selects a per-round subset of uploaders (k-of-n sampling
 //! or Bernoulli dropout, both pure functions of `(seed, round, n)`), a

@@ -23,6 +23,8 @@ pub struct RunInfo<'a> {
     pub dim: usize,
     /// Rounds that will be executed.
     pub iters: usize,
+    /// Configured in-flight rounds per link (1 = classic synchronous).
+    pub pipeline_depth: usize,
 }
 
 /// Per-round accounting, emitted after every synchronous round.
@@ -33,6 +35,14 @@ pub struct RoundEvent {
     /// (= `n_workers` under full participation; fewer under
     /// [`crate::engine::Participation`] policies).
     pub participants: usize,
+    /// Rounds in flight when this round completed (1 under the classic
+    /// synchronous loop; up to [`crate::engine::TrainSpec::pipeline_depth`]
+    /// once the pipeline window is full).
+    pub in_flight: usize,
+    /// How many downlinks the model this round's uplinks were computed at
+    /// was missing, relative to a synchronous run (0 at depth 1; up to
+    /// `pipeline_depth − 1` once the window is full).
+    pub staleness: usize,
     /// Uplink bits moved this round, summed over participating workers
     /// (replayed stale frames move no bytes and count zero).
     pub uplink_bits: u64,
@@ -94,6 +104,10 @@ impl Observer for RunMetrics {
         self.uplink_bits += e.uplink_bits;
         self.downlink_bits += e.downlink_bits;
         self.participant_uplinks += e.participants as u64;
+        self.max_in_flight = self.max_in_flight.max(e.in_flight);
+        if e.staleness > 0 {
+            self.stale_uplink_rounds += 1;
+        }
     }
 
     fn on_eval(&mut self, e: &EvalEvent) {
@@ -129,6 +143,8 @@ mod tests {
         m.on_round(&RoundEvent {
             round: 0,
             participants: 2,
+            in_flight: 2,
+            staleness: 1,
             uplink_bits: 100,
             downlink_bits: 40,
             worker_residual_norm: 1.0,
@@ -154,6 +170,8 @@ mod tests {
         assert_eq!(m.uplink_bits, 100);
         assert_eq!(m.downlink_bits, 40);
         assert_eq!(m.participant_uplinks, 2);
+        assert_eq!(m.max_in_flight, 2);
+        assert_eq!(m.stale_uplink_rounds, 1);
         assert_eq!(m.rounds, vec![0]);
         assert_eq!(m.loss, vec![2.0]);
         assert_eq!(m.dist_to_opt, vec![3.0]);

@@ -3,8 +3,19 @@
 //! Everything a training run shares — RNG-site seeding, exact bit
 //! accounting, the eval cadence, metric/event emission — lives in
 //! [`Session::run`]. Transports only move bytes; observers only consume
-//! events. The deprecated entry points `harness::run_inproc` and
-//! `coordinator::run_distributed` are thin shims over this loop.
+//! events.
+//!
+//! The loop is a **round state machine**: up to
+//! [`TrainSpec::pipeline_depth`] rounds are open at once. Each engine step
+//! first tops up the in-flight window ([`Transport::begin_round`] for the
+//! newest rounds), then completes the oldest open round
+//! ([`Transport::poll_uplinks`] → master reduce → downlink RNG site →
+//! [`Transport::push_downlink`] → events/eval). At depth 1 this interleaves
+//! exactly like the classic blocking gather/reduce/broadcast loop — bit-
+//! identical trajectories, payloads and wire accounting. At depth `D ≥ 2`
+//! workers compute their round-`t` gradient against the model of round
+//! `t − D + 1` (downlinks applied only through `t − D`): gradient staleness
+//! is the price, hidden wire latency the prize.
 
 use super::observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
 use super::participation::{Participation, StalePolicy};
@@ -42,12 +53,23 @@ pub struct TrainSpec {
     /// `0` = all available cores. Results are **bit-identical** for every
     /// value — this knob trades wall-clock only (default: 1, serial).
     pub reduce_threads: usize,
+    /// In-flight rounds per link (default: 1 = classic synchronous rounds,
+    /// bit-identical to the pre-pipeline engine). At depth `D ≥ 2` the
+    /// engine opens round `t + D − 1` before completing round `t`: workers
+    /// compute round-`t` gradients against the round-`t − D + 1` model
+    /// (see [`crate::algorithms::WorkerNode::accept_staleness`]), and a
+    /// latency-bound link hides up to `D − 1` rounds of wire time behind
+    /// the master pass ([`crate::engine::SimNet`] models the overlap).
+    /// Unlike `reduce_threads`, this knob **changes the trajectory** for
+    /// `D ≥ 2` — deterministically, and identically on every transport.
+    pub pipeline_depth: usize,
 }
 
 impl TrainSpec {
     /// This round's participation mask for a fleet of `n` — the pure
     /// function of `(seed, round, n)` the engine, every transport, and
-    /// every worker thread evaluate independently (and identically).
+    /// every worker thread evaluate independently (and identically),
+    /// regardless of how many rounds are in flight.
     pub fn round_mask(&self, round: usize, n: usize) -> Vec<bool> {
         self.participation.mask(self.seed, round, n)
     }
@@ -65,6 +87,7 @@ impl Default for TrainSpec {
             participation: Participation::Full,
             stale: StalePolicy::Skip,
             reduce_threads: 1,
+            pipeline_depth: 1,
         }
     }
 }
@@ -209,6 +232,15 @@ impl<'p> Session<'p> {
         self
     }
 
+    /// In-flight rounds per link (default 1 = classic synchronous rounds).
+    /// Depth `D ≥ 2` overlaps the uplink of round `t + 1` with the master
+    /// pass of round `t` at the price of a `D − 1`-round-stale gradient —
+    /// see [`TrainSpec::pipeline_depth`].
+    pub fn pipeline_depth(mut self, depth: usize) -> Self {
+        self.spec.pipeline_depth = depth;
+        self
+    }
+
     /// Replace the whole spec at once (migration aid for callers that
     /// already assemble a [`TrainSpec`]). Like [`Session::algo`], this
     /// resets any earlier [`Session::algo_name`] override — the spec's
@@ -231,25 +263,38 @@ impl<'p> Session<'p> {
         self
     }
 
-    /// Execute the run: the one synchronous-round loop every entry point in
+    /// Execute the run: the one round state machine every entry point in
     /// the crate shares. Deterministic given `spec.seed` for every
-    /// transport; all transports yield bit-identical iterates.
+    /// transport and every pipeline depth; all transports yield
+    /// bit-identical iterates at the same depth.
     pub fn run(self) -> anyhow::Result<RunMetrics> {
         let Session { problem, spec, algo_name, mut transport, mut observers } = self;
         let p = problem.get();
         let n = p.n_workers();
         let d = p.dim();
         anyhow::ensure!(n > 0, "problem declares zero workers");
+        anyhow::ensure!(
+            spec.pipeline_depth >= 1,
+            "pipeline_depth must be ≥ 1 (1 = synchronous rounds), got 0"
+        );
         spec.participation.validate(n)?;
         let eval_every = spec.eval_every.max(1);
+        let depth = spec.pipeline_depth;
 
         let x0 = p.init();
         let display = algo_name.as_deref().unwrap_or_else(|| spec.algo.name());
-        let (workers, mut master) = match &algo_name {
+        let (mut workers, mut master) = match &algo_name {
             Some(name) => registry::build_by_name(name, n, &x0, &spec.hp)?,
             None => registry::build_algorithm(spec.algo, n, &x0, &spec.hp)?,
         };
         master.set_reduce_pool(ReducePool::new(spec.reduce_threads));
+        if depth > 1 {
+            // the staleness contract: every worker must accept gradients
+            // evaluated at a model up to depth − 1 downlinks behind
+            for w in workers.iter_mut() {
+                w.accept_staleness(depth - 1)?;
+            }
+        }
         transport.start(workers, problem.shared(), &spec)?;
 
         let info = RunInfo {
@@ -258,6 +303,7 @@ impl<'p> Session<'p> {
             n_workers: n,
             dim: d,
             iters: spec.iters,
+            pipeline_depth: depth,
         };
         let mut metrics = RunMetrics::new(display);
         metrics.on_start(&info);
@@ -266,15 +312,40 @@ impl<'p> Session<'p> {
         }
 
         let sw = Stopwatch::start();
-        for k in 0..spec.iters {
-            // 1. workers: gradient at the local model → uplink (executed by
-            //    the transport, inline or on worker threads). Under partial
-            //    participation the barrier waits only for the masked
-            //    subset; the other slots carry a replayed stale frame
-            //    (reuse-last) or nothing (skip).
-            let mask = spec.round_mask(k, n);
-            let frames =
-                transport.gather(k, RoundCtx { problem: p, spec: &spec, mask: &mask })?;
+        let mut begun = 0usize;
+        // masks of the open rounds, oldest first (computed once per round,
+        // at begin time, and reused when the round completes)
+        let mut open_masks: std::collections::VecDeque<Vec<bool>> =
+            std::collections::VecDeque::with_capacity(depth);
+        for t in 0..spec.iters {
+            // 1. top up the in-flight window: open the newest rounds so up
+            //    to `depth` are outstanding before the oldest completes.
+            //    Inline transports execute the masked worker steps here —
+            //    against model state that lags by the pipeline depth.
+            while begun < spec.iters && begun < t + depth {
+                let bmask = spec.round_mask(begun, n);
+                transport.begin_round(
+                    begun,
+                    RoundCtx { problem: p, spec: &spec, mask: &bmask },
+                    Vec::new(),
+                )?;
+                open_masks.push_back(bmask);
+                begun += 1;
+            }
+            let in_flight = begun - t;
+
+            // 2. complete the oldest open round: resolve its uplink slots.
+            //    Under partial participation the barrier waits only for the
+            //    masked subset; the other slots carry a replayed stale
+            //    frame (reuse-last), an injected stand-in, or nothing.
+            let mask = open_masks.pop_front().expect("completing round was begun");
+            let frames = loop {
+                let ctx = RoundCtx { problem: p, spec: &spec, mask: &mask };
+                match transport.poll_uplinks(t, ctx)? {
+                    Some(frames) => break frames,
+                    None => std::thread::yield_now(),
+                }
+            };
             anyhow::ensure!(
                 frames.len() == n,
                 "transport returned {} uplink slots for {n} workers",
@@ -286,11 +357,11 @@ impl<'p> Session<'p> {
             let mut uplinks: Vec<Option<Compressed>> = Vec::with_capacity(n);
             for (i, f) in frames.into_iter().enumerate() {
                 anyhow::ensure!(f.worker == i, "uplink frames out of worker order");
-                anyhow::ensure!(f.round == k, "round skew: engine at {k}, frame at {}", f.round);
+                anyhow::ensure!(f.round == t, "round skew: engine at {t}, frame at {}", f.round);
                 if mask[i] {
                     // a selected worker must have uploaded a fresh frame
                     let payload = f.payload.ok_or_else(|| {
-                        anyhow::anyhow!("worker {i} was selected for round {k} but sent no uplink")
+                        anyhow::anyhow!("worker {i} was selected for round {t} but sent no uplink")
                     })?;
                     round_up_bits += payload.wire_bits();
                     res_sum += f.residual_norm;
@@ -304,24 +375,30 @@ impl<'p> Session<'p> {
                 }
             }
 
-            // 2. master: aggregate → downlink broadcast (site 0 RNG).
-            let mut mrng = Xoshiro256::for_site(spec.seed, 0, k as u64);
-            let down = master.round(k, &uplinks, &mut mrng);
+            // 3. master: aggregate → downlink (site 0 RNG).
+            let mut mrng = Xoshiro256::for_site(spec.seed, 0, t as u64);
+            let down = master.round(t, &uplinks, &mut mrng);
 
-            // 3. broadcast, received by every worker.
-            let bits_per_copy = transport.broadcast(
-                k,
+            // 4. push the broadcast; inline transports apply it to every
+            //    worker now (self-paced workers apply it before computing
+            //    their round-`t + depth` uplink).
+            let bits_per_copy = transport.push_downlink(
+                t,
                 &down,
                 RoundCtx { problem: p, spec: &spec, mask: &mask },
             )?;
             let round_down_bits = n as u64 * bits_per_copy;
 
-            // 4. events + eval cadence.
+            // 5. events + eval cadence.
             let worker_res = res_sum / participants.max(1) as f64;
             let master_res = master.last_compressed_norm();
             let rev = RoundEvent {
-                round: k,
+                round: t,
                 participants,
+                in_flight,
+                // downlinks missing from the model the round-`t` uplinks
+                // were computed at, relative to a synchronous run
+                staleness: t.min(depth - 1),
                 uplink_bits: round_up_bits,
                 downlink_bits: round_down_bits,
                 worker_residual_norm: worker_res,
@@ -332,10 +409,10 @@ impl<'p> Session<'p> {
             for o in observers.iter_mut() {
                 o.on_round(&rev);
             }
-            if k % eval_every == 0 || k + 1 == spec.iters {
+            if t % eval_every == 0 || t + 1 == spec.iters {
                 let x = master.model();
                 let eev = EvalEvent {
-                    round: k,
+                    round: t,
                     loss: p.loss(x),
                     dist_to_opt: p.optimum().map(|xs| linalg::dist2(x, xs)),
                     test_loss: p.test_loss(x),
@@ -490,5 +567,54 @@ mod tests {
         let spec = TrainSpec { iters: 3, eval_every: 0, ..Default::default() };
         let m = Session::new(&p).spec(spec).run().unwrap();
         assert_eq!(m.rounds, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn zero_pipeline_depth_is_rejected_up_front() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let err = Session::new(&p).pipeline_depth(0).run().unwrap_err();
+        assert!(err.to_string().contains("pipeline_depth"), "{err}");
+    }
+
+    #[test]
+    fn pipelined_runs_are_deterministic_and_report_depth() {
+        let p = linreg_problem(120, 20, 4, 0.1, 5);
+        for depth in [2usize, 3] {
+            let spec = TrainSpec {
+                iters: 60,
+                eval_every: 10,
+                pipeline_depth: depth,
+                ..Default::default()
+            };
+            let a = Session::new(&p).spec(spec.clone()).run().unwrap();
+            let b = Session::new(&p).spec(spec).run().unwrap();
+            assert_eq!(a.loss, b.loss, "depth={depth}: replay diverged");
+            assert_eq!(a.uplink_bits, b.uplink_bits, "depth={depth}");
+            assert_eq!(a.max_in_flight, depth, "depth={depth}: window never filled");
+            // rounds 1.. carry a stale gradient; round 0 starts from x0
+            // exactly like a synchronous run
+            assert_eq!(a.stale_uplink_rounds, 60 - 1, "depth={depth}");
+            // a depth-D pipeline still converges on the benign problem
+            let (first, last) = (a.loss[0], *a.loss.last().unwrap());
+            assert!(last < first * 0.5, "depth={depth} did not converge: {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn depth_beyond_iters_is_harmless() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 3, eval_every: 1, pipeline_depth: 8, ..Default::default() };
+        let m = Session::new(&p).spec(spec).run().unwrap();
+        assert_eq!(m.rounds, vec![0, 1, 2]);
+        assert_eq!(m.max_in_flight, 3, "window is capped by the round count");
+    }
+
+    #[test]
+    fn depth_one_reports_synchronous_accounting() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 10, eval_every: 5, ..Default::default() };
+        let m = Session::new(&p).spec(spec).run().unwrap();
+        assert_eq!(m.max_in_flight, 1);
+        assert_eq!(m.stale_uplink_rounds, 0);
     }
 }

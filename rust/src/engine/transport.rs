@@ -1,16 +1,47 @@
 //! The [`Transport`] trait and its three in-tree implementations.
 //!
-//! A transport moves one round's payloads between the engine (which drives
-//! the master state machine) and the worker fleet. The engine only ever
-//! calls [`Transport::gather`] and [`Transport::broadcast`]; how the worker
-//! side executes — inline on the engine thread ([`InProc`], [`SimNet`]) or
-//! on its own OS threads ([`Threaded`], TCP) — is the transport's business.
-//! [`Transport::send_uplink`] is the worker→master data-plane entry point
-//! for inline transports and for external drivers that inject or replay
-//! uplinks; thread/socket transports receive uplinks on their own channels
-//! instead. Partial participation itself is first-class: every transport
-//! evaluates the same pure [`TrainSpec::round_mask`] and gathers only the
-//! selected subset, with [`StalePolicy`] governing the rest.
+//! A transport moves round payloads between the engine (which drives the
+//! master state machine) and the worker fleet. The protocol is **two-phase**
+//! so the engine can keep several rounds in flight per link
+//! ([`crate::engine::TrainSpec::pipeline_depth`]):
+//!
+//! 1. [`Transport::begin_round`] opens round `k`: inline transports run the
+//!    masked worker steps now (each worker computes its round-`k` gradient
+//!    against its *current* — possibly stale — model copy); thread/socket
+//!    transports do master-side bookkeeping only, because their workers
+//!    self-pace off the downlink stream.
+//! 2. [`Transport::poll_uplinks`] resolves round `k`'s uplink slots once
+//!    every awaited frame is in. Rounds are polled strictly in order.
+//! 3. [`Transport::push_downlink`] broadcasts round `k`'s downlink (and, for
+//!    inline transports, applies it to every worker).
+//!
+//! With depth 1 the engine interleaves the phases exactly like the old
+//! blocking `gather`/`broadcast` loop — bit-identical trajectories. With
+//! depth `D ≥ 2` up to `D` rounds are open at once: the uplink of round
+//! `t+1` is computed (and, on a modelled link, transmitted) while the master
+//! reduces round `t`. See [`crate::algorithms::WorkerNode::accept_staleness`]
+//! for the worker-side contract that keeps the residual-state invariants
+//! exact under that overlap.
+//!
+//! External drivers may *inject* uplink frames through `begin_round`'s
+//! `inject` argument: an injected frame stands in for a worker the round's
+//! participation mask left out, and is treated uniformly by every transport
+//! (it fills that slot at poll time instead of the empty default).
+//! Injecting for a *selected* worker is rejected — selected workers always
+//! compute their own uplink, on every transport — and injection requires
+//! [`StalePolicy::Skip`], because under reuse-last the self-paced workers
+//! of the byte-moving transports could not observe the injection and their
+//! replay folds would diverge from the master's. An injected payload feeds
+//! the **master only**: the stood-in worker's state does not advance
+//! (exactly the old `send_uplink` contract). For the residual schemes
+//! (DORE/DIANA), whose master folds every consumed payload into shared
+//! state, that shifts `h` relative to `(1/n)Σ hᵢ` — the injector owns that
+//! invariant; injection composes cleanly with the stateless/averaging
+//! schemes.
+//!
+//! Partial participation is first-class: every transport evaluates the same
+//! pure [`TrainSpec::round_mask`] and awaits only the selected subset, with
+//! [`StalePolicy`] governing the rest.
 //!
 //! Worker-side round execution is the shared [`worker_uplink`] helper, so
 //! the RNG sites (gradient sampling and quantization) are seeded in exactly
@@ -24,6 +55,7 @@ use crate::comm::{LinkSpec, NetSim, StragglerSpec};
 use crate::compression::{codec, Compressed, Xoshiro256};
 use crate::models::Problem;
 use crate::F;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::mpsc::{Receiver, Sender, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -65,8 +97,9 @@ impl WirePayload {
 /// One worker's uplink slot for one round. `payload` is `None` when the
 /// worker sat the round out with nothing to stand in for it
 /// ([`StalePolicy::Skip`], or reuse-last before the worker's first
-/// upload); a replayed stale frame arrives as `Some` but the engine counts
-/// its wire bits only if the worker was actually selected this round.
+/// upload); a replayed stale frame (or an injected one) arrives as `Some`
+/// but the engine counts its wire bits only if the worker was actually
+/// selected this round.
 #[derive(Clone, Debug)]
 pub struct UplinkFrame {
     pub worker: usize,
@@ -77,7 +110,7 @@ pub struct UplinkFrame {
     /// Measured seconds this worker spent on its gradient + compression
     /// step. Filled by inline transports — the [`SimNet`] clock folds the
     /// per-worker readiness times (compute × straggler factor + jitter)
-    /// over the *awaited* subset into [`NetSim::gather_round`];
+    /// over the *awaited* subset into its pipelined round model;
     /// thread/socket transports report 0.
     pub compute_seconds: f64,
 }
@@ -89,15 +122,21 @@ pub struct UplinkFrame {
 pub struct RoundCtx<'a> {
     pub problem: &'a dyn Problem,
     pub spec: &'a TrainSpec,
-    /// This round's participation mask, computed **once** by the engine
-    /// (`spec.round_mask(round, n)`); master-side transport code reads it
-    /// from here instead of re-deriving it. Worker threads (Threaded/TCP)
-    /// still evaluate the same pure function locally — that recomputation
-    /// is cross-thread and unavoidable.
+    /// The participation mask of the round this call is about, computed
+    /// **once** by the engine (`spec.round_mask(round, n)`); master-side
+    /// transport code reads it from here instead of re-deriving it. Worker
+    /// threads (Threaded/TCP) still evaluate the same pure function locally
+    /// — that recomputation is cross-thread and unavoidable.
     pub mask: &'a [bool],
 }
 
 /// How bytes move between the engine and the worker fleet.
+///
+/// Round protocol (per round `k`, rounds strictly ordered):
+/// `begin_round(k)` → `poll_uplinks(k)` until `Some` → `push_downlink(k)`.
+/// The engine may open up to [`TrainSpec::pipeline_depth`] rounds before
+/// polling the oldest; `begin_round` calls arrive in round order, as do
+/// `poll_uplinks`/`push_downlink` pairs.
 pub trait Transport: Send {
     /// Display name (shown in [`super::RunInfo`] and CLI summaries).
     fn name(&self) -> &'static str;
@@ -113,21 +152,43 @@ pub trait Transport: Send {
         spec: &TrainSpec,
     ) -> anyhow::Result<()>;
 
-    /// Worker → master: submit one uplink frame. Inline transports route
-    /// their own worker steps through this; injection-style drivers may call
-    /// it externally. Transports whose workers push from other threads
-    /// (channels, sockets) reject it.
-    fn send_uplink(&mut self, frame: UplinkFrame) -> anyhow::Result<()>;
+    /// Phase 1: open round `round`. Inline transports execute the masked
+    /// worker steps here (against each worker's current model copy);
+    /// thread/socket transports only record bookkeeping — their workers
+    /// self-pace off the downlink stream.
+    ///
+    /// `inject` carries externally supplied frames standing in for workers
+    /// the mask left out this round: each frame must target an *unselected*
+    /// slot (`!ctx.mask[frame.worker]`), carry `frame.round == round`, and
+    /// the spec must use [`StalePolicy::Skip`] (see the module docs for
+    /// the reuse-last rationale). An injected frame fills the
+    /// slot at poll time — uniformly on every transport. The engine itself
+    /// always passes an empty vec; injection is the hook for external
+    /// drivers that drive a transport directly.
+    fn begin_round(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+        inject: Vec<UplinkFrame>,
+    ) -> anyhow::Result<()>;
 
-    /// Master barrier: return every worker's round-`round` uplink, ordered
-    /// by worker id. Inline transports execute the worker steps here.
-    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>>;
+    /// Phase 2: resolve round `round`'s uplink slots — one per worker,
+    /// ordered by worker id. Returns `Some(frames)` once every awaited
+    /// uplink is in; `None` when the round cannot be resolved yet (the
+    /// engine yields and retries). In-tree transports block toward
+    /// completion and never return `None`; the option exists for genuinely
+    /// non-blocking (socket-poll) implementations.
+    fn poll_uplinks(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<Option<Vec<UplinkFrame>>>;
 
-    /// Master → workers: broadcast the downlink and (for inline transports)
-    /// apply it. Returns the wire bits of one broadcast copy — the engine
-    /// multiplies by the worker count for accounting, matching the star
-    /// topology where every worker receives the payload.
-    fn broadcast(
+    /// Phase 3: broadcast round `round`'s downlink and (for inline
+    /// transports) apply it. Returns the wire bits of one broadcast copy —
+    /// the engine multiplies by the worker count for accounting, matching
+    /// the star topology where every worker receives the payload.
+    fn push_downlink(
         &mut self,
         round: usize,
         down: &Compressed,
@@ -166,6 +227,136 @@ pub fn worker_uplink(
     let up = node.round(round, grad, &mut qrng);
     let residual_norm = node.last_compressed_norm();
     (up, residual_norm)
+}
+
+/// Validate one round's injected frames against the round, its mask and
+/// the stale policy (shared by every transport's `begin_round`, including
+/// the TCP one). Injection requires [`StalePolicy::Skip`]: under
+/// reuse-last the self-paced workers of the byte-moving transports cannot
+/// observe an injection and would fire their [`WorkerNode::on_reused`]
+/// replay fold while the master consumed the injected payload instead —
+/// desyncing the residual invariants and the transports from each other.
+/// Even under skip, the stood-in worker's state does not advance while
+/// the master consumes the payload; see the module docs for what that
+/// means for the residual schemes' `h` invariant (the injector owns it).
+pub(crate) fn validate_injections(
+    round: usize,
+    mask: &[bool],
+    stale: StalePolicy,
+    inject: &[UplinkFrame],
+) -> anyhow::Result<()> {
+    if inject.is_empty() {
+        return Ok(());
+    }
+    anyhow::ensure!(
+        stale == StalePolicy::Skip,
+        "uplink injection requires StalePolicy::Skip: under reuse-last the workers' \
+         replay folds cannot see an injected stand-in, so the transports would diverge"
+    );
+    let mut seen = vec![false; mask.len()];
+    for f in inject {
+        anyhow::ensure!(
+            f.worker < mask.len(),
+            "injected uplink for unknown worker {}",
+            f.worker
+        );
+        anyhow::ensure!(
+            f.round == round,
+            "injected uplink for round {} at begin_round({round})",
+            f.round
+        );
+        anyhow::ensure!(
+            !mask[f.worker],
+            "worker {} is selected for round {round}: selected workers compute their \
+             own uplink; injection stands in for unselected slots only",
+            f.worker
+        );
+        anyhow::ensure!(!seen[f.worker], "duplicate injection for worker {}", f.worker);
+        seen[f.worker] = true;
+    }
+    Ok(())
+}
+
+/// Master-side round bookkeeping shared by the channel- and socket-backed
+/// transports (whose workers self-pace, so `begin_round` is bookkeeping
+/// only): in-order round opening plus the per-round injected stand-ins.
+#[derive(Default)]
+pub(crate) struct RoundWindow {
+    next_begin: usize,
+    /// Injected stand-ins for unselected slots, keyed by round.
+    injected: BTreeMap<usize, Vec<UplinkFrame>>,
+}
+
+impl RoundWindow {
+    pub(crate) fn reset(&mut self) {
+        self.next_begin = 0;
+        self.injected.clear();
+    }
+
+    /// Rounds opened so far (`begin_round` has run for `0..next_begin`).
+    pub(crate) fn next_begin(&self) -> usize {
+        self.next_begin
+    }
+
+    /// The shared `begin_round` body: enforce round order, check the mask
+    /// covers the fleet, validate and stash any injected frames.
+    pub(crate) fn begin(
+        &mut self,
+        round: usize,
+        n: usize,
+        mask: &[bool],
+        stale: StalePolicy,
+        inject: Vec<UplinkFrame>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            round == self.next_begin,
+            "rounds open in order: begin_round({round}) after {}",
+            self.next_begin
+        );
+        anyhow::ensure!(mask.len() == n, "round mask covers {} of {n} workers", mask.len());
+        validate_injections(round, mask, stale, &inject)?;
+        if !inject.is_empty() {
+            self.injected.insert(round, inject);
+        }
+        self.next_begin += 1;
+        Ok(())
+    }
+
+    pub(crate) fn ensure_open(&self, round: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(round < self.next_begin, "poll_uplinks({round}) before begin_round");
+        Ok(())
+    }
+
+    /// Scatter `round`'s injected frames into per-worker slots.
+    pub(crate) fn take_injected(&mut self, round: usize, n: usize) -> Vec<Option<UplinkFrame>> {
+        let mut slots: Vec<Option<UplinkFrame>> = (0..n).map(|_| None).collect();
+        for f in self.injected.remove(&round).unwrap_or_default() {
+            slots[f.worker] = Some(f);
+        }
+        slots
+    }
+}
+
+/// The slot an absentee contributes at poll time, shared by the byte-moving
+/// transports: the injected stand-in if one was queued, else the replay
+/// cache (reuse-last), else an empty frame.
+pub(crate) fn absent_slot_frame(
+    injected: &mut [Option<UplinkFrame>],
+    byte_cache: &[Option<Vec<u8>>],
+    reuse: bool,
+    round: usize,
+    worker: usize,
+) -> UplinkFrame {
+    injected[worker].take().unwrap_or_else(|| UplinkFrame {
+        worker,
+        round,
+        payload: byte_cache[worker]
+            .as_ref()
+            .filter(|_| reuse)
+            .map(|b| WirePayload::Encoded(b.clone())),
+        residual_norm: 0.0,
+        compute_seconds: 0.0,
+    })
 }
 
 /// Worker-side partial-participation driver shared by the thread- and
@@ -226,19 +417,31 @@ impl WorkerRoundDriver {
 /// Zero-copy transport: workers execute inline on the engine thread and
 /// payloads never touch the codec. The fastest path, and the reference the
 /// other transports are tested bit-for-bit against.
+///
+/// Pipelining: `begin_round(k)` runs every masked worker's round-`k` step
+/// immediately (against whatever model state the downlinks applied so far
+/// left it with) and parks the frames; `poll_uplinks(k)` hands them back in
+/// round order. Up to `pipeline_depth` rounds of frames are parked at once.
 #[derive(Default)]
 pub struct InProc {
     workers: Vec<Box<dyn WorkerNode>>,
     grad: Vec<F>,
-    pending: Vec<UplinkFrame>,
+    /// Completed-but-unpolled rounds, in round order (≤ depth entries).
+    ready: VecDeque<(usize, Vec<UplinkFrame>)>,
     /// Each worker's last fresh uplink, kept only under
     /// [`StalePolicy::ReuseLast`] (the master-side replay cache).
     cache: Vec<Option<Compressed>>,
+    next_begin: usize,
 }
 
 impl InProc {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// The worker fleet (used by [`SimNet`] for sizing).
+    fn n(&self) -> usize {
+        self.workers.len()
     }
 }
 
@@ -255,24 +458,22 @@ impl Transport for InProc {
     ) -> anyhow::Result<()> {
         self.cache = (0..workers.len()).map(|_| None).collect();
         self.workers = workers;
+        self.ready.clear();
+        self.next_begin = 0;
         Ok(())
     }
 
-    /// Queue a frame that stands in for that worker's next computed uplink:
-    /// at the next [`Transport::gather`], an injected frame suppresses the
-    /// worker's own round step (its state does not advance) — the hook for
-    /// partial-participation / stale-worker / replay drivers.
-    fn send_uplink(&mut self, frame: UplinkFrame) -> anyhow::Result<()> {
+    fn begin_round(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+        inject: Vec<UplinkFrame>,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(
-            frame.worker < self.workers.len(),
-            "injected uplink for unknown worker {}",
-            frame.worker
+            round == self.next_begin,
+            "rounds open in order: begin_round({round}) after {}",
+            self.next_begin
         );
-        self.pending.push(frame);
-        Ok(())
-    }
-
-    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
         let d = ctx.problem.dim();
         if self.grad.len() != d {
             self.grad = vec![0.0; d];
@@ -284,20 +485,15 @@ impl Transport for InProc {
             mask.len(),
             self.workers.len()
         );
-        let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
+        validate_injections(round, mask, ctx.spec.stale, &inject)?;
         let mut injected: Vec<Option<UplinkFrame>> =
             (0..self.workers.len()).map(|_| None).collect();
-        for f in std::mem::take(&mut self.pending) {
+        for f in inject {
             injected[f.worker] = Some(f);
         }
+        let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
         let mut frames = Vec::with_capacity(self.workers.len());
         for (i, node) in self.workers.iter_mut().enumerate() {
-            if let Some(f) = injected[i].take() {
-                // externally injected frame replaces whatever this worker
-                // would have produced (its own state does not advance)
-                frames.push(f);
-                continue;
-            }
             frames.push(if mask[i] {
                 let t0 = std::time::Instant::now();
                 let (up, residual_norm) = worker_uplink(
@@ -318,6 +514,11 @@ impl Transport for InProc {
                     residual_norm,
                     compute_seconds: t0.elapsed().as_secs_f64(),
                 }
+            } else if let Some(f) = injected[i].take() {
+                // externally injected stand-in for this unselected slot
+                // (injection implies the skip policy, so no replay/
+                // on_reused fold competes with it)
+                f
             } else {
                 // sitting out: replay the cached frame (notifying the
                 // worker so residual state stays consistent) or skip
@@ -337,10 +538,26 @@ impl Transport for InProc {
                 }
             });
         }
-        Ok(frames)
+        self.ready.push_back((round, frames));
+        self.next_begin += 1;
+        Ok(())
     }
 
-    fn broadcast(
+    fn poll_uplinks(
+        &mut self,
+        round: usize,
+        _ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
+        match self.ready.front() {
+            Some(&(r, _)) if r == round => {
+                Ok(Some(self.ready.pop_front().expect("front checked").1))
+            }
+            Some(&(r, _)) => anyhow::bail!("poll_uplinks({round}) but round {r} is oldest open"),
+            None => anyhow::bail!("poll_uplinks({round}) before begin_round({round})"),
+        }
+    }
+
+    fn push_downlink(
         &mut self,
         round: usize,
         down: &Compressed,
@@ -361,18 +578,39 @@ impl Transport for InProc {
 // Threaded: one OS thread per worker over std mpsc channels.
 // ---------------------------------------------------------------------------
 
+/// One round's received-but-unassembled uplinks (filled-slot count kept
+/// alongside so the poll barrier doesn't rescan the slots per message).
+#[derive(Default)]
+struct ParkedRound {
+    got: usize,
+    slots: Vec<Option<UplinkMsg>>,
+}
+
 /// Channel transport: one master-side engine plus one OS thread per worker,
 /// payloads crossing as real encoded wire bytes. The deployment shape of a
 /// parameter server, minus the sockets (see
 /// [`crate::coordinator::tcp::TcpTransport`] for those).
+///
+/// Pipelining: workers self-pace — each sends its round-`k` uplink after
+/// applying the round-`k − depth` downlink, so up to `depth` uplinks ride
+/// the channel per link while the master reduces older rounds. Frames that
+/// arrive ahead of the round being polled are parked per-round until their
+/// turn.
 #[derive(Default)]
 pub struct Threaded {
     n: usize,
     up_rx: Option<Receiver<UplinkMsg>>,
     down_txs: Vec<SyncSender<DownlinkMsg>>,
     handles: Vec<JoinHandle<anyhow::Result<()>>>,
+    /// Frames received ahead of their round's poll, keyed by round.
+    parked: BTreeMap<usize, ParkedRound>,
+    /// Memoized participation masks of later in-flight rounds (computed at
+    /// most once per round, dropped when the round is assembled).
+    mask_memo: BTreeMap<usize, Vec<bool>>,
+    window: RoundWindow,
     /// Master-side replay cache: each worker's last fresh encoded uplink,
-    /// kept only under [`StalePolicy::ReuseLast`].
+    /// kept only under [`StalePolicy::ReuseLast`]. Updated in round order
+    /// at poll-assembly time, never when parking early frames.
     byte_cache: Vec<Option<Vec<u8>>>,
 }
 
@@ -391,9 +629,28 @@ fn threaded_worker_loop(
     to_master: Sender<UplinkMsg>,
     from_master: Receiver<DownlinkMsg>,
 ) -> anyhow::Result<()> {
+    fn recv_apply(
+        from_master: &Receiver<DownlinkMsg>,
+        node: &mut dyn WorkerNode,
+        round: usize,
+    ) -> anyhow::Result<()> {
+        let down = from_master
+            .recv()
+            .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
+        anyhow::ensure!(down.round == round, "round skew: worker {round} got {}", down.round);
+        let payload = codec::decode(&down.bytes)?;
+        node.apply_downlink(round, &payload);
+        Ok(())
+    }
+    let depth = spec.pipeline_depth.max(1);
     let mut grad = vec![0.0 as F; problem.dim()];
     let mut driver = WorkerRoundDriver::new(&spec, n);
     for k in 0..spec.iters {
+        // the round-k uplink is computed against the model with downlinks
+        // through k − depth applied — the pipelined staleness contract
+        if k >= depth {
+            recv_apply(&from_master, node.as_mut(), k - depth)?;
+        }
         if let Some((bytes, residual_norm)) =
             driver.round(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad)
         {
@@ -401,12 +658,11 @@ fn threaded_worker_loop(
                 .send(UplinkMsg { worker: id, round: k, bytes, residual_norm })
                 .map_err(|_| anyhow::anyhow!("master hung up"))?;
         }
-        let down = from_master
-            .recv()
-            .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
-        anyhow::ensure!(down.round == k, "round skew: worker {k} got {}", down.round);
-        let payload = codec::decode(&down.bytes)?;
-        node.apply_downlink(k, &payload);
+    }
+    // drain the tail so every downlink is applied and the fleet's final
+    // model copies agree with the master's
+    for t in spec.iters.saturating_sub(depth)..spec.iters {
+        recv_apply(&from_master, node.as_mut(), t)?;
     }
     Ok(())
 }
@@ -430,12 +686,17 @@ impl Transport for Threaded {
         })?;
         self.n = workers.len();
         self.byte_cache = (0..self.n).map(|_| None).collect();
+        self.parked.clear();
+        self.mask_memo.clear();
+        self.window.reset();
         let n = self.n;
+        let depth = spec.pipeline_depth.max(1);
         let (up_tx, up_rx) = std::sync::mpsc::channel::<UplinkMsg>();
         for (id, node) in workers.into_iter().enumerate() {
-            // depth-1 sync channel: one in-flight round per link, which is
-            // all the barrier-synchronous algorithms ever need.
-            let (dtx, drx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(1);
+            // downlink channel sized to the pipeline depth: at most `depth`
+            // broadcasts are in flight per link before the worker consumes
+            // the oldest, so the master never blocks on a healthy fleet.
+            let (dtx, drx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(depth);
             self.down_txs.push(dtx);
             let tx = up_tx.clone();
             let p = problem.clone();
@@ -446,21 +707,28 @@ impl Transport for Threaded {
                     .spawn(move || threaded_worker_loop(id, n, node, p, s, tx, drx))?,
             );
         }
-        // keep no sender on the engine side: gather must observe
+        // keep no sender on the engine side: poll must observe
         // disconnection if the whole fleet dies.
         drop(up_tx);
         self.up_rx = Some(up_rx);
         Ok(())
     }
 
-    fn send_uplink(&mut self, _frame: UplinkFrame) -> anyhow::Result<()> {
-        anyhow::bail!(
-            "threaded transport: uplinks originate on worker threads; \
-             engine-side injection is not supported"
-        )
+    fn begin_round(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+        inject: Vec<UplinkFrame>,
+    ) -> anyhow::Result<()> {
+        self.window.begin(round, self.n, ctx.mask, ctx.spec.stale, inject)
     }
 
-    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
+    fn poll_uplinks(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
+        self.window.ensure_open(round)?;
         let rx = self
             .up_rx
             .as_ref()
@@ -472,55 +740,77 @@ impl Transport for Threaded {
             mask.len(),
             self.n
         );
-        let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
+        let n = self.n;
         let expected = mask.iter().filter(|&&m| m).count();
-        let mut slots: Vec<Option<UplinkMsg>> = (0..self.n).map(|_| None).collect();
-        let mut got = 0;
-        // barrier over the selected subset only: absentees send nothing
-        while got < expected {
+        // barrier over the selected subset only: absentees send nothing.
+        // Frames of later in-flight rounds may arrive first — park them.
+        while self.parked.get(&round).map_or(0, |p| p.got) < expected {
             let msg = rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("all workers hung up"))?;
-            anyhow::ensure!(msg.round == round, "round skew: master {round} got {}", msg.round);
-            anyhow::ensure!(msg.worker < self.n, "bogus worker id {}", msg.worker);
-            anyhow::ensure!(mask[msg.worker], "uplink from unselected worker {}", msg.worker);
-            anyhow::ensure!(slots[msg.worker].is_none(), "duplicate uplink");
+            anyhow::ensure!(
+                msg.round >= round && msg.round < self.window.next_begin(),
+                "round skew: master polling {round} (open through {}) got {}",
+                self.window.next_begin() - 1,
+                msg.round
+            );
+            anyhow::ensure!(msg.worker < n, "bogus worker id {}", msg.worker);
+            let selected = if msg.round == round {
+                mask[msg.worker] // the engine-computed mask is in ctx
+            } else {
+                let memo = self
+                    .mask_memo
+                    .entry(msg.round)
+                    .or_insert_with(|| ctx.spec.round_mask(msg.round, n));
+                memo[msg.worker]
+            };
+            anyhow::ensure!(
+                selected,
+                "uplink from unselected worker {} at round {}",
+                msg.worker,
+                msg.round
+            );
+            let parked = self.parked.entry(msg.round).or_insert_with(|| ParkedRound {
+                got: 0,
+                slots: (0..n).map(|_| None).collect(),
+            });
+            anyhow::ensure!(parked.slots[msg.worker].is_none(), "duplicate uplink");
             let w = msg.worker;
-            slots[w] = Some(msg);
-            got += 1;
+            parked.slots[w] = Some(msg);
+            parked.got += 1;
         }
-        Ok(slots
-            .into_iter()
-            .enumerate()
-            .map(|(i, s)| match s {
-                Some(m) => {
-                    if reuse {
-                        self.byte_cache[i] = Some(m.bytes.clone());
+        let slots = self
+            .parked
+            .remove(&round)
+            .map_or_else(|| (0..n).map(|_| None).collect(), |p| p.slots);
+        self.mask_memo.remove(&round);
+        let mut injected = self.window.take_injected(round, n);
+        let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
+        Ok(Some(
+            slots
+                .into_iter()
+                .enumerate()
+                .map(|(i, s)| match s {
+                    Some(m) => {
+                        if reuse {
+                            self.byte_cache[i] = Some(m.bytes.clone());
+                        }
+                        UplinkFrame {
+                            worker: m.worker,
+                            round: m.round,
+                            payload: Some(WirePayload::Encoded(m.bytes)),
+                            residual_norm: m.residual_norm,
+                            compute_seconds: 0.0,
+                        }
                     }
-                    UplinkFrame {
-                        worker: m.worker,
-                        round: m.round,
-                        payload: Some(WirePayload::Encoded(m.bytes)),
-                        residual_norm: m.residual_norm,
-                        compute_seconds: 0.0,
-                    }
-                }
-                None => UplinkFrame {
-                    worker: i,
-                    round,
-                    // replay the cached frame on the absentee's behalf
-                    payload: self.byte_cache[i]
-                        .as_ref()
-                        .filter(|_| reuse)
-                        .map(|b| WirePayload::Encoded(b.clone())),
-                    residual_norm: 0.0,
-                    compute_seconds: 0.0,
-                },
-            })
-            .collect())
+                    // absentee: injected stand-in, replay cache, or empty
+                    None => absent_slot_frame(&mut injected, &self.byte_cache, reuse, round, i),
+                })
+                .collect(),
+        ))
     }
 
-    fn broadcast(
+    fn push_downlink(
         &mut self,
         round: usize,
         down: &Compressed,
@@ -549,30 +839,44 @@ impl Transport for Threaded {
 // SimNet: inline execution + the Fig. 2 network timing model.
 // ---------------------------------------------------------------------------
 
+/// Per-round accounting [`SimNet`] carries between the poll and push
+/// phases of one in-flight round.
+struct SimRound {
+    round: usize,
+    /// Readiness of the slowest awaited uplink (compute × straggler factor
+    /// + seeded jitter), before the master's per-node apply share is added.
+    ready_s: f64,
+    /// Fresh uplink bits the master's ingress drained for this round.
+    uplink_bits: u64,
+}
+
 /// Inline transport composed with the [`NetSim`] star-topology timing model:
-/// real training, simulated wall-clock. Each round advances the clock by
-/// `ready + gather + broadcast`, where the transfer terms are exact
-/// deterministic functions of the **measured** payload bits of that round —
+/// real training, simulated wall-clock. The transfer terms are exact
+/// deterministic functions of the **measured** payload bits of each round —
 /// Fig. 2's latency model riding along with an actual run instead of a side
-/// formula — and `ready` is the readiness time of the slowest uplink the
-/// barrier actually waited for: measured per-worker compute, scaled by the
+/// formula — and the readiness term is the slowest uplink the barrier
+/// actually waited for: measured per-worker compute, scaled by the
 /// [`StragglerSpec`] multiplier for the slow slice of the fleet, plus that
 /// worker's seeded per-round latency jitter. Under k-of-n partial
 /// participation the barrier waits only for the selected subset, so the
-/// clock reflects the k-th (not n-th) slowest uplink — the straggler
-/// mitigation partial gathers buy. The clock is exposed via
-/// [`Transport::simulated_seconds`] and lands in
-/// [`crate::metrics::RunMetrics::simulated_seconds`].
+/// clock reflects the k-th (not n-th) slowest uplink.
+///
+/// At `pipeline_depth = 1` each round advances the clock by
+/// `ready + gather + broadcast`, exactly the synchronous model. At depth
+/// `D ≥ 2` the clock runs [`NetSim::pipelined_round`]: round `t`'s uplink
+/// leg starts once downlink `t − D` landed, so it overlaps the master
+/// pass/broadcast of rounds `t − D + 1 .. t` and per-round latency hides
+/// behind the in-flight window — the latency-hiding win pipelining buys on
+/// a thin link. The clock is exposed via [`Transport::simulated_seconds`]
+/// and lands in [`crate::metrics::RunMetrics::simulated_seconds`].
 pub struct SimNet {
     inner: InProc,
     link: LinkSpec,
     straggler: StragglerSpec,
     net: Option<NetSim>,
-    /// Readiness of the slowest awaited uplink of the round in flight,
-    /// plus the master's per-node downlink-apply share.
-    round_ready_s: f64,
-    /// Total fresh uplink bits the master's ingress drained this round.
-    round_uplink_bits: u64,
+    depth: usize,
+    /// Polled-but-unpushed rounds, in round order (≤ depth entries).
+    pending: VecDeque<SimRound>,
 }
 
 impl SimNet {
@@ -582,8 +886,8 @@ impl SimNet {
             link,
             straggler: StragglerSpec::none(),
             net: None,
-            round_ready_s: 0.0,
-            round_uplink_bits: 0,
+            depth: 1,
+            pending: VecDeque::new(),
         }
     }
 
@@ -617,52 +921,75 @@ impl Transport for SimNet {
         self.straggler.validate()?;
         let n = workers.len();
         self.net = Some(NetSim::new(self.link, n));
+        self.depth = spec.pipeline_depth.max(1);
+        self.pending.clear();
         self.inner.start(workers, shared_problem, spec)
     }
 
-    fn send_uplink(&mut self, frame: UplinkFrame) -> anyhow::Result<()> {
-        self.inner.send_uplink(frame)
+    fn begin_round(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+        inject: Vec<UplinkFrame>,
+    ) -> anyhow::Result<()> {
+        self.inner.begin_round(round, ctx, inject)
     }
 
-    fn gather(&mut self, round: usize, ctx: RoundCtx<'_>) -> anyhow::Result<Vec<UplinkFrame>> {
-        let n = self.inner.workers.len();
+    fn poll_uplinks(
+        &mut self,
+        round: usize,
+        ctx: RoundCtx<'_>,
+    ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
+        let n = self.inner.n();
         let mask = ctx.mask;
-        let frames = self.inner.gather(round, ctx)?;
+        let Some(frames) = self.inner.poll_uplinks(round, ctx)? else {
+            return Ok(None);
+        };
         // the barrier waits for the slowest *selected* worker, not the
         // fleet-wide straggler — the inline loop runs workers
         // sequentially, so fold the per-worker readiness times (measured
         // compute × straggler factor + seeded jitter) rather than using
         // the loop's wall time. Only selected workers' payloads cross the
         // master's ingress; replayed stale frames move nothing.
-        self.round_uplink_bits = 0;
-        self.round_ready_s = 0.0;
+        let mut uplink_bits = 0u64;
+        let mut ready_s = 0.0f64;
         for (i, f) in frames.iter().enumerate() {
             if !mask[i] {
                 continue;
             }
             if let Some(p) = &f.payload {
-                self.round_uplink_bits += p.wire_bits();
+                uplink_bits += p.wire_bits();
             }
             let ready =
                 self.straggler.ready_time(ctx.spec.seed, i, n, round, f.compute_seconds);
-            self.round_ready_s = self.round_ready_s.max(ready);
+            ready_s = ready_s.max(ready);
         }
-        Ok(frames)
+        self.pending.push_back(SimRound { round, ready_s, uplink_bits });
+        Ok(Some(frames))
     }
 
-    fn broadcast(
+    fn push_downlink(
         &mut self,
         round: usize,
         down: &Compressed,
         ctx: RoundCtx<'_>,
     ) -> anyhow::Result<u64> {
         let t0 = std::time::Instant::now();
-        let bits = self.inner.broadcast(round, down, ctx)?;
-        let net = self.net.as_mut().expect("started before broadcast");
+        let bits = self.inner.push_downlink(round, down, ctx)?;
+        let net = self.net.as_mut().expect("started before push_downlink");
+        let sim = self
+            .pending
+            .pop_front()
+            .ok_or_else(|| anyhow::anyhow!("push_downlink({round}) before poll_uplinks"))?;
+        anyhow::ensure!(sim.round == round, "downlink/poll round skew");
         // per-node downlink-apply cost: the inline loop applies all n
         // sequentially, a real node pays 1/n of that.
         let apply_s = t0.elapsed().as_secs_f64() / net.n_workers.max(1) as f64;
-        net.gather_round(self.round_ready_s + apply_s, self.round_uplink_bits, bits);
+        if self.depth <= 1 {
+            net.gather_round(sim.ready_s + apply_s, sim.uplink_bits, bits);
+        } else {
+            net.pipelined_round(self.depth, sim.ready_s + apply_s, sim.uplink_bits, bits);
+        }
         Ok(bits)
     }
 
@@ -683,7 +1010,7 @@ mod tests {
     use crate::engine::registry;
 
     #[test]
-    fn inproc_injected_uplink_replaces_worker_step() {
+    fn inproc_injected_uplink_fills_unselected_slot() {
         let p = linreg_problem(40, 8, 2, 0.1, 3);
         let spec = TrainSpec { algo: AlgorithmKind::Sgd, iters: 1, ..Default::default() };
         let x0 = p.init();
@@ -691,32 +1018,51 @@ mod tests {
             registry::build_algorithm(AlgorithmKind::Sgd, 2, &x0, &spec.hp).unwrap();
         let mut t = InProc::new();
         t.start(workers, None, &spec).unwrap();
-        t.send_uplink(UplinkFrame {
-            worker: 1,
-            round: 0,
+        // drive the transport directly with a custom mask: worker 0 is
+        // selected, worker 1's slot is filled by the injected frame
+        let mask = [true, false];
+        let frame = |worker: usize, round: usize| UplinkFrame {
+            worker,
+            round,
             payload: Some(WirePayload::Inline(Compressed::Dense(vec![0.0; 8]))),
             residual_norm: 9.0,
             compute_seconds: 0.0,
-        })
-        .unwrap();
-        let mask = spec.round_mask(0, 2);
-        let frames =
-            t.gather(0, RoundCtx { problem: &p, spec: &spec, mask: &mask }).unwrap();
+        };
+        t.begin_round(0, RoundCtx { problem: &p, spec: &spec, mask: &mask }, vec![frame(1, 0)])
+            .unwrap();
+        let frames = t
+            .poll_uplinks(0, RoundCtx { problem: &p, spec: &spec, mask: &mask })
+            .unwrap()
+            .unwrap();
         assert_eq!(frames.len(), 2);
         // worker 0 computed its own uplink; worker 1's was the injected one
         assert_ne!(frames[0].residual_norm, 9.0);
         assert_eq!(frames[1].residual_norm, 9.0);
         // dense payload: 40-bit header + 8 × 32-bit coords
         assert_eq!(frames[1].payload.as_ref().unwrap().wire_bits(), 40 + 8 * 32);
-        // injecting for a worker that doesn't exist is rejected up front
-        let bad = UplinkFrame {
-            worker: 7,
-            round: 0,
-            payload: Some(WirePayload::Encoded(vec![])),
-            residual_norm: 0.0,
-            compute_seconds: 0.0,
-        };
-        assert!(t.send_uplink(bad).is_err());
+        // injecting for a selected worker is rejected: selected workers
+        // compute their own uplink on every transport
+        let err = t
+            .begin_round(1, RoundCtx { problem: &p, spec: &spec, mask: &mask }, vec![frame(0, 1)])
+            .unwrap_err();
+        assert!(err.to_string().contains("selected"), "{err}");
+        // as is injecting for a worker that doesn't exist
+        let err = t
+            .begin_round(1, RoundCtx { problem: &p, spec: &spec, mask: &mask }, vec![frame(7, 1)])
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown worker"), "{err}");
+        // and injecting under reuse-last — the self-paced workers of the
+        // byte-moving transports couldn't see it, so it is rejected
+        // everywhere to keep the cross-transport contract honest
+        let reuse_spec = TrainSpec { stale: StalePolicy::ReuseLast, ..spec.clone() };
+        let err = t
+            .begin_round(
+                1,
+                RoundCtx { problem: &p, spec: &reuse_spec, mask: &mask },
+                vec![frame(1, 1)],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("StalePolicy::Skip"), "{err}");
     }
 
     #[test]
@@ -740,9 +1086,9 @@ mod tests {
             let mut seen_payload = [false; 4];
             for k in 0..spec.iters {
                 let mask = spec.round_mask(k, 4);
-                let frames = t
-                    .gather(k, RoundCtx { problem: &p, spec: &spec, mask: &mask })
-                    .unwrap();
+                let ctx = RoundCtx { problem: &p, spec: &spec, mask: &mask };
+                t.begin_round(k, ctx, Vec::new()).unwrap();
+                let frames = t.poll_uplinks(k, ctx).unwrap().unwrap();
                 for (i, f) in frames.iter().enumerate() {
                     if mask[i] {
                         assert!(f.payload.is_some(), "selected worker {i} has no payload");
@@ -762,6 +1108,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn inproc_pipelined_window_keeps_rounds_in_order() {
+        let p = linreg_problem(40, 8, 2, 0.1, 3);
+        let spec = TrainSpec {
+            algo: AlgorithmKind::Sgd,
+            iters: 3,
+            pipeline_depth: 3,
+            ..Default::default()
+        };
+        let x0 = p.init();
+        let (workers, _m) =
+            registry::build_algorithm(AlgorithmKind::Sgd, 2, &x0, &spec.hp).unwrap();
+        let mut t = InProc::new();
+        t.start(workers, None, &spec).unwrap();
+        let mask = [true, true];
+        let ctx = RoundCtx { problem: &p, spec: &spec, mask: &mask };
+        // open three rounds before polling any — the depth-3 window
+        t.begin_round(0, ctx, Vec::new()).unwrap();
+        t.begin_round(1, ctx, Vec::new()).unwrap();
+        t.begin_round(2, ctx, Vec::new()).unwrap();
+        // out-of-order poll is a protocol error, not a silent reorder
+        assert!(t.poll_uplinks(1, ctx).is_err());
+        for k in 0..3 {
+            let frames = t.poll_uplinks(k, ctx).unwrap().unwrap();
+            assert!(frames.iter().all(|f| f.round == k));
+        }
+        // so is re-opening a round out of order
+        assert!(t.begin_round(2, ctx, Vec::new()).is_err());
     }
 
     #[test]

@@ -1,16 +1,13 @@
-//! Legacy experiment-harness entry points, now thin shims over the round
-//! engine ([`crate::engine`]), plus the Fig. 2 round-characterization
-//! helpers that don't need a full training loop.
+//! Experiment-harness conveniences over the round engine
+//! ([`crate::engine`]): the multi-algorithm [`compare`] sweep plus the
+//! Fig. 2 round-characterization helpers that don't need a full training
+//! loop.
 //!
 //! The round loop that used to live here — RNG sites, bit accounting, eval
-//! cadence — is [`crate::engine::Session::run`]; `run_inproc` survives as a
-//! deprecated delegating wrapper so old callers keep compiling while they
-//! migrate to the builder:
-//!
-//! ```text
-//! run_inproc(&problem, &spec)
-//!   ⇢ Session::new(&problem).spec(spec).run()
-//! ```
+//! cadence — is [`crate::engine::Session::run`]; the `run_inproc` shim
+//! that once wrapped it was removed after every caller migrated to
+//! `Session::new(&problem).spec(spec).run()` (see the README migration
+//! table).
 
 use crate::algorithms::{build, AlgorithmKind, HyperParams};
 use crate::comm::{LinkSpec, NetSim};
@@ -21,16 +18,6 @@ use crate::F;
 
 pub use crate::engine::TrainSpec;
 use crate::models::Problem;
-
-/// Run one algorithm on one problem, in-process (no transport), collecting
-/// the full metric series. Deterministic given `spec.seed`.
-#[deprecated(note = "use engine::Session::new(problem).spec(spec).run()")]
-pub fn run_inproc(problem: &dyn Problem, spec: &TrainSpec) -> RunMetrics {
-    Session::new(problem)
-        .spec(spec.clone())
-        .run()
-        .expect("in-process session cannot fail on a well-formed spec")
-}
 
 /// Run every algorithm in `kinds` with the same spec template; returns
 /// `(kind, metrics)` pairs. Used by the comparison figures.
@@ -115,18 +102,23 @@ mod tests {
     use super::*;
     use crate::data::synth::linreg_problem;
 
-    /// The deprecated shim must stay bit-identical to the engine it wraps.
+    /// [`compare`] must stay bit-identical to running the engine directly
+    /// with the same per-algorithm spec.
     #[test]
-    #[allow(deprecated)]
-    fn run_inproc_shim_matches_session() {
+    fn compare_matches_direct_sessions() {
         let p = linreg_problem(60, 10, 3, 0.1, 5);
-        let spec = TrainSpec { iters: 50, eval_every: 10, ..Default::default() };
-        let a = run_inproc(&p, &spec);
-        let b = Session::new(&p).spec(spec).run().unwrap();
-        assert_eq!(a.loss, b.loss);
-        assert_eq!(a.dist_to_opt, b.dist_to_opt);
-        assert_eq!(a.uplink_bits, b.uplink_bits);
-        assert_eq!(a.downlink_bits, b.downlink_bits);
+        let template = TrainSpec { iters: 50, eval_every: 10, ..Default::default() };
+        let kinds = [AlgorithmKind::Dore, AlgorithmKind::Sgd];
+        for (kind, a) in compare(&p, &kinds, &template) {
+            let b = Session::new(&p)
+                .spec(TrainSpec { algo: kind, ..template.clone() })
+                .run()
+                .unwrap();
+            assert_eq!(a.loss, b.loss, "{}", kind.name());
+            assert_eq!(a.dist_to_opt, b.dist_to_opt);
+            assert_eq!(a.uplink_bits, b.uplink_bits);
+            assert_eq!(a.downlink_bits, b.downlink_bits);
+        }
     }
 
     #[test]

@@ -61,12 +61,16 @@
 //! assert_eq!(inproc.loss, threaded.loss);
 //! ```
 //!
+//! Rounds can also be **pipelined**: `TrainSpec::pipeline_depth = D` keeps
+//! up to `D` rounds in flight per link (depth 1 — the default — is the
+//! classic synchronous schedule, bit-identical to the pre-pipeline engine;
+//! depth ≥ 2 trades a bounded-stale gradient for hidden wire latency).
+//!
 //! The pre-engine entry points (`harness::run_inproc`,
-//! `coordinator::run_distributed`) remain as deprecated shims delegating to
-//! the session. Calling them from anywhere inside this crate is a hard
-//! error (`deny(deprecated)` below): the only sanctioned internal callers
-//! are the shims' own equivalence tests, which opt back in with a local
-//! `#[allow(deprecated)]` — so migration drift cannot silently reappear.
+//! `coordinator::run_distributed(_blocking)`,
+//! `coordinator::tcp::run_distributed_tcp`) have been removed after their
+//! deprecation cycle; `deny(deprecated)` below keeps any future shim from
+//! lingering unmigrated.
 
 #![deny(deprecated)]
 

@@ -136,6 +136,12 @@ fn print_run_summary(m: &dore::metrics::RunMetrics, workers: usize) {
         let per_round = sim / m.total_rounds.max(1) as f64;
         println!("simulated network time: {sim:.3}s ({per_round:.4} s/round)");
     }
+    if m.max_in_flight > 1 {
+        println!(
+            "pipeline: up to {} rounds in flight, {} stale-gradient rounds",
+            m.max_in_flight, m.stale_uplink_rounds
+        );
+    }
     if let Some(rho) = m.empirical_rate(1e-9) {
         println!("empirical per-round contraction rho = {rho:.5}");
     }
@@ -147,6 +153,7 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
               --schedule SPEC --workers N --minibatch N --eval-every N
               --seed N --participation full|k:<K>|dropout:<p> --stale skip|reuse
               --reduce-threads N (master-side sharded reduction; 0 = all cores)
+              --pipeline-depth D (in-flight rounds per link; 1 = synchronous)
               --transport inproc|threads|tcp|simnet
               [--bandwidth BPS --straggler MULT[:FRAC[:JITTER_S]]]
               --distributed --csv FILE]
@@ -210,6 +217,11 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     // master-side sharded reduction: thread count only — results are
     // bit-identical for every value (0 = all available cores)
     spec.reduce_threads = f.num("reduce-threads", 1)?;
+    // pipelined rounds: depth 1 (default) is the classic synchronous
+    // schedule; D ≥ 2 overlaps round t+1's uplink with round t's master
+    // pass at the price of a (D−1)-round-stale gradient — deterministic
+    // and transport-independent either way
+    spec.pipeline_depth = f.num("pipeline-depth", 1)?;
     let n = prob.n_workers();
     // --transport inproc (default) | threads | tcp | simnet — all produce
     // bit-identical iterates; they differ only in what carries the bytes

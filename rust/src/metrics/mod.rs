@@ -30,6 +30,13 @@ pub struct RunMetrics {
     /// Fresh uplink frames gathered across the run (= Σ per-round
     /// participants; `iters · n_workers` under full participation).
     pub participant_uplinks: u64,
+    /// Most rounds simultaneously in flight at any completion point
+    /// (1 = classic synchronous rounds; reaches
+    /// [`crate::engine::TrainSpec::pipeline_depth`] once the window fills).
+    pub max_in_flight: usize,
+    /// Rounds whose uplinks were computed against a stale model (missing
+    /// ≥ 1 downlink relative to a synchronous run) — 0 at depth 1.
+    pub stale_uplink_rounds: u64,
     /// Cumulative downlink bits (broadcast counted once per worker).
     pub downlink_bits: u64,
     /// Rounds actually executed.

@@ -1,7 +1,8 @@
 //! Golden-series regression suite: fixed-seed loss/bit trajectories for
-//! all seven algorithms (plus DORE under k-of-n partial participation),
-//! pinned bit-for-bit against `rust/tests/golden/series.txt` and asserted
-//! identical across the InProc / Threaded / SimNet transports.
+//! all seven algorithms (plus DORE under k-of-n partial participation and
+//! DORE with a depth-2 round pipeline), pinned bit-for-bit against
+//! `rust/tests/golden/series.txt` and asserted identical across the
+//! InProc / Threaded / SimNet transports.
 //!
 //! The golden file is the regression anchor: any change to an RNG site,
 //! compressor, algorithm state machine, or the engine loop that perturbs a
@@ -66,6 +67,15 @@ fn scenarios() -> Vec<Scenario> {
             n: 4,
         });
     }
+    // the ISSUE 4 pipelined scenario: DORE with two rounds in flight
+    // (round-t gradients at the round-(t−1) model). A *different* pinned
+    // trajectory than depth 1 — staleness is a real semantic — but equally
+    // deterministic and transport-invariant.
+    v.push(Scenario {
+        key: "DORE@depth2",
+        spec: TrainSpec { algo: AlgorithmKind::Dore, pipeline_depth: 2, ..base.clone() },
+        n: 3,
+    });
     v
 }
 

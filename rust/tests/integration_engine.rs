@@ -7,10 +7,9 @@
 //! is exact. Plus: observer event-stream contracts, registry extension, and
 //! sharded-reduction invariance.
 //!
-//! This suite is deliberately shim-free: the deprecated pre-engine entry
-//! points are exercised only by the equivalence tests inside their own
-//! modules (`harness`, `coordinator`, `coordinator::tcp`), and the deny
-//! below keeps them from creeping back in here.
+//! The pre-engine shims are gone (every entry point is the `Session`
+//! builder); the deny below keeps any future deprecation from creeping in
+//! unnoticed.
 
 #![deny(deprecated)]
 

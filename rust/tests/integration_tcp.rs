@@ -78,3 +78,33 @@ fn tcp_partial_participation_matches_inproc() {
         assert_eq!(tcp.participant_uplinks, 12, "{stale:?}: k=1 over 12 rounds");
     }
 }
+
+/// Pipelined rounds over real sockets: with depth 2–3 each worker has up
+/// to that many uplinks on the wire while the master reduces older rounds,
+/// and the series still replays the in-process pipeline exactly — the
+/// CI depth-2 smoke lane.
+#[test]
+fn tcp_pipelined_rounds_match_inproc() {
+    if !enabled("tcp_pipelined_rounds_match_inproc") {
+        return;
+    }
+    let p = Arc::new(linreg_problem(40, 8, 2, 0.1, 7));
+    for depth in [2usize, 3] {
+        let spec = TrainSpec {
+            algo: AlgorithmKind::Dore,
+            iters: 12,
+            eval_every: 4,
+            pipeline_depth: depth,
+            ..Default::default()
+        };
+        let inproc = Session::shared(p.clone()).spec(spec.clone()).run().unwrap();
+        let tcp = Session::shared(p.clone())
+            .spec(spec)
+            .transport(TcpTransport::new())
+            .run()
+            .unwrap();
+        assert_eq!(inproc.loss, tcp.loss, "depth {depth}: tcp diverged from inproc");
+        assert_eq!(inproc.max_in_flight, depth, "depth {depth}: window never filled");
+        assert_eq!(tcp.max_in_flight, depth);
+    }
+}
