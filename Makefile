@@ -19,7 +19,8 @@ test-rust:
 	  --test integration_convergence --test integration_engine \
 	  --test integration_server --test integration_tcp \
 	  --test proptest_compression --test proptest_participation \
-	  --test proptest_pipeline --test proptest_reduce --test golden_series
+	  --test proptest_pipeline --test proptest_reduce --test proptest_fault \
+	  --test golden_series
 
 # Regenerate the golden trajectory baseline (rust/tests/golden/series.txt)
 # after an *intentional* numerical change, then commit the diff. A missing

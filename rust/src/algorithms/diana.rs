@@ -62,6 +62,21 @@ impl WorkerNode for DianaWorker {
         digest_f32(&self.h)
     }
 
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        vec![("h".into(), self.h.clone())]
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "h" => super::restore_vec("h", &mut self.h, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for a DIANA worker"),
+            }
+        }
+        Ok(())
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -136,6 +151,26 @@ impl MasterNode for DianaMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        let mut aux = vec![("h".into(), self.h.clone())];
+        if !self.vel.is_empty() {
+            aux.push(("vel".into(), self.vel.clone()));
+        }
+        aux
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "h" => super::restore_vec("h", &mut self.h, v)?,
+                "vel" => super::restore_vec("vel", &mut self.vel, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for the DIANA master"),
+            }
+        }
+        Ok(())
     }
 
     fn set_reduce_pool(&mut self, pool: ReducePool) {

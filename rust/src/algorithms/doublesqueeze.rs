@@ -66,6 +66,21 @@ impl WorkerNode for DsWorker {
         digest_f32(&self.e)
     }
 
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        vec![("e".into(), self.e.clone())]
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "e" => super::restore_vec("e", &mut self.e, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for a DoubleSqueeze worker"),
+            }
+        }
+        Ok(())
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -160,6 +175,21 @@ impl MasterNode for DsMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        vec![("E".into(), self.err.clone())]
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "E" => super::restore_vec("E", &mut self.err, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for the DoubleSqueeze master"),
+            }
+        }
+        Ok(())
     }
 
     fn set_reduce_pool(&mut self, pool: ReducePool) {

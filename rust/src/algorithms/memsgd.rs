@@ -64,6 +64,21 @@ impl WorkerNode for MemSgdWorker {
         digest_f32(&self.e)
     }
 
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        vec![("e".into(), self.e.clone())]
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "e" => super::restore_vec("e", &mut self.e, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for a MEM-SGD worker"),
+            }
+        }
+        Ok(())
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -105,6 +120,14 @@ impl MasterNode for MemSgdMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        if let Some((name, _)) = aux.first() {
+            anyhow::bail!("unknown aux vector '{name}' for the MEM-SGD master (it keeps none)");
+        }
+        Ok(())
     }
 
     fn set_reduce_pool(&mut self, pool: ReducePool) {

@@ -150,6 +150,28 @@ pub trait WorkerNode: Send {
     /// no correction — the default is a no-op.
     fn on_reused(&mut self, _round: usize, _payload: &Compressed) {}
 
+    /// Recovery snapshot of the worker's algorithm-specific aux state
+    /// (DORE/DIANA `h_i`, MEM-SGD/DoubleSqueeze `e_i`). The local model
+    /// is **not** included: every built-in scheme keeps `x_i` bit-equal
+    /// to the master's iterate after each applied downlink, so the
+    /// checkpoint stores the model once. Stateless workers return
+    /// nothing.
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        Vec::new()
+    }
+
+    /// Restore this worker from a recovery snapshot: `model` replaces the
+    /// local iterate, `aux` carries vectors a matching
+    /// [`WorkerNode::export_state`] produced. A *missing* aux entry keeps
+    /// the freshly-initialized value — that is exactly what a rejoining
+    /// worker gets (empty aux: zeroed residual state, replayed model);
+    /// an *unrecognized* name is an error so a mislabeled checkpoint
+    /// fails loudly instead of restoring garbage. The default refuses:
+    /// external algorithms opt in explicitly.
+    fn import_state(&mut self, _model: &[F], _aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        anyhow::bail!("this worker does not support state restore (checkpoint resume / rejoin)")
+    }
+
     /// Order-sensitive digest of the worker's residual / error-feedback
     /// state (DORE/DIANA `h_i`, MEM-SGD/DoubleSqueeze `e_i`). The
     /// participation invariance tests assert it is unchanged across a
@@ -185,6 +207,20 @@ pub trait MasterNode: Send {
 
     /// The iterate to evaluate/report (`x̂ᵏ` for DORE, `xᵏ` otherwise).
     fn model(&self) -> &[F];
+
+    /// Recovery snapshot of the master's aux state (DORE `h`, `e`;
+    /// DoubleSqueeze `E`; heavy-ball velocity when momentum is on). The
+    /// iterate itself is carried separately by the checkpoint.
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        Vec::new()
+    }
+
+    /// Restore the master from a recovery snapshot (see
+    /// [`WorkerNode::import_state`] for the missing-vs-unknown aux
+    /// contract). The default refuses so external masters opt in.
+    fn import_state(&mut self, _model: &[F], _aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        anyhow::bail!("this master does not support state restore (checkpoint resume)")
+    }
 
     /// Install the dimension-sharded pool that drives this master's
     /// decode→average→compress sweeps ([`crate::engine::reduce`]). Called
@@ -309,6 +345,25 @@ pub(crate) fn average_present(uplinks: &[Option<Compressed>], out: &mut [F], poo
     }
     let inv = 1.0 / present as F;
     pool.accumulate(uplinks, inv, out);
+}
+
+/// Copy a checkpointed vector over live state, rejecting dimension
+/// mismatches with the vector's name in the message — shared by the
+/// `import_state` impls. A lazily-allocated destination (the heavy-ball
+/// velocity before its first use) is sized from the source.
+pub(crate) fn restore_vec(name: &str, dst: &mut Vec<F>, src: &[F]) -> anyhow::Result<()> {
+    if dst.is_empty() && !src.is_empty() {
+        *dst = src.to_vec();
+        return Ok(());
+    }
+    anyhow::ensure!(
+        dst.len() == src.len(),
+        "checkpoint vector '{name}' has dimension {} but this run needs {}",
+        src.len(),
+        dst.len()
+    );
+    dst.copy_from_slice(src);
+    Ok(())
 }
 
 /// FNV-1a over the f32 bit patterns — the cheap order-sensitive digest

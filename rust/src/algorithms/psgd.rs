@@ -32,6 +32,14 @@ impl WorkerNode for PsgdWorker {
         down.add_scaled_into(1.0, &mut self.x);
     }
 
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        if let Some((name, _)) = aux.first() {
+            anyhow::bail!("unknown aux vector '{name}' for an SGD worker (it keeps none)");
+        }
+        Ok(())
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -86,6 +94,25 @@ impl MasterNode for PsgdMaster {
         &self.x
     }
 
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        if self.vel.is_empty() {
+            Vec::new()
+        } else {
+            vec![("vel".into(), self.vel.clone())]
+        }
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "vel" => super::restore_vec("vel", &mut self.vel, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for the SGD master"),
+            }
+        }
+        Ok(())
+    }
+
     fn set_reduce_pool(&mut self, pool: ReducePool) {
         self.pool = pool;
     }
@@ -132,7 +159,8 @@ mod tests {
         m.round(0, &[None, Some(Compressed::Dense(vec![4.0]))], &mut rng);
         assert_eq!(m.model(), &[-4.0]);
         // an empty round is a no-op step, not a NaN
-        let mut m2 = PsgdMaster::new(&x0, 2, HyperParams { lr: 1.0, ..HyperParams::paper_defaults() });
+        let mut m2 =
+            PsgdMaster::new(&x0, 2, HyperParams { lr: 1.0, ..HyperParams::paper_defaults() });
         m2.round(0, &[None, None], &mut rng);
         assert_eq!(m2.model(), &[0.0]);
     }

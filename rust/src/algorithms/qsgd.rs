@@ -36,6 +36,14 @@ impl WorkerNode for QsgdWorker {
         down.add_scaled_into(1.0, &mut self.x);
     }
 
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        if let Some((name, _)) = aux.first() {
+            anyhow::bail!("unknown aux vector '{name}' for a QSGD worker (it keeps none)");
+        }
+        Ok(())
+    }
+
     fn model(&self) -> &[F] {
         &self.x
     }
@@ -87,6 +95,25 @@ impl MasterNode for QsgdMaster {
 
     fn model(&self) -> &[F] {
         &self.x
+    }
+
+    fn export_state(&self) -> Vec<(String, Vec<F>)> {
+        if self.vel.is_empty() {
+            Vec::new()
+        } else {
+            vec![("vel".into(), self.vel.clone())]
+        }
+    }
+
+    fn import_state(&mut self, model: &[F], aux: &[(String, Vec<F>)]) -> anyhow::Result<()> {
+        super::restore_vec("x", &mut self.x, model)?;
+        for (name, v) in aux {
+            match name.as_str() {
+                "vel" => super::restore_vec("vel", &mut self.vel, v)?,
+                other => anyhow::bail!("unknown aux vector '{other}' for the QSGD master"),
+            }
+        }
+        Ok(())
     }
 
     fn set_reduce_pool(&mut self, pool: ReducePool) {

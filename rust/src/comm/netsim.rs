@@ -239,6 +239,22 @@ impl NetSim {
     /// leg hides behind the in-flight window and each steady-state round
     /// costs one broadcast leg instead of `ready + gather + bcast`.
     ///
+    /// Charge the clock for `rejoined` workers re-registering after an
+    /// outage: a connection handshake plus the hello/sync exchange
+    /// (three one-way latencies) and a full model replay per rejoiner
+    /// over the master's egress (serialized, like the broadcast path).
+    /// The round engine calls this once per round with the number of
+    /// fault-plan rejoin transitions; `rejoined = 0` is free.
+    pub fn reconnect(&mut self, rejoined: usize, model_bits: u64) -> f64 {
+        if rejoined == 0 {
+            return 0.0;
+        }
+        let dt = 3.0 * self.link.latency_s
+            + (rejoined as u64 * model_bits) as f64 / self.link.bandwidth_bps;
+        self.clock_s += dt;
+        dt
+    }
+
     /// `depth = 1` reduces exactly to [`NetSim::gather_round`] (kept as
     /// the separate synchronous entry point so depth-1 clock arithmetic is
     /// bit-identical to the pre-pipeline model).
@@ -303,6 +319,17 @@ mod tests {
         // workers uploaded 1e6 bits each; broadcast 0.5e6 to all 4.
         let dt = net.gather_round(0.25, 2_000_000, 500_000);
         assert!((dt - (0.25 + 2.0 + 2.0)).abs() < 1e-9, "dt={dt}");
+    }
+
+    #[test]
+    fn reconnect_charges_handshake_plus_model_replay() {
+        let mut net = NetSim::new(LinkSpec { bandwidth_bps: 1e6, latency_s: 0.01 }, 4);
+        assert_eq!(net.reconnect(0, 1_000_000), 0.0);
+        assert_eq!(net.clock_s, 0.0, "no rejoiners, no charge");
+        // 2 rejoiners × 1e6 bits at 1e6 bps = 2 s replay + 3 × 10 ms
+        let dt = net.reconnect(2, 1_000_000);
+        assert!((dt - 2.03).abs() < 1e-9, "dt={dt}");
+        assert!((net.clock_s - 2.03).abs() < 1e-9);
     }
 
     #[test]

@@ -1,32 +1,42 @@
 //! Checkpointing: serialize / restore a training run's full state (round
-//! counter, master iterate, RNG-reconstructible by design) so long jobs can
-//! resume after preemption — a framework feature the paper's testbed
-//! runs would need in practice.
+//! counter, master iterate, fleet size, every node's aux vectors) so long
+//! jobs can resume after preemption. Wired into the round engine through
+//! [`crate::engine::Session::checkpoint_every`] /
+//! [`crate::engine::Session::resume_from`].
 //!
-//! Format (little-endian): magic, version, algo name, round, dim, the
-//! master's model vector, plus an integrity checksum. Because every
-//! stochastic site is keyed by `(seed, node, round)`, resuming from
-//! `(round, model)` with the same seed reproduces the exact trajectory the
-//! uninterrupted run would have taken for algorithms whose state is
-//! recoverable from the model (P-SGD/QSGD); for stateful algorithms
-//! (DORE/DIANA h, e) the checkpoint stores those vectors too.
+//! Format (little-endian): magic, version, checksum, then the body —
+//! algo name, round, seed, worker count, the master's model vector, and
+//! the named aux vectors (`m.*` for the master, `w<i>.*` per worker).
+//! Because every stochastic site is keyed by `(seed, node, round)`,
+//! resuming from `(round, model, aux)` with the same seed reproduces the
+//! exact trajectory the uninterrupted run would have taken: P-SGD/QSGD
+//! recover from the model alone, the residual/error-feedback schemes
+//! (DORE/DIANA `h`, MEM-SGD/DoubleSqueeze `e`) restore their aux vectors
+//! bit-for-bit.
 
 use crate::F;
+use anyhow::Context;
 use std::io::Read;
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"DORECKPT";
-const VERSION: u32 = 1;
+/// v2 added the worker count (fleet-shape validation at resume); v1
+/// files are rejected with an explicit version message, never
+/// misinterpreted.
+const VERSION: u32 = 2;
 
 /// A snapshot of a training run.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub algo: String,
+    /// Rounds already completed; resuming starts at this round.
     pub round: u64,
     pub seed: u64,
+    /// Fleet size the aux vectors were captured from.
+    pub n_workers: u64,
     /// Master iterate x̂.
     pub model: Vec<F>,
-    /// Named auxiliary state vectors (h, e, per-worker h_i, ...).
+    /// Named auxiliary state vectors (`m.h`, `m.e`, `w3.h`, ...).
     pub aux: Vec<(String, Vec<F>)>,
 }
 
@@ -77,6 +87,7 @@ impl Checkpoint {
         put_str(&mut body, &self.algo);
         body.extend_from_slice(&self.round.to_le_bytes());
         body.extend_from_slice(&self.seed.to_le_bytes());
+        body.extend_from_slice(&self.n_workers.to_le_bytes());
         put_vec(&mut body, &self.model);
         body.extend_from_slice(&(self.aux.len() as u32).to_le_bytes());
         for (name, v) in &self.aux {
@@ -92,13 +103,23 @@ impl Checkpoint {
     }
 
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Self> {
-        anyhow::ensure!(bytes.len() > 20, "checkpoint too short");
-        anyhow::ensure!(&bytes[..8] == MAGIC, "bad checkpoint magic");
+        anyhow::ensure!(
+            bytes.len() > 20,
+            "checkpoint truncated: {} bytes is shorter than the fixed header",
+            bytes.len()
+        );
+        anyhow::ensure!(&bytes[..8] == MAGIC, "bad checkpoint magic (not a DORE checkpoint file)");
         let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
-        anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        anyhow::ensure!(
+            version == VERSION,
+            "unsupported checkpoint version {version} (this build reads version {VERSION})"
+        );
         let checksum = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
         let body = &bytes[20..];
-        anyhow::ensure!(fnv1a(body) == checksum, "checkpoint checksum mismatch (corrupt file)");
+        anyhow::ensure!(
+            fnv1a(body) == checksum,
+            "checkpoint checksum mismatch (corrupt or truncated file)"
+        );
         let mut r = body;
         let algo = get_str(&mut r)?;
         let mut u8buf = [0u8; 8];
@@ -106,6 +127,8 @@ impl Checkpoint {
         let round = u64::from_le_bytes(u8buf);
         r.read_exact(&mut u8buf)?;
         let seed = u64::from_le_bytes(u8buf);
+        r.read_exact(&mut u8buf)?;
+        let n_workers = u64::from_le_bytes(u8buf);
         let model = get_vec(&mut r)?;
         let mut n4 = [0u8; 4];
         r.read_exact(&mut n4)?;
@@ -116,7 +139,7 @@ impl Checkpoint {
             let name = get_str(&mut r)?;
             aux.push((name, get_vec(&mut r)?));
         }
-        Ok(Self { algo, round, seed, model, aux })
+        Ok(Self { algo, round, seed, n_workers, model, aux })
     }
 
     /// Atomic write: temp file + rename, so a crash never leaves a torn
@@ -130,7 +153,10 @@ impl Checkpoint {
     }
 
     pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
-        Self::from_bytes(&std::fs::read(path)?)
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing checkpoint {}", path.display()))
     }
 }
 
@@ -143,8 +169,9 @@ mod tests {
             algo: "DORE".into(),
             round: 1234,
             seed: 42,
+            n_workers: 3,
             model: vec![1.0, -2.5, 3.25, 0.0],
-            aux: vec![("h".into(), vec![0.5; 4]), ("e".into(), vec![-0.25; 4])],
+            aux: vec![("m.h".into(), vec![0.5; 4]), ("m.e".into(), vec![-0.25; 4])],
         }
     }
 
@@ -168,10 +195,23 @@ mod tests {
     fn rejects_bad_magic_and_version() {
         let mut bytes = sample().to_bytes();
         bytes[0] = b'X';
-        assert!(Checkpoint::from_bytes(&bytes).is_err());
+        let err = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
         let mut bytes2 = sample().to_bytes();
         bytes2[8] = 99;
-        assert!(Checkpoint::from_bytes(&bytes2).is_err());
+        let err = Checkpoint::from_bytes(&bytes2).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let bytes = sample().to_bytes();
+        for cut in [5, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                Checkpoint::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at {cut} accepted"
+            );
+        }
     }
 
     #[test]

@@ -8,10 +8,11 @@
 //! ```text
 //! [u32 payload_len][u8 kind][u32 round][u32 worker][f64 residual][payload]
 //! ```
-//! `kind` is 0 = uplink, 1 = downlink; `payload` is a
-//! [`crate::compression::codec`] buffer. Byte accounting counts payload
-//! bytes only (header bytes are fixed per message and reported separately),
-//! keeping the numbers comparable with the other transports.
+//! `kind` is 0 = uplink, 1 = downlink, 2 = reconnect hello, 3 = master →
+//! rejoiner sync; `payload` is a [`crate::compression::codec`] buffer.
+//! Byte accounting counts payload bytes only (header bytes are fixed per
+//! message and reported separately), keeping the numbers comparable with
+//! the other transports.
 //!
 //! Pipelining rides the sockets naturally: each worker writes its
 //! round-`k` uplink after reading the round-`k − depth` downlink, so up to
@@ -20,27 +21,63 @@
 //! next unread uplink frame on a socket is always the oldest round the
 //! master still needs — per-socket sequential reads need no reordering
 //! buffer. Downlinks are written by one dedicated writer thread per worker
-//! (fed from an unbounded channel), so the master's read loop never blocks
-//! on a full send buffer: with `depth ≥ 2` a worker can be mid-write of
-//! uplink `t + 1` while the master broadcasts round `t`, and payloads
+//! (fed from a depth-bounded channel), so the master's read loop never
+//! blocks on a full send buffer: with `depth ≥ 2` a worker can be mid-write
+//! of uplink `t + 1` while the master broadcasts round `t`, and payloads
 //! larger than the kernel socket buffers would otherwise deadlock the two
 //! blocking writes against each other.
+//!
+//! # Fault tolerance
+//!
+//! The master side reads **nonblockingly**: each socket has a reassembly
+//! buffer, and [`Transport::poll_uplinks`] returns `None` (the engine
+//! yields and re-polls) when a round cannot be resolved within the poll
+//! deadline instead of parking the run on a dead `read`. A worker whose
+//! connection drops (EOF / reset mid-frame) is **lost**: its replay cache
+//! is discarded, the loss is reported through [`Transport::drain_faults`],
+//! and the round stalls until a replacement **re-registers** — the
+//! listener stays open, and a reconnect hello is answered with a sync
+//! frame carrying the resume round plus the master's current model (fed
+//! each round via [`Transport::sync_state`]). The rejoined worker starts
+//! with fresh (zeroed) residual state — the master's `h`/error state
+//! carries what the paper's algebra needs, so training proceeds and the
+//! fleet's models stay synchronized (verified: at `finish` every worker
+//! returns a digest of its final model, checked against the master's) —
+//! but a run with a real crash is *not* bit-identical to an uninterrupted
+//! one; use [`crate::engine::FaultPlan`] for deterministic failure
+//! injection and [`crate::engine::Session::checkpoint_every`] for
+//! bit-exact kill/resume. [`TcpTransport::respawn_lost`] auto-spawns a
+//! local replacement thread for a lost worker (the chaos-test path);
+//! without it, a worker that stays lost past
+//! [`TcpTransport::reconnect_timeout`] fails the run with an actionable
+//! error rather than hanging forever.
 
-use crate::algorithms::WorkerNode;
+use crate::algorithms::{digest_f32, WorkerNode};
 use crate::compression::{codec, Compressed};
 use crate::engine::protocol::DownlinkMsg;
-use crate::engine::transport::{absent_slot_frame, RoundWindow, WorkerRoundDriver};
-use crate::engine::{RoundCtx, StalePolicy, TrainSpec, Transport, UplinkFrame, WirePayload};
+use crate::engine::registry;
+use crate::engine::transport::{absent_slot_frame, RoundWindow, WorkerLink, WorkerSchedule};
+use crate::engine::{
+    RoundCtx, StalePolicy, TrainSpec, Transport, TransportFault, UplinkFrame, WirePayload,
+};
 use crate::models::Problem;
 use crate::F;
-use std::io::{Read, Write};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 const KIND_UPLINK: u8 = 0;
 const KIND_DOWNLINK: u8 = 1;
+/// Worker → master re-registration after a lost connection.
+const KIND_RECONNECT: u8 = 2;
+/// Master → rejoining worker: resume round + current model replay.
+const KIND_SYNC: u8 = 3;
+/// The `round` field of hello/reconnect frames (never a real round).
+const HELLO_ROUND: u32 = u32::MAX;
 /// Fixed header bytes per frame (len + kind + round + worker + residual).
 pub const HEADER_BYTES: u64 = 4 + 1 + 4 + 4 + 8;
 
@@ -80,111 +117,482 @@ fn read_frame(s: &mut TcpStream) -> anyhow::Result<Frame> {
     })
 }
 
-fn tcp_worker_loop(
+/// Split one complete frame off the front of a reassembly buffer filled by
+/// nonblocking reads; `None` until enough bytes have arrived.
+fn take_frame(buf: &mut Vec<u8>) -> anyhow::Result<Option<Frame>> {
+    const H: usize = HEADER_BYTES as usize;
+    if buf.len() < H {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
+    anyhow::ensure!(len <= (1 << 30), "absurd frame length {len}");
+    if buf.len() < H + len {
+        return Ok(None);
+    }
+    let f = Frame {
+        kind: buf[4],
+        round: u32::from_le_bytes(buf[5..9].try_into().unwrap()),
+        worker: u32::from_le_bytes(buf[9..13].try_into().unwrap()),
+        residual: f64::from_le_bytes(buf[13..21].try_into().unwrap()),
+        payload: buf[H..H + len].to_vec(),
+    };
+    buf.drain(..H + len);
+    Ok(Some(f))
+}
+
+/// Everything a worker thread needs to run (bundled so the spawn sites
+/// stay readable).
+struct WorkerBoot {
     id: usize,
     n: usize,
-    mut node: Box<dyn WorkerNode>,
+    addr: SocketAddr,
     problem: Arc<dyn Problem>,
     spec: TrainSpec,
-    addr: SocketAddr,
+    /// Chaos knob: vanish (dropping the socket) just before this round —
+    /// the thread-level stand-in for `kill -9` on a worker process.
+    crash_at: Option<usize>,
+}
+
+fn read_apply(
+    sock: &mut TcpStream,
+    node: &mut dyn WorkerNode,
+    round: usize,
 ) -> anyhow::Result<()> {
-    let mut sock = TcpStream::connect(addr)?;
+    let down = read_frame(sock)?;
+    anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
+    anyhow::ensure!(down.round == round as u32, "round skew");
+    node.apply_downlink(round, &codec::decode(&down.payload)?);
+    Ok(())
+}
+
+/// [`WorkerLink`] over one socket: downlinks are read (blocking) off the
+/// same stream uplinks are written to.
+struct SocketLink<'a> {
+    sock: &'a mut TcpStream,
+    id: usize,
+}
+
+impl WorkerLink for SocketLink<'_> {
+    fn apply(&mut self, node: &mut dyn WorkerNode, round: usize) -> anyhow::Result<()> {
+        read_apply(self.sock, node, round)
+    }
+
+    fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()> {
+        write_frame(
+            self.sock,
+            &Frame {
+                kind: KIND_UPLINK,
+                round: round as u32,
+                worker: self.id as u32,
+                residual: residual_norm,
+                payload: bytes,
+            },
+        )
+    }
+}
+
+/// The shared round body of fresh and rejoining workers — the one
+/// [`WorkerSchedule`] every byte-moving transport runs, over a socket
+/// link. Returns `None` if the chaos knob fired (simulated kill), else a
+/// digest of the final model the transport checks against the master's
+/// at `finish`.
+fn run_rounds(
+    sock: &mut TcpStream,
+    node: &mut dyn WorkerNode,
+    boot: &WorkerBoot,
+    start: usize,
+) -> anyhow::Result<Option<u64>> {
+    let schedule = WorkerSchedule {
+        n: boot.n,
+        id: boot.id,
+        start,
+        crash_at: boot.crash_at,
+        problem: boot.problem.as_ref(),
+        spec: &boot.spec,
+    };
+    let mut link = SocketLink { sock, id: boot.id };
+    if !schedule.run(node, &mut link)? {
+        return Ok(None);
+    }
+    Ok(Some(digest_f32(node.model())))
+}
+
+/// One worker thread: connect, register (fresh hello or reconnect
+/// handshake), run the rounds. A rejoining worker that cannot complete
+/// its handshake (the master already shut down) exits cleanly with
+/// `None` instead of failing the run.
+fn tcp_worker_main(
+    boot: WorkerBoot,
+    mut node: Box<dyn WorkerNode>,
+    rejoin: bool,
+) -> anyhow::Result<Option<u64>> {
+    if rejoin {
+        return tcp_rejoin(boot, node);
+    }
+    let mut sock = TcpStream::connect(boot.addr)?;
     sock.set_nodelay(true)?;
     // identify ourselves once
     write_frame(
         &mut sock,
         &Frame {
             kind: KIND_UPLINK,
-            round: u32::MAX,
-            worker: id as u32,
+            round: HELLO_ROUND,
+            worker: boot.id as u32,
             residual: 0.0,
             payload: vec![],
         },
     )?;
-    fn read_apply(
-        sock: &mut TcpStream,
-        node: &mut dyn WorkerNode,
-        round: usize,
-    ) -> anyhow::Result<()> {
-        let down = read_frame(sock)?;
-        anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
-        anyhow::ensure!(down.round == round as u32, "round skew");
-        node.apply_downlink(round, &codec::decode(&down.payload)?);
-        Ok(())
+    let start = boot.spec.start_round;
+    run_rounds(&mut sock, node.as_mut(), &boot, start)
+}
+
+/// The rejoin path: reconnect hello → sync frame (resume round + model
+/// replay) → rounds from the resume point. A rejoiner that cannot
+/// complete the handshake (the master already shut down) exits cleanly
+/// with `None` instead of failing the run.
+fn tcp_rejoin(boot: WorkerBoot, mut node: Box<dyn WorkerNode>) -> anyhow::Result<Option<u64>> {
+    let Ok(mut sock) = TcpStream::connect(boot.addr) else {
+        return Ok(None); // master is gone; nothing to rejoin
+    };
+    sock.set_nodelay(true)?;
+    let hello = Frame {
+        kind: KIND_RECONNECT,
+        round: HELLO_ROUND,
+        worker: boot.id as u32,
+        residual: 0.0,
+        payload: vec![],
+    };
+    if write_frame(&mut sock, &hello).is_err() {
+        return Ok(None);
     }
-    let depth = spec.pipeline_depth.max(1);
-    let mut grad = vec![0.0 as F; problem.dim()];
-    let mut driver = WorkerRoundDriver::new(&spec, n);
-    for k in 0..spec.iters {
-        // the round-k uplink is computed against the model with downlinks
-        // through k − depth applied — the pipelined staleness contract
-        if k >= depth {
-            read_apply(&mut sock, node.as_mut(), k - depth)?;
-        }
-        if let Some((payload, residual)) =
-            driver.round(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad)
-        {
-            write_frame(
-                &mut sock,
-                &Frame { kind: KIND_UPLINK, round: k as u32, worker: id as u32, residual, payload },
-            )?;
-        }
-    }
-    // drain the tail so every downlink is applied and the final model
-    // copies agree with the master's
-    for t in spec.iters.saturating_sub(depth)..spec.iters {
-        read_apply(&mut sock, node.as_mut(), t)?;
-    }
-    Ok(())
+    sock.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let Ok(sync) = read_frame(&mut sock) else {
+        return Ok(None); // run finished before we were re-admitted
+    };
+    anyhow::ensure!(sync.kind == KIND_SYNC, "expected a sync frame after reconnect");
+    let Compressed::Dense(model) = codec::decode(&sync.payload)? else {
+        anyhow::bail!("sync frame payload was not a dense model");
+    };
+    // a rejoiner is a fresh node: model replayed, residual state zeroed
+    // (empty aux — see WorkerNode::import_state)
+    node.import_state(&model, &[])?;
+    sock.set_read_timeout(None)?;
+    let start = sync.round as usize;
+    run_rounds(&mut sock, node.as_mut(), &boot, start)
 }
 
 /// The per-worker downlink writer: drains queued broadcasts onto its write
 /// half of the socket so the master's read loop never blocks on a full
 /// send buffer (the depth ≥ 2 deadlock guard — see the module docs). The
 /// feeding channel is bounded at the pipeline depth: a worker that keeps
-/// consuming downlinks never backs the master up (selected workers are at
-/// most `depth` broadcasts behind by the pacing contract), while a wedged
-/// fleet exerts backpressure instead of queueing the whole run's
-/// broadcasts in memory. Exits when the master drops its sender;
-/// remaining queued frames are flushed first.
+/// consuming downlinks never backs the master up, while a wedged fleet
+/// exerts backpressure instead of queueing the whole run's broadcasts in
+/// memory. Exits when the master drops its sender (remaining queued
+/// frames are flushed first) or when the peer vanishes mid-write — a
+/// rejoining replacement gets a fresh writer plus a model sync, so a
+/// broken pipe here is an expected fault, not an error.
 fn tcp_downlink_writer(mut sock: TcpStream, rx: Receiver<DownlinkMsg>) -> anyhow::Result<()> {
     while let Ok(m) = rx.recv() {
-        write_frame(
-            &mut sock,
-            &Frame {
-                kind: KIND_DOWNLINK,
-                round: m.round as u32,
-                worker: 0,
-                residual: 0.0,
-                payload: m.bytes,
-            },
-        )?;
+        let frame = Frame {
+            kind: KIND_DOWNLINK,
+            round: m.round as u32,
+            worker: 0,
+            residual: 0.0,
+            payload: m.bytes,
+        };
+        if write_frame(&mut sock, &frame).is_err() {
+            return Ok(());
+        }
     }
     Ok(())
 }
 
+/// One live master-side connection: the nonblocking read half with its
+/// reassembly buffer, plus the writer thread feeding the write half.
+struct Conn {
+    sock: TcpStream,
+    buf: Vec<u8>,
+    writer_tx: Option<SyncSender<DownlinkMsg>>,
+    writer: Option<JoinHandle<anyhow::Result<()>>>,
+}
+
+fn spawn_conn(sock: TcpStream, id: usize, depth: usize) -> anyhow::Result<Conn> {
+    let w = sock.try_clone()?;
+    let (tx, rx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(depth);
+    let writer = std::thread::Builder::new()
+        .name(format!("dore-tcp-down-{id}"))
+        .spawn(move || tcp_downlink_writer(w, rx))?;
+    Ok(Conn { sock, buf: Vec::new(), writer_tx: Some(tx), writer: Some(writer) })
+}
+
+/// Flush-and-join a connection's writer (its broken-pipe exit is an
+/// expected fault path) and drop the socket.
+fn close_conn(mut conn: Conn) {
+    conn.writer_tx = None;
+    if let Some(h) = conn.writer.take() {
+        let _ = h.join();
+    }
+}
+
+/// One nonblocking read attempt's outcome.
+enum SockRead {
+    Frame(Frame),
+    WouldBlock,
+    Lost,
+}
+
+fn conn_try_read(conn: &mut Conn) -> anyhow::Result<SockRead> {
+    loop {
+        if let Some(f) = take_frame(&mut conn.buf)? {
+            return Ok(SockRead::Frame(f));
+        }
+        let mut chunk = [0u8; 16384];
+        match conn.sock.read(&mut chunk) {
+            Ok(0) => return Ok(SockRead::Lost),
+            Ok(k) => conn.buf.extend_from_slice(&chunk[..k]),
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(SockRead::WouldBlock),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                        | ErrorKind::BrokenPipe
+                ) =>
+            {
+                return Ok(SockRead::Lost)
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Partially assembled uplink slots of the round currently being polled
+/// (carried across `poll_uplinks → None` returns).
+struct Pending {
+    round: usize,
+    slots: Vec<Option<(Vec<u8>, f64)>>,
+    got: usize,
+}
+
 /// Socket transport: binds an ephemeral localhost port, runs one OS thread
 /// per worker (each with its own socket) and drives the master side from
-/// the engine loop. Bit-identical iterates to every other transport, at
-/// every pipeline depth.
-#[derive(Default)]
+/// the engine loop with nonblocking reads. Bit-identical iterates to every
+/// other transport, at every pipeline depth, on a healthy fleet; see the
+/// module docs for the crash/reconnect semantics.
 pub struct TcpTransport {
-    /// Master-side read halves, one per worker.
-    socks: Vec<TcpStream>,
-    /// Queues feeding the per-worker downlink writer threads (bounded at
-    /// the pipeline depth).
-    writer_txs: Vec<SyncSender<DownlinkMsg>>,
-    writer_handles: Vec<JoinHandle<anyhow::Result<()>>>,
-    handles: Vec<JoinHandle<anyhow::Result<()>>>,
+    /// Master-side connections, one slot per worker (`None` = lost).
+    conns: Vec<Option<Conn>>,
+    /// Kept open for the whole run so lost workers can re-register.
+    listener: Option<TcpListener>,
+    addr: Option<SocketAddr>,
+    handles: Vec<JoinHandle<anyhow::Result<Option<u64>>>>,
     window: RoundWindow,
     /// Master-side replay cache: each worker's last fresh encoded uplink,
-    /// kept only under [`StalePolicy::ReuseLast`].
+    /// kept only under [`StalePolicy::ReuseLast`]. A lost worker's entry
+    /// is discarded — its replacement starts with an empty mirror too, so
+    /// the two sides stay consistent.
     byte_cache: Vec<Option<Vec<u8>>>,
+    /// `(resume round, master iterate)` for reconnect syncs, refreshed
+    /// every round via [`Transport::sync_state`].
+    model_sync: Option<(usize, Vec<F>)>,
+    pending: Option<Pending>,
+    faults: Vec<TransportFault>,
+    lost_since: HashMap<usize, Instant>,
+    /// Auto-respawn attempts per worker (bounded — a replacement that
+    /// keeps dying must not crash-loop forever).
+    respawns: HashMap<usize, usize>,
+    respawn: bool,
+    crash_at: HashMap<usize, usize>,
+    poll_wait: Duration,
+    reconnect_timeout: Duration,
+    spec: Option<TrainSpec>,
+    problem: Option<Arc<dyn Problem>>,
+}
+
+impl Default for TcpTransport {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl TcpTransport {
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            conns: Vec::new(),
+            listener: None,
+            addr: None,
+            handles: Vec::new(),
+            window: RoundWindow::default(),
+            byte_cache: Vec::new(),
+            model_sync: None,
+            pending: None,
+            faults: Vec::new(),
+            lost_since: HashMap::new(),
+            respawns: HashMap::new(),
+            respawn: false,
+            crash_at: HashMap::new(),
+            poll_wait: Duration::from_millis(10),
+            reconnect_timeout: Duration::from_secs(30),
+            spec: None,
+            problem: None,
+        }
+    }
+
+    /// Auto-spawn a fresh local worker thread for a lost connection (it
+    /// re-registers through the same reconnect handshake an external
+    /// replacement process would use). Off by default: without it a
+    /// persistent loss fails the run after
+    /// [`TcpTransport::reconnect_timeout`].
+    pub fn respawn_lost(mut self, yes: bool) -> Self {
+        self.respawn = yes;
+        self
+    }
+
+    /// Chaos knob: worker `worker`'s thread vanishes (dropping its
+    /// socket) just before computing round `round` — the in-tree stand-in
+    /// for killing a worker process mid-run.
+    pub fn crash_worker(mut self, worker: usize, round: usize) -> Self {
+        self.crash_at.insert(worker, round);
+        self
+    }
+
+    /// How long a worker may stay lost before the run fails loudly
+    /// (default 30 s).
+    pub fn reconnect_timeout(mut self, timeout: Duration) -> Self {
+        self.reconnect_timeout = timeout;
+        self
+    }
+
+    /// Per-call `poll_uplinks` deadline before it reports "not ready yet"
+    /// (`None`) back to the engine (default 10 ms).
+    pub fn poll_wait(mut self, wait: Duration) -> Self {
+        self.poll_wait = wait;
+        self
+    }
+
+    fn depth(&self) -> usize {
+        self.spec.as_ref().map_or(1, |s| s.pipeline_depth.max(1))
+    }
+
+    /// Nonblockingly accept and admit any waiting reconnect hellos. A
+    /// botched handshake (stray connector, garbage or absent hello, a
+    /// peer that died mid-exchange) drops that socket only — it must
+    /// never take the training run down with it.
+    fn admit_reconnects(&mut self) -> anyhow::Result<()> {
+        let mut fresh: Vec<TcpStream> = Vec::new();
+        if let Some(listener) = &self.listener {
+            loop {
+                match listener.accept() {
+                    Ok((s, _)) => fresh.push(s),
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        for s in fresh {
+            // the socket is dropped on a failed handshake; the run goes on
+            let _ = self.admit(s);
+        }
+        Ok(())
+    }
+
+    /// The reconnect/re-register handshake: validate the hello, reply
+    /// with the resume round + current model, wire up a fresh writer.
+    fn admit(&mut self, mut s: TcpStream) -> anyhow::Result<()> {
+        s.set_nodelay(true)?;
+        // brief blocking handshake (the connector writes its hello first;
+        // sockets accepted from a nonblocking listener may inherit the
+        // flag, so set both explicitly)
+        s.set_nonblocking(false)?;
+        s.set_read_timeout(Some(Duration::from_secs(5)))?;
+        let hello = read_frame(&mut s)?;
+        anyhow::ensure!(
+            hello.kind == KIND_RECONNECT && hello.round == HELLO_ROUND,
+            "unexpected frame on a reconnecting socket"
+        );
+        let id = hello.worker as usize;
+        anyhow::ensure!(id < self.conns.len(), "reconnect hello from unknown worker {id}");
+        if let Some(old) = self.conns[id].take() {
+            // the re-registration supersedes a connection the master still
+            // believed live: an unselected worker's EOF can sit unread for
+            // a round or more, and a restarted worker may beat the master
+            // to noticing. Retire the old socket and admit the new one.
+            close_conn(old);
+            self.byte_cache[id] = None;
+            self.faults.push(TransportFault { worker: id, rejoined: false });
+        }
+        let (resume, model) = self
+            .model_sync
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("no sync state available for a reconnecting worker"))?;
+        write_frame(
+            &mut s,
+            &Frame {
+                kind: KIND_SYNC,
+                round: *resume as u32,
+                worker: id as u32,
+                residual: 0.0,
+                payload: codec::encode(&Compressed::Dense(model.clone())),
+            },
+        )?;
+        s.set_read_timeout(None)?;
+        s.set_nonblocking(true)?;
+        self.conns[id] = Some(spawn_conn(s, id, self.depth())?);
+        self.lost_since.remove(&id);
+        self.faults.push(TransportFault { worker: id, rejoined: true });
+        Ok(())
+    }
+
+    /// Record a dead connection: discard its replay cache, report the
+    /// fault, optionally spawn a local replacement.
+    fn mark_lost(&mut self, id: usize) -> anyhow::Result<()> {
+        if let Some(conn) = self.conns[id].take() {
+            close_conn(conn);
+        }
+        self.byte_cache[id] = None;
+        self.lost_since.insert(id, Instant::now());
+        self.faults.push(TransportFault { worker: id, rejoined: false });
+        if self.respawn {
+            self.spawn_replacement(id)?;
+        }
+        Ok(())
+    }
+
+    /// Spawn a fresh local worker thread that rejoins as `id`. The node
+    /// is rebuilt through the registry — by the resolved algorithm name
+    /// the session stamped on the spec ([`TrainSpec::algo_name`], which
+    /// covers runtime-registered schemes) or by `spec.algo` — with zeroed
+    /// residual state; the sync handshake replays the model. A worker
+    /// that keeps dying (e.g. its `import_state` is unsupported) is given
+    /// up on after a few attempts instead of crash-looping forever.
+    fn spawn_replacement(&mut self, id: usize) -> anyhow::Result<()> {
+        const MAX_RESPAWNS_PER_WORKER: usize = 5;
+        let tries = self.respawns.entry(id).or_insert(0);
+        *tries += 1;
+        anyhow::ensure!(
+            *tries <= MAX_RESPAWNS_PER_WORKER,
+            "worker {id} was lost {tries} times; giving up on auto-respawn (does the \
+             algorithm support WorkerNode::import_state?)"
+        );
+        let spec = self.spec.clone().expect("transport started");
+        let problem = self.problem.clone().expect("transport started");
+        let addr = self.addr.expect("transport started");
+        let n = self.conns.len();
+        // cheap registry rebuild; the n − 1 unused siblings are dropped
+        let x0 = problem.init();
+        let (mut fleet, _master) = match &spec.algo_name {
+            Some(name) => registry::build_by_name(name, n, &x0, &spec.hp)?,
+            None => registry::build_algorithm(spec.algo, n, &x0, &spec.hp)?,
+        };
+        let node = fleet.swap_remove(id);
+        let boot = WorkerBoot { id, n, addr, problem, spec, crash_at: None };
+        self.handles.push(
+            std::thread::Builder::new()
+                .name(format!("dore-tcp-rejoin-{id}"))
+                .spawn(move || tcp_worker_main(boot, node, true))?,
+        );
+        Ok(())
     }
 }
 
@@ -207,44 +615,61 @@ impl Transport for TcpTransport {
         })?;
         let n = workers.len();
         self.byte_cache = (0..n).map(|_| None).collect();
-        self.window.reset();
+        self.window.reset(spec.start_round);
+        self.pending = None;
+        self.faults.clear();
+        self.lost_since.clear();
+        self.respawns.clear();
+        self.model_sync = None;
+        self.spec = Some(spec.clone());
+        self.problem = Some(problem.clone());
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
+        self.addr = Some(addr);
 
         for (id, node) in workers.into_iter().enumerate() {
-            let p = problem.clone();
-            let s = spec.clone();
+            let boot = WorkerBoot {
+                id,
+                n,
+                addr,
+                problem: problem.clone(),
+                spec: spec.clone(),
+                crash_at: self.crash_at.get(&id).copied(),
+            };
             self.handles.push(
                 std::thread::Builder::new()
                     .name(format!("dore-tcp-{id}"))
-                    .spawn(move || tcp_worker_loop(id, n, node, p, s, addr))?,
+                    .spawn(move || tcp_worker_main(boot, node, false))?,
             );
         }
 
         // accept n connections, map them to worker ids via hello frames
+        // (blocking: the fleet connects immediately)
         let mut socks: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (mut s, _) = listener.accept()?;
             s.set_nodelay(true)?;
             let hello = read_frame(&mut s)?;
-            anyhow::ensure!(hello.round == u32::MAX, "expected hello frame");
+            anyhow::ensure!(
+                hello.kind == KIND_UPLINK && hello.round == HELLO_ROUND,
+                "expected hello frame"
+            );
             let id = hello.worker as usize;
             anyhow::ensure!(id < n && socks[id].is_none(), "bad hello worker id");
             socks[id] = Some(s);
         }
-        self.socks = socks.into_iter().map(|s| s.expect("accepted every id")).collect();
-        // one downlink writer per worker, on a cloned write half
+        // reconnects keep arriving on the same listener, polled
+        // nonblockingly from poll_uplinks
+        listener.set_nonblocking(true)?;
+        self.listener = Some(listener);
         let depth = spec.pipeline_depth.max(1);
-        for (id, s) in self.socks.iter().enumerate() {
-            let (tx, rx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(depth);
-            let w = s.try_clone()?;
-            self.writer_txs.push(tx);
-            self.writer_handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dore-tcp-down-{id}"))
-                    .spawn(move || tcp_downlink_writer(w, rx))?,
-            );
+        let mut conns = Vec::with_capacity(n);
+        for (id, s) in socks.into_iter().enumerate() {
+            let s = s.expect("accepted every id");
+            s.set_nonblocking(true)?;
+            conns.push(Some(spawn_conn(s, id, depth)?));
         }
+        self.conns = conns;
         Ok(())
     }
 
@@ -254,7 +679,7 @@ impl Transport for TcpTransport {
         ctx: RoundCtx<'_>,
         inject: Vec<UplinkFrame>,
     ) -> anyhow::Result<()> {
-        self.window.begin(round, self.socks.len(), ctx.mask, ctx.spec.stale, inject)
+        self.window.begin(round, self.conns.len(), ctx.mask, ctx.spec.stale, inject)
     }
 
     fn poll_uplinks(
@@ -263,38 +688,94 @@ impl Transport for TcpTransport {
         ctx: RoundCtx<'_>,
     ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
         self.window.ensure_open(round)?;
-        let n = self.socks.len();
+        let n = self.conns.len();
         let mask = ctx.mask;
         anyhow::ensure!(mask.len() == n, "round mask covers {} of {n} workers", mask.len());
+        let mut pending = match self.pending.take() {
+            Some(p) if p.round == round => p,
+            _ => Pending { round, slots: (0..n).map(|_| None).collect(), got: 0 },
+        };
+        let expected = mask.iter().filter(|&&m| m).count();
+        let deadline = Instant::now() + self.poll_wait;
+        // only selected workers transmit this round; absentees' slots are
+        // filled at assembly. Workers emit uplinks in round order, so the
+        // next frame assembled from a socket is exactly round `round`.
+        while pending.got < expected {
+            self.admit_reconnects()?;
+            let mut progress = false;
+            for i in 0..n {
+                if !mask[i] || pending.slots[i].is_some() {
+                    continue;
+                }
+                let outcome = match self.conns[i].as_mut() {
+                    Some(conn) => conn_try_read(conn)?,
+                    None => {
+                        // lost: the round stalls until a replacement
+                        // re-registers; fail loudly if none ever does
+                        if let Some(t0) = self.lost_since.get(&i) {
+                            anyhow::ensure!(
+                                t0.elapsed() < self.reconnect_timeout,
+                                "worker {i} was lost at round {round} and nothing \
+                                 re-registered within {:?} (enable \
+                                 TcpTransport::respawn_lost or restart the worker)",
+                                self.reconnect_timeout
+                            );
+                        }
+                        continue;
+                    }
+                };
+                match outcome {
+                    SockRead::Frame(f) => {
+                        anyhow::ensure!(
+                            f.kind == KIND_UPLINK
+                                && f.round == round as u32
+                                && f.worker as usize == i,
+                            "protocol skew on worker {i} at round {round}"
+                        );
+                        pending.slots[i] = Some((f.payload, f.residual));
+                        pending.got += 1;
+                        progress = true;
+                    }
+                    SockRead::WouldBlock => {}
+                    SockRead::Lost => self.mark_lost(i)?,
+                }
+            }
+            if pending.got >= expected {
+                break;
+            }
+            if Instant::now() >= deadline {
+                // nonblocking contract: not resolvable yet — park the
+                // partial assembly, the engine yields and re-polls
+                self.pending = Some(pending);
+                return Ok(None);
+            }
+            if !progress {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+        }
         let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
         let mut injected = self.window.take_injected(round, n);
-        let mut frames = Vec::with_capacity(n);
-        for (i, s) in self.socks.iter_mut().enumerate() {
-            // only selected workers transmit this round; absentees' slots
-            // are filled by an injected stand-in, the replay cache
-            // (reuse-last), or left empty
-            if !mask[i] {
-                frames.push(absent_slot_frame(&mut injected, &self.byte_cache, reuse, round, i));
-                continue;
-            }
-            // workers emit uplinks in round order, so the next unread
-            // uplink frame on this socket is exactly round `round`
-            let f = read_frame(s)?;
-            anyhow::ensure!(
-                f.kind == KIND_UPLINK && f.round == round as u32 && f.worker as usize == i,
-                "protocol skew on worker {i} at round {round}"
-            );
-            if reuse {
-                self.byte_cache[i] = Some(f.payload.clone());
-            }
-            frames.push(UplinkFrame {
-                worker: i,
-                round,
-                payload: Some(WirePayload::Encoded(f.payload)),
-                residual_norm: f.residual,
-                compute_seconds: 0.0,
-            });
-        }
+        let frames = pending
+            .slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| match s {
+                Some((payload, residual_norm)) => {
+                    if reuse {
+                        self.byte_cache[i] = Some(payload.clone());
+                    }
+                    UplinkFrame {
+                        worker: i,
+                        round,
+                        payload: Some(WirePayload::Encoded(payload)),
+                        residual_norm,
+                        compute_seconds: 0.0,
+                    }
+                }
+                // absentee: injected stand-in, replay cache, or empty
+                None => absent_slot_frame(&mut injected, &self.byte_cache, reuse, round, i),
+            })
+            .collect();
         Ok(Some(frames))
     }
 
@@ -308,27 +789,67 @@ impl Transport for TcpTransport {
         let bits = bytes.len() as u64 * 8;
         // hand off to the per-worker writer threads: the master's loop
         // stays free to keep reading uplinks, which is what prevents the
-        // depth ≥ 2 write/write deadlock on large payloads
-        for tx in &self.writer_txs {
-            tx.send(DownlinkMsg { round, bytes: bytes.clone() })
-                .map_err(|_| anyhow::anyhow!("downlink writer hung up"))?;
+        // depth ≥ 2 write/write deadlock on large payloads. A lost
+        // worker's broadcasts are skipped — the reconnect sync replays
+        // the model it missed.
+        let mut dead: Vec<usize> = Vec::new();
+        for (i, c) in self.conns.iter().enumerate() {
+            let Some(conn) = c else { continue };
+            let Some(tx) = &conn.writer_tx else { continue };
+            if tx.send(DownlinkMsg { round, bytes: bytes.clone() }).is_err() {
+                // the writer exited on a broken socket between polls
+                dead.push(i);
+            }
+        }
+        for i in dead {
+            self.mark_lost(i)?;
         }
         Ok(bits)
     }
 
     fn finish(&mut self) -> anyhow::Result<()> {
-        // dropping the senders lets each writer flush its queued downlinks
-        // and exit; join writers before workers so the tail broadcasts the
-        // workers are draining actually reach them
-        self.writer_txs.clear();
-        for h in self.writer_handles.drain(..) {
-            h.join().map_err(|_| anyhow::anyhow!("tcp downlink writer panicked"))??;
+        // stop admitting reconnects first: a straggling replacement
+        // blocked on its sync read sees the connection close and exits
+        // cleanly (returning None) instead of hanging the join below
+        self.listener = None;
+        self.addr = None;
+        // dropping the senders lets each writer flush its queued
+        // downlinks and exit; join writers before workers so the tail
+        // broadcasts the workers are draining actually reach them
+        for conn in self.conns.iter_mut().filter_map(|c| c.take()) {
+            close_conn(conn);
         }
+        // every surviving worker reports a digest of its final model;
+        // check them against the master's iterate — the cheap invariant
+        // that catches any fleet desync a fault path could introduce
+        let expect = self.model_sync.take().map(|(_, m)| digest_f32(&m));
         for h in self.handles.drain(..) {
-            h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
+            let digest = h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
+            if let (Some(d), Some(e)) = (digest, expect) {
+                anyhow::ensure!(
+                    d == e,
+                    "a worker's final model desynced from the master's (digest mismatch)"
+                );
+            }
         }
-        self.socks.clear();
+        self.conns.clear();
+        self.pending = None;
         Ok(())
+    }
+
+    fn sync_state(&mut self, next_round: usize, model: &[F]) {
+        // reuse the buffer: this runs every round, a reconnect almost never
+        match &mut self.model_sync {
+            Some((r, buf)) if buf.len() == model.len() => {
+                *r = next_round;
+                buf.copy_from_slice(model);
+            }
+            slot => *slot = Some((next_round, model.to_vec())),
+        }
+    }
+
+    fn drain_faults(&mut self) -> Vec<TransportFault> {
+        std::mem::take(&mut self.faults)
     }
 }
 
@@ -404,5 +925,37 @@ mod tests {
         assert_eq!(g.worker, 3);
         assert_eq!(g.residual, 2.5);
         assert_eq!(g.payload, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn take_frame_reassembles_from_partial_reads() {
+        let f =
+            Frame { kind: KIND_UPLINK, round: 9, worker: 1, residual: 1.5, payload: vec![7; 40] };
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
+        wire.push(f.kind);
+        wire.extend_from_slice(&f.round.to_le_bytes());
+        wire.extend_from_slice(&f.worker.to_le_bytes());
+        wire.extend_from_slice(&f.residual.to_le_bytes());
+        wire.extend_from_slice(&f.payload);
+        // feed the wire bytes in dribbles: no frame until the last byte
+        let mut buf: Vec<u8> = Vec::new();
+        for (i, b) in wire.iter().enumerate() {
+            buf.push(*b);
+            let got = take_frame(&mut buf).unwrap();
+            if i + 1 < wire.len() {
+                assert!(got.is_none(), "frame surfaced {} bytes early", wire.len() - i - 1);
+            } else {
+                let g = got.expect("complete frame");
+                assert_eq!(g.round, 9);
+                assert_eq!(g.payload, vec![7; 40]);
+                assert!(buf.is_empty(), "buffer not drained");
+            }
+        }
+        // two frames back-to-back split correctly
+        let mut buf2: Vec<u8> = [wire.clone(), wire].concat();
+        assert!(take_frame(&mut buf2).unwrap().is_some());
+        assert!(take_frame(&mut buf2).unwrap().is_some());
+        assert!(take_frame(&mut buf2).unwrap().is_none());
     }
 }

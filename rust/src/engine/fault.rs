@@ -1,0 +1,312 @@
+//! Deterministic failure injection: which workers are *down* each round.
+//!
+//! Real fleets crash, and error-compensated state (DORE/DIANA `h`, `e`)
+//! makes recovery subtle — so the engine injects failures the same way it
+//! selects participants: a [`FaultPlan`] is a **pure function of
+//! `(seed, round, slot)`**, evaluated independently (and identically) by
+//! the engine, every transport, and every self-paced worker thread. A
+//! downed worker is simply an *unselected slot* under the round's
+//! participation mask ([`crate::engine::TrainSpec::round_mask`] overlays
+//! the plan on top of the [`super::Participation`] policy), so the whole
+//! absent-slot machinery — skip vs reuse-last, `WorkerNode::on_reused`
+//! folds, 1/n vs 1/|S| master normalization — applies unchanged, and
+//! trajectories under a crash schedule replay bit-for-bit on every
+//! transport.
+//!
+//! The plan describes *simulated* failures (the worker sits its outage
+//! out but its thread stays alive). Genuine connection loss — a worker
+//! process dying mid-run — is the TCP transport's business
+//! ([`crate::coordinator::tcp::TcpTransport`] reconnect handshake); both
+//! surface as [`super::RecoveryEvent`]s.
+
+use crate::compression::Xoshiro256;
+
+/// Salt separating the crash-draw RNG stream from the training,
+/// participation and jitter sites.
+const FAULT_SALT: u64 = 0x6661_756c_7470_6c6e; // "faultpln"
+
+/// One scripted outage window: the worker is down for rounds
+/// `crash_at..rejoin_at` (`rejoin_at = None` = permanent loss).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultWindow {
+    pub worker: usize,
+    /// First round the worker is down.
+    pub crash_at: usize,
+    /// First round the worker is back up; `None` never rejoins.
+    pub rejoin_at: Option<usize>,
+}
+
+impl FaultWindow {
+    fn covers(&self, round: usize, worker: usize) -> bool {
+        worker == self.worker
+            && round >= self.crash_at
+            && self.rejoin_at.is_none_or(|r| round < r)
+    }
+}
+
+/// A seeded schedule of worker crash/rejoin events.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum FaultPlan {
+    /// No injected failures (the default).
+    #[default]
+    None,
+    /// Explicit outage windows (crash at round r, rejoin at r + k, or
+    /// permanent loss).
+    Scripted(Vec<FaultWindow>),
+    /// Each round each worker draws a seeded Bernoulli crash with
+    /// probability `p`; a crash takes the worker down for `outage`
+    /// consecutive rounds (overlapping crashes extend the outage).
+    Random { p: f64, outage: usize },
+}
+
+impl FaultPlan {
+    pub fn is_none(&self) -> bool {
+        matches!(self, FaultPlan::None)
+    }
+
+    /// Reject plans that cannot apply to a fleet of `n`.
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        match self {
+            FaultPlan::None => Ok(()),
+            FaultPlan::Scripted(windows) => {
+                for w in windows {
+                    anyhow::ensure!(
+                        w.worker < n,
+                        "fault window names worker {} but the fleet has {n}",
+                        w.worker
+                    );
+                    if let Some(r) = w.rejoin_at {
+                        anyhow::ensure!(
+                            r > w.crash_at,
+                            "fault window for worker {}: rejoin round {r} is not after \
+                             crash round {}",
+                            w.worker,
+                            w.crash_at
+                        );
+                    }
+                }
+                Ok(())
+            }
+            FaultPlan::Random { p, outage } => {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(p),
+                    "fault probability {p} out of range (need 0 ≤ p < 1)"
+                );
+                anyhow::ensure!(*outage >= 1, "fault outage must be ≥ 1 round");
+                Ok(())
+            }
+        }
+    }
+
+    /// Whether the Bernoulli crash fires for `(seed, round, worker)` —
+    /// one independent seeded draw per cell, so `down` stays a pure
+    /// function no matter how rounds are ordered or replayed.
+    fn crash_draw(seed: u64, round: usize, worker: usize, p: f64) -> bool {
+        let mut rng = Xoshiro256::for_site(seed ^ FAULT_SALT, 1 + worker as u64, round as u64);
+        rng.next_f64() < p
+    }
+
+    /// Is `worker` down at `round`? Pure in `(seed, round, worker)`.
+    pub fn down(&self, seed: u64, round: usize, worker: usize) -> bool {
+        match self {
+            FaultPlan::None => false,
+            FaultPlan::Scripted(windows) => windows.iter().any(|w| w.covers(round, worker)),
+            FaultPlan::Random { p, outage } => {
+                // down at `round` iff some crash fired within the trailing
+                // outage window — O(outage) seeded draws, no shared state
+                let lo = round.saturating_sub(outage - 1);
+                (lo..=round).any(|s| Self::crash_draw(seed, s, worker, *p))
+            }
+        }
+    }
+
+    /// Did `worker` go down exactly at `round` (up at `round − 1`)?
+    pub fn lost_at(&self, seed: u64, round: usize, worker: usize) -> bool {
+        self.down(seed, round, worker)
+            && (round == 0 || !self.down(seed, round - 1, worker))
+    }
+
+    /// Did `worker` come back exactly at `round` (down at `round − 1`)?
+    pub fn rejoined_at(&self, seed: u64, round: usize, worker: usize) -> bool {
+        !self.down(seed, round, worker)
+            && round > 0
+            && self.down(seed, round - 1, worker)
+    }
+
+    /// Clear the downed slots out of a participation mask.
+    pub fn overlay(&self, seed: u64, round: usize, mask: &mut [bool]) {
+        if self.is_none() {
+            return;
+        }
+        for (i, m) in mask.iter_mut().enumerate() {
+            if *m && self.down(seed, round, i) {
+                *m = false;
+            }
+        }
+    }
+}
+
+/// `none`, `rand:<p>:<outage>`, or a comma list of
+/// `crash:<worker>@<round>[..<rejoin>]` windows — e.g.
+/// `crash:1@5..9,crash:2@20` (worker 1 down rounds 5–8, worker 2 lost
+/// permanently from round 20).
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        if s.eq_ignore_ascii_case("none") {
+            return Ok(FaultPlan::None);
+        }
+        if let Some(rest) = s.strip_prefix("rand:") {
+            let (p, outage) = rest.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("random fault spec '{s}' (want rand:<p>:<outage>)")
+            })?;
+            let plan = FaultPlan::Random {
+                p: p.parse().map_err(|e| anyhow::anyhow!("fault probability '{p}': {e}"))?,
+                outage: outage
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("fault outage '{outage}': {e}"))?,
+            };
+            return Ok(plan);
+        }
+        let mut windows = Vec::new();
+        for item in s.split(',') {
+            let body = item.trim().strip_prefix("crash:").ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown fault spec '{item}' \
+                     (none | rand:<p>:<outage> | crash:<w>@<r>[..<rejoin>],...)"
+                )
+            })?;
+            let (worker, rounds) = body
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("crash spec '{item}' (want crash:<w>@<r>)"))?;
+            let worker =
+                worker.parse().map_err(|e| anyhow::anyhow!("crash worker '{worker}': {e}"))?;
+            let (crash_at, rejoin_at) = match rounds.split_once("..") {
+                None => (
+                    rounds.parse().map_err(|e| anyhow::anyhow!("crash round '{rounds}': {e}"))?,
+                    None,
+                ),
+                Some((c, r)) => (
+                    c.parse().map_err(|e| anyhow::anyhow!("crash round '{c}': {e}"))?,
+                    Some(r.parse().map_err(|e| anyhow::anyhow!("rejoin round '{r}': {e}"))?),
+                ),
+            };
+            windows.push(FaultWindow { worker, crash_at, rejoin_at });
+        }
+        anyhow::ensure!(!windows.is_empty(), "empty fault spec");
+        Ok(FaultPlan::Scripted(windows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scripted_window_covers_half_open_range() {
+        let plan = FaultPlan::Scripted(vec![FaultWindow {
+            worker: 1,
+            crash_at: 3,
+            rejoin_at: Some(6),
+        }]);
+        for round in 0..10 {
+            assert_eq!(plan.down(7, round, 1), (3..6).contains(&round), "round {round}");
+            assert!(!plan.down(7, round, 0), "other workers unaffected");
+        }
+        assert!(plan.lost_at(7, 3, 1));
+        assert!(!plan.lost_at(7, 4, 1));
+        assert!(plan.rejoined_at(7, 6, 1));
+        assert!(!plan.rejoined_at(7, 7, 1));
+    }
+
+    #[test]
+    fn permanent_loss_never_rejoins() {
+        let plan =
+            FaultPlan::Scripted(vec![FaultWindow { worker: 0, crash_at: 2, rejoin_at: None }]);
+        assert!(!plan.down(1, 1, 0));
+        assert!(plan.down(1, 2, 0));
+        assert!(plan.down(1, 10_000, 0));
+        assert!(!(0..100).any(|r| plan.rejoined_at(1, r, 0)));
+    }
+
+    #[test]
+    fn random_plan_is_pure_and_respects_outage() {
+        let plan = FaultPlan::Random { p: 0.2, outage: 3 };
+        for round in 0..200 {
+            for worker in 0..4 {
+                assert_eq!(
+                    plan.down(11, round, worker),
+                    plan.down(11, round, worker),
+                    "down() must replay"
+                );
+            }
+        }
+        // every down round traces back to a crash draw within the window,
+        // and a crash keeps the worker down for the full outage
+        for round in 0..200 {
+            if FaultPlan::crash_draw(11, round, 2, 0.2) {
+                for r in round..round + 3 {
+                    assert!(plan.down(11, r, 2), "outage cut short at {r}");
+                }
+            }
+        }
+        // a different seed gives a different schedule
+        let a: Vec<bool> = (0..200).map(|r| plan.down(11, r, 0)).collect();
+        let b: Vec<bool> = (0..200).map(|r| plan.down(12, r, 0)).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn overlay_clears_downed_slots_only() {
+        let plan = FaultPlan::Scripted(vec![FaultWindow {
+            worker: 0,
+            crash_at: 0,
+            rejoin_at: None,
+        }]);
+        let mut mask = vec![true, false, true];
+        plan.overlay(5, 0, &mut mask);
+        assert_eq!(mask, vec![false, false, true]);
+    }
+
+    #[test]
+    fn validation_rejects_bad_plans() {
+        assert!(FaultPlan::Scripted(vec![FaultWindow {
+            worker: 4,
+            crash_at: 0,
+            rejoin_at: None
+        }])
+        .validate(4)
+        .is_err());
+        assert!(FaultPlan::Scripted(vec![FaultWindow {
+            worker: 0,
+            crash_at: 5,
+            rejoin_at: Some(5)
+        }])
+        .validate(4)
+        .is_err());
+        assert!(FaultPlan::Random { p: 1.0, outage: 2 }.validate(4).is_err());
+        assert!(FaultPlan::Random { p: 0.1, outage: 0 }.validate(4).is_err());
+        assert!(FaultPlan::Random { p: 0.1, outage: 2 }.validate(4).is_ok());
+    }
+
+    #[test]
+    fn specs_parse() {
+        assert_eq!("none".parse::<FaultPlan>().unwrap(), FaultPlan::None);
+        assert_eq!(
+            "rand:0.05:3".parse::<FaultPlan>().unwrap(),
+            FaultPlan::Random { p: 0.05, outage: 3 }
+        );
+        assert_eq!(
+            "crash:1@5..9,crash:2@20".parse::<FaultPlan>().unwrap(),
+            FaultPlan::Scripted(vec![
+                FaultWindow { worker: 1, crash_at: 5, rejoin_at: Some(9) },
+                FaultWindow { worker: 2, crash_at: 20, rejoin_at: None },
+            ])
+        );
+        assert!("bogus".parse::<FaultPlan>().is_err());
+        assert!("rand:0.05".parse::<FaultPlan>().is_err());
+        assert!("crash:1".parse::<FaultPlan>().is_err());
+    }
+}

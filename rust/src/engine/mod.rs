@@ -54,6 +54,18 @@
 //! dimension shards on scoped threads, with results **bit-identical** to
 //! the serial path for every thread count (see [`reduce`]).
 //!
+//! Rounds are also **fault-tolerant**: a [`FaultPlan`] on the spec injects
+//! a seeded crash/rejoin schedule — a pure function of
+//! `(seed, round, slot)`, so every transport sees identical failures and a
+//! downed worker is exactly an unselected slot under the [`StalePolicy`]
+//! machinery ([`fault`]). [`Session::checkpoint_every`] /
+//! [`Session::resume_from`] wire [`crate::coordinator::checkpoint`] into
+//! the loop (master iterate + every node's residual state; a killed run
+//! resumes bit-identically), and the TCP transport survives real
+//! connection loss with a reconnect/re-register handshake that replays the
+//! current round + model to the rejoining worker. [`RecoveryEvent`]s
+//! narrate lost/rejoined workers and written checkpoints.
+//!
 //! Progress is emitted as events to [`Observer`]s; [`RunMetrics`] is itself
 //! an observer, so benches can attach custom sinks instead of post-hoc
 //! field picking.
@@ -77,6 +89,7 @@
 //! println!("final loss gap {:.3e}", metrics.loss.last().unwrap());
 //! ```
 
+pub mod fault;
 pub mod observer;
 pub mod participation;
 pub mod protocol;
@@ -85,12 +98,14 @@ pub mod registry;
 pub mod session;
 pub mod transport;
 
-pub use observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
+pub use fault::{FaultPlan, FaultWindow};
+pub use observer::{EvalEvent, Observer, RecoveryEvent, RoundEvent, RunInfo, RunSummary};
 pub use participation::{Participation, StalePolicy};
 pub use reduce::ReducePool;
 pub use session::{Session, TrainSpec};
 pub use transport::{
-    worker_uplink, InProc, RoundCtx, SimNet, Threaded, Transport, UplinkFrame, WirePayload,
+    worker_uplink, InProc, RoundCtx, SimNet, Threaded, Transport, TransportFault, UplinkFrame,
+    WirePayload,
 };
 
 pub use crate::metrics::RunMetrics;

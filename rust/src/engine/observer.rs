@@ -72,6 +72,26 @@ pub struct EvalEvent {
     pub master_residual_norm: f64,
 }
 
+/// A fault-tolerance transition: a worker leaving or re-entering the
+/// round schedule, or a checkpoint landing on disk. Deterministic
+/// [`crate::engine::FaultPlan`] transitions are narrated by the engine
+/// itself (identically on every transport); connection-level losses and
+/// reconnects observed by a byte-moving transport
+/// ([`crate::coordinator::tcp::TcpTransport`]) are drained into the same
+/// stream each round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RecoveryEvent {
+    /// The worker stopped contributing uplinks as of `round`.
+    WorkerLost { round: usize, worker: usize },
+    /// The worker is back in the schedule as of `round` (its residual
+    /// state was carried by the master's `h`/replay machinery while it
+    /// was away — see the README recovery-semantics table).
+    WorkerRejoined { round: usize, worker: usize },
+    /// A checkpoint capturing state after `round` rounds was written
+    /// (resuming from it starts at round `round`).
+    CheckpointWritten { round: usize },
+}
+
 /// Final run accounting, emitted once after the last round.
 #[derive(Clone, Copy, Debug)]
 pub struct RunSummary {
@@ -88,6 +108,7 @@ pub trait Observer: Send {
     fn on_start(&mut self, _info: &RunInfo) {}
     fn on_round(&mut self, _event: &RoundEvent) {}
     fn on_eval(&mut self, _event: &EvalEvent) {}
+    fn on_recovery(&mut self, _event: &RecoveryEvent) {}
     fn on_finish(&mut self, _summary: &RunSummary) {}
 }
 
@@ -124,6 +145,14 @@ impl Observer for RunMetrics {
         }
         self.worker_residual_norm.push(e.worker_residual_norm);
         self.master_residual_norm.push(e.master_residual_norm);
+    }
+
+    fn on_recovery(&mut self, e: &RecoveryEvent) {
+        match e {
+            RecoveryEvent::WorkerLost { .. } => self.workers_lost += 1,
+            RecoveryEvent::WorkerRejoined { .. } => self.workers_rejoined += 1,
+            RecoveryEvent::CheckpointWritten { .. } => self.checkpoints_written += 1,
+        }
     }
 
     fn on_finish(&mut self, s: &RunSummary) {
@@ -178,5 +207,17 @@ mod tests {
         assert!(m.test_loss.is_empty());
         assert_eq!(m.total_rounds, 1);
         assert_eq!(m.simulated_seconds, Some(2.5));
+    }
+
+    #[test]
+    fn recovery_events_feed_the_counters() {
+        let mut m = RunMetrics::new("X");
+        m.on_recovery(&RecoveryEvent::WorkerLost { round: 3, worker: 1 });
+        m.on_recovery(&RecoveryEvent::WorkerLost { round: 5, worker: 2 });
+        m.on_recovery(&RecoveryEvent::WorkerRejoined { round: 7, worker: 1 });
+        m.on_recovery(&RecoveryEvent::CheckpointWritten { round: 10 });
+        assert_eq!(m.workers_lost, 2);
+        assert_eq!(m.workers_rejoined, 1);
+        assert_eq!(m.checkpoints_written, 1);
     }
 }

@@ -17,21 +17,33 @@
 //! `t − D + 1` (downlinks applied only through `t − D`): gradient staleness
 //! is the price, hidden wire latency the prize.
 
-use super::observer::{EvalEvent, Observer, RoundEvent, RunInfo, RunSummary};
+use super::fault::FaultPlan;
+use super::observer::{EvalEvent, Observer, RecoveryEvent, RoundEvent, RunInfo, RunSummary};
 use super::participation::{Participation, StalePolicy};
 use super::reduce::ReducePool;
 use super::registry;
 use super::transport::{InProc, RoundCtx, Transport};
-use crate::algorithms::{AlgorithmKind, HyperParams};
+use crate::algorithms::{AlgorithmKind, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{Compressed, Xoshiro256};
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::models::{linalg, Problem};
+use crate::F;
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// A training-run specification.
 #[derive(Clone, Debug)]
 pub struct TrainSpec {
     pub algo: AlgorithmKind,
+    /// Resolved registry name of the algorithm when the session was built
+    /// via [`Session::algo_name`] (runtime-registered schemes have no
+    /// [`AlgorithmKind`]). Stamped by [`Session::run`] before the
+    /// transport starts — transports that must rebuild a worker node
+    /// (TCP auto-respawn) resolve through this name when present, so a
+    /// replacement runs the *same* algorithm. Leave `None`; the session
+    /// overwrites it.
+    pub algo_name: Option<String>,
     pub hp: HyperParams,
     /// Number of synchronous rounds.
     pub iters: usize,
@@ -47,6 +59,16 @@ pub struct TrainSpec {
     pub participation: Participation,
     /// What stands in for a worker that sat a round out.
     pub stale: StalePolicy,
+    /// Deterministic failure injection: a seeded crash/rejoin schedule
+    /// evaluated as a pure function of `(seed, round, slot)` — a downed
+    /// worker becomes an unselected slot in [`TrainSpec::round_mask`], so
+    /// every transport sees the identical failures (default: none).
+    pub fault: FaultPlan,
+    /// First round this run executes (rounds `0..start_round` are assumed
+    /// already folded into the node state). Set by
+    /// [`Session::resume_from`]; leave at 0 everywhere else — the session
+    /// overwrites it from the resume checkpoint.
+    pub start_round: usize,
     /// Threads for the master-side sharded reduction
     /// ([`crate::engine::reduce`]): the decode→average→compress pass is
     /// swept over fixed dimension shards on this many scoped OS threads.
@@ -69,9 +91,14 @@ impl TrainSpec {
     /// This round's participation mask for a fleet of `n` — the pure
     /// function of `(seed, round, n)` the engine, every transport, and
     /// every worker thread evaluate independently (and identically),
-    /// regardless of how many rounds are in flight.
+    /// regardless of how many rounds are in flight. Workers the
+    /// [`FaultPlan`] has down this round are cleared out of the mask, so
+    /// a crashed worker is exactly an unselected slot under the
+    /// [`StalePolicy`].
     pub fn round_mask(&self, round: usize, n: usize) -> Vec<bool> {
-        self.participation.mask(self.seed, round, n)
+        let mut mask = self.participation.mask(self.seed, round, n);
+        self.fault.overlay(self.seed, round, &mut mask);
+        mask
     }
 }
 
@@ -79,6 +106,7 @@ impl Default for TrainSpec {
     fn default() -> Self {
         Self {
             algo: AlgorithmKind::Dore,
+            algo_name: None,
             hp: HyperParams::paper_defaults(),
             iters: 500,
             minibatch: None,
@@ -86,6 +114,8 @@ impl Default for TrainSpec {
             seed: 42,
             participation: Participation::Full,
             stale: StalePolicy::Skip,
+            fault: FaultPlan::None,
+            start_round: 0,
             reduce_threads: 1,
             pipeline_depth: 1,
         }
@@ -145,6 +175,12 @@ pub struct Session<'p> {
     algo_name: Option<String>,
     transport: Box<dyn Transport>,
     observers: Vec<Box<dyn Observer>>,
+    /// `(cadence, path)`: write a [`Checkpoint`] after every `cadence`
+    /// completed rounds (the file is overwritten in place, atomically).
+    checkpoint: Option<(usize, PathBuf)>,
+    /// Restore state from this checkpoint before round
+    /// [`TrainSpec::start_round`].
+    resume: Option<PathBuf>,
 }
 
 impl<'p> Session<'p> {
@@ -158,6 +194,8 @@ impl<'p> Session<'p> {
             algo_name: None,
             transport: Box::new(InProc::new()),
             observers: Vec::new(),
+            checkpoint: None,
+            resume: None,
         }
     }
 
@@ -169,6 +207,8 @@ impl<'p> Session<'p> {
             algo_name: None,
             transport: Box::new(InProc::new()),
             observers: Vec::new(),
+            checkpoint: None,
+            resume: None,
         }
     }
 
@@ -224,6 +264,38 @@ impl<'p> Session<'p> {
         self
     }
 
+    /// Deterministic failure-injection schedule (default:
+    /// [`FaultPlan::None`]). See [`super::fault`].
+    pub fn fault(mut self, fault: FaultPlan) -> Self {
+        self.spec.fault = fault;
+        self
+    }
+
+    /// Write a checkpoint to `path` after every `every` completed rounds
+    /// (atomic overwrite — the file always holds the latest snapshot).
+    /// Requires a transport that can snapshot its workers at a round
+    /// boundary ([`InProc`] / [`super::SimNet`]). With
+    /// `pipeline_depth ≥ 2`, checkpoint rounds act as **pipeline drain
+    /// barriers** — the window empties before the snapshot — so enabling
+    /// checkpoints is part of the (still fully deterministic) schedule;
+    /// resume with the same cadence to reproduce the uninterrupted
+    /// trajectory. At depth 1 checkpointing never changes the trajectory.
+    pub fn checkpoint_every(mut self, every: usize, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some((every, path.into()));
+        self
+    }
+
+    /// Restore a [`Checkpoint`] and continue from its round. The spec
+    /// must match what the checkpoint was taken from (algorithm, seed,
+    /// dimension, fleet size — validated with actionable errors);
+    /// `iters` may be larger to extend a finished run. Works on every
+    /// transport: state is restored into the fleet before the transport
+    /// takes ownership.
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
     /// Reduce-thread count for the master-side sharded reduction
     /// (default: 1 = serial; `0` = all available cores). Bit-identical
     /// results for every value — see [`crate::engine::reduce`].
@@ -268,7 +340,15 @@ impl<'p> Session<'p> {
     /// transport and every pipeline depth; all transports yield
     /// bit-identical iterates at the same depth.
     pub fn run(self) -> anyhow::Result<RunMetrics> {
-        let Session { problem, spec, algo_name, mut transport, mut observers } = self;
+        let Session {
+            problem,
+            mut spec,
+            algo_name,
+            mut transport,
+            mut observers,
+            checkpoint,
+            resume,
+        } = self;
         let p = problem.get();
         let n = p.n_workers();
         let d = p.dim();
@@ -278,6 +358,27 @@ impl<'p> Session<'p> {
             "pipeline_depth must be ≥ 1 (1 = synchronous rounds), got 0"
         );
         spec.participation.validate(n)?;
+        spec.fault.validate(n)?;
+        if let Some((every, _)) = &checkpoint {
+            anyhow::ensure!(*every >= 1, "checkpoint cadence must be ≥ 1 round");
+            anyhow::ensure!(
+                transport.supports_checkpoint(),
+                "transport '{}' cannot write checkpoints: its self-paced workers race ahead \
+                 of the round boundary — run the checkpointing session on an inline \
+                 transport (inproc or simnet); resuming works on every transport",
+                transport.name()
+            );
+        }
+        if checkpoint.is_some() || resume.is_some() {
+            // the reuse-last replay caches (master-side frames + the
+            // workers' mirrors) are live state a checkpoint does not
+            // serialize, so a resumed run could not replay them exactly
+            anyhow::ensure!(
+                spec.stale == StalePolicy::Skip,
+                "checkpoint/resume requires StalePolicy::Skip: the reuse-last replay \
+                 caches are not part of a checkpoint"
+            );
+        }
         let eval_every = spec.eval_every.max(1);
         let depth = spec.pipeline_depth;
 
@@ -287,6 +388,53 @@ impl<'p> Session<'p> {
             Some(name) => registry::build_by_name(name, n, &x0, &spec.hp)?,
             None => registry::build_algorithm(spec.algo, n, &x0, &spec.hp)?,
         };
+        // resume: restore every node's state before the transport takes
+        // ownership of the fleet, then start the round loop at the
+        // checkpointed round — all stochastic sites are keyed by
+        // absolute round, so the tail replays the uninterrupted run
+        // bit-for-bit.
+        let start = match &resume {
+            None => 0,
+            Some(path) => {
+                let ck = Checkpoint::load(path)?;
+                anyhow::ensure!(
+                    ck.algo == display,
+                    "checkpoint was taken from algorithm '{}' but this session runs \
+                     '{display}'",
+                    ck.algo
+                );
+                anyhow::ensure!(
+                    ck.seed == spec.seed,
+                    "checkpoint seed {} does not match session seed {} — resuming would \
+                     not reproduce the trajectory",
+                    ck.seed,
+                    spec.seed
+                );
+                anyhow::ensure!(
+                    ck.n_workers as usize == n,
+                    "checkpoint captured {} workers but this problem declares {n}",
+                    ck.n_workers
+                );
+                anyhow::ensure!(
+                    ck.model.len() == d,
+                    "checkpoint model has dimension {} but this problem has {d}",
+                    ck.model.len()
+                );
+                let start = ck.round as usize;
+                anyhow::ensure!(
+                    start < spec.iters,
+                    "checkpoint is already at round {start}: nothing left of a \
+                     {}-round run (raise iters to extend it)",
+                    spec.iters
+                );
+                restore_nodes(&ck, master.as_mut(), &mut workers)?;
+                start
+            }
+        };
+        spec.start_round = start;
+        // stamp the resolved by-name algorithm (if any) so transports
+        // that rebuild nodes (TCP respawn) construct the same scheme
+        spec.algo_name = algo_name.clone();
         master.set_reduce_pool(ReducePool::new(spec.reduce_threads));
         if depth > 1 {
             // the staleness contract: every worker must accept gradients
@@ -296,6 +444,7 @@ impl<'p> Session<'p> {
             }
         }
         transport.start(workers, problem.shared(), &spec)?;
+        transport.sync_state(start, master.model());
 
         let info = RunInfo {
             algo: display,
@@ -312,24 +461,34 @@ impl<'p> Session<'p> {
         }
 
         let sw = Stopwatch::start();
-        let mut begun = 0usize;
-        // masks of the open rounds, oldest first (computed once per round,
-        // at begin time, and reused when the round completes)
-        let mut open_masks: std::collections::VecDeque<Vec<bool>> =
+        let mut begun = start;
+        // the open rounds, oldest first: each entry carries the mask
+        // (computed once, at begin time) and the round's staleness — how
+        // many downlinks the model its uplinks are computed against is
+        // missing (0 with a drained window, up to depth − 1 once full)
+        let mut open_rounds: std::collections::VecDeque<(Vec<bool>, usize)> =
             std::collections::VecDeque::with_capacity(depth);
-        for t in 0..spec.iters {
+        for t in start..spec.iters {
             // 1. top up the in-flight window: open the newest rounds so up
             //    to `depth` are outstanding before the oldest completes.
             //    Inline transports execute the masked worker steps here —
             //    against model state that lags by the pipeline depth.
-            while begun < spec.iters && begun < t + depth {
+            //    Checkpoint rounds are pipeline **drain barriers**: rounds
+            //    past the next checkpoint boundary stay unopened until the
+            //    boundary completes, so the snapshot captures a fully
+            //    synchronous state (a deterministic part of the schedule).
+            let barrier = match &checkpoint {
+                Some((every, _)) => (t + 1).div_ceil(*every) * *every - 1,
+                None => usize::MAX,
+            };
+            while begun < spec.iters && begun < t + depth && begun <= barrier {
                 let bmask = spec.round_mask(begun, n);
                 transport.begin_round(
                     begun,
                     RoundCtx { problem: p, spec: &spec, mask: &bmask },
                     Vec::new(),
                 )?;
-                open_masks.push_back(bmask);
+                open_rounds.push_back((bmask, begun - t));
                 begun += 1;
             }
             let in_flight = begun - t;
@@ -338,7 +497,8 @@ impl<'p> Session<'p> {
             //    Under partial participation the barrier waits only for the
             //    masked subset; the other slots carry a replayed stale
             //    frame (reuse-last), an injected stand-in, or nothing.
-            let mask = open_masks.pop_front().expect("completing round was begun");
+            let (mask, staleness) =
+                open_rounds.pop_front().expect("completing round was begun");
             let frames = loop {
                 let ctx = RoundCtx { problem: p, spec: &spec, mask: &mask };
                 match transport.poll_uplinks(t, ctx)? {
@@ -388,17 +548,43 @@ impl<'p> Session<'p> {
                 RoundCtx { problem: p, spec: &spec, mask: &mask },
             )?;
             let round_down_bits = n as u64 * bits_per_copy;
+            transport.sync_state(t + 1, master.model());
 
-            // 5. events + eval cadence.
+            // 5. recovery narration + events + eval cadence. Fault-plan
+            //    transitions are a pure function of the seed, so this
+            //    narration is identical on every transport; connection-
+            //    level faults a byte-moving transport observed drain into
+            //    the same stream.
+            let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+            if !spec.fault.is_none() {
+                for i in 0..n {
+                    if spec.fault.lost_at(spec.seed, t, i) {
+                        recoveries.push(RecoveryEvent::WorkerLost { round: t, worker: i });
+                    } else if spec.fault.rejoined_at(spec.seed, t, i) {
+                        recoveries.push(RecoveryEvent::WorkerRejoined { round: t, worker: i });
+                    }
+                }
+            }
+            for tf in transport.drain_faults() {
+                recoveries.push(if tf.rejoined {
+                    RecoveryEvent::WorkerRejoined { round: t, worker: tf.worker }
+                } else {
+                    RecoveryEvent::WorkerLost { round: t, worker: tf.worker }
+                });
+            }
+            for ev in &recoveries {
+                metrics.on_recovery(ev);
+                for o in observers.iter_mut() {
+                    o.on_recovery(ev);
+                }
+            }
             let worker_res = res_sum / participants.max(1) as f64;
             let master_res = master.last_compressed_norm();
             let rev = RoundEvent {
                 round: t,
                 participants,
                 in_flight,
-                // downlinks missing from the model the round-`t` uplinks
-                // were computed at, relative to a synchronous run
-                staleness: t.min(depth - 1),
+                staleness,
                 uplink_bits: round_up_bits,
                 downlink_bits: round_down_bits,
                 worker_residual_norm: worker_res,
@@ -425,6 +611,37 @@ impl<'p> Session<'p> {
                     o.on_eval(&eev);
                 }
             }
+
+            // 6. checkpoint cadence: the drain barrier above guarantees no
+            //    round beyond `t` is open, so worker state is exactly the
+            //    synchronous post-round-`t` state a resumed run rebuilds.
+            if let Some((every, path)) = &checkpoint {
+                if (t + 1) % every == 0 {
+                    debug_assert_eq!(begun, t + 1, "checkpoint barrier failed to drain");
+                    let mut aux: Vec<(String, Vec<F>)> = master
+                        .export_state()
+                        .into_iter()
+                        .map(|(name, v)| (format!("m.{name}"), v))
+                        .collect();
+                    for (i, st) in transport.export_worker_state()?.into_iter().enumerate() {
+                        aux.extend(st.into_iter().map(|(name, v)| (format!("w{i}.{name}"), v)));
+                    }
+                    Checkpoint {
+                        algo: display.to_string(),
+                        round: (t + 1) as u64,
+                        seed: spec.seed,
+                        n_workers: n as u64,
+                        model: master.model().to_vec(),
+                        aux,
+                    }
+                    .save(path)?;
+                    let ev = RecoveryEvent::CheckpointWritten { round: t + 1 };
+                    metrics.on_recovery(&ev);
+                    for o in observers.iter_mut() {
+                        o.on_recovery(&ev);
+                    }
+                }
+            }
         }
         transport.finish()?;
 
@@ -432,7 +649,7 @@ impl<'p> Session<'p> {
         // the summary reuses those totals rather than keeping a second
         // accumulator that could drift from what observers saw.
         let summary = RunSummary {
-            total_rounds: spec.iters,
+            total_rounds: spec.iters - start,
             uplink_bits: metrics.uplink_bits,
             downlink_bits: metrics.downlink_bits,
             wall_seconds: sw.seconds(),
@@ -444,6 +661,48 @@ impl<'p> Session<'p> {
         }
         Ok(metrics)
     }
+}
+
+/// Split a checkpoint's flat aux list (`m.*` master / `w<i>.*` worker
+/// entries) into per-node groups and restore them, validating names and
+/// shapes with actionable errors.
+fn restore_nodes(
+    ck: &Checkpoint,
+    master: &mut dyn MasterNode,
+    workers: &mut [Box<dyn WorkerNode>],
+) -> anyhow::Result<()> {
+    let n = workers.len();
+    let mut master_aux: Vec<(String, Vec<F>)> = Vec::new();
+    let mut worker_aux: Vec<Vec<(String, Vec<F>)>> = (0..n).map(|_| Vec::new()).collect();
+    for (name, v) in &ck.aux {
+        if let Some(rest) = name.strip_prefix("m.") {
+            master_aux.push((rest.to_string(), v.clone()));
+        } else if let Some(rest) = name.strip_prefix('w') {
+            let (idx, field) = rest
+                .split_once('.')
+                .ok_or_else(|| anyhow::anyhow!("malformed aux entry '{name}' in checkpoint"))?;
+            let i: usize = idx
+                .parse()
+                .map_err(|_| anyhow::anyhow!("malformed aux entry '{name}' in checkpoint"))?;
+            anyhow::ensure!(
+                i < n,
+                "checkpoint aux entry '{name}' names worker {i} but the fleet has {n}"
+            );
+            worker_aux[i].push((field.to_string(), v.clone()));
+        } else {
+            anyhow::bail!(
+                "unrecognized aux entry '{name}' in checkpoint (expected 'm.*' or 'w<i>.*')"
+            );
+        }
+    }
+    master
+        .import_state(&ck.model, &master_aux)
+        .map_err(|e| anyhow::anyhow!("restoring master state: {e}"))?;
+    for (i, (w, aux)) in workers.iter_mut().zip(worker_aux.iter()).enumerate() {
+        w.import_state(&ck.model, aux)
+            .map_err(|e| anyhow::anyhow!("restoring worker {i} state: {e}"))?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -616,5 +875,88 @@ mod tests {
         let m = Session::new(&p).spec(spec).run().unwrap();
         assert_eq!(m.max_in_flight, 1);
         assert_eq!(m.stale_uplink_rounds, 0);
+    }
+
+    #[test]
+    fn fault_plan_crash_window_is_narrated_and_replays() {
+        use crate::engine::fault::{FaultPlan, FaultWindow};
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let plan = FaultPlan::Scripted(vec![FaultWindow {
+            worker: 1,
+            crash_at: 3,
+            rejoin_at: Some(7),
+        }]);
+        let spec = TrainSpec { iters: 12, eval_every: 4, fault: plan, ..Default::default() };
+        let a = Session::new(&p).spec(spec.clone()).run().unwrap();
+        let b = Session::new(&p).spec(spec).run().unwrap();
+        assert_eq!(a.loss, b.loss, "faulted run must replay bit-for-bit");
+        assert_eq!(a.workers_lost, 1);
+        assert_eq!(a.workers_rejoined, 1);
+        // 4 rounds of outage × 1 worker: that many uplinks never happen
+        assert_eq!(a.participant_uplinks, (12 * 3 - 4) as u64);
+    }
+
+    #[test]
+    fn invalid_fault_plan_is_rejected_up_front() {
+        use crate::engine::fault::{FaultPlan, FaultWindow};
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let err = Session::new(&p)
+            .fault(FaultPlan::Scripted(vec![FaultWindow {
+                worker: 9,
+                crash_at: 0,
+                rejoin_at: None,
+            }]))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("fleet has 3"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_requires_an_inline_transport() {
+        let p = linreg_problem(60, 10, 3, 0.1, 5);
+        let err = Session::new(&p)
+            .spec(TrainSpec { iters: 4, ..Default::default() })
+            .transport(Threaded::new())
+            .checkpoint_every(2, std::env::temp_dir().join("dore-never-written.ckpt"))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("inproc or simnet"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_resume_replays_the_tail_bit_for_bit() {
+        let dir = std::env::temp_dir().join(format!("dore-session-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = dir.join("state.ckpt");
+        let p = linreg_problem(80, 12, 3, 0.1, 5);
+        let spec = TrainSpec { iters: 20, eval_every: 2, ..Default::default() };
+        // the uninterrupted reference (depth 1: checkpointing is
+        // trajectory-neutral, so no cadence needed here)
+        let full = Session::new(&p).spec(spec.clone()).run().unwrap();
+        // "killed at round 10": run half, snapshotting at the end
+        let half = Session::new(&p)
+            .spec(TrainSpec { iters: 10, ..spec.clone() })
+            .checkpoint_every(10, &ck)
+            .run()
+            .unwrap();
+        assert_eq!(half.checkpoints_written, 1);
+        // restore into a fresh session and run the tail
+        let resumed = Session::new(&p).spec(spec).resume_from(&ck).run().unwrap();
+        assert_eq!(resumed.total_rounds, 10);
+        // the resumed evals are exactly the full run's tail
+        let tail: Vec<(usize, f64)> = full
+            .rounds
+            .iter()
+            .copied()
+            .zip(full.loss.iter().copied())
+            .filter(|(r, _)| *r >= 10)
+            .collect();
+        let got: Vec<(usize, f64)> =
+            resumed.rounds.iter().copied().zip(resumed.loss.iter().copied()).collect();
+        assert_eq!(got, tail, "resumed trajectory diverged from the uninterrupted run");
+        // wire accounting splits exactly across the kill point
+        assert_eq!(half.uplink_bits + resumed.uplink_bits, full.uplink_bits);
+        assert_eq!(half.downlink_bits + resumed.downlink_bits, full.downlink_bits);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

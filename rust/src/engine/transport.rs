@@ -202,6 +202,54 @@ pub trait Transport: Send {
     fn simulated_seconds(&self) -> Option<f64> {
         None
     }
+
+    /// Whether this transport can snapshot its worker fleet at a
+    /// completed round boundary ([`super::Session::checkpoint_every`]).
+    /// Inline transports can; self-paced fleets (threads/sockets) race
+    /// ahead of the boundary, so the default is `false` and the session
+    /// fails checkpoint configuration up front with an actionable error.
+    fn supports_checkpoint(&self) -> bool {
+        false
+    }
+
+    /// Snapshot every worker's recovery state
+    /// ([`WorkerNode::export_state`]), ordered by worker id. The engine
+    /// calls this only at a drained round boundary (no rounds in
+    /// flight), so the snapshot is exactly the state a fresh fleet would
+    /// reach by replaying rounds `0..round`.
+    fn export_worker_state(&mut self) -> anyhow::Result<Vec<Vec<(String, Vec<F>)>>> {
+        anyhow::bail!(
+            "transport '{}' cannot snapshot its workers: self-paced fleets race ahead of \
+             the round boundary; checkpointing needs an inline transport (inproc or simnet)",
+            self.name()
+        )
+    }
+
+    /// Offer the master's iterate after round `next_round − 1` as
+    /// recovery-sync material (the engine calls this before round
+    /// `start` and after every completed round). Byte-moving transports
+    /// keep a copy to replay to a rejoining worker; the default ignores
+    /// it.
+    fn sync_state(&mut self, _next_round: usize, _model: &[F]) {}
+
+    /// Connection-level fault transitions observed since the last call
+    /// (losses and reconnects a byte-moving transport noticed on its
+    /// sockets). The engine drains this once per completed round and
+    /// narrates the transitions as [`super::RecoveryEvent`]s. Default:
+    /// nothing to report.
+    fn drain_faults(&mut self) -> Vec<TransportFault> {
+        Vec::new()
+    }
+}
+
+/// One connection-level fault transition a transport observed (see
+/// [`Transport::drain_faults`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransportFault {
+    pub worker: usize,
+    /// `false` = the connection was lost; `true` = a (replacement)
+    /// worker re-registered.
+    pub rejoined: bool,
 }
 
 /// One worker-side round step, shared by every transport so the stochastic
@@ -288,8 +336,11 @@ pub(crate) struct RoundWindow {
 }
 
 impl RoundWindow {
-    pub(crate) fn reset(&mut self) {
-        self.next_begin = 0;
+    /// Reset for a run starting at `start` (0 for a fresh run; the
+    /// checkpoint round when resuming — see
+    /// [`super::TrainSpec::start_round`]).
+    pub(crate) fn reset(&mut self, start: usize) {
+        self.next_begin = start;
         self.injected.clear();
     }
 
@@ -357,6 +408,68 @@ pub(crate) fn absent_slot_frame(
         residual_norm: 0.0,
         compute_seconds: 0.0,
     })
+}
+
+/// The I/O half of a self-paced worker: how one downlink is received and
+/// applied, and how one uplink leaves. Implemented over mpsc channels
+/// ([`Threaded`]) and sockets ([`crate::coordinator::tcp::TcpTransport`])
+/// so the *schedule* itself — [`WorkerSchedule::run`] — lives in exactly
+/// one place and the transports cannot drift apart.
+pub(crate) trait WorkerLink {
+    fn apply(&mut self, node: &mut dyn WorkerNode, round: usize) -> anyhow::Result<()>;
+    fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()>;
+}
+
+/// The self-paced round schedule shared by the byte-moving transports:
+/// compute round `k` after applying downlink `k − depth` (the pipelined
+/// staleness contract), then drain the tail so the final model copy
+/// agrees with the master's. `start > 0` resumes mid-schedule (checkpoint
+/// restore / reconnect sync — state through `start − 1` is already in the
+/// node); `crash_at` aborts just before the given round (chaos
+/// injection). `run` returns `false` when the crash knob fired.
+pub(crate) struct WorkerSchedule<'a> {
+    pub n: usize,
+    pub id: usize,
+    pub start: usize,
+    pub crash_at: Option<usize>,
+    pub problem: &'a dyn Problem,
+    pub spec: &'a TrainSpec,
+}
+
+impl WorkerSchedule<'_> {
+    pub(crate) fn run(
+        &self,
+        node: &mut dyn WorkerNode,
+        link: &mut dyn WorkerLink,
+    ) -> anyhow::Result<bool> {
+        let spec = self.spec;
+        let depth = spec.pipeline_depth.max(1);
+        let start = self.start;
+        let mut grad = vec![0.0 as F; self.problem.dim()];
+        let mut driver = WorkerRoundDriver::new(spec, self.n);
+        for k in start..spec.iters {
+            if self.crash_at == Some(k) {
+                return Ok(false);
+            }
+            // the round-k uplink is computed against the model with
+            // downlinks through k − depth applied — the pipelined
+            // staleness contract
+            if k >= start + depth {
+                link.apply(node, k - depth)?;
+            }
+            if let Some((bytes, residual_norm)) =
+                driver.round(node, self.problem, spec, k, self.id, &mut grad)
+            {
+                link.send(k, bytes, residual_norm)?;
+            }
+        }
+        // drain the tail so every downlink is applied and the final model
+        // copies agree with the master's
+        for t in spec.iters.saturating_sub(depth).max(start)..spec.iters {
+            link.apply(node, t)?;
+        }
+        Ok(true)
+    }
 }
 
 /// Worker-side partial-participation driver shared by the thread- and
@@ -454,12 +567,12 @@ impl Transport for InProc {
         &mut self,
         workers: Vec<Box<dyn WorkerNode>>,
         _shared_problem: Option<Arc<dyn Problem>>,
-        _spec: &TrainSpec,
+        spec: &TrainSpec,
     ) -> anyhow::Result<()> {
         self.cache = (0..workers.len()).map(|_| None).collect();
         self.workers = workers;
         self.ready.clear();
-        self.next_begin = 0;
+        self.next_begin = spec.start_round;
         Ok(())
     }
 
@@ -572,6 +685,14 @@ impl Transport for InProc {
     fn finish(&mut self) -> anyhow::Result<()> {
         Ok(())
     }
+
+    fn supports_checkpoint(&self) -> bool {
+        true
+    }
+
+    fn export_worker_state(&mut self) -> anyhow::Result<Vec<Vec<(String, Vec<F>)>>> {
+        Ok(self.workers.iter().map(|w| w.export_state()).collect())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -620,6 +741,32 @@ impl Threaded {
     }
 }
 
+/// [`WorkerLink`] over std mpsc channels.
+struct ChannelLink<'a> {
+    id: usize,
+    to_master: &'a Sender<UplinkMsg>,
+    from_master: &'a Receiver<DownlinkMsg>,
+}
+
+impl WorkerLink for ChannelLink<'_> {
+    fn apply(&mut self, node: &mut dyn WorkerNode, round: usize) -> anyhow::Result<()> {
+        let down = self
+            .from_master
+            .recv()
+            .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
+        anyhow::ensure!(down.round == round, "round skew: worker {round} got {}", down.round);
+        let payload = codec::decode(&down.bytes)?;
+        node.apply_downlink(round, &payload);
+        Ok(())
+    }
+
+    fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()> {
+        self.to_master
+            .send(UplinkMsg { worker: self.id, round, bytes, residual_norm })
+            .map_err(|_| anyhow::anyhow!("master hung up"))
+    }
+}
+
 fn threaded_worker_loop(
     id: usize,
     n: usize,
@@ -629,41 +776,19 @@ fn threaded_worker_loop(
     to_master: Sender<UplinkMsg>,
     from_master: Receiver<DownlinkMsg>,
 ) -> anyhow::Result<()> {
-    fn recv_apply(
-        from_master: &Receiver<DownlinkMsg>,
-        node: &mut dyn WorkerNode,
-        round: usize,
-    ) -> anyhow::Result<()> {
-        let down = from_master
-            .recv()
-            .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
-        anyhow::ensure!(down.round == round, "round skew: worker {round} got {}", down.round);
-        let payload = codec::decode(&down.bytes)?;
-        node.apply_downlink(round, &payload);
-        Ok(())
-    }
-    let depth = spec.pipeline_depth.max(1);
-    let mut grad = vec![0.0 as F; problem.dim()];
-    let mut driver = WorkerRoundDriver::new(&spec, n);
-    for k in 0..spec.iters {
-        // the round-k uplink is computed against the model with downlinks
-        // through k − depth applied — the pipelined staleness contract
-        if k >= depth {
-            recv_apply(&from_master, node.as_mut(), k - depth)?;
-        }
-        if let Some((bytes, residual_norm)) =
-            driver.round(node.as_mut(), problem.as_ref(), &spec, k, id, &mut grad)
-        {
-            to_master
-                .send(UplinkMsg { worker: id, round: k, bytes, residual_norm })
-                .map_err(|_| anyhow::anyhow!("master hung up"))?;
-        }
-    }
-    // drain the tail so every downlink is applied and the fleet's final
-    // model copies agree with the master's
-    for t in spec.iters.saturating_sub(depth)..spec.iters {
-        recv_apply(&from_master, node.as_mut(), t)?;
-    }
+    let schedule = WorkerSchedule {
+        n,
+        id,
+        // a resumed run starts mid-schedule: state through round
+        // start − 1 is already folded into the restored node
+        start: spec.start_round,
+        crash_at: None,
+        problem: problem.as_ref(),
+        spec: &spec,
+    };
+    let mut link = ChannelLink { id, to_master: &to_master, from_master: &from_master };
+    let completed = schedule.run(node.as_mut(), &mut link)?;
+    debug_assert!(completed, "threaded workers have no crash knob");
     Ok(())
 }
 
@@ -688,7 +813,7 @@ impl Transport for Threaded {
         self.byte_cache = (0..self.n).map(|_| None).collect();
         self.parked.clear();
         self.mask_memo.clear();
-        self.window.reset();
+        self.window.reset(spec.start_round);
         let n = self.n;
         let depth = spec.pipeline_depth.max(1);
         let (up_tx, up_rx) = std::sync::mpsc::channel::<UplinkMsg>();
@@ -945,6 +1070,21 @@ impl Transport for SimNet {
         let Some(frames) = self.inner.poll_uplinks(round, ctx)? else {
             return Ok(None);
         };
+        // a worker rejoining after a fault-plan outage pays a reconnect
+        // handshake plus a full model replay over the master's egress
+        // before its uplinks count again
+        if !ctx.spec.fault.is_none() {
+            let rejoined = (0..n)
+                .filter(|&i| ctx.spec.fault.rejoined_at(ctx.spec.seed, round, i))
+                .count();
+            if rejoined > 0 {
+                let model_bits = 32 * ctx.problem.dim() as u64;
+                self.net
+                    .as_mut()
+                    .expect("started before poll_uplinks")
+                    .reconnect(rejoined, model_bits);
+            }
+        }
         // the barrier waits for the slowest *selected* worker, not the
         // fleet-wide straggler — the inline loop runs workers
         // sequentially, so fold the per-worker readiness times (measured
@@ -999,6 +1139,14 @@ impl Transport for SimNet {
 
     fn simulated_seconds(&self) -> Option<f64> {
         self.net.as_ref().map(|n| n.clock_s)
+    }
+
+    fn supports_checkpoint(&self) -> bool {
+        true
+    }
+
+    fn export_worker_state(&mut self) -> anyhow::Result<Vec<Vec<(String, Vec<F>)>>> {
+        self.inner.export_worker_state()
     }
 }
 

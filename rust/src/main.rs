@@ -18,7 +18,7 @@ use dore::comm::StragglerSpec;
 use dore::config::{parse_prox, parse_schedule, JobConfig, ProblemConfig};
 use dore::coordinator::tcp::TcpTransport;
 use dore::data::synth;
-use dore::engine::{Participation, Session, SimNet, StalePolicy, Threaded, TrainSpec};
+use dore::engine::{FaultPlan, Participation, Session, SimNet, StalePolicy, Threaded, TrainSpec};
 use dore::harness::{characterize_round, compare, simulated_iteration_time};
 use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
@@ -142,6 +142,12 @@ fn print_run_summary(m: &dore::metrics::RunMetrics, workers: usize) {
             m.max_in_flight, m.stale_uplink_rounds
         );
     }
+    if m.workers_lost + m.workers_rejoined + m.checkpoints_written > 0 {
+        println!(
+            "recovery: {} workers lost, {} rejoined, {} checkpoints written",
+            m.workers_lost, m.workers_rejoined, m.checkpoints_written
+        );
+    }
     if let Some(rho) = m.empirical_rate(1e-9) {
         println!("empirical per-round contraction rho = {rho:.5}");
     }
@@ -152,6 +158,8 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
              [--alpha F --beta F --eta F --compressor SPEC --prox SPEC
               --schedule SPEC --workers N --minibatch N --eval-every N
               --seed N --participation full|k:<K>|dropout:<p> --stale skip|reuse
+              --fault none|rand:<p>:<outage>|crash:<w>@<r>[..<rejoin>],...
+              --checkpoint-every K [--checkpoint-path FILE] --resume FILE
               --reduce-threads N (master-side sharded reduction; 0 = all cores)
               --pipeline-depth D (in-flight rounds per link; 1 = synchronous)
               --transport inproc|threads|tcp|simnet
@@ -214,6 +222,11 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     if let Some(s) = f.get("stale") {
         spec.stale = s.parse::<StalePolicy>()?;
     }
+    // deterministic failure injection: a seeded crash/rejoin schedule —
+    // a pure function of (seed, round, slot), identical on every transport
+    if let Some(s) = f.get("fault") {
+        spec.fault = s.parse::<FaultPlan>()?;
+    }
     // master-side sharded reduction: thread count only — results are
     // bit-identical for every value (0 = all available cores)
     spec.reduce_threads = f.num("reduce-threads", 1)?;
@@ -235,7 +248,16 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
         f.get("straggler").is_none() || transport == "simnet",
         "--straggler models simulated network time and requires --transport simnet"
     );
-    let session = Session::shared(prob).spec(spec);
+    let mut session = Session::shared(prob).spec(spec);
+    // checkpoint cadence (inline transports) + resume (any transport);
+    // see the README fault-tolerance section for the semantics
+    if let Some(k) = f.get("checkpoint-every") {
+        let every: usize = k.parse().map_err(|e| anyhow::anyhow!("--checkpoint-every {k}: {e}"))?;
+        session = session.checkpoint_every(every, f.get("checkpoint-path").unwrap_or("dore.ckpt"));
+    }
+    if let Some(path) = f.get("resume") {
+        session = session.resume_from(path);
+    }
     let metrics = match transport {
         "inproc" => session.run()?,
         "threads" => session.transport(Threaded::new()).run()?,

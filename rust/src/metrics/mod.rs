@@ -39,6 +39,13 @@ pub struct RunMetrics {
     pub stale_uplink_rounds: u64,
     /// Cumulative downlink bits (broadcast counted once per worker).
     pub downlink_bits: u64,
+    /// Workers that left the round schedule (fault-plan crashes plus
+    /// connection losses a transport observed).
+    pub workers_lost: u64,
+    /// Workers that re-entered the schedule after an outage.
+    pub workers_rejoined: u64,
+    /// Checkpoints written by the session's `checkpoint_every` cadence.
+    pub checkpoints_written: u64,
     /// Rounds actually executed.
     pub total_rounds: usize,
     /// Wall-clock seconds of the whole run.

@@ -108,3 +108,70 @@ fn tcp_pipelined_rounds_match_inproc() {
         assert_eq!(tcp.max_in_flight, depth);
     }
 }
+
+/// Kill a worker thread mid-run (the chaos knob drops its socket exactly
+/// like `kill -9` on a worker process) and verify the reconnect path: the
+/// loss is reported, a respawned replacement re-registers through the
+/// hello/sync handshake, the run completes every round, and `finish`
+/// verifies every surviving worker's final model digest against the
+/// master's — the final-model-sync assertion.
+#[test]
+fn tcp_worker_crash_reconnects_and_resyncs_the_fleet() {
+    if !enabled("tcp_worker_crash_reconnects_and_resyncs_the_fleet") {
+        return;
+    }
+    let p = Arc::new(linreg_problem(60, 12, 3, 0.1, 9));
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters: 14,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let m = Session::shared(p.clone())
+        .spec(spec.clone())
+        .transport(TcpTransport::new().respawn_lost(true).crash_worker(1, 5))
+        .run()
+        .unwrap();
+    assert_eq!(m.total_rounds, 14, "run did not complete after the crash");
+    assert_eq!(m.workers_lost, 1, "loss was not narrated");
+    assert_eq!(m.workers_rejoined, 1, "rejoin was not narrated");
+    assert!(m.loss.iter().all(|l| l.is_finite()), "recovery produced non-finite loss");
+    // a crash-free run over the same spec stays bit-identical to inproc
+    // (the fault machinery is inert on a healthy fleet)
+    let healthy = Session::shared(p.clone())
+        .spec(spec.clone())
+        .transport(TcpTransport::new())
+        .run()
+        .unwrap();
+    let inproc = Session::shared(p).spec(spec).run().unwrap();
+    assert_eq!(healthy.loss, inproc.loss);
+    assert_eq!(healthy.workers_lost, 0);
+}
+
+/// A lost worker with no replacement fails the run loudly after the
+/// reconnect timeout instead of hanging the poll loop forever.
+#[test]
+fn tcp_lost_worker_times_out_with_actionable_error() {
+    if !enabled("tcp_lost_worker_times_out_with_actionable_error") {
+        return;
+    }
+    let p = Arc::new(linreg_problem(40, 8, 2, 0.1, 7));
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters: 10,
+        eval_every: 5,
+        ..Default::default()
+    };
+    let err = Session::shared(p)
+        .spec(spec)
+        .transport(
+            TcpTransport::new()
+                .crash_worker(0, 3)
+                .reconnect_timeout(std::time::Duration::from_millis(300)),
+        )
+        .run()
+        .unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("lost at round"), "unhelpful error: {msg}");
+    assert!(msg.contains("respawn_lost"), "unhelpful error: {msg}");
+}
