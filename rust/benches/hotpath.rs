@@ -28,6 +28,7 @@ use dore::models::linalg;
 use std::fmt::Write as _;
 
 /// Median-of-N timing.
+#[allow(clippy::disallowed_methods)] // benches measure wall-clock by definition
 fn bench<F: FnMut()>(name: &str, bytes_per_iter: Option<u64>, reps: usize, mut f: F) -> f64 {
     // warmup
     f();
@@ -86,7 +87,8 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .cloned();
 
-    println!("=== hot-path microbenches (median of 9{}) ===\n", if quick { ", --quick" } else { "" });
+    let quick_tag = if quick { ", --quick" } else { "" };
+    println!("=== hot-path microbenches (median of 9{quick_tag}) ===\n");
     let d = 1 << 20; // 1M coords = 4 MB
     let mut rng = Xoshiro256::seed_from_u64(1);
     let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();

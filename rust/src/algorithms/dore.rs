@@ -224,6 +224,7 @@ impl MasterNode for DoreMaster {
                 *sq = acc;
             });
         }
+        // lint:allow(float_fold, folds shard partials in slot order; shard count is thread-independent)
         self.last_norm = qsq.iter().sum::<f64>().sqrt();
         // line 19 — the model-residual downlink, compressed over the same
         // shards (identical payload + RNG stream as the serial compress).

@@ -150,9 +150,11 @@ impl MasterNode for DsMaster {
                 for m in uplinks.iter().flatten() {
                     m.add_scaled_range_into(inv, lo, vc);
                 }
+                // lint:allow(float_fold, per-shard partial inside the ReducePool fixed-shard fold)
                 *sq = vc.iter().map(|&x| (x as f64) * (x as f64)).sum();
             });
         }
+        // lint:allow(float_fold, folds shard partials in slot order; shard count is thread-independent)
         self.last_norm = vsq.iter().sum::<f64>().sqrt();
         // the downlink, compressed over the same shards (bit-identical
         // payload + RNG stream to the serial compress)

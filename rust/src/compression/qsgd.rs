@@ -33,6 +33,7 @@ impl Compressor for QsgdQuantizer {
         let mut norms = Vec::with_capacity(nblocks);
         let mut levels = vec![0i8; dim];
         for (b, block) in x.chunks(self.block_size).enumerate() {
+            // lint:allow(float_fold, sequential over one contiguous block; order fixed by slice layout)
             let norm = block.iter().map(|&v| v * v).sum::<F>().sqrt();
             norms.push(norm);
             if norm == 0.0 {

@@ -35,6 +35,7 @@ impl Compressor for SignSgd {
         for (block, tchunk) in x.chunks(self.block_size).zip(trits.chunks_mut(self.block_size)) {
             // scale = mean |x| makes sign(x)·scale the least-squares 1-bit
             // approximation of the block
+            // lint:allow(float_fold, sequential over one contiguous block; order fixed by slice layout)
             let scale = block.iter().map(|v| v.abs()).sum::<F>() / block.len() as F;
             norms.push(scale);
             if scale == 0.0 {

@@ -62,12 +62,13 @@ use crate::engine::{
 };
 use crate::models::Problem;
 use crate::F;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+// lint:allow(wall_clock, socket poll/reconnect deadlines only; timeouts never feed the trajectory)
 use std::time::{Duration, Instant};
 
 const KIND_UPLINK: u8 = 0;
@@ -398,12 +399,13 @@ pub struct TcpTransport {
     model_sync: Option<(usize, Vec<F>)>,
     pending: Option<Pending>,
     faults: Vec<TransportFault>,
-    lost_since: HashMap<usize, Instant>,
+    // lint:allow(wall_clock, reconnect-timeout bookkeeping; never feeds the trajectory)
+    lost_since: BTreeMap<usize, Instant>,
     /// Auto-respawn attempts per worker (bounded — a replacement that
     /// keeps dying must not crash-loop forever).
-    respawns: HashMap<usize, usize>,
+    respawns: BTreeMap<usize, usize>,
     respawn: bool,
-    crash_at: HashMap<usize, usize>,
+    crash_at: BTreeMap<usize, usize>,
     poll_wait: Duration,
     reconnect_timeout: Duration,
     spec: Option<TrainSpec>,
@@ -428,10 +430,10 @@ impl TcpTransport {
             model_sync: None,
             pending: None,
             faults: Vec::new(),
-            lost_since: HashMap::new(),
-            respawns: HashMap::new(),
+            lost_since: BTreeMap::new(),
+            respawns: BTreeMap::new(),
             respawn: false,
-            crash_at: HashMap::new(),
+            crash_at: BTreeMap::new(),
             poll_wait: Duration::from_millis(10),
             reconnect_timeout: Duration::from_secs(30),
             spec: None,
@@ -546,11 +548,13 @@ impl TcpTransport {
 
     /// Record a dead connection: discard its replay cache, report the
     /// fault, optionally spawn a local replacement.
+    #[allow(clippy::disallowed_methods)] // wall-clock: reconnect-timeout bookkeeping only
     fn mark_lost(&mut self, id: usize) -> anyhow::Result<()> {
         if let Some(conn) = self.conns[id].take() {
             close_conn(conn);
         }
         self.byte_cache[id] = None;
+        // lint:allow(wall_clock, reconnect-timeout start mark; never feeds the trajectory)
         self.lost_since.insert(id, Instant::now());
         self.faults.push(TransportFault { worker: id, rejoined: false });
         if self.respawn {
@@ -682,6 +686,7 @@ impl Transport for TcpTransport {
         self.window.begin(round, self.conns.len(), ctx.mask, ctx.spec.stale, inject)
     }
 
+    #[allow(clippy::disallowed_methods)] // wall-clock: nonblocking-poll deadlines only
     fn poll_uplinks(
         &mut self,
         round: usize,
@@ -696,6 +701,7 @@ impl Transport for TcpTransport {
             _ => Pending { round, slots: (0..n).map(|_| None).collect(), got: 0 },
         };
         let expected = mask.iter().filter(|&&m| m).count();
+        // lint:allow(wall_clock, nonblocking-poll deadline; bounds the wait, never the result)
         let deadline = Instant::now() + self.poll_wait;
         // only selected workers transmit this round; absentees' slots are
         // filled at assembly. Workers emit uplinks in round order, so the
@@ -743,6 +749,7 @@ impl Transport for TcpTransport {
             if pending.got >= expected {
                 break;
             }
+            // lint:allow(wall_clock, nonblocking-poll deadline check; engine re-polls)
             if Instant::now() >= deadline {
                 // nonblocking contract: not resolvable yet — park the
                 // partial assembly, the engine yields and re-polls

@@ -90,6 +90,8 @@
 //! ```
 
 pub mod fault;
+#[cfg(test)]
+mod modelcheck;
 pub mod observer;
 pub mod participation;
 pub mod protocol;

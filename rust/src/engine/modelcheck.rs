@@ -1,0 +1,401 @@
+//! Exhaustive-interleaving model checking for the pipelined round engine —
+//! the components whose race-freedom previously rested on hand-reasoning:
+//!
+//! * the [`WorkerSchedule`]/[`WorkerLink`] pairing: every self-paced worker
+//!   executes [`schedule_steps`] against a bounded downlink queue
+//!   (`sync_channel(depth)` in [`Threaded`], socket buffers in TCP) while
+//!   the master gathers uplinks and pushes downlinks at most `depth`
+//!   rounds ahead;
+//! * [`RoundWindow`] in-flight ordering: rounds open strictly in order,
+//!   polls only touch opened rounds, injected stand-ins are consumed
+//!   exactly once.
+//!
+//! This is a loom-style checker in pure std (the repo builds with zero
+//! third-party deps, so no `loom` crate): the system below is modeled as
+//! interleaved atomic steps — one per blocking channel operation — and a
+//! memoized DFS visits **every** reachable interleaving, asserting at each
+//! state that (a) a blocked system is never stuck (deadlock-freedom),
+//! (b) each worker consumes downlinks strictly in round order, and
+//! (c) termination always lands with all queues drained and every round
+//! begun, polled, and pushed exactly once. Crucially, the worker side
+//! replays the *shipped* [`schedule_steps`] sequence — the logic under
+//! test is the production schedule, not a re-derivation of it.
+//!
+//! The state space is tiny by construction (n ≤ 3, iters ≤ 5, depth ≤ 3)
+//! but covers the regimes that matter: depth 1 (classic synchronous),
+//! depth ≥ 2 (overlapped in-flight rounds), depth > iters (tail-drain
+//! only), and partial participation (unselected workers send nothing, so
+//! the master must not wait on them).
+
+use super::transport::{schedule_steps, ScheduleStep};
+use std::collections::BTreeSet;
+
+/// A participation mask as a pure function of `(round, worker)`, mirroring
+/// `TrainSpec::round_mask` being a pure function of the round.
+type MaskFn = fn(usize, usize) -> bool;
+
+fn full(_r: usize, _w: usize) -> bool {
+    true
+}
+
+/// Partial participation with at least one worker per round (the engine
+/// never opens a zero-uploader round).
+fn alternating(r: usize, w: usize) -> bool {
+    w == 0 || (r + w) % 2 == 0
+}
+
+/// One system configuration to exhaust.
+struct Model {
+    n: usize,
+    iters: usize,
+    depth: usize,
+    mask: MaskFn,
+    /// Per-worker shipped schedule ([`schedule_steps`]).
+    steps: Vec<Vec<ScheduleStep>>,
+}
+
+impl Model {
+    fn new(n: usize, iters: usize, depth: usize, mask: MaskFn) -> Self {
+        let steps = (0..n).map(|_| schedule_steps(0, iters, depth, None)).collect();
+        Self { n, iters, depth: depth.max(1), mask, steps }
+    }
+
+    /// Has worker `w` finished its `Round(r)` step at progress `wstep`?
+    fn round_done(&self, w: usize, wstep: usize, r: usize) -> bool {
+        self.steps[w]
+            .iter()
+            .take(wstep)
+            .any(|s| *s == ScheduleStep::Round(r))
+    }
+}
+
+/// One interleaving state. Master progress is `(begun, polled, pushing,
+/// pushed)`; `pushing` models the sequential blocking sends of
+/// `push_downlink` (the master can be parked mid-broadcast on one full
+/// queue while later workers still wait — exactly the partial-broadcast
+/// regime a coarse atomic model would miss).
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+struct State {
+    begun: usize,
+    polled: usize,
+    /// `Some((round, next worker index))` while mid-broadcast.
+    pushing: Option<(usize, usize)>,
+    pushed: usize,
+    /// Per-worker index into its step sequence.
+    wstep: Vec<usize>,
+    /// Per-worker FIFO downlink queue (front = index 0), capacity `depth`.
+    queues: Vec<Vec<usize>>,
+}
+
+impl State {
+    fn initial(n: usize) -> Self {
+        Self {
+            begun: 0,
+            polled: 0,
+            pushing: None,
+            pushed: 0,
+            wstep: vec![0; n],
+            queues: vec![Vec::new(); n],
+        }
+    }
+}
+
+/// All states reachable in one enabled step. Empty ⇒ nothing can move.
+fn successors(m: &Model, s: &State) -> Vec<State> {
+    let mut out = Vec::new();
+
+    // master: open the next round (bookkeeping; the engine keeps at most
+    // `depth` rounds in flight between begin and push)
+    if s.begun < m.iters && s.begun < s.pushed + m.depth {
+        let mut t = s.clone();
+        t.begun += 1;
+        out.push(t);
+    }
+    // master: the gather for round `polled` resolves once every selected
+    // worker's uplink for it is in (absentees contribute no frame — the
+    // Skip stand-in is assembled locally, never awaited)
+    if s.pushing.is_none() && s.polled < s.begun {
+        let r = s.polled;
+        let ready = (0..m.n)
+            .all(|w| !(m.mask)(r, w) || m.round_done(w, s.wstep[w], r));
+        if ready {
+            let mut t = s.clone();
+            t.polled += 1;
+            t.pushing = Some((r, 0));
+            out.push(t);
+        }
+    }
+    // master: one blocking send of the round broadcast (worker order, as
+    // in `push_downlink`'s loop over `down_txs`)
+    if let Some((r, w)) = s.pushing {
+        if s.queues[w].len() < m.depth {
+            let mut t = s.clone();
+            t.queues[w].push(r);
+            t.pushing = if w + 1 < m.n { Some((r, w + 1)) } else { None };
+            if w + 1 >= m.n {
+                t.pushed += 1;
+            }
+            out.push(t);
+        }
+    }
+    // workers: each advances its shipped schedule one step
+    for w in 0..m.n {
+        let Some(step) = m.steps[w].get(s.wstep[w]) else { continue };
+        match *step {
+            ScheduleStep::Round(_) => {
+                // compute + (maybe) send; the uplink channel is unbounded
+                // so this never blocks
+                let mut t = s.clone();
+                t.wstep[w] += 1;
+                out.push(t);
+            }
+            ScheduleStep::Apply(r) => {
+                // blocking recv on the bounded downlink queue; the shipped
+                // link asserts the received round matches
+                if let Some(&head) = s.queues[w].first() {
+                    assert_eq!(
+                        head, r,
+                        "worker {w} expected downlink {r}, queue head is {head} \
+                         (downlinks out of order)"
+                    );
+                    let mut t = s.clone();
+                    t.queues[w].remove(0);
+                    t.wstep[w] += 1;
+                    out.push(t);
+                }
+            }
+            ScheduleStep::Crash(_) => {}
+        }
+    }
+    out
+}
+
+fn is_terminal(m: &Model, s: &State) -> bool {
+    s.pushed == m.iters
+        && s.pushing.is_none()
+        && (0..m.n).all(|w| s.wstep[w] == m.steps[w].len())
+}
+
+/// Memoized DFS over every reachable interleaving.
+fn exhaust(m: &Model) -> usize {
+    let mut visited: BTreeSet<State> = BTreeSet::new();
+    let mut stack = vec![State::initial(m.n)];
+    let mut terminals = 0usize;
+    while let Some(s) = stack.pop() {
+        if !visited.insert(s.clone()) {
+            continue;
+        }
+        let next = successors(m, &s);
+        if next.is_empty() {
+            // a quiescent system must be a *finished* system
+            assert!(
+                is_terminal(m, &s),
+                "deadlock (n={} iters={} depth={}): {s:?}",
+                m.n,
+                m.iters,
+                m.depth
+            );
+            for (w, q) in s.queues.iter().enumerate() {
+                assert!(q.is_empty(), "worker {w} terminated with undrained downlinks {q:?}");
+            }
+            terminals += 1;
+            continue;
+        }
+        stack.extend(next);
+    }
+    assert!(terminals > 0, "no terminal state reached");
+    visited.len()
+}
+
+#[test]
+fn schedule_steps_cover_every_round_and_downlink_exactly_once() {
+    for start in [0usize, 3] {
+        for iters in [start, start + 1, start + 4, start + 7] {
+            for depth in 1..=3 {
+                let steps = schedule_steps(start, iters, depth, None);
+                let rounds: Vec<usize> = steps
+                    .iter()
+                    .filter_map(|s| match s {
+                        ScheduleStep::Round(k) => Some(*k),
+                        _ => None,
+                    })
+                    .collect();
+                let applies: Vec<usize> = steps
+                    .iter()
+                    .filter_map(|s| match s {
+                        ScheduleStep::Apply(r) => Some(*r),
+                        _ => None,
+                    })
+                    .collect();
+                let want: Vec<usize> = (start..iters).collect();
+                assert_eq!(rounds, want, "start={start} iters={iters} depth={depth}");
+                assert_eq!(applies, want, "start={start} iters={iters} depth={depth}");
+            }
+        }
+    }
+}
+
+#[test]
+fn schedule_steps_respect_the_staleness_contract() {
+    // before computing round k, downlinks through k − depth (and nothing
+    // newer) have been applied
+    for (start, iters, depth) in [(0usize, 8usize, 1usize), (0, 8, 2), (0, 8, 3), (2, 9, 2)] {
+        let steps = schedule_steps(start, iters, depth, None);
+        let mut applied = 0usize;
+        for s in &steps {
+            match *s {
+                ScheduleStep::Apply(_) => applied += 1,
+                ScheduleStep::Round(k) => {
+                    let want = (k + 1).saturating_sub(depth).saturating_sub(start);
+                    assert_eq!(
+                        applied, want,
+                        "round {k} computed with {applied} downlinks applied \
+                         (start={start} depth={depth})"
+                    );
+                }
+                ScheduleStep::Crash(_) => unreachable!(),
+            }
+        }
+    }
+}
+
+#[test]
+fn schedule_steps_crash_truncates_without_tail_drain() {
+    let steps = schedule_steps(0, 10, 2, Some(4));
+    assert_eq!(*steps.last().unwrap(), ScheduleStep::Crash(4));
+    assert!(steps.iter().all(|s| !matches!(s, ScheduleStep::Round(k) if *k >= 4)));
+    // a crashed worker must not sit in the tail drain eating downlinks it
+    // will never be sent
+    let applies_after_last_round = steps
+        .iter()
+        .rev()
+        .take_while(|s| !matches!(s, ScheduleStep::Round(_)))
+        .filter(|s| matches!(s, ScheduleStep::Apply(_)))
+        .count();
+    assert_eq!(applies_after_last_round, 0);
+}
+
+#[test]
+fn every_interleaving_is_deadlock_free_full_participation() {
+    for n in 1..=2 {
+        for iters in 1..=4 {
+            for depth in 1..=3 {
+                let states = exhaust(&Model::new(n, iters, depth, full));
+                assert!(states > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn every_interleaving_is_deadlock_free_three_workers() {
+    // the widest config: 3 self-paced workers, overlapped rounds
+    let states = exhaust(&Model::new(3, 3, 2, full));
+    assert!(states > 0);
+}
+
+#[test]
+fn every_interleaving_is_deadlock_free_partial_participation() {
+    // unselected workers send nothing; the master must assemble their
+    // stand-ins locally instead of waiting (StalePolicy::Skip semantics)
+    for iters in 1..=4 {
+        for depth in 1..=3 {
+            exhaust(&Model::new(2, iters, depth, alternating));
+            exhaust(&Model::new(3, iters, depth, alternating));
+        }
+    }
+}
+
+#[test]
+fn depth_exceeding_iters_still_drains() {
+    // iters < depth: no mid-run applies at all, everything in the tail
+    exhaust(&Model::new(2, 1, 3, full));
+    exhaust(&Model::new(2, 2, 3, full));
+}
+
+// ---------------------------------------------------------------------------
+// RoundWindow in-flight ordering.
+// ---------------------------------------------------------------------------
+
+mod round_window {
+    use crate::engine::transport::{RoundWindow, UplinkFrame};
+    use crate::engine::StalePolicy;
+
+    fn frame(worker: usize, round: usize) -> UplinkFrame {
+        UplinkFrame {
+            worker,
+            round,
+            payload: None,
+            residual_norm: 0.0,
+            compute_seconds: 0.0,
+        }
+    }
+
+    /// Mask with worker 0 unselected, the rest selected.
+    fn mask_off0(n: usize) -> Vec<bool> {
+        (0..n).map(|w| w != 0).collect()
+    }
+
+    #[test]
+    fn rounds_open_strictly_in_order() {
+        let mut w = RoundWindow::default();
+        let mask = vec![true, true];
+        assert!(w.begin(0, 2, &mask, StalePolicy::Skip, vec![]).is_ok());
+        assert!(w.begin(1, 2, &mask, StalePolicy::Skip, vec![]).is_ok());
+        // skipping ahead is rejected
+        let err = w.begin(3, 2, &mask, StalePolicy::Skip, vec![]).unwrap_err();
+        assert!(err.to_string().contains("rounds open in order"), "{err}");
+        // replaying an already-open round is rejected too
+        assert!(w.begin(1, 2, &mask, StalePolicy::Skip, vec![]).is_err());
+        assert_eq!(w.next_begin(), 2);
+    }
+
+    #[test]
+    fn polls_only_touch_opened_rounds() {
+        let mut w = RoundWindow::default();
+        assert!(w.ensure_open(0).is_err());
+        w.begin(0, 1, &[true], StalePolicy::Skip, vec![]).unwrap();
+        assert!(w.ensure_open(0).is_ok());
+        assert!(w.ensure_open(1).is_err());
+    }
+
+    #[test]
+    fn injected_stand_ins_are_consumed_exactly_once() {
+        let mut w = RoundWindow::default();
+        let mask = mask_off0(2);
+        w.begin(0, 2, &mask, StalePolicy::Skip, vec![frame(0, 0)]).unwrap();
+        let slots = w.take_injected(0, 2);
+        assert!(slots[0].is_some() && slots[1].is_none());
+        // a second take finds nothing — the stand-in cannot be re-applied
+        let again = w.take_injected(0, 2);
+        assert!(again.iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn reset_rewinds_to_the_resume_round_and_drops_stale_injections() {
+        let mut w = RoundWindow::default();
+        let mask = mask_off0(2);
+        w.begin(0, 2, &mask, StalePolicy::Skip, vec![frame(0, 0)]).unwrap();
+        w.reset(5);
+        assert_eq!(w.next_begin(), 5);
+        // the pre-reset injection is gone
+        assert!(w.take_injected(0, 2).iter().all(Option::is_none));
+        // and rounds resume from the checkpoint round, not zero
+        assert!(w.begin(4, 2, &mask, StalePolicy::Skip, vec![]).is_err());
+        assert!(w.begin(5, 2, &mask, StalePolicy::Skip, vec![]).is_ok());
+    }
+
+    #[test]
+    fn injection_validation_rejects_selected_and_duplicate_slots() {
+        let mut w = RoundWindow::default();
+        // injecting for a *selected* worker would shadow its real uplink
+        let all_selected = vec![true, true];
+        assert!(w.begin(0, 2, &all_selected, StalePolicy::Skip, vec![frame(0, 0)]).is_err());
+        // duplicate stand-ins for one slot are rejected
+        let mut w2 = RoundWindow::default();
+        let mask = mask_off0(2);
+        assert!(w2
+            .begin(0, 2, &mask, StalePolicy::Skip, vec![frame(0, 0), frame(0, 0)])
+            .is_err());
+    }
+}

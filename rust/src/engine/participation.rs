@@ -159,7 +159,8 @@ mod tests {
             assert_eq!(a.iter().filter(|&&m| m).count(), 3, "round {round}");
         }
         // selection varies across rounds (a fixed subset would defeat the
-        // point of sampling)
+        // point of sampling); test-only dedup, order never observed
+        #[allow(clippy::disallowed_types)]
         let masks: std::collections::HashSet<Vec<bool>> =
             (0..50).map(|r| p.mask(9, r, 8)).collect();
         assert!(masks.len() > 1);

@@ -420,13 +420,62 @@ pub(crate) trait WorkerLink {
     fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()>;
 }
 
-/// The self-paced round schedule shared by the byte-moving transports:
+/// One step of the self-paced worker schedule, in execution order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ScheduleStep {
+    /// Block until downlink `round` arrives and apply it.
+    Apply(usize),
+    /// Run the worker's side of round `round` (compute + send when the
+    /// mask selects it; [`WorkerRoundDriver::round`] decides).
+    Round(usize),
+    /// The crash knob fires instead of computing this round.
+    Crash(usize),
+}
+
+/// The pure self-paced schedule shared by the byte-moving transports:
 /// compute round `k` after applying downlink `k − depth` (the pipelined
 /// staleness contract), then drain the tail so the final model copy
 /// agrees with the master's. `start > 0` resumes mid-schedule (checkpoint
 /// restore / reconnect sync — state through `start − 1` is already in the
-/// node); `crash_at` aborts just before the given round (chaos
-/// injection). `run` returns `false` when the crash knob fired.
+/// node); `crash_at` truncates the schedule just before the given round
+/// (chaos injection).
+///
+/// This is deliberately a data-producing function rather than a loop:
+/// [`WorkerSchedule::run`] executes it against a real [`WorkerLink`], and
+/// the exhaustive-interleaving model checker
+/// (`engine::modelcheck`, test-only) executes the *same* step sequence
+/// against bounded-queue semantics — the schedule logic under test is the
+/// shipped one, not a re-derivation.
+pub(crate) fn schedule_steps(
+    start: usize,
+    iters: usize,
+    depth: usize,
+    crash_at: Option<usize>,
+) -> Vec<ScheduleStep> {
+    let depth = depth.max(1);
+    let mut steps = Vec::new();
+    for k in start..iters {
+        if crash_at == Some(k) {
+            steps.push(ScheduleStep::Crash(k));
+            return steps;
+        }
+        // the round-k uplink is computed against the model with downlinks
+        // through k − depth applied — the pipelined staleness contract
+        if k >= start + depth {
+            steps.push(ScheduleStep::Apply(k - depth));
+        }
+        steps.push(ScheduleStep::Round(k));
+    }
+    // drain the tail so every downlink is applied and the final model
+    // copies agree with the master's
+    for t in iters.saturating_sub(depth).max(start)..iters {
+        steps.push(ScheduleStep::Apply(t));
+    }
+    steps
+}
+
+/// Executes [`schedule_steps`] for one worker over a real [`WorkerLink`].
+/// `run` returns `false` when the crash knob fired.
 pub(crate) struct WorkerSchedule<'a> {
     pub n: usize,
     pub id: usize,
@@ -444,29 +493,20 @@ impl WorkerSchedule<'_> {
     ) -> anyhow::Result<bool> {
         let spec = self.spec;
         let depth = spec.pipeline_depth.max(1);
-        let start = self.start;
         let mut grad = vec![0.0 as F; self.problem.dim()];
         let mut driver = WorkerRoundDriver::new(spec, self.n);
-        for k in start..spec.iters {
-            if self.crash_at == Some(k) {
-                return Ok(false);
+        for step in schedule_steps(self.start, spec.iters, depth, self.crash_at) {
+            match step {
+                ScheduleStep::Crash(_) => return Ok(false),
+                ScheduleStep::Apply(r) => link.apply(node, r)?,
+                ScheduleStep::Round(k) => {
+                    if let Some((bytes, residual_norm)) =
+                        driver.round(node, self.problem, spec, k, self.id, &mut grad)
+                    {
+                        link.send(k, bytes, residual_norm)?;
+                    }
+                }
             }
-            // the round-k uplink is computed against the model with
-            // downlinks through k − depth applied — the pipelined
-            // staleness contract
-            if k >= start + depth {
-                link.apply(node, k - depth)?;
-            }
-            if let Some((bytes, residual_norm)) =
-                driver.round(node, self.problem, spec, k, self.id, &mut grad)
-            {
-                link.send(k, bytes, residual_norm)?;
-            }
-        }
-        // drain the tail so every downlink is applied and the final model
-        // copies agree with the master's
-        for t in spec.iters.saturating_sub(depth).max(start)..spec.iters {
-            link.apply(node, t)?;
         }
         Ok(true)
     }
@@ -608,6 +648,8 @@ impl Transport for InProc {
         let mut frames = Vec::with_capacity(self.workers.len());
         for (i, node) in self.workers.iter_mut().enumerate() {
             frames.push(if mask[i] {
+                #[allow(clippy::disallowed_methods)]
+                // lint:allow(wall_clock, compute_seconds diagnostic for the simulated clock; never feeds the trajectory)
                 let t0 = std::time::Instant::now();
                 let (up, residual_norm) = worker_uplink(
                     node.as_mut(),
@@ -1114,6 +1156,8 @@ impl Transport for SimNet {
         down: &Compressed,
         ctx: RoundCtx<'_>,
     ) -> anyhow::Result<u64> {
+        #[allow(clippy::disallowed_methods)]
+        // lint:allow(wall_clock, apply-cost diagnostic for the simulated clock; never feeds the trajectory)
         let t0 = std::time::Instant::now();
         let bits = self.inner.push_downlink(round, down, ctx)?;
         let net = self.net.as_mut().expect("started before push_downlink");

@@ -24,18 +24,18 @@ use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
 use dore::runtime::lm::TransformerLm;
 use dore::runtime::XlaRuntime;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// `--key value` flags plus bare boolean flags.
 struct Flags {
-    vals: HashMap<String, String>,
+    vals: BTreeMap<String, String>,
     bools: Vec<String>,
 }
 
 impl Flags {
     fn parse(args: &[String]) -> anyhow::Result<Self> {
-        let mut vals = HashMap::new();
+        let mut vals = BTreeMap::new();
         let mut bools = Vec::new();
         let mut i = 0;
         while i < args.len() {

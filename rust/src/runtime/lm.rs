@@ -16,13 +16,8 @@ use std::path::Path;
 use std::sync::Mutex;
 
 pub struct TransformerLm {
-    /// PJRT state, serialized behind a mutex.
-    ///
-    /// SAFETY rationale for the `unsafe impl` below: the `xla` crate's
-    /// wrappers hold raw pointers and are not auto-Send/Sync, but the PJRT
-    /// CPU client is thread-safe for compilation and execution (it is the
-    /// same client JAX uses from multi-threaded python). We still serialize
-    /// all access through this mutex, so cross-thread use is exclusive.
+    /// PJRT state, serialized behind a mutex (see the SAFETY note on the
+    /// `unsafe impl`s below).
     rt: Mutex<XlaRuntime>,
     corpus: Vec<u32>,
     shards: Vec<(usize, usize)>,
@@ -35,6 +30,11 @@ pub struct TransformerLm {
     eval_tokens: Vec<i32>,
 }
 
+// SAFETY: the `xla` crate's wrappers hold raw pointers and are not
+// auto-Send/Sync, but the PJRT CPU client is thread-safe for compilation
+// and execution (it is the same client JAX uses from multi-threaded
+// python). We still serialize all access through the `rt` mutex, so
+// cross-thread use is exclusive.
 unsafe impl Send for TransformerLm {}
 unsafe impl Sync for TransformerLm {}
 

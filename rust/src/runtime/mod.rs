@@ -12,11 +12,19 @@
 //!   (rust coordinator → XLA executable → Pallas-kernel HLO).
 
 pub mod lm;
+pub mod xla;
 
 use crate::config::json::Json;
 use crate::F;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+
+/// Whether the XLA backend is real or the offline stub
+/// (`rust/src/runtime/xla.rs`). Artifact-gated tests consult this to skip
+/// instead of failing on machines without the PJRT bindings.
+pub fn xla_available() -> bool {
+    xla::AVAILABLE
+}
 
 /// One tensor argument/result of an artifact.
 #[derive(Clone, Debug)]
@@ -128,7 +136,9 @@ impl MlpMeta {
 /// `artifacts/manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
-    pub artifacts: HashMap<String, ArtifactEntry>,
+    /// Ordered map: artifact compilation and `artifact_names()` listing
+    /// follow name order deterministically.
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
     pub lm: Option<LmMeta>,
     pub mlp: Option<MlpMeta>,
 }
@@ -143,7 +153,7 @@ impl Manifest {
 
     pub fn parse(text: &str) -> anyhow::Result<Self> {
         let v = Json::parse(text)?;
-        let mut artifacts = HashMap::new();
+        let mut artifacts = BTreeMap::new();
         for (name, entry) in v
             .get("artifacts")
             .and_then(Json::as_obj)
@@ -193,7 +203,7 @@ pub struct XlaRuntime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
     dir: PathBuf,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    executables: BTreeMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl XlaRuntime {
@@ -204,7 +214,7 @@ impl XlaRuntime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
-        let mut executables = HashMap::new();
+        let mut executables = BTreeMap::new();
         for (name, entry) in &manifest.artifacts {
             let path = dir.join(&entry.file);
             let proto = xla::HloModuleProto::from_text_file(&path)

@@ -59,6 +59,8 @@ fn prop_kofn_selection_varies() {
         let k = 1 + rng.next_below(n / 2);
         let seed = rng.next_u64();
         let p = Participation::KOfN { k };
+        // test-only dedup, order never observed
+        #[allow(clippy::disallowed_types)]
         let distinct: std::collections::HashSet<Vec<bool>> =
             (0..64).map(|r| p.mask(seed, r, n)).collect();
         assert!(

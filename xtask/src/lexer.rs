@@ -1,0 +1,468 @@
+//! A small hand-rolled Rust token scanner — just enough syntax awareness
+//! for the determinism lints without pulling in `syn` (this repo builds
+//! from a cold cache with zero third-party deps beyond `anyhow`).
+//!
+//! The scanner produces a line-numbered token stream with comments,
+//! string/char literals and `#[cfg(test)]`-gated items removed, so rules
+//! never fire on prose (e.g. "Instantiate" in a doc comment) or on test
+//! code. Comments are not discarded blindly: `// lint:allow(rule, reason)`
+//! directives and `// SAFETY:` markers are extracted on the way through,
+//! because rules need both.
+
+/// One significant token. `text` is the identifier spelling or a
+/// single-character punctuation; `is_ident` distinguishes the two.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub text: String,
+    pub line: usize,
+    pub is_ident: bool,
+}
+
+/// One `// lint:allow(rule, reason)` directive. `reason` is empty when the
+/// author omitted it — rules reject that rather than honouring the allow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+}
+
+/// Scanner output for one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// Significant tokens, with `#[cfg(test)]`/`#[test]` items stripped.
+    pub tokens: Vec<Token>,
+    /// Parsed `lint:allow` directives (from comments on any line).
+    pub allows: Vec<Allow>,
+    /// Lines whose comment text contains a `SAFETY` marker.
+    pub safety_lines: Vec<usize>,
+}
+
+pub fn lex(source: &str) -> Lexed {
+    let raw = scan(source);
+    Lexed {
+        tokens: strip_test_items(raw.tokens),
+        allows: raw.allows,
+        safety_lines: raw.safety_lines,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Character-level scan.
+// ---------------------------------------------------------------------------
+
+fn scan(source: &str) -> Lexed {
+    let b: Vec<char> = source.chars().collect();
+    let mut out = Lexed::default();
+    let mut i = 0;
+    let mut line = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            '/' if peek(&b, i + 1) == Some('/') => {
+                let start = i;
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                note_comment(&text, line, &mut out);
+            }
+            '/' if peek(&b, i + 1) == Some('*') => {
+                // block comment, nesting per the Rust grammar
+                let mut depth = 1;
+                let start_line = line;
+                let start = i;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == '/' && peek(&b, i + 1) == Some('*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == '*' && peek(&b, i + 1) == Some('/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if b[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                }
+                let text: String = b[start..i.min(b.len())].iter().collect();
+                // attribute every line the comment spans, so a SAFETY
+                // marker inside a multi-line block is found near `unsafe`
+                for (off, chunk) in text.split('\n').enumerate() {
+                    note_comment(chunk, start_line + off, &mut out);
+                }
+            }
+            '"' => i = skip_string(&b, i, &mut line),
+            '\'' => {
+                // lifetime (`'a`) vs char literal (`'a'`, `'\n'`)
+                if is_ident_start(peek(&b, i + 1).unwrap_or(' '))
+                    && peek(&b, i + 2).map_or(true, |c2| c2 != '\'')
+                {
+                    i += 1; // lifetime marker; the ident after it is skipped
+                    while i < b.len() && is_ident_continue(b[i]) {
+                        i += 1;
+                    }
+                } else {
+                    i += 1; // opening quote
+                    while i < b.len() && b[i] != '\'' {
+                        if b[i] == '\\' {
+                            i += 1;
+                        }
+                        if i < b.len() && b[i] == '\n' {
+                            line += 1;
+                        }
+                        i += 1;
+                    }
+                    i += 1; // closing quote
+                }
+            }
+            _ if is_ident_start(c) => {
+                // raw strings (r"", r#""#, b"", br#""#) and byte chars (b'')
+                // start with an ident-looking prefix — disambiguate first
+                if let Some(next) = string_prefix_len(&b, i) {
+                    i = skip_string(&b, next, &mut line);
+                    continue;
+                }
+                if c == 'r' && peek(&b, i + 1) == Some('#')
+                    && peek(&b, i + 2).is_some_and(is_ident_start)
+                {
+                    i += 2; // raw identifier `r#ident`: lex the ident itself
+                    continue;
+                }
+                let start = i;
+                while i < b.len() && is_ident_continue(b[i]) {
+                    i += 1;
+                }
+                out.tokens.push(Token {
+                    text: b[start..i].iter().collect(),
+                    line,
+                    is_ident: true,
+                });
+            }
+            _ if c.is_ascii_digit() => {
+                // loose number scan: 0xff, 1_000, 1e7, 1.5f32 — but leave
+                // `..` intact (`0..10` must not eat the range dots)
+                i += 1;
+                while i < b.len() {
+                    let d = b[i];
+                    if is_ident_continue(d) {
+                        i += 1;
+                    } else if d == '.'
+                        && peek(&b, i + 1).is_some_and(|n| n.is_ascii_digit())
+                    {
+                        i += 1;
+                    } else if (d == '+' || d == '-')
+                        && matches!(b[i - 1], 'e' | 'E')
+                        && peek(&b, i + 1).is_some_and(|n| n.is_ascii_digit())
+                    {
+                        i += 1;
+                    } else {
+                        break;
+                    }
+                }
+            }
+            _ if c.is_whitespace() => i += 1,
+            _ => {
+                out.tokens.push(Token { text: c.to_string(), line, is_ident: false });
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+fn peek(b: &[char], i: usize) -> Option<char> {
+    b.get(i).copied()
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// If position `i` starts a string-literal prefix (`r`, `b`, `br`, `rb`
+/// followed by quotes/hashes, or `b'`), return the index of the opening
+/// quote/hash run; else `None`.
+fn string_prefix_len(b: &[char], i: usize) -> Option<usize> {
+    let mut j = i;
+    let mut saw_r = false;
+    for _ in 0..2 {
+        match peek(b, j) {
+            Some('r') if !saw_r => {
+                saw_r = true;
+                j += 1;
+            }
+            Some('b') if j == i => j += 1,
+            _ => break,
+        }
+    }
+    if j == i {
+        return None;
+    }
+    match peek(b, j) {
+        Some('"') => Some(j),
+        Some('#') if saw_r => Some(j),
+        Some('\'') if !saw_r && j == i + 1 => Some(j), // b'x'
+        _ => None,
+    }
+}
+
+/// Skip a (possibly raw) string or byte-char literal whose opening
+/// quote/hash run begins at `i`. Returns the index after the literal.
+fn skip_string(b: &[char], mut i: usize, line: &mut usize) -> usize {
+    let mut hashes = 0;
+    while peek(b, i) == Some('#') {
+        hashes += 1;
+        i += 1;
+    }
+    let quote = match peek(b, i) {
+        Some(q @ ('"' | '\'')) => q,
+        _ => return i,
+    };
+    let raw = hashes > 0;
+    i += 1;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            *line += 1;
+            i += 1;
+        } else if c == '\\' && !raw {
+            i += 2;
+        } else if c == quote {
+            i += 1;
+            if !raw {
+                return i;
+            }
+            let mut seen = 0;
+            while seen < hashes && peek(b, i) == Some('#') {
+                seen += 1;
+                i += 1;
+            }
+            if seen == hashes {
+                return i;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    i
+}
+
+/// Extract `lint:allow(rule, reason)` directives and SAFETY markers from
+/// one comment line.
+fn note_comment(text: &str, line: usize, out: &mut Lexed) {
+    if text.contains("SAFETY") {
+        out.safety_lines.push(line);
+    }
+    let mut rest = text;
+    while let Some(pos) = rest.find("lint:allow(") {
+        let body = &rest[pos + "lint:allow(".len()..];
+        let end = body.find(')').unwrap_or(body.len());
+        let inner = &body[..end];
+        let (rule, reason) = match inner.find(',') {
+            Some(c) => (inner[..c].trim(), inner[c + 1..].trim()),
+            None => (inner.trim(), ""),
+        };
+        out.allows.push(Allow {
+            line,
+            rule: rule.to_string(),
+            reason: reason.to_string(),
+        });
+        rest = &body[end.min(body.len())..];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `#[cfg(test)]` / `#[test]` item stripping.
+// ---------------------------------------------------------------------------
+
+/// Remove every item gated by an outer test attribute (`#[cfg(test)]`,
+/// `#[test]`, `#[cfg(all(test, ..))]`) — rules must not fire on test code,
+/// which legitimately uses wall-clock assertions, HashSet dedup, etc.
+fn strip_test_items(tokens: Vec<Token>) -> Vec<Token> {
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut i = 0;
+    while i < tokens.len() {
+        if tokens[i].text == "#" && tokens.get(i + 1).map(|t| t.text.as_str()) == Some("[") {
+            let (attr, after) = read_attr(&tokens, i + 2);
+            if attr_is_test(&attr) {
+                i = skip_gated_item(&tokens, after);
+                continue;
+            }
+            // keep the attribute tokens themselves
+            out.extend(tokens[i..after].iter().cloned());
+            i = after;
+            continue;
+        }
+        out.push(tokens[i].clone());
+        i += 1;
+    }
+    out
+}
+
+/// Read attribute tokens starting inside `#[`; returns (content, index
+/// after the closing `]`).
+fn read_attr(tokens: &[Token], mut i: usize) -> (Vec<String>, usize) {
+    let mut depth = 1; // the `[` already consumed
+    let mut content = Vec::new();
+    while i < tokens.len() && depth > 0 {
+        match tokens[i].text.as_str() {
+            "[" | "(" | "{" => depth += 1,
+            "]" | ")" | "}" => depth -= 1,
+            _ => {}
+        }
+        if depth > 0 {
+            content.push(tokens[i].text.clone());
+        }
+        i += 1;
+    }
+    (content, i)
+}
+
+fn attr_is_test(attr: &[String]) -> bool {
+    match attr.first().map(String::as_str) {
+        Some("test") => attr.len() == 1,
+        // `cfg(not(test))` gates *non*-test code — keep it linted
+        Some("cfg") => attr.iter().any(|t| t == "test") && !attr.iter().any(|t| t == "not"),
+        _ => false,
+    }
+}
+
+/// Skip one item following a test-gated attribute: any further attributes,
+/// then everything up to the matching `}` of its first top-level `{`, or a
+/// terminating `;` (e.g. `mod tests;`).
+fn skip_gated_item(tokens: &[Token], mut i: usize) -> usize {
+    while i < tokens.len()
+        && tokens[i].text == "#"
+        && tokens.get(i + 1).map(|t| t.text.as_str()) == Some("[")
+    {
+        let (_, after) = read_attr(tokens, i + 2);
+        i = after;
+    }
+    let mut braces = 0usize;
+    let mut inner = 0usize; // `(`/`[` nesting, so `[u8; 3]` in a signature
+                            // doesn't read as the item's terminating `;`
+    while i < tokens.len() {
+        match tokens[i].text.as_str() {
+            "{" => braces += 1,
+            "}" => {
+                braces = braces.saturating_sub(1);
+                if braces == 0 {
+                    return i + 1;
+                }
+            }
+            "(" | "[" => inner += 1,
+            ")" | "]" => inner = inner.saturating_sub(1),
+            ";" if braces == 0 && inner == 0 => return i + 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src).tokens.into_iter().filter(|t| t.is_ident).map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn comments_and_strings_are_stripped() {
+        let src = r##"
+            // Instantiate a HashMap here (prose only)
+            /* SystemTime in a block /* nested Instant */ comment */
+            let s = "Instant::now() inside a string";
+            let r = r#"raw HashMap"# ;
+            let c = 'I';
+            fn real(x: Foo) {}
+        "##;
+        let ids = idents(src);
+        assert!(!ids.iter().any(|t| t == "Instant" || t == "HashMap" || t == "SystemTime"));
+        assert!(ids.contains(&"real".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_do_not_eat_code() {
+        let ids = idents("fn f<'a>(x: &'a Instant) {}");
+        assert!(ids.contains(&"Instant".to_string()));
+    }
+
+    #[test]
+    fn char_literal_with_escape() {
+        let ids = idents(r"let q = '\''; let x = Instant;");
+        assert!(ids.contains(&"Instant".to_string()));
+    }
+
+    #[test]
+    fn cfg_test_items_are_skipped() {
+        let src = "
+            fn keep(a: HashMap<u8, u8>) {}
+            #[cfg(test)]
+            mod tests {
+                use std::collections::HashSet;
+                #[test]
+                fn t() { let _ = Instant::now(); }
+            }
+            fn also_keep() {}
+        ";
+        let ids = idents(src);
+        assert!(ids.contains(&"HashMap".to_string()));
+        assert!(ids.contains(&"also_keep".to_string()));
+        assert!(!ids.iter().any(|t| t == "HashSet" || t == "Instant"));
+    }
+
+    #[test]
+    fn test_attr_on_single_fn_is_skipped() {
+        let src = "
+            #[test]
+            fn t() { let _ = SystemTime::now(); }
+            fn keep() {}
+        ";
+        let ids = idents(src);
+        assert!(!ids.contains(&"SystemTime".to_string()));
+        assert!(ids.contains(&"keep".to_string()));
+    }
+
+    #[test]
+    fn allow_directives_are_parsed() {
+        let src = "
+            // lint:allow(wall_clock, transport timeout only)
+            let t = Instant::now();
+            // lint:allow(float_fold)
+        ";
+        let l = lex(src);
+        assert_eq!(l.allows.len(), 2);
+        assert_eq!(l.allows[0].rule, "wall_clock");
+        assert_eq!(l.allows[0].reason, "transport timeout only");
+        assert_eq!(l.allows[0].line, 2);
+        assert_eq!(l.allows[1].rule, "float_fold");
+        assert_eq!(l.allows[1].reason, "");
+    }
+
+    #[test]
+    fn safety_lines_recorded() {
+        let src = "\n// SAFETY: serialized behind a mutex\nunsafe impl Send for X {}\n";
+        let l = lex(src);
+        assert_eq!(l.safety_lines, vec![2]);
+        assert!(l.tokens.iter().any(|t| t.text == "unsafe"));
+    }
+
+    #[test]
+    fn number_scan_leaves_ranges_alone() {
+        let toks = lex("for i in 0..10 { x.sum() }").tokens;
+        let dots: Vec<_> = toks.iter().filter(|t| t.text == ".").collect();
+        assert_eq!(dots.len(), 3); // `..` plus the method dot
+    }
+}

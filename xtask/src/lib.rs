@@ -1,0 +1,54 @@
+//! Repo automation library. The binary (`cargo xtask`) is a thin CLI over
+//! this; the fixture tests under `xtask/tests/` exercise the same entry
+//! points the CI gate runs.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+/// Recursively collect `.rs` files under `root`, sorted by path so
+/// diagnostics come out in a stable order.
+pub fn rust_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `repo_root/rust/src`. Returns all findings,
+/// file order stable.
+pub fn lint_tree(repo_root: &Path) -> anyhow_lite::Result<Vec<rules::Finding>> {
+    let src_root = repo_root.join("rust").join("src");
+    let files = rust_files(&src_root).map_err(|e| format!("scanning {src_root:?}: {e}"))?;
+    let mut findings = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(repo_root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let source =
+            std::fs::read_to_string(&path).map_err(|e| format!("reading {path:?}: {e}"))?;
+        findings.extend(rules::lint_file(&rel, &source));
+    }
+    Ok(findings)
+}
+
+/// Minimal `Result<T, String>` alias — xtask carries no dependencies, so
+/// no `anyhow` here (the main crate's copy is not shared with us).
+pub mod anyhow_lite {
+    pub type Result<T> = std::result::Result<T, String>;
+}

@@ -1,0 +1,93 @@
+//! `cargo xtask` — repo automation. Subcommands:
+//!
+//! * `lint` — run the determinism lint pass over `rust/src/` (the four
+//!   deny-by-default rules in `xtask/src/rules.rs`). Exit 1 with
+//!   rule-named diagnostics on any finding. CI runs this in the `lint`
+//!   job; the README "Determinism contract" section is the human half of
+//!   the same contract.
+//! * `lint --rules` — print the rule table and exit.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use xtask::rules::RULE_NAMES;
+
+const RULE_DOCS: &[(&str, &str)] = &[
+    (
+        "unordered_container",
+        "no HashMap/HashSet in engine/, algorithms/, compression/, comm/, coordinator/ \
+         (iteration order is seed-dependent; use BTreeMap/BTreeSet)",
+    ),
+    (
+        "wall_clock",
+        "no Instant/SystemTime/thread_rng/random() in the same scope (wall-clock and OS \
+         entropy must not feed the round loop, masks, or wire accounting; metrics/ is \
+         exempt, transport timeouts carry lint:allow)",
+    ),
+    (
+        "float_fold",
+        "no .sum()/.product()/additive .fold() in engine/, algorithms/, compression/, \
+         comm/ outside engine/reduce.rs (float association must follow the ReducePool's \
+         fixed-shard order)",
+    ),
+    (
+        "unsafe_code",
+        "no `unsafe` outside the allowlisted modules; allowlisted blocks need a nearby \
+         // SAFETY: comment",
+    ),
+];
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") if args.iter().any(|a| a == "--rules") => {
+            println!("determinism lint rules (deny-by-default; escape hatch:");
+            println!("`// lint:allow(<rule>, <reason>)` on the line or the line above):\n");
+            for (name, doc) in RULE_DOCS {
+                println!("  {name}\n      {doc}\n");
+            }
+            ExitCode::SUCCESS
+        }
+        Some("lint") => run_lint(),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--rules]");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run_lint() -> ExitCode {
+    // xtask always lives one level below the repo root, so the scan works
+    // from any invocation directory
+    let repo_root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask sits under the repo root")
+        .to_path_buf();
+    let findings = match xtask::lint_tree(&repo_root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if findings.is_empty() {
+        println!(
+            "determinism lint clean ({} rules over rust/src)",
+            RULE_NAMES.len()
+        );
+        return ExitCode::SUCCESS;
+    }
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    let files: std::collections::BTreeSet<&str> =
+        findings.iter().map(|f| f.file.as_str()).collect();
+    eprintln!(
+        "\nerror: {} determinism-lint finding(s) in {} file(s) — see the README \
+         \"Determinism contract\" section; escape hatch: \
+         `// lint:allow(<rule>, <reason>)`",
+        findings.len(),
+        files.len()
+    );
+    ExitCode::FAILURE
+}

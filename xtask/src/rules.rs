@@ -1,0 +1,345 @@
+//! The determinism lint rules. Every guarantee this repo makes —
+//! bit-identical trajectories across transports, replayable masks,
+//! kill/resume equality — dies quietly the moment iteration order, wall
+//! clock, or float association leaks into the round loop. These rules are
+//! deny-by-default over the scoped module tree; the only way past them is
+//! an explicit `// lint:allow(<rule>, <reason>)` on the offending line or
+//! the line above, with a non-empty reason.
+//!
+//! | rule | scope | what it catches |
+//! |---|---|---|
+//! | `unordered_container` | engine, algorithms, compression, comm, coordinator | `HashMap`/`HashSet` (iteration order is seed-dependent; use `BTreeMap`/`BTreeSet`, or allow keyed-only access) |
+//! | `wall_clock` | same | `Instant`/`SystemTime`/`thread_rng`/`.random()` (wall-clock and OS entropy must not feed the trajectory; metrics/ is out of scope, transport timeouts get allows) |
+//! | `float_fold` | engine, algorithms, compression, comm | `.sum()`/`.product()`/`.fold(+)` over floats outside `engine/reduce.rs` (association order must be the ReducePool's fixed-shard order) |
+//! | `unsafe_code` | all of rust/src | `unsafe` outside the allowlisted modules; allowlisted blocks still need a nearby `// SAFETY:` comment |
+
+use crate::lexer::{lex, Lexed, Token};
+
+/// Directories (under `rust/src/`) where the determinism contract applies.
+const DETERMINISM_DIRS: &[&str] = &["engine", "algorithms", "compression", "comm", "coordinator"];
+
+/// `float_fold` additionally exempts the ReducePool itself — its
+/// fixed-shard slot-order folds are the sanctioned reduction path.
+const FLOAT_FOLD_DIRS: &[&str] = &["engine", "algorithms", "compression", "comm"];
+const FLOAT_FOLD_FILE_ALLOWLIST: &[&str] = &["rust/src/engine/reduce.rs"];
+
+/// Modules permitted to contain `unsafe` at all (each block still needs a
+/// `// SAFETY:` comment within [`SAFETY_COMMENT_SPAN`] lines above it).
+const UNSAFE_MODULE_ALLOWLIST: &[&str] = &["rust/src/runtime/lm.rs"];
+const SAFETY_COMMENT_SPAN: usize = 12;
+
+pub const RULE_NAMES: &[&str] =
+    &["unordered_container", "wall_clock", "float_fold", "unsafe_code"];
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Repo-relative path, forward slashes.
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Lint one file. `rel` is the repo-relative path (forward slashes) —
+/// scoping decisions key off it.
+pub fn lint_file(rel: &str, source: &str) -> Vec<Finding> {
+    let lexed = lex(source);
+    let mut findings = Vec::new();
+
+    check_allow_directives(rel, &lexed, &mut findings);
+    if in_dirs(rel, DETERMINISM_DIRS) {
+        unordered_container(rel, &lexed, &mut findings);
+        wall_clock(rel, &lexed, &mut findings);
+    }
+    if in_dirs(rel, FLOAT_FOLD_DIRS) && !FLOAT_FOLD_FILE_ALLOWLIST.contains(&rel) {
+        float_fold(rel, &lexed, &mut findings);
+    }
+    unsafe_code(rel, &lexed, &mut findings);
+
+    // apply the escape hatch: a well-formed allow on the finding's line or
+    // the line above suppresses it
+    findings.retain(|f| {
+        f.rule == "lint_directive"
+            || !lexed.allows.iter().any(|a| {
+                a.rule == f.rule
+                    && !a.reason.is_empty()
+                    && (a.line == f.line || a.line + 1 == f.line)
+            })
+    });
+    findings.sort_by_key(|f| f.line);
+    findings
+}
+
+fn in_dirs(rel: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| rel.starts_with(&format!("rust/src/{d}/")))
+}
+
+/// Malformed directives are themselves findings — a reason-less or
+/// unknown-rule allow silently suppressing nothing is how escape hatches
+/// rot.
+fn check_allow_directives(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    for a in &lexed.allows {
+        if !RULE_NAMES.contains(&a.rule.as_str()) {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "lint_directive",
+                message: format!(
+                    "lint:allow names unknown rule '{}' (rules: {})",
+                    a.rule,
+                    RULE_NAMES.join(", ")
+                ),
+            });
+        } else if a.reason.is_empty() {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: a.line,
+                rule: "lint_directive",
+                message: format!(
+                    "lint:allow({}) needs a reason: `// lint:allow({}, <why this site is sound>)`",
+                    a.rule, a.rule
+                ),
+            });
+        }
+    }
+}
+
+fn unordered_container(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    for t in lexed.tokens.iter().filter(|t| t.is_ident) {
+        if t.text == "HashMap" || t.text == "HashSet" {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unordered_container",
+                message: format!(
+                    "`{}` in determinism-scoped code — iteration order is seed-dependent \
+                     and leaks into folds; use BTreeMap/BTreeSet, or keep access strictly \
+                     keyed and annotate why",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+fn wall_clock(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lexed.tokens;
+    for (i, t) in toks.iter().enumerate() {
+        if !t.is_ident {
+            continue;
+        }
+        let hit = match t.text.as_str() {
+            "Instant" | "SystemTime" | "thread_rng" => true,
+            // bare `random` only as a call or method — plain identifiers
+            // named `random` (e.g. a field) are the seeded kind
+            "random" => {
+                toks.get(i + 1).map(|n| n.text == "(").unwrap_or(false)
+                    || (i > 0 && toks[i - 1].text == ".")
+            }
+            _ => false,
+        };
+        if hit {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "wall_clock",
+                message: format!(
+                    "`{}` in determinism-scoped code — wall-clock/OS entropy must not feed \
+                     the round loop, masks, or wire accounting (timeout/diagnostic-only \
+                     sites: `// lint:allow(wall_clock, <reason>)`)",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+fn float_fold(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let toks = &lexed.tokens;
+    for i in 0..toks.len() {
+        if toks[i].text != "." {
+            continue;
+        }
+        let Some(m) = toks.get(i + 1) else { continue };
+        let next = toks.get(i + 2).map(|t| t.text.as_str());
+        let is_call = matches!(next, Some("(")) || matches!(next, Some(":"));
+        if !is_call {
+            continue;
+        }
+        let flagged = match m.text.as_str() {
+            "sum" | "product" => true,
+            "fold" => fold_body_has_plus(toks, i + 2),
+            _ => false,
+        };
+        if flagged {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: m.line,
+                rule: "float_fold",
+                message: format!(
+                    "`.{}` reduction outside ReducePool — float association order must be \
+                     the fixed-shard order; route through engine/reduce.rs, or annotate a \
+                     provably sequential site (`// lint:allow(float_fold, <reason>)`)",
+                    m.text
+                ),
+            });
+        }
+    }
+}
+
+/// For `.fold(...)`: does the balanced argument list contain a `+`?
+/// (A max/min fold is order-safe; an additive one is not.)
+fn fold_body_has_plus(toks: &[Token], mut i: usize) -> bool {
+    // skip a turbofish `::<..>` if present
+    while i < toks.len() && toks[i].text != "(" {
+        if toks[i].text == ";" || toks[i].text == "{" {
+            return false;
+        }
+        i += 1;
+    }
+    let mut depth = 0usize;
+    while i < toks.len() {
+        match toks[i].text.as_str() {
+            "(" | "[" | "{" => depth += 1,
+            ")" | "]" | "}" => {
+                depth = depth.saturating_sub(1);
+                if depth == 0 {
+                    return false;
+                }
+            }
+            "+" => {
+                // `+=` and `+` both count; `a + b` inside the closure is
+                // exactly the associativity hazard
+                if depth >= 1 {
+                    return true;
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    false
+}
+
+fn unsafe_code(rel: &str, lexed: &Lexed, out: &mut Vec<Finding>) {
+    let allowlisted = UNSAFE_MODULE_ALLOWLIST.contains(&rel);
+    for t in lexed.tokens.iter().filter(|t| t.is_ident && t.text == "unsafe") {
+        if !allowlisted {
+            out.push(Finding {
+                file: rel.to_string(),
+                line: t.line,
+                rule: "unsafe_code",
+                message: format!(
+                    "`unsafe` outside the allowlisted modules ({}) — extend the allowlist \
+                     in xtask/src/rules.rs deliberately, with review",
+                    UNSAFE_MODULE_ALLOWLIST.join(", ")
+                ),
+            });
+        } else {
+            let documented = lexed
+                .safety_lines
+                .iter()
+                .any(|&l| l <= t.line && t.line - l <= SAFETY_COMMENT_SPAN);
+            if !documented {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: t.line,
+                    rule: "unsafe_code",
+                    message: format!(
+                        "`unsafe` without a `// SAFETY:` comment within {SAFETY_COMMENT_SPAN} \
+                         lines above — state the invariant that makes this sound"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ENGINE: &str = "rust/src/engine/somefile.rs";
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<&'static str> {
+        lint_file(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn hashmap_flagged_in_scope_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_fired(ENGINE, src), vec!["unordered_container"]);
+        assert!(rules_fired("rust/src/models/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_same_or_previous_line() {
+        let same = "let m: HashMap<u8, u8> = make(); // lint:allow(unordered_container, keyed access only)\n";
+        assert!(rules_fired(ENGINE, same).is_empty());
+        let prev = "// lint:allow(unordered_container, keyed access only)\nlet m: HashMap<u8, u8> = make();\n";
+        assert!(rules_fired(ENGINE, prev).is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_rejected() {
+        let src = "let m: HashMap<u8, u8> = make(); // lint:allow(unordered_container)\n";
+        let fired = rules_fired(ENGINE, src);
+        assert!(fired.contains(&"lint_directive"), "{fired:?}");
+        assert!(fired.contains(&"unordered_container"), "{fired:?}");
+    }
+
+    #[test]
+    fn allow_unknown_rule_rejected() {
+        let src = "// lint:allow(no_such_rule, whatever)\n";
+        assert_eq!(rules_fired(ENGINE, src), vec!["lint_directive"]);
+    }
+
+    #[test]
+    fn wall_clock_variants() {
+        assert_eq!(rules_fired(ENGINE, "let t = Instant::now();\n"), vec!["wall_clock"]);
+        assert_eq!(rules_fired(ENGINE, "let t = SystemTime::now();\n"), vec!["wall_clock"]);
+        assert_eq!(rules_fired(ENGINE, "let r = thread_rng();\n"), vec!["wall_clock"]);
+        assert_eq!(rules_fired(ENGINE, "let x = rng.random();\n"), vec!["wall_clock"]);
+        // a seeded field named `random` is fine
+        assert!(rules_fired(ENGINE, "let x = cfg.random_seed;\n").is_empty());
+    }
+
+    #[test]
+    fn float_fold_variants() {
+        assert_eq!(rules_fired(ENGINE, "let s: f32 = v.iter().sum();\n"), vec!["float_fold"]);
+        assert_eq!(rules_fired(ENGINE, "let s = v.iter().sum::<f64>();\n"), vec!["float_fold"]);
+        assert_eq!(
+            rules_fired(ENGINE, "let s = v.iter().fold(0.0, |a, b| a + b);\n"),
+            vec!["float_fold"]
+        );
+        // max-fold is order-safe
+        let max_fold = "let m = v.iter().fold(f32::MIN, |a, &b| a.max(b));\n";
+        assert!(rules_fired(ENGINE, max_fold).is_empty());
+        // the ReducePool itself is the sanctioned path
+        let in_pool = "let s: f64 = v.iter().sum();\n";
+        assert!(rules_fired("rust/src/engine/reduce.rs", in_pool).is_empty());
+    }
+
+    #[test]
+    fn unsafe_scoping() {
+        let src = "unsafe impl Send for X {}\n";
+        assert_eq!(rules_fired(ENGINE, src), vec!["unsafe_code"]);
+        // allowlisted module without SAFETY still fails
+        assert_eq!(rules_fired("rust/src/runtime/lm.rs", src), vec!["unsafe_code"]);
+        // with a SAFETY comment nearby it passes
+        let ok = "// SAFETY: access serialized behind a mutex\nunsafe impl Send for X {}\n";
+        assert!(rules_fired("rust/src/runtime/lm.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n  use std::collections::HashSet;\n  #[test]\n  fn t() { let _ = Instant::now(); }\n}\n";
+        assert!(rules_fired(ENGINE, src).is_empty());
+    }
+}

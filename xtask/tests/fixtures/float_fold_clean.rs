@@ -1,0 +1,20 @@
+// Fixture: no findings expected. Order-safe folds, an annotated
+// sequential site, and sums inside tests are all fine.
+
+pub fn peak(v: &[f32]) -> f32 {
+    v.iter().fold(f32::MIN, |a, &b| a.max(b))
+}
+
+pub fn block_scale(block: &[f32]) -> f32 {
+    // lint:allow(float_fold, sequential over one contiguous block in slot order)
+    block.iter().map(|v| v.abs()).sum::<f32>() / block.len() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn sums_in_tests_are_exempt() {
+        let v = [1.0f64, 2.0, 3.0];
+        assert_eq!(v.iter().sum::<f64>(), 6.0);
+    }
+}

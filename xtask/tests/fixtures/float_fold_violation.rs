@@ -1,0 +1,14 @@
+// Fixture: rule `float_fold` must fire on lines 5, 9 and 13.
+// (Read as text by xtask/tests/lint_fixtures.rs; never compiled.)
+
+pub fn norm_sq(v: &[f32]) -> f32 {
+    v.iter().map(|&x| x * x).sum()
+}
+
+pub fn total(v: &[f64]) -> f64 {
+    v.iter().sum::<f64>()
+}
+
+pub fn acc(v: &[f64]) -> f64 {
+    v.iter().fold(0.0, |a, &b| a + b)
+}

@@ -1,0 +1,24 @@
+// Fixture: no findings expected. Ordered containers, a HashMap mention in
+// prose only, a string literal, and test-gated HashSet use are all fine.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Not a violation: "HashMap" appears only in this doc comment.
+pub fn tally(xs: &[u32]) -> usize {
+    let msg = "HashMap in a string literal is prose too";
+    let mut seen: BTreeSet<u32> = BTreeSet::new();
+    for &x in xs {
+        seen.insert(x);
+    }
+    let _ = (msg, BTreeMap::<u32, u32>::new());
+    seen.len()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn dedup_in_tests_is_exempt() {
+        let s: std::collections::HashSet<u32> = [1, 2].into_iter().collect();
+        assert_eq!(s.len(), 2);
+    }
+}

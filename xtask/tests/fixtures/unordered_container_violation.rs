@@ -1,0 +1,12 @@
+// Fixture: rule `unordered_container` must fire on lines 4 and 7.
+// (Read as text by xtask/tests/lint_fixtures.rs; never compiled.)
+
+use std::collections::HashMap;
+
+pub fn tally(xs: &[u32]) -> usize {
+    let mut seen: std::collections::HashSet<u32> = Default::default();
+    for &x in xs {
+        seen.insert(x);
+    }
+    seen.len()
+}

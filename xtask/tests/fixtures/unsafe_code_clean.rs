@@ -1,0 +1,13 @@
+// Fixture: no findings expected *when linted under the allowlisted path*
+// rust/src/runtime/lm.rs — the unsafe impls carry a SAFETY comment within
+// the required span. The word unsafe in this comment is prose and ignored.
+
+// SAFETY rationale: the wrapped client holds raw pointers and is not
+// auto-Send/Sync, but all access is serialized behind a Mutex, so
+// cross-thread use is exclusive.
+unsafe impl Send for Wrapper {}
+unsafe impl Sync for Wrapper {}
+
+pub struct Wrapper {
+    inner: std::sync::Mutex<u8>,
+}

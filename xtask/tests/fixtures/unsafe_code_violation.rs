@@ -1,0 +1,9 @@
+// Fixture: rule `unsafe_code` must fire on line 5 (module not on the
+// allowlist, so even a SAFETY comment does not help).
+
+// SAFETY: does not matter here — the module itself is not allowlisted.
+unsafe impl Send for Widget {}
+
+pub struct Widget {
+    ptr: *mut u8,
+}

@@ -1,0 +1,25 @@
+// Fixture: no findings expected. Seeded entropy, an annotated timeout
+// site, `random` as a plain field name, and wall-clock inside tests.
+
+pub fn draw(rng: &mut Xoshiro256) -> f64 {
+    rng.next_f64()
+}
+
+pub fn wait(flag: &Flag) {
+    // lint:allow(wall_clock, socket poll deadline; never feeds the trajectory)
+    let deadline = std::time::Instant::now() + POLL_WAIT;
+    while !flag.ready() && std::time::Instant::now() < deadline {} // lint:allow(wall_clock, same deadline site)
+}
+
+pub fn seed_of(cfg: &Config) -> u64 {
+    cfg.random_seed
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn timing_in_tests_is_exempt() {
+        let t0 = std::time::Instant::now();
+        assert!(t0.elapsed().as_secs() < 1);
+    }
+}

@@ -1,0 +1,18 @@
+// Fixture: rule `wall_clock` must fire on lines 5, 10 and 17.
+// (Read as text by xtask/tests/lint_fixtures.rs; never compiled.)
+
+pub fn stamp() -> u64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos() as u64
+}
+
+pub fn epoch() -> u64 {
+    match std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH) {
+        Ok(d) => d.as_secs(),
+        Err(_) => 0,
+    }
+}
+
+pub fn roll(rng: &mut impl Roll) -> f64 {
+    rng.random()
+}

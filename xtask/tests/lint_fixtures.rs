@@ -1,0 +1,122 @@
+//! Fixture corpus for the determinism lint: one minimal violating file and
+//! one clean file per rule, asserting each rule fires exactly where
+//! expected — line-accurate, no more, no less. CI additionally seeds a
+//! violation into the real tree and asserts `cargo xtask lint` exits
+//! nonzero (the live-gate check); this suite pins the rule semantics.
+
+use std::path::Path;
+
+use xtask::rules::lint_file;
+
+fn fixture(name: &str) -> String {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {path:?}: {e}"))
+}
+
+/// Lint a fixture as if it lived at `virtual_rel` inside the real tree
+/// (scoping keys off the path), returning `(rule, line)` pairs.
+fn fired(name: &str, virtual_rel: &str) -> Vec<(&'static str, usize)> {
+    lint_file(virtual_rel, &fixture(name)).into_iter().map(|f| (f.rule, f.line)).collect()
+}
+
+const IN_SCOPE: &str = "rust/src/engine/fixture_under_test.rs";
+
+#[test]
+fn unordered_container_fires_line_accurate() {
+    assert_eq!(
+        fired("unordered_container_violation.rs", IN_SCOPE),
+        vec![("unordered_container", 4), ("unordered_container", 7)]
+    );
+}
+
+#[test]
+fn unordered_container_clean_is_clean() {
+    assert_eq!(fired("unordered_container_clean.rs", IN_SCOPE), vec![]);
+}
+
+#[test]
+fn unordered_container_out_of_scope_is_exempt() {
+    // same violating source under models/ (not a determinism dir): no findings
+    assert_eq!(
+        fired("unordered_container_violation.rs", "rust/src/models/fixture.rs"),
+        vec![]
+    );
+}
+
+#[test]
+fn wall_clock_fires_line_accurate() {
+    assert_eq!(
+        fired("wall_clock_violation.rs", IN_SCOPE),
+        vec![("wall_clock", 5), ("wall_clock", 10), ("wall_clock", 17)]
+    );
+}
+
+#[test]
+fn wall_clock_clean_is_clean() {
+    assert_eq!(fired("wall_clock_clean.rs", IN_SCOPE), vec![]);
+}
+
+#[test]
+fn wall_clock_metrics_is_exempt() {
+    // metrics/ is the sanctioned home for wall-clock (Stopwatch etc.)
+    assert_eq!(fired("wall_clock_violation.rs", "rust/src/metrics/fixture.rs"), vec![]);
+}
+
+#[test]
+fn float_fold_fires_line_accurate() {
+    assert_eq!(
+        fired("float_fold_violation.rs", IN_SCOPE),
+        vec![("float_fold", 5), ("float_fold", 9), ("float_fold", 13)]
+    );
+}
+
+#[test]
+fn float_fold_clean_is_clean() {
+    assert_eq!(fired("float_fold_clean.rs", IN_SCOPE), vec![]);
+}
+
+#[test]
+fn float_fold_reduce_pool_is_the_sanctioned_path() {
+    assert_eq!(
+        fired("float_fold_violation.rs", "rust/src/engine/reduce.rs"),
+        vec![]
+    );
+}
+
+#[test]
+fn unsafe_code_fires_outside_allowlist_even_with_safety_comment() {
+    assert_eq!(
+        fired("unsafe_code_violation.rs", IN_SCOPE),
+        vec![("unsafe_code", 5)]
+    );
+}
+
+#[test]
+fn unsafe_code_allowlisted_with_safety_comment_is_clean() {
+    assert_eq!(
+        fired("unsafe_code_clean.rs", "rust/src/runtime/lm.rs"),
+        vec![]
+    );
+}
+
+#[test]
+fn unsafe_code_allowlisted_without_safety_comment_still_fires() {
+    // strip the SAFETY comment from the clean fixture: the allowlisted
+    // module alone is not enough
+    let stripped: String = fixture("unsafe_code_clean.rs")
+        .lines()
+        .filter(|l| !l.contains("SAFETY"))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    let fired: Vec<&str> =
+        lint_file("rust/src/runtime/lm.rs", &stripped).into_iter().map(|f| f.rule).collect();
+    assert_eq!(fired, vec!["unsafe_code", "unsafe_code"]);
+}
+
+#[test]
+fn diagnostics_name_the_rule_and_site() {
+    let f = &lint_file(IN_SCOPE, &fixture("wall_clock_violation.rs"))[0];
+    let rendered = f.to_string();
+    assert!(rendered.contains("rust/src/engine/fixture_under_test.rs:5"), "{rendered}");
+    assert!(rendered.contains("[wall_clock]"), "{rendered}");
+}
