@@ -20,6 +20,7 @@ test-rust:
 	  --test integration_server --test integration_tcp \
 	  --test proptest_compression --test proptest_participation \
 	  --test proptest_pipeline --test proptest_reduce --test proptest_fault \
+	  --test proptest_codec_entropy --test adversarial_codec \
 	  --test golden_series
 
 # Regenerate the golden trajectory baseline (rust/tests/golden/series.txt)

@@ -1,0 +1,130 @@
+//! Wire-codec bench (ISSUE 7 instrument): fixed vs entropy frame sizes
+//! and encode/decode throughput for the DORE ternary uplink at realistic
+//! scale. No criterion in this offline environment — same hand-rolled
+//! median-of-N harness as `hotpath.rs`.
+//!
+//! ```
+//! cargo bench --bench wirecodec                    # full run (d = 10^6)
+//! cargo bench --bench wirecodec -- --quick         # CI smoke (d = 10^5)
+//! cargo bench --bench wirecodec -- --json out.json # machine-readable snapshot
+//! ```
+//!
+//! The headline numbers are **bytes per round** under each codec for the
+//! DORE ternary config (∞-norm blocks of 256) and the entropy reduction
+//! percentage — the CI bench-smoke job uploads the JSON snapshot alongside
+//! `BENCH_hotpath.json` so the reduction is tracked per commit.
+
+#![deny(deprecated)]
+
+use dore::compression::{codec, Compressor, PNormQuantizer, QsgdQuantizer, WireCodec, Xoshiro256};
+use std::fmt::Write as _;
+
+/// Median-of-N timing.
+#[allow(clippy::disallowed_methods)] // benches measure wall-clock by definition
+fn bench<F: FnMut()>(name: &str, bytes_per_iter: Option<u64>, reps: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let med = times[reps / 2];
+    match bytes_per_iter {
+        Some(b) => println!(
+            "{name:<44}{:>12.3} ms   {:>8.2} GB/s",
+            med * 1e3,
+            b as f64 / med / 1e9
+        ),
+        None => println!("{name:<44}{:>12.3} ms", med * 1e3),
+    }
+    med
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    // The ISSUE 7 headline config: DORE ternary uplink at d = 10^5 (the
+    // acceptance-criterion dim) in quick mode, 10^6 for the full run.
+    let d = if quick { 100_000 } else { 1_000_000 };
+    let reps = if quick { 3 } else { 9 };
+    let quick_tag = if quick { ", --quick" } else { "" };
+    println!("=== wire codec: fixed vs entropy (median of {reps}{quick_tag}) ===\n");
+
+    let q = PNormQuantizer::paper_default();
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let grad: Vec<f32> = (0..d).map(|_| 0.01 * rng.next_gaussian()).collect();
+    let c = q.compress(&grad, &mut rng);
+    let bytes = 4 * d as u64;
+
+    let fixed = codec::encode_with(&c, WireCodec::Fixed);
+    let ent = codec::encode_with(&c, WireCodec::Entropy);
+    let reduction = 1.0 - ent.len() as f64 / fixed.len() as f64;
+    println!("DORE ternary uplink, d = {d}:");
+    println!("  fixed   {:>9} bytes/round ({:.3} bits/coord)", fixed.len(), fixed.len() as f64 * 8.0 / d as f64);
+    println!("  entropy {:>9} bytes/round ({:.3} bits/coord)", ent.len(), ent.len() as f64 * 8.0 / d as f64);
+    println!("  reduction {:.1}%\n", reduction * 100.0);
+
+    let mut sink = 0u64;
+    let t_enc_fixed = bench("encode fixed (base-243)", Some(bytes), reps, || {
+        sink ^= codec::encode_with(&c, WireCodec::Fixed).len() as u64;
+    });
+    let t_enc_ent = bench("encode entropy (Huffman triples)", Some(bytes), reps, || {
+        sink ^= codec::encode_with(&c, WireCodec::Entropy).len() as u64;
+    });
+    let t_dec_fixed = bench("decode fixed", Some(bytes), reps, || {
+        sink ^= codec::decode(&fixed).unwrap().dim() as u64;
+    });
+    let t_dec_ent = bench("decode entropy", Some(bytes), reps, || {
+        sink ^= codec::decode(&ent).unwrap().dim() as u64;
+    });
+
+    // Secondary: the QSGD Rice/Golomb path (s = 7, concentrated levels).
+    let qs = QsgdQuantizer::new(7, 256);
+    let lv = qs.compress(&grad, &mut rng);
+    let lv_fixed = codec::encode_with(&lv, WireCodec::Fixed);
+    let lv_ent = codec::encode_with(&lv, WireCodec::Entropy);
+    let lv_reduction = 1.0 - lv_ent.len() as f64 / lv_fixed.len() as f64;
+    println!(
+        "\nQSGD s=7 levels: fixed {} B, entropy {} B, reduction {:.1}%",
+        lv_fixed.len(),
+        lv_ent.len(),
+        lv_reduction * 100.0
+    );
+    bench("encode entropy levels (Rice)", Some(bytes), reps, || {
+        sink ^= codec::encode_with(&lv, WireCodec::Entropy).len() as u64;
+    });
+    bench("decode entropy levels (Rice)", Some(bytes), reps, || {
+        sink ^= codec::decode(&lv_ent).unwrap().dim() as u64;
+    });
+    eprintln!("(sink {sink})");
+
+    if let Some(path) = json_path {
+        // hand-rolled JSON (no serde in this environment); times in ms
+        let mut out = String::from("{\n");
+        let _ = writeln!(out, "  \"bench\": \"wirecodec/fixed_vs_entropy\",");
+        let _ = writeln!(out, "  \"quick\": {quick},");
+        let _ = writeln!(out, "  \"d\": {d},");
+        let _ = writeln!(out, "  \"ternary_fixed_bytes\": {},", fixed.len());
+        let _ = writeln!(out, "  \"ternary_entropy_bytes\": {},", ent.len());
+        let _ = writeln!(out, "  \"ternary_reduction\": {reduction:.4},");
+        let _ = writeln!(out, "  \"levels_fixed_bytes\": {},", lv_fixed.len());
+        let _ = writeln!(out, "  \"levels_entropy_bytes\": {},", lv_ent.len());
+        let _ = writeln!(out, "  \"levels_reduction\": {lv_reduction:.4},");
+        let _ = writeln!(out, "  \"encode_fixed_ms\": {:.3},", t_enc_fixed * 1e3);
+        let _ = writeln!(out, "  \"encode_entropy_ms\": {:.3},", t_enc_ent * 1e3);
+        let _ = writeln!(out, "  \"decode_fixed_ms\": {:.3},", t_dec_fixed * 1e3);
+        let _ = writeln!(out, "  \"decode_entropy_ms\": {:.3}", t_dec_ent * 1e3);
+        out.push_str("}\n");
+        std::fs::write(&path, out).expect("write json snapshot");
+        println!("wrote {path}");
+    }
+}

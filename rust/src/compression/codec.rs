@@ -1,35 +1,78 @@
 //! Wire codecs with bit-exact accounting (§3.2 of the paper).
 //!
 //! Two jobs:
-//! 1. [`wire_bits`] — the exact size of a [`Compressed`] payload on the
-//!    wire, used for all communication accounting. For ternary payloads the
-//!    default packing is **base-243** (5 trits/byte = 1.6 bits/trit, the
-//!    practical realization of the paper's "3/2 bits with simple ternary
-//!    coding"); [`TritPacking::TwoBit`] (2 bits/trit) is also provided.
-//! 2. Actual byte-level encode/decode ([`encode`]/[`decode`]) so the
+//! 1. [`wire_bits_with`] — the **measured** size of a [`Compressed`]
+//!    payload on the wire under a [`WireCodec`], used for all
+//!    communication accounting. It equals `8 × encode_with(c, codec).len()`
+//!    exactly, including byte padding, for every payload and codec — pinned
+//!    by the accounting table test below and `proptest_codec_entropy`.
+//! 2. Actual byte-level encode/decode ([`encode_with`]/[`decode`]) so the
 //!    coordinator transports real packed bytes — the accounting is the
 //!    length of a buffer that actually exists, not an estimate.
 //!
-//! Sparse payloads are coded as Elias-γ index gaps + fp32 values, the
-//! coding the paper alludes to via Elias (1975).
+//! Two codecs share one self-describing frame space (the leading tag byte
+//! selects the decoder, so [`decode`] needs no out-of-band codec choice):
+//!
+//! * [`WireCodec::Fixed`] — the default. Ternary trits pack base-243
+//!   (5 trits/byte = 1.6 bits/trit, the practical realization of the
+//!   paper's "3/2 bits with simple ternary coding"), QSGD levels pack at
+//!   the fixed [`levels_bits_per`] width, sparse payloads code Elias-γ
+//!   index gaps + fp32 values (the coding the paper alludes to via
+//!   Elias 1975).
+//! * [`WireCodec::Entropy`] — per-block canonical length-limited Huffman
+//!   over trit triples and Rice/Golomb over zig-zagged levels (see
+//!   [`entropy`](super::entropy)), with a per-block escape back to fixed
+//!   packing and a whole-frame fallback to the fixed frame when entropy
+//!   coding would not be strictly smaller. Hence the invariant
+//!   `wire_bits_with(c, Entropy) ≤ wire_bits_with(c, Fixed)` for every
+//!   payload. Dense and sparse payloads have no skewed symbol stream and
+//!   always pass through as fixed frames.
 
-use super::Compressed;
+use super::{entropy, Compressed};
 use crate::F;
 
-/// How ternary digits are packed.
+/// Which wire codec a session puts on the wire (`--wire-codec`). The
+/// decoder is codec-agnostic — frames are self-describing — so mixed
+/// fleets decode each other; the knob only selects what gets *encoded*.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
-pub enum TritPacking {
-    /// 5 trits per byte (3^5 = 243 ≤ 256): 1.6 bits/trit.
+pub enum WireCodec {
+    /// Fixed-width packing: base-243 trits, `levels_bits_per` levels.
     #[default]
-    Base243,
-    /// 2 bits per trit — simpler, slightly larger.
-    TwoBit,
+    Fixed,
+    /// Per-block Huffman (trits) + Rice/Golomb (levels) with escape back
+    /// to fixed packing; never larger than [`WireCodec::Fixed`].
+    Entropy,
 }
 
-/// Bits for one payload under the default packing. Includes a small
-/// self-describing header (tag + dim), matching what [`encode`] emits.
+impl WireCodec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireCodec::Fixed => "fixed",
+            WireCodec::Entropy => "entropy",
+        }
+    }
+}
+
+impl std::fmt::Display for WireCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for WireCodec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "fixed" => Ok(WireCodec::Fixed),
+            "entropy" => Ok(WireCodec::Entropy),
+            other => anyhow::bail!("unknown wire codec '{other}' (expected fixed|entropy)"),
+        }
+    }
+}
+
+/// Bits for one payload under the default ([`WireCodec::Fixed`]) codec.
 pub fn wire_bits(c: &Compressed) -> u64 {
-    wire_bits_with(c, TritPacking::default())
+    wire_bits_with(c, WireCodec::Fixed)
 }
 
 /// Header: 1 byte tag + 4 bytes dim.
@@ -46,31 +89,40 @@ pub fn levels_bits_per(s: u8) -> u32 {
     (2 * s as u32 + 1).next_power_of_two().trailing_zeros().max(1)
 }
 
-pub fn wire_bits_with(c: &Compressed, packing: TritPacking) -> u64 {
+/// Measured wire size in bits: exactly `8 × encode_with(c, codec).len()`.
+/// The [`WireCodec::Fixed`] arm is analytic (every section's formula,
+/// rounded up to its byte boundary); the [`WireCodec::Entropy`] arm runs
+/// the real encoder, because entropy-coded sizes *are* data-dependent —
+/// that is the point.
+pub fn wire_bits_with(c: &Compressed, codec: WireCodec) -> u64 {
+    if codec == WireCodec::Entropy {
+        return 8 * encode_with(c, WireCodec::Entropy).len() as u64;
+    }
     match c {
         Compressed::Dense(v) => HEADER_BITS + 32 * v.len() as u64,
         Compressed::Ternary { norms, trits, .. } => {
-            let payload = match packing {
-                TritPacking::Base243 => 8 * (trits.len() as u64).div_ceil(5),
-                TritPacking::TwoBit => 2 * trits.len() as u64,
-            };
-            // block_size: 4 bytes; norms: 32 bits each.
-            HEADER_BITS + 32 + 32 * norms.len() as u64 + payload
+            // block_size: 4 bytes; norms: 32 bits each; base-243 trits.
+            HEADER_BITS + 32 + 32 * norms.len() as u64 + 8 * (trits.len() as u64).div_ceil(5)
         }
         Compressed::Levels { norms, levels, s, .. } => {
             let bits_per = levels_bits_per(*s) as u64;
-            HEADER_BITS + 32 + 8 + 32 * norms.len() as u64 + bits_per * levels.len() as u64
+            HEADER_BITS
+                + 32
+                + 8
+                + 32 * norms.len() as u64
+                + 8 * (bits_per * levels.len() as u64).div_ceil(8)
         }
         Compressed::Sparse { idx, vals, .. } => {
-            // Elias-γ over index gaps (+1 so gaps are ≥ 1), fp32 values.
-            let mut bits = HEADER_BITS + 32; // + count
+            // Elias-γ over index gaps (+1 so gaps are ≥ 1), zero-padded to
+            // a byte boundary, then fp32 values.
+            let mut gap_bits = 0u64;
             let mut prev: i64 = -1;
             for &i in idx {
                 let gap = (i as i64 - prev) as u64; // ≥ 1
-                bits += elias_gamma_bits(gap);
+                gap_bits += elias_gamma_bits(gap);
                 prev = i as i64;
             }
-            bits + 32 * vals.len() as u64
+            HEADER_BITS + 32 + 8 * gap_bits.div_ceil(8) + 32 * vals.len() as u64
         }
     }
 }
@@ -90,28 +142,33 @@ const TAG_DENSE: u8 = 0;
 const TAG_TERNARY: u8 = 1;
 const TAG_LEVELS: u8 = 2;
 const TAG_SPARSE: u8 = 3;
+/// Entropy-coded ternary: fixed header, then Huffman/escape trit blocks.
+const TAG_ETERNARY: u8 = 4;
+/// Entropy-coded levels: fixed header, then Rice/escape level blocks.
+const TAG_ELEVELS: u8 = 5;
 
-struct BitWriter {
+pub(crate) struct BitWriter {
     buf: Vec<u8>,
     acc: u64,
     nbits: u32,
 }
 
 impl BitWriter {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self { buf: Vec::new(), acc: 0, nbits: 0 }
     }
     /// Write the low `n` bits of `v`, MSB-first within the stream.
-    fn write(&mut self, v: u64, n: u32) {
+    pub(crate) fn write(&mut self, v: u64, n: u32) {
         debug_assert!(n <= 57);
-        self.acc = (self.acc << n) | (v & ((1u64 << n) - 1));
+        self.acc = (self.acc << n) | (v & if n == 0 { 0 } else { (1u64 << n) - 1 });
         self.nbits += n;
         while self.nbits >= 8 {
             self.nbits -= 8;
             self.buf.push((self.acc >> self.nbits) as u8);
         }
     }
-    fn finish(mut self) -> Vec<u8> {
+    /// Flush, zero-padding the final partial byte.
+    pub(crate) fn finish(mut self) -> Vec<u8> {
         if self.nbits > 0 {
             let pad = 8 - self.nbits;
             self.acc <<= pad;
@@ -121,6 +178,10 @@ impl BitWriter {
     }
 }
 
+/// Zero-padding reader for the fixed codec's trusted-length paths (the
+/// lengths are verified up front from the header, so running past the end
+/// cannot happen on those paths). Entropy decoding uses the checked
+/// [`entropy::CheckedBitReader`] instead.
 struct BitReader<'a> {
     buf: &'a [u8],
     pos: usize,
@@ -141,8 +202,7 @@ impl<'a> BitReader<'a> {
             self.nbits += 8;
         }
         self.nbits -= n;
-        let v = (self.acc >> self.nbits) & if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
-        v
+        (self.acc >> self.nbits) & if n == 0 { 0 } else { (1u64 << n) - 1 }
     }
 }
 
@@ -167,8 +227,28 @@ fn get_f32(buf: &[u8], pos: &mut usize) -> anyhow::Result<F> {
     Ok(v)
 }
 
-/// Serialize a payload to packed wire bytes (Base243 trit packing).
+/// Serialize a payload to packed wire bytes under the default
+/// ([`WireCodec::Fixed`]) codec.
 pub fn encode(c: &Compressed) -> Vec<u8> {
+    encode_with(c, WireCodec::Fixed)
+}
+
+/// Serialize a payload under `codec`. For [`WireCodec::Entropy`] the
+/// entropy frame is only used when strictly smaller than the fixed frame
+/// (whole-frame escape), so entropy encoding can never expand a payload;
+/// dense and sparse payloads always take the fixed frame.
+pub fn encode_with(c: &Compressed, codec: WireCodec) -> Vec<u8> {
+    let fixed = encode_fixed(c);
+    match codec {
+        WireCodec::Fixed => fixed,
+        WireCodec::Entropy => match encode_entropy(c) {
+            Some(e) if e.len() < fixed.len() => e,
+            _ => fixed,
+        },
+    }
+}
+
+fn encode_fixed(c: &Compressed) -> Vec<u8> {
     let mut out = Vec::new();
     match c {
         Compressed::Dense(v) => {
@@ -232,9 +312,45 @@ pub fn encode(c: &Compressed) -> Vec<u8> {
     out
 }
 
-/// Inverse of [`encode`]. Panic-free on malformed or truncated input —
-/// every read is bounds-checked and declared sizes are sanity-capped, so a
-/// corrupt peer cannot crash (or memory-exhaust) the coordinator.
+/// Entropy frame for the payloads that have a skewed symbol stream; `None`
+/// for dense/sparse (no entropy form — the fixed frame is already the
+/// measured one).
+fn encode_entropy(c: &Compressed) -> Option<Vec<u8>> {
+    match c {
+        Compressed::Ternary { dim, block_size, norms, trits } => {
+            let mut out = Vec::new();
+            out.push(TAG_ETERNARY);
+            put_u32(&mut out, *dim as u32);
+            put_u32(&mut out, *block_size as u32);
+            for &n in norms {
+                put_f32(&mut out, n);
+            }
+            entropy::encode_ternary_sections(trits, &mut out);
+            Some(out)
+        }
+        Compressed::Levels { dim, block_size, s, norms, levels } => {
+            let mut out = Vec::new();
+            out.push(TAG_ELEVELS);
+            put_u32(&mut out, *dim as u32);
+            put_u32(&mut out, *block_size as u32);
+            out.push(*s);
+            for &n in norms {
+                put_f32(&mut out, n);
+            }
+            entropy::encode_levels_sections(levels, *s, &mut out);
+            Some(out)
+        }
+        _ => None,
+    }
+}
+
+/// Inverse of [`encode_with`] for **every** codec — frames are
+/// self-describing via the tag byte. Panic-free on malformed or truncated
+/// input: every read is bounds-checked and declared sizes are
+/// sanity-capped, so a corrupt peer cannot crash (or memory-exhaust) the
+/// coordinator. Entropy frames (tags 4–5) additionally return structured
+/// [`entropy::DecodeError`]s (downcastable through [`anyhow::Error`]) and
+/// reject trailing garbage, nonzero padding and out-of-range symbols.
 pub fn decode(buf: &[u8]) -> anyhow::Result<Compressed> {
     anyhow::ensure!(!buf.is_empty(), "empty wire buffer");
     /// Upper bound on any declared element count: u32 indices cap dims at
@@ -333,6 +449,49 @@ pub fn decode(buf: &[u8]) -> anyhow::Result<Compressed> {
                 .collect::<anyhow::Result<_>>()?;
             Compressed::Sparse { dim, idx, vals }
         }
+        TAG_ETERNARY => {
+            let dim = get_u32(buf, &mut pos)? as usize;
+            let block_size = get_u32(buf, &mut pos)? as usize;
+            anyhow::ensure!(dim <= MAX_DIM, "absurd dim {dim}");
+            anyhow::ensure!(block_size > 0, "zero block size");
+            // Entropy coding floors at ~1 bit per trit triple plus block
+            // headers, so a valid frame always carries > dim/24 bytes —
+            // a hostile dim cannot force a huge preallocation.
+            anyhow::ensure!(dim <= buf.len().saturating_mul(24), "absurd entropy trit frame");
+            let nblocks = dim.div_ceil(block_size);
+            anyhow::ensure!(buf.len() >= pos + 4 * nblocks, "truncated entropy ternary header");
+            let norms = (0..nblocks)
+                .map(|_| get_f32(buf, &mut pos))
+                .collect::<anyhow::Result<_>>()?;
+            let trits = entropy::decode_ternary_sections(buf, &mut pos, dim)
+                .map_err(anyhow::Error::new)?;
+            if pos != buf.len() {
+                return Err(anyhow::Error::new(entropy::DecodeError::TrailingGarbage));
+            }
+            Compressed::Ternary { dim, block_size, norms, trits }
+        }
+        TAG_ELEVELS => {
+            let dim = get_u32(buf, &mut pos)? as usize;
+            let block_size = get_u32(buf, &mut pos)? as usize;
+            anyhow::ensure!(dim <= MAX_DIM, "absurd dim {dim}");
+            anyhow::ensure!(block_size > 0, "zero block size");
+            anyhow::ensure!(pos < buf.len(), "truncated entropy levels header");
+            let s = buf[pos];
+            pos += 1;
+            // Rice floors at 1 bit per level plus block headers.
+            anyhow::ensure!(dim <= buf.len().saturating_mul(8), "absurd entropy level frame");
+            let nblocks = dim.div_ceil(block_size);
+            anyhow::ensure!(buf.len() >= pos + 4 * nblocks, "truncated entropy levels header");
+            let norms = (0..nblocks)
+                .map(|_| get_f32(buf, &mut pos))
+                .collect::<anyhow::Result<_>>()?;
+            let levels = entropy::decode_levels_sections(buf, &mut pos, dim, s)
+                .map_err(anyhow::Error::new)?;
+            if pos != buf.len() {
+                return Err(anyhow::Error::new(entropy::DecodeError::TrailingGarbage));
+            }
+            Compressed::Levels { dim, block_size, s, norms, levels }
+        }
         t => anyhow::bail!("bad wire tag {t}"),
     })
 }
@@ -353,14 +512,34 @@ pub fn scheme_bits(d: u64, b: u64, grad_compressed: bool, model_compressed: bool
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compression::entropy::DecodeError;
     use crate::compression::{
         Compressor, PNorm, PNormQuantizer, QsgdQuantizer, StochasticSparsifier, Xoshiro256,
     };
 
+    const CODECS: [WireCodec; 2] = [WireCodec::Fixed, WireCodec::Entropy];
+
+    /// The shared accounting pin for both codecs: measured bits equal
+    /// `8 × encoded length` exactly, decode inverts encode bit-for-bit,
+    /// and entropy never costs more than fixed.
+    fn assert_measured(c: &Compressed) {
+        for codec in CODECS {
+            let bytes = encode_with(c, codec);
+            assert_eq!(
+                wire_bits_with(c, codec),
+                bytes.len() as u64 * 8,
+                "{codec} accounting {c:?}"
+            );
+            assert_eq!(decode(&bytes).unwrap(), *c, "{codec} roundtrip");
+        }
+        assert!(
+            wire_bits_with(c, WireCodec::Entropy) <= wire_bits_with(c, WireCodec::Fixed),
+            "entropy expanded {c:?}"
+        );
+    }
+
     fn roundtrip(c: &Compressed) {
-        let bytes = encode(c);
-        let back = decode(&bytes).unwrap();
-        assert_eq!(&back, c);
+        assert_measured(c);
     }
 
     #[test]
@@ -399,15 +578,13 @@ mod tests {
 
     #[test]
     fn wire_bits_matches_encoded_length() {
-        // wire_bits may differ from byte length by < 8 bits of padding per
-        // bitstream; check agreement within one byte per section.
+        // Exact — the analytic fixed accounting includes byte padding.
         let q = PNormQuantizer::new(PNorm::Inf, 16);
         let mut rng = Xoshiro256::seed_from_u64(4);
         let x: Vec<F> = (0..100).map(|_| rng.next_gaussian()).collect();
         let c = q.compress(&x, &mut rng);
-        let bytes = encode(&c).len() as u64 * 8;
-        let bits = wire_bits(&c);
-        assert!(bytes >= bits && bytes - bits < 16, "bytes={bytes} bits={bits}");
+        assert_eq!(wire_bits(&c), encode(&c).len() as u64 * 8);
+        assert_measured(&c);
     }
 
     #[test]
@@ -420,39 +597,74 @@ mod tests {
         }
     }
 
-    /// The satellite pin: the one shared `bits_per` makes the analytic
-    /// accounting equal the real encoder output, `wire_bits == 8 × encoded
-    /// length`, at every boundary `s` (bit widths 2..=8). Dims are chosen
-    /// as multiples of 8 so the level bitstream is byte-aligned and the
-    /// equality is exact, not padding-fuzzy.
+    /// The deduped accounting table (ISSUE 7 satellite): one shared pin,
+    /// `wire_bits_with == 8 × encode_with().len()`, asserted for **every**
+    /// (codec, payload family, boundary s) combination — including dims
+    /// that leave the level bitstream unaligned, where the fixed formula's
+    /// byte rounding is load-bearing.
     #[test]
-    fn wire_bits_equals_encoded_bits_for_boundary_levels() {
+    fn accounting_table_all_codecs_families_and_boundary_s() {
         for s in [1u8, 2, 3, 4, 7, 8, 63, 64, 127] {
-            let dim = 24;
-            let levels: Vec<i8> =
-                (0..dim).map(|i| ((i % (2 * s as usize + 1)) as i16 - s as i16) as i8).collect();
-            let c = Compressed::Levels {
-                dim,
-                block_size: 8,
-                s,
-                norms: vec![1.5, 0.25, 3.0],
-                levels,
-            };
-            let bytes = encode(&c);
-            assert_eq!(wire_bits(&c), bytes.len() as u64 * 8, "s={s}");
-            assert_eq!(decode(&bytes).unwrap(), c, "s={s} roundtrip");
+            for dim in [1usize, 7, 24, 37] {
+                let levels: Vec<i8> = (0..dim)
+                    .map(|i| ((i % (2 * s as usize + 1)) as i16 - s as i16) as i8)
+                    .collect();
+                let norms: Vec<F> = (0..dim.div_ceil(8)).map(|i| 0.5 + i as F).collect();
+                assert_measured(&Compressed::Levels { dim, block_size: 8, s, norms, levels });
+            }
         }
-        // ternary base-243 packs 5 trits/byte, so its accounting is exact
-        // at every dim; sparse/dense headers are byte-aligned too.
-        let t = Compressed::Ternary {
-            dim: 11,
+        for dim in [1usize, 5, 11, 40] {
+            let trits: Vec<i8> = (0..dim).map(|i| (i % 3) as i8 - 1).collect();
+            let norms: Vec<F> = (0..dim.div_ceil(4)).map(|i| 1.0 + i as F).collect();
+            assert_measured(&Compressed::Ternary { dim, block_size: 4, norms, trits });
+        }
+        assert_measured(&Compressed::Dense(vec![1.0, -2.0, 3.5]));
+        assert_measured(&Compressed::Dense(vec![]));
+        assert_measured(&Compressed::Sparse { dim: 100, idx: vec![0, 3, 99], vals: vec![1.0; 3] });
+        assert_measured(&Compressed::Sparse { dim: 10, idx: vec![], vals: vec![] });
+    }
+
+    /// Skewed ternary payloads — the DORE regime — must come out strictly
+    /// smaller under the entropy codec, and still decode bit-for-bit.
+    #[test]
+    fn entropy_beats_fixed_on_skewed_ternary() {
+        let q = PNormQuantizer::paper_default();
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let x: Vec<F> = (0..20_000).map(|_| 0.01 * rng.next_gaussian()).collect();
+        let c = q.compress(&x, &mut rng);
+        let fixed = wire_bits_with(&c, WireCodec::Fixed);
+        let ent = wire_bits_with(&c, WireCodec::Entropy);
+        assert!(ent < fixed, "entropy {ent} >= fixed {fixed}");
+        let bytes = encode_with(&c, WireCodec::Entropy);
+        assert_eq!(bytes[0], TAG_ETERNARY);
+        assert_eq!(decode(&bytes).unwrap(), c);
+    }
+
+    /// Trailing bytes after a well-formed entropy frame are a structured
+    /// error, not silently ignored (fixed frames keep their lenient
+    /// historical behavior; entropy frames are strict by design).
+    #[test]
+    fn entropy_frame_rejects_trailing_garbage() {
+        let c = Compressed::Ternary {
+            dim: 9,
             block_size: 4,
-            norms: vec![2.0, 0.5, 1.0],
-            trits: vec![1, 0, -1, 1, 0, 0, 1, -1, -1, 0, 1],
+            norms: vec![1.0, 2.0, 0.5],
+            trits: vec![0, 0, 0, 0, 0, 0, 0, 0, 0],
         };
-        assert_eq!(wire_bits(&t), encode(&t).len() as u64 * 8);
-        let d = Compressed::Dense(vec![1.0, -2.0, 3.5]);
-        assert_eq!(wire_bits(&d), encode(&d).len() as u64 * 8);
+        let mut bytes = encode_entropy(&c).unwrap();
+        assert_eq!(decode(&bytes).unwrap(), c);
+        bytes.push(0xAB);
+        let err = decode(&bytes).unwrap_err();
+        assert_eq!(err.downcast_ref::<DecodeError>(), Some(&DecodeError::TrailingGarbage));
+    }
+
+    #[test]
+    fn wire_codec_parses_and_prints() {
+        assert_eq!("fixed".parse::<WireCodec>().unwrap(), WireCodec::Fixed);
+        assert_eq!("entropy".parse::<WireCodec>().unwrap(), WireCodec::Entropy);
+        assert!("huffman".parse::<WireCodec>().is_err());
+        assert_eq!(WireCodec::Entropy.to_string(), "entropy");
+        assert_eq!(WireCodec::default(), WireCodec::Fixed);
     }
 
     #[test]

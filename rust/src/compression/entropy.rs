@@ -1,0 +1,797 @@
+//! Entropy coders for the [`WireCodec::Entropy`] wire format: per-block
+//! canonical **length-limited Huffman** over trit triples (RFC 1951 style —
+//! the header carries only code lengths) and **Rice/Golomb** codes for
+//! zig-zagged QSGD level magnitudes, each with a per-block escape back to
+//! fixed packing when entropy coding would expand.
+//!
+//! [`WireCodec::Entropy`]: super::codec::WireCodec::Entropy
+//!
+//! Everything here is deterministic: code lengths come from package-merge
+//! over exact integer symbol counts with index-order tie-breaks, the Rice
+//! parameter is an exact integer cost argmin, and no container iteration
+//! order or wall-clock enters any decision. Encoding is a pure function of
+//! the payload, so `compress_sharded` stays compatible — entropy encode is
+//! the packed-serial step, exactly like the base-243 `fill` today.
+//!
+//! Decoding is adversarial-input safe: every bit read is bounds-checked
+//! ([`CheckedBitReader`]), declared padding must be zero, and malformed
+//! frames surface as structured [`DecodeError`]s — never panics, never
+//! out-of-bounds reads (pinned by `tests/adversarial_codec.rs` and the
+//! miri CI job).
+
+use super::codec::{levels_bits_per, BitWriter};
+
+/// Trits per codec block. Divisible by 15 = lcm(3, 5) so both the Huffman
+/// triple alphabet and the base-243 escape pack the block without partial
+/// groups (except in the final block of a stream).
+pub(crate) const TRIT_BLOCK: usize = 12_240;
+/// Levels per codec block (Rice/Golomb path). A multiple of 8, so the
+/// fixed-packing escape is byte-aligned for every level width.
+pub(crate) const LEVEL_BLOCK: usize = 4096;
+/// Huffman code length limit. 2^7 = 128 ≥ 27 symbols, so a valid code
+/// always exists, and codes fit a 3-bit length field in the header.
+const MAX_CODE_LEN: u32 = 7;
+/// Trit-triple alphabet size: 3^3.
+const NSYM: usize = 27;
+/// Per-block flags byte, bit 0: this block escaped to fixed packing.
+const FLAG_ESCAPE: u8 = 0b1;
+/// Longest legal Rice unary run: zigzag values are ≤ 254 (levels are i8),
+/// so a run beyond this is corrupt, not just improbable.
+const RICE_MAX_RUN: u32 = 255;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Structured decode failure for entropy-coded frames. Every malformed
+/// input maps to one of these — decoding never panics and never reads out
+/// of bounds. Carried through [`anyhow::Error`] so callers can
+/// `downcast_ref::<DecodeError>()`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// The bitstream ended before the declared content did.
+    Truncated,
+    /// Huffman code-length table is empty, oversubscribed, or incomplete
+    /// (Kraft sum ≠ 1), or a read code falls outside every length class.
+    BadCodeLengths,
+    /// A Rice unary run exceeded the longest legal run for i8 levels.
+    RiceOverrun,
+    /// Bytes remain after the final block of the final section.
+    TrailingGarbage,
+    /// Padding bits up to a byte boundary were not zero.
+    BadPadding,
+    /// A block flags byte has reserved bits set (or an escape block with a
+    /// nonzero Rice parameter).
+    BadBlockHeader,
+    /// A decoded symbol or level falls outside its declared range.
+    ValueOutOfRange,
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            DecodeError::Truncated => "entropy frame truncated mid-stream",
+            DecodeError::BadCodeLengths => "invalid Huffman code-length table",
+            DecodeError::RiceOverrun => "Rice unary run past end of legal range",
+            DecodeError::TrailingGarbage => "trailing bytes after final block",
+            DecodeError::BadPadding => "nonzero padding bits at byte boundary",
+            DecodeError::BadBlockHeader => "invalid block flags byte",
+            DecodeError::ValueOutOfRange => "decoded value out of declared range",
+        };
+        f.write_str(s)
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+// ---------------------------------------------------------------------------
+// Checked bit reader
+// ---------------------------------------------------------------------------
+
+/// MSB-first bit reader that refuses to read past the end of its buffer —
+/// the adversarial-input counterpart of the codec's zero-padding
+/// [`BitReader`](super::codec). Tracks consumption so block decoding can
+/// resume byte-aligned parsing after a bitstream section.
+pub(crate) struct CheckedBitReader<'a> {
+    buf: &'a [u8],
+    /// Next byte to load into the accumulator.
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> CheckedBitReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Bits still readable.
+    fn available(&self) -> u64 {
+        (self.buf.len() - self.pos) as u64 * 8 + self.nbits as u64
+    }
+
+    /// Read the next `n` bits (MSB-first), or [`DecodeError::Truncated`].
+    pub(crate) fn try_read(&mut self, n: u32) -> Result<u64, DecodeError> {
+        debug_assert!(n <= 57);
+        if (n as u64) > self.available() {
+            return Err(DecodeError::Truncated);
+        }
+        while self.nbits < n {
+            self.acc = (self.acc << 8) | self.buf[self.pos] as u64;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        self.nbits -= n;
+        Ok((self.acc >> self.nbits) & if n == 0 { 0 } else { (1u64 << n) - 1 })
+    }
+
+    /// Consume padding up to the next byte boundary; the pad bits must be
+    /// zero ([`DecodeError::BadPadding`] otherwise).
+    pub(crate) fn align_byte(&mut self) -> Result<(), DecodeError> {
+        let pad = self.nbits % 8;
+        if pad > 0 && self.try_read(pad)? != 0 {
+            return Err(DecodeError::BadPadding);
+        }
+        Ok(())
+    }
+
+    /// Whole bytes consumed so far (only meaningful when byte-aligned).
+    pub(crate) fn bytes_consumed(&self) -> usize {
+        debug_assert_eq!(self.nbits % 8, 0);
+        self.pos - (self.nbits / 8) as usize
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Length-limited Huffman (package-merge) + RFC 1951 canonical codes
+// ---------------------------------------------------------------------------
+
+/// Optimal length-limited code lengths for `weights` via package-merge
+/// (Larmore–Hirschberg). Zero-weight symbols get length 0; a single used
+/// symbol gets length 1 (its canonical code is the single bit `0`).
+/// Deterministic: leaves are ordered by (weight, symbol index) with a
+/// stable sort, and ties between leaves and packages resolve leaf-first.
+fn package_merge(weights: &[u64; NSYM], limit: u32) -> [u8; NSYM] {
+    let mut lens = [0u8; NSYM];
+    let used: Vec<usize> = (0..NSYM).filter(|&i| weights[i] > 0).collect();
+    match used.len() {
+        0 => return lens,
+        1 => {
+            lens[used[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    // (weight, per-symbol multiplicity) — multiplicities let the final
+    // selection count how many of the chosen packages contain each leaf,
+    // which is exactly that leaf's code length.
+    let mut leaves: Vec<(u64, [u8; NSYM])> = used
+        .iter()
+        .map(|&i| {
+            let mut c = [0u8; NSYM];
+            c[i] = 1;
+            (weights[i], c)
+        })
+        .collect();
+    leaves.sort_by_key(|&(w, _)| w); // stable: index order breaks ties
+
+    let mut list = leaves.clone();
+    for _ in 1..limit {
+        // Package: pair up adjacent entries, dropping an odd leftover.
+        let mut packages: Vec<(u64, [u8; NSYM])> = Vec::new();
+        for pair in list.chunks_exact(2) {
+            let mut c = pair[0].1;
+            for (ci, &pi) in c.iter_mut().zip(pair[1].1.iter()) {
+                *ci += pi;
+            }
+            packages.push((pair[0].0 + pair[1].0, c));
+        }
+        // Merge fresh leaves with the packages, leaf-first on equal weight.
+        let mut merged = Vec::with_capacity(leaves.len() + packages.len());
+        let (mut li, mut pi) = (0, 0);
+        while li < leaves.len() || pi < packages.len() {
+            let take_leaf = match (leaves.get(li), packages.get(pi)) {
+                (Some(l), Some(p)) => l.0 <= p.0,
+                (Some(_), None) => true,
+                _ => false,
+            };
+            if take_leaf {
+                merged.push(leaves[li]);
+                li += 1;
+            } else {
+                merged.push(packages[pi]);
+                pi += 1;
+            }
+        }
+        list = merged;
+    }
+    // The first 2n−2 entries of the final list are the chosen packages;
+    // each leaf's length is its multiplicity across them.
+    for (_, c) in list.iter().take(2 * used.len() - 2) {
+        for (l, &ci) in lens.iter_mut().zip(c.iter()) {
+            *l += ci;
+        }
+    }
+    lens
+}
+
+/// RFC 1951 §3.2.2 canonical code assignment: codes of each length are
+/// consecutive integers, starting where the previous length left off.
+/// Returns `(code, len)` per symbol (len 0 = unused).
+fn canonical_codes(lens: &[u8; NSYM]) -> [(u16, u8); NSYM] {
+    let mut bl_count = [0u16; MAX_CODE_LEN as usize + 1];
+    for &l in lens.iter() {
+        bl_count[l as usize] += u16::from(l > 0);
+    }
+    let mut next_code = [0u16; MAX_CODE_LEN as usize + 1];
+    let mut code = 0u16;
+    for l in 1..=MAX_CODE_LEN as usize {
+        code = (code + bl_count[l - 1]) << 1;
+        next_code[l] = code;
+    }
+    let mut out = [(0u16, 0u8); NSYM];
+    for (sym, &l) in lens.iter().enumerate() {
+        if l > 0 {
+            out[sym] = (next_code[l as usize], l);
+            next_code[l as usize] += 1;
+        }
+    }
+    out
+}
+
+/// Canonical decoder tables: per length, the first code and the slice of
+/// symbols (ordered by (length, symbol)) that length covers.
+struct CanonDecoder {
+    first: [u16; MAX_CODE_LEN as usize + 1],
+    count: [u16; MAX_CODE_LEN as usize + 1],
+    base: [u16; MAX_CODE_LEN as usize + 1],
+    syms: Vec<u8>,
+}
+
+impl CanonDecoder {
+    /// Validate a code-length table and build decode tables. Rejects empty
+    /// tables, and any multi-symbol table whose Kraft sum is not exactly 1
+    /// (both oversubscribed and incomplete codes — a complete code is what
+    /// makes "any bit pattern decodes or truncates" true, so decoding can
+    /// only fail with [`DecodeError::Truncated`] mid-symbol).
+    fn new(lens: &[u8; NSYM]) -> Result<Self, DecodeError> {
+        let used = lens.iter().filter(|&&l| l > 0).count();
+        if used == 0 {
+            return Err(DecodeError::BadCodeLengths);
+        }
+        if used == 1 {
+            // Single-symbol block: RFC 1951-style degenerate code — one
+            // symbol, one bit, code 0. Any other length is malformed.
+            let sym = lens.iter().position(|&l| l > 0).unwrap();
+            if lens[sym] != 1 {
+                return Err(DecodeError::BadCodeLengths);
+            }
+        } else {
+            let mut kraft = 0u32;
+            for &l in lens.iter().filter(|&&l| l > 0) {
+                kraft += 1u32 << (MAX_CODE_LEN - l as u32);
+            }
+            if kraft != 1 << MAX_CODE_LEN {
+                return Err(DecodeError::BadCodeLengths);
+            }
+        }
+        let codes = canonical_codes(lens);
+        let mut first = [0u16; MAX_CODE_LEN as usize + 1];
+        let mut count = [0u16; MAX_CODE_LEN as usize + 1];
+        let mut base = [0u16; MAX_CODE_LEN as usize + 1];
+        let mut syms = Vec::with_capacity(used);
+        for l in 1..=MAX_CODE_LEN as usize {
+            base[l] = syms.len() as u16;
+            for (sym, &(code, len)) in codes.iter().enumerate() {
+                if len as usize == l {
+                    if count[l] == 0 {
+                        first[l] = code;
+                    }
+                    count[l] += 1;
+                    syms.push(sym as u8);
+                }
+            }
+        }
+        Ok(Self { first, count, base, syms })
+    }
+
+    /// Decode one symbol by walking lengths (canonical decode): extend the
+    /// code a bit at a time and check it against each length's range.
+    fn decode_symbol(&self, br: &mut CheckedBitReader<'_>) -> Result<u8, DecodeError> {
+        let mut code = 0u16;
+        for l in 1..=MAX_CODE_LEN as usize {
+            code = (code << 1) | br.try_read(1)? as u16;
+            if self.count[l] > 0 && code >= self.first[l] && code < self.first[l] + self.count[l] {
+                return Ok(self.syms[(self.base[l] + code - self.first[l]) as usize]);
+            }
+        }
+        // Unreachable for complete codes; reachable for the degenerate
+        // single-symbol code when a `1` bit appears.
+        Err(DecodeError::BadCodeLengths)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ternary section: Huffman over trit triples, base-243 escape
+// ---------------------------------------------------------------------------
+
+/// Map up to three trits (t ∈ {-1, 0, 1}) to a symbol in 0..27; missing
+/// trailing trits (final triple of the final block) pad as 0.
+fn triple_symbol(tri: &[i8]) -> usize {
+    let a = (tri[0] + 1) as usize;
+    let b = tri.get(1).map_or(1, |&t| (t + 1) as usize);
+    let c = tri.get(2).map_or(1, |&t| (t + 1) as usize);
+    a + 3 * b + 9 * c
+}
+
+/// Append the entropy-coded trit section: blocks of [`TRIT_BLOCK`] trits,
+/// each `[flags][payload]` with payload either a canonical-Huffman stream
+/// over trit triples (3-bit code-length header × 27 symbols, then codes,
+/// zero-padded to a byte) or, when that would not be smaller, the escape:
+/// the block's trits packed base-243 exactly as the fixed codec does.
+pub(crate) fn encode_ternary_sections(trits: &[i8], out: &mut Vec<u8>) {
+    for block in trits.chunks(TRIT_BLOCK) {
+        let mut freq = [0u64; NSYM];
+        for tri in block.chunks(3) {
+            freq[triple_symbol(tri)] += 1;
+        }
+        let lens = package_merge(&freq, MAX_CODE_LEN);
+        let mut coded_bits = 3 * NSYM as u64; // code-length header
+        for (sym, &f) in freq.iter().enumerate() {
+            coded_bits += f * lens[sym] as u64;
+        }
+        let escape_bytes = block.len().div_ceil(5);
+        if coded_bits.div_ceil(8) < escape_bytes as u64 {
+            out.push(0);
+            let codes = canonical_codes(&lens);
+            let mut bw = BitWriter::new();
+            for &l in lens.iter() {
+                bw.write(l as u64, 3);
+            }
+            for tri in block.chunks(3) {
+                let (code, len) = codes[triple_symbol(tri)];
+                bw.write(code as u64, len as u32);
+            }
+            out.extend_from_slice(&bw.finish());
+        } else {
+            out.push(FLAG_ESCAPE);
+            for chunk in block.chunks(5) {
+                let mut byte: u16 = 0;
+                for &t in chunk.iter().rev() {
+                    byte = byte * 3 + (t + 1) as u16;
+                }
+                out.push(byte as u8);
+            }
+        }
+    }
+}
+
+/// Decode the trit section written by [`encode_ternary_sections`],
+/// advancing `*pos` past it. Strict: reserved flag bits, padding bits and
+/// base-243 pad digits must all be zero, and every decoded value must be
+/// in range.
+pub(crate) fn decode_ternary_sections(
+    buf: &[u8],
+    pos: &mut usize,
+    dim: usize,
+) -> Result<Vec<i8>, DecodeError> {
+    let mut trits = Vec::with_capacity(dim);
+    let mut remaining = dim;
+    while remaining > 0 {
+        let ntrits = remaining.min(TRIT_BLOCK);
+        let flags = *buf.get(*pos).ok_or(DecodeError::Truncated)?;
+        *pos += 1;
+        if flags & !FLAG_ESCAPE != 0 {
+            return Err(DecodeError::BadBlockHeader);
+        }
+        if flags & FLAG_ESCAPE != 0 {
+            let nbytes = ntrits.div_ceil(5);
+            if buf.len() < *pos + nbytes {
+                return Err(DecodeError::Truncated);
+            }
+            let mut left = ntrits;
+            for &b in &buf[*pos..*pos + nbytes] {
+                let take = left.min(5);
+                // Pad digits above the last trit of a partial final chunk
+                // must be zero: the byte must be < 3^take.
+                if (b as u16) >= 3u16.pow(take as u32) {
+                    return Err(DecodeError::ValueOutOfRange);
+                }
+                let mut byte = b as u16;
+                for _ in 0..take {
+                    trits.push((byte % 3) as i8 - 1);
+                    byte /= 3;
+                }
+                left -= take;
+            }
+            *pos += nbytes;
+        } else {
+            let mut br = CheckedBitReader::new(&buf[*pos..]);
+            let mut lens = [0u8; NSYM];
+            for l in lens.iter_mut() {
+                *l = br.try_read(3)? as u8;
+            }
+            let dec = CanonDecoder::new(&lens)?;
+            let mut left = ntrits;
+            while left > 0 {
+                let sym = dec.decode_symbol(&mut br)?;
+                let take = left.min(3);
+                let digits = [sym % 3, (sym / 3) % 3, (sym / 9) % 3];
+                for (i, &d) in digits.iter().enumerate() {
+                    if i < take {
+                        trits.push(d as i8 - 1);
+                    } else if d != 1 {
+                        // Pad trits of the final triple must be zero.
+                        return Err(DecodeError::ValueOutOfRange);
+                    }
+                }
+                left -= take;
+            }
+            br.align_byte()?;
+            *pos += br.bytes_consumed();
+        }
+        remaining -= ntrits;
+    }
+    Ok(trits)
+}
+
+// ---------------------------------------------------------------------------
+// Levels section: Rice/Golomb on zig-zagged levels, fixed-width escape
+// ---------------------------------------------------------------------------
+
+/// Zig-zag an i8 level to a small unsigned: 0, -1, 1, -2, 2 → 0, 1, 2, 3, 4.
+#[inline]
+fn zigzag(l: i8) -> u32 {
+    let v = l as i32;
+    ((v << 1) ^ (v >> 31)) as u32
+}
+
+#[inline]
+fn unzigzag(u: u32) -> i8 {
+    (((u >> 1) as i32) ^ -((u & 1) as i32)) as i8
+}
+
+/// Exact bit cost of Rice-coding `values` with parameter `k`:
+/// `Σ (v >> k) + 1 + k` (unary quotient + terminator + k remainder bits).
+fn rice_cost(values: &[u32], k: u32) -> u64 {
+    let mut bits = 0u64;
+    for &v in values {
+        bits += (v >> k) as u64 + 1 + k as u64;
+    }
+    bits
+}
+
+/// Append the entropy-coded level section: blocks of [`LEVEL_BLOCK`]
+/// levels, each `[flags][payload]`. Flags carry the Rice parameter `k`
+/// (bits 1..=3), chosen per block as the exact integer cost argmin over
+/// k ∈ 0..=7 (smallest k on ties); payload is the Rice stream, zero-padded
+/// to a byte. Escape (bit 0, k = 0): the block's levels packed at the
+/// fixed `levels_bits_per(s)` width, exactly as the fixed codec does.
+pub(crate) fn encode_levels_sections(levels: &[i8], s: u8, out: &mut Vec<u8>) {
+    let bits_per = levels_bits_per(s);
+    for block in levels.chunks(LEVEL_BLOCK) {
+        let us: Vec<u32> = block.iter().map(|&l| zigzag(l)).collect();
+        let mut best_k = 0u32;
+        let mut best_bits = rice_cost(&us, 0);
+        for k in 1..=7u32 {
+            let bits = rice_cost(&us, k);
+            if bits < best_bits {
+                best_bits = bits;
+                best_k = k;
+            }
+        }
+        let escape_bytes = (bits_per as u64 * block.len() as u64).div_ceil(8);
+        if best_bits.div_ceil(8) < escape_bytes {
+            out.push((best_k as u8) << 1);
+            let mut bw = BitWriter::new();
+            for &u in &us {
+                let mut q = u >> best_k;
+                while q >= 32 {
+                    bw.write(0xFFFF_FFFF, 32);
+                    q -= 32;
+                }
+                // q remaining 1-bits, the 0 terminator, then k remainder bits.
+                bw.write(((1u64 << q) - 1) << 1, q + 1);
+                bw.write(u as u64, best_k);
+            }
+            out.extend_from_slice(&bw.finish());
+        } else {
+            out.push(FLAG_ESCAPE);
+            let mut bw = BitWriter::new();
+            for &l in block {
+                bw.write((l as i16 + s as i16) as u64, bits_per);
+            }
+            out.extend_from_slice(&bw.finish());
+        }
+    }
+}
+
+/// Decode the level section written by [`encode_levels_sections`],
+/// advancing `*pos` past it. Strict: reserved flag bits and padding must
+/// be zero, Rice runs are capped, and every level must land in `[-s, s]`.
+pub(crate) fn decode_levels_sections(
+    buf: &[u8],
+    pos: &mut usize,
+    dim: usize,
+    s: u8,
+) -> Result<Vec<i8>, DecodeError> {
+    let bits_per = levels_bits_per(s);
+    let max_zigzag = 2 * s as u32;
+    let mut levels = Vec::with_capacity(dim);
+    let mut remaining = dim;
+    while remaining > 0 {
+        let nlev = remaining.min(LEVEL_BLOCK);
+        let flags = *buf.get(*pos).ok_or(DecodeError::Truncated)?;
+        *pos += 1;
+        if flags & 0xF0 != 0 {
+            return Err(DecodeError::BadBlockHeader);
+        }
+        let k = (flags >> 1) as u32 & 0x7;
+        let mut br = CheckedBitReader::new(&buf[*pos..]);
+        if flags & FLAG_ESCAPE != 0 {
+            if k != 0 {
+                return Err(DecodeError::BadBlockHeader);
+            }
+            for _ in 0..nlev {
+                let v = br.try_read(bits_per)? as u32;
+                if v > max_zigzag {
+                    // Stored form is l + s ∈ [0, 2s].
+                    return Err(DecodeError::ValueOutOfRange);
+                }
+                levels.push((v as i16 - s as i16) as i8);
+            }
+        } else {
+            for _ in 0..nlev {
+                let mut q = 0u32;
+                while br.try_read(1)? == 1 {
+                    q += 1;
+                    if q > RICE_MAX_RUN {
+                        return Err(DecodeError::RiceOverrun);
+                    }
+                }
+                let r = br.try_read(k)? as u32;
+                let u = (q << k) | r;
+                if u > max_zigzag {
+                    return Err(DecodeError::ValueOutOfRange);
+                }
+                levels.push(unzigzag(u));
+            }
+        }
+        br.align_byte()?;
+        *pos += br.bytes_consumed();
+        remaining -= nlev;
+    }
+    Ok(levels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- bit reader -------------------------------------------------------
+
+    #[test]
+    fn checked_reader_reads_and_truncates() {
+        let mut br = CheckedBitReader::new(&[0b1010_1100, 0b0100_0000]);
+        assert_eq!(br.try_read(3).unwrap(), 0b101);
+        assert_eq!(br.try_read(5).unwrap(), 0b01100);
+        assert_eq!(br.try_read(2).unwrap(), 0b01);
+        assert_eq!(br.try_read(7), Err(DecodeError::Truncated));
+        // The failed read consumed nothing: the remaining 6 bits still read.
+        assert_eq!(br.try_read(6).unwrap(), 0);
+    }
+
+    #[test]
+    fn checked_reader_align_rejects_nonzero_pad() {
+        let mut br = CheckedBitReader::new(&[0b1000_0001]);
+        assert_eq!(br.try_read(1).unwrap(), 1);
+        assert_eq!(br.align_byte(), Err(DecodeError::BadPadding));
+        let mut ok = CheckedBitReader::new(&[0b1000_0000]);
+        assert_eq!(ok.try_read(1).unwrap(), 1);
+        ok.align_byte().unwrap();
+        assert_eq!(ok.bytes_consumed(), 1);
+    }
+
+    // -- Huffman ----------------------------------------------------------
+
+    /// Kraft equality for every multi-symbol table package-merge emits, and
+    /// the length limit actually binding.
+    #[test]
+    fn package_merge_lengths_are_complete_and_limited() {
+        // Wildly skewed counts that would exceed 7 bits without the limit.
+        let mut w = [0u64; NSYM];
+        for (i, wi) in w.iter_mut().enumerate() {
+            *wi = 1u64 << (i.min(20));
+        }
+        let lens = package_merge(&w, MAX_CODE_LEN);
+        let kraft: u32 = lens.iter().filter(|&&l| l > 0).map(|&l| 1u32 << (7 - l as u32)).sum();
+        assert_eq!(kraft, 128);
+        assert!(lens.iter().all(|&l| l <= 7), "{lens:?}");
+    }
+
+    #[test]
+    fn package_merge_matches_entropy_on_uniform() {
+        // 27 equal weights: lengths must be 4 and 5 (27 codes in ≤ 5 bits),
+        // complete, with the shorter codes exactly filling the tree.
+        let w = [10u64; NSYM];
+        let lens = package_merge(&w, MAX_CODE_LEN);
+        let kraft: u32 = lens.iter().map(|&l| 1u32 << (7 - l as u32)).sum();
+        assert_eq!(kraft, 128);
+        assert!(lens.iter().all(|&l| l == 4 || l == 5), "{lens:?}");
+    }
+
+    #[test]
+    fn single_symbol_code_is_one_bit() {
+        let mut w = [0u64; NSYM];
+        w[13] = 4080; // the all-zero triple
+        let lens = package_merge(&w, MAX_CODE_LEN);
+        assert_eq!(lens[13], 1);
+        assert!(lens.iter().enumerate().all(|(i, &l)| i == 13 || l == 0));
+        let dec = CanonDecoder::new(&lens).unwrap();
+        let mut br = CheckedBitReader::new(&[0b0000_0000]);
+        for _ in 0..8 {
+            assert_eq!(dec.decode_symbol(&mut br).unwrap(), 13);
+        }
+        // A `1` bit cannot be a codeword of the degenerate code.
+        let mut bad = CheckedBitReader::new(&[0b1000_0000]);
+        assert_eq!(dec.decode_symbol(&mut bad), Err(DecodeError::BadCodeLengths));
+    }
+
+    #[test]
+    fn canonical_decoder_rejects_bad_tables() {
+        // Oversubscribed: three codes of length 1.
+        let mut over = [0u8; NSYM];
+        over[0] = 1;
+        over[1] = 1;
+        over[2] = 1;
+        assert_eq!(CanonDecoder::new(&over).err(), Some(DecodeError::BadCodeLengths));
+        // Incomplete: a single length-3 code.
+        let mut incomplete = [0u8; NSYM];
+        incomplete[0] = 3;
+        incomplete[1] = 3;
+        assert_eq!(CanonDecoder::new(&incomplete).err(), Some(DecodeError::BadCodeLengths));
+        // Empty.
+        assert_eq!(CanonDecoder::new(&[0u8; NSYM]).err(), Some(DecodeError::BadCodeLengths));
+    }
+
+    #[test]
+    fn huffman_roundtrip_random_trits() {
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for &n in &[0usize, 1, 2, 3, 5, 29, 3 * TRIT_BLOCK / 2 + 1] {
+            let trits: Vec<i8> = (0..n).map(|_| (next() % 3) as i8 - 1).collect();
+            let mut out = Vec::new();
+            encode_ternary_sections(&trits, &mut out);
+            let mut pos = 0;
+            let back = decode_ternary_sections(&out, &mut pos, n).unwrap();
+            assert_eq!(back, trits, "n={n}");
+            assert_eq!(pos, out.len(), "n={n} consumed");
+        }
+    }
+
+    #[test]
+    fn skewed_trits_beat_base243() {
+        // ~90% zeros — the DORE regime. Entropy must beat 1.6 bits/trit.
+        let mut state = 7u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let n = TRIT_BLOCK;
+        let trits: Vec<i8> =
+            (0..n).map(|_| if next() % 10 == 0 { (next() % 2) as i8 * 2 - 1 } else { 0 }).collect();
+        let mut out = Vec::new();
+        encode_ternary_sections(&trits, &mut out);
+        assert!(out.len() < n.div_ceil(5), "entropy {} vs base-243 {}", out.len(), n.div_ceil(5));
+        let mut pos = 0;
+        assert_eq!(decode_ternary_sections(&out, &mut pos, n).unwrap(), trits);
+    }
+
+    // -- Rice -------------------------------------------------------------
+
+    #[test]
+    fn zigzag_roundtrip_all_i8() {
+        for l in i8::MIN..=i8::MAX {
+            let u = zigzag(l);
+            assert!(u <= 255);
+            assert_eq!(unzigzag(u), l);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn rice_roundtrip_random_levels() {
+        let mut state = 42u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for &(n, s) in &[(0usize, 1u8), (1, 1), (7, 3), (100, 15), (LEVEL_BLOCK + 17, 127)] {
+            let levels: Vec<i8> =
+                (0..n).map(|_| ((next() % (2 * s as u64 + 1)) as i16 - s as i16) as i8).collect();
+            let mut out = Vec::new();
+            encode_levels_sections(&levels, s, &mut out);
+            let mut pos = 0;
+            let back = decode_levels_sections(&out, &mut pos, n, s).unwrap();
+            assert_eq!(back, levels, "n={n} s={s}");
+            assert_eq!(pos, out.len(), "n={n} s={s} consumed");
+        }
+    }
+
+    #[test]
+    fn skewed_levels_beat_fixed_width() {
+        // QSGD levels concentrate near zero: geometric-ish magnitudes with
+        // s = 15 (4 fixed bits each) should Rice-code well under 4 bits.
+        let mut state = 3u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let s = 15u8;
+        let n = LEVEL_BLOCK;
+        let levels: Vec<i8> = (0..n)
+            .map(|_| {
+                let mut m = 0i16;
+                while next() % 3 == 0 && m < s as i16 {
+                    m += 1;
+                }
+                (if next() % 2 == 0 { m } else { -m }) as i8
+            })
+            .collect();
+        let mut out = Vec::new();
+        encode_levels_sections(&levels, s, &mut out);
+        let fixed = (levels_bits_per(s) as usize * n).div_ceil(8);
+        assert!(out.len() < fixed, "rice {} vs fixed {}", out.len(), fixed);
+        let mut pos = 0;
+        assert_eq!(decode_levels_sections(&out, &mut pos, n, s).unwrap(), levels);
+    }
+
+    #[test]
+    fn rice_decode_rejects_overrun_and_range() {
+        // k=0 block (flags 0) of one level: 0xFF... is an endless unary run.
+        let buf = [0u8, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF,
+            0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF,
+            0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF];
+        let mut pos = 0;
+        assert_eq!(
+            decode_levels_sections(&buf, &mut pos, 1, 1).err(),
+            Some(DecodeError::RiceOverrun)
+        );
+        // u = 3 > 2s for s = 1: three 1-bits then the terminator.
+        let buf2 = [0u8, 0b1110_0000];
+        let mut pos2 = 0;
+        assert_eq!(
+            decode_levels_sections(&buf2, &mut pos2, 1, 1).err(),
+            Some(DecodeError::ValueOutOfRange)
+        );
+    }
+
+    #[test]
+    fn block_header_reserved_bits_rejected() {
+        let mut pos = 0;
+        assert_eq!(
+            decode_ternary_sections(&[0b0000_0010, 0], &mut pos, 1).err(),
+            Some(DecodeError::BadBlockHeader)
+        );
+        let mut pos2 = 0;
+        assert_eq!(
+            decode_levels_sections(&[0b0001_0000, 0], &mut pos2, 1, 1).err(),
+            Some(DecodeError::BadBlockHeader)
+        );
+        // Escape with nonzero k is contradictory.
+        let mut pos3 = 0;
+        assert_eq!(
+            decode_levels_sections(&[0b0000_0011, 0], &mut pos3, 1, 1).err(),
+            Some(DecodeError::BadBlockHeader)
+        );
+    }
+}

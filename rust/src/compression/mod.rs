@@ -12,6 +12,7 @@
 //! only used by the DoubleSqueeze(topk) baseline.
 
 pub mod codec;
+pub mod entropy;
 pub mod identity;
 pub mod pnorm;
 pub mod qsgd;
@@ -20,6 +21,7 @@ pub mod signsgd;
 pub mod sparsify;
 pub mod topk;
 
+pub use codec::WireCodec;
 pub use identity::Identity;
 pub use pnorm::{PNorm, PNormQuantizer};
 pub use qsgd::QsgdQuantizer;
@@ -295,6 +297,12 @@ impl Compressed {
     /// (Fig. 2, §3.2 compression-rate table).
     pub fn wire_bits(&self) -> u64 {
         codec::wire_bits(self)
+    }
+
+    /// [`Compressed::wire_bits`] under an explicit [`codec::WireCodec`]:
+    /// the measured size of the frame [`codec::encode_with`] would emit.
+    pub fn wire_bits_with(&self, wire: codec::WireCodec) -> u64 {
+        codec::wire_bits_with(self, wire)
     }
 }
 

@@ -351,4 +351,24 @@ mod tests {
         // all |x_i| == norm → every trit fires → exact reconstruction
         assert_eq!(c.decompress(), x);
     }
+
+    /// The paper-default ternary stream is mostly zeros, so the entropy
+    /// wire codec's Huffman-over-triples path must (a) round-trip the
+    /// payload bit-for-bit and (b) beat base-243's 1.6 bits/trit by a
+    /// wide margin — this is the stream the ≥ 25 % uplink-reduction
+    /// acceptance bar is measured on.
+    #[test]
+    fn ternary_entropy_codec_compresses_paper_default_stream() {
+        use crate::compression::codec::{self, WireCodec};
+        let q = PNormQuantizer::paper_default();
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let x: Vec<F> = (0..30_000).map(|_| 0.01 * rng.next_gaussian()).collect();
+        let c = q.compress(&x, &mut rng);
+        let fixed = codec::wire_bits_with(&c, WireCodec::Fixed);
+        let ent = codec::wire_bits_with(&c, WireCodec::Entropy);
+        assert!(ent * 4 <= fixed * 3, "entropy {ent} vs fixed {fixed}: < 25% off");
+        let bytes = codec::encode_with(&c, WireCodec::Entropy);
+        assert_eq!(codec::decode(&bytes).unwrap(), c);
+        assert_eq!(ent, bytes.len() as u64 * 8);
+    }
 }

@@ -130,4 +130,26 @@ mod tests {
         err /= trials as f64;
         assert!(err <= q.variance_constant(48) * xsq * 1.05);
     }
+
+    /// QSGD level streams concentrate near zero, which is exactly what
+    /// the Rice/Golomb path of the entropy wire codec exploits: the
+    /// payload must round-trip bit-for-bit and never cost more than
+    /// fixed-width packing on the wire.
+    #[test]
+    fn levels_entropy_codec_roundtrip_and_no_expansion() {
+        use crate::compression::codec::{self, WireCodec};
+        for s in [1u8, 4, 15] {
+            let q = QsgdQuantizer::new(s, 64);
+            let mut rng = Xoshiro256::seed_from_u64(21);
+            let x: Vec<F> = (0..1000).map(|_| 0.05 * rng.next_gaussian()).collect();
+            let c = q.compress(&x, &mut rng);
+            let bytes = codec::encode_with(&c, WireCodec::Entropy);
+            assert_eq!(codec::decode(&bytes).unwrap(), c, "s={s}");
+            assert!(
+                codec::wire_bits_with(&c, WireCodec::Entropy)
+                    <= codec::wire_bits_with(&c, WireCodec::Fixed),
+                "s={s}"
+            );
+        }
+    }
 }

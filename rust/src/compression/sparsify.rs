@@ -81,4 +81,24 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(0);
         assert_eq!(q.compress(&x, &mut rng).decompress(), x);
     }
+
+    /// Sparse payloads have no entropy form — the Elias-γ gap stream is
+    /// already near-optimal — so the entropy codec must pass them through
+    /// as the identical fixed frame (same bytes, same accounting).
+    #[test]
+    fn sparse_entropy_codec_is_fixed_passthrough() {
+        use crate::compression::codec::{self, WireCodec};
+        let q = StochasticSparsifier::new(0.1);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let x: Vec<F> = (0..400).map(|_| rng.next_gaussian()).collect();
+        let c = q.compress(&x, &mut rng);
+        assert_eq!(
+            codec::encode_with(&c, WireCodec::Entropy),
+            codec::encode_with(&c, WireCodec::Fixed)
+        );
+        assert_eq!(
+            codec::wire_bits_with(&c, WireCodec::Entropy),
+            codec::wire_bits_with(&c, WireCodec::Fixed)
+        );
+    }
 }

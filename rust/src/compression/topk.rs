@@ -122,4 +122,27 @@ mod tests {
         let mut rng = Xoshiro256::seed_from_u64(0);
         assert_eq!(t.compress(&x, &mut rng).decompress(), x);
     }
+
+    /// Top-k emits sparse payloads; under the entropy codec they pass
+    /// through unchanged (bit-identical frame, equal accounting) and keep
+    /// decoding exactly — including clustered index runs, the worst case
+    /// for gap coding.
+    #[test]
+    fn topk_entropy_codec_is_fixed_passthrough() {
+        use crate::compression::codec::{self, WireCodec};
+        let t = TopK::new(16);
+        let mut x = vec![0.01f32; 300];
+        for (i, v) in x.iter_mut().enumerate().take(16) {
+            *v = 10.0 + i as F; // clustered winners: gaps of 1
+        }
+        let mut rng = Xoshiro256::seed_from_u64(0);
+        let c = t.compress(&x, &mut rng);
+        let bytes = codec::encode_with(&c, WireCodec::Entropy);
+        assert_eq!(bytes, codec::encode_with(&c, WireCodec::Fixed));
+        assert_eq!(codec::decode(&bytes).unwrap(), c);
+        assert_eq!(
+            codec::wire_bits_with(&c, WireCodec::Entropy),
+            bytes.len() as u64 * 8
+        );
+    }
 }

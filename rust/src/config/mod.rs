@@ -153,6 +153,9 @@ pub struct JobConfig {
     pub minibatch: Option<usize>,
     pub eval_every: usize,
     pub seed: u64,
+    /// Wire codec name (`"fixed"` | `"entropy"`), parsed into
+    /// [`crate::compression::WireCodec`] by the CLI layer.
+    pub wire_codec: String,
 }
 
 impl JobConfig {
@@ -171,6 +174,7 @@ impl JobConfig {
             minibatch: v.get("minibatch").and_then(Json::as_usize),
             eval_every: v.opt_usize("eval_every", 10),
             seed: v.opt_u64("seed", 42),
+            wire_codec: v.opt_str("wire_codec", "fixed").to_string(),
         })
     }
 

@@ -52,17 +52,17 @@ mod tests {
     }
 
     #[test]
-    fn traffic_accounting_close_to_inproc() {
-        // wire_bits() (analytic) vs encoded byte lengths (real): equal up
-        // to per-message byte padding.
+    fn traffic_accounting_matches_inproc_exactly() {
+        // InProc accounts wire_bits_with() on inline payloads; Threaded
+        // counts real encoded byte lengths. Both are byte-exact measures of
+        // the same frames, so they must agree to the bit, not a tolerance.
         let p = Arc::new(linreg_problem(60, 16, 3, 0.1, 4));
         let spec =
             TrainSpec { algo: AlgorithmKind::Dore, iters: 10, eval_every: 5, ..Default::default() };
         let a = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
         let b = Session::shared(p.clone()).spec(spec).transport(Threaded::new()).run().unwrap();
-        let tol = |x: u64, y: u64| (x as f64 - y as f64).abs() / (x as f64) < 0.05;
-        assert!(tol(a.uplink_bits, b.uplink_bits), "{} vs {}", a.uplink_bits, b.uplink_bits);
-        assert!(tol(a.downlink_bits, b.downlink_bits));
+        assert_eq!(a.uplink_bits, b.uplink_bits);
+        assert_eq!(a.downlink_bits, b.downlink_bits);
     }
 
     #[test]

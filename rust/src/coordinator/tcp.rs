@@ -790,9 +790,9 @@ impl Transport for TcpTransport {
         &mut self,
         round: usize,
         down: &Compressed,
-        _ctx: RoundCtx<'_>,
+        ctx: RoundCtx<'_>,
     ) -> anyhow::Result<u64> {
-        let bytes = codec::encode(down);
+        let bytes = codec::encode_with(down, ctx.spec.wire_codec);
         let bits = bytes.len() as u64 * 8;
         // hand off to the per-worker writer threads: the master's loop
         // stays free to keep reading uplinks, which is what prevents the

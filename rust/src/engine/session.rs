@@ -24,7 +24,7 @@ use super::reduce::ReducePool;
 use super::registry;
 use super::transport::{InProc, RoundCtx, Transport};
 use crate::algorithms::{AlgorithmKind, HyperParams, MasterNode, WorkerNode};
-use crate::compression::{Compressed, Xoshiro256};
+use crate::compression::{Compressed, WireCodec, Xoshiro256};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::metrics::{RunMetrics, Stopwatch};
 use crate::models::{linalg, Problem};
@@ -85,6 +85,14 @@ pub struct TrainSpec {
     /// Unlike `reduce_threads`, this knob **changes the trajectory** for
     /// `D ≥ 2` — deterministically, and identically on every transport.
     pub pipeline_depth: usize,
+    /// Wire codec for every payload this session encodes or accounts
+    /// ([`crate::compression::WireCodec`], default: fixed packing).
+    /// `entropy` switches uplinks/downlinks to the per-block
+    /// Huffman/Rice frames — never larger than fixed, usually much
+    /// smaller on skewed trit/level streams. Purely a wire-layer choice:
+    /// the decoded payloads are bit-identical, so the trajectory does not
+    /// change — only `RunMetrics` uplink/downlink bits do.
+    pub wire_codec: WireCodec,
 }
 
 impl TrainSpec {
@@ -118,6 +126,7 @@ impl Default for TrainSpec {
             start_round: 0,
             reduce_threads: 1,
             pipeline_depth: 1,
+            wire_codec: WireCodec::Fixed,
         }
     }
 }
@@ -310,6 +319,14 @@ impl<'p> Session<'p> {
     /// see [`TrainSpec::pipeline_depth`].
     pub fn pipeline_depth(mut self, depth: usize) -> Self {
         self.spec.pipeline_depth = depth;
+        self
+    }
+
+    /// Wire codec for every payload this session encodes (default:
+    /// [`WireCodec::Fixed`]). [`WireCodec::Entropy`] shrinks the wire
+    /// without touching the trajectory — see [`TrainSpec::wire_codec`].
+    pub fn wire_codec(mut self, codec: WireCodec) -> Self {
+        self.spec.wire_codec = codec;
         self
     }
 
@@ -523,7 +540,7 @@ impl<'p> Session<'p> {
                     let payload = f.payload.ok_or_else(|| {
                         anyhow::anyhow!("worker {i} was selected for round {t} but sent no uplink")
                     })?;
-                    round_up_bits += payload.wire_bits();
+                    round_up_bits += payload.wire_bits_with(spec.wire_codec);
                     res_sum += f.residual_norm;
                     participants += 1;
                     uplinks.push(Some(payload.into_compressed()?));

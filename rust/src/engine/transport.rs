@@ -52,7 +52,7 @@ use super::protocol::{DownlinkMsg, UplinkMsg};
 use super::session::TrainSpec;
 use crate::algorithms::WorkerNode;
 use crate::comm::{LinkSpec, NetSim, StragglerSpec};
-use crate::compression::{codec, Compressed, Xoshiro256};
+use crate::compression::{codec, Compressed, WireCodec, Xoshiro256};
 use crate::models::Problem;
 use crate::F;
 use std::collections::{BTreeMap, VecDeque};
@@ -66,20 +66,31 @@ use std::thread::JoinHandle;
 /// length).
 #[derive(Clone, Debug)]
 pub enum WirePayload {
-    /// Zero-copy: the payload itself; wire size is the exact analytic
-    /// [`Compressed::wire_bits`].
+    /// Zero-copy: the payload itself; wire size is the measured
+    /// [`Compressed::wire_bits_with`] of the frame the active codec would
+    /// put on a real wire.
     Inline(Compressed),
-    /// Encoded bytes as produced by [`codec::encode`]; wire size is the
-    /// length of the buffer that actually moved (differs from the analytic
-    /// count only by per-message byte padding).
+    /// Encoded bytes as produced by [`codec::encode_with`]; wire size is
+    /// the length of the buffer that actually moved — identical to the
+    /// inline accounting for the same payload and codec.
     Encoded(Vec<u8>),
 }
 
 impl WirePayload {
-    /// Exact wire size of this payload in bits.
+    /// Exact wire size of this payload in bits under the default
+    /// ([`WireCodec::Fixed`]) codec.
     pub fn wire_bits(&self) -> u64 {
+        self.wire_bits_with(WireCodec::Fixed)
+    }
+
+    /// Exact wire size under `wire`. An `Encoded` buffer is already the
+    /// measured frame (its codec was chosen at encode time); an `Inline`
+    /// payload is accounted by measuring what [`codec::encode_with`]
+    /// would emit — so zero-copy and byte-moving transports report
+    /// identical bits for identical payloads, whichever codec is active.
+    pub fn wire_bits_with(&self, wire: WireCodec) -> u64 {
         match self {
-            WirePayload::Inline(c) => c.wire_bits(),
+            WirePayload::Inline(c) => c.wire_bits_with(wire),
             WirePayload::Encoded(b) => b.len() as u64 * 8,
         }
     }
@@ -544,7 +555,7 @@ impl WorkerRoundDriver {
     ) -> Option<(Vec<u8>, f64)> {
         if spec.round_mask(round, self.n)[id] {
             let (up, residual_norm) = worker_uplink(node, problem, spec, round, id, grad);
-            let bytes = codec::encode(&up);
+            let bytes = codec::encode_with(&up, spec.wire_codec);
             if self.reuse {
                 self.last = Some(up);
             }
@@ -716,12 +727,12 @@ impl Transport for InProc {
         &mut self,
         round: usize,
         down: &Compressed,
-        _ctx: RoundCtx<'_>,
+        ctx: RoundCtx<'_>,
     ) -> anyhow::Result<u64> {
         for node in self.workers.iter_mut() {
             node.apply_downlink(round, down);
         }
-        Ok(down.wire_bits())
+        Ok(down.wire_bits_with(ctx.spec.wire_codec))
     }
 
     fn finish(&mut self) -> anyhow::Result<()> {
@@ -981,9 +992,9 @@ impl Transport for Threaded {
         &mut self,
         round: usize,
         down: &Compressed,
-        _ctx: RoundCtx<'_>,
+        ctx: RoundCtx<'_>,
     ) -> anyhow::Result<u64> {
-        let bytes = codec::encode(down);
+        let bytes = codec::encode_with(down, ctx.spec.wire_codec);
         let bits = bytes.len() as u64 * 8;
         for tx in &self.down_txs {
             tx.send(DownlinkMsg { round, bytes: bytes.clone() })
@@ -1140,7 +1151,7 @@ impl Transport for SimNet {
                 continue;
             }
             if let Some(p) = &f.payload {
-                uplink_bits += p.wire_bits();
+                uplink_bits += p.wire_bits_with(ctx.spec.wire_codec);
             }
             let ready =
                 self.straggler.ready_time(ctx.spec.seed, i, n, round, f.compute_seconds);

@@ -162,6 +162,8 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
               --checkpoint-every K [--checkpoint-path FILE] --resume FILE
               --reduce-threads N (master-side sharded reduction; 0 = all cores)
               --pipeline-depth D (in-flight rounds per link; 1 = synchronous)
+              --wire-codec fixed|entropy (wire frames; entropy = Huffman/Rice,
+                never larger, trajectory-neutral)
               --transport inproc|threads|tcp|simnet
               [--bandwidth BPS --straggler MULT[:FRAC[:JITTER_S]]]
               --distributed --csv FILE]
@@ -180,6 +182,7 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
             minibatch: job.minibatch,
             eval_every: job.eval_every,
             seed: job.seed,
+            wire_codec: job.wire_codec.parse()?,
             ..Default::default()
         };
         (prob, spec)
@@ -235,6 +238,12 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     // pass at the price of a (D−1)-round-stale gradient — deterministic
     // and transport-independent either way
     spec.pipeline_depth = f.num("pipeline-depth", 1)?;
+    // wire codec: what the frames on the wire look like — entropy coding
+    // shrinks them (never grows, by the whole-frame escape) without
+    // touching the trajectory; only the bit accounting moves
+    if let Some(w) = f.get("wire-codec") {
+        spec.wire_codec = w.parse()?;
+    }
     let n = prob.n_workers();
     // --transport inproc (default) | threads | tcp | simnet — all produce
     // bit-identical iterates; they differ only in what carries the bytes

@@ -1,0 +1,1030 @@
+#!/usr/bin/env python3
+"""Reference port of the wire codecs + adversarial corpus generator.
+
+This is a line-faithful Python port of `rust/src/compression/codec.rs` and
+`rust/src/compression/entropy.rs`, used for two things:
+
+1. **Cross-validation**: running this script executes a differential test
+   battery (roundtrips, `entropy <= fixed`, byte-exact accounting, the
+   DORE-regime compression-ratio bar) against the *same* frame format the
+   Rust code implements, so codec logic can be checked in environments
+   without a Rust toolchain. Any intentional change to the wire format
+   must be mirrored here (and will fail loudly if it isn't, because the
+   committed corpus below stops matching).
+
+2. **Corpus generation**: writes the hand-built malformed entropy frames
+   under this directory that `rust/tests/adversarial_codec.rs` pins via
+   `include_bytes!`. Each frame is crafted to fail with one specific
+   `DecodeError`, byte-for-byte reproducibly (no randomness). The script
+   decodes every corpus frame with the reference decoder and asserts the
+   expected error class before writing, so the corpus cannot drift from
+   the format.
+
+Usage:  python3 rust/tests/corpus/gen_corpus.py          # validate + write corpus
+        python3 rust/tests/corpus/gen_corpus.py --check  # validate only
+"""
+
+import os
+import random
+import struct
+import sys
+
+# ---------------------------------------------------------------------------
+# Constants (mirror entropy.rs / codec.rs)
+# ---------------------------------------------------------------------------
+
+TRIT_BLOCK = 12_240
+LEVEL_BLOCK = 4096
+MAX_CODE_LEN = 7
+NSYM = 27
+FLAG_ESCAPE = 0b1
+RICE_MAX_RUN = 255
+
+TAG_DENSE = 0
+TAG_TERNARY = 1
+TAG_LEVELS = 2
+TAG_SPARSE = 3
+TAG_ETERNARY = 4
+TAG_ELEVELS = 5
+
+HEADER_BITS = 8 + 32
+MAX_DIM = 1 << 31
+
+
+class DecodeErr(Exception):
+    """Mirror of entropy::DecodeError (kind holds the Rust variant name);
+    kind == "Anyhow" stands for codec.rs's untyped anyhow::ensure! errors."""
+
+    def __init__(self, kind):
+        self.kind = kind
+        super().__init__(kind)
+
+
+def levels_bits_per(s):
+    n = 2 * s + 1
+    p = 1
+    bits = 0
+    while p < n:
+        p <<= 1
+        bits += 1
+    return max(bits, 1)
+
+
+# ---------------------------------------------------------------------------
+# Bit I/O (mirror codec::BitWriter / entropy::CheckedBitReader)
+# ---------------------------------------------------------------------------
+
+
+class BitWriter:
+    def __init__(self):
+        self.buf = bytearray()
+        self.acc = 0
+        self.nbits = 0
+
+    def write(self, v, n):
+        self.acc = ((self.acc << n) | (v & ((1 << n) - 1 if n else 0))) & ((1 << 64) - 1)
+        self.nbits += n
+        while self.nbits >= 8:
+            self.nbits -= 8
+            self.buf.append((self.acc >> self.nbits) & 0xFF)
+
+    def finish(self):
+        if self.nbits > 0:
+            pad = 8 - self.nbits
+            self.acc = (self.acc << pad) & ((1 << 64) - 1)
+            self.buf.append(self.acc & 0xFF)
+        return bytes(self.buf)
+
+
+class CheckedBitReader:
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 0
+        self.acc = 0
+        self.nbits = 0
+
+    def available(self):
+        return (len(self.buf) - self.pos) * 8 + self.nbits
+
+    def try_read(self, n):
+        if n > self.available():
+            raise DecodeErr("Truncated")
+        while self.nbits < n:
+            self.acc = ((self.acc << 8) | self.buf[self.pos]) & ((1 << 64) - 1)
+            self.pos += 1
+            self.nbits += 8
+        self.nbits -= n
+        return (self.acc >> self.nbits) & ((1 << n) - 1 if n else 0)
+
+    def align_byte(self):
+        pad = self.nbits % 8
+        if pad > 0 and self.try_read(pad) != 0:
+            raise DecodeErr("BadPadding")
+
+    def bytes_consumed(self):
+        assert self.nbits % 8 == 0
+        return self.pos - self.nbits // 8
+
+
+class ZeroPadBitReader:
+    """Mirror of the fixed codec's lenient BitReader (zero-pads past end)."""
+
+    def __init__(self, buf):
+        self.buf = buf
+        self.pos = 0
+        self.acc = 0
+        self.nbits = 0
+
+    def read(self, n):
+        while self.nbits < n:
+            byte = self.buf[self.pos] if self.pos < len(self.buf) else 0
+            self.pos += 1
+            self.acc = ((self.acc << 8) | byte) & ((1 << 64) - 1)
+            self.nbits += 8
+        self.nbits -= n
+        return (self.acc >> self.nbits) & ((1 << n) - 1 if n else 0)
+
+
+# ---------------------------------------------------------------------------
+# Length-limited Huffman (package-merge) + canonical codes
+# ---------------------------------------------------------------------------
+
+
+def package_merge(weights, limit):
+    lens = [0] * NSYM
+    used = [i for i in range(NSYM) if weights[i] > 0]
+    if not used:
+        return lens
+    if len(used) == 1:
+        lens[used[0]] = 1
+        return lens
+    leaves = []
+    for i in used:
+        c = [0] * NSYM
+        c[i] = 1
+        leaves.append((weights[i], c))
+    leaves.sort(key=lambda e: e[0])  # stable: index order breaks ties
+    lst = list(leaves)
+    for _ in range(1, limit):
+        packages = []
+        for j in range(0, len(lst) - len(lst) % 2, 2):
+            c = list(lst[j][1])
+            for k in range(NSYM):
+                c[k] += lst[j + 1][1][k]
+            packages.append((lst[j][0] + lst[j + 1][0], c))
+        merged = []
+        li = pi = 0
+        while li < len(leaves) or pi < len(packages):
+            if li < len(leaves) and (pi >= len(packages) or leaves[li][0] <= packages[pi][0]):
+                merged.append(leaves[li])
+                li += 1
+            else:
+                merged.append(packages[pi])
+                pi += 1
+        lst = merged
+    for _, c in lst[: 2 * len(used) - 2]:
+        for k in range(NSYM):
+            lens[k] += c[k]
+    return lens
+
+
+def canonical_codes(lens):
+    bl_count = [0] * (MAX_CODE_LEN + 1)
+    for l in lens:
+        if l > 0:
+            bl_count[l] += 1
+    next_code = [0] * (MAX_CODE_LEN + 1)
+    code = 0
+    for l in range(1, MAX_CODE_LEN + 1):
+        code = (code + bl_count[l - 1]) << 1
+        next_code[l] = code
+    out = [(0, 0)] * NSYM
+    for sym, l in enumerate(lens):
+        if l > 0:
+            out[sym] = (next_code[l], l)
+            next_code[l] += 1
+    return out
+
+
+class CanonDecoder:
+    def __init__(self, lens):
+        used = sum(1 for l in lens if l > 0)
+        if used == 0:
+            raise DecodeErr("BadCodeLengths")
+        if used == 1:
+            sym = next(i for i, l in enumerate(lens) if l > 0)
+            if lens[sym] != 1:
+                raise DecodeErr("BadCodeLengths")
+        else:
+            kraft = sum(1 << (MAX_CODE_LEN - l) for l in lens if l > 0)
+            if kraft != 1 << MAX_CODE_LEN:
+                raise DecodeErr("BadCodeLengths")
+        codes = canonical_codes(lens)
+        self.first = [0] * (MAX_CODE_LEN + 1)
+        self.count = [0] * (MAX_CODE_LEN + 1)
+        self.base = [0] * (MAX_CODE_LEN + 1)
+        self.syms = []
+        for l in range(1, MAX_CODE_LEN + 1):
+            self.base[l] = len(self.syms)
+            for sym, (code, length) in enumerate(codes):
+                if length == l:
+                    if self.count[l] == 0:
+                        self.first[l] = code
+                    self.count[l] += 1
+                    self.syms.append(sym)
+
+    def decode_symbol(self, br):
+        code = 0
+        for l in range(1, MAX_CODE_LEN + 1):
+            code = (code << 1) | br.try_read(1)
+            if self.count[l] > 0 and self.first[l] <= code < self.first[l] + self.count[l]:
+                return self.syms[self.base[l] + code - self.first[l]]
+        raise DecodeErr("BadCodeLengths")
+
+
+# ---------------------------------------------------------------------------
+# Ternary section
+# ---------------------------------------------------------------------------
+
+
+def triple_symbol(tri):
+    a = tri[0] + 1
+    b = (tri[1] + 1) if len(tri) > 1 else 1
+    c = (tri[2] + 1) if len(tri) > 2 else 1
+    return a + 3 * b + 9 * c
+
+
+def encode_ternary_sections(trits, out):
+    for start in range(0, len(trits), TRIT_BLOCK):
+        block = trits[start : start + TRIT_BLOCK]
+        freq = [0] * NSYM
+        for j in range(0, len(block), 3):
+            freq[triple_symbol(block[j : j + 3])] += 1
+        lens = package_merge(freq, MAX_CODE_LEN)
+        coded_bits = 3 * NSYM
+        for sym, f in enumerate(freq):
+            coded_bits += f * lens[sym]
+        escape_bytes = -(-len(block) // 5)
+        if -(-coded_bits // 8) < escape_bytes:
+            out.append(0)
+            codes = canonical_codes(lens)
+            bw = BitWriter()
+            for l in lens:
+                bw.write(l, 3)
+            for j in range(0, len(block), 3):
+                code, length = codes[triple_symbol(block[j : j + 3])]
+                bw.write(code, length)
+            out.extend(bw.finish())
+        else:
+            out.append(FLAG_ESCAPE)
+            for j in range(0, len(block), 5):
+                chunk = block[j : j + 5]
+                byte = 0
+                for t in reversed(chunk):
+                    byte = byte * 3 + (t + 1)
+                out.append(byte)
+
+
+def decode_ternary_sections(buf, pos, dim):
+    trits = []
+    remaining = dim
+    while remaining > 0:
+        ntrits = min(remaining, TRIT_BLOCK)
+        if pos >= len(buf):
+            raise DecodeErr("Truncated")
+        flags = buf[pos]
+        pos += 1
+        if flags & ~FLAG_ESCAPE:
+            raise DecodeErr("BadBlockHeader")
+        if flags & FLAG_ESCAPE:
+            nbytes = -(-ntrits // 5)
+            if len(buf) < pos + nbytes:
+                raise DecodeErr("Truncated")
+            left = ntrits
+            for b in buf[pos : pos + nbytes]:
+                take = min(left, 5)
+                if b >= 3**take:
+                    raise DecodeErr("ValueOutOfRange")
+                byte = b
+                for _ in range(take):
+                    trits.append(byte % 3 - 1)
+                    byte //= 3
+                left -= take
+            pos += nbytes
+        else:
+            br = CheckedBitReader(buf[pos:])
+            lens = [br.try_read(3) for _ in range(NSYM)]
+            dec = CanonDecoder(lens)
+            left = ntrits
+            while left > 0:
+                sym = dec.decode_symbol(br)
+                take = min(left, 3)
+                digits = [sym % 3, (sym // 3) % 3, (sym // 9) % 3]
+                for i, d in enumerate(digits):
+                    if i < take:
+                        trits.append(d - 1)
+                    elif d != 1:
+                        raise DecodeErr("ValueOutOfRange")
+                left -= take
+            br.align_byte()
+            pos += br.bytes_consumed()
+        remaining -= ntrits
+    return trits, pos
+
+
+# ---------------------------------------------------------------------------
+# Levels section
+# ---------------------------------------------------------------------------
+
+
+def zigzag(l):
+    return (l << 1) ^ (l >> 31) if l >= 0 else ((l << 1) ^ -1) & 0xFF
+
+
+def unzigzag(u):
+    v = (u >> 1) ^ -(u & 1)
+    return v
+
+
+def rice_cost(values, k):
+    return sum((v >> k) + 1 + k for v in values)
+
+
+def encode_levels_sections(levels, s, out):
+    bits_per = levels_bits_per(s)
+    for start in range(0, len(levels), LEVEL_BLOCK):
+        block = levels[start : start + LEVEL_BLOCK]
+        us = [zigzag(l) for l in block]
+        best_k = 0
+        best_bits = rice_cost(us, 0)
+        for k in range(1, 8):
+            bits = rice_cost(us, k)
+            if bits < best_bits:
+                best_bits = bits
+                best_k = k
+        escape_bytes = -(-(bits_per * len(block)) // 8)
+        if -(-best_bits // 8) < escape_bytes:
+            out.append(best_k << 1)
+            bw = BitWriter()
+            for u in us:
+                q = u >> best_k
+                while q >= 32:
+                    bw.write(0xFFFFFFFF, 32)
+                    q -= 32
+                bw.write(((1 << q) - 1) << 1, q + 1)
+                bw.write(u, best_k)
+            out.extend(bw.finish())
+        else:
+            out.append(FLAG_ESCAPE)
+            bw = BitWriter()
+            for l in block:
+                bw.write(l + s, bits_per)
+            out.extend(bw.finish())
+
+
+def decode_levels_sections(buf, pos, dim, s):
+    bits_per = levels_bits_per(s)
+    max_zigzag = 2 * s
+    levels = []
+    remaining = dim
+    while remaining > 0:
+        nlev = min(remaining, LEVEL_BLOCK)
+        if pos >= len(buf):
+            raise DecodeErr("Truncated")
+        flags = buf[pos]
+        pos += 1
+        if flags & 0xF0:
+            raise DecodeErr("BadBlockHeader")
+        k = (flags >> 1) & 0x7
+        br = CheckedBitReader(buf[pos:])
+        if flags & FLAG_ESCAPE:
+            if k != 0:
+                raise DecodeErr("BadBlockHeader")
+            for _ in range(nlev):
+                v = br.try_read(bits_per)
+                if v > max_zigzag:
+                    raise DecodeErr("ValueOutOfRange")
+                levels.append(v - s)
+        else:
+            for _ in range(nlev):
+                q = 0
+                while br.try_read(1) == 1:
+                    q += 1
+                    if q > RICE_MAX_RUN:
+                        raise DecodeErr("RiceOverrun")
+                r = br.try_read(k)
+                u = (q << k) | r
+                if u > max_zigzag:
+                    raise DecodeErr("ValueOutOfRange")
+                levels.append(unzigzag(u))
+        br.align_byte()
+        pos += br.bytes_consumed()
+        remaining -= nlev
+    return levels, pos
+
+
+# ---------------------------------------------------------------------------
+# Frames (mirror codec.rs). Payloads are dicts tagged by "kind".
+# ---------------------------------------------------------------------------
+
+
+def put_u32(out, v):
+    out.extend(struct.pack("<I", v))
+
+
+def put_f32(out, v):
+    out.extend(struct.pack("<f", v))
+
+
+def elias_gamma_bits(n):
+    return 2 * (n.bit_length() - 1) + 1
+
+
+def wire_bits_fixed(c):
+    kind = c["kind"]
+    if kind == "dense":
+        return HEADER_BITS + 32 * len(c["v"])
+    if kind == "ternary":
+        return HEADER_BITS + 32 + 32 * len(c["norms"]) + 8 * (-(-len(c["trits"]) // 5))
+    if kind == "levels":
+        bp = levels_bits_per(c["s"])
+        return (
+            HEADER_BITS
+            + 32
+            + 8
+            + 32 * len(c["norms"])
+            + 8 * (-(-(bp * len(c["levels"])) // 8))
+        )
+    if kind == "sparse":
+        gap_bits = 0
+        prev = -1
+        for i in c["idx"]:
+            gap_bits += elias_gamma_bits(i - prev)
+            prev = i
+        return HEADER_BITS + 32 + 8 * (-(-gap_bits // 8)) + 32 * len(c["vals"])
+    raise AssertionError(kind)
+
+
+def encode_fixed(c):
+    out = bytearray()
+    kind = c["kind"]
+    if kind == "dense":
+        out.append(TAG_DENSE)
+        put_u32(out, len(c["v"]))
+        for x in c["v"]:
+            put_f32(out, x)
+    elif kind == "ternary":
+        out.append(TAG_TERNARY)
+        put_u32(out, c["dim"])
+        put_u32(out, c["block_size"])
+        for n in c["norms"]:
+            put_f32(out, n)
+        for j in range(0, len(c["trits"]), 5):
+            chunk = c["trits"][j : j + 5]
+            byte = 0
+            for t in reversed(chunk):
+                byte = byte * 3 + (t + 1)
+            out.append(byte)
+    elif kind == "levels":
+        out.append(TAG_LEVELS)
+        put_u32(out, c["dim"])
+        put_u32(out, c["block_size"])
+        out.append(c["s"])
+        for n in c["norms"]:
+            put_f32(out, n)
+        bp = levels_bits_per(c["s"])
+        bw = BitWriter()
+        for l in c["levels"]:
+            bw.write(l + c["s"], bp)
+        out.extend(bw.finish())
+    elif kind == "sparse":
+        out.append(TAG_SPARSE)
+        put_u32(out, c["dim"])
+        put_u32(out, len(c["idx"]))
+        bw = BitWriter()
+        prev = -1
+        for i in c["idx"]:
+            gap = i - prev
+            nb = gap.bit_length() - 1
+            bw.write(0, nb)
+            bw.write(gap, nb + 1)
+            prev = i
+        out.extend(bw.finish())
+        for v in c["vals"]:
+            put_f32(out, v)
+    else:
+        raise AssertionError(kind)
+    return bytes(out)
+
+
+def encode_entropy(c):
+    kind = c["kind"]
+    if kind == "ternary":
+        out = bytearray()
+        out.append(TAG_ETERNARY)
+        put_u32(out, c["dim"])
+        put_u32(out, c["block_size"])
+        for n in c["norms"]:
+            put_f32(out, n)
+        encode_ternary_sections(c["trits"], out)
+        return bytes(out)
+    if kind == "levels":
+        out = bytearray()
+        out.append(TAG_ELEVELS)
+        put_u32(out, c["dim"])
+        put_u32(out, c["block_size"])
+        out.append(c["s"])
+        for n in c["norms"]:
+            put_f32(out, n)
+        encode_levels_sections(c["levels"], c["s"], out)
+        return bytes(out)
+    return None
+
+
+def encode_with(c, entropy):
+    fixed = encode_fixed(c)
+    if not entropy:
+        return fixed
+    e = encode_entropy(c)
+    return e if e is not None and len(e) < len(fixed) else fixed
+
+
+def get_u32(buf, pos):
+    if pos + 4 > len(buf):
+        raise DecodeErr("Anyhow")
+    return struct.unpack_from("<I", buf, pos)[0], pos + 4
+
+
+def get_f32(buf, pos):
+    if pos + 4 > len(buf):
+        raise DecodeErr("Anyhow")
+    return struct.unpack_from("<f", buf, pos)[0], pos + 4
+
+
+def decode(buf):
+    if not buf:
+        raise DecodeErr("Anyhow")
+    tag = buf[0]
+    pos = 1
+    if tag == TAG_DENSE:
+        dim, pos = get_u32(buf, pos)
+        if dim > MAX_DIM or len(buf) < pos + 4 * dim:
+            raise DecodeErr("Anyhow")
+        v = []
+        for _ in range(dim):
+            x, pos = get_f32(buf, pos)
+            v.append(x)
+        return {"kind": "dense", "v": v}
+    if tag == TAG_TERNARY:
+        dim, pos = get_u32(buf, pos)
+        block_size, pos = get_u32(buf, pos)
+        if dim > MAX_DIM or block_size == 0:
+            raise DecodeErr("Anyhow")
+        nblocks = -(-dim // block_size)
+        if len(buf) < pos + 4 * nblocks + (-(-dim // 5)):
+            raise DecodeErr("Anyhow")
+        norms = []
+        for _ in range(nblocks):
+            n, pos = get_f32(buf, pos)
+            norms.append(n)
+        trits = []
+        for _ in range(-(-dim // 5)):
+            byte = buf[pos]
+            pos += 1
+            for _ in range(5):
+                if len(trits) < dim:
+                    trits.append(byte % 3 - 1)
+                byte //= 3
+        return {"kind": "ternary", "dim": dim, "block_size": block_size, "norms": norms, "trits": trits}
+    if tag == TAG_LEVELS:
+        dim, pos = get_u32(buf, pos)
+        block_size, pos = get_u32(buf, pos)
+        if dim > MAX_DIM or block_size == 0 or pos >= len(buf):
+            raise DecodeErr("Anyhow")
+        s = buf[pos]
+        pos += 1
+        nblocks = -(-dim // block_size)
+        bp = levels_bits_per(s)
+        if len(buf) < pos + 4 * nblocks + (-(-(bp * dim) // 8)):
+            raise DecodeErr("Anyhow")
+        norms = []
+        for _ in range(nblocks):
+            n, pos = get_f32(buf, pos)
+            norms.append(n)
+        br = ZeroPadBitReader(buf[pos:])
+        levels = [br.read(bp) - s for _ in range(dim)]
+        return {"kind": "levels", "dim": dim, "block_size": block_size, "s": s, "norms": norms, "levels": levels}
+    if tag == TAG_SPARSE:
+        dim, pos = get_u32(buf, pos)
+        count, pos = get_u32(buf, pos)
+        if dim > MAX_DIM or count > dim:
+            raise DecodeErr("Anyhow")
+        br = ZeroPadBitReader(buf[pos:])
+        idx = []
+        prev = -1
+        for _ in range(count):
+            nb = 0
+            while br.read(1) == 0:
+                if nb >= 40:
+                    raise DecodeErr("Anyhow")
+                nb += 1
+            rest = br.read(nb) if nb else 0
+            gap = (1 << nb) | rest
+            i = prev + gap
+            if i >= dim:
+                raise DecodeErr("Anyhow")
+            idx.append(i)
+            prev = i
+        pos += br.pos
+        if len(buf) < pos + 4 * count:
+            raise DecodeErr("Anyhow")
+        vals = []
+        for _ in range(count):
+            v, pos = get_f32(buf, pos)
+            vals.append(v)
+        return {"kind": "sparse", "dim": dim, "idx": idx, "vals": vals}
+    if tag == TAG_ETERNARY:
+        dim, pos = get_u32(buf, pos)
+        block_size, pos = get_u32(buf, pos)
+        if dim > MAX_DIM or block_size == 0 or dim > len(buf) * 24:
+            raise DecodeErr("Anyhow")
+        nblocks = -(-dim // block_size)
+        if len(buf) < pos + 4 * nblocks:
+            raise DecodeErr("Anyhow")
+        norms = []
+        for _ in range(nblocks):
+            n, pos = get_f32(buf, pos)
+            norms.append(n)
+        trits, pos = decode_ternary_sections(buf, pos, dim)
+        if pos != len(buf):
+            raise DecodeErr("TrailingGarbage")
+        return {"kind": "ternary", "dim": dim, "block_size": block_size, "norms": norms, "trits": trits}
+    if tag == TAG_ELEVELS:
+        dim, pos = get_u32(buf, pos)
+        block_size, pos = get_u32(buf, pos)
+        if dim > MAX_DIM or block_size == 0 or pos >= len(buf):
+            raise DecodeErr("Anyhow")
+        s = buf[pos]
+        pos += 1
+        if dim > len(buf) * 8:
+            raise DecodeErr("Anyhow")
+        nblocks = -(-dim // block_size)
+        if len(buf) < pos + 4 * nblocks:
+            raise DecodeErr("Anyhow")
+        norms = []
+        for _ in range(nblocks):
+            n, pos = get_f32(buf, pos)
+            norms.append(n)
+        levels, pos = decode_levels_sections(buf, pos, dim, s)
+        if pos != len(buf):
+            raise DecodeErr("TrailingGarbage")
+        return {"kind": "levels", "dim": dim, "block_size": block_size, "s": s, "norms": norms, "levels": levels}
+    raise DecodeErr("Anyhow")
+
+
+# ---------------------------------------------------------------------------
+# Validation battery
+# ---------------------------------------------------------------------------
+
+
+def f32(x):
+    return struct.unpack("<f", struct.pack("<f", x))[0]
+
+
+def payloads_equal(a, b):
+    if a["kind"] != b["kind"]:
+        return False
+    return all(a[k] == b[k] for k in a)
+
+
+def check_differential(c, ctx):
+    fixed = encode_fixed(c)
+    ent = encode_with(c, entropy=True)
+    assert wire_bits_fixed(c) == 8 * len(fixed), f"{ctx}: fixed accounting"
+    assert len(ent) <= len(fixed), f"{ctx}: entropy expanded"
+    assert payloads_equal(decode(fixed), c), f"{ctx}: fixed roundtrip"
+    assert payloads_equal(decode(ent), c), f"{ctx}: entropy roundtrip"
+
+
+def random_payload(rng):
+    dim = rng.choice(
+        [
+            TRIT_BLOCK - 2 + rng.randrange(5),
+            LEVEL_BLOCK - 2 + rng.randrange(5),
+            1 + rng.randrange(601),
+            1 + rng.randrange(601),
+        ]
+    )
+    kind = rng.randrange(4)
+    if kind == 0:
+        return {"kind": "dense", "v": [f32(rng.gauss(0, 1)) for _ in range(min(dim, 300))]}
+    if kind == 1:
+        bs = 1 + rng.randrange(dim + 16)
+        nblocks = -(-dim // bs)
+        skew = rng.randrange(3)
+        if skew == 0:
+            trits = [rng.randrange(3) - 1 for _ in range(dim)]
+        elif skew == 1:
+            trits = [
+                0 if rng.random() < 0.85 else (1 if rng.random() < 0.5 else -1)
+                for _ in range(dim)
+            ]
+        else:
+            trits = [1 if rng.random() < 0.3 else 0 for _ in range(dim)]
+        return {
+            "kind": "ternary",
+            "dim": dim,
+            "block_size": bs,
+            "norms": [f32(rng.random() * 1e3) for _ in range(nblocks)],
+            "trits": trits,
+        }
+    if kind == 2:
+        bs = 1 + rng.randrange(dim + 16)
+        nblocks = -(-dim // bs)
+        s = 1 + rng.randrange(127)
+        if rng.randrange(2):
+            levels = []
+            for _ in range(dim):
+                l = 0
+                while abs(l) < s and rng.random() < 0.4:
+                    l += 1 if rng.randrange(2) else -1
+                levels.append(l)
+        else:
+            levels = [rng.randrange(2 * s + 1) - s for _ in range(dim)]
+        return {
+            "kind": "levels",
+            "dim": dim,
+            "block_size": bs,
+            "s": s,
+            "norms": [f32(rng.random()) for _ in range(nblocks)],
+            "levels": levels,
+        }
+    dim = min(dim, 800)
+    k = rng.randrange(dim + 1)
+    idx = sorted(rng.sample(range(dim), k))
+    return {
+        "kind": "sparse",
+        "dim": dim,
+        "idx": idx,
+        "vals": [f32(rng.gauss(0, 1)) for _ in idx],
+    }
+
+
+def ternary_quantize(x, block_size, rng):
+    """Blockwise ∞-norm stochastic ternary quantization (PNormQuantizer)."""
+    trits = []
+    norms = []
+    for start in range(0, len(x), block_size):
+        block = x[start : start + block_size]
+        norm = max(abs(v) for v in block)
+        norms.append(f32(norm))
+        for v in block:
+            p = abs(v) / norm if norm > 0 else 0.0
+            t = 1 if rng.random() < p else 0
+            trits.append(t if v >= 0 else -t)
+    return {
+        "kind": "ternary",
+        "dim": len(x),
+        "block_size": block_size,
+        "norms": norms,
+        "trits": trits,
+    }
+
+
+def validate():
+    rng = random.Random(0xD0BE)
+    for case in range(400):
+        c = random_payload(rng)
+        check_differential(c, f"case {case} ({c['kind']}, dim {c.get('dim', len(c.get('v', [])))})")
+    # edges
+    check_differential({"kind": "dense", "v": []}, "empty dense")
+    check_differential(
+        {"kind": "ternary", "dim": 1, "block_size": 256, "norms": [3.5], "trits": [-1]},
+        "dim-1 ternary",
+    )
+    check_differential(
+        {
+            "kind": "ternary",
+            "dim": TRIT_BLOCK + 1,
+            "block_size": TRIT_BLOCK + 1,
+            "norms": [1.0],
+            "trits": [0] * TRIT_BLOCK + [-1],
+        },
+        "block boundary ternary",
+    )
+    check_differential(
+        {
+            "kind": "levels",
+            "dim": LEVEL_BLOCK + 1,
+            "block_size": LEVEL_BLOCK + 1,
+            "s": 7,
+            "norms": [1.0],
+            "levels": [-7] * (LEVEL_BLOCK + 1),
+        },
+        "block boundary levels",
+    )
+    check_differential({"kind": "sparse", "dim": 17, "idx": [], "vals": []}, "empty sparse")
+
+    # The ISSUE 7 acceptance bar: ≥ 25 % uplink reduction on the DORE
+    # ternary config (∞-norm blocks of 256 over a Gaussian-ish gradient).
+    rng = random.Random(7)
+    x = [rng.gauss(0, 1) * 0.01 for _ in range(100_000)]
+    c = ternary_quantize(x, 256, rng)
+    fixed = len(encode_fixed(c))
+    ent = len(encode_with(c, entropy=True))
+    reduction = 1 - ent / fixed
+    assert payloads_equal(decode(encode_with(c, entropy=True)), c)
+    print(f"DORE-regime frame: fixed {fixed} B, entropy {ent} B, reduction {reduction:.1%}")
+    assert reduction >= 0.25, f"entropy reduction {reduction:.1%} under the 25% bar"
+    return reduction
+
+
+# ---------------------------------------------------------------------------
+# Adversarial corpus
+# ---------------------------------------------------------------------------
+
+
+def eternary_header(dim, block_size, norms):
+    out = bytearray()
+    out.append(TAG_ETERNARY)
+    put_u32(out, dim)
+    put_u32(out, block_size)
+    for n in norms:
+        put_f32(out, n)
+    return out
+
+
+def elevels_header(dim, block_size, s, norms):
+    out = bytearray()
+    out.append(TAG_ELEVELS)
+    put_u32(out, dim)
+    put_u32(out, block_size)
+    out.append(s)
+    for n in norms:
+        put_f32(out, n)
+    return out
+
+
+def build_corpus():
+    """Each entry: (file name, frame bytes, expected DecodeError kind).
+    Kind None means any structured error is acceptable (header-level
+    anyhow errors, before the entropy sections)."""
+    corpus = []
+
+    # 1. Truncated Huffman header: entropy trit block cut inside the
+    #    81-bit code-length table (only 4 of 11 payload bytes present).
+    frame = eternary_header(30, 30, [1.0])
+    frame += bytes([0x00])  # flags: entropy block
+    frame += bytes([0x12, 0x34, 0x56, 0x78])  # 32 bits < 81-bit table
+    corpus.append(("truncated_huffman_header.bin", bytes(frame), "Truncated"))
+
+    # 2. Over-long / oversubscribed code lengths: all 27 lengths = 1
+    #    (Kraft sum 27·2⁶ ≫ 2⁷). 27×3 bits of 0b001 then zero padding.
+    frame = eternary_header(30, 30, [1.0])
+    frame += bytes([0x00])
+    bw = BitWriter()
+    for _ in range(NSYM):
+        bw.write(1, 3)
+    bw.write(0, 7)  # room for the reads that follow table validation
+    frame += bw.finish()
+    corpus.append(("oversubscribed_code_lengths.bin", bytes(frame), "BadCodeLengths"))
+
+    # 3. Incomplete code: a single symbol declared at length 3 (a lone
+    #    deep leaf — Kraft sum 2⁴ ≠ 2⁷).
+    frame = eternary_header(30, 30, [1.0])
+    frame += bytes([0x00])
+    bw = BitWriter()
+    bw.write(3, 3)  # symbol 0: length 3
+    for _ in range(NSYM - 1):
+        bw.write(0, 3)
+    bw.write(0, 7)
+    frame += bw.finish()
+    corpus.append(("incomplete_code_lengths.bin", bytes(frame), "BadCodeLengths"))
+
+    # 4. Rice run past the legal maximum: k=0 entropy block whose
+    #    bitstream is 300 one-bits — run length 256 > 255.
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([0x00])  # flags: entropy, k=0
+    frame += bytes([0xFF] * 38)
+    corpus.append(("rice_overrun.bin", bytes(frame), "RiceOverrun"))
+
+    # 5. Rice run past the end of the frame (truncated before the
+    #    terminator): 16 one-bits then EOF.
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([0x00])
+    frame += bytes([0xFF, 0xFF])
+    corpus.append(("rice_truncated.bin", bytes(frame), "Truncated"))
+
+    # 6. Trailing garbage: a valid entropy ternary frame plus one byte.
+    body = {"kind": "ternary", "dim": 9, "block_size": 4, "norms": [1.0, 2.0, 0.5], "trits": [0] * 9}
+    frame = bytearray(encode_entropy(body))
+    frame.append(0xAB)
+    corpus.append(("trailing_garbage.bin", bytes(frame), "TrailingGarbage"))
+
+    # 7. Nonzero padding: dim-1 escape levels block at s=1 (2 value bits,
+    #    6 pad bits) with a pad bit set.
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([FLAG_ESCAPE])
+    frame += bytes([0b0100_0001])  # value 1 (level 0), pad 000001
+    corpus.append(("bad_padding.bin", bytes(frame), "BadPadding"))
+
+    # 8. Reserved flag bits set in a ternary block header.
+    frame = eternary_header(1, 1, [1.0])
+    frame += bytes([0b0000_0010, 0x00])
+    corpus.append(("reserved_flags_ternary.bin", bytes(frame), "BadBlockHeader"))
+
+    # 9. Levels flags with reserved high nibble set.
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([0b0001_0000, 0x00])
+    corpus.append(("reserved_flags_levels.bin", bytes(frame), "BadBlockHeader"))
+
+    # 10. Escape block declaring a nonzero Rice parameter (contradiction).
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([0b0000_0011, 0x00])
+    corpus.append(("escape_with_rice_param.bin", bytes(frame), "BadBlockHeader"))
+
+    # 11. Rice value out of range: u = 3 > 2s for s = 1 (three one-bits
+    #    then the terminator).
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([0x00, 0b1110_0000])
+    corpus.append(("rice_value_out_of_range.bin", bytes(frame), "ValueOutOfRange"))
+
+    # 12. Escape levels value out of range: stored form 3 > 2s at s = 1.
+    frame = elevels_header(1, 1, 1, [1.0])
+    frame += bytes([FLAG_ESCAPE, 0b1100_0000])
+    corpus.append(("escape_value_out_of_range.bin", bytes(frame), "ValueOutOfRange"))
+
+    # 13. Base-243 escape pad digit out of range: dim 1 (take = 1), byte
+    #    3 ≥ 3¹.
+    frame = eternary_header(1, 1, [1.0])
+    frame += bytes([FLAG_ESCAPE, 3])
+    corpus.append(("escape_bad_base243_digit.bin", bytes(frame), "ValueOutOfRange"))
+
+    # 14. Huffman pad-trit violation: a single-symbol block (all trits 0
+    #    → symbol 13 at length 1, code 0) where dim = 1 forces two pad
+    #    components — encode a symbol whose pad digits are nonzero.
+    #    Table: symbol 0 (triple -1,-1,-1) alone, length 1; one code bit 0
+    #    decodes symbol 0 whose digits are (0,0,0) → trit -1, pads -1 ≠ 0.
+    frame = eternary_header(1, 1, [1.0])
+    frame += bytes([0x00])
+    bw = BitWriter()
+    bw.write(1, 3)  # symbol 0: length 1
+    for _ in range(NSYM - 1):
+        bw.write(0, 3)
+    bw.write(0, 1)  # one codeword: symbol 0
+    frame += bw.finish()
+    corpus.append(("huffman_pad_trit_nonzero.bin", bytes(frame), "ValueOutOfRange"))
+
+    # 15. Truncated mid-codeword: a valid two-symbol table, then EOF
+    #    before the first codeword completes… achieved by a table whose
+    #    codes exist but zero codeword bytes follow. With a complete
+    #    2-symbol code (lengths 1,1) and dim 4 the decoder needs 2 code
+    #    bits; the stream ends right after the (byte-aligned) table.
+    frame = eternary_header(4, 4, [1.0])
+    frame += bytes([0x00])
+    bw = BitWriter()
+    bw.write(1, 3)  # symbol 0: length 1
+    bw.write(1, 3)  # symbol 1: length 1
+    for _ in range(NSYM - 2):
+        bw.write(0, 3)
+    # 81 bits so far; pad to 88 (11 bytes) with zeros — then EOF, so the
+    # first codeword read hits Truncated... but wait: the pad bits ARE
+    # readable as code bits. 7 zero bits decode 7 symbol-0s; dim 4 needs
+    # only 2 symbols (4 trits = 2 triples), so this frame would decode
+    # fine and then fail the align/trailing checks instead. Cut the last
+    # byte entirely: 80 bits present, the table read needs 81.
+    table = bw.finish()
+    frame += table[:-1]
+    corpus.append(("truncated_table_last_bit.bin", bytes(frame), "Truncated"))
+
+    return corpus
+
+
+def verify_corpus(corpus):
+    for name, frame, want in corpus:
+        try:
+            decode(frame)
+        except DecodeErr as e:
+            assert e.kind == want, f"{name}: expected {want}, got {e.kind}"
+        else:
+            raise AssertionError(f"{name}: decoded successfully, expected {want}")
+
+
+def main():
+    reduction = validate()
+    corpus = build_corpus()
+    verify_corpus(corpus)
+    print(f"validated {len(corpus)} corpus frames against the reference decoder")
+    if "--check" in sys.argv:
+        print("OK (check only, corpus not rewritten)")
+        return
+    here = os.path.dirname(os.path.abspath(__file__))
+    for name, frame, _ in corpus:
+        with open(os.path.join(here, name), "wb") as f:
+            f.write(frame)
+    print(f"wrote {len(corpus)} corpus files to {here}")
+    print(f"OK (DORE-regime reduction {reduction:.1%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,376 @@
+//! Differential property suite for the entropy wire codec (ISSUE 7).
+//!
+//! The entropy codec (per-block canonical Huffman for trit streams,
+//! Rice/Golomb for level magnitudes, per-block and whole-frame escape to
+//! fixed packing) must be an *observationally invisible* swap for the
+//! fixed codec everywhere except the byte count:
+//!
+//!   1. `decode(encode_with(c, Entropy)) == c` for every payload — raw
+//!      adversarial payloads and every compressor family's real output,
+//!      across odd dims, partial Huffman/Rice blocks, and empty edges.
+//!   2. `wire_bits_with(codec) == 8 × encode_with(codec).len()` for BOTH
+//!      codecs (measured accounting, no analytic drift).
+//!   3. `wire_bits_with(Entropy) <= wire_bits_with(Fixed)` always (the
+//!      whole-frame escape guarantees entropy never expands a frame).
+//!   4. Full training runs are bit-identical under both codecs: the codec
+//!      moves bytes, never semantics.
+//!
+//! The environment has no proptest crate; this is the same hand-rolled
+//! randomized driver as `proptest_compression.rs`, seeded from the
+//! crate's own deterministic RNG.
+
+#![deny(deprecated)]
+
+use dore::algorithms::AlgorithmKind;
+use dore::compression::{
+    codec, Compressed, Compressor, PNorm, PNormQuantizer, QsgdQuantizer, StochasticSparsifier,
+    TopK, WireCodec, Xoshiro256,
+};
+use dore::data::synth::linreg_problem;
+use dore::engine::{Session, Threaded, TrainSpec};
+use std::sync::Arc;
+
+/// Entropy block sizes the codec uses internally: trit blocks of 12 240
+/// trits, level blocks of 4096 levels. Dims are drawn to straddle both.
+const TRIT_BLOCK: usize = 12_240;
+const LEVEL_BLOCK: usize = 4096;
+
+fn arb_vector(rng: &mut Xoshiro256, max_dim: usize) -> Vec<f32> {
+    let d = 1 + rng.next_below(max_dim);
+    let style = rng.next_below(5);
+    (0..d)
+        .map(|j| match style {
+            0 => rng.next_gaussian(),
+            1 => {
+                if rng.next_f32() < 0.05 {
+                    10.0 * rng.next_gaussian()
+                } else {
+                    0.0
+                }
+            }
+            2 => (j as f32 * 0.37).sin() * 1e-6,
+            3 => {
+                if j < d / 2 {
+                    0.0
+                } else {
+                    rng.next_gaussian() * 1e4
+                }
+            }
+            _ => rng.next_gaussian() * (j % 7) as f32,
+        })
+        .collect()
+}
+
+fn arb_compressor(rng: &mut Xoshiro256) -> Box<dyn Compressor> {
+    match rng.next_below(5) {
+        0 => Box::new(PNormQuantizer::new(PNorm::Inf, 1 + rng.next_below(300))),
+        1 => Box::new(PNormQuantizer::new(PNorm::L2, 1 + rng.next_below(300))),
+        2 => Box::new(QsgdQuantizer::new(1 + rng.next_below(7) as u8, 1 + rng.next_below(128))),
+        3 => Box::new(StochasticSparsifier::new(0.05 + 0.95 * rng.next_f64())),
+        _ => Box::new(TopK::new(rng.next_below(64))),
+    }
+}
+
+/// Raw payloads biased toward entropy-codec corners: dims around the
+/// internal Huffman/Rice block boundaries (±2), heavily skewed trit and
+/// level distributions (entropy wins), uniform ones (escape wins), and
+/// the usual odd dims / empty payloads.
+fn arb_payload(rng: &mut Xoshiro256) -> Compressed {
+    let dim = match rng.next_below(6) {
+        // straddle the trit-block boundary: one full block ± a sliver
+        0 => TRIT_BLOCK - 2 + rng.next_below(5),
+        // straddle the level-block boundary
+        1 => LEVEL_BLOCK - 2 + rng.next_below(5),
+        // a couple of blocks plus a partial tail
+        2 => 2 * LEVEL_BLOCK + 1 + rng.next_below(700),
+        _ => 1 + rng.next_below(601),
+    };
+    match rng.next_below(4) {
+        0 => Compressed::Dense((0..dim.min(700)).map(|_| rng.next_gaussian()).collect()),
+        1 => {
+            let block_size = 1 + rng.next_below(dim + 16);
+            let nblocks = dim.div_ceil(block_size);
+            // skew ∈ {uniform, sparse-ish, one-sided}: drives the encoder
+            // through both the Huffman and the base-243 escape arms.
+            let skew = rng.next_below(3);
+            Compressed::Ternary {
+                dim,
+                block_size,
+                norms: (0..nblocks).map(|_| rng.next_f32() * 1e3).collect(),
+                trits: (0..dim)
+                    .map(|_| match skew {
+                        0 => rng.next_below(3) as i8 - 1,
+                        1 => {
+                            if rng.next_f32() < 0.85 {
+                                0
+                            } else if rng.next_f32() < 0.5 {
+                                1
+                            } else {
+                                -1
+                            }
+                        }
+                        _ => (rng.next_f32() < 0.3) as i8,
+                    })
+                    .collect(),
+            }
+        }
+        2 => {
+            let block_size = 1 + rng.next_below(dim + 16);
+            let nblocks = dim.div_ceil(block_size);
+            let s = 1 + rng.next_below(127) as u8;
+            let concentrated = rng.next_below(2) == 0;
+            Compressed::Levels {
+                dim,
+                block_size,
+                s,
+                norms: (0..nblocks).map(|_| rng.next_f32()).collect(),
+                levels: (0..dim)
+                    .map(|_| {
+                        if concentrated {
+                            // geometric-ish around 0: the Rice sweet spot
+                            let mut l = 0i16;
+                            while l.unsigned_abs() < s as u16 && rng.next_f32() < 0.4 {
+                                l += if rng.next_below(2) == 0 { 1 } else { -1 };
+                            }
+                            l as i8
+                        } else {
+                            (rng.next_below(2 * s as usize + 1) as i16 - s as i16) as i8
+                        }
+                    })
+                    .collect(),
+            }
+        }
+        _ => {
+            let dim = dim.min(800);
+            let k = rng.next_below(dim + 1);
+            let mut idx: Vec<u32> = {
+                let mut all: Vec<u32> = (0..dim as u32).collect();
+                for i in 0..k {
+                    let j = i + rng.next_below(dim - i);
+                    all.swap(i, j);
+                }
+                all.truncate(k);
+                all
+            };
+            idx.sort_unstable();
+            Compressed::Sparse {
+                dim,
+                vals: idx.iter().map(|_| rng.next_gaussian()).collect(),
+                idx,
+            }
+        }
+    }
+}
+
+/// The three differential invariants, checked for one payload.
+fn check_differential(c: &Compressed, ctx: &str) {
+    let fixed = codec::encode_with(c, WireCodec::Fixed);
+    let ent = codec::encode_with(c, WireCodec::Entropy);
+    assert_eq!(
+        codec::decode(&fixed).unwrap_or_else(|e| panic!("{ctx}: fixed decode {e}")),
+        *c,
+        "{ctx}: fixed roundtrip"
+    );
+    assert_eq!(
+        codec::decode(&ent).unwrap_or_else(|e| panic!("{ctx}: entropy decode {e}")),
+        *c,
+        "{ctx}: entropy roundtrip"
+    );
+    assert_eq!(c.wire_bits_with(WireCodec::Fixed), fixed.len() as u64 * 8, "{ctx}: fixed bits");
+    assert_eq!(c.wire_bits_with(WireCodec::Entropy), ent.len() as u64 * 8, "{ctx}: entropy bits");
+    assert!(
+        ent.len() <= fixed.len(),
+        "{ctx}: entropy frame expanded ({} > {} bytes)",
+        ent.len(),
+        fixed.len()
+    );
+}
+
+/// Property: the differential invariants hold on raw adversarial payloads
+/// of every variant, including dims straddling the internal entropy block
+/// boundaries and both skewed and incompressible symbol streams.
+#[test]
+fn prop_entropy_differential_raw_payloads() {
+    let mut rng = Xoshiro256::seed_from_u64(0xE27_0B1);
+    for case in 0..500 {
+        let c = arb_payload(&mut rng);
+        check_differential(&c, &format!("case {case} (dim {})", c.dim()));
+    }
+}
+
+/// Property: the differential invariants hold on every compressor
+/// family's real output across random vectors and parameters.
+#[test]
+fn prop_entropy_differential_compressor_outputs() {
+    let mut rng = Xoshiro256::seed_from_u64(0xE27_C0DE);
+    for case in 0..300 {
+        let x = arb_vector(&mut rng, 600);
+        let q = arb_compressor(&mut rng);
+        let c = q.compress(&x, &mut rng);
+        check_differential(&c, &format!("case {case} ({}, d={})", q.name(), x.len()));
+    }
+}
+
+/// Pinned edges the random driver covers only probabilistically: empty
+/// and singleton payloads, exactly-one-block dims, all-zero and
+/// single-symbol trit streams (degenerate Huffman tables), s=1 levels.
+#[test]
+fn entropy_edge_payloads_differential() {
+    let cases = vec![
+        Compressed::Dense(vec![]),
+        Compressed::Ternary { dim: 1, block_size: 256, norms: vec![3.5], trits: vec![-1] },
+        // all-zero trits: a single-symbol Huffman table (1-bit degenerate code)
+        Compressed::Ternary {
+            dim: 2000,
+            block_size: 2000,
+            norms: vec![1.0],
+            trits: vec![0; 2000],
+        },
+        // exactly one full trit block, then one trit over
+        Compressed::Ternary {
+            dim: TRIT_BLOCK,
+            block_size: TRIT_BLOCK,
+            norms: vec![1.0],
+            trits: vec![1; TRIT_BLOCK],
+        },
+        Compressed::Ternary {
+            dim: TRIT_BLOCK + 1,
+            block_size: TRIT_BLOCK + 1,
+            norms: vec![1.0],
+            trits: {
+                let mut t = vec![0i8; TRIT_BLOCK + 1];
+                t[TRIT_BLOCK] = -1;
+                t
+            },
+        },
+        Compressed::Levels {
+            dim: 3,
+            block_size: 2,
+            s: 1,
+            norms: vec![0.5, 9.0],
+            levels: vec![1, -1, 0],
+        },
+        // exactly one full level block + 1, all at the extreme level
+        Compressed::Levels {
+            dim: LEVEL_BLOCK + 1,
+            block_size: LEVEL_BLOCK + 1,
+            s: 7,
+            norms: vec![1.0],
+            levels: vec![-7; LEVEL_BLOCK + 1],
+        },
+        Compressed::Sparse { dim: 17, idx: vec![], vals: vec![] },
+    ];
+    for c in cases {
+        check_differential(&c, &format!("dim {} {:?}", c.dim(), std::mem::discriminant(&c)));
+    }
+}
+
+/// Property (robustness): decode never panics on corrupted or truncated
+/// *entropy* frames — truncations, random bit flips, and byte garbage all
+/// return Err or a payload; the process survives. (The hand-built
+/// malformed-frame corpus in `adversarial_codec.rs` pins the specific
+/// error classes; this is the volume fuzz.)
+#[test]
+fn prop_entropy_decode_survives_fuzzed_frames() {
+    let mut rng = Xoshiro256::seed_from_u64(0xE27_F422);
+    for _ in 0..200 {
+        let x = arb_vector(&mut rng, 400);
+        let q = arb_compressor(&mut rng);
+        let bytes = codec::encode_with(&q.compress(&x, &mut rng), WireCodec::Entropy);
+        // truncation
+        let cut = rng.next_below(bytes.len().max(1));
+        let _ = codec::decode(&bytes[..cut]);
+        // single bit flip
+        if !bytes.is_empty() {
+            let mut flipped = bytes.clone();
+            let at = rng.next_below(flipped.len());
+            flipped[at] ^= 1 << rng.next_below(8);
+            let _ = codec::decode(&flipped);
+        }
+        // trailing garbage must be rejected, not absorbed, on entropy tags
+        if bytes[0] == 4 || bytes[0] == 5 {
+            let mut extended = bytes.clone();
+            extended.push(0xAB);
+            assert!(codec::decode(&extended).is_err(), "trailing byte absorbed");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lock-step fleet runs: the codec never touches the trajectory.
+// ---------------------------------------------------------------------
+
+fn fleet_problem(n: usize) -> Arc<dyn dore::models::Problem> {
+    Arc::new(linreg_problem(60, 16, n, 0.1, 4))
+}
+
+fn run_with(spec: &TrainSpec, n: usize) -> (Vec<u64>, u64, u64) {
+    let m = Session::shared(fleet_problem(n)).spec(spec.clone()).run().unwrap();
+    (
+        m.loss.iter().map(|l| l.to_bits()).collect(),
+        m.uplink_bits,
+        m.downlink_bits,
+    )
+}
+
+/// DORE and DoubleSqueeze, pipeline depth 1 and 2, run lock-step under
+/// both codecs: loss trajectories bit-identical, wire accounting never
+/// larger under entropy. The codec is a wire-layer concern only.
+#[test]
+fn fleet_runs_bit_identical_under_both_codecs() {
+    for algo in [AlgorithmKind::Dore, AlgorithmKind::DoubleSqueeze] {
+        for depth in [1usize, 2] {
+            let base = TrainSpec {
+                algo,
+                iters: 24,
+                eval_every: 8,
+                pipeline_depth: depth,
+                ..Default::default()
+            };
+            let fixed = run_with(&base, 3);
+            let ent = run_with(
+                &TrainSpec { wire_codec: WireCodec::Entropy, ..base.clone() },
+                3,
+            );
+            assert_eq!(
+                fixed.0, ent.0,
+                "{}@depth{depth}: entropy codec moved the loss trajectory",
+                algo.name()
+            );
+            assert!(
+                ent.1 <= fixed.1 && ent.2 <= fixed.2,
+                "{}@depth{depth}: entropy expanded wire bits (up {} vs {}, down {} vs {})",
+                algo.name(),
+                ent.1,
+                fixed.1,
+                ent.2,
+                fixed.2
+            );
+        }
+    }
+}
+
+/// The entropy codec crosses the real encode/decode boundary on the
+/// Threaded transport (workers serialize frames; InProc keeps payloads
+/// inline): the trajectory and the *measured* byte accounting must match
+/// the InProc run exactly.
+#[test]
+fn threaded_entropy_run_matches_inproc() {
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters: 20,
+        eval_every: 10,
+        wire_codec: WireCodec::Entropy,
+        ..Default::default()
+    };
+    let inproc = run_with(&spec, 3);
+    let m = Session::shared(fleet_problem(3))
+        .spec(spec)
+        .transport(Threaded::new())
+        .run()
+        .unwrap();
+    let threaded: Vec<u64> = m.loss.iter().map(|l| l.to_bits()).collect();
+    assert_eq!(inproc.0, threaded, "threaded entropy trajectory differs");
+    assert_eq!(inproc.1, m.uplink_bits, "threaded entropy uplink accounting differs");
+    assert_eq!(inproc.2, m.downlink_bits, "threaded entropy downlink accounting differs");
+}

@@ -120,8 +120,9 @@ fn prop_raw_payload_roundtrip_exact() {
     }
 }
 
-/// Property (raw payloads): `wire_bits()` equals `8 * encode().len()` up to
-/// the sub-byte padding of the bit-packed sections (< 2 bytes total).
+/// Property (raw payloads): `wire_bits()` equals `8 * encode().len()`
+/// exactly — the analytic fixed-codec formulas account for every padding
+/// byte of the bit-packed sections.
 #[test]
 fn prop_raw_payload_wire_bits_matches_encoding() {
     let mut rng = Xoshiro256::seed_from_u64(0xB17_5EED);
@@ -129,8 +130,9 @@ fn prop_raw_payload_wire_bits_matches_encoding() {
         let c = arb_payload(&mut rng);
         let actual = codec::encode(&c).len() as u64 * 8;
         let predicted = c.wire_bits();
-        assert!(
-            actual >= predicted && actual - predicted < 16,
+        assert_eq!(
+            actual,
+            predicted,
             "case {case} (dim {}): predicted {predicted}, actual {actual}",
             c.dim()
         );
@@ -174,9 +176,7 @@ fn codec_edge_payloads_roundtrip() {
     for c in cases {
         let bytes = codec::encode(&c);
         assert_eq!(codec::decode(&bytes).unwrap(), c, "{c:?}");
-        let bits = c.wire_bits();
-        let actual = bytes.len() as u64 * 8;
-        assert!(actual >= bits && actual - bits < 16, "{c:?}: {bits} vs {actual}");
+        assert_eq!(c.wire_bits(), bytes.len() as u64 * 8, "{c:?}");
     }
 }
 
@@ -194,8 +194,8 @@ fn prop_codec_roundtrip_exact() {
     }
 }
 
-/// Property: wire_bits() is within one padding byte per section of the real
-/// encoded length, and never underestimates by more than padding.
+/// Property: wire_bits() equals the real encoded length exactly for every
+/// compressor-emitted payload (byte-exact accounting, padding included).
 #[test]
 fn prop_wire_bits_matches_encoding() {
     let mut rng = Xoshiro256::seed_from_u64(0xB17);
@@ -205,8 +205,9 @@ fn prop_wire_bits_matches_encoding() {
         let c = q.compress(&x, &mut rng);
         let actual = codec::encode(&c).len() as u64 * 8;
         let predicted = c.wire_bits();
-        assert!(
-            actual >= predicted && actual - predicted < 16,
+        assert_eq!(
+            actual,
+            predicted,
             "case {case} ({}): predicted {predicted} actual {actual}",
             q.name()
         );
