@@ -1,0 +1,78 @@
+//! `dore-worker` — a standalone fleet worker process.
+//!
+//! ```text
+//! dore-worker --connect HOST:PORT --slot I --workers N \
+//!             [--problem P --algorithm A --lr F --iters N ... ] \
+//!             [--rejoin] [--crash-at R]
+//! ```
+//!
+//! Connects to a `dore train --transport tcp --bind ADDR` master,
+//! registers slot `I` with a versioned hello (protocol version, model
+//! dimension, fleet size, spec fingerprint — any mismatch is rejected
+//! with an error naming both sides), then runs the same worker round
+//! schedule a local thread would: a remote process is bit-identical to a
+//! single-process run by construction.
+//!
+//! The training flags (`--problem`, `--algorithm`, `--lr`, `--iters`,
+//! `--seed`, `--participation`, ... — see `dore train`) must be the
+//! **same flags the master was launched with**; both binaries build the
+//! spec through the shared [`dore::cli`] mapping, so "same flags ⇒ same
+//! fingerprint" holds by construction.
+//!
+//! `--rejoin` re-registers after a lost connection (replacing a crashed
+//! worker): the master replays the current model and resume round.
+//! `--crash-at R` makes the process exit just before computing round `R`
+//! (the chaos knob fleet tests kill workers with).
+
+#![deny(deprecated)]
+
+use dore::cli::{build_problem, train_spec, Flags};
+
+const USAGE: &str = "usage: dore-worker --connect HOST:PORT --slot I --workers N
+  [--problem P --algorithm A --lr F --iters N --seed N ...  (the master's
+   training flags — the registration handshake rejects a mismatched spec)]
+  [--rejoin      re-register as a replacement for a lost worker]
+  [--crash-at R  exit just before computing round R (chaos testing)]";
+
+fn run() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let f = Flags::parse(&args)?;
+    let addr = f
+        .get("connect")
+        .ok_or_else(|| anyhow::anyhow!("--connect HOST:PORT is required\n{USAGE}"))?;
+    let slot: usize = f
+        .num("slot", usize::MAX)
+        .and_then(|s: usize| {
+            anyhow::ensure!(s != usize::MAX, "--slot I is required\n{USAGE}");
+            Ok(s)
+        })?;
+    let workers: usize = f.num("workers", 20)?;
+    let seed: u64 = f.num("seed", 42)?;
+    let rejoin = f.flag("rejoin");
+    let crash_at: Option<usize> = f.get("crash-at").map(|s| s.parse()).transpose()?;
+    let problem = build_problem(f.get("problem").unwrap_or("linreg"), workers, seed)?;
+    let spec = train_spec(&f)?;
+    match dore::coordinator::run_remote_worker(
+        addr, slot, workers, rejoin, crash_at, problem, spec,
+    )? {
+        Some(digest) => {
+            println!("worker {slot} done final_digest={digest:016x}");
+        }
+        None => {
+            // the crash knob fired, or a rejoiner found the run finished
+            println!("worker {slot} exited without completing the run");
+        }
+    }
+    Ok(())
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("dore-worker: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,196 @@
+//! Shared command-line plumbing for the `dore` and `dore-worker` binaries.
+//!
+//! Both binaries must construct **the same** [`Problem`] and [`TrainSpec`]
+//! from the same flags — the registration handshake fingerprints the spec
+//! ([`crate::engine::protocol::spec_fingerprint`]) and rejects a fleet
+//! whose members were launched with different training flags. Keeping the
+//! flag → spec mapping in one module makes "same flags ⇒ same fingerprint"
+//! true by construction.
+//!
+//! Flag parsing is hand-rolled (offline environment, no clap): every flag
+//! is `--name value` except bare booleans (e.g. `--distributed`,
+//! `--rejoin`).
+
+use crate::algorithms::HyperParams;
+use crate::config::{parse_prox, parse_schedule};
+use crate::data::synth;
+use crate::engine::{FaultPlan, Participation, StalePolicy, TrainSpec};
+use crate::models::mlp::{Mlp, MlpArch};
+use crate::models::Problem;
+use crate::runtime::lm::TransformerLm;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// `--key value` flags plus bare boolean flags.
+pub struct Flags {
+    vals: BTreeMap<String, String>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> anyhow::Result<Self> {
+        let mut vals = BTreeMap::new();
+        let mut bools = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            anyhow::ensure!(a.starts_with("--"), "unexpected argument '{a}'");
+            let key = a.trim_start_matches("--").to_string();
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                vals.insert(key, args[i + 1].clone());
+                i += 2;
+            } else {
+                bools.push(key);
+                i += 1;
+            }
+        }
+        Ok(Self { vals, bools })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.vals.get(key).map(|s| s.as_str())
+    }
+
+    pub fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key} {s}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+}
+
+/// The named benchmark problems both binaries can build. Constructed
+/// purely from `(name, workers, seed)`, so a master and its remote
+/// workers hold bit-identical data shards.
+pub fn build_problem(name: &str, workers: usize, seed: u64) -> anyhow::Result<Arc<dyn Problem>> {
+    Ok(match name {
+        "linreg" => Arc::new(synth::linreg_problem(1200, 500, workers, 0.1, seed)),
+        "mnist" => {
+            let (tr, te) = synth::mnist_like(4096, seed).split_test(512);
+            Arc::new(Mlp::new(MlpArch::new(&[784, 256, 64, 10]), tr, Some(te), workers, seed))
+        }
+        "cifar" => {
+            let (tr, te) = synth::cifar_like(2048, seed).split_test(256);
+            Arc::new(Mlp::new(MlpArch::new(&[3072, 512, 256, 10]), tr, Some(te), workers, seed))
+        }
+        "transformer" => {
+            let corpus = synth::markov_corpus(200_000, 512, seed);
+            Arc::new(TransformerLm::load(
+                crate::runtime::default_artifact_dir(),
+                corpus,
+                workers,
+                seed,
+            )?)
+        }
+        other => anyhow::bail!("unknown problem '{other}' (linreg|mnist|cifar|transformer)"),
+    })
+}
+
+/// Build a [`TrainSpec`] from the flag set (the non-config-file path of
+/// `dore train`, and the only path of `dore-worker`). Includes the
+/// cross-cutting overrides from [`apply_spec_overrides`].
+pub fn train_spec(f: &Flags) -> anyhow::Result<TrainSpec> {
+    let lr: f32 = f.num("lr", 0.05)?;
+    let compressor = f.get("compressor").unwrap_or("ternary:256").to_string();
+    let hp = HyperParams {
+        lr,
+        alpha: f.num("alpha", 0.1)?,
+        beta: f.num("beta", 1.0)?,
+        eta: f.num("eta", 1.0)?,
+        momentum: f.num("momentum", 0.0)?,
+        worker_compressor: compressor.clone(),
+        master_compressor: compressor,
+        prox: parse_prox(f.get("prox").unwrap_or("none"))?,
+        schedule: match f.get("schedule") {
+            None => None,
+            Some(s) => Some(parse_schedule(s, lr)?),
+        },
+    };
+    let mut spec = TrainSpec {
+        algo: f.get("algorithm").unwrap_or("dore").parse()?,
+        hp,
+        iters: f.num("iters", 1000)?,
+        minibatch: f.get("minibatch").map(|s| s.parse()).transpose()?,
+        eval_every: f.num("eval-every", 10)?,
+        seed: f.num("seed", 42)?,
+        ..Default::default()
+    };
+    apply_spec_overrides(f, &mut spec)?;
+    Ok(spec)
+}
+
+/// The spec knobs that apply on every entry path (flag set *and* config
+/// file): participation, stale policy, fault injection, reduction threads,
+/// pipeline depth, wire codec.
+pub fn apply_spec_overrides(f: &Flags, spec: &mut TrainSpec) -> anyhow::Result<()> {
+    // partial participation + stale-uplink policy apply on either path
+    // and on every transport; `fastest:<K>` needs tcp or simnet
+    if let Some(p) = f.get("participation") {
+        spec.participation = p.parse::<Participation>()?;
+    }
+    if let Some(s) = f.get("stale") {
+        spec.stale = s.parse::<StalePolicy>()?;
+    }
+    // deterministic failure injection: a seeded crash/rejoin schedule —
+    // a pure function of (seed, round, slot), identical on every transport
+    if let Some(s) = f.get("fault") {
+        spec.fault = s.parse::<FaultPlan>()?;
+    }
+    // master-side sharded reduction: thread count only — results are
+    // bit-identical for every value (0 = all available cores)
+    spec.reduce_threads = f.num("reduce-threads", 1)?;
+    // pipelined rounds: depth 1 (default) is the classic synchronous
+    // schedule; D ≥ 2 overlaps round t+1's uplink with round t's master
+    // pass at the price of a (D−1)-round-stale gradient — deterministic
+    // and transport-independent either way
+    spec.pipeline_depth = f.num("pipeline-depth", 1)?;
+    // wire codec: what the frames on the wire look like — entropy coding
+    // shrinks them (never grows, by the whole-frame escape) without
+    // touching the trajectory; only the bit accounting moves
+    if let Some(w) = f.get("wire-codec") {
+        spec.wire_codec = w.parse()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn flags_split_values_and_booleans() {
+        let f = Flags::parse(&args(&["--lr", "0.1", "--distributed", "--iters", "5"])).unwrap();
+        assert_eq!(f.get("lr"), Some("0.1"));
+        assert_eq!(f.num::<usize>("iters", 0).unwrap(), 5);
+        assert!(f.flag("distributed"));
+        assert!(!f.flag("lr"));
+        assert!(Flags::parse(&args(&["stray"])).is_err());
+    }
+
+    #[test]
+    fn same_flags_build_identical_specs() {
+        // the fleet contract: master and dore-worker hand the same flag
+        // set to train_spec and must land on the same fingerprint
+        use crate::engine::protocol::spec_fingerprint;
+        let a = args(&["--lr", "0.07", "--iters", "30", "--participation", "fastest:2"]);
+        let s1 = train_spec(&Flags::parse(&a).unwrap()).unwrap();
+        let s2 = train_spec(&Flags::parse(&a).unwrap()).unwrap();
+        assert_eq!(spec_fingerprint(&s1, 500, 4), spec_fingerprint(&s2, 500, 4));
+        assert_eq!(s1.participation, Participation::Fastest { k: 2 });
+        // a differing flag moves the fingerprint
+        let b = args(&["--lr", "0.07", "--iters", "31", "--participation", "fastest:2"]);
+        let s3 = train_spec(&Flags::parse(&b).unwrap()).unwrap();
+        assert_ne!(spec_fingerprint(&s1, 500, 4), spec_fingerprint(&s3, 500, 4));
+    }
+}

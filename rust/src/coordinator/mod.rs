@@ -1,17 +1,23 @@
-//! Distributed-deployment surface: checkpointing, the wire protocol types
-//! and the TCP socket transport.
+//! Distributed-deployment surface: checkpointing and the layered socket
+//! stack (protocol → link → worker/master).
 //!
 //! The threaded parameter-server round loop that used to live here (one
 //! master plus `n` OS-thread workers over std mpsc channels — *not* tokio;
 //! this offline environment has no tokio crate, and for a
 //! barrier-synchronous PS the OS-thread semantics are identical) moved into
 //! the round engine as [`crate::engine::Threaded`]. What remains here is
-//! deployment machinery:
+//! deployment machinery, layered so each module owns one concern:
 //!
-//! * [`protocol`] — the worker↔master message types (re-exported from
-//!   [`crate::engine::protocol`], where the channel transport lives now);
-//! * [`tcp`] — [`tcp::TcpTransport`], the same engine over real localhost
-//!   sockets with a length-prefixed frame protocol;
+//! * [`protocol`] — the **one** versioned wire format every byte-moving
+//!   transport speaks (re-exported from [`crate::engine::protocol`]):
+//!   frame header + kinds, hello/sync/drain bodies, masked downlinks;
+//! * `link` (crate-private) — per-connection machinery: nonblocking
+//!   reassembly, downlink writer threads, the socket `WorkerLink`;
+//! * [`worker`] — the worker side: registration handshake, round schedule,
+//!   drain; [`worker::run_remote_worker`] is the `dore-worker` binary's
+//!   entry point;
+//! * [`tcp`] — [`tcp::TcpTransport`], the master: local worker threads or
+//!   an external multi-host fleet (`TcpTransport::bind`);
 //! * [`checkpoint`] — master-model snapshots with integrity checksums.
 //!
 //! The pre-engine `run_distributed(_blocking)` shims were removed once
@@ -21,9 +27,12 @@
 //! against the in-process path directly.
 
 pub mod checkpoint;
+pub(crate) mod link;
 pub mod tcp;
+pub mod worker;
 
 pub use crate::engine::protocol;
+pub use worker::run_remote_worker;
 
 #[cfg(test)]
 mod tests {

@@ -1,18 +1,30 @@
-//! TCP transport for the round engine: the same master/worker state
-//! machines and the same [`crate::engine::Session`] loop as every other
-//! transport, but over real sockets with a length-prefixed frame protocol —
-//! the deployment shape the paper's testbed used (PS + workers on
-//! Ethernet).
+//! TCP master for the round engine: the same master/worker state machines
+//! and the same [`crate::engine::Session`] loop as every other transport,
+//! but over real sockets — the deployment shape the paper's testbed used
+//! (PS + workers on Ethernet).
 //!
-//! Frame layout (little-endian):
-//! ```text
-//! [u32 payload_len][u8 kind][u32 round][u32 worker][f64 residual][payload]
-//! ```
-//! `kind` is 0 = uplink, 1 = downlink, 2 = reconnect hello, 3 = master →
-//! rejoiner sync; `payload` is a [`crate::compression::codec`] buffer.
-//! Byte accounting counts payload bytes only (header bytes are fixed per
-//! message and reported separately), keeping the numbers comparable with
-//! the other transports.
+//! The stack is layered: frames and their serialization live in
+//! [`crate::engine::protocol`] (one versioned wire format for every
+//! byte-moving transport — see its module docs for the header layout),
+//! per-connection machinery (reassembly buffers, writer threads) lives in
+//! [`super::link`], and the worker-side session (registration handshake,
+//! round schedule, drain) lives in [`super::worker`]. This module is the
+//! master: it owns connection admission, round sequencing, and fault
+//! bookkeeping.
+//!
+//! Two deployment modes share all of that:
+//!
+//! * **Local** ([`TcpTransport::new`]): binds an ephemeral localhost port
+//!   and spawns one OS thread per worker, each with its own socket — the
+//!   in-tree testing shape.
+//! * **External** ([`TcpTransport::bind`]): binds a caller-chosen address
+//!   and waits (up to [`TcpTransport::registration_timeout`]) for `n`
+//!   `dore-worker` *processes* to register — the real multi-host fleet.
+//!   Registration hellos carry the protocol version (checked by the frame
+//!   header itself), model dimension, fleet size, and a fingerprint of the
+//!   training spec; any mismatch is rejected with an error naming both
+//!   sides. At `finish` each worker sends a drain frame carrying its
+//!   final-model digest, which the master checks against its own iterate.
 //!
 //! Pipelining rides the sockets naturally: each worker writes its
 //! round-`k` uplink after reading the round-`k − depth` downlink, so up to
@@ -22,10 +34,21 @@
 //! master still needs — per-socket sequential reads need no reordering
 //! buffer. Downlinks are written by one dedicated writer thread per worker
 //! (fed from a depth-bounded channel), so the master's read loop never
-//! blocks on a full send buffer: with `depth ≥ 2` a worker can be mid-write
-//! of uplink `t + 1` while the master broadcasts round `t`, and payloads
-//! larger than the kernel socket buffers would otherwise deadlock the two
-//! blocking writes against each other.
+//! blocks on a full send buffer.
+//!
+//! # Speed-aware participation
+//!
+//! Under [`Participation::Fastest`] every worker computes every round
+//! speculatively and the master's poll barrier closes after the first `k`
+//! uplinks *arrive* — participation is hardware-driven, not seeded. The
+//! downlink then carries the realized mask as a prefix
+//! ([`crate::engine::protocol::encode_masked_downlink`]); a worker whose
+//! uplink was dropped rewinds to its pre-round snapshot before applying,
+//! so its state is bit-identical to having never computed. Stale
+//! speculative uplinks left in the socket buffers are discarded at the
+//! next round's poll. The realized masks are recorded by the session (run
+//! log + checkpoints) and replaying them through
+//! [`Participation::Recorded`] reproduces the run bit-identically.
 //!
 //! # Fault tolerance
 //!
@@ -41,332 +64,39 @@
 //! each round via [`Transport::sync_state`]). The rejoined worker starts
 //! with fresh (zeroed) residual state — the master's `h`/error state
 //! carries what the paper's algebra needs, so training proceeds and the
-//! fleet's models stay synchronized (verified: at `finish` every worker
-//! returns a digest of its final model, checked against the master's) —
-//! but a run with a real crash is *not* bit-identical to an uninterrupted
-//! one; use [`crate::engine::FaultPlan`] for deterministic failure
-//! injection and [`crate::engine::Session::checkpoint_every`] for
-//! bit-exact kill/resume. [`TcpTransport::respawn_lost`] auto-spawns a
-//! local replacement thread for a lost worker (the chaos-test path);
-//! without it, a worker that stays lost past
-//! [`TcpTransport::reconnect_timeout`] fails the run with an actionable
-//! error rather than hanging forever.
+//! fleet's models stay synchronized — but a run with a real crash is *not*
+//! bit-identical to an uninterrupted one; use [`crate::engine::FaultPlan`]
+//! for deterministic failure injection and
+//! [`crate::engine::Session::checkpoint_every`] for bit-exact kill/resume.
+//! [`TcpTransport::respawn_lost`] auto-spawns a local replacement thread
+//! for a lost worker (the chaos-test path); without it, a worker that
+//! stays lost past [`TcpTransport::reconnect_timeout`] fails the run with
+//! an actionable error rather than hanging forever.
 
+use super::link::{close_conn, conn_try_read, read_frame_buffered, spawn_conn, Conn, SockRead};
+use super::worker::{tcp_worker_main, WorkerBoot};
 use crate::algorithms::{digest_f32, WorkerNode};
 use crate::compression::{codec, Compressed};
-use crate::engine::protocol::DownlinkMsg;
+use crate::engine::protocol::{
+    encode_masked_downlink, parse_drain_digest, read_frame, spec_fingerprint, write_frame,
+    DownlinkMsg, Frame, FrameKind, HelloBody, SyncBody,
+};
 use crate::engine::registry;
-use crate::engine::transport::{absent_slot_frame, RoundWindow, WorkerLink, WorkerSchedule};
+use crate::engine::transport::{absent_slot_frame, RoundWindow};
 use crate::engine::{
-    RoundCtx, StalePolicy, TrainSpec, Transport, TransportFault, UplinkFrame, WirePayload,
+    Participation, RoundCtx, StalePolicy, TrainSpec, Transport, TransportFault, UplinkFrame,
+    WirePayload,
 };
 use crate::models::Problem;
 use crate::F;
+use anyhow::Context as _;
 use std::collections::BTreeMap;
-use std::io::{ErrorKind, Read, Write};
+use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::mpsc::{Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 // lint:allow(wall_clock, socket poll/reconnect deadlines only; timeouts never feed the trajectory)
 use std::time::{Duration, Instant};
-
-const KIND_UPLINK: u8 = 0;
-const KIND_DOWNLINK: u8 = 1;
-/// Worker → master re-registration after a lost connection.
-const KIND_RECONNECT: u8 = 2;
-/// Master → rejoining worker: resume round + current model replay.
-const KIND_SYNC: u8 = 3;
-/// The `round` field of hello/reconnect frames (never a real round).
-const HELLO_ROUND: u32 = u32::MAX;
-/// Fixed header bytes per frame (len + kind + round + worker + residual).
-pub const HEADER_BYTES: u64 = 4 + 1 + 4 + 4 + 8;
-
-struct Frame {
-    kind: u8,
-    round: u32,
-    worker: u32,
-    residual: f64,
-    payload: Vec<u8>,
-}
-
-fn write_frame(s: &mut TcpStream, f: &Frame) -> anyhow::Result<()> {
-    let mut head = [0u8; HEADER_BYTES as usize];
-    head[0..4].copy_from_slice(&(f.payload.len() as u32).to_le_bytes());
-    head[4] = f.kind;
-    head[5..9].copy_from_slice(&f.round.to_le_bytes());
-    head[9..13].copy_from_slice(&f.worker.to_le_bytes());
-    head[13..21].copy_from_slice(&f.residual.to_le_bytes());
-    s.write_all(&head)?;
-    s.write_all(&f.payload)?;
-    Ok(())
-}
-
-fn read_frame(s: &mut TcpStream) -> anyhow::Result<Frame> {
-    let mut head = [0u8; HEADER_BYTES as usize];
-    s.read_exact(&mut head)?;
-    let len = u32::from_le_bytes(head[0..4].try_into().unwrap()) as usize;
-    anyhow::ensure!(len <= (1 << 30), "absurd frame length {len}");
-    let mut payload = vec![0u8; len];
-    s.read_exact(&mut payload)?;
-    Ok(Frame {
-        kind: head[4],
-        round: u32::from_le_bytes(head[5..9].try_into().unwrap()),
-        worker: u32::from_le_bytes(head[9..13].try_into().unwrap()),
-        residual: f64::from_le_bytes(head[13..21].try_into().unwrap()),
-        payload,
-    })
-}
-
-/// Split one complete frame off the front of a reassembly buffer filled by
-/// nonblocking reads; `None` until enough bytes have arrived.
-fn take_frame(buf: &mut Vec<u8>) -> anyhow::Result<Option<Frame>> {
-    const H: usize = HEADER_BYTES as usize;
-    if buf.len() < H {
-        return Ok(None);
-    }
-    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) as usize;
-    anyhow::ensure!(len <= (1 << 30), "absurd frame length {len}");
-    if buf.len() < H + len {
-        return Ok(None);
-    }
-    let f = Frame {
-        kind: buf[4],
-        round: u32::from_le_bytes(buf[5..9].try_into().unwrap()),
-        worker: u32::from_le_bytes(buf[9..13].try_into().unwrap()),
-        residual: f64::from_le_bytes(buf[13..21].try_into().unwrap()),
-        payload: buf[H..H + len].to_vec(),
-    };
-    buf.drain(..H + len);
-    Ok(Some(f))
-}
-
-/// Everything a worker thread needs to run (bundled so the spawn sites
-/// stay readable).
-struct WorkerBoot {
-    id: usize,
-    n: usize,
-    addr: SocketAddr,
-    problem: Arc<dyn Problem>,
-    spec: TrainSpec,
-    /// Chaos knob: vanish (dropping the socket) just before this round —
-    /// the thread-level stand-in for `kill -9` on a worker process.
-    crash_at: Option<usize>,
-}
-
-fn read_apply(
-    sock: &mut TcpStream,
-    node: &mut dyn WorkerNode,
-    round: usize,
-) -> anyhow::Result<()> {
-    let down = read_frame(sock)?;
-    anyhow::ensure!(down.kind == KIND_DOWNLINK, "bad frame kind");
-    anyhow::ensure!(down.round == round as u32, "round skew");
-    node.apply_downlink(round, &codec::decode(&down.payload)?);
-    Ok(())
-}
-
-/// [`WorkerLink`] over one socket: downlinks are read (blocking) off the
-/// same stream uplinks are written to.
-struct SocketLink<'a> {
-    sock: &'a mut TcpStream,
-    id: usize,
-}
-
-impl WorkerLink for SocketLink<'_> {
-    fn apply(&mut self, node: &mut dyn WorkerNode, round: usize) -> anyhow::Result<()> {
-        read_apply(self.sock, node, round)
-    }
-
-    fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()> {
-        write_frame(
-            self.sock,
-            &Frame {
-                kind: KIND_UPLINK,
-                round: round as u32,
-                worker: self.id as u32,
-                residual: residual_norm,
-                payload: bytes,
-            },
-        )
-    }
-}
-
-/// The shared round body of fresh and rejoining workers — the one
-/// [`WorkerSchedule`] every byte-moving transport runs, over a socket
-/// link. Returns `None` if the chaos knob fired (simulated kill), else a
-/// digest of the final model the transport checks against the master's
-/// at `finish`.
-fn run_rounds(
-    sock: &mut TcpStream,
-    node: &mut dyn WorkerNode,
-    boot: &WorkerBoot,
-    start: usize,
-) -> anyhow::Result<Option<u64>> {
-    let schedule = WorkerSchedule {
-        n: boot.n,
-        id: boot.id,
-        start,
-        crash_at: boot.crash_at,
-        problem: boot.problem.as_ref(),
-        spec: &boot.spec,
-    };
-    let mut link = SocketLink { sock, id: boot.id };
-    if !schedule.run(node, &mut link)? {
-        return Ok(None);
-    }
-    Ok(Some(digest_f32(node.model())))
-}
-
-/// One worker thread: connect, register (fresh hello or reconnect
-/// handshake), run the rounds. A rejoining worker that cannot complete
-/// its handshake (the master already shut down) exits cleanly with
-/// `None` instead of failing the run.
-fn tcp_worker_main(
-    boot: WorkerBoot,
-    mut node: Box<dyn WorkerNode>,
-    rejoin: bool,
-) -> anyhow::Result<Option<u64>> {
-    if rejoin {
-        return tcp_rejoin(boot, node);
-    }
-    let mut sock = TcpStream::connect(boot.addr)?;
-    sock.set_nodelay(true)?;
-    // identify ourselves once
-    write_frame(
-        &mut sock,
-        &Frame {
-            kind: KIND_UPLINK,
-            round: HELLO_ROUND,
-            worker: boot.id as u32,
-            residual: 0.0,
-            payload: vec![],
-        },
-    )?;
-    let start = boot.spec.start_round;
-    run_rounds(&mut sock, node.as_mut(), &boot, start)
-}
-
-/// The rejoin path: reconnect hello → sync frame (resume round + model
-/// replay) → rounds from the resume point. A rejoiner that cannot
-/// complete the handshake (the master already shut down) exits cleanly
-/// with `None` instead of failing the run.
-fn tcp_rejoin(boot: WorkerBoot, mut node: Box<dyn WorkerNode>) -> anyhow::Result<Option<u64>> {
-    let Ok(mut sock) = TcpStream::connect(boot.addr) else {
-        return Ok(None); // master is gone; nothing to rejoin
-    };
-    sock.set_nodelay(true)?;
-    let hello = Frame {
-        kind: KIND_RECONNECT,
-        round: HELLO_ROUND,
-        worker: boot.id as u32,
-        residual: 0.0,
-        payload: vec![],
-    };
-    if write_frame(&mut sock, &hello).is_err() {
-        return Ok(None);
-    }
-    sock.set_read_timeout(Some(Duration::from_secs(30)))?;
-    let Ok(sync) = read_frame(&mut sock) else {
-        return Ok(None); // run finished before we were re-admitted
-    };
-    anyhow::ensure!(sync.kind == KIND_SYNC, "expected a sync frame after reconnect");
-    let Compressed::Dense(model) = codec::decode(&sync.payload)? else {
-        anyhow::bail!("sync frame payload was not a dense model");
-    };
-    // a rejoiner is a fresh node: model replayed, residual state zeroed
-    // (empty aux — see WorkerNode::import_state)
-    node.import_state(&model, &[])?;
-    sock.set_read_timeout(None)?;
-    let start = sync.round as usize;
-    run_rounds(&mut sock, node.as_mut(), &boot, start)
-}
-
-/// The per-worker downlink writer: drains queued broadcasts onto its write
-/// half of the socket so the master's read loop never blocks on a full
-/// send buffer (the depth ≥ 2 deadlock guard — see the module docs). The
-/// feeding channel is bounded at the pipeline depth: a worker that keeps
-/// consuming downlinks never backs the master up, while a wedged fleet
-/// exerts backpressure instead of queueing the whole run's broadcasts in
-/// memory. Exits when the master drops its sender (remaining queued
-/// frames are flushed first) or when the peer vanishes mid-write — a
-/// rejoining replacement gets a fresh writer plus a model sync, so a
-/// broken pipe here is an expected fault, not an error.
-fn tcp_downlink_writer(mut sock: TcpStream, rx: Receiver<DownlinkMsg>) -> anyhow::Result<()> {
-    while let Ok(m) = rx.recv() {
-        let frame = Frame {
-            kind: KIND_DOWNLINK,
-            round: m.round as u32,
-            worker: 0,
-            residual: 0.0,
-            payload: m.bytes,
-        };
-        if write_frame(&mut sock, &frame).is_err() {
-            return Ok(());
-        }
-    }
-    Ok(())
-}
-
-/// One live master-side connection: the nonblocking read half with its
-/// reassembly buffer, plus the writer thread feeding the write half.
-struct Conn {
-    sock: TcpStream,
-    buf: Vec<u8>,
-    writer_tx: Option<SyncSender<DownlinkMsg>>,
-    writer: Option<JoinHandle<anyhow::Result<()>>>,
-}
-
-fn spawn_conn(sock: TcpStream, id: usize, depth: usize) -> anyhow::Result<Conn> {
-    let w = sock.try_clone()?;
-    let (tx, rx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(depth);
-    let writer = std::thread::Builder::new()
-        .name(format!("dore-tcp-down-{id}"))
-        .spawn(move || tcp_downlink_writer(w, rx))?;
-    Ok(Conn { sock, buf: Vec::new(), writer_tx: Some(tx), writer: Some(writer) })
-}
-
-/// Flush-and-join a connection's writer (its broken-pipe exit is an
-/// expected fault path) and drop the socket.
-fn close_conn(mut conn: Conn) {
-    conn.writer_tx = None;
-    if let Some(h) = conn.writer.take() {
-        let _ = h.join();
-    }
-}
-
-/// One nonblocking read attempt's outcome.
-enum SockRead {
-    Frame(Frame),
-    WouldBlock,
-    Lost,
-}
-
-fn conn_try_read(conn: &mut Conn) -> anyhow::Result<SockRead> {
-    loop {
-        if let Some(f) = take_frame(&mut conn.buf)? {
-            return Ok(SockRead::Frame(f));
-        }
-        let mut chunk = [0u8; 16384];
-        match conn.sock.read(&mut chunk) {
-            Ok(0) => return Ok(SockRead::Lost),
-            Ok(k) => conn.buf.extend_from_slice(&chunk[..k]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(SockRead::WouldBlock),
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    ErrorKind::ConnectionReset
-                        | ErrorKind::ConnectionAborted
-                        | ErrorKind::BrokenPipe
-                ) =>
-            {
-                return Ok(SockRead::Lost)
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-}
 
 /// Partially assembled uplink slots of the round currently being polled
 /// (carried across `poll_uplinks → None` returns).
@@ -376,17 +106,20 @@ struct Pending {
     got: usize,
 }
 
-/// Socket transport: binds an ephemeral localhost port, runs one OS thread
-/// per worker (each with its own socket) and drives the master side from
-/// the engine loop with nonblocking reads. Bit-identical iterates to every
-/// other transport, at every pipeline depth, on a healthy fleet; see the
-/// module docs for the crash/reconnect semantics.
+/// Socket master: drives the engine side of a socket fleet (local worker
+/// threads or external `dore-worker` processes) with nonblocking reads.
+/// Bit-identical iterates to every other transport, at every pipeline
+/// depth, on a healthy fleet; see the module docs for the crash/reconnect
+/// semantics and the two deployment modes.
 pub struct TcpTransport {
     /// Master-side connections, one slot per worker (`None` = lost).
     conns: Vec<Option<Conn>>,
     /// Kept open for the whole run so lost workers can re-register.
     listener: Option<TcpListener>,
     addr: Option<SocketAddr>,
+    /// External fleet ([`TcpTransport::bind`]): workers are real processes
+    /// registering over the network; no local threads are spawned.
+    external: bool,
     handles: Vec<JoinHandle<anyhow::Result<Option<u64>>>>,
     window: RoundWindow,
     /// Master-side replay cache: each worker's last fresh encoded uplink,
@@ -394,6 +127,12 @@ pub struct TcpTransport {
     /// is discarded — its replacement starts with an empty mirror too, so
     /// the two sides stay consistent.
     byte_cache: Vec<Option<Vec<u8>>>,
+    /// The hello every registering worker must match (version skew is
+    /// caught even earlier, by the frame header).
+    hello_expect: Option<HelloBody>,
+    /// Per-slot Sync payload for fresh registrations: empty = "run from
+    /// your own init"; an external resumed run ships the restored state.
+    boot_sync: Vec<Vec<u8>>,
     /// `(resume round, master iterate)` for reconnect syncs, refreshed
     /// every round via [`Transport::sync_state`].
     model_sync: Option<(usize, Vec<F>)>,
@@ -408,6 +147,7 @@ pub struct TcpTransport {
     crash_at: BTreeMap<usize, usize>,
     poll_wait: Duration,
     reconnect_timeout: Duration,
+    registration_timeout: Duration,
     spec: Option<TrainSpec>,
     problem: Option<Arc<dyn Problem>>,
 }
@@ -419,14 +159,19 @@ impl Default for TcpTransport {
 }
 
 impl TcpTransport {
+    /// Local mode: an ephemeral localhost port plus one worker thread per
+    /// node (spawned at `start`).
     pub fn new() -> Self {
         Self {
             conns: Vec::new(),
             listener: None,
             addr: None,
+            external: false,
             handles: Vec::new(),
             window: RoundWindow::default(),
             byte_cache: Vec::new(),
+            hello_expect: None,
+            boot_sync: Vec::new(),
             model_sync: None,
             pending: None,
             faults: Vec::new(),
@@ -436,16 +181,37 @@ impl TcpTransport {
             crash_at: BTreeMap::new(),
             poll_wait: Duration::from_millis(10),
             reconnect_timeout: Duration::from_secs(30),
+            registration_timeout: Duration::from_secs(60),
             spec: None,
             problem: None,
         }
+    }
+
+    /// External mode: bind `addr` (e.g. `"0.0.0.0:7000"`) eagerly and
+    /// serve a fleet of `dore-worker` *processes*. No local worker
+    /// threads are spawned; `start` waits for `n` registrations, up to
+    /// [`TcpTransport::registration_timeout`].
+    pub fn bind(addr: &str) -> anyhow::Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding master listener on {addr}"))?;
+        let mut t = Self::new();
+        t.addr = Some(listener.local_addr()?);
+        t.listener = Some(listener);
+        t.external = true;
+        Ok(t)
+    }
+
+    /// The bound listener address (useful with a `:0` bind).
+    pub fn local_addr(&self) -> Option<SocketAddr> {
+        self.addr
     }
 
     /// Auto-spawn a fresh local worker thread for a lost connection (it
     /// re-registers through the same reconnect handshake an external
     /// replacement process would use). Off by default: without it a
     /// persistent loss fails the run after
-    /// [`TcpTransport::reconnect_timeout`].
+    /// [`TcpTransport::reconnect_timeout`]. Local mode only — an external
+    /// fleet restarts its own `dore-worker` processes.
     pub fn respawn_lost(mut self, yes: bool) -> Self {
         self.respawn = yes;
         self
@@ -453,7 +219,8 @@ impl TcpTransport {
 
     /// Chaos knob: worker `worker`'s thread vanishes (dropping its
     /// socket) just before computing round `round` — the in-tree stand-in
-    /// for killing a worker process mid-run.
+    /// for killing a worker process mid-run (the `dore-worker` binary has
+    /// `--crash-at` for the real thing).
     pub fn crash_worker(mut self, worker: usize, round: usize) -> Self {
         self.crash_at.insert(worker, round);
         self
@@ -466,6 +233,13 @@ impl TcpTransport {
         self
     }
 
+    /// How long `start` waits between registrations before giving up on
+    /// the missing workers (default 60 s).
+    pub fn registration_timeout(mut self, timeout: Duration) -> Self {
+        self.registration_timeout = timeout;
+        self
+    }
+
     /// Per-call `poll_uplinks` deadline before it reports "not ready yet"
     /// (`None`) back to the engine (default 10 ms).
     pub fn poll_wait(mut self, wait: Duration) -> Self {
@@ -475,6 +249,127 @@ impl TcpTransport {
 
     fn depth(&self) -> usize {
         self.spec.as_ref().map_or(1, |s| s.pipeline_depth.max(1))
+    }
+
+    /// Read and validate a registration hello (fresh or reconnect) off a
+    /// just-accepted socket. A mismatch gets a Drain reply naming both
+    /// sides before the error — the rejected worker prints something
+    /// actionable instead of a dead socket.
+    fn read_hello(&self, s: &mut TcpStream) -> anyhow::Result<(usize, FrameKind)> {
+        // brief blocking handshake (the connector writes its hello first;
+        // sockets accepted from a nonblocking listener may inherit the
+        // flag, so set both explicitly)
+        s.set_nonblocking(false)?;
+        s.set_read_timeout(Some(Duration::from_secs(5)))?;
+        let hello = read_frame(s)?;
+        anyhow::ensure!(
+            matches!(hello.kind, FrameKind::Hello | FrameKind::Reconnect),
+            "expected a hello/reconnect frame on a registering socket, got {:?}",
+            hello.kind
+        );
+        let theirs = HelloBody::decode(&hello.payload)?;
+        let mine = self.hello_expect.expect("transport started");
+        if theirs != mine {
+            let text = format!(
+                "registration mismatch: master expects dim {} / {} workers / spec \
+                 fingerprint {:016x}, worker {} announced dim {} / {} workers / \
+                 fingerprint {:016x} — launch every dore-worker with the same problem \
+                 and training flags as the master",
+                mine.dim,
+                mine.n_workers,
+                mine.fingerprint,
+                hello.worker,
+                theirs.dim,
+                theirs.n_workers,
+                theirs.fingerprint,
+            );
+            let _ = write_frame(
+                s,
+                &Frame {
+                    kind: FrameKind::Drain,
+                    round: 0,
+                    worker: hello.worker,
+                    residual: 0.0,
+                    payload: text.clone().into_bytes(),
+                },
+            );
+            anyhow::bail!("{text}");
+        }
+        let id = hello.worker as usize;
+        anyhow::ensure!(
+            id < mine.n_workers as usize,
+            "hello from unknown worker slot {id} (fleet of {})",
+            mine.n_workers
+        );
+        Ok((id, hello.kind))
+    }
+
+    /// Accept `n` fresh registrations, mapping sockets to worker slots via
+    /// their hellos. Nonblocking accepts with a count-based idle deadline:
+    /// an external fleet may take a while to launch, and the error names
+    /// what is still missing.
+    fn accept_registrations(&mut self, n: usize, start_round: usize) -> anyhow::Result<()> {
+        let depth = self.depth();
+        let mut conns: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
+        let mut got = 0usize;
+        let max_idle_ticks = (self.registration_timeout.as_millis() as usize / 10).max(1);
+        let mut idle = 0usize;
+        while got < n {
+            let accepted = self
+                .listener
+                .as_ref()
+                .expect("listener bound before registration")
+                .accept();
+            match accepted {
+                Ok((mut s, _)) => {
+                    idle = 0;
+                    s.set_nodelay(true)?;
+                    let (id, kind) = self.read_hello(&mut s)?;
+                    anyhow::ensure!(
+                        kind == FrameKind::Hello,
+                        "worker {id} sent a reconnect hello during fresh registration"
+                    );
+                    anyhow::ensure!(conns[id].is_none(), "duplicate hello for worker slot {id}");
+                    write_frame(
+                        &mut s,
+                        &Frame {
+                            kind: FrameKind::Sync,
+                            round: start_round as u32,
+                            worker: id as u32,
+                            residual: 0.0,
+                            payload: self.boot_sync[id].clone(),
+                        },
+                    )?;
+                    s.set_read_timeout(None)?;
+                    s.set_nonblocking(true)?;
+                    conns[id] = Some(spawn_conn(s, id, depth)?);
+                    got += 1;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    idle += 1;
+                    if idle >= max_idle_ticks {
+                        let missing: Vec<String> = conns
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, c)| c.is_none())
+                            .map(|(i, _)| i.to_string())
+                            .collect();
+                        anyhow::bail!(
+                            "registration timed out: {got} of {n} workers registered within \
+                             {:?} (missing slots: {}) — launch the remaining dore-worker \
+                             processes (--connect <master> --slot <i>) or raise \
+                             TcpTransport::registration_timeout",
+                            self.registration_timeout,
+                            missing.join(", ")
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        self.conns = conns;
+        Ok(())
     }
 
     /// Nonblockingly accept and admit any waiting reconnect hellos. A
@@ -503,18 +398,11 @@ impl TcpTransport {
     /// with the resume round + current model, wire up a fresh writer.
     fn admit(&mut self, mut s: TcpStream) -> anyhow::Result<()> {
         s.set_nodelay(true)?;
-        // brief blocking handshake (the connector writes its hello first;
-        // sockets accepted from a nonblocking listener may inherit the
-        // flag, so set both explicitly)
-        s.set_nonblocking(false)?;
-        s.set_read_timeout(Some(Duration::from_secs(5)))?;
-        let hello = read_frame(&mut s)?;
+        let (id, kind) = self.read_hello(&mut s)?;
         anyhow::ensure!(
-            hello.kind == KIND_RECONNECT && hello.round == HELLO_ROUND,
-            "unexpected frame on a reconnecting socket"
+            kind == FrameKind::Reconnect,
+            "unexpected {kind:?} hello on a mid-run socket (fresh registration is over)"
         );
-        let id = hello.worker as usize;
-        anyhow::ensure!(id < self.conns.len(), "reconnect hello from unknown worker {id}");
         if let Some(old) = self.conns[id].take() {
             // the re-registration supersedes a connection the master still
             // believed live: an unselected worker's EOF can sit unread for
@@ -528,14 +416,16 @@ impl TcpTransport {
             .model_sync
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("no sync state available for a reconnecting worker"))?;
+        // a rejoiner is a fresh node: model replayed, residual state zeroed
+        let body = SyncBody { model: model.clone(), aux: Vec::new() };
         write_frame(
             &mut s,
             &Frame {
-                kind: KIND_SYNC,
+                kind: FrameKind::Sync,
                 round: *resume as u32,
                 worker: id as u32,
                 residual: 0.0,
-                payload: codec::encode(&Compressed::Dense(model.clone())),
+                payload: body.encode(),
             },
         )?;
         s.set_read_timeout(None)?;
@@ -598,6 +488,43 @@ impl TcpTransport {
         );
         Ok(())
     }
+
+    /// External-fleet teardown: flush each connection's downlink writer,
+    /// then blockingly read the worker's drain frame (discarding any
+    /// stale speculative uplinks in front of it) and check its digest.
+    fn drain_external(&mut self, expect: Option<u64>) -> anyhow::Result<()> {
+        for i in 0..self.conns.len() {
+            let Some(mut conn) = self.conns[i].take() else { continue };
+            conn.writer_tx = None;
+            if let Some(h) = conn.writer.take() {
+                let _ = h.join();
+            }
+            conn.sock.set_nonblocking(false)?;
+            conn.sock.set_read_timeout(Some(Duration::from_secs(30)))?;
+            let digest = loop {
+                match read_frame_buffered(&mut conn) {
+                    Ok(f) if f.kind == FrameKind::Drain => break parse_drain_digest(&f.payload)?,
+                    // stale speculative uplinks ahead of the drain
+                    Ok(f) if f.kind == FrameKind::Uplink => continue,
+                    Ok(f) => anyhow::bail!(
+                        "unexpected {:?} frame while draining worker {i}",
+                        f.kind
+                    ),
+                    Err(e) => {
+                        anyhow::bail!("worker {i} never sent its drain digest: {e}")
+                    }
+                }
+            };
+            if let Some(e) = expect {
+                anyhow::ensure!(
+                    digest == e,
+                    "worker {i}'s final model desynced from the master's \
+                     (digest {digest:016x}, master {e:016x})"
+                );
+            }
+        }
+        Ok(())
+    }
 }
 
 impl Transport for TcpTransport {
@@ -617,7 +544,13 @@ impl Transport for TcpTransport {
                  problem: build the session with Session::shared(Arc<dyn Problem>)"
             )
         })?;
+        anyhow::ensure!(
+            !(self.external && self.respawn),
+            "respawn_lost spawns local threads; an external fleet restarts its own \
+             dore-worker processes instead"
+        );
         let n = workers.len();
+        let dim = problem.dim();
         self.byte_cache = (0..n).map(|_| None).collect();
         self.window.reset(spec.start_round);
         self.pending = None;
@@ -627,54 +560,56 @@ impl Transport for TcpTransport {
         self.model_sync = None;
         self.spec = Some(spec.clone());
         self.problem = Some(problem.clone());
-        let listener = TcpListener::bind("127.0.0.1:0")?;
+        self.hello_expect = Some(HelloBody {
+            dim: dim as u32,
+            n_workers: n as u32,
+            fingerprint: spec_fingerprint(spec, dim, n),
+        });
+
+        let listener = match self.listener.take() {
+            Some(l) => l, // external: bound eagerly by `bind`
+            None => TcpListener::bind("127.0.0.1:0")?,
+        };
         let addr = listener.local_addr()?;
         self.addr = Some(addr);
-
-        for (id, node) in workers.into_iter().enumerate() {
-            let boot = WorkerBoot {
-                id,
-                n,
-                addr,
-                problem: problem.clone(),
-                spec: spec.clone(),
-                crash_at: self.crash_at.get(&id).copied(),
-            };
-            self.handles.push(
-                std::thread::Builder::new()
-                    .name(format!("dore-tcp-{id}"))
-                    .spawn(move || tcp_worker_main(boot, node, false))?,
-            );
-        }
-
-        // accept n connections, map them to worker ids via hello frames
-        // (blocking: the fleet connects immediately)
-        let mut socks: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (mut s, _) = listener.accept()?;
-            s.set_nodelay(true)?;
-            let hello = read_frame(&mut s)?;
-            anyhow::ensure!(
-                hello.kind == KIND_UPLINK && hello.round == HELLO_ROUND,
-                "expected hello frame"
-            );
-            let id = hello.worker as usize;
-            anyhow::ensure!(id < n && socks[id].is_none(), "bad hello worker id");
-            socks[id] = Some(s);
-        }
-        // reconnects keep arriving on the same listener, polled
-        // nonblockingly from poll_uplinks
+        // registrations and reconnects arrive on the same listener,
+        // accepted nonblockingly with a count-based deadline
         listener.set_nonblocking(true)?;
         self.listener = Some(listener);
-        let depth = spec.pipeline_depth.max(1);
-        let mut conns = Vec::with_capacity(n);
-        for (id, s) in socks.into_iter().enumerate() {
-            let s = s.expect("accepted every id");
-            s.set_nonblocking(true)?;
-            conns.push(Some(spawn_conn(s, id, depth)?));
+
+        if self.external {
+            // real processes own the nodes; ship the restored state on a
+            // resumed run, otherwise an empty Sync payload means "run from
+            // your own deterministic init"
+            self.boot_sync = if spec.start_round > 0 {
+                workers
+                    .iter()
+                    .map(|w| {
+                        SyncBody { model: w.model().to_vec(), aux: w.export_state() }.encode()
+                    })
+                    .collect()
+            } else {
+                (0..n).map(|_| Vec::new()).collect()
+            };
+        } else {
+            self.boot_sync = (0..n).map(|_| Vec::new()).collect();
+            for (id, node) in workers.into_iter().enumerate() {
+                let boot = WorkerBoot {
+                    id,
+                    n,
+                    addr,
+                    problem: problem.clone(),
+                    spec: spec.clone(),
+                    crash_at: self.crash_at.get(&id).copied(),
+                };
+                self.handles.push(
+                    std::thread::Builder::new()
+                        .name(format!("dore-tcp-{id}"))
+                        .spawn(move || tcp_worker_main(boot, node, false))?,
+                );
+            }
         }
-        self.conns = conns;
-        Ok(())
+        self.accept_registrations(n, spec.start_round)
     }
 
     fn begin_round(
@@ -696,54 +631,78 @@ impl Transport for TcpTransport {
         let n = self.conns.len();
         let mask = ctx.mask;
         anyhow::ensure!(mask.len() == n, "round mask covers {} of {n} workers", mask.len());
+        let fastest_k = match &ctx.spec.participation {
+            Participation::Fastest { k } => Some(*k),
+            _ => None,
+        };
         let mut pending = match self.pending.take() {
             Some(p) if p.round == round => p,
             _ => Pending { round, slots: (0..n).map(|_| None).collect(), got: 0 },
         };
-        let expected = mask.iter().filter(|&&m| m).count();
+        // speed-aware mode closes the barrier after the first k arrivals;
+        // derived masks await exactly the selected subset
+        let expected = fastest_k.unwrap_or_else(|| mask.iter().filter(|&&m| m).count());
         // lint:allow(wall_clock, nonblocking-poll deadline; bounds the wait, never the result)
         let deadline = Instant::now() + self.poll_wait;
-        // only selected workers transmit this round; absentees' slots are
-        // filled at assembly. Workers emit uplinks in round order, so the
-        // next frame assembled from a socket is exactly round `round`.
+        // Workers emit uplinks in round order, so the next *fresh* frame
+        // assembled from a socket is exactly round `round`; under fastest,
+        // losers' unconsumed speculative frames of older rounds are
+        // discarded first.
         while pending.got < expected {
             self.admit_reconnects()?;
             let mut progress = false;
-            for i in 0..n {
+            'conns: for i in 0..n {
                 if !mask[i] || pending.slots[i].is_some() {
                     continue;
                 }
-                let outcome = match self.conns[i].as_mut() {
-                    Some(conn) => conn_try_read(conn)?,
-                    None => {
-                        // lost: the round stalls until a replacement
-                        // re-registers; fail loudly if none ever does
-                        if let Some(t0) = self.lost_since.get(&i) {
-                            anyhow::ensure!(
-                                t0.elapsed() < self.reconnect_timeout,
-                                "worker {i} was lost at round {round} and nothing \
-                                 re-registered within {:?} (enable \
-                                 TcpTransport::respawn_lost or restart the worker)",
-                                self.reconnect_timeout
-                            );
+                loop {
+                    let outcome = match self.conns[i].as_mut() {
+                        Some(conn) => conn_try_read(conn)?,
+                        None => {
+                            // lost: the round stalls until a replacement
+                            // re-registers; fail loudly if none ever does
+                            if let Some(t0) = self.lost_since.get(&i) {
+                                anyhow::ensure!(
+                                    t0.elapsed() < self.reconnect_timeout,
+                                    "worker {i} was lost at round {round} and nothing \
+                                     re-registered within {:?} (enable \
+                                     TcpTransport::respawn_lost or restart the worker)",
+                                    self.reconnect_timeout
+                                );
+                            }
+                            continue 'conns;
                         }
-                        continue;
+                    };
+                    match outcome {
+                        SockRead::Frame(f) => {
+                            if fastest_k.is_some()
+                                && f.kind == FrameKind::Uplink
+                                && (f.round as usize) < round
+                            {
+                                // a dropped speculative uplink from an
+                                // earlier round: discard and re-read
+                                continue;
+                            }
+                            anyhow::ensure!(
+                                f.kind == FrameKind::Uplink
+                                    && f.round == round as u32
+                                    && f.worker as usize == i,
+                                "protocol skew on worker {i} at round {round}"
+                            );
+                            pending.slots[i] = Some((f.payload, f.residual));
+                            pending.got += 1;
+                            progress = true;
+                            if pending.got >= expected {
+                                break 'conns;
+                            }
+                            continue 'conns;
+                        }
+                        SockRead::WouldBlock => continue 'conns,
+                        SockRead::Lost => {
+                            self.mark_lost(i)?;
+                            continue 'conns;
+                        }
                     }
-                };
-                match outcome {
-                    SockRead::Frame(f) => {
-                        anyhow::ensure!(
-                            f.kind == KIND_UPLINK
-                                && f.round == round as u32
-                                && f.worker as usize == i,
-                            "protocol skew on worker {i} at round {round}"
-                        );
-                        pending.slots[i] = Some((f.payload, f.residual));
-                        pending.got += 1;
-                        progress = true;
-                    }
-                    SockRead::WouldBlock => {}
-                    SockRead::Lost => self.mark_lost(i)?,
                 }
             }
             if pending.got >= expected {
@@ -794,6 +753,15 @@ impl Transport for TcpTransport {
     ) -> anyhow::Result<u64> {
         let bytes = codec::encode_with(down, ctx.spec.wire_codec);
         let bits = bytes.len() as u64 * 8;
+        // under fastest the broadcast carries the realized mask (the
+        // session passes it as ctx.mask at push time) so every worker
+        // learns whether its speculative uplink stood; the prefix is
+        // per-frame overhead, accounted like the frame header
+        let wire = if ctx.spec.participation.is_fastest() {
+            encode_masked_downlink(ctx.mask, &bytes)
+        } else {
+            bytes
+        };
         // hand off to the per-worker writer threads: the master's loop
         // stays free to keep reading uplinks, which is what prevents the
         // depth ≥ 2 write/write deadlock on large payloads. A lost
@@ -803,7 +771,7 @@ impl Transport for TcpTransport {
         for (i, c) in self.conns.iter().enumerate() {
             let Some(conn) = c else { continue };
             let Some(tx) = &conn.writer_tx else { continue };
-            if tx.send(DownlinkMsg { round, bytes: bytes.clone() }).is_err() {
+            if tx.send(DownlinkMsg { round, bytes: wire.clone() }).is_err() {
                 // the writer exited on a broken socket between polls
                 dead.push(i);
             }
@@ -820,23 +788,28 @@ impl Transport for TcpTransport {
         // cleanly (returning None) instead of hanging the join below
         self.listener = None;
         self.addr = None;
-        // dropping the senders lets each writer flush its queued
-        // downlinks and exit; join writers before workers so the tail
-        // broadcasts the workers are draining actually reach them
-        for conn in self.conns.iter_mut().filter_map(|c| c.take()) {
-            close_conn(conn);
-        }
-        // every surviving worker reports a digest of its final model;
-        // check them against the master's iterate — the cheap invariant
-        // that catches any fleet desync a fault path could introduce
+        // the cheap invariant that catches any fleet desync a fault path
+        // could introduce: every surviving worker reports a digest of its
+        // final model, checked against the master's iterate
         let expect = self.model_sync.take().map(|(_, m)| digest_f32(&m));
-        for h in self.handles.drain(..) {
-            let digest = h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
-            if let (Some(d), Some(e)) = (digest, expect) {
-                anyhow::ensure!(
-                    d == e,
-                    "a worker's final model desynced from the master's (digest mismatch)"
-                );
+        if self.external {
+            self.drain_external(expect)?;
+        } else {
+            // dropping the senders lets each writer flush its queued
+            // downlinks and exit; join writers before workers so the tail
+            // broadcasts the workers are draining actually reach them
+            for conn in self.conns.iter_mut().filter_map(|c| c.take()) {
+                close_conn(conn);
+            }
+            for h in self.handles.drain(..) {
+                let digest =
+                    h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
+                if let (Some(d), Some(e)) = (digest, expect) {
+                    anyhow::ensure!(
+                        d == e,
+                        "a worker's final model desynced from the master's (digest mismatch)"
+                    );
+                }
             }
         }
         self.conns.clear();
@@ -857,6 +830,10 @@ impl Transport for TcpTransport {
 
     fn drain_faults(&mut self) -> Vec<TransportFault> {
         std::mem::take(&mut self.faults)
+    }
+
+    fn supports_fastest(&self) -> bool {
+        true
     }
 }
 
@@ -886,6 +863,7 @@ mod tests {
             assert_eq!(a.loss, b.loss, "{}", algo.name());
             assert_eq!(a.dist_to_opt, b.dist_to_opt);
             assert_eq!(b.loss, c.loss);
+            assert_eq!(a.final_model_digest, b.final_model_digest);
         }
     }
 
@@ -912,57 +890,36 @@ mod tests {
     }
 
     #[test]
-    fn frame_roundtrip() {
-        // loopback socket pair via a throwaway listener
-        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-        let addr = listener.local_addr().unwrap();
-        let mut client = TcpStream::connect(addr).unwrap();
-        let (mut server, _) = listener.accept().unwrap();
-        let f = Frame {
-            kind: KIND_DOWNLINK,
-            round: 7,
-            worker: 3,
-            residual: 2.5,
-            payload: vec![1, 2, 3, 4, 5],
+    fn fastest_over_tcp_records_k_sized_masks_and_replays_on_inproc() {
+        use crate::engine::participation::MaskSchedule;
+        let p = Arc::new(linreg_problem(50, 12, 4, 0.1, 9));
+        let spec = TrainSpec {
+            algo: AlgorithmKind::Dore,
+            iters: 8,
+            eval_every: 2,
+            participation: Participation::Fastest { k: 3 },
+            ..Default::default()
         };
-        write_frame(&mut client, &f).unwrap();
-        let g = read_frame(&mut server).unwrap();
-        assert_eq!(g.kind, KIND_DOWNLINK);
-        assert_eq!(g.round, 7);
-        assert_eq!(g.worker, 3);
-        assert_eq!(g.residual, 2.5);
-        assert_eq!(g.payload, vec![1, 2, 3, 4, 5]);
-    }
-
-    #[test]
-    fn take_frame_reassembles_from_partial_reads() {
-        let f =
-            Frame { kind: KIND_UPLINK, round: 9, worker: 1, residual: 1.5, payload: vec![7; 40] };
-        let mut wire = Vec::new();
-        wire.extend_from_slice(&(f.payload.len() as u32).to_le_bytes());
-        wire.push(f.kind);
-        wire.extend_from_slice(&f.round.to_le_bytes());
-        wire.extend_from_slice(&f.worker.to_le_bytes());
-        wire.extend_from_slice(&f.residual.to_le_bytes());
-        wire.extend_from_slice(&f.payload);
-        // feed the wire bytes in dribbles: no frame until the last byte
-        let mut buf: Vec<u8> = Vec::new();
-        for (i, b) in wire.iter().enumerate() {
-            buf.push(*b);
-            let got = take_frame(&mut buf).unwrap();
-            if i + 1 < wire.len() {
-                assert!(got.is_none(), "frame surfaced {} bytes early", wire.len() - i - 1);
-            } else {
-                let g = got.expect("complete frame");
-                assert_eq!(g.round, 9);
-                assert_eq!(g.payload, vec![7; 40]);
-                assert!(buf.is_empty(), "buffer not drained");
-            }
+        let live = Session::shared(p.clone())
+            .spec(spec.clone())
+            .transport(TcpTransport::new())
+            .run()
+            .unwrap();
+        assert_eq!(live.realized_masks.len(), 8);
+        for (r, m) in live.realized_masks.iter().enumerate() {
+            assert_eq!(m.len(), 4, "round {r}");
+            assert_eq!(m.iter().filter(|&&b| b).count(), 3, "round {r}: {m:?}");
         }
-        // two frames back-to-back split correctly
-        let mut buf2: Vec<u8> = [wire.clone(), wire].concat();
-        assert!(take_frame(&mut buf2).unwrap().is_some());
-        assert!(take_frame(&mut buf2).unwrap().is_some());
-        assert!(take_frame(&mut buf2).unwrap().is_none());
+        // replaying the recorded masks on the zero-copy reference transport
+        // reproduces the run bit-for-bit — arrival order became data
+        let sched = MaskSchedule { masks: live.realized_masks.clone() };
+        let replay_spec = TrainSpec {
+            participation: Participation::Recorded(Arc::new(sched)),
+            ..spec
+        };
+        let replay = Session::new(p.as_ref()).spec(replay_spec).run().unwrap();
+        assert_eq!(live.loss, replay.loss);
+        assert_eq!(live.final_model_digest, replay.final_model_digest);
+        assert_eq!(live.realized_masks, replay.realized_masks);
     }
 }

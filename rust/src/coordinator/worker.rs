@@ -1,0 +1,235 @@
+//! Worker side of the socket coordinator: the registration handshake, the
+//! per-socket link, and the session body shared by local worker threads
+//! ([`super::tcp::TcpTransport`] spawns them) and the standalone
+//! `dore-worker` binary ([`run_remote_worker`]). Both paths speak the
+//! versioned [`crate::engine::protocol`] frames and execute the same
+//! worker round schedule as every other transport — a remote process is
+//! bit-identical to a local thread by construction.
+//!
+//! Registration is one exchange: the worker sends a
+//! [`FrameKind::Hello`] (or [`FrameKind::Reconnect`] when re-registering
+//! after a lost connection) carrying a [`HelloBody`] — model dimension,
+//! fleet size, and the [`spec_fingerprint`] of its training spec — and the
+//! master replies with a [`FrameKind::Sync`] naming the start round. An
+//! empty Sync payload means "run from your own deterministic
+//! initialization"; a non-empty one carries a [`SyncBody`] (model + aux
+//! state) the worker imports first — the resume path for rejoiners and for
+//! fresh processes joining a checkpoint-resumed master. A
+//! [`FrameKind::Drain`] reply is a rejection: its payload is the master's
+//! error text (version skew is caught even earlier, by the frame header
+//! itself). After its last round a worker sends a Drain frame carrying its
+//! final-model digest so an external master can verify fleet sync without
+//! joining threads.
+
+use super::link::SocketLink;
+use crate::algorithms::{digest_f32, WorkerNode};
+use crate::engine::protocol::{
+    drain_digest_payload, read_frame, spec_fingerprint, write_frame, Frame, FrameKind, HelloBody,
+    SyncBody,
+};
+use crate::engine::registry;
+use crate::engine::transport::WorkerSchedule;
+use crate::engine::TrainSpec;
+use crate::models::Problem;
+use anyhow::Context;
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Everything a worker session needs to run (bundled so the spawn sites
+/// stay readable).
+pub(crate) struct WorkerBoot {
+    pub(crate) id: usize,
+    pub(crate) n: usize,
+    pub(crate) addr: SocketAddr,
+    pub(crate) problem: Arc<dyn Problem>,
+    pub(crate) spec: TrainSpec,
+    /// Chaos knob: vanish (dropping the socket) just before this round —
+    /// the stand-in for `kill -9` on a worker process.
+    pub(crate) crash_at: Option<usize>,
+}
+
+/// The registration exchange. Returns `None` when a *rejoiner* finds the
+/// master gone (the run finished first — a clean exit, not an error);
+/// otherwise the start round plus the state to import, if any.
+fn register(
+    sock: &mut TcpStream,
+    boot: &WorkerBoot,
+    rejoin: bool,
+) -> anyhow::Result<Option<(usize, Option<SyncBody>)>> {
+    let dim = boot.problem.dim();
+    let hello = HelloBody {
+        dim: dim as u32,
+        n_workers: boot.n as u32,
+        fingerprint: spec_fingerprint(&boot.spec, dim, boot.n),
+    };
+    let kind = if rejoin { FrameKind::Reconnect } else { FrameKind::Hello };
+    let frame = Frame {
+        kind,
+        round: 0,
+        worker: boot.id as u32,
+        residual: 0.0,
+        payload: hello.encode(),
+    };
+    if write_frame(sock, &frame).is_err() {
+        anyhow::ensure!(rejoin, "master hung up during registration");
+        return Ok(None);
+    }
+    // bound the wait with a plain socket timeout (no wall-clock reads)
+    sock.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let reply = match read_frame(sock) {
+        Ok(f) => f,
+        Err(e) => {
+            if rejoin {
+                return Ok(None); // run finished before we were re-admitted
+            }
+            return Err(e.context("reading the master's registration reply"));
+        }
+    };
+    sock.set_read_timeout(None)?;
+    match reply.kind {
+        FrameKind::Sync => {
+            let body = if reply.payload.is_empty() {
+                None
+            } else {
+                Some(SyncBody::decode(&reply.payload)?)
+            };
+            Ok(Some((reply.round as usize, body)))
+        }
+        FrameKind::Drain => anyhow::bail!(
+            "master rejected worker {} registration: {}",
+            boot.id,
+            String::from_utf8_lossy(&reply.payload)
+        ),
+        other => anyhow::bail!("expected a sync frame after hello, got {other:?}"),
+    }
+}
+
+/// The shared round body of fresh and rejoining workers — the one
+/// [`WorkerSchedule`] every byte-moving transport runs, over a socket
+/// link. Returns `None` if the chaos knob fired (simulated kill), else a
+/// digest of the final model; on completion the digest also goes out as a
+/// Drain frame (best-effort — a local master verifies via thread joins
+/// and may already be tearing down).
+fn run_rounds(
+    sock: &mut TcpStream,
+    node: &mut dyn WorkerNode,
+    boot: &WorkerBoot,
+    start: usize,
+) -> anyhow::Result<Option<u64>> {
+    let schedule = WorkerSchedule {
+        n: boot.n,
+        id: boot.id,
+        start,
+        crash_at: boot.crash_at,
+        problem: boot.problem.as_ref(),
+        spec: &boot.spec,
+    };
+    let mut link = SocketLink { sock, id: boot.id };
+    if !schedule.run(node, &mut link)? {
+        return Ok(None);
+    }
+    let digest = digest_f32(node.model());
+    let _ = write_frame(
+        sock,
+        &Frame {
+            kind: FrameKind::Drain,
+            round: boot.spec.iters as u32,
+            worker: boot.id as u32,
+            residual: 0.0,
+            payload: drain_digest_payload(digest),
+        },
+    );
+    Ok(Some(digest))
+}
+
+/// One worker session over an established socket: register, import any
+/// synced state, run the rounds.
+fn worker_session(
+    mut sock: TcpStream,
+    boot: &WorkerBoot,
+    node: &mut dyn WorkerNode,
+    rejoin: bool,
+) -> anyhow::Result<Option<u64>> {
+    sock.set_nodelay(true)?;
+    let Some((start, sync)) = register(&mut sock, boot, rejoin)? else {
+        return Ok(None);
+    };
+    if let Some(body) = sync {
+        // rejoiners get a model-only body (residual state zeroed — the
+        // master's h/error state carries what the algebra needs); a fresh
+        // process joining a resumed master gets its full exported state
+        node.import_state(&body.model, &body.aux)?;
+    }
+    run_rounds(&mut sock, node, boot, start)
+}
+
+/// One local worker thread: connect, register (fresh hello or reconnect
+/// handshake), run the rounds. A rejoining worker that cannot complete
+/// its handshake (the master already shut down) exits cleanly with
+/// `None` instead of failing the run.
+pub(crate) fn tcp_worker_main(
+    boot: WorkerBoot,
+    mut node: Box<dyn WorkerNode>,
+    rejoin: bool,
+) -> anyhow::Result<Option<u64>> {
+    let sock = if rejoin {
+        match TcpStream::connect(boot.addr) {
+            Ok(s) => s,
+            Err(_) => return Ok(None), // master is gone; nothing to rejoin
+        }
+    } else {
+        TcpStream::connect(boot.addr)?
+    };
+    worker_session(sock, &boot, node.as_mut(), rejoin)
+}
+
+/// The `dore-worker` binary's entry point: rebuild worker `slot`'s node
+/// deterministically through the registry (the same construction the
+/// master's session uses, so a fresh fleet and a single-process run are
+/// bit-identical), connect to the master — retrying for ~10 s so the
+/// processes can be launched in any order — and run the session. Returns
+/// the final-model digest, or `None` if the crash knob fired or a rejoin
+/// found the run already finished.
+pub fn run_remote_worker(
+    addr: &str,
+    slot: usize,
+    n: usize,
+    rejoin: bool,
+    crash_at: Option<usize>,
+    problem: Arc<dyn Problem>,
+    spec: TrainSpec,
+) -> anyhow::Result<Option<u64>> {
+    anyhow::ensure!(slot < n, "worker slot {slot} out of range for a fleet of {n}");
+    let sockaddr = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving master address {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("master address {addr} resolved to nothing"))?;
+    let x0 = problem.init();
+    let (mut fleet, _master) = match &spec.algo_name {
+        Some(name) => registry::build_by_name(name, n, &x0, &spec.hp)?,
+        None => registry::build_algorithm(spec.algo, n, &x0, &spec.hp)?,
+    };
+    let node = fleet.swap_remove(slot);
+    // count-based retry: no wall-clock reads, just bounded attempts
+    const ATTEMPTS: usize = 200;
+    let mut sock = None;
+    for attempt in 0..ATTEMPTS {
+        match TcpStream::connect(sockaddr) {
+            Ok(s) => {
+                sock = Some(s);
+                break;
+            }
+            Err(e) if attempt + 1 == ATTEMPTS => {
+                return Err(anyhow::Error::from(e)
+                    .context(format!("connecting to the master at {addr}")));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(50)),
+        }
+    }
+    let sock = sock.expect("connected or bailed");
+    let boot = WorkerBoot { id: slot, n, addr: sockaddr, problem, spec, crash_at };
+    let mut node = node;
+    worker_session(sock, &boot, node.as_mut(), rejoin)
+}

@@ -46,7 +46,14 @@
 //! [`StalePolicy`] decides what stands in for the absentees (skip, or
 //! replay of their last frame), and [`SimNet`] models straggler
 //! heterogeneity ([`crate::comm::StragglerSpec`]) so the simulated clock
-//! reflects the k-th — not n-th — slowest uplink.
+//! reflects the k-th — not n-th — slowest uplink. Participation can also
+//! be **speed-aware**: [`Participation::Fastest`] folds the first `k`
+//! uplinks to *arrive* each round (real socket arrival order on
+//! [`crate::coordinator::tcp::TcpTransport`], the deterministic readiness
+//! model on [`SimNet`]); the realized per-round masks are emitted through
+//! [`Observer::on_mask`], logged by [`observer::MaskLog`], carried in
+//! checkpoints, and replaying them through [`Participation::Recorded`]
+//! reproduces the run bit-identically on any transport.
 //!
 //! The master-side aggregation itself scales across cores: a
 //! [`ReducePool`] (builder knob [`Session::reduce_threads`], CLI
@@ -101,8 +108,8 @@ pub mod session;
 pub mod transport;
 
 pub use fault::{FaultPlan, FaultWindow};
-pub use observer::{EvalEvent, Observer, RecoveryEvent, RoundEvent, RunInfo, RunSummary};
-pub use participation::{Participation, StalePolicy};
+pub use observer::{EvalEvent, MaskLog, Observer, RecoveryEvent, RoundEvent, RunInfo, RunSummary};
+pub use participation::{MaskSchedule, Participation, StalePolicy};
 pub use reduce::ReducePool;
 pub use session::{Session, TrainSpec};
 pub use transport::{

@@ -100,6 +100,10 @@ pub struct RunSummary {
     pub downlink_bits: u64,
     pub wall_seconds: f64,
     pub simulated_seconds: Option<f64>,
+    /// FNV-1a digest of the final master model
+    /// ([`crate::algorithms::digest_f32`]) — what fleet runs compare
+    /// against single-process runs for bit-identity.
+    pub final_model_digest: u64,
 }
 
 /// A sink for engine events. All methods default to no-ops so observers
@@ -107,9 +111,44 @@ pub struct RunSummary {
 pub trait Observer: Send {
     fn on_start(&mut self, _info: &RunInfo) {}
     fn on_round(&mut self, _event: &RoundEvent) {}
+    /// The *realized* participation mask of a completed round: which
+    /// workers' fresh uplinks the master folded. Identical to the seeded
+    /// mask for derived policies; the observed arrival outcome under
+    /// [`crate::engine::Participation::Fastest`].
+    fn on_mask(&mut self, _round: usize, _mask: &[bool]) {}
     fn on_eval(&mut self, _event: &EvalEvent) {}
     fn on_recovery(&mut self, _event: &RecoveryEvent) {}
     fn on_finish(&mut self, _summary: &RunSummary) {}
+}
+
+/// Streams realized per-round masks to a file in the
+/// [`crate::engine::participation::MaskSchedule`] log format
+/// (`"<round> <bitstring>"` per line) — the run log a `fastest:k` run
+/// leaves behind so `--replay-masks` can reproduce it bit-identically.
+pub struct MaskLog {
+    out: std::io::BufWriter<std::fs::File>,
+}
+
+impl MaskLog {
+    pub fn create<P: AsRef<std::path::Path>>(path: P) -> std::io::Result<Self> {
+        Ok(Self { out: std::io::BufWriter::new(std::fs::File::create(path)?) })
+    }
+}
+
+impl Observer for MaskLog {
+    fn on_mask(&mut self, round: usize, mask: &[bool]) {
+        use std::io::Write;
+        let bits: String = mask.iter().map(|&b| if b { '1' } else { '0' }).collect();
+        // a full disk mid-run should fail the run loudly, not truncate the
+        // replay record silently — panicking here surfaces through the
+        // session loop
+        writeln!(self.out, "{round} {bits}").expect("writing mask log");
+    }
+
+    fn on_finish(&mut self, _summary: &RunSummary) {
+        use std::io::Write;
+        self.out.flush().expect("flushing mask log");
+    }
 }
 
 /// [`RunMetrics`] collects the event stream into the series every paper
@@ -129,6 +168,10 @@ impl Observer for RunMetrics {
         if e.staleness > 0 {
             self.stale_uplink_rounds += 1;
         }
+    }
+
+    fn on_mask(&mut self, _round: usize, mask: &[bool]) {
+        self.realized_masks.push(mask.to_vec());
     }
 
     fn on_eval(&mut self, e: &EvalEvent) {
@@ -159,6 +202,7 @@ impl Observer for RunMetrics {
         self.total_rounds = s.total_rounds;
         self.wall_seconds = s.wall_seconds;
         self.simulated_seconds = s.simulated_seconds;
+        self.final_model_digest = s.final_model_digest;
     }
 }
 
@@ -189,12 +233,14 @@ mod tests {
             worker_residual_norm: 1.0,
             master_residual_norm: 0.5,
         });
+        m.on_mask(0, &[true, false, true]);
         m.on_finish(&RunSummary {
             total_rounds: 1,
             uplink_bits: 100,
             downlink_bits: 40,
             wall_seconds: 0.1,
             simulated_seconds: Some(2.5),
+            final_model_digest: 0xabcd,
         });
         assert_eq!(m.uplink_bits, 100);
         assert_eq!(m.downlink_bits, 40);
@@ -207,6 +253,32 @@ mod tests {
         assert!(m.test_loss.is_empty());
         assert_eq!(m.total_rounds, 1);
         assert_eq!(m.simulated_seconds, Some(2.5));
+        assert_eq!(m.realized_masks, vec![vec![true, false, true]]);
+        assert_eq!(m.final_model_digest, 0xabcd);
+    }
+
+    #[test]
+    fn mask_log_writes_the_schedule_format() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dore-masklog-test-{}.txt", std::process::id()));
+        {
+            let mut log = MaskLog::create(&path).unwrap();
+            log.on_mask(0, &[true, true, false]);
+            log.on_mask(1, &[false, true, true]);
+            log.on_finish(&RunSummary {
+                total_rounds: 2,
+                uplink_bits: 0,
+                downlink_bits: 0,
+                wall_seconds: 0.0,
+                simulated_seconds: None,
+                final_model_digest: 0,
+            });
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(text, "0 110\n1 011\n");
+        let sched = crate::engine::participation::MaskSchedule::parse_log(&text).unwrap();
+        assert_eq!(sched.masks, vec![vec![true, true, false], vec![false, true, true]]);
     }
 
     #[test]

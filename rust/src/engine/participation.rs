@@ -4,23 +4,137 @@
 //! DORE's analysis assumes a full synchronous gather, but real fleets have
 //! stragglers and dropouts. A [`Participation`] policy decides, per round,
 //! the subset of workers whose uplinks the barrier waits for; the
-//! [`StalePolicy`] decides what stands in for everyone else. Selection is a
-//! **pure function of `(seed, round, n)`** — no channel traffic, no shared
-//! state — so the engine, every transport, and every worker thread compute
-//! the identical mask independently and runs replay bit-for-bit.
+//! [`StalePolicy`] decides what stands in for everyone else. Seeded
+//! selection is a **pure function of `(seed, round, n)`** — no channel
+//! traffic, no shared state — so the engine, every transport, and every
+//! worker thread compute the identical mask independently and runs replay
+//! bit-for-bit.
 //!
-//! State correctness under partial rounds is the algorithms' business
-//! (see [`crate::algorithms::WorkerNode::on_reused`] and each master's
-//! normalization policy); this module only owns *who* participates.
+//! Two policies are *not* seeded draws. [`Participation::Fastest`] is
+//! hardware-driven: the master keeps the `k` first-arriving uplinks of each
+//! round, so the realized mask is an *output* of the run. It is recorded
+//! per round (run log, checkpoints) and a recorded schedule replays through
+//! [`Participation::Recorded`], which turns any mask log back into a
+//! deterministic policy — that pair is what keeps speed-aware runs
+//! auditable. State correctness under partial rounds is the algorithms'
+//! business (see [`crate::algorithms::WorkerNode::on_reused`] and each
+//! master's normalization policy); this module only owns *who*
+//! participates.
 
 use crate::compression::Xoshiro256;
+use crate::engine::protocol::fnv1a;
+use std::sync::Arc;
 
 /// Salt separating the selection RNG stream from the training sites
 /// (gradient sampling, quantization, jitter).
 const SELECT_SALT: u64 = 0x7061_7274_6963_6970; // "particip"
 
+/// A per-round participation schedule, indexed by absolute round number.
+/// Produced by recording realized `fastest:k` masks; consumed by
+/// [`Participation::Recorded`] to replay them bit-identically.
+#[derive(Clone, PartialEq, Eq)]
+pub struct MaskSchedule {
+    /// `masks[round][worker]` — row-major, one row per round from round 0.
+    pub masks: Vec<Vec<bool>>,
+}
+
+impl MaskSchedule {
+    pub fn rounds(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Fleet width of the schedule (0 when empty).
+    pub fn width(&self) -> usize {
+        self.masks.first().map_or(0, Vec::len)
+    }
+
+    /// FNV-1a over the flattened bits — pins a schedule in the
+    /// [`crate::engine::protocol::spec_fingerprint`] so master and remote
+    /// workers replaying a log must hold the *same* log.
+    pub fn digest(&self) -> u64 {
+        let flat: Vec<u8> =
+            self.masks.iter().flat_map(|row| row.iter().map(|&b| b as u8)).collect();
+        fnv1a(&flat)
+    }
+
+    /// Render as a mask log: one `"<round> <bitstring>"` line per round
+    /// (`1` = participated), e.g. `"12 1011"`.
+    pub fn format_log(&self) -> String {
+        let mut out = String::new();
+        for (round, row) in self.masks.iter().enumerate() {
+            out.push_str(&round.to_string());
+            out.push(' ');
+            for &b in row {
+                out.push(if b { '1' } else { '0' });
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a mask log produced by [`MaskSchedule::format_log`] (or the
+    /// `--mask-log` observer). Rounds must be contiguous from 0 and every
+    /// row the same width; blank lines and `#` comments are ignored.
+    pub fn parse_log(text: &str) -> anyhow::Result<MaskSchedule> {
+        let mut masks: Vec<Vec<bool>> = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (round_s, bits) = line
+                .split_once(' ')
+                .ok_or_else(|| anyhow::anyhow!("mask log line {}: expected '<round> <bits>'", lineno + 1))?;
+            let round: usize = round_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("mask log line {}: bad round '{round_s}': {e}", lineno + 1))?;
+            anyhow::ensure!(
+                round == masks.len(),
+                "mask log line {}: round {round} out of order (expected {})",
+                lineno + 1,
+                masks.len()
+            );
+            let row: Vec<bool> = bits
+                .trim()
+                .chars()
+                .map(|c| match c {
+                    '1' => Ok(true),
+                    '0' => Ok(false),
+                    other => Err(anyhow::anyhow!(
+                        "mask log line {}: bad mask char '{other}' (want 0/1)",
+                        lineno + 1
+                    )),
+                })
+                .collect::<anyhow::Result<_>>()?;
+            if let Some(first) = masks.first() {
+                anyhow::ensure!(
+                    row.len() == first.len(),
+                    "mask log line {}: width {} != {} of round 0",
+                    lineno + 1,
+                    row.len(),
+                    first.len()
+                );
+            }
+            masks.push(row);
+        }
+        Ok(MaskSchedule { masks })
+    }
+}
+
+impl std::fmt::Debug for MaskSchedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MaskSchedule {{ rounds: {}, n: {}, digest: {:016x} }}",
+            self.rounds(),
+            self.width(),
+            self.digest()
+        )
+    }
+}
+
 /// Which workers upload each round.
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub enum Participation {
     /// Every worker uploads every round (the paper's setting).
     #[default]
@@ -32,25 +146,60 @@ pub enum Participation {
     /// (Bernoulli dropout). If the whole fleet would sit out, worker
     /// `round % n` is kept so the round is never empty.
     Dropout { p: f64 },
+    /// Speed-aware k-of-n: the master keeps the `k` *first-arriving*
+    /// uplinks of each round and drops the laggards. Every worker computes
+    /// (the local mask is all-true); the realized subset is hardware-driven
+    /// and announced back on the downlink, so dropped workers revert their
+    /// speculative fold. Only transports that observe arrival order support
+    /// it ([`crate::coordinator::tcp::TcpTransport`], simulated arrival on
+    /// [`crate::engine::SimNet`]); realized masks are recorded per round so
+    /// the run stays auditable and replayable via [`Participation::Recorded`].
+    Fastest { k: usize },
+    /// Replay a recorded schedule of per-round masks (absolute round
+    /// index). This is how a `fastest:k` run is reproduced bit-identically
+    /// on any transport, and how a resumed run replays its recorded tail.
+    Recorded(Arc<MaskSchedule>),
 }
 
 impl Participation {
     /// Reject specs that cannot select a non-empty subset of `n` workers.
     pub fn validate(&self, n: usize) -> anyhow::Result<()> {
-        match *self {
+        match self {
             Participation::Full => Ok(()),
             Participation::KOfN { k } => {
                 anyhow::ensure!(
-                    (1..=n).contains(&k),
+                    (1..=n).contains(k),
                     "participation k:{k} out of range for {n} workers (need 1 ≤ k ≤ n)"
                 );
                 Ok(())
             }
             Participation::Dropout { p } => {
                 anyhow::ensure!(
-                    (0.0..1.0).contains(&p),
+                    (0.0..1.0).contains(p),
                     "dropout probability {p} out of range (need 0 ≤ p < 1)"
                 );
+                Ok(())
+            }
+            Participation::Fastest { k } => {
+                anyhow::ensure!(
+                    (1..=n).contains(k),
+                    "participation fastest:{k} out of range for {n} workers (need 1 ≤ k ≤ n)"
+                );
+                Ok(())
+            }
+            Participation::Recorded(sched) => {
+                anyhow::ensure!(sched.rounds() > 0, "recorded mask schedule is empty");
+                for (round, row) in sched.masks.iter().enumerate() {
+                    anyhow::ensure!(
+                        row.len() == n,
+                        "recorded mask for round {round} is {} wide, fleet is {n}",
+                        row.len()
+                    );
+                    anyhow::ensure!(
+                        row.iter().any(|&m| m),
+                        "recorded mask for round {round} has no participants"
+                    );
+                }
                 Ok(())
             }
         }
@@ -58,18 +207,21 @@ impl Participation {
 
     /// Per-round participation mask: `mask[i]` is whether worker `i`
     /// uploads at `round`. Deterministic given `(seed, round, n)` and
-    /// independent of every training RNG site.
+    /// independent of every training RNG site. For [`Participation::Fastest`]
+    /// this is all-true — everyone computes; the *realized* subset is
+    /// decided by arrival order inside the transport.
     pub fn mask(&self, seed: u64, round: usize, n: usize) -> Vec<bool> {
-        match *self {
+        match self {
             Participation::Full => vec![true; n],
-            Participation::KOfN { k } if k >= n => vec![true; n],
+            Participation::Fastest { .. } => vec![true; n],
+            Participation::KOfN { k } if *k >= n => vec![true; n],
             Participation::KOfN { k } => {
                 let mut rng = Xoshiro256::for_site(seed ^ SELECT_SALT, u64::MAX, round as u64);
                 // partial Fisher–Yates: the first k slots of a seeded
                 // shuffle are a uniform k-subset
                 let mut idx: Vec<usize> = (0..n).collect();
                 let mut mask = vec![false; n];
-                for i in 0..k {
+                for i in 0..*k {
                     let j = i + rng.next_below(n - i);
                     idx.swap(i, j);
                     mask[idx[i]] = true;
@@ -78,17 +230,49 @@ impl Participation {
             }
             Participation::Dropout { p } => {
                 let mut rng = Xoshiro256::for_site(seed ^ SELECT_SALT, u64::MAX, round as u64);
-                let mut mask: Vec<bool> = (0..n).map(|_| rng.next_f64() >= p).collect();
+                let mut mask: Vec<bool> = (0..n).map(|_| rng.next_f64() >= *p).collect();
                 if !mask.iter().any(|&m| m) {
                     mask[round % n] = true;
                 }
                 mask
             }
+            Participation::Recorded(sched) => {
+                assert!(
+                    round < sched.rounds(),
+                    "recorded mask schedule covers {} rounds, round {round} requested \
+                     (validate() pins schedule length to the horizon up front)",
+                    sched.rounds()
+                );
+                sched.masks[round].clone()
+            }
+        }
+    }
+
+    /// The `fastest:k` family needs the transport to see arrival order and
+    /// the workers to revert speculative folds; transports opt in via
+    /// [`crate::engine::Transport::supports_fastest`].
+    pub fn is_fastest(&self) -> bool {
+        matches!(self, Participation::Fastest { .. })
+    }
+
+    /// Canonical CLI-style token, used by
+    /// [`crate::engine::protocol::spec_fingerprint`] so master and workers
+    /// agree on the policy (for `Recorded`, on the exact schedule).
+    pub fn token(&self) -> String {
+        match self {
+            Participation::Full => "full".to_string(),
+            Participation::KOfN { k } => format!("k:{k}"),
+            Participation::Dropout { p } => format!("dropout:{p}"),
+            Participation::Fastest { k } => format!("fastest:{k}"),
+            Participation::Recorded(s) => {
+                format!("recorded:{}x{}:{:016x}", s.rounds(), s.width(), s.digest())
+            }
         }
     }
 }
 
-/// `full`, `k:<K>`, or `dropout:<p>`.
+/// `full`, `k:<K>`, `dropout:<p>`, or `fastest:<K>`. `Recorded` schedules
+/// come from a mask-log file (`--replay-masks`), not from a flag token.
 impl std::str::FromStr for Participation {
     type Err = anyhow::Error;
 
@@ -105,7 +289,13 @@ impl std::str::FromStr for Participation {
             let p = p.parse().map_err(|e| anyhow::anyhow!("dropout probability '{p}': {e}"))?;
             return Ok(Participation::Dropout { p });
         }
-        anyhow::bail!("unknown participation spec '{s}' (full | k:<K> | dropout:<p>)")
+        if let Some(k) = s.strip_prefix("fastest:") {
+            let k = k.parse().map_err(|e| anyhow::anyhow!("participation fastest '{k}': {e}"))?;
+            return Ok(Participation::Fastest { k });
+        }
+        anyhow::bail!(
+            "unknown participation spec '{s}' (full | k:<K> | dropout:<p> | fastest:<K>)"
+        )
     }
 }
 
@@ -197,13 +387,81 @@ mod tests {
             "dropout:0.3".parse::<Participation>().unwrap(),
             Participation::Dropout { p: 0.3 }
         );
+        assert_eq!(
+            "fastest:2".parse::<Participation>().unwrap(),
+            Participation::Fastest { k: 2 }
+        );
         assert!("bogus".parse::<Participation>().is_err());
         assert!(Participation::KOfN { k: 0 }.validate(4).is_err());
         assert!(Participation::KOfN { k: 5 }.validate(4).is_err());
         assert!(Participation::Dropout { p: 1.0 }.validate(4).is_err());
         assert!(Participation::Dropout { p: 0.5 }.validate(4).is_ok());
+        assert!(Participation::Fastest { k: 0 }.validate(4).is_err());
+        assert!(Participation::Fastest { k: 5 }.validate(4).is_err());
+        assert!(Participation::Fastest { k: 4 }.validate(4).is_ok());
         assert_eq!("skip".parse::<StalePolicy>().unwrap(), StalePolicy::Skip);
         assert_eq!("reuse".parse::<StalePolicy>().unwrap(), StalePolicy::ReuseLast);
         assert!("hold".parse::<StalePolicy>().is_err());
+    }
+
+    #[test]
+    fn fastest_local_mask_is_all_true() {
+        // everyone computes speculatively; arrival order decides later
+        assert_eq!(Participation::Fastest { k: 1 }.mask(7, 3, 5), vec![true; 5]);
+    }
+
+    #[test]
+    fn recorded_replays_rows_and_validates_shape() {
+        let sched = Arc::new(MaskSchedule {
+            masks: vec![vec![true, false, true], vec![false, true, true]],
+        });
+        let p = Participation::Recorded(sched.clone());
+        assert!(p.validate(3).is_ok());
+        assert!(p.validate(4).is_err(), "width mismatch must be rejected");
+        assert_eq!(p.mask(0, 1, 3), vec![false, true, true]);
+        // seed-independent: recorded masks are data, not draws
+        assert_eq!(p.mask(0, 0, 3), p.mask(99, 0, 3));
+        let empty = Participation::Recorded(Arc::new(MaskSchedule { masks: vec![] }));
+        assert!(empty.validate(3).is_err());
+        let hole = Participation::Recorded(Arc::new(MaskSchedule {
+            masks: vec![vec![false, false, false]],
+        }));
+        assert!(hole.validate(3).is_err(), "empty round must be rejected");
+    }
+
+    #[test]
+    fn mask_log_roundtrips() {
+        let sched = MaskSchedule {
+            masks: vec![
+                vec![true, true, false, true],
+                vec![false, true, true, true],
+                vec![true, false, true, false],
+            ],
+        };
+        let text = sched.format_log();
+        assert!(text.starts_with("0 1101\n"));
+        let back = MaskSchedule::parse_log(&text).unwrap();
+        assert_eq!(back, sched);
+        assert_eq!(back.digest(), sched.digest());
+        // comments and blank lines are tolerated; disorder is not
+        let with_noise = format!("# realized masks\n\n{text}");
+        assert_eq!(MaskSchedule::parse_log(&with_noise).unwrap(), sched);
+        assert!(MaskSchedule::parse_log("1 10\n0 01\n").is_err());
+        assert!(MaskSchedule::parse_log("0 10\n1 011\n").is_err());
+        assert!(MaskSchedule::parse_log("0 1x\n").is_err());
+    }
+
+    #[test]
+    fn tokens_pin_the_policy() {
+        assert_eq!(Participation::Full.token(), "full");
+        assert_eq!(Participation::KOfN { k: 3 }.token(), "k:3");
+        assert_eq!(Participation::Fastest { k: 2 }.token(), "fastest:2");
+        let a = Participation::Recorded(Arc::new(MaskSchedule {
+            masks: vec![vec![true, false]],
+        }));
+        let b = Participation::Recorded(Arc::new(MaskSchedule {
+            masks: vec![vec![false, true]],
+        }));
+        assert_ne!(a.token(), b.token(), "schedules must fingerprint differently");
     }
 }

@@ -1,19 +1,389 @@
-//! Message types between workers and the master. Payloads are encoded wire
-//! bytes (see [`crate::compression::codec`]); the structs carry the minimal
-//! control metadata a real deployment would put in a frame header. Used by
-//! the channel-backed [`super::Threaded`] transport; the TCP transport
-//! ([`crate::coordinator::tcp`]) serializes the same fields into its frame
-//! header.
+//! The wire protocol: every byte-moving transport frames its traffic here.
+//!
+//! One versioned frame format is shared by the channel transport (which
+//! moves [`UplinkMsg`]/[`DownlinkMsg`] structs and never serializes the
+//! header), the TCP transport, and the standalone `dore-worker` binary.
+//! Mismatched binaries fail loudly at the first frame — the header carries a
+//! magic pair and a protocol version byte, so a peer from another commit is
+//! rejected with an error naming both sides instead of silently mis-framing.
+//!
+//! ## Frame layout
+//!
+//! | bytes  | field         | meaning                                          |
+//! |--------|---------------|--------------------------------------------------|
+//! | 0..2   | magic `"DR"`  | frame-sync guard; anything else is a desync      |
+//! | 2      | version       | [`PROTOCOL_VERSION`]; mismatch is a hard error   |
+//! | 3      | kind          | [`FrameKind`] discriminant                       |
+//! | 4..8   | payload_len   | u32 LE, at most [`MAX_PAYLOAD`] (1 GiB)          |
+//! | 8..12  | round         | u32 LE round index (hello: resume hint)          |
+//! | 12..16 | worker        | u32 LE worker slot                               |
+//! | 16..24 | residual      | f64 LE residual-norm diagnostic (Fig. 6)         |
+//! | 24..   | payload       | `payload_len` bytes, meaning depends on `kind`   |
+//!
+//! ## Frame kinds
+//!
+//! | kind        | direction       | payload                                       |
+//! |-------------|-----------------|-----------------------------------------------|
+//! | `Uplink`    | worker → master | encoded compressed gradient (wire codec)      |
+//! | `Downlink`  | master → worker | encoded model update; under `fastest:k` it is |
+//! |             |                 | wrapped by [`encode_masked_downlink`]         |
+//! | `Hello`     | worker → master | [`HelloBody`] — fresh registration            |
+//! | `Reconnect` | worker → master | [`HelloBody`] — mid-run rejoin                |
+//! | `Sync`      | master → worker | empty (start fresh) or [`SyncBody`] state;    |
+//! |             |                 | `round` is the round to resume from           |
+//! | `Drain`     | both            | worker → master: 8-byte LE final-model digest; |
+//! |             |                 | master → worker: UTF-8 rejection text         |
+//!
+//! Payloads are encoded wire bytes (see [`crate::compression::codec`]); the
+//! header carries the minimal control metadata a real deployment would
+//! piggyback. [`HelloBody`] additionally pins the model dimension, fleet
+//! size and a [`spec_fingerprint`] of the training spec, so a worker booted
+//! with the wrong flags is turned away at registration with an actionable
+//! error instead of desyncing rounds later.
 
-/// Worker → master, one per round per worker.
+use crate::engine::session::TrainSpec;
+use crate::F;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Frame-sync guard; a stream not starting with these bytes is mis-framed.
+pub const MAGIC: [u8; 2] = *b"DR";
+/// Bump on any header or payload layout change — peers compare on hello.
+pub const PROTOCOL_VERSION: u8 = 1;
+/// Fixed frame header size in bytes.
+pub const HEADER_BYTES: usize = 24;
+/// Hard payload cap (1 GiB): anything larger is a corrupt length field.
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// Discriminant for the frame `kind` byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    Uplink = 0,
+    Downlink = 1,
+    Hello = 2,
+    Reconnect = 3,
+    Sync = 4,
+    Drain = 5,
+}
+
+impl FrameKind {
+    pub fn as_byte(self) -> u8 {
+        self as u8
+    }
+
+    pub fn from_byte(b: u8) -> Result<FrameKind> {
+        Ok(match b {
+            0 => FrameKind::Uplink,
+            1 => FrameKind::Downlink,
+            2 => FrameKind::Hello,
+            3 => FrameKind::Reconnect,
+            4 => FrameKind::Sync,
+            5 => FrameKind::Drain,
+            other => bail!("unknown frame kind {other} (corrupt or mis-framed stream)"),
+        })
+    }
+}
+
+/// One wire frame: fixed header plus opaque payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub round: u32,
+    pub worker: u32,
+    /// ‖variable fed to the compressor‖ — diagnostic, carried in-band.
+    pub residual: f64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// Serialize header + payload into one buffer (one `write_all` on the
+    /// socket keeps writer threads from interleaving partial frames).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(HEADER_BYTES + self.payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(PROTOCOL_VERSION);
+        out.push(self.kind.as_byte());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.worker.to_le_bytes());
+        out.extend_from_slice(&self.residual.to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        out
+    }
+}
+
+/// Parsed header: (kind, round, worker, residual, payload_len).
+fn parse_header(h: &[u8; HEADER_BYTES]) -> Result<(FrameKind, u32, u32, f64, usize)> {
+    if h[0..2] != MAGIC {
+        bail!(
+            "bad frame magic {:02x}{:02x} (expected {:02x}{:02x} \"DR\"): \
+             peer is not speaking the dore wire protocol, or the stream desynced",
+            h[0],
+            h[1],
+            MAGIC[0],
+            MAGIC[1]
+        );
+    }
+    if h[2] != PROTOCOL_VERSION {
+        bail!(
+            "wire-protocol version mismatch: peer speaks version {}, this binary speaks \
+             version {PROTOCOL_VERSION} — rebuild master and workers from the same commit",
+            h[2]
+        );
+    }
+    let kind = FrameKind::from_byte(h[3])?;
+    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if len > MAX_PAYLOAD {
+        bail!("frame payload length {len} exceeds the 1 GiB cap (corrupt length field)");
+    }
+    let round = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    let worker = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
+    let residual = f64::from_le_bytes([h[16], h[17], h[18], h[19], h[20], h[21], h[22], h[23]]);
+    Ok((kind, round, worker, residual, len))
+}
+
+/// Write one frame to a blocking sink.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<()> {
+    w.write_all(&f.to_bytes()).context("writing wire frame")?;
+    Ok(())
+}
+
+/// Read one frame from a blocking source (respects socket read timeouts).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut h = [0u8; HEADER_BYTES];
+    r.read_exact(&mut h).context("reading frame header")?;
+    let (kind, round, worker, residual, len) = parse_header(&h)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    Ok(Frame { kind, round, worker, residual, payload })
+}
+
+/// Nonblocking reassembly: pop one complete frame off the front of `buf` if
+/// present. Returns `Ok(None)` while the frame is still partial; the caller
+/// keeps appending received bytes and re-polling.
+pub fn take_frame(buf: &mut Vec<u8>) -> Result<Option<Frame>> {
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    let mut h = [0u8; HEADER_BYTES];
+    h.copy_from_slice(&buf[..HEADER_BYTES]);
+    let (kind, round, worker, residual, len) = parse_header(&h)?;
+    if buf.len() < HEADER_BYTES + len {
+        return Ok(None);
+    }
+    let payload = buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
+    buf.drain(..HEADER_BYTES + len);
+    Ok(Some(Frame { kind, round, worker, residual, payload }))
+}
+
+/// Hello/Reconnect payload: the worker's view of the run. The master
+/// rejects any mismatch at registration, naming both sides.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HelloBody {
+    pub dim: u32,
+    pub n_workers: u32,
+    pub fingerprint: u64,
+}
+
+impl HelloBody {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        out.extend_from_slice(&self.dim.to_le_bytes());
+        out.extend_from_slice(&self.n_workers.to_le_bytes());
+        out.extend_from_slice(&self.fingerprint.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<HelloBody> {
+        if bytes.len() != 16 {
+            bail!("hello payload is {} bytes, expected 16", bytes.len());
+        }
+        Ok(HelloBody {
+            dim: u32::from_le_bytes(bytes[0..4].try_into().unwrap()),
+            n_workers: u32::from_le_bytes(bytes[4..8].try_into().unwrap()),
+            fingerprint: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+        })
+    }
+}
+
+/// Sync payload: full worker state shipped on resume or mid-run rejoin. An
+/// *empty* Sync payload means "start fresh from your own initialization".
+#[derive(Clone, Debug, PartialEq)]
+pub struct SyncBody {
+    pub model: Vec<F>,
+    pub aux: Vec<(String, Vec<F>)>,
+}
+
+const MAX_SYNC_VEC: usize = 1 << 31;
+const MAX_SYNC_AUX: usize = 4096;
+const MAX_SYNC_NAME: usize = 4096;
+
+fn put_vec(out: &mut Vec<u8>, v: &[F]) {
+    out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn get_vec(bytes: &[u8], pos: &mut usize) -> Result<Vec<F>> {
+    if bytes.len() < *pos + 8 {
+        bail!("sync payload truncated in vector length");
+    }
+    let len = u64::from_le_bytes(bytes[*pos..*pos + 8].try_into().unwrap()) as usize;
+    *pos += 8;
+    if len > MAX_SYNC_VEC {
+        bail!("sync vector length {len} exceeds cap");
+    }
+    if bytes.len() < *pos + 4 * len {
+        bail!("sync payload truncated in vector body");
+    }
+    let mut v = Vec::with_capacity(len);
+    for i in 0..len {
+        v.push(F::from_le_bytes(bytes[*pos + 4 * i..*pos + 4 * i + 4].try_into().unwrap()));
+    }
+    *pos += 4 * len;
+    Ok(v)
+}
+
+impl SyncBody {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_vec(&mut out, &self.model);
+        out.extend_from_slice(&(self.aux.len() as u32).to_le_bytes());
+        for (name, v) in &self.aux {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            put_vec(&mut out, v);
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<SyncBody> {
+        let mut pos = 0usize;
+        let model = get_vec(bytes, &mut pos)?;
+        if bytes.len() < pos + 4 {
+            bail!("sync payload truncated in aux count");
+        }
+        let n_aux = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        if n_aux > MAX_SYNC_AUX {
+            bail!("sync aux count {n_aux} exceeds cap {MAX_SYNC_AUX}");
+        }
+        let mut aux = Vec::with_capacity(n_aux);
+        for _ in 0..n_aux {
+            if bytes.len() < pos + 4 {
+                bail!("sync payload truncated in aux name length");
+            }
+            let nl = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+            pos += 4;
+            if nl > MAX_SYNC_NAME || bytes.len() < pos + nl {
+                bail!("sync aux name length {nl} invalid");
+            }
+            let name = std::str::from_utf8(&bytes[pos..pos + nl])
+                .context("sync aux name is not UTF-8")?
+                .to_string();
+            pos += nl;
+            let v = get_vec(bytes, &mut pos)?;
+            aux.push((name, v));
+        }
+        if pos != bytes.len() {
+            bail!("sync payload has {} trailing bytes", bytes.len() - pos);
+        }
+        Ok(SyncBody { model, aux })
+    }
+}
+
+/// Worker → master Drain payload: the worker's final-model digest.
+pub fn drain_digest_payload(digest: u64) -> Vec<u8> {
+    digest.to_le_bytes().to_vec()
+}
+
+pub fn parse_drain_digest(bytes: &[u8]) -> Result<u64> {
+    if bytes.len() != 8 {
+        bail!("drain digest payload is {} bytes, expected 8", bytes.len());
+    }
+    Ok(u64::from_le_bytes(bytes.try_into().unwrap()))
+}
+
+/// Wrap a downlink payload with the realized participation mask so workers
+/// that computed speculatively under `fastest:k` know whether to keep or
+/// revert their local fold: `[u32 n][ceil(n/8) packed bits][payload]`.
+pub fn encode_masked_downlink(mask: &[bool], payload: &[u8]) -> Vec<u8> {
+    let nbytes = mask.len().div_ceil(8);
+    let mut out = Vec::with_capacity(4 + nbytes + payload.len());
+    out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
+    let mut packed = vec![0u8; nbytes];
+    for (i, &m) in mask.iter().enumerate() {
+        if m {
+            packed[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out.extend_from_slice(&packed);
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Inverse of [`encode_masked_downlink`]: returns the realized mask and the
+/// inner payload slice.
+pub fn split_masked_downlink(bytes: &[u8]) -> Result<(Vec<bool>, &[u8])> {
+    if bytes.len() < 4 {
+        bail!("masked downlink truncated in mask length");
+    }
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+    let nbytes = n.div_ceil(8);
+    if n > u16::MAX as usize * 8 || bytes.len() < 4 + nbytes {
+        bail!("masked downlink mask of width {n} invalid for {} bytes", bytes.len());
+    }
+    let mut mask = Vec::with_capacity(n);
+    for i in 0..n {
+        mask.push(bytes[4 + i / 8] & (1 << (i % 8)) != 0);
+    }
+    Ok((mask, &bytes[4 + nbytes..]))
+}
+
+/// FNV-1a over bytes; the same construction `algorithms::digest_f32` and the
+/// checkpoint checksum use, kept dependency-free.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Digest of everything master and worker must agree on before exchanging a
+/// single round: algorithm, horizon, seeds, participation, staleness,
+/// pipelining, codec, hyperparameters, model dimension and fleet size.
+/// `start_round` is deliberately excluded — resume position is conveyed by
+/// the Sync frame, not by matching CLI flags.
+pub fn spec_fingerprint(spec: &TrainSpec, dim: usize, n: usize) -> u64 {
+    let algo = spec.algo_name.clone().unwrap_or_else(|| spec.algo.name().to_string());
+    let canon = format!(
+        "{algo}|{}|{}|{}|{}|{:?}|{}|{:?}|{:?}|{dim}|{n}",
+        spec.iters,
+        spec.seed,
+        spec.minibatch,
+        spec.participation.token(),
+        spec.stale,
+        spec.pipeline_depth,
+        spec.wire_codec,
+        spec.hp,
+    );
+    fnv1a(canon.as_bytes())
+}
+
+/// Worker → master, one per round per worker. Moved verbatim by the
+/// channel-backed [`super::Threaded`] transport; serialized into a
+/// [`Frame`] by the socket transports.
 #[derive(Clone, Debug)]
 pub struct UplinkMsg {
     pub worker: usize,
     pub round: usize,
     /// Encoded compressed payload.
     pub bytes: Vec<u8>,
-    /// ‖variable fed to the compressor‖ — diagnostic for Fig. 6, carried
-    /// out-of-band (a real system would piggyback it the same way).
+    /// ‖variable fed to the compressor‖ — diagnostic for Fig. 6.
     pub residual_norm: f64,
 }
 
@@ -28,6 +398,16 @@ pub struct DownlinkMsg {
 mod tests {
     use super::*;
 
+    fn frame() -> Frame {
+        Frame {
+            kind: FrameKind::Uplink,
+            round: 7,
+            worker: 3,
+            residual: 0.125,
+            payload: vec![1, 2, 3, 4, 5],
+        }
+    }
+
     #[test]
     fn messages_are_cloneable_and_sized() {
         let m = UplinkMsg { worker: 1, round: 2, bytes: vec![1, 2, 3], residual_norm: 0.5 };
@@ -35,5 +415,121 @@ mod tests {
         assert_eq!(m2.bytes.len(), 3);
         let d = DownlinkMsg { round: 2, bytes: vec![9] };
         assert_eq!(d.clone().round, 2);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = frame();
+        let bytes = f.to_bytes();
+        assert_eq!(bytes.len(), HEADER_BYTES + 5);
+        let mut cur = std::io::Cursor::new(bytes);
+        let g = read_frame(&mut cur).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn take_frame_reassembles_from_partial_reads() {
+        let f = frame();
+        let wire = f.to_bytes();
+        let mut buf = Vec::new();
+        for (i, &b) in wire.iter().enumerate() {
+            buf.push(b);
+            let got = take_frame(&mut buf).unwrap();
+            if i + 1 < wire.len() {
+                assert!(got.is_none(), "frame completed early at byte {i}");
+            } else {
+                assert_eq!(got.unwrap(), f);
+                assert!(buf.is_empty());
+            }
+        }
+        // Two frames back to back: both pop, in order.
+        let mut two = f.to_bytes();
+        let mut g = frame();
+        g.round = 8;
+        two.extend_from_slice(&g.to_bytes());
+        assert_eq!(take_frame(&mut two).unwrap().unwrap().round, 7);
+        assert_eq!(take_frame(&mut two).unwrap().unwrap().round, 8);
+        assert!(two.is_empty());
+    }
+
+    #[test]
+    fn version_mismatch_names_both_sides() {
+        let mut wire = frame().to_bytes();
+        wire[2] = 9;
+        let err = take_frame(&mut wire).unwrap_err().to_string();
+        assert!(err.contains("version 9"), "{err}");
+        assert!(err.contains(&format!("version {PROTOCOL_VERSION}")), "{err}");
+    }
+
+    #[test]
+    fn bad_magic_and_bad_kind_are_rejected() {
+        let mut wire = frame().to_bytes();
+        wire[0] = b'X';
+        assert!(take_frame(&mut wire.clone()).unwrap_err().to_string().contains("magic"));
+        let mut wire = frame().to_bytes();
+        wire[3] = 200;
+        assert!(take_frame(&mut wire).unwrap_err().to_string().contains("kind"));
+    }
+
+    #[test]
+    fn oversize_payload_length_is_rejected() {
+        let mut wire = frame().to_bytes();
+        wire[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(take_frame(&mut wire).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn hello_and_sync_bodies_roundtrip() {
+        let h = HelloBody { dim: 500, n_workers: 4, fingerprint: 0xdead_beef_cafe_f00d };
+        assert_eq!(HelloBody::decode(&h.encode()).unwrap(), h);
+        assert!(HelloBody::decode(&[1, 2, 3]).is_err());
+
+        let s = SyncBody {
+            model: vec![1.0, -2.5, 3.25],
+            aux: vec![("m.h".to_string(), vec![0.5; 7]), ("w0.e".to_string(), vec![])],
+        };
+        assert_eq!(SyncBody::decode(&s.encode()).unwrap(), s);
+        let empty = SyncBody { model: vec![], aux: vec![] };
+        assert_eq!(SyncBody::decode(&empty.encode()).unwrap(), empty);
+        // Truncation at every prefix must error, never panic.
+        let wire = s.encode();
+        for cut in 0..wire.len() {
+            assert!(SyncBody::decode(&wire[..cut]).is_err(), "cut {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn masked_downlink_roundtrips_at_odd_widths() {
+        for n in [1usize, 3, 8, 9, 17] {
+            let mask: Vec<bool> = (0..n).map(|i| i % 3 != 1).collect();
+            let payload = vec![0xabu8; 11];
+            let wire = encode_masked_downlink(&mask, &payload);
+            let (m2, p2) = split_masked_downlink(&wire).unwrap();
+            assert_eq!(m2, mask, "n={n}");
+            assert_eq!(p2, &payload[..]);
+        }
+        assert!(split_masked_downlink(&[1, 0]).is_err());
+    }
+
+    #[test]
+    fn drain_digest_roundtrips() {
+        let p = drain_digest_payload(0x0123_4567_89ab_cdef);
+        assert_eq!(parse_drain_digest(&p).unwrap(), 0x0123_4567_89ab_cdef);
+        assert!(parse_drain_digest(&[0; 7]).is_err());
+    }
+
+    #[test]
+    fn spec_fingerprint_pins_the_contract() {
+        let spec = TrainSpec::default();
+        let a = spec_fingerprint(&spec, 100, 4);
+        assert_eq!(a, spec_fingerprint(&spec.clone(), 100, 4), "fingerprint is not stable");
+        let mut other = spec.clone();
+        other.seed ^= 1;
+        assert_ne!(a, spec_fingerprint(&other, 100, 4), "seed not fingerprinted");
+        assert_ne!(a, spec_fingerprint(&spec, 101, 4), "dim not fingerprinted");
+        assert_ne!(a, spec_fingerprint(&spec, 100, 5), "fleet size not fingerprinted");
+        let mut resumed = spec.clone();
+        resumed.start_round = 10;
+        assert_eq!(a, spec_fingerprint(&resumed, 100, 4), "start_round must not fingerprint");
     }
 }

@@ -23,7 +23,7 @@ use super::participation::{Participation, StalePolicy};
 use super::reduce::ReducePool;
 use super::registry;
 use super::transport::{InProc, RoundCtx, Transport};
-use crate::algorithms::{AlgorithmKind, HyperParams, MasterNode, WorkerNode};
+use crate::algorithms::{digest_f32, AlgorithmKind, HyperParams, MasterNode, WorkerNode};
 use crate::compression::{Compressed, WireCodec, Xoshiro256};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::metrics::{RunMetrics, Stopwatch};
@@ -376,6 +376,44 @@ impl<'p> Session<'p> {
         );
         spec.participation.validate(n)?;
         spec.fault.validate(n)?;
+        match &spec.participation {
+            Participation::Fastest { .. } => {
+                anyhow::ensure!(
+                    transport.supports_fastest(),
+                    "participation '{}' needs a transport that ranks uplink arrivals — \
+                     run it on tcp (real arrival order) or simnet (deterministic \
+                     readiness model), not '{}'",
+                    spec.participation.token(),
+                    transport.name()
+                );
+                anyhow::ensure!(
+                    spec.pipeline_depth == 1,
+                    "fastest:k requires pipeline_depth 1: a speculative uplink cannot \
+                     be reverted once later rounds are already in flight"
+                );
+                anyhow::ensure!(
+                    spec.stale == StalePolicy::Skip,
+                    "fastest:k requires StalePolicy::Skip: a dropped speculative \
+                     uplink is an absent slot, not a replayable stale frame"
+                );
+                anyhow::ensure!(
+                    spec.fault.is_none(),
+                    "fastest:k already models stragglers through arrival order; to \
+                     combine it with failure injection, replay its recorded masks \
+                     (--replay-masks) under a FaultPlan instead"
+                );
+            }
+            Participation::Recorded(sched) => {
+                anyhow::ensure!(
+                    sched.rounds() >= spec.iters,
+                    "recorded mask schedule covers {} rounds but the run has {} — \
+                     replay the complete log the recording run produced",
+                    sched.rounds(),
+                    spec.iters
+                );
+            }
+            _ => {}
+        }
         if let Some((every, _)) = &checkpoint {
             anyhow::ensure!(*every >= 1, "checkpoint cadence must be ≥ 1 round");
             anyhow::ensure!(
@@ -410,8 +448,8 @@ impl<'p> Session<'p> {
         // checkpointed round — all stochastic sites are keyed by
         // absolute round, so the tail replays the uninterrupted run
         // bit-for-bit.
-        let start = match &resume {
-            None => 0,
+        let (start, mut realized_history) = match &resume {
+            None => (0, Vec::new()),
             Some(path) => {
                 let ck = Checkpoint::load(path)?;
                 anyhow::ensure!(
@@ -444,8 +482,37 @@ impl<'p> Session<'p> {
                      {}-round run (raise iters to extend it)",
                     spec.iters
                 );
+                // realized-mask history (`mask.sched` aux, written by
+                // fastest/recorded runs): the observed participation of
+                // rounds 0..start, carried so the resumed run's checkpoints
+                // stay self-describing and a replayed log can be validated
+                // against what actually happened before the kill
+                let history: Vec<Vec<bool>> = match ck
+                    .aux
+                    .iter()
+                    .find(|(name, _)| name == "mask.sched")
+                {
+                    Some((_, flat)) => unflatten_masks(flat, n)?,
+                    None => Vec::new(),
+                };
+                if !history.is_empty() {
+                    anyhow::ensure!(
+                        history.len() == start,
+                        "checkpoint mask history covers {} rounds but the checkpoint \
+                         is at round {start}",
+                        history.len()
+                    );
+                    if let Participation::Recorded(sched) = &spec.participation {
+                        anyhow::ensure!(
+                            sched.masks[..start] == history[..],
+                            "replayed mask schedule disagrees with the checkpoint's \
+                             recorded history over rounds 0..{start} — this log is \
+                             from a different run"
+                        );
+                    }
+                }
                 restore_nodes(&ck, master.as_mut(), &mut workers)?;
-                start
+                (start, history)
             }
         };
         spec.start_round = start;
@@ -528,6 +595,23 @@ impl<'p> Session<'p> {
                 "transport returned {} uplink slots for {n} workers",
                 frames.len()
             );
+            // the *realized* participation of the round: identical to the
+            // derived mask except under fastest, where the transport
+            // reports which k speculative uplinks arrived first (payload
+            // presence is the record)
+            let realized: Vec<bool> =
+                if let Participation::Fastest { k } = &spec.participation {
+                    let got: Vec<bool> = frames.iter().map(|f| f.payload.is_some()).collect();
+                    let arrived = got.iter().filter(|&&b| b).count();
+                    anyhow::ensure!(
+                        arrived == *k,
+                        "fastest:{k} round {t} resolved {arrived} uplinks (the transport \
+                         must deliver exactly the first k)"
+                    );
+                    got
+                } else {
+                    mask.clone()
+                };
             let mut round_up_bits = 0u64;
             let mut res_sum = 0.0f64;
             let mut participants = 0usize;
@@ -535,7 +619,7 @@ impl<'p> Session<'p> {
             for (i, f) in frames.into_iter().enumerate() {
                 anyhow::ensure!(f.worker == i, "uplink frames out of worker order");
                 anyhow::ensure!(f.round == t, "round skew: engine at {t}, frame at {}", f.round);
-                if mask[i] {
+                if realized[i] {
                     // a selected worker must have uploaded a fresh frame
                     let payload = f.payload.ok_or_else(|| {
                         anyhow::anyhow!("worker {i} was selected for round {t} but sent no uplink")
@@ -559,10 +643,13 @@ impl<'p> Session<'p> {
             // 4. push the broadcast; inline transports apply it to every
             //    worker now (self-paced workers apply it before computing
             //    their round-`t + depth` uplink).
+            // the downlink context carries the *realized* mask: under
+            // fastest the byte-moving transports prefix the broadcast with
+            // it so every worker learns whether its speculative fold stood
             let bits_per_copy = transport.push_downlink(
                 t,
                 &down,
-                RoundCtx { problem: p, spec: &spec, mask: &mask },
+                RoundCtx { problem: p, spec: &spec, mask: &realized },
             )?;
             let round_down_bits = n as u64 * bits_per_copy;
             transport.sync_state(t + 1, master.model());
@@ -594,6 +681,16 @@ impl<'p> Session<'p> {
                 for o in observers.iter_mut() {
                     o.on_recovery(ev);
                 }
+            }
+            metrics.on_mask(t, &realized);
+            for o in observers.iter_mut() {
+                o.on_mask(t, &realized);
+            }
+            if matches!(
+                spec.participation,
+                Participation::Fastest { .. } | Participation::Recorded(_)
+            ) {
+                realized_history.push(realized);
             }
             let worker_res = res_sum / participants.max(1) as f64;
             let master_res = master.last_compressed_norm();
@@ -643,6 +740,15 @@ impl<'p> Session<'p> {
                     for (i, st) in transport.export_worker_state()?.into_iter().enumerate() {
                         aux.extend(st.into_iter().map(|(name, v)| (format!("w{i}.{name}"), v)));
                     }
+                    if matches!(
+                        spec.participation,
+                        Participation::Fastest { .. } | Participation::Recorded(_)
+                    ) {
+                        // the realized masks of rounds 0..t+1 ride along, so
+                        // a resume can validate its replay log against what
+                        // actually happened before the kill
+                        aux.push(("mask.sched".to_string(), flatten_masks(&realized_history)));
+                    }
                     Checkpoint {
                         algo: display.to_string(),
                         round: (t + 1) as u64,
@@ -671,6 +777,7 @@ impl<'p> Session<'p> {
             downlink_bits: metrics.downlink_bits,
             wall_seconds: sw.seconds(),
             simulated_seconds: transport.simulated_seconds(),
+            final_model_digest: digest_f32(master.model()),
         };
         metrics.on_finish(&summary);
         for o in observers.iter_mut() {
@@ -692,6 +799,10 @@ fn restore_nodes(
     let mut master_aux: Vec<(String, Vec<F>)> = Vec::new();
     let mut worker_aux: Vec<Vec<(String, Vec<F>)>> = (0..n).map(|_| Vec::new()).collect();
     for (name, v) in &ck.aux {
+        if name.starts_with("mask.") {
+            // realized-mask history: session-level metadata, not node state
+            continue;
+        }
         if let Some(rest) = name.strip_prefix("m.") {
             master_aux.push((rest.to_string(), v.clone()));
         } else if let Some(rest) = name.strip_prefix('w') {
@@ -720,6 +831,25 @@ fn restore_nodes(
             .map_err(|e| anyhow::anyhow!("restoring worker {i} state: {e}"))?;
     }
     Ok(())
+}
+
+/// Realized masks → the flat `F`-vector shape checkpoint aux entries use
+/// (row-major, one 0.0/1.0 per worker per round).
+fn flatten_masks(masks: &[Vec<bool>]) -> Vec<F> {
+    masks
+        .iter()
+        .flat_map(|row| row.iter().map(|&b| if b { 1.0 } else { 0.0 }))
+        .collect()
+}
+
+/// Inverse of [`flatten_masks`] for a fleet of `n`.
+fn unflatten_masks(flat: &[F], n: usize) -> anyhow::Result<Vec<Vec<bool>>> {
+    anyhow::ensure!(
+        n > 0 && flat.len() % n == 0,
+        "checkpoint mask history holds {} values, not divisible by the fleet of {n}",
+        flat.len()
+    );
+    Ok(flat.chunks(n).map(|row| row.iter().map(|&v| v != 0.0).collect()).collect())
 }
 
 #[cfg(test)]

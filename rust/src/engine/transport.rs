@@ -47,8 +47,8 @@
 //! the RNG sites (gradient sampling and quantization) are seeded in exactly
 //! one place no matter which transport runs them.
 
-use super::participation::StalePolicy;
-use super::protocol::{DownlinkMsg, UplinkMsg};
+use super::participation::{Participation, StalePolicy};
+use super::protocol::{split_masked_downlink, DownlinkMsg, UplinkMsg};
 use super::session::TrainSpec;
 use crate::algorithms::WorkerNode;
 use crate::comm::{LinkSpec, NetSim, StragglerSpec};
@@ -220,6 +220,16 @@ pub trait Transport: Send {
     /// ahead of the boundary, so the default is `false` and the session
     /// fails checkpoint configuration up front with an actionable error.
     fn supports_checkpoint(&self) -> bool {
+        false
+    }
+
+    /// Whether this transport can run [`Participation::Fastest`]: it must
+    /// rank uplink arrivals (real socket arrival order, or [`SimNet`]'s
+    /// deterministic readiness model) and its workers must handle masked
+    /// downlinks (speculative compute + revert). The default is `false`
+    /// and the session rejects the spec up front with an actionable
+    /// error.
+    fn supports_fastest(&self) -> bool {
         false
     }
 
@@ -421,14 +431,23 @@ pub(crate) fn absent_slot_frame(
     })
 }
 
-/// The I/O half of a self-paced worker: how one downlink is received and
-/// applied, and how one uplink leaves. Implemented over mpsc channels
-/// ([`Threaded`]) and sockets ([`crate::coordinator::tcp::TcpTransport`])
-/// so the *schedule* itself — [`WorkerSchedule::run`] — lives in exactly
-/// one place and the transports cannot drift apart.
+/// The I/O half of a self-paced worker: how one downlink's raw wire bytes
+/// arrive and how one uplink's leave. Implemented over mpsc channels
+/// ([`Threaded`]) and sockets ([`crate::coordinator::link`]) so the
+/// *schedule* itself — [`WorkerSchedule::run`] — lives in exactly one
+/// place and the transports cannot drift apart. Links move bytes only:
+/// decoding and state application (including the masked-downlink revert
+/// of [`Participation::Fastest`]) live in [`WorkerRoundDriver::apply`].
 pub(crate) trait WorkerLink {
-    fn apply(&mut self, node: &mut dyn WorkerNode, round: usize) -> anyhow::Result<()>;
-    fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()>;
+    /// Block until downlink `round` arrives; return its raw wire bytes.
+    fn recv_downlink(&mut self, round: usize) -> anyhow::Result<Vec<u8>>;
+    /// Transmit worker `round`'s encoded uplink.
+    fn send_uplink(
+        &mut self,
+        round: usize,
+        bytes: Vec<u8>,
+        residual_norm: f64,
+    ) -> anyhow::Result<()>;
 }
 
 /// One step of the self-paced worker schedule, in execution order.
@@ -509,12 +528,15 @@ impl WorkerSchedule<'_> {
         for step in schedule_steps(self.start, spec.iters, depth, self.crash_at) {
             match step {
                 ScheduleStep::Crash(_) => return Ok(false),
-                ScheduleStep::Apply(r) => link.apply(node, r)?,
+                ScheduleStep::Apply(r) => {
+                    let bytes = link.recv_downlink(r)?;
+                    driver.apply(node, r, self.id, &bytes)?;
+                }
                 ScheduleStep::Round(k) => {
                     if let Some((bytes, residual_norm)) =
                         driver.round(node, self.problem, spec, k, self.id, &mut grad)
                     {
-                        link.send(k, bytes, residual_norm)?;
+                        link.send_uplink(k, bytes, residual_norm)?;
                     }
                 }
             }
@@ -532,18 +554,36 @@ impl WorkerSchedule<'_> {
 pub(crate) struct WorkerRoundDriver {
     n: usize,
     reuse: bool,
+    /// Speed-aware mode ([`Participation::Fastest`]): every round is
+    /// computed speculatively and the downlink's realized-mask prefix
+    /// decides whether the work stands or is rewound.
+    fastest: bool,
     /// Mirror of the master's replay cache for this worker.
     last: Option<Compressed>,
+    /// Pre-round state snapshot (model + recovery aux) taken before a
+    /// speculative compute, consumed by [`Self::apply`] when the realized
+    /// mask arrives.
+    snapshot: Option<(Vec<F>, Vec<(String, Vec<F>)>)>,
 }
 
 impl WorkerRoundDriver {
     pub(crate) fn new(spec: &TrainSpec, n: usize) -> Self {
-        Self { n, reuse: spec.stale == StalePolicy::ReuseLast, last: None }
+        Self {
+            n,
+            reuse: spec.stale == StalePolicy::ReuseLast,
+            fastest: spec.participation.is_fastest(),
+            last: None,
+            snapshot: None,
+        }
     }
 
     /// Run worker `id`'s side of `round`: `Some((encoded bytes, residual
     /// norm))` to transmit when selected; `None` — after firing any
-    /// [`WorkerNode::on_reused`] state fold — when sitting out.
+    /// [`WorkerNode::on_reused`] state fold — when sitting out. Under
+    /// [`Participation::Fastest`] the local mask is all-true (everyone
+    /// races), so this always computes — but first parks a state snapshot
+    /// so [`Self::apply`] can rewind if the master's barrier closed
+    /// without us.
     pub(crate) fn round(
         &mut self,
         node: &mut dyn WorkerNode,
@@ -554,6 +594,9 @@ impl WorkerRoundDriver {
         grad: &mut [F],
     ) -> Option<(Vec<u8>, f64)> {
         if spec.round_mask(round, self.n)[id] {
+            if self.fastest {
+                self.snapshot = Some((node.model().to_vec(), node.export_state()));
+            }
             let (up, residual_norm) = worker_uplink(node, problem, spec, round, id, grad);
             let bytes = codec::encode_with(&up, spec.wire_codec);
             if self.reuse {
@@ -571,6 +614,44 @@ impl WorkerRoundDriver {
             }
             None
         }
+    }
+
+    /// Apply downlink `round` from its raw wire bytes. Under
+    /// [`Participation::Fastest`] the bytes carry a realized-mask prefix
+    /// ([`split_masked_downlink`]): a worker whose speculative uplink the
+    /// master dropped rewinds to its pre-round snapshot first, so its
+    /// state is bit-identical to never having computed the round at all.
+    pub(crate) fn apply(
+        &mut self,
+        node: &mut dyn WorkerNode,
+        round: usize,
+        id: usize,
+        bytes: &[u8],
+    ) -> anyhow::Result<()> {
+        let payload = if self.fastest {
+            let (mask, inner) = split_masked_downlink(bytes)?;
+            anyhow::ensure!(
+                mask.len() == self.n,
+                "realized mask covers {} of {} workers",
+                mask.len(),
+                self.n
+            );
+            let snapshot = self.snapshot.take();
+            if !mask[id] {
+                let (model, aux) = snapshot.ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "downlink {round} dropped worker {id}'s uplink but no \
+                         speculative snapshot is pending"
+                    )
+                })?;
+                node.import_state(&model, &aux)?;
+            }
+            codec::decode(inner)?
+        } else {
+            codec::decode(bytes)?
+        };
+        node.apply_downlink(round, &payload);
+        Ok(())
     }
 }
 
@@ -802,18 +883,21 @@ struct ChannelLink<'a> {
 }
 
 impl WorkerLink for ChannelLink<'_> {
-    fn apply(&mut self, node: &mut dyn WorkerNode, round: usize) -> anyhow::Result<()> {
+    fn recv_downlink(&mut self, round: usize) -> anyhow::Result<Vec<u8>> {
         let down = self
             .from_master
             .recv()
             .map_err(|_| anyhow::anyhow!("master closed downlink"))?;
         anyhow::ensure!(down.round == round, "round skew: worker {round} got {}", down.round);
-        let payload = codec::decode(&down.bytes)?;
-        node.apply_downlink(round, &payload);
-        Ok(())
+        Ok(down.bytes)
     }
 
-    fn send(&mut self, round: usize, bytes: Vec<u8>, residual_norm: f64) -> anyhow::Result<()> {
+    fn send_uplink(
+        &mut self,
+        round: usize,
+        bytes: Vec<u8>,
+        residual_norm: f64,
+    ) -> anyhow::Result<()> {
         self.to_master
             .send(UplinkMsg { worker: self.id, round, bytes, residual_norm })
             .map_err(|_| anyhow::anyhow!("master hung up"))
@@ -1055,6 +1139,10 @@ pub struct SimNet {
     depth: usize,
     /// Polled-but-unpushed rounds, in round order (≤ depth entries).
     pending: VecDeque<SimRound>,
+    /// Realized [`Participation::Fastest`] masks of open rounds, chosen at
+    /// `begin_round` from the deterministic readiness model and consumed
+    /// at poll time for the barrier/bits accounting.
+    fastest_masks: BTreeMap<usize, Vec<bool>>,
 }
 
 impl SimNet {
@@ -1066,6 +1154,7 @@ impl SimNet {
             net: None,
             depth: 1,
             pending: VecDeque::new(),
+            fastest_masks: BTreeMap::new(),
         }
     }
 
@@ -1082,6 +1171,24 @@ impl SimNet {
     pub fn straggler(mut self, straggler: StragglerSpec) -> Self {
         self.straggler = straggler;
         self
+    }
+
+    /// The realized [`Participation::Fastest`] mask for `round`: the k
+    /// first arrivals under the *modeled* readiness — a nominal unit
+    /// compute scaled by each worker's straggler factor, plus its seeded
+    /// per-round jitter; ties break by worker index. Measured
+    /// `compute_seconds` deliberately never feeds selection (it is
+    /// wall-clock and would make the trajectory unreplayable); it only
+    /// ever shifts the simulated clock.
+    fn fastest_mask(&self, spec: &TrainSpec, round: usize, n: usize, k: usize) -> Vec<bool> {
+        let mut order: Vec<usize> = (0..n).collect();
+        let key = |i: usize| self.straggler.ready_time(spec.seed, i, n, round, 1.0);
+        order.sort_by(|&a, &b| key(a).total_cmp(&key(b)).then(a.cmp(&b)));
+        let mut mask = vec![false; n];
+        for &i in order.iter().take(k) {
+            mask[i] = true;
+        }
+        mask
     }
 }
 
@@ -1101,6 +1208,7 @@ impl Transport for SimNet {
         self.net = Some(NetSim::new(self.link, n));
         self.depth = spec.pipeline_depth.max(1);
         self.pending.clear();
+        self.fastest_masks.clear();
         self.inner.start(workers, shared_problem, spec)
     }
 
@@ -1110,6 +1218,17 @@ impl Transport for SimNet {
         ctx: RoundCtx<'_>,
         inject: Vec<UplinkFrame>,
     ) -> anyhow::Result<()> {
+        if let Participation::Fastest { k } = &ctx.spec.participation {
+            // narrow the all-true fastest mask to the modeled k first
+            // arrivals *before* the inline workers run, so the losers
+            // never compute — bit-identical to replaying the recorded
+            // mask on any inline transport
+            let realized = self.fastest_mask(ctx.spec, round, self.inner.n(), *k);
+            let narrowed = RoundCtx { problem: ctx.problem, spec: ctx.spec, mask: &realized };
+            self.inner.begin_round(round, narrowed, inject)?;
+            self.fastest_masks.insert(round, realized);
+            return Ok(());
+        }
         self.inner.begin_round(round, ctx, inject)
     }
 
@@ -1119,7 +1238,8 @@ impl Transport for SimNet {
         ctx: RoundCtx<'_>,
     ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
         let n = self.inner.n();
-        let mask = ctx.mask;
+        let realized = self.fastest_masks.remove(&round);
+        let mask = realized.as_deref().unwrap_or(ctx.mask);
         let Some(frames) = self.inner.poll_uplinks(round, ctx)? else {
             return Ok(None);
         };
@@ -1197,6 +1317,10 @@ impl Transport for SimNet {
     }
 
     fn supports_checkpoint(&self) -> bool {
+        true
+    }
+
+    fn supports_fastest(&self) -> bool {
         true
     }
 

@@ -75,6 +75,7 @@
 #![deny(deprecated)]
 
 pub mod algorithms;
+pub mod cli;
 pub mod comm;
 pub mod compression;
 pub mod config;

@@ -3,98 +3,34 @@
 //! ```text
 //! dore train --config job.json [--csv out.csv] [--distributed]
 //! dore train --problem linreg --algorithm dore --lr 0.05 --iters 1000 ...
+//! dore train --transport tcp --bind 0.0.0.0:7000 ...   # serve a real fleet
 //! dore compare --problem linreg --iters 1000       # all 7 algorithms
 //! dore bandwidth --dim 11173962                    # Fig. 2 style sweep
 //! dore artifacts --dir artifacts                   # inspect AOT artifacts
 //! ```
 //!
-//! Flag parsing is hand-rolled (offline environment, no clap): every flag
-//! is `--name value` except boolean `--distributed`.
+//! Flag parsing ([`dore::cli::Flags`]) is hand-rolled (offline
+//! environment, no clap): every flag is `--name value` except bare
+//! booleans like `--distributed`. The flag → spec mapping is shared with
+//! the `dore-worker` binary through [`dore::cli`], so a master and its
+//! remote workers launched with the same flags agree on the spec
+//! fingerprint the registration handshake checks.
 
 #![deny(deprecated)]
 
 use dore::algorithms::{AlgorithmKind, HyperParams};
+use dore::cli::{apply_spec_overrides, build_problem, train_spec, Flags};
 use dore::comm::StragglerSpec;
-use dore::config::{parse_prox, parse_schedule, JobConfig, ProblemConfig};
+use dore::config::{JobConfig, ProblemConfig};
 use dore::coordinator::tcp::TcpTransport;
 use dore::data::synth;
-use dore::engine::{FaultPlan, Participation, Session, SimNet, StalePolicy, Threaded, TrainSpec};
+use dore::engine::{MaskLog, MaskSchedule, Participation, Session, SimNet, Threaded, TrainSpec};
 use dore::harness::{characterize_round, compare, simulated_iteration_time};
 use dore::models::mlp::{Mlp, MlpArch};
 use dore::models::Problem;
 use dore::runtime::lm::TransformerLm;
 use dore::runtime::XlaRuntime;
-use std::collections::BTreeMap;
 use std::sync::Arc;
-
-/// `--key value` flags plus bare boolean flags.
-struct Flags {
-    vals: BTreeMap<String, String>,
-    bools: Vec<String>,
-}
-
-impl Flags {
-    fn parse(args: &[String]) -> anyhow::Result<Self> {
-        let mut vals = BTreeMap::new();
-        let mut bools = Vec::new();
-        let mut i = 0;
-        while i < args.len() {
-            let a = &args[i];
-            anyhow::ensure!(a.starts_with("--"), "unexpected argument '{a}'");
-            let key = a.trim_start_matches("--").to_string();
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                vals.insert(key, args[i + 1].clone());
-                i += 2;
-            } else {
-                bools.push(key);
-                i += 1;
-            }
-        }
-        Ok(Self { vals, bools })
-    }
-
-    fn get(&self, key: &str) -> Option<&str> {
-        self.vals.get(key).map(|s| s.as_str())
-    }
-
-    fn num<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
-    where
-        T::Err: std::fmt::Display,
-    {
-        match self.get(key) {
-            None => Ok(default),
-            Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--{key} {s}: {e}")),
-        }
-    }
-
-    fn flag(&self, key: &str) -> bool {
-        self.bools.iter().any(|b| b == key)
-    }
-}
-
-fn build_problem(name: &str, workers: usize, seed: u64) -> anyhow::Result<Arc<dyn Problem>> {
-    Ok(match name {
-        "linreg" => Arc::new(synth::linreg_problem(1200, 500, workers, 0.1, seed)),
-        "mnist" => {
-            let (tr, te) = synth::mnist_like(4096, seed).split_test(512);
-            Arc::new(Mlp::new(MlpArch::new(&[784, 256, 64, 10]), tr, Some(te), workers, seed))
-        }
-        "cifar" => {
-            let (tr, te) = synth::cifar_like(2048, seed).split_test(256);
-            Arc::new(Mlp::new(MlpArch::new(&[3072, 512, 256, 10]), tr, Some(te), workers, seed))
-        }
-        "transformer" => {
-            let corpus = synth::markov_corpus(200_000, 512, seed);
-            Arc::new(TransformerLm::load(
-                dore::runtime::default_artifact_dir(),
-                corpus,
-                workers,
-                seed,
-            )?)
-        }
-        other => anyhow::bail!("unknown problem '{other}' (linreg|mnist|cifar|transformer)"),
-    })
-}
 
 fn problem_from_config(cfg: &ProblemConfig, workers: usize) -> anyhow::Result<Arc<dyn Problem>> {
     Ok(match cfg {
@@ -124,11 +60,13 @@ fn problem_from_config(cfg: &ProblemConfig, workers: usize) -> anyhow::Result<Ar
 
 fn print_run_summary(m: &dore::metrics::RunMetrics, workers: usize) {
     println!(
-        "algo={} rounds={} wall={:.2}s final_loss={:.4e} bits/round/worker={:.0} total_MB={:.2}",
+        "algo={} rounds={} wall={:.2}s final_loss={:.4e} final_digest={:016x} \
+         bits/round/worker={:.0} total_MB={:.2}",
         m.algo,
         m.total_rounds,
         m.wall_seconds,
         m.loss.last().copied().unwrap_or(f64::NAN),
+        m.final_model_digest,
         m.bits_per_round_per_worker(workers),
         m.total_bits() as f64 / 8e6,
     );
@@ -157,25 +95,33 @@ const USAGE: &str = "usage: dore <train|compare|bandwidth|artifacts> [--flags]
   train      --config job.json | --problem P --algorithm A --lr F --iters N
              [--alpha F --beta F --eta F --compressor SPEC --prox SPEC
               --schedule SPEC --workers N --minibatch N --eval-every N
-              --seed N --participation full|k:<K>|dropout:<p> --stale skip|reuse
+              --seed N --stale skip|reuse
+              --participation full|k:<K>|dropout:<p>|fastest:<K>
+                (fastest:<K> folds the first K arrivals; tcp/simnet only)
               --fault none|rand:<p>:<outage>|crash:<w>@<r>[..<rejoin>],...
               --checkpoint-every K [--checkpoint-path FILE] --resume FILE
+              --mask-log FILE (record realized per-round masks)
+              --replay-masks FILE (replay a recorded mask log bit-identically)
               --reduce-threads N (master-side sharded reduction; 0 = all cores)
               --pipeline-depth D (in-flight rounds per link; 1 = synchronous)
               --wire-codec fixed|entropy (wire frames; entropy = Huffman/Rice,
                 never larger, trajectory-neutral)
               --transport inproc|threads|tcp|simnet
+              --bind ADDR (tcp: serve external dore-worker processes on ADDR
+                instead of spawning local worker threads)
               [--bandwidth BPS --straggler MULT[:FRAC[:JITTER_S]]]
               --distributed --csv FILE]
   compare    --problem P --lr F --workers N --iters N [--minibatch N --seed N]
   bandwidth  [--dim N --workers N --compute SECS]
-  artifacts  [--dir DIR]";
+  artifacts  [--dir DIR]
+  (fleet workers: see the dore-worker binary — dore-worker --connect HOST:PORT
+   --slot I --workers N + the master's training flags)";
 
 fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     let (prob, mut spec): (Arc<dyn Problem>, TrainSpec) = if let Some(path) = f.get("config") {
         let job = JobConfig::from_file(path)?;
         let prob = problem_from_config(&job.problem, job.n_workers)?;
-        let spec = TrainSpec {
+        let mut spec = TrainSpec {
             algo: job.algorithm_kind()?,
             hp: job.hyper.to_hyperparams()?,
             iters: job.iters,
@@ -185,64 +131,25 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
             wire_codec: job.wire_codec.parse()?,
             ..Default::default()
         };
+        // the cross-cutting flag overrides (participation, stale, fault,
+        // reduce threads, pipeline depth, wire codec) apply on top of the
+        // config file too
+        apply_spec_overrides(f, &mut spec)?;
         (prob, spec)
     } else {
-        let lr: f32 = f.num("lr", 0.05)?;
-        let compressor = f.get("compressor").unwrap_or("ternary:256").to_string();
-        let hp = HyperParams {
-            lr,
-            alpha: f.num("alpha", 0.1)?,
-            beta: f.num("beta", 1.0)?,
-            eta: f.num("eta", 1.0)?,
-            momentum: f.num("momentum", 0.0)?,
-            worker_compressor: compressor.clone(),
-            master_compressor: compressor,
-            prox: parse_prox(f.get("prox").unwrap_or("none"))?,
-            schedule: match f.get("schedule") {
-                None => None,
-                Some(s) => Some(parse_schedule(s, lr)?),
-            },
-        };
         let workers: usize = f.num("workers", 20)?;
         let seed: u64 = f.num("seed", 42)?;
         let prob = build_problem(f.get("problem").unwrap_or("linreg"), workers, seed)?;
-        let spec = TrainSpec {
-            algo: f.get("algorithm").unwrap_or("dore").parse()?,
-            hp,
-            iters: f.num("iters", 1000)?,
-            minibatch: f.get("minibatch").map(|s| s.parse()).transpose()?,
-            eval_every: f.num("eval-every", 10)?,
-            seed,
-            ..Default::default()
-        };
-        (prob, spec)
+        (prob, train_spec(f)?)
     };
-    // partial participation + stale-uplink policy apply on either path
-    // (config file or flags) and on every transport
-    if let Some(p) = f.get("participation") {
-        spec.participation = p.parse::<Participation>()?;
-    }
-    if let Some(s) = f.get("stale") {
-        spec.stale = s.parse::<StalePolicy>()?;
-    }
-    // deterministic failure injection: a seeded crash/rejoin schedule —
-    // a pure function of (seed, round, slot), identical on every transport
-    if let Some(s) = f.get("fault") {
-        spec.fault = s.parse::<FaultPlan>()?;
-    }
-    // master-side sharded reduction: thread count only — results are
-    // bit-identical for every value (0 = all available cores)
-    spec.reduce_threads = f.num("reduce-threads", 1)?;
-    // pipelined rounds: depth 1 (default) is the classic synchronous
-    // schedule; D ≥ 2 overlaps round t+1's uplink with round t's master
-    // pass at the price of a (D−1)-round-stale gradient — deterministic
-    // and transport-independent either way
-    spec.pipeline_depth = f.num("pipeline-depth", 1)?;
-    // wire codec: what the frames on the wire look like — entropy coding
-    // shrinks them (never grows, by the whole-frame escape) without
-    // touching the trajectory; only the bit accounting moves
-    if let Some(w) = f.get("wire-codec") {
-        spec.wire_codec = w.parse()?;
+    // replay a recorded mask log (e.g. from --mask-log on a fastest:k
+    // run): participation becomes the literal recorded schedule, which
+    // reproduces the recording run bit-identically on any transport
+    if let Some(path) = f.get("replay-masks") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("--replay-masks {path}: {e}"))?;
+        spec.participation =
+            Participation::Recorded(Arc::new(MaskSchedule::parse_log(&text)?));
     }
     let n = prob.n_workers();
     // --transport inproc (default) | threads | tcp | simnet — all produce
@@ -257,7 +164,18 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
         f.get("straggler").is_none() || transport == "simnet",
         "--straggler models simulated network time and requires --transport simnet"
     );
+    anyhow::ensure!(
+        f.get("bind").is_none() || transport == "tcp",
+        "--bind serves an external socket fleet and requires --transport tcp"
+    );
     let mut session = Session::shared(prob).spec(spec);
+    // record the realized per-round participation masks (the replay log
+    // for --replay-masks; essential for reproducing fastest:k runs, whose
+    // masks are arrival data, not a function of the seed)
+    if let Some(path) = f.get("mask-log") {
+        session = session
+            .observer(MaskLog::create(path).map_err(|e| anyhow::anyhow!("--mask-log {path}: {e}"))?);
+    }
     // checkpoint cadence (inline transports) + resume (any transport);
     // see the README fault-tolerance section for the semantics
     if let Some(k) = f.get("checkpoint-every") {
@@ -270,7 +188,19 @@ fn cmd_train(f: &Flags) -> anyhow::Result<()> {
     let metrics = match transport {
         "inproc" => session.run()?,
         "threads" => session.transport(Threaded::new()).run()?,
-        "tcp" => session.transport(TcpTransport::new()).run()?,
+        "tcp" => match f.get("bind") {
+            // external fleet: bind the given address and wait for n
+            // dore-worker processes to register (no local worker threads)
+            Some(addr) => {
+                let t = TcpTransport::bind(addr)?;
+                println!(
+                    "master listening on {} — waiting for {n} dore-worker registrations",
+                    t.local_addr().expect("bound")
+                );
+                session.transport(t).run()?
+            }
+            None => session.transport(TcpTransport::new()).run()?,
+        },
         "simnet" => {
             let bw: f64 = f.num("bandwidth", 1e9)?;
             let straggler = match f.get("straggler") {

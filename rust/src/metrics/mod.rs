@@ -46,6 +46,16 @@ pub struct RunMetrics {
     pub workers_rejoined: u64,
     /// Checkpoints written by the session's `checkpoint_every` cadence.
     pub checkpoints_written: u64,
+    /// Realized participation mask per executed round (row per round,
+    /// `true` = the master folded that worker's fresh uplink). Under seeded
+    /// policies this replays the derived mask; under
+    /// [`crate::engine::Participation::Fastest`] it is the *observed*
+    /// arrival outcome — the record that makes speed-aware runs replayable.
+    pub realized_masks: Vec<Vec<bool>>,
+    /// FNV-1a digest of the final master model (see
+    /// [`crate::algorithms::digest_f32`]) — the cross-process equality
+    /// check fleet runs compare against single-process runs.
+    pub final_model_digest: u64,
     /// Rounds actually executed.
     pub total_rounds: usize,
     /// Wall-clock seconds of the whole run.

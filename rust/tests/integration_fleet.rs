@@ -1,0 +1,184 @@
+//! Multi-process fleet tests: a `dore` master serving real `dore-worker`
+//! subprocesses over localhost TCP.
+//!
+//! These spawn OS processes (via `CARGO_BIN_EXE_dore-worker`) and bind
+//! real sockets, so — like the in-crate TCP suite behind
+//! `DORE_TCP_TESTS` — they are opt-in: set `DORE_FLEET_TESTS=1`. CI runs
+//! them; a bare `cargo test` skips them with a note.
+//!
+//! What they pin down is the fleet contract end to end:
+//! * a 3-process run (master + 2 workers) is **digest-identical** to the
+//!   single-process InProc/Threaded run, at pipeline depth 1 and 2;
+//! * killing a worker mid-run, re-registering a replacement process with
+//!   `--rejoin`, and draining the fleet yields a clean, converged run
+//!   whose drain digests all match the master;
+//! * a worker launched with different training flags is rejected at
+//!   registration with an error naming both sides' fingerprints.
+
+#![deny(deprecated)]
+
+use dore::cli::{build_problem, train_spec, Flags};
+use dore::coordinator::tcp::TcpTransport;
+use dore::engine::{Session, Threaded};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+fn enabled(test: &str) -> bool {
+    if std::env::var("DORE_FLEET_TESTS").ok().as_deref() == Some("1") {
+        true
+    } else {
+        eprintln!("skipping {test}: set DORE_FLEET_TESTS=1 to run multi-process fleet tests");
+        false
+    }
+}
+
+/// The training flags shared verbatim by the master session and every
+/// worker process — the registration handshake enforces that they agree.
+fn base_flags() -> Vec<String> {
+    ["--problem", "linreg", "--algorithm", "dore", "--lr", "0.05", "--iters", "12",
+     "--eval-every", "4", "--seed", "42"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+fn spawn_worker(addr: &str, slot: usize, train: &[String], extra: &[&str]) -> Child {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_dore-worker"));
+    c.arg("--connect")
+        .arg(addr)
+        .arg("--slot")
+        .arg(slot.to_string())
+        .arg("--workers")
+        .arg("2")
+        .args(train)
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped());
+    c.spawn().expect("spawning dore-worker (built by the test harness)")
+}
+
+fn assert_clean_exit(mut child: Child, who: &str) {
+    let out = child.wait_with_output().expect("waiting on dore-worker");
+    assert!(
+        out.status.success(),
+        "{who} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+/// Master + 2 `dore-worker` processes on localhost produce the same final
+/// model digest and eval-loss series as the single-process transports —
+/// at depth 1 (synchronous) and depth 2 (pipelined).
+#[test]
+fn fleet_processes_match_single_process_at_depth_1_and_2() {
+    if !enabled("fleet_processes_match_single_process_at_depth_1_and_2") {
+        return;
+    }
+    for depth in [1usize, 2] {
+        let mut fl = base_flags();
+        fl.extend(["--pipeline-depth".to_string(), depth.to_string()]);
+        let spec = train_spec(&Flags::parse(&fl).unwrap()).unwrap();
+        let problem = build_problem("linreg", 2, 42).unwrap();
+
+        let inproc = Session::shared(problem.clone()).spec(spec.clone()).run().unwrap();
+        let threaded = Session::shared(problem.clone())
+            .spec(spec.clone())
+            .transport(Threaded::new())
+            .run()
+            .unwrap();
+        assert_eq!(inproc.final_model_digest, threaded.final_model_digest, "depth {depth}");
+
+        let t = TcpTransport::bind("127.0.0.1:0")
+            .unwrap()
+            .registration_timeout(Duration::from_secs(60));
+        let addr = t.local_addr().expect("bound").to_string();
+        let (p, s) = (problem.clone(), spec.clone());
+        let master = std::thread::spawn(move || Session::shared(p).spec(s).transport(t).run());
+        let kids: Vec<Child> = (0..2).map(|slot| spawn_worker(&addr, slot, &fl, &[])).collect();
+        for (slot, k) in kids.into_iter().enumerate() {
+            assert_clean_exit(k, &format!("worker {slot} (depth {depth})"));
+        }
+        let fleet = master.join().expect("master thread").unwrap();
+        assert_eq!(
+            fleet.final_model_digest, inproc.final_model_digest,
+            "depth {depth}: the 3-process run must be bit-identical to single-process"
+        );
+        assert_eq!(fleet.loss, inproc.loss, "depth {depth}");
+        assert_eq!(fleet.total_rounds, 12, "depth {depth}");
+    }
+}
+
+/// Chaos path: worker 1 exits just before round 5 (`--crash-at`), the
+/// master stalls on the lost slot, a fresh `--rejoin` process registers
+/// as its replacement and the run drains cleanly — every surviving
+/// worker's drained digest matching the master's is enforced inside
+/// `finish()`, so a plain `Ok` here is the strong assertion.
+#[test]
+fn fleet_kill_one_worker_rejoin_drains_clean() {
+    if !enabled("fleet_kill_one_worker_rejoin_drains_clean") {
+        return;
+    }
+    let fl = base_flags();
+    let spec = train_spec(&Flags::parse(&fl).unwrap()).unwrap();
+    let problem = build_problem("linreg", 2, 42).unwrap();
+    let t = TcpTransport::bind("127.0.0.1:0")
+        .unwrap()
+        .registration_timeout(Duration::from_secs(60))
+        .reconnect_timeout(Duration::from_secs(60));
+    let addr = t.local_addr().expect("bound").to_string();
+    let master = std::thread::spawn(move || {
+        Session::shared(problem).spec(spec).transport(t).run()
+    });
+
+    let survivor = spawn_worker(&addr, 0, &fl, &[]);
+    let crasher = spawn_worker(&addr, 1, &fl, &["--crash-at", "5"]);
+    // the crash knob exits the process cleanly before computing round 5
+    assert_clean_exit(crasher, "crashing worker 1");
+    // the master is now stalled on slot 1; a replacement process rejoins,
+    // receives the current model + resume round, and finishes the run
+    let replacement = spawn_worker(&addr, 1, &fl, &["--rejoin"]);
+    assert_clean_exit(survivor, "surviving worker 0");
+    assert_clean_exit(replacement, "replacement worker 1");
+
+    let fleet = master.join().expect("master thread").unwrap();
+    assert_eq!(fleet.total_rounds, 12);
+    assert_eq!(fleet.workers_lost, 1, "the crash must surface as a transport fault");
+    assert_eq!(fleet.workers_rejoined, 1, "the replacement must surface as a rejoin");
+    let (first, last) = (fleet.loss[0], *fleet.loss.last().unwrap());
+    assert!(last < first, "run did not converge through the crash: {first} → {last}");
+}
+
+/// A worker launched with different training flags (here a different
+/// `--iters`) announces a different spec fingerprint: the master rejects
+/// the registration naming both sides, and the worker process exits
+/// nonzero carrying the rejection text.
+#[test]
+fn fleet_registration_mismatch_rejected_naming_both_sides() {
+    if !enabled("fleet_registration_mismatch_rejected_naming_both_sides") {
+        return;
+    }
+    let fl = base_flags();
+    let spec = train_spec(&Flags::parse(&fl).unwrap()).unwrap();
+    let problem = build_problem("linreg", 2, 42).unwrap();
+    let t = TcpTransport::bind("127.0.0.1:0")
+        .unwrap()
+        .registration_timeout(Duration::from_secs(60));
+    let addr = t.local_addr().expect("bound").to_string();
+    let master = std::thread::spawn(move || {
+        Session::shared(problem).spec(spec).transport(t).run()
+    });
+
+    let mut wrong = fl.clone();
+    let iters_at = wrong.iter().position(|a| a == "--iters").unwrap() + 1;
+    wrong[iters_at] = "99".to_string();
+    let rejected = spawn_worker(&addr, 0, &wrong, &[]);
+    let out = rejected.wait_with_output().expect("waiting on dore-worker");
+    assert!(!out.status.success(), "a mismatched worker must exit nonzero");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("registration mismatch"), "worker stderr: {stderr}");
+
+    let err = master.join().expect("master thread").unwrap_err().to_string();
+    assert!(err.contains("registration mismatch"), "{err}");
+    assert!(err.contains("fingerprint"), "{err}");
+    assert!(err.contains("launch every dore-worker"), "{err}");
+}

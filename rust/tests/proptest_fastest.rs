@@ -1,0 +1,240 @@
+//! Speed-aware participation properties: `fastest:k` (fold the first `k`
+//! uplink arrivals) and `Recorded` mask replay.
+//!
+//! The determinism story under test: a fastest run's realized masks are
+//! *data* (arrival order), not a function of the seed — so the engine
+//! records them (observer stream, `--mask-log`, checkpoint aux) and
+//! replaying them through [`Participation::Recorded`] must reproduce the
+//! run **bit-identically on any transport**. On [`SimNet`] the arrival
+//! order itself is deterministic (the straggler readiness model), so
+//! whole fastest runs replay bit-for-bit too — which is what lets these
+//! tests run ungated, without sockets.
+
+#![deny(deprecated)]
+
+use dore::algorithms::AlgorithmKind;
+use dore::comm::StragglerSpec;
+use dore::data::synth::linreg_problem;
+use dore::engine::{
+    FaultPlan, MaskSchedule, Participation, Session, SimNet, StalePolicy, TrainSpec, Transport,
+};
+use std::sync::Arc;
+
+fn sim() -> SimNet {
+    // a heterogeneous fleet: half the workers 3× slower, with seeded
+    // jitter — so "fastest k" is a nontrivial, deterministic subset
+    SimNet::with_bandwidth(1e9).straggler("3.0:0.5:0.01".parse::<StragglerSpec>().unwrap())
+}
+
+fn fastest_spec(k: usize, iters: usize) -> TrainSpec {
+    TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters,
+        eval_every: 2,
+        participation: Participation::Fastest { k },
+        ..Default::default()
+    }
+}
+
+/// Recorded replay of a derived policy is the identity: replaying the
+/// realized masks a k-of-n run emitted reproduces that run bit-for-bit,
+/// and the replay itself is deterministic.
+#[test]
+fn recorded_replay_of_kofn_is_bit_identical() {
+    let p = linreg_problem(80, 16, 4, 0.1, 11);
+    let spec = TrainSpec {
+        algo: AlgorithmKind::Dore,
+        iters: 20,
+        eval_every: 4,
+        participation: Participation::KOfN { k: 2 },
+        ..Default::default()
+    };
+    let reference = Session::new(&p).spec(spec.clone()).run().unwrap();
+    assert_eq!(reference.realized_masks.len(), 20, "every round emits its realized mask");
+    let sched = Arc::new(MaskSchedule { masks: reference.realized_masks.clone() });
+    let replay_spec = TrainSpec {
+        participation: Participation::Recorded(sched.clone()),
+        ..spec
+    };
+    let a = Session::new(&p).spec(replay_spec.clone()).run().unwrap();
+    let b = Session::new(&p).spec(replay_spec).run().unwrap();
+    assert_eq!(reference.loss, a.loss, "recorded replay diverged from the recording run");
+    assert_eq!(reference.final_model_digest, a.final_model_digest);
+    assert_eq!(a.loss, b.loss, "recorded replay is not deterministic");
+    assert_eq!(a.final_model_digest, b.final_model_digest);
+    assert_eq!(a.realized_masks, sched.masks, "replay must realize exactly the schedule");
+}
+
+/// The mask log format round-trips arbitrary schedules (the `--mask-log`
+/// → `--replay-masks` pipe), with digests pinning the content.
+#[test]
+fn mask_log_roundtrips_many_schedules() {
+    // deterministic pseudo-random schedules without any RNG machinery
+    let mut state = 0x9e3779b97f4a7c15u64;
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        state
+    };
+    for n in [1usize, 3, 7, 32] {
+        for rounds in [1usize, 5, 40] {
+            let masks: Vec<Vec<bool>> = (0..rounds)
+                .map(|_| {
+                    let mut row: Vec<bool> = (0..n).map(|_| next() & 1 == 1).collect();
+                    if !row.iter().any(|&b| b) {
+                        row[0] = true; // validate() rejects empty rounds
+                    }
+                    row
+                })
+                .collect();
+            let sched = MaskSchedule { masks };
+            let text = sched.format_log();
+            let back = MaskSchedule::parse_log(&text).unwrap();
+            assert_eq!(back, sched, "n={n} rounds={rounds}");
+            assert_eq!(back.digest(), sched.digest());
+            assert_eq!(back.rounds(), rounds);
+            assert_eq!(back.width(), n);
+        }
+    }
+}
+
+/// `fastest:k` is rejected up front on transports that cannot rank
+/// arrivals, and under the spec combinations it cannot honor.
+#[test]
+fn fastest_preconditions_are_enforced_up_front() {
+    let p = linreg_problem(40, 8, 3, 0.1, 7);
+    // inproc cannot rank arrivals
+    let err = Session::new(&p).spec(fastest_spec(2, 4)).run().unwrap_err();
+    assert!(err.to_string().contains("tcp"), "{err}");
+    assert!(err.to_string().contains("simnet"), "{err}");
+    // pipelining would leave speculative folds unrevertable
+    let err = Session::new(&p)
+        .spec(TrainSpec { pipeline_depth: 2, ..fastest_spec(2, 4) })
+        .transport(sim())
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("pipeline_depth"), "{err}");
+    // reuse-last has no stale frame for a dropped speculative uplink
+    let err = Session::new(&p)
+        .spec(TrainSpec { stale: StalePolicy::ReuseLast, ..fastest_spec(2, 4) })
+        .transport(sim())
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("StalePolicy::Skip"), "{err}");
+    // fault injection composes through recorded replay, not live fastest
+    let err = Session::new(&p)
+        .spec(TrainSpec {
+            fault: "rand:0.2:3".parse::<FaultPlan>().unwrap(),
+            ..fastest_spec(2, 4)
+        })
+        .transport(sim())
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("replay"), "{err}");
+    // a short schedule cannot cover the horizon
+    let err = Session::new(&p)
+        .spec(TrainSpec {
+            iters: 10,
+            participation: Participation::Recorded(Arc::new(MaskSchedule {
+                masks: vec![vec![true, true, true]; 4],
+            })),
+            ..Default::default()
+        })
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("4 rounds"), "{err}");
+}
+
+/// `fastest:k` on the simulated network: every realized mask has exactly
+/// `k` participants, the straggler slow-slice loses, repeat runs are
+/// bit-identical, and replaying the recorded masks on the zero-copy
+/// in-process transport reproduces the run digest-for-digest.
+#[test]
+fn simnet_fastest_records_k_masks_and_replays_everywhere() {
+    let p = linreg_problem(80, 16, 4, 0.1, 11);
+    let spec = fastest_spec(2, 16);
+    let a = Session::new(&p).spec(spec.clone()).transport(sim()).run().unwrap();
+    let b = Session::new(&p).spec(spec.clone()).transport(sim()).run().unwrap();
+    assert_eq!(a.loss, b.loss, "simnet fastest must be deterministic");
+    assert_eq!(a.realized_masks, b.realized_masks);
+    assert_eq!(a.realized_masks.len(), 16);
+    for (r, m) in a.realized_masks.iter().enumerate() {
+        assert_eq!(m.iter().filter(|&&x| x).count(), 2, "round {r}: {m:?}");
+    }
+    // workers 0..1 are the 3×-slower slice: with k = n/2 and mild jitter
+    // they should essentially never outrun the fast slice
+    let slow_wins: usize = a
+        .realized_masks
+        .iter()
+        .map(|m| m[..2].iter().filter(|&&x| x).count())
+        .sum();
+    assert!(slow_wins <= 2, "slow slice won {slow_wins} of 32 slots");
+    // the recorded masks replay bit-identically on inproc
+    let sched = Arc::new(MaskSchedule { masks: a.realized_masks.clone() });
+    let replay = Session::new(&p)
+        .spec(TrainSpec { participation: Participation::Recorded(sched), ..spec })
+        .run()
+        .unwrap();
+    assert_eq!(a.loss, replay.loss, "inproc replay diverged from the fastest run");
+    assert_eq!(a.final_model_digest, replay.final_model_digest);
+}
+
+/// SimNet advertises fastest support; the inline reference transports do
+/// not (their uplinks have no arrival order to rank).
+#[test]
+fn transports_advertise_fastest_support_honestly() {
+    assert!(sim().supports_fastest());
+    assert!(!dore::engine::InProc::new().supports_fastest());
+    assert!(!dore::engine::Threaded::new().supports_fastest());
+}
+
+/// Kill/resume a fastest run: the checkpoint carries the realized-mask
+/// history, and resuming with the recorded full log replays the tail
+/// bit-identically — masks become data the resume validates and honors.
+#[test]
+fn fastest_checkpoint_resume_replays_the_tail_bit_for_bit() {
+    let dir = std::env::temp_dir().join(format!("dore-fastest-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ck = dir.join("state.ckpt");
+    let p = linreg_problem(80, 12, 4, 0.1, 13);
+    let spec = fastest_spec(2, 20);
+    // the uninterrupted fastest reference (deterministic on simnet)
+    let full = Session::new(&p).spec(spec.clone()).transport(sim()).run().unwrap();
+    // "killed at round 10": run half with a checkpoint at the end
+    let half = Session::new(&p)
+        .spec(TrainSpec { iters: 10, ..spec.clone() })
+        .transport(sim())
+        .checkpoint_every(10, &ck)
+        .run()
+        .unwrap();
+    assert_eq!(half.checkpoints_written, 1);
+    assert_eq!(half.realized_masks[..], full.realized_masks[..10]);
+    // resume by replaying the recording run's full mask log; the session
+    // validates the log's prefix against the checkpoint's mask history
+    let sched = Arc::new(MaskSchedule { masks: full.realized_masks.clone() });
+    let resumed = Session::new(&p)
+        .spec(TrainSpec { participation: Participation::Recorded(sched), ..spec.clone() })
+        .resume_from(&ck)
+        .run()
+        .unwrap();
+    assert_eq!(resumed.total_rounds, 10);
+    assert_eq!(resumed.final_model_digest, full.final_model_digest);
+    assert_eq!(resumed.realized_masks[..], full.realized_masks[10..]);
+    // a log from a *different* run is rejected against the history
+    let mut wrong = full.realized_masks.clone();
+    wrong[3] = vec![true, true, false, false];
+    if wrong[3] == full.realized_masks[3] {
+        wrong[3] = vec![false, false, true, true];
+    }
+    let err = Session::new(&p)
+        .spec(TrainSpec {
+            participation: Participation::Recorded(Arc::new(MaskSchedule { masks: wrong })),
+            ..spec
+        })
+        .resume_from(&ck)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("different run"), "{err}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
