@@ -17,9 +17,11 @@ artifacts:
 test-rust:
 	cargo test -q --lib --bins --examples \
 	  --test integration_convergence --test integration_engine \
+	  --test integration_fleet \
 	  --test integration_server --test integration_tcp \
 	  --test proptest_compression --test proptest_participation \
 	  --test proptest_pipeline --test proptest_reduce --test proptest_fault \
+	  --test proptest_fastest --test proptest_simd \
 	  --test proptest_codec_entropy --test adversarial_codec \
 	  --test golden_series
 

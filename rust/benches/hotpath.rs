@@ -1,7 +1,9 @@
 //! Hot-path microbenchmarks (§Perf instrument). No criterion in this
 //! offline environment, so this is a small hand-rolled timing harness:
 //! warmup + N timed reps, reporting median wall time and derived
-//! throughput. Used for the EXPERIMENTS.md §Perf before/after ledger.
+//! throughput. Used for the EXPERIMENTS.md §Perf before/after ledger and
+//! the committed `BENCH_hotpath.json` baseline that `cargo xtask
+//! bench-delta` gates CI against.
 //!
 //! ```
 //! cargo bench --bench hotpath                      # full run (d = 10^7)
@@ -9,20 +11,30 @@
 //! cargo bench --bench hotpath -- --json out.json   # machine-readable snapshot
 //! ```
 //!
-//! The headline section is the **sharded master reduction**: one full
-//! master pass (decode all uplinks → average → recompress downlink) at
-//! large `d`, serial vs `--reduce-threads`-style sharded — the ROADMAP
-//! scale item. The sharded pass is bit-identical to the serial one
-//! (`proptest_reduce`, `golden_series`); this bench measures what the
-//! determinism costs, which should be nothing: target ≥ 2× at d = 10⁷
-//! with 8 reduce threads.
+//! Sections (every timed number lands in the JSON `sections` map; keys
+//! ending `_ms` are medians in milliseconds, keys ending `_speedup` are
+//! before/after ratios):
+//!
+//! * **scalar vs vectorized kernels** — the pre-vectorization
+//!   per-coordinate quantize/decode loops are replicated here as
+//!   references, asserted bit-identical to the fixed-width-chunk kernels,
+//!   and timed side by side so the SIMD win is a recorded number.
+//! * **fixed vs entropy wire codec** — encode/decode throughput under
+//!   both codecs, tracking what the entropy coding costs per round.
+//! * **sharded master reduction** — one full master pass (decode all
+//!   uplinks → average → recompress downlink) at large `d`, serial vs
+//!   sharded, plus scoped-vs-persistent pool and fused-vs-unfused q-sweep
+//!   splits of the same pass. All variants are bit-identical
+//!   (`proptest_reduce`, `proptest_simd`, `golden_series`); this bench
+//!   measures what the determinism costs.
 
 #![deny(deprecated)]
 
 use dore::algorithms::dore::DoreMaster;
 use dore::algorithms::psgd::PsgdMaster;
 use dore::algorithms::{AlgorithmKind, HyperParams, MasterNode};
-use dore::compression::{codec, from_spec, Compressed, Compressor, PNormQuantizer, Xoshiro256};
+use dore::compression::codec::{self, WireCodec};
+use dore::compression::{from_spec, Compressed, Compressor, PNormQuantizer, Xoshiro256};
 use dore::engine::ReducePool;
 use dore::models::linalg;
 use std::fmt::Write as _;
@@ -51,10 +63,75 @@ fn bench<F: FnMut()>(name: &str, bytes_per_iter: Option<u64>, reps: usize, mut f
     med
 }
 
+/// Pre-vectorization reference quantizer: per-coordinate trit draw with
+/// the RNG consumed inline — the loop the fixed-width kernel replaced.
+/// Same f32 expression tree (`p = |v| · (1/norm)`, fire iff `u < p`), so
+/// the payload and RNG exit state must match `PNormQuantizer::compress`
+/// bit-for-bit; the bench asserts that before timing.
+fn quantize_ternary_scalar(block_size: usize, x: &[f32], rng: &mut Xoshiro256) -> Compressed {
+    let dim = x.len();
+    let mut norms = Vec::with_capacity(dim.div_ceil(block_size));
+    let mut trits = vec![0i8; dim];
+    for (block, tchunk) in x.chunks(block_size).zip(trits.chunks_mut(block_size)) {
+        let mut norm = 0.0f32;
+        for &v in block {
+            norm = norm.max(v.abs());
+        }
+        norms.push(norm);
+        if norm == 0.0 {
+            continue; // all-zero block: trits stay 0, no entropy drawn
+        }
+        let inv = 1.0 / norm;
+        for (&v, t) in block.iter().zip(tchunk.iter_mut()) {
+            let p = v.abs() * inv;
+            if rng.next_f32() < p {
+                *t = if v < 0.0 { -1 } else { 1 };
+            }
+        }
+    }
+    Compressed::Ternary { dim, block_size, norms, trits }
+}
+
+/// Pre-vectorization reference decode-accumulate: per-coordinate
+/// `out += (s·norm)·t`, the loop `kernel::add_scaled_i8` replaced —
+/// identical expression tree, asserted bit-equal before timing.
+fn add_scaled_scalar(c: &Compressed, s: f32, out: &mut [f32]) {
+    let Compressed::Ternary { block_size, norms, trits, .. } = c else {
+        panic!("scalar reference expects a ternary payload");
+    };
+    for (b, chunk) in trits.chunks(*block_size).enumerate() {
+        let m = s * norms[b];
+        let base = b * block_size;
+        for (j, &t) in chunk.iter().enumerate() {
+            out[base + j] += m * t as f32;
+        }
+    }
+}
+
+/// Delegating wrapper that hides the fused-norm grid: the master falls
+/// back to the separate norms pass inside `compress_sharded`, isolating
+/// what the q-sweep fusion itself buys.
+struct NoFuse(PNormQuantizer);
+
+impl Compressor for NoFuse {
+    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> Compressed {
+        self.0.compress(x, rng)
+    }
+    fn compress_sharded(&self, x: &[f32], rng: &mut Xoshiro256, pool: &ReducePool) -> Compressed {
+        self.0.compress_sharded(x, rng, pool)
+    }
+    // fused_norm_block stays the default None: the point of the wrapper
+    fn variance_constant(&self, dim: usize) -> f64 {
+        self.0.variance_constant(dim)
+    }
+    fn name(&self) -> &'static str {
+        "pnorm-inf-nofuse"
+    }
+}
+
 /// One full master pass (decode every uplink → average → downlink) over
 /// `n` uplinks of dimension `d`, timed with the given reduce pool. A
-/// fresh master per call keeps serial and sharded runs on identical state
-/// evolution.
+/// fresh master per call keeps all variants on identical state evolution.
 fn master_pass(
     label: &str,
     d: usize,
@@ -65,17 +142,24 @@ fn master_pass(
 ) -> f64 {
     master.set_reduce_pool(pool);
     let mut k = 0u64;
-    bench(
-        &format!("{label} master pass n={} ({} threads)", ups.len(), pool.threads()),
-        Some(ups.len() as u64 * 4 * d as u64),
-        reps,
-        || {
-            let mut mr = Xoshiro256::for_site(1, 0, k);
-            let down = master.round(k as usize, ups, &mut mr);
-            k += 1;
-            std::hint::black_box(down.dim());
-        },
-    )
+    bench(label, Some(ups.len() as u64 * 4 * d as u64), reps, || {
+        let mut mr = Xoshiro256::for_site(1, 0, k);
+        let down = master.round(k as usize, ups, &mut mr);
+        k += 1;
+        std::hint::black_box(down.dim());
+    })
+}
+
+/// First-round downlink under a given master + pool: the equality probe
+/// the bench runs before timing variants against each other.
+fn first_downlink(
+    mut master: Box<dyn MasterNode>,
+    ups: &[Option<Compressed>],
+    pool: ReducePool,
+) -> Compressed {
+    master.set_reduce_pool(pool);
+    let mut mr = Xoshiro256::for_site(1, 0, 0);
+    master.round(0, ups, &mut mr)
 }
 
 fn main() {
@@ -87,6 +171,9 @@ fn main() {
         .and_then(|i| args.get(i + 1))
         .cloned();
 
+    // insertion-ordered (name, value) pairs for the JSON snapshot
+    let mut sections: Vec<(&'static str, f64)> = Vec::new();
+
     let quick_tag = if quick { ", --quick" } else { "" };
     println!("=== hot-path microbenches (median of 9{quick_tag}) ===\n");
     let d = 1 << 20; // 1M coords = 4 MB
@@ -94,51 +181,107 @@ fn main() {
     let x: Vec<f32> = (0..d).map(|_| rng.next_gaussian()).collect();
     let bytes = 4 * d as u64;
 
-    // -- L3 kernel 1: ternary quantization (the per-round compressor) -----
+    // -- L3 kernel 1: ternary quantization, scalar vs vectorized ----------
+    // Bit-identity first (payload + RNG exit state), then the clock.
     let q = PNormQuantizer::paper_default();
     let mut sink = 0u64;
-    bench("quantize ternary b=256 (1M f32)", Some(bytes), 9, || {
+    {
+        let mut r_s = Xoshiro256::seed_from_u64(7);
+        let mut r_v = Xoshiro256::seed_from_u64(7);
+        let want = quantize_ternary_scalar(q.block_size, &x, &mut r_s);
+        let got = q.compress(&x, &mut r_v);
+        assert_eq!(got, want, "vectorized quantize diverged from the scalar reference");
+        assert_eq!(r_s.next_u64(), r_v.next_u64(), "quantize RNG exit state drifted");
+    }
+    let t = bench("quantize ternary scalar ref (1M f32)", Some(bytes), 9, || {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        let c = quantize_ternary_scalar(q.block_size, &x, &mut r);
+        sink ^= c.dim() as u64;
+    });
+    sections.push(("quantize_scalar_ms", t * 1e3));
+    let t_v = bench("quantize ternary vectorized (1M f32)", Some(bytes), 9, || {
         let mut r = Xoshiro256::seed_from_u64(7);
         let c = q.compress(&x, &mut r);
         sink ^= c.dim() as u64;
     });
+    sections.push(("quantize_vector_ms", t_v * 1e3));
+    sections.push(("quantize_simd_speedup", t / t_v));
 
-    // -- L3 kernel 2: wire encode / decode ---------------------------------
+    // -- L3 kernel 2: wire encode / decode, fixed vs entropy codec --------
     let mut r = Xoshiro256::seed_from_u64(7);
     let c = q.compress(&x, &mut r);
-    let enc = codec::encode(&c);
-    let bits_per_coord = enc.len() as f64 * 8.0 / d as f64;
-    println!("  (payload {} bytes = {bits_per_coord:.2} bits/coord)", enc.len());
-    bench("codec encode ternary (1M trits)", Some(bytes), 9, || {
-        let e = codec::encode(&c);
+    let enc_fixed = codec::encode_with(&c, WireCodec::Fixed);
+    let enc_ent = codec::encode_with(&c, WireCodec::Entropy);
+    assert_eq!(codec::decode(&enc_fixed).unwrap(), c);
+    assert_eq!(codec::decode(&enc_ent).unwrap(), c);
+    println!(
+        "  (payload fixed {} bytes = {:.2} bits/coord, entropy {} bytes = {:.2} bits/coord)",
+        enc_fixed.len(),
+        enc_fixed.len() as f64 * 8.0 / d as f64,
+        enc_ent.len(),
+        enc_ent.len() as f64 * 8.0 / d as f64,
+    );
+    let t = bench("codec encode fixed (1M trits)", Some(bytes), 9, || {
+        let e = codec::encode_with(&c, WireCodec::Fixed);
         sink ^= e.len() as u64;
     });
-    bench("codec decode ternary (1M trits)", Some(bytes), 9, || {
-        let b = codec::decode(&enc).unwrap();
+    sections.push(("codec_fixed_encode_ms", t * 1e3));
+    let t = bench("codec encode entropy (1M trits)", Some(bytes), 9, || {
+        let e = codec::encode_with(&c, WireCodec::Entropy);
+        sink ^= e.len() as u64;
+    });
+    sections.push(("codec_entropy_encode_ms", t * 1e3));
+    let t = bench("codec decode fixed (1M trits)", Some(bytes), 9, || {
+        let b = codec::decode(&enc_fixed).unwrap();
         sink ^= b.dim() as u64;
     });
+    sections.push(("codec_fixed_decode_ms", t * 1e3));
+    let t = bench("codec decode entropy (1M trits)", Some(bytes), 9, || {
+        let b = codec::decode(&enc_ent).unwrap();
+        sink ^= b.dim() as u64;
+    });
+    sections.push(("codec_entropy_decode_ms", t * 1e3));
 
-    // -- L3 kernel 3: decode-and-apply (h += α Δ̂ / x̂ += β q̂) -------------
+    // -- L3 kernel 3: decode-and-apply, scalar vs vectorized --------------
     let mut acc = vec![0.0f32; d];
-    bench("add_scaled_into ternary -> dense (1M)", Some(bytes), 9, || {
+    {
+        let mut want = acc.clone();
+        let mut got = acc.clone();
+        add_scaled_scalar(&c, 0.1, &mut want);
+        c.add_scaled_into(0.1, &mut got);
+        assert!(
+            want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "vectorized decode diverged from the scalar reference"
+        );
+    }
+    let t = bench("add_scaled scalar ref -> dense (1M)", Some(bytes), 9, || {
+        add_scaled_scalar(&c, 0.1, &mut acc);
+    });
+    sections.push(("decode_scalar_ms", t * 1e3));
+    let t_v = bench("add_scaled_into vectorized -> dense (1M)", Some(bytes), 9, || {
         c.add_scaled_into(0.1, &mut acc);
     });
+    sections.push(("decode_vector_ms", t_v * 1e3));
+    sections.push(("decode_simd_speedup", t / t_v));
 
     // -- L3 kernel 4: dense axpy (the uncompressed baseline op) -----------
     let y: Vec<f32> = (0..d).map(|_| 0.5).collect();
-    bench("dense axpy (1M f32)", Some(bytes), 9, || {
+    let t = bench("dense axpy (1M f32)", Some(bytes), 9, || {
         linalg::axpy(0.1, &y, &mut acc);
     });
+    sections.push(("dense_axpy_ms", t * 1e3));
     drop(acc);
     drop(y);
 
     // -- sharded master reduction (the ROADMAP scale item) ----------------
-    // One full master pass over n ternary uplinks at large d: the pass the
-    // `hotpath` ledger showed dominating the round. Serial vs 8 reduce
-    // threads, bit-identical results (proptest_reduce), target >= 2x.
+    // One full master pass over n ternary uplinks at large d, split four
+    // ways: serial, sharded (persistent pool + fused q-sweep — the
+    // production path), scoped pool, and unfused q-sweep. All four are
+    // bit-identical (asserted below on the first-round downlink); the
+    // clock shows what each layer buys.
     let (d_r, n_r, reps_r) = if quick { (1 << 18, 4, 3) } else { (10_000_000, 8, 5) };
     let threads = 8usize;
-    println!("\n--- sharded master reduction: d={d_r}, {n_r} workers ---");
+    println!("\n--- sharded master reduction: d={d_r}, {n_r} workers, {threads} threads ---");
     let grad: Vec<f32> = {
         let mut g_rng = Xoshiro256::seed_from_u64(3);
         (0..d_r).map(|_| 0.01 * g_rng.next_gaussian()).collect()
@@ -153,31 +296,126 @@ fn main() {
         let mq = from_spec(&hp_r.master_compressor).expect("master compressor");
         Box::new(DoreMaster::new(&x0_r, n_r, mq, hp_r.clone()))
     };
+    let mk_dore_nofuse = || -> Box<dyn MasterNode> {
+        let mq = std::sync::Arc::new(NoFuse(PNormQuantizer::paper_default()));
+        Box::new(DoreMaster::new(&x0_r, n_r, mq, hp_r.clone()))
+    };
     let mk_avg = || -> Box<dyn MasterNode> { Box::new(PsgdMaster::new(&x0_r, n_r, hp_r.clone())) };
-    let dore_serial = master_pass("DORE", d_r, &ups, mk_dore(), ReducePool::serial(), reps_r);
-    let dore_sharded = master_pass("DORE", d_r, &ups, mk_dore(), ReducePool::new(threads), reps_r);
-    let avg_serial = master_pass("avg", d_r, &ups, mk_avg(), ReducePool::serial(), reps_r);
-    let avg_sharded = master_pass("avg", d_r, &ups, mk_avg(), ReducePool::new(threads), reps_r);
+
+    // every variant must land on the identical first downlink
+    let want_down = first_downlink(mk_dore(), &ups, ReducePool::serial());
+    for (label, pool) in [
+        ("persistent", ReducePool::new(threads)),
+        ("scoped", ReducePool::scoped(threads)),
+    ] {
+        assert_eq!(
+            first_downlink(mk_dore(), &ups, pool),
+            want_down,
+            "{label} pool downlink diverged from serial"
+        );
+    }
+    assert_eq!(
+        first_downlink(mk_dore_nofuse(), &ups, ReducePool::new(threads)),
+        want_down,
+        "unfused q-sweep downlink diverged from fused"
+    );
+
+    let dore_serial =
+        master_pass("DORE serial", d_r, &ups, mk_dore(), ReducePool::serial(), reps_r);
+    let dore_sharded = master_pass(
+        "DORE persistent+fused",
+        d_r,
+        &ups,
+        mk_dore(),
+        ReducePool::new(threads),
+        reps_r,
+    );
+    let dore_scoped =
+        master_pass("DORE scoped pool", d_r, &ups, mk_dore(), ReducePool::scoped(threads), reps_r);
+    let dore_unfused = master_pass(
+        "DORE unfused q-sweep",
+        d_r,
+        &ups,
+        mk_dore_nofuse(),
+        ReducePool::new(threads),
+        reps_r,
+    );
+    let avg_serial = master_pass("avg serial", d_r, &ups, mk_avg(), ReducePool::serial(), reps_r);
+    let avg_sharded =
+        master_pass("avg sharded", d_r, &ups, mk_avg(), ReducePool::new(threads), reps_r);
     println!(
-        "  speedup: DORE {:.2}x, avg {:.2}x ({} reduce threads)",
+        "  speedup: DORE {:.2}x, avg {:.2}x; pool persist {:.2}x, q-sweep fuse {:.2}x",
         dore_serial / dore_sharded,
         avg_serial / avg_sharded,
-        threads
+        dore_scoped / dore_sharded,
+        dore_unfused / dore_sharded,
     );
+    sections.push(("dore_serial_ms", dore_serial * 1e3));
+    sections.push(("dore_sharded_ms", dore_sharded * 1e3));
+    sections.push(("dore_speedup", dore_serial / dore_sharded));
+    sections.push(("dore_scoped_ms", dore_scoped * 1e3));
+    sections.push(("pool_persist_speedup", dore_scoped / dore_sharded));
+    sections.push(("dore_unfused_ms", dore_unfused * 1e3));
+    sections.push(("qsweep_fuse_speedup", dore_unfused / dore_sharded));
+    sections.push(("avg_serial_ms", avg_serial * 1e3));
+    sections.push(("avg_sharded_ms", avg_sharded * 1e3));
+    sections.push(("avg_speedup", avg_serial / avg_sharded));
     drop(ups);
     drop(x0_r);
+
+    // -- small-d pool overhead: persistent vs scoped ----------------------
+    // At small d the pass is dispatch-bound, so this isolates what parking
+    // the workers saves over spawn/join per sweep.
+    let d_s = 1 << 16;
+    println!("\n--- pool dispatch overhead: d={d_s}, 4 workers, {threads} threads ---");
+    let grad_s: Vec<f32> = {
+        let mut g_rng = Xoshiro256::seed_from_u64(5);
+        (0..d_s).map(|_| 0.01 * g_rng.next_gaussian()).collect()
+    };
+    let ups_s: Vec<Option<Compressed>> = (0..4)
+        .map(|i| Some(q.compress(&grad_s, &mut Xoshiro256::for_site(2, 1 + i as u64, 0))))
+        .collect();
+    drop(grad_s);
+    let x0_s = vec![0.0f32; d_s];
+    let mk_dore_s = || -> Box<dyn MasterNode> {
+        let mq = from_spec(&hp_r.master_compressor).expect("master compressor");
+        Box::new(DoreMaster::new(&x0_s, 4, mq, hp_r.clone()))
+    };
+    let t_sc = master_pass(
+        "DORE small-d scoped",
+        d_s,
+        &ups_s,
+        mk_dore_s(),
+        ReducePool::scoped_with_shard(threads, d_s / threads),
+        9,
+    );
+    let t_pe = master_pass(
+        "DORE small-d persistent",
+        d_s,
+        &ups_s,
+        mk_dore_s(),
+        ReducePool::with_shard(threads, d_s / threads),
+        9,
+    );
+    sections.push(("smalld_scoped_ms", t_sc * 1e3));
+    sections.push(("smalld_persistent_ms", t_pe * 1e3));
+    sections.push(("pool_smalld_speedup", t_sc / t_pe));
+    drop(ups_s);
+    drop(x0_s);
 
     // -- full worker+master round at ResNet18 scale -----------------------
     let d_big = if quick { 1 << 18 } else { 11_173_962usize };
     println!();
-    for algo in [AlgorithmKind::Dore, AlgorithmKind::Sgd] {
+    for (algo, key) in
+        [(AlgorithmKind::Dore, "dore_round_ms"), (AlgorithmKind::Sgd, "sgd_round_ms")]
+    {
         let x0 = vec![0.0f32; d_big];
         let hp = HyperParams::paper_defaults();
         let (mut ws, mut master) = dore::algorithms::build(algo, 1, &x0, &hp).unwrap();
         let mut g_rng = Xoshiro256::seed_from_u64(3);
         let grad: Vec<f32> = (0..d_big).map(|_| 0.01 * g_rng.next_gaussian()).collect();
         let mut k = 0u64;
-        bench(
+        let t = bench(
             &format!("{} full worker+master round (d={d_big})", algo.name()),
             Some(4 * d_big as u64),
             if quick { 3 } else { 5 },
@@ -190,24 +428,23 @@ fn main() {
                 k += 1;
             },
         );
+        sections.push((key, t * 1e3));
     }
     eprintln!("(sink {sink})");
 
     if let Some(path) = json_path {
-        // hand-rolled JSON (no serde in this environment); times in ms
+        // hand-rolled JSON (no serde in this environment); the flat
+        // `sections` map is the contract `cargo xtask bench-delta` parses
         let mut out = String::from("{\n");
-        let _ = writeln!(out, "  \"bench\": \"hotpath/master_reduce\",");
+        let _ = writeln!(out, "  \"bench\": \"hotpath\",");
         let _ = writeln!(out, "  \"quick\": {quick},");
-        let _ = writeln!(out, "  \"d\": {d_r},");
-        let _ = writeln!(out, "  \"workers\": {n_r},");
-        let _ = writeln!(out, "  \"reduce_threads\": {threads},");
-        let _ = writeln!(out, "  \"dore_serial_ms\": {:.3},", dore_serial * 1e3);
-        let _ = writeln!(out, "  \"dore_sharded_ms\": {:.3},", dore_sharded * 1e3);
-        let _ = writeln!(out, "  \"dore_speedup\": {:.3},", dore_serial / dore_sharded);
-        let _ = writeln!(out, "  \"avg_serial_ms\": {:.3},", avg_serial * 1e3);
-        let _ = writeln!(out, "  \"avg_sharded_ms\": {:.3},", avg_sharded * 1e3);
-        let _ = writeln!(out, "  \"avg_speedup\": {:.3}", avg_serial / avg_sharded);
-        out.push_str("}\n");
+        let _ = writeln!(out, "  \"threads\": {threads},");
+        let _ = writeln!(out, "  \"sections\": {{");
+        for (i, (name, v)) in sections.iter().enumerate() {
+            let comma = if i + 1 < sections.len() { "," } else { "" };
+            let _ = writeln!(out, "    \"{name}\": {v:.3}{comma}");
+        }
+        out.push_str("  }\n}\n");
         std::fs::write(&path, out).expect("write json snapshot");
         println!("wrote {path}");
     }

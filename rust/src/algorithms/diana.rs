@@ -128,9 +128,13 @@ impl MasterNode for DianaMaster {
         // path for any reduce-thread count.
         let inv = 1.0 / self.n as F;
         let alpha_inv = self.hp.alpha * inv;
-        let pool = self.pool;
+        let pool = self.pool.clone();
         {
             let (ghat, h) = (&mut self.ghat, &mut self.h);
+            // NOTE: kept as two per-target passes (not the fused
+            // `add_scaled2_range_into`) — DIANA's historical grouping
+            // rounds `inv·(norm·t)` and `alpha_inv·(norm·t)` separately,
+            // and the golden trajectories pin that expression tree.
             pool.sweep2(ghat, h, |lo, gc, hc| {
                 gc.copy_from_slice(hc);
                 for m in uplinks.iter().flatten() {
@@ -142,10 +146,18 @@ impl MasterNode for DianaMaster {
             });
         }
         let gamma = self.hp.lr_at(round);
-        super::apply_momentum(self.hp.momentum, &self.ghat, &mut self.vel);
-        let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.ghat };
-        linalg::axpy(-gamma, step, &mut self.x);
-        self.hp.prox.apply(gamma, &mut self.x);
+        // x ← prox_{γR}(x − γ·step), momentum fold included, swept over
+        // the pool's dimension shards (§Perf).
+        super::dense_step_tail(
+            &pool,
+            -gamma,
+            gamma,
+            self.hp.momentum,
+            self.hp.prox,
+            &self.ghat,
+            &mut self.vel,
+            &mut self.x,
+        );
         Compressed::Dense(self.x.clone())
     }
 

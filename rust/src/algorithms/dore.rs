@@ -164,7 +164,7 @@ impl MasterNode for DoreMaster {
         debug_assert_eq!(uplinks.len(), self.n);
         let inv = 1.0 / self.n as F;
         let alpha_inv = self.hp.alpha * inv;
-        let pool = self.pool;
+        let pool = self.pool.clone();
         // ĝ = h + (1/n)Σ_{i∈S} Δ̂_i; h ← h + α·(1/n)Σ_{i∈S} Δ̂_i (lines
         // 14–15, 17) — one fused decode pass per uplink instead of two,
         // swept over the pool's dimension shards (§Perf). An absent slot
@@ -173,16 +173,16 @@ impl MasterNode for DoreMaster {
         // normalization stays 1/n — this is how DORE's gradient state
         // absorbs partial participation natively. Within a shard the
         // uplinks fold in slot order, so every coordinate sees the serial
-        // accumulation order for any reduce-thread count.
+        // accumulation order for any reduce-thread count;
+        // `add_scaled2_range_into` keeps the per-coordinate expression
+        // tree (`v` decoded once, two scaled adds) while running the
+        // fixed-width vector kernels.
         {
             let (ghat, h) = (&mut self.ghat, &mut self.h);
             pool.sweep2(ghat, h, |lo, gc, hc| {
                 gc.copy_from_slice(hc);
                 for m in uplinks.iter().flatten() {
-                    m.decode_each_range(lo, lo + gc.len(), |i, v| {
-                        gc[i - lo] += inv * v;
-                        hc[i - lo] += alpha_inv * v;
-                    });
+                    m.add_scaled2_range_into(lo, inv, gc, alpha_inv, hc);
                 }
             });
         }
@@ -201,17 +201,18 @@ impl MasterNode for DoreMaster {
         let shard = pool.shard_width();
         let d = self.qbuf.len();
         let mut qsq = vec![0.0f64; d.div_ceil(shard)];
+        // §Perf: when the downlink compressor's norm is fusable (∞-norm —
+        // order-independent max) and its block grid aligns with the shard
+        // grid, the per-block norms are computed *inside* this sweep from
+        // the freshly written q values, so `compress_with_norms` skips an
+        // entire extra read of q. The maxima are bitwise the serial
+        // `block_norm`'s, so payload + RNG stream stay identical.
+        let fused_bs = self.mq.fused_norm_block().filter(|&bs| shard % bs == 0);
+        let mut fused_norms = fused_bs.map(|bs| vec![0.0f32; d.div_ceil(bs)]);
         {
             let (qbuf, xnext) = (&mut self.qbuf, &mut self.xnext);
             let (xhat, ghat, e) = (&self.xhat, &self.ghat, &self.e);
-            let items: Vec<(usize, &mut [F], &mut [F], &mut f64)> = qbuf
-                .chunks_mut(shard)
-                .zip(xnext.chunks_mut(shard))
-                .zip(qsq.iter_mut())
-                .enumerate()
-                .map(|(c, ((qc, xc), sq))| (c * shard, qc, xc, sq))
-                .collect();
-            pool.run(items, |(lo, qc, xc, sq)| {
+            let fill_q = |lo: usize, qc: &mut [F], xc: &mut [F]| -> f64 {
                 let mut acc = 0.0f64;
                 for (j, (q, xn)) in qc.iter_mut().zip(xc.iter_mut()).enumerate() {
                     let i = lo + j;
@@ -221,26 +222,58 @@ impl MasterNode for DoreMaster {
                     *q = qv;
                     acc += (qv as f64) * (qv as f64);
                 }
-                *sq = acc;
-            });
+                acc
+            };
+            match (&mut fused_norms, fused_bs) {
+                (Some(norms), Some(bs)) => {
+                    let blocks_per_shard = shard / bs;
+                    let items: Vec<(usize, &mut [F], &mut [F], &mut f64, &mut [F])> = qbuf
+                        .chunks_mut(shard)
+                        .zip(xnext.chunks_mut(shard))
+                        .zip(qsq.iter_mut())
+                        .zip(norms.chunks_mut(blocks_per_shard))
+                        .enumerate()
+                        .map(|(c, (((qc, xc), sq), nc))| (c * shard, qc, xc, sq, nc))
+                        .collect();
+                    pool.run(items, |(lo, qc, xc, sq, nc)| {
+                        *sq = fill_q(lo, qc, xc);
+                        for (block, nv) in qc.chunks(bs).zip(nc.iter_mut()) {
+                            *nv = crate::compression::kernel::max_abs(block);
+                        }
+                    });
+                }
+                _ => {
+                    let items: Vec<(usize, &mut [F], &mut [F], &mut f64)> = qbuf
+                        .chunks_mut(shard)
+                        .zip(xnext.chunks_mut(shard))
+                        .zip(qsq.iter_mut())
+                        .enumerate()
+                        .map(|(c, ((qc, xc), sq))| (c * shard, qc, xc, sq))
+                        .collect();
+                    pool.run(items, |(lo, qc, xc, sq)| {
+                        *sq = fill_q(lo, qc, xc);
+                    });
+                }
+            }
         }
         // lint:allow(float_fold, folds shard partials in slot order; shard count is thread-independent)
         self.last_norm = qsq.iter().sum::<f64>().sqrt();
         // line 19 — the model-residual downlink, compressed over the same
-        // shards (identical payload + RNG stream as the serial compress).
-        let down = self.mq.compress_sharded(&self.qbuf, rng, &pool);
+        // shards (identical payload + RNG stream as the serial compress),
+        // reusing the fused norms when the sweep produced them.
+        let down = match fused_norms {
+            Some(norms) => self.mq.compress_with_norms(&self.qbuf, norms, rng, &pool),
+            None => self.mq.compress_sharded(&self.qbuf, rng, &pool),
+        };
         // e ← q − q̂; x̂ ← x̂ + β·q̂  (lines 20–21) — one fused decode
-        // sweep over the shards.
+        // sweep over the shards, running the fixed-width residual kernel.
         {
             let (e, xhat) = (&mut self.e, &mut self.xhat);
             let qbuf = &self.qbuf;
             let beta = self.hp.beta;
             let down_ref = &down;
             pool.sweep2(e, xhat, |lo, ec, xc| {
-                down_ref.decode_each_range(lo, lo + ec.len(), |i, dq| {
-                    ec[i - lo] = qbuf[i] - dq;
-                    xc[i - lo] += beta * dq;
-                });
+                down_ref.fold_residual_range(lo, &qbuf[lo..lo + ec.len()], beta, ec, xc);
             });
         }
         down

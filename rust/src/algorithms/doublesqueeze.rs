@@ -133,45 +133,82 @@ impl MasterNode for DsMaster {
         // partials.
         let present = uplinks.iter().flatten().count();
         let inv = 1.0 / present.max(1) as F;
-        let pool = self.pool;
+        let pool = self.pool.clone();
         let shard = pool.shard_width();
         let mut vsq = vec![0.0f64; self.v.len().div_ceil(shard)];
+        // §Perf: with a fusable (∞-norm) downlink compressor whose block
+        // grid divides the shard grid, the per-block norms fall out of
+        // this same sweep (order-independent max ⇒ bitwise the serial
+        // block_norm), and `compress_with_norms` skips re-reading v.
+        let fused_bs = self.mq.fused_norm_block().filter(|&bs| shard % bs == 0);
+        let mut fused_norms = fused_bs.map(|bs| vec![0.0f32; self.v.len().div_ceil(bs)]);
         {
             let err = &self.err;
-            let items: Vec<(usize, &mut [F], &mut f64)> = self
-                .v
-                .chunks_mut(shard)
-                .zip(vsq.iter_mut())
-                .enumerate()
-                .map(|(c, (vc, sq))| (c * shard, vc, sq))
-                .collect();
-            pool.run(items, |(lo, vc, sq)| {
+            let fill_v = |lo: usize, vc: &mut [F]| -> f64 {
                 vc.copy_from_slice(&err[lo..lo + vc.len()]);
                 for m in uplinks.iter().flatten() {
                     m.add_scaled_range_into(inv, lo, vc);
                 }
                 // lint:allow(float_fold, per-shard partial inside the ReducePool fixed-shard fold)
-                *sq = vc.iter().map(|&x| (x as f64) * (x as f64)).sum();
-            });
+                vc.iter().map(|&x| (x as f64) * (x as f64)).sum()
+            };
+            match (&mut fused_norms, fused_bs) {
+                (Some(norms), Some(bs)) => {
+                    let blocks_per_shard = shard / bs;
+                    let items: Vec<(usize, &mut [F], &mut f64, &mut [F])> = self
+                        .v
+                        .chunks_mut(shard)
+                        .zip(vsq.iter_mut())
+                        .zip(norms.chunks_mut(blocks_per_shard))
+                        .enumerate()
+                        .map(|(c, ((vc, sq), nc))| (c * shard, vc, sq, nc))
+                        .collect();
+                    pool.run(items, |(lo, vc, sq, nc)| {
+                        *sq = fill_v(lo, vc);
+                        for (block, nv) in vc.chunks(bs).zip(nc.iter_mut()) {
+                            *nv = crate::compression::kernel::max_abs(block);
+                        }
+                    });
+                }
+                _ => {
+                    let items: Vec<(usize, &mut [F], &mut f64)> = self
+                        .v
+                        .chunks_mut(shard)
+                        .zip(vsq.iter_mut())
+                        .enumerate()
+                        .map(|(c, (vc, sq))| (c * shard, vc, sq))
+                        .collect();
+                    pool.run(items, |(lo, vc, sq)| {
+                        *sq = fill_v(lo, vc);
+                    });
+                }
+            }
         }
         // lint:allow(float_fold, folds shard partials in slot order; shard count is thread-independent)
         self.last_norm = vsq.iter().sum::<f64>().sqrt();
         // the downlink, compressed over the same shards (bit-identical
-        // payload + RNG stream to the serial compress)
-        let down = self.mq.compress_sharded(&self.v, rng, &pool);
-        // E = v − Q(v);  x ← x − Q(v) — one fused decode sweep.
+        // payload + RNG stream to the serial compress), reusing the fused
+        // norms when the sweep produced them
+        let down = match fused_norms {
+            Some(norms) => self.mq.compress_with_norms(&self.v, norms, rng, &pool),
+            None => self.mq.compress_sharded(&self.v, rng, &pool),
+        };
+        // E = v − Q(v);  x ← x − Q(v);  x ← prox_{γR}(x) — one fused
+        // sharded sweep running the fixed-width residual kernel (prox is
+        // separable, so the serial tail folds into the same pass).
+        let gamma = self.hp.lr_at(round);
+        let prox = self.hp.prox;
         {
             let (err, x) = (&mut self.err, &mut self.x);
             let v = &self.v;
             let down_ref = &down;
             pool.sweep2(err, x, |lo, ec, xc| {
-                down_ref.decode_each_range(lo, lo + ec.len(), |i, dq| {
-                    ec[i - lo] = v[i] - dq;
-                    xc[i - lo] -= dq;
-                });
+                down_ref.fold_residual_range(lo, &v[lo..lo + ec.len()], -1.0, ec, xc);
+                for xv in xc.iter_mut() {
+                    *xv = prox.apply_one(gamma, *xv);
+                }
             });
         }
-        self.hp.prox.apply(self.hp.lr_at(round), &mut self.x);
         down
     }
 

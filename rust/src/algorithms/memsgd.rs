@@ -112,9 +112,18 @@ impl MasterNode for MemSgdMaster {
         debug_assert_eq!(uplinks.len(), self.n);
         // partial participation: average over whoever showed up
         average_present(uplinks, &mut self.dbar, &self.pool);
-        // the γ is inside the uplinks: x ← x − mean(Q(γg_i + e_i))
-        linalg::axpy(-1.0, &self.dbar, &mut self.x);
-        self.hp.prox.apply(self.hp.lr_at(round), &mut self.x);
+        // the γ is inside the uplinks: x ← x − mean(Q(γg_i + e_i)), then
+        // the prox — swept over the pool's dimension shards (§Perf).
+        super::dense_step_tail(
+            &self.pool,
+            -1.0,
+            self.hp.lr_at(round),
+            0.0,
+            self.hp.prox,
+            &self.dbar,
+            &mut Vec::new(),
+            &mut self.x,
+        );
         Compressed::Dense(self.x.clone())
     }
 

@@ -331,6 +331,43 @@ pub(crate) fn apply_momentum(m: F, g: &[F], vel: &mut Vec<F>) {
     }
 }
 
+/// The dense-broadcast step tail `x ← prox_{γ R}(x + step_scale·step)`,
+/// with the heavy-ball fold `vel ← m·vel + g` fused in when momentum is
+/// on — parallelized across `pool`'s dimension shards instead of running
+/// serially after the reduce (§Perf). Bit-identical to the serial
+/// `apply_momentum` + `linalg::axpy` + `Prox::apply` sequence: every
+/// coordinate evaluates the same expression tree, shards are disjoint,
+/// and the prox is separable ([`Prox::apply_one`] agrees with
+/// [`Prox::apply`] coordinate-wise).
+pub(crate) fn dense_step_tail(
+    pool: &ReducePool,
+    step_scale: F,
+    prox_gamma: F,
+    momentum: F,
+    prox: Prox,
+    g: &[F],
+    vel: &mut Vec<F>,
+    x: &mut [F],
+) {
+    if momentum > 0.0 {
+        if vel.is_empty() {
+            vel.resize(g.len(), 0.0);
+        }
+        pool.sweep2(x, vel, |lo, xc, vc| {
+            for (j, (xv, vv)) in xc.iter_mut().zip(vc.iter_mut()).enumerate() {
+                *vv = momentum * *vv + g[lo + j];
+                *xv = prox.apply_one(prox_gamma, *xv + step_scale * *vv);
+            }
+        });
+    } else {
+        pool.sweep1(x, |lo, xc| {
+            for (j, xv) in xc.iter_mut().enumerate() {
+                *xv = prox.apply_one(prox_gamma, *xv + step_scale * g[lo + j]);
+            }
+        });
+    }
+}
+
 /// Average the *present* uplinks into a dense buffer:
 /// `out = (1/|S|) Σ_{i∈S} decode(m_i)` where `S` is the set of `Some`
 /// slots. An empty round leaves `out` zero (the step is a no-op). The sum

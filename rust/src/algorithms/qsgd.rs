@@ -86,10 +86,18 @@ impl MasterNode for QsgdMaster {
         // partial participation: average over whoever showed up
         average_present(uplinks, &mut self.gbar, &self.pool);
         let gamma = self.hp.lr_at(round);
-        super::apply_momentum(self.hp.momentum, &self.gbar, &mut self.vel);
-        let step = if self.hp.momentum > 0.0 { &self.vel } else { &self.gbar };
-        linalg::axpy(-gamma, step, &mut self.x);
-        self.hp.prox.apply(gamma, &mut self.x);
+        // x ← prox_{γR}(x − γ·step), momentum fold included, swept over
+        // the pool's dimension shards (§Perf).
+        super::dense_step_tail(
+            &self.pool,
+            -gamma,
+            gamma,
+            self.hp.momentum,
+            self.hp.prox,
+            &self.gbar,
+            &mut self.vel,
+            &mut self.x,
+        );
         Compressed::Dense(self.x.clone())
     }
 

@@ -1,0 +1,293 @@
+//! Fixed-width elementwise kernels for the quantize/decode hot paths.
+//!
+//! Everything here is written in the autovec-friendly shape the backends
+//! reliably turn into SIMD: the inner loop runs over `&[T; LANES]` array
+//! references obtained via `chunks_exact`, so the compiler sees a
+//! compile-time trip count and no bounds checks, and the scalar remainder
+//! is peeled explicitly. No `std::simd` (nightly-only) and no intrinsics —
+//! the per-coordinate expressions are **identical** to the scalar
+//! reference loops, so results are bit-identical by construction
+//! (`rust/tests/proptest_simd.rs` pins this against independent scalar
+//! re-implementations).
+//!
+//! The kernels deliberately know nothing about blocks or shards: callers
+//! ([`super::Compressed`], the quantizers, the algorithm masters) slice
+//! per-block/per-shard sub-ranges and hand them down, which keeps every
+//! multiplier (`scale * norms[b]`, `1 / norm`, …) hoisted exactly once per
+//! block — the same grouping the pre-vectorized code used.
+
+use crate::F;
+
+/// Vector width of the fixed-width inner loops. 16 f32 lanes cover an
+/// AVX-512 register and split cleanly on AVX2/NEON; the value only shapes
+/// codegen, never results.
+pub(crate) const LANES: usize = 16;
+
+/// 24-bit uniform scaling shared by every stochastic-rounding compare:
+/// `(u32 >> 8) as f32 * INV_2_24` is bit-for-bit
+/// [`super::Xoshiro256::next_f32`], which is what makes buffered
+/// (`fill_u32`) and inline RNG draws interchangeable.
+pub(crate) const INV_2_24: f32 = 1.0 / (1 << 24) as f32;
+
+/// `out[j] += m * codes[j]` over small signed codes (trits or QSGD
+/// levels) — the decode side of every blockwise payload.
+#[inline]
+pub(crate) fn add_scaled_i8(m: F, codes: &[i8], out: &mut [F]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let mut cs = codes.chunks_exact(LANES);
+    let mut os = out.chunks_exact_mut(LANES);
+    for (c, o) in (&mut cs).zip(&mut os) {
+        let c: &[i8; LANES] = c.try_into().expect("chunks_exact");
+        let o: &mut [F; LANES] = o.try_into().expect("chunks_exact");
+        for j in 0..LANES {
+            o[j] += m * c[j] as F;
+        }
+    }
+    for (o, &c) in os.into_remainder().iter_mut().zip(cs.remainder()) {
+        *o += m * c as F;
+    }
+}
+
+/// Two-destination decode fold: per coordinate `v = m * codes[j]`, then
+/// `out1[j] += s1 * v` and `out2[j] += s2 * v`. One memory pass over the
+/// codes feeds both accumulators — DORE's fused `ĝ`/`h` update (master
+/// lines 14–15/17) without a second decode sweep. The expression tree per
+/// coordinate (`v` formed first, then scaled into each destination)
+/// matches the closure-based fold it replaces bit-for-bit.
+#[inline]
+pub(crate) fn add_scaled2_i8(m: F, codes: &[i8], s1: F, out1: &mut [F], s2: F, out2: &mut [F]) {
+    debug_assert!(codes.len() == out1.len() && codes.len() == out2.len());
+    let mut cs = codes.chunks_exact(LANES);
+    let mut o1s = out1.chunks_exact_mut(LANES);
+    let mut o2s = out2.chunks_exact_mut(LANES);
+    for ((c, o1), o2) in (&mut cs).zip(&mut o1s).zip(&mut o2s) {
+        let c: &[i8; LANES] = c.try_into().expect("chunks_exact");
+        let o1: &mut [F; LANES] = o1.try_into().expect("chunks_exact");
+        let o2: &mut [F; LANES] = o2.try_into().expect("chunks_exact");
+        for j in 0..LANES {
+            let v = m * c[j] as F;
+            o1[j] += s1 * v;
+            o2[j] += s2 * v;
+        }
+    }
+    for ((&c, o1), o2) in cs
+        .remainder()
+        .iter()
+        .zip(o1s.into_remainder().iter_mut())
+        .zip(o2s.into_remainder().iter_mut())
+    {
+        let v = m * c as F;
+        *o1 += s1 * v;
+        *o2 += s2 * v;
+    }
+}
+
+/// Dense twin of [`add_scaled2_i8`]: `v = vals[j]` directly.
+#[inline]
+pub(crate) fn add_scaled2_dense(vals: &[F], s1: F, out1: &mut [F], s2: F, out2: &mut [F]) {
+    debug_assert!(vals.len() == out1.len() && vals.len() == out2.len());
+    for ((&v, o1), o2) in vals.iter().zip(out1.iter_mut()).zip(out2.iter_mut()) {
+        *o1 += s1 * v;
+        *o2 += s2 * v;
+    }
+}
+
+/// Residual fold over decoded codes: per coordinate `v = m * codes[j]`,
+/// then `e[j] = src[j] − v` and `x[j] += beta * v`. This is DORE's
+/// `e ← q − q̂; x̂ ← x̂ + β·q̂` (lines 20–21) and — with `beta = −1` —
+/// DoubleSqueeze's `E = v − u; x ← x − u` in one pass over the downlink.
+#[inline]
+pub(crate) fn fold_residual_i8(m: F, codes: &[i8], src: &[F], beta: F, e: &mut [F], x: &mut [F]) {
+    debug_assert!(codes.len() == src.len() && codes.len() == e.len() && codes.len() == x.len());
+    let mut cs = codes.chunks_exact(LANES);
+    let mut ss = src.chunks_exact(LANES);
+    let mut es = e.chunks_exact_mut(LANES);
+    let mut xs = x.chunks_exact_mut(LANES);
+    for (((c, s), ec), xc) in (&mut cs).zip(&mut ss).zip(&mut es).zip(&mut xs) {
+        let c: &[i8; LANES] = c.try_into().expect("chunks_exact");
+        let s: &[F; LANES] = s.try_into().expect("chunks_exact");
+        let ec: &mut [F; LANES] = ec.try_into().expect("chunks_exact");
+        let xc: &mut [F; LANES] = xc.try_into().expect("chunks_exact");
+        for j in 0..LANES {
+            let v = m * c[j] as F;
+            ec[j] = s[j] - v;
+            xc[j] += beta * v;
+        }
+    }
+    for (((&c, &s), ec), xc) in cs
+        .remainder()
+        .iter()
+        .zip(ss.remainder())
+        .zip(es.into_remainder().iter_mut())
+        .zip(xs.into_remainder().iter_mut())
+    {
+        let v = m * c as F;
+        *ec = s - v;
+        *xc += beta * v;
+    }
+}
+
+/// Dense twin of [`fold_residual_i8`]: `v = vals[j]` directly.
+#[inline]
+pub(crate) fn fold_residual_dense(vals: &[F], src: &[F], beta: F, e: &mut [F], x: &mut [F]) {
+    debug_assert!(vals.len() == src.len() && vals.len() == e.len() && vals.len() == x.len());
+    for (((&v, &s), ec), xc) in vals.iter().zip(src.iter()).zip(e.iter_mut()).zip(x.iter_mut()) {
+        *ec = s - v;
+        *xc += beta * v;
+    }
+}
+
+/// Blockwise ∞-norm: `max_j |xs[j]|`. Four independent accumulators break
+/// the serial `maxss` dependency chain; `max` is order-independent, so the
+/// result equals the plain serial fold bitwise (NaN-free inputs).
+#[inline]
+pub(crate) fn max_abs(xs: &[F]) -> F {
+    let mut acc = [0.0f32; 4];
+    let mut it = xs.chunks_exact(4);
+    for c in &mut it {
+        acc[0] = acc[0].max(c[0].abs());
+        acc[1] = acc[1].max(c[1].abs());
+        acc[2] = acc[2].max(c[2].abs());
+        acc[3] = acc[3].max(c[3].abs());
+    }
+    let mut m = acc[0].max(acc[1]).max(acc[2].max(acc[3]));
+    for &v in it.remainder() {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Bernoulli ∞/2-norm trit draw over one block: `ξ_j ~ Bern(|v_j|·inv)`
+/// against the buffered uniforms `u`, `out[j] = sign(v_j)·ξ_j`. The
+/// branchless per-coordinate expressions are the serial quantize loop's,
+/// verbatim.
+#[inline]
+pub(crate) fn quantize_trits(inv: F, block: &[F], u: &[u32], out: &mut [i8]) {
+    debug_assert!(block.len() == u.len() && block.len() == out.len());
+    let mut bs = block.chunks_exact(LANES);
+    let mut us = u.chunks_exact(LANES);
+    let mut os = out.chunks_exact_mut(LANES);
+    for ((b, r), o) in (&mut bs).zip(&mut us).zip(&mut os) {
+        let b: &[F; LANES] = b.try_into().expect("chunks_exact");
+        let r: &[u32; LANES] = r.try_into().expect("chunks_exact");
+        let o: &mut [i8; LANES] = o.try_into().expect("chunks_exact");
+        for j in 0..LANES {
+            let p = b[j].abs() * inv;
+            let uf = (r[j] >> 8) as F * INV_2_24;
+            let fire = (uf < p) as i8;
+            // sign bit -> {1, -1} (-0.0 maps to -1, but |v| = 0 means
+            // fire = 0, so the trit is 0 regardless).
+            let sign = 1 - 2 * ((b[j].to_bits() >> 31) as i8);
+            o[j] = fire * sign;
+        }
+    }
+    for ((&v, &r), t) in bs
+        .remainder()
+        .iter()
+        .zip(us.remainder())
+        .zip(os.into_remainder().iter_mut())
+    {
+        let p = v.abs() * inv;
+        let uf = (r >> 8) as F * INV_2_24;
+        let fire = (uf < p) as i8;
+        let sign = 1 - 2 * ((v.to_bits() >> 31) as i8);
+        *t = fire * sign;
+    }
+}
+
+/// QSGD stochastic level draw over one block against buffered uniforms:
+/// `r = |v|/norm·s`, round down to `l = ⌊r⌋`, up with probability
+/// `r − l`, signed by `v`. The division by `norm` is kept per coordinate
+/// (not strength-reduced to a reciprocal multiply) so values match the
+/// historical serial loop bit-for-bit; hardware division vectorizes fine.
+#[inline]
+pub(crate) fn quantize_levels(norm: F, s: F, block: &[F], u: &[u32], out: &mut [i8]) {
+    debug_assert!(block.len() == u.len() && block.len() == out.len());
+    for ((o, &v), &r) in out.iter_mut().zip(block.iter()).zip(u.iter()) {
+        let rr = v.abs() / norm * s; // in [0, s]
+        let l = rr.floor();
+        let uf = (r >> 8) as F * INV_2_24;
+        let up = uf < (rr - l);
+        let q = (l + if up { 1.0 } else { 0.0 }) as i8;
+        *o = if v >= 0.0 { q } else { -q };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits(v: &[F]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Every kernel, at every length straddling the LANES boundary ±2,
+    /// against a naive scalar re-implementation — bit-for-bit.
+    #[test]
+    fn kernels_match_scalar_reference_across_lane_boundaries() {
+        let mut rng = crate::compression::Xoshiro256::seed_from_u64(77);
+        for len in [0, 1, 2, LANES - 2, LANES - 1, LANES, LANES + 1, LANES + 2, 3 * LANES + 5] {
+            let codes: Vec<i8> = (0..len).map(|_| (rng.next_u32() % 5) as i8 - 2).collect();
+            let vals: Vec<F> = (0..len).map(|_| rng.next_gaussian()).collect();
+            let us: Vec<u32> = (0..len).map(|_| rng.next_u32()).collect();
+            let m = 0.37f32;
+
+            let mut got = vec![0.25f32; len];
+            add_scaled_i8(m, &codes, &mut got);
+            let mut want = vec![0.25f32; len];
+            for (o, &c) in want.iter_mut().zip(&codes) {
+                *o += m * c as F;
+            }
+            assert_eq!(bits(&got), bits(&want), "add_scaled_i8 len {len}");
+
+            let (mut g1, mut g2) = (vec![0.5f32; len], vec![-0.5f32; len]);
+            add_scaled2_i8(m, &codes, 0.2, &mut g1, 0.9, &mut g2);
+            let (mut w1, mut w2) = (vec![0.5f32; len], vec![-0.5f32; len]);
+            for ((&c, o1), o2) in codes.iter().zip(w1.iter_mut()).zip(w2.iter_mut()) {
+                let v = m * c as F;
+                *o1 += 0.2 * v;
+                *o2 += 0.9 * v;
+            }
+            assert_eq!(bits(&g1), bits(&w1), "add_scaled2_i8 out1 len {len}");
+            assert_eq!(bits(&g2), bits(&w2), "add_scaled2_i8 out2 len {len}");
+
+            let (mut ge, mut gx) = (vec![0.0f32; len], vec![1.5f32; len]);
+            fold_residual_i8(m, &codes, &vals, 0.8, &mut ge, &mut gx);
+            let (mut we, mut wx) = (vec![0.0f32; len], vec![1.5f32; len]);
+            for (((&c, &s), e), x) in
+                codes.iter().zip(&vals).zip(we.iter_mut()).zip(wx.iter_mut())
+            {
+                let v = m * c as F;
+                *e = s - v;
+                *x += 0.8 * v;
+            }
+            assert_eq!(bits(&ge), bits(&we), "fold_residual_i8 e len {len}");
+            assert_eq!(bits(&gx), bits(&wx), "fold_residual_i8 x len {len}");
+
+            let mut gt = vec![0i8; len];
+            quantize_trits(0.4, &vals, &us, &mut gt);
+            let mut wt = vec![0i8; len];
+            for ((t, &v), &r) in wt.iter_mut().zip(&vals).zip(&us) {
+                let p = v.abs() * 0.4;
+                let uf = (r >> 8) as F * INV_2_24;
+                *t = ((uf < p) as i8) * (1 - 2 * ((v.to_bits() >> 31) as i8));
+            }
+            assert_eq!(gt, wt, "quantize_trits len {len}");
+
+            let mut gl = vec![0i8; len];
+            quantize_levels(2.5, 4.0, &vals, &us, &mut gl);
+            let mut wl = vec![0i8; len];
+            for ((o, &v), &r) in wl.iter_mut().zip(&vals).zip(&us) {
+                let rr = v.abs() / 2.5 * 4.0;
+                let l = rr.floor();
+                let q = (l + if ((r >> 8) as F * INV_2_24) < (rr - l) { 1.0 } else { 0.0 }) as i8;
+                *o = if v >= 0.0 { q } else { -q };
+            }
+            assert_eq!(gl, wl, "quantize_levels len {len}");
+
+            let max = max_abs(&vals);
+            let want_max = vals.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            assert_eq!(max.to_bits(), want_max.to_bits(), "max_abs len {len}");
+        }
+    }
+}

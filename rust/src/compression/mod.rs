@@ -14,6 +14,7 @@
 pub mod codec;
 pub mod entropy;
 pub mod identity;
+pub(crate) mod kernel;
 pub mod pnorm;
 pub mod qsgd;
 pub mod rng;
@@ -99,13 +100,12 @@ impl Compressed {
                 trits,
                 ..
             } => {
-                for (b, chunk) in trits.chunks(*block_size).enumerate() {
-                    let m = scale * norms[b];
-                    let base = b * block_size;
-                    for (j, &t) in chunk.iter().enumerate() {
-                        // t in {-1,0,1}: multiply, don't branch.
-                        out[base + j] += m * t as F;
-                    }
+                // t in {-1,0,1}: multiply, don't branch; fixed-width SIMD
+                // chunks inside the kernel, one hoisted multiplier per block.
+                for ((b, chunk), ochunk) in
+                    trits.chunks(*block_size).enumerate().zip(out.chunks_mut(*block_size))
+                {
+                    kernel::add_scaled_i8(scale * norms[b], chunk, ochunk);
                 }
             }
             Compressed::Levels {
@@ -116,12 +116,10 @@ impl Compressed {
                 ..
             } => {
                 let inv_s = 1.0 / *s as F;
-                for (b, chunk) in levels.chunks(*block_size).enumerate() {
-                    let m = scale * norms[b] * inv_s;
-                    let base = b * block_size;
-                    for (j, &l) in chunk.iter().enumerate() {
-                        out[base + j] += m * l as F;
-                    }
+                for ((b, chunk), ochunk) in
+                    levels.chunks(*block_size).enumerate().zip(out.chunks_mut(*block_size))
+                {
+                    kernel::add_scaled_i8(scale * norms[b] * inv_s, chunk, ochunk);
                 }
             }
             Compressed::Sparse { idx, vals, .. } => {
@@ -202,10 +200,7 @@ impl Compressed {
                 while j < hi {
                     let b = j / bs;
                     let end = hi.min((b + 1) * bs);
-                    let m = scale * norms[b];
-                    for (o, &t) in out[j - lo..end - lo].iter_mut().zip(&trits[j..end]) {
-                        *o += m * t as F;
-                    }
+                    kernel::add_scaled_i8(scale * norms[b], &trits[j..end], &mut out[j - lo..end - lo]);
                     j = end;
                 }
             }
@@ -216,10 +211,11 @@ impl Compressed {
                 while j < hi {
                     let b = j / bs;
                     let end = hi.min((b + 1) * bs);
-                    let m = scale * norms[b] * inv_s;
-                    for (o, &l) in out[j - lo..end - lo].iter_mut().zip(&levels[j..end]) {
-                        *o += m * l as F;
-                    }
+                    kernel::add_scaled_i8(
+                        scale * norms[b] * inv_s,
+                        &levels[j..end],
+                        &mut out[j - lo..end - lo],
+                    );
                     j = end;
                 }
             }
@@ -292,6 +288,163 @@ impl Compressed {
         }
     }
 
+    /// Two-destination fused decode over one dimension shard: for every
+    /// coordinate `j ∈ [lo, lo + out1.len())` with decoded value `v`
+    /// (zeros included, exactly the [`Compressed::decode_each_range`]
+    /// values), do `out1[j − lo] += s1·v` and `out2[j − lo] += s2·v`.
+    /// One memory pass over the payload feeds both accumulators — the
+    /// vectorized form of DORE/DIANA's `ĝ`/`h` fold. Per coordinate the
+    /// expression tree (`v` formed first, then scaled into each
+    /// destination) is identical to running the closure
+    /// `|i, v| { out1 += s1·v; out2 += s2·v }` under `decode_each_range`,
+    /// so the switch is bit-exact.
+    pub fn add_scaled2_range_into(
+        &self,
+        lo: usize,
+        s1: F,
+        out1: &mut [F],
+        s2: F,
+        out2: &mut [F],
+    ) {
+        assert_eq!(out1.len(), out2.len(), "fused decode destinations must match");
+        let hi = lo + out1.len();
+        assert!(hi <= self.dim(), "range {lo}..{hi} exceeds dim {}", self.dim());
+        match self {
+            Compressed::Dense(v) => {
+                kernel::add_scaled2_dense(&v[lo..hi], s1, out1, s2, out2);
+            }
+            Compressed::Ternary { block_size, norms, trits, .. } => {
+                let bs = *block_size;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    kernel::add_scaled2_i8(
+                        norms[b],
+                        &trits[j..end],
+                        s1,
+                        &mut out1[j - lo..end - lo],
+                        s2,
+                        &mut out2[j - lo..end - lo],
+                    );
+                    j = end;
+                }
+            }
+            Compressed::Levels { block_size, s, norms, levels, .. } => {
+                let bs = *block_size;
+                let inv_s = 1.0 / *s as F;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    kernel::add_scaled2_i8(
+                        norms[b] * inv_s,
+                        &levels[j..end],
+                        s1,
+                        &mut out1[j - lo..end - lo],
+                        s2,
+                        &mut out2[j - lo..end - lo],
+                    );
+                    j = end;
+                }
+            }
+            Compressed::Sparse { idx, vals, .. } => {
+                // implicit zeros still run the += ops (s·0.0 can flip the
+                // sign of a −0.0 accumulator — identical to the closure form)
+                let start = idx.partition_point(|&i| (i as usize) < lo);
+                let mut it = idx[start..].iter().zip(vals[start..].iter()).peekable();
+                for (j, (o1, o2)) in out1.iter_mut().zip(out2.iter_mut()).enumerate() {
+                    let i = lo + j;
+                    let v = match it.peek() {
+                        Some(&(&k, &v)) if k as usize == i => {
+                            it.next();
+                            v
+                        }
+                        _ => 0.0,
+                    };
+                    *o1 += s1 * v;
+                    *o2 += s2 * v;
+                }
+            }
+        }
+    }
+
+    /// Fused residual fold over one dimension shard: for every coordinate
+    /// `j ∈ [lo, lo + src.len())` with decoded value `v`, do
+    /// `e_out[j − lo] = src[j − lo] − v` and `x_out[j − lo] += beta·v`.
+    /// `src` is the caller's shard slice of the compressor input (DORE's
+    /// `q`, DoubleSqueeze's `v`). This is DORE's lines 20–21
+    /// (`e ← q − q̂; x̂ ← x̂ + β·q̂`) and, with `beta = −1`, DoubleSqueeze's
+    /// `E = v − u; x ← x − u` (`x + (−1)·u` and `x − u` are the same f32
+    /// value) — per coordinate bit-identical to the closure-based
+    /// `decode_each_range` folds it replaces.
+    pub fn fold_residual_range(&self, lo: usize, src: &[F], beta: F, e_out: &mut [F], x_out: &mut [F]) {
+        assert!(
+            src.len() == e_out.len() && src.len() == x_out.len(),
+            "fused residual buffers must match"
+        );
+        let hi = lo + src.len();
+        assert!(hi <= self.dim(), "range {lo}..{hi} exceeds dim {}", self.dim());
+        match self {
+            Compressed::Dense(v) => {
+                kernel::fold_residual_dense(&v[lo..hi], src, beta, e_out, x_out);
+            }
+            Compressed::Ternary { block_size, norms, trits, .. } => {
+                let bs = *block_size;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    kernel::fold_residual_i8(
+                        norms[b],
+                        &trits[j..end],
+                        &src[j - lo..end - lo],
+                        beta,
+                        &mut e_out[j - lo..end - lo],
+                        &mut x_out[j - lo..end - lo],
+                    );
+                    j = end;
+                }
+            }
+            Compressed::Levels { block_size, s, norms, levels, .. } => {
+                let bs = *block_size;
+                let inv_s = 1.0 / *s as F;
+                let mut j = lo;
+                while j < hi {
+                    let b = j / bs;
+                    let end = hi.min((b + 1) * bs);
+                    kernel::fold_residual_i8(
+                        norms[b] * inv_s,
+                        &levels[j..end],
+                        &src[j - lo..end - lo],
+                        beta,
+                        &mut e_out[j - lo..end - lo],
+                        &mut x_out[j - lo..end - lo],
+                    );
+                    j = end;
+                }
+            }
+            Compressed::Sparse { idx, vals, .. } => {
+                let start = idx.partition_point(|&i| (i as usize) < lo);
+                let mut it = idx[start..].iter().zip(vals[start..].iter()).peekable();
+                for (j, ((&s, ec), xc)) in
+                    src.iter().zip(e_out.iter_mut()).zip(x_out.iter_mut()).enumerate()
+                {
+                    let i = lo + j;
+                    let v = match it.peek() {
+                        Some(&(&k, &v)) if k as usize == i => {
+                            it.next();
+                            v
+                        }
+                        _ => 0.0,
+                    };
+                    *ec = s - v;
+                    *xc += beta * v;
+                }
+            }
+        }
+    }
+
     /// Exact number of bits this payload occupies on the (simulated) wire,
     /// per the codec in [`codec`]. Used for all communication accounting
     /// (Fig. 2, §3.2 compression-rate table).
@@ -327,6 +480,38 @@ pub trait Compressor: Send + Sync {
     ) -> Compressed {
         let _ = pool;
         self.compress(x, rng)
+    }
+
+    /// Fused-norm grid: `Some(block_size)` iff this operator's per-block
+    /// statistic is **order-independent** (the ∞-norm `max`), so a master
+    /// may compute the per-block norms itself — inside the same sweep that
+    /// produces the vector being compressed — and hand them to
+    /// [`Compressor::compress_with_norms`], saving one full memory pass.
+    /// Operators whose statistic has a pinned f32 accumulation order (the
+    /// 2-norm sums) must return `None`: a norms vector computed under a
+    /// different grouping would not be bit-identical. The default is
+    /// `None` (not fusable).
+    fn fused_norm_block(&self) -> Option<usize> {
+        None
+    }
+
+    /// [`Compressor::compress_sharded`] with the per-block norms already
+    /// computed by the caller. `norms[b]` must equal — **bitwise** — what
+    /// the operator itself would compute for block `b` on the
+    /// [`Compressor::fused_norm_block`] grid (guaranteed for the ∞-norm by
+    /// order independence of `max`). Payload and RNG exit state must still
+    /// match the serial `compress` exactly. Only meaningful when
+    /// `fused_norm_block()` is `Some`; the default ignores the hint and
+    /// recomputes, which is trivially conformant.
+    fn compress_with_norms(
+        &self,
+        x: &[F],
+        norms: Vec<F>,
+        rng: &mut Xoshiro256,
+        pool: &crate::engine::reduce::ReducePool,
+    ) -> Compressed {
+        let _ = norms;
+        self.compress_sharded(x, rng, pool)
     }
 
     /// Upper bound on the relative variance constant `C` of Assumption 1
@@ -607,6 +792,58 @@ mod tests {
                 let bits = |v: &[F]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
                 assert_eq!(bits(&got_add), bits(&want_add), "{c:?} width {width}");
                 assert_eq!(bits(&got_each), bits(&want_each), "{c:?} width {width}");
+            }
+        }
+    }
+
+    /// The fused two-destination and residual folds must be bit-identical
+    /// to running the equivalent closures under `decode_each_range` — for
+    /// every payload variant, odd dims, partial blocks and empty sparse.
+    #[test]
+    fn fused_range_ops_match_closure_folds_bitwise() {
+        let mut rng = Xoshiro256::seed_from_u64(53);
+        let mut cases: Vec<Compressed> = Vec::new();
+        for dim in [1usize, 7, 23, 64, 100] {
+            let x: Vec<F> = (0..dim).map(|_| rng.next_gaussian()).collect();
+            cases.push(Compressed::Dense(x.clone()));
+            cases.push(PNormQuantizer::new(PNorm::Inf, 7).compress(&x, &mut rng));
+            cases.push(QsgdQuantizer::new(5, 9).compress(&x, &mut rng));
+            cases.push(StochasticSparsifier::new(0.4).compress(&x, &mut rng));
+        }
+        cases.push(Compressed::Sparse { dim: 9, idx: vec![], vals: vec![] });
+        let bits = |v: &[F]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        for c in &cases {
+            let d = c.dim();
+            let src: Vec<F> = (0..d).map(|i| (i as F * 0.3).sin()).collect();
+            let (s1, s2, beta) = (0.25f32, 0.0625f32, 0.9f32);
+            // closure references (the pre-vectorization master folds)
+            let mut w1 = vec![0.5f32; d];
+            let mut w2 = vec![-1.0f32; d];
+            let mut we = vec![f32::NAN; d];
+            let mut wx = vec![2.0f32; d];
+            c.decode_each(|i, v| {
+                w1[i] += s1 * v;
+                w2[i] += s2 * v;
+                we[i] = src[i] - v;
+                wx[i] += beta * v;
+            });
+            for width in [1usize, 3, 8, 64, 1000] {
+                let mut g1 = vec![0.5f32; d];
+                let mut g2 = vec![-1.0f32; d];
+                let mut ge = vec![f32::NAN; d];
+                let mut gx = vec![2.0f32; d];
+                let mut lo = 0;
+                while lo < d {
+                    let hi = d.min(lo + width);
+                    let (o1, o2) = (&mut g1[lo..hi], &mut g2[lo..hi]);
+                    c.add_scaled2_range_into(lo, s1, o1, s2, o2);
+                    c.fold_residual_range(lo, &src[lo..hi], beta, &mut ge[lo..hi], &mut gx[lo..hi]);
+                    lo = hi;
+                }
+                assert_eq!(bits(&g1), bits(&w1), "{c:?} width {width} out1");
+                assert_eq!(bits(&g2), bits(&w2), "{c:?} width {width} out2");
+                assert_eq!(bits(&ge), bits(&we), "{c:?} width {width} e");
+                assert_eq!(bits(&gx), bits(&wx), "{c:?} width {width} x");
             }
         }
     }

@@ -12,13 +12,9 @@
 //! on one-hot-free worst cases but typically far smaller — the benches
 //! measure the empirical ratio.
 
-use super::{Compressed, Compressor, Xoshiro256};
+use super::{kernel, Compressed, Compressor, Xoshiro256};
 use crate::engine::reduce::ReducePool;
 use crate::F;
-
-/// 24-bit uniform scaling shared by the serial and sharded quantize loops
-/// (they must compare the identical `uf` against the identical `p`).
-const INV_2_24: f32 = 1.0 / (1 << 24) as f32;
 
 /// Which p-norm scales each block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -49,24 +45,12 @@ impl PNormQuantizer {
     #[inline]
     fn block_norm(&self, block: &[F]) -> F {
         match self.norm {
-            // 4 independent accumulators break the serial maxss dependency
+            // independent accumulators break the serial maxss dependency
             // chain (§Perf): ~3x on long blocks, same result (max is
-            // order-independent).
-            PNorm::Inf => {
-                let mut acc = [0.0f32; 4];
-                let mut it = block.chunks_exact(4);
-                for c in &mut it {
-                    acc[0] = acc[0].max(c[0].abs());
-                    acc[1] = acc[1].max(c[1].abs());
-                    acc[2] = acc[2].max(c[2].abs());
-                    acc[3] = acc[3].max(c[3].abs());
-                }
-                let mut m = acc[0].max(acc[1]).max(acc[2].max(acc[3]));
-                for &v in it.remainder() {
-                    m = m.max(v.abs());
-                }
-                m
-            }
+            // order-independent). The shared kernel is also what the
+            // masters' fused q-sweep uses ([`Compressor::fused_norm_block`]),
+            // so caller-computed norms agree bitwise by construction.
+            PNorm::Inf => kernel::max_abs(block),
             PNorm::L2 => {
                 let mut acc = [0.0f32; 4];
                 let mut it = block.chunks_exact(4);
@@ -83,6 +67,60 @@ impl PNormQuantizer {
                 s.sqrt()
             }
         }
+    }
+
+    /// Steps 2–3 of the sharded compress: one packed serial entropy fill
+    /// (the exact u32 stream the serial path consumes — one per coordinate
+    /// of every nonzero block, in block order) followed by a parallel
+    /// per-block trit draw. Caller supplies the block norms, whether from
+    /// the norms pass or fused into a master's q-sweep.
+    fn draw_trits(
+        &self,
+        x: &[F],
+        norms: Vec<F>,
+        rng: &mut Xoshiro256,
+        pool: &ReducePool,
+    ) -> Compressed {
+        let dim = x.len();
+        let bs = self.block_size;
+        let nblocks = norms.len();
+        let blocks_per_shard = (pool.shard_width() / bs).max(1);
+
+        // One serial fill over the concatenation of nonzero blocks keeps
+        // the RNG consumption order identical to the serial compress.
+        let mut offs = Vec::with_capacity(nblocks);
+        let mut total = 0usize;
+        for (b, &norm) in norms.iter().enumerate() {
+            offs.push(total);
+            if norm != 0.0 {
+                total += bs.min(dim - b * bs);
+            }
+        }
+        let mut entropy = vec![0u32; total];
+        rng.fill_u32(&mut entropy);
+
+        let mut trits = vec![0i8; dim];
+        {
+            let (norms, offs, entropy) = (&norms, &offs, &entropy);
+            let items: Vec<(usize, &mut [i8])> = trits
+                .chunks_mut(blocks_per_shard * bs)
+                .enumerate()
+                .map(|(c, chunk)| (c * blocks_per_shard, chunk))
+                .collect();
+            pool.run(items, |(b0, chunk)| {
+                for (j, tchunk) in chunk.chunks_mut(bs).enumerate() {
+                    let b = b0 + j;
+                    let norm = norms[b];
+                    if norm == 0.0 {
+                        continue; // all-zero block: trits stay 0, no entropy.
+                    }
+                    let lo = b * bs;
+                    let u = &entropy[offs[b]..offs[b] + tchunk.len()];
+                    kernel::quantize_trits(1.0 / norm, &x[lo..lo + tchunk.len()], u, tchunk);
+                }
+            });
+        }
+        Compressed::Ternary { dim, block_size: bs, norms, trits }
     }
 }
 
@@ -104,19 +142,11 @@ impl Compressor for PNormQuantizer {
             if norm == 0.0 {
                 continue; // all-zero block: trits stay 0, no entropy drawn.
             }
-            let inv = 1.0 / norm;
             let u = &mut ubuf[..block.len()];
             rng.fill_u32(u);
-            for ((t, &v), &r) in tchunk.iter_mut().zip(block.iter()).zip(u.iter()) {
-                // ξ ~ Bernoulli(|v|/norm); trit = sign(v)·ξ, branchless.
-                let p = v.abs() * inv;
-                let uf = (r >> 8) as f32 * INV_2_24;
-                let fire = (uf < p) as i8;
-                // sign bit -> {1, -1} (v >= 0 ? 1 : -1; -0.0 maps to -1
-                // but then |v| = 0 so fire = 0 and the trit is 0 anyway).
-                let sign = 1 - 2 * ((v.to_bits() >> 31) as i8);
-                *t = fire * sign;
-            }
+            // ξ ~ Bernoulli(|v|/norm); trit = sign(v)·ξ — the branchless
+            // fixed-width kernel shared with the sharded draw.
+            kernel::quantize_trits(1.0 / norm, block, u, tchunk);
         }
         Compressed::Ternary {
             dim,
@@ -160,52 +190,31 @@ impl Compressor for PNormQuantizer {
             });
         }
 
-        // 2. entropy: one packed serial fill. The serial compress draws
-        //    block.len() u32s per nonzero block in block order; filling the
-        //    concatenation consumes the identical stream.
-        let mut offs = Vec::with_capacity(nblocks);
-        let mut total = 0usize;
-        for (b, &norm) in norms.iter().enumerate() {
-            offs.push(total);
-            if norm != 0.0 {
-                total += bs.min(dim - b * bs);
-            }
-        }
-        let mut entropy = vec![0u32; total];
-        rng.fill_u32(&mut entropy);
+        // 2.–3. entropy fill + trit draw.
+        self.draw_trits(x, norms, rng, pool)
+    }
 
-        // 3. trit draw in parallel over block-aligned shards — the same
-        //    branchless compare as the serial loop on the same (r, v) pairs.
-        let mut trits = vec![0i8; dim];
-        {
-            let (norms, offs, entropy) = (&norms, &offs, &entropy);
-            let items: Vec<(usize, &mut [i8])> = trits
-                .chunks_mut(blocks_per_shard * bs)
-                .enumerate()
-                .map(|(c, chunk)| (c * blocks_per_shard, chunk))
-                .collect();
-            pool.run(items, |(b0, chunk)| {
-                for (j, tchunk) in chunk.chunks_mut(bs).enumerate() {
-                    let b = b0 + j;
-                    let norm = norms[b];
-                    if norm == 0.0 {
-                        continue; // all-zero block: trits stay 0, no entropy.
-                    }
-                    let inv = 1.0 / norm;
-                    let lo = b * bs;
-                    let u = &entropy[offs[b]..offs[b] + tchunk.len()];
-                    let block = &x[lo..lo + tchunk.len()];
-                    for ((t, &v), &r) in tchunk.iter_mut().zip(block.iter()).zip(u.iter()) {
-                        let p = v.abs() * inv;
-                        let uf = (r >> 8) as f32 * INV_2_24;
-                        let fire = (uf < p) as i8;
-                        let sign = 1 - 2 * ((v.to_bits() >> 31) as i8);
-                        *t = fire * sign;
-                    }
-                }
-            });
+    /// ∞-norm blocks are fusable: `max` is order-independent, so a master
+    /// computing the block maxima inside its own q-sweep gets bitwise the
+    /// norms [`PNormQuantizer::block_norm`] would. 2-norm blocks are not —
+    /// their f32 summation order is pinned by the serial kernel.
+    fn fused_norm_block(&self) -> Option<usize> {
+        match self.norm {
+            PNorm::Inf => Some(self.block_size),
+            PNorm::L2 => None,
         }
-        Compressed::Ternary { dim, block_size: bs, norms, trits }
+    }
+
+    fn compress_with_norms(
+        &self,
+        x: &[F],
+        norms: Vec<F>,
+        rng: &mut Xoshiro256,
+        pool: &ReducePool,
+    ) -> Compressed {
+        debug_assert_eq!(self.norm, PNorm::Inf, "only the ∞-norm grid is fusable");
+        debug_assert_eq!(norms.len(), x.len().div_ceil(self.block_size));
+        self.draw_trits(x, norms, rng, pool)
     }
 
     fn variance_constant(&self, dim: usize) -> f64 {
@@ -339,6 +348,34 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Fused-norm contract: handing `compress_with_norms` the norms the
+    /// serial `block_norm` pass would produce yields the identical payload
+    /// and RNG exit state as plain `compress`, at every thread count.
+    #[test]
+    fn compress_with_norms_is_bit_identical_to_serial() {
+        for (dim, block) in [(37usize, 7usize), (530, 256), (1000, 16)] {
+            let q = PNormQuantizer::new(PNorm::Inf, block);
+            assert_eq!(q.fused_norm_block(), Some(block));
+            let mut base = Xoshiro256::seed_from_u64(3 * dim as u64);
+            let mut x: Vec<F> = (0..dim).map(|_| base.next_gaussian()).collect();
+            if dim > 2 * block {
+                x[block..2 * block].fill(0.0);
+            }
+            let norms: Vec<F> = x.chunks(block).map(|b| q.block_norm(b)).collect();
+            let mut want_rng = Xoshiro256::seed_from_u64(123);
+            let want = q.compress(&x, &mut want_rng);
+            for threads in [1usize, 2, 7] {
+                let pool = crate::engine::reduce::ReducePool::with_shard(threads, 64);
+                let mut rng = Xoshiro256::seed_from_u64(123);
+                let got = q.compress_with_norms(&x, norms.clone(), &mut rng, &pool);
+                assert_eq!(got, want, "dim={dim} block={block} threads={threads}");
+                assert_eq!(rng.next_u64(), want_rng.clone().next_u64());
+            }
+        }
+        // L2 is not fusable: summation order is pinned by the serial kernel.
+        assert_eq!(PNormQuantizer::new(PNorm::L2, 8).fused_norm_block(), None);
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //! where `l = floor(|x_i|/||x|| · s)`. Unbiased; Assumption 1 holds with
 //! `C ≤ min(b/s², √b/s)` per block of size `b` (QSGD Lemma 3.1).
 
-use super::{Compressed, Compressor, Xoshiro256};
+use super::{kernel, Compressed, Compressor, Xoshiro256};
+use crate::engine::reduce::ReducePool;
 use crate::F;
 
 #[derive(Clone, Debug)]
@@ -23,6 +24,16 @@ impl QsgdQuantizer {
         assert!(block_size > 0);
         Self { levels, block_size }
     }
+
+    /// The in-block 2-norm. Kept strictly sequential: unlike the ∞-norm
+    /// this f32 fold is order-dependent, so every caller (serial compress,
+    /// sharded norms pass) must run the same expression over the same
+    /// contiguous block.
+    #[inline]
+    fn block_norm(&self, block: &[F]) -> F {
+        // lint:allow(float_fold, sequential over one contiguous block; order fixed by slice layout)
+        block.iter().map(|&v| v * v).sum::<F>().sqrt()
+    }
 }
 
 impl Compressor for QsgdQuantizer {
@@ -32,22 +43,20 @@ impl Compressor for QsgdQuantizer {
         let nblocks = dim.div_ceil(self.block_size);
         let mut norms = Vec::with_capacity(nblocks);
         let mut levels = vec![0i8; dim];
-        for (b, block) in x.chunks(self.block_size).enumerate() {
-            // lint:allow(float_fold, sequential over one contiguous block; order fixed by slice layout)
-            let norm = block.iter().map(|&v| v * v).sum::<F>().sqrt();
+        // §Perf: randomness is buffered per nonzero block (one next_u32 per
+        // coordinate, in order — the exact stream inline next_f32 calls
+        // consume) so the rounding loop has no serial RNG dependency and
+        // auto-vectorizes.
+        let mut ubuf = vec![0u32; self.block_size];
+        for (block, lchunk) in x.chunks(self.block_size).zip(levels.chunks_mut(self.block_size)) {
+            let norm = self.block_norm(block);
             norms.push(norm);
             if norm == 0.0 {
                 continue;
             }
-            let base = b * self.block_size;
-            for (j, &v) in block.iter().enumerate() {
-                let r = v.abs() / norm * s; // in [0, s]
-                let l = r.floor();
-                // round up with probability (r - l)
-                let up = rng.next_f32() < (r - l);
-                let q = (l + if up { 1.0 } else { 0.0 }) as i8;
-                levels[base + j] = if v >= 0.0 { q } else { -q };
-            }
+            let u = &mut ubuf[..block.len()];
+            rng.fill_u32(u);
+            kernel::quantize_levels(norm, s, block, u, lchunk);
         }
         Compressed::Levels {
             dim,
@@ -56,6 +65,72 @@ impl Compressor for QsgdQuantizer {
             norms,
             levels,
         }
+    }
+
+    /// Sharded compress mirroring [`PNormQuantizer::compress_sharded`]:
+    /// parallel per-block norms (each block's sum stays the serial
+    /// expression), one packed serial entropy fill, parallel level draw —
+    /// payload and RNG exit state bit-identical to [`Self::compress`].
+    fn compress_sharded(&self, x: &[F], rng: &mut Xoshiro256, pool: &ReducePool) -> Compressed {
+        if pool.threads() <= 1 {
+            return self.compress(x, rng);
+        }
+        let dim = x.len();
+        let s = self.levels as F;
+        let bs = self.block_size;
+        let nblocks = dim.div_ceil(bs);
+        let blocks_per_shard = (pool.shard_width() / bs).max(1);
+
+        let mut norms = vec![0.0f32; nblocks];
+        {
+            let items: Vec<(usize, &mut [F])> = norms
+                .chunks_mut(blocks_per_shard)
+                .enumerate()
+                .map(|(c, chunk)| (c * blocks_per_shard, chunk))
+                .collect();
+            pool.run(items, |(b0, chunk)| {
+                for (j, nv) in chunk.iter_mut().enumerate() {
+                    let lo = (b0 + j) * bs;
+                    *nv = self.block_norm(&x[lo..dim.min(lo + bs)]);
+                }
+            });
+        }
+
+        // One serial fill over the concatenation of nonzero blocks keeps
+        // the RNG consumption order identical to the serial compress.
+        let mut offs = Vec::with_capacity(nblocks);
+        let mut total = 0usize;
+        for (b, &norm) in norms.iter().enumerate() {
+            offs.push(total);
+            if norm != 0.0 {
+                total += bs.min(dim - b * bs);
+            }
+        }
+        let mut entropy = vec![0u32; total];
+        rng.fill_u32(&mut entropy);
+
+        let mut levels = vec![0i8; dim];
+        {
+            let (norms, offs, entropy) = (&norms, &offs, &entropy);
+            let items: Vec<(usize, &mut [i8])> = levels
+                .chunks_mut(blocks_per_shard * bs)
+                .enumerate()
+                .map(|(c, chunk)| (c * blocks_per_shard, chunk))
+                .collect();
+            pool.run(items, |(b0, chunk)| {
+                for (j, lchunk) in chunk.chunks_mut(bs).enumerate() {
+                    let b = b0 + j;
+                    let norm = norms[b];
+                    if norm == 0.0 {
+                        continue;
+                    }
+                    let lo = b * bs;
+                    let u = &entropy[offs[b]..offs[b] + lchunk.len()];
+                    kernel::quantize_levels(norm, s, &x[lo..lo + lchunk.len()], u, lchunk);
+                }
+            });
+        }
+        Compressed::Levels { dim, block_size: bs, s: self.levels, norms, levels }
     }
 
     fn variance_constant(&self, dim: usize) -> f64 {
@@ -129,6 +204,36 @@ mod tests {
         }
         err /= trials as f64;
         assert!(err <= q.variance_constant(48) * xsq * 1.05);
+    }
+
+    /// Same contract as the pnorm test: the sharded compress must emit the
+    /// identical payload and leave the RNG in the identical state as the
+    /// serial path — including all-zero blocks and a ragged tail block.
+    #[test]
+    fn sharded_compress_is_bit_identical_to_serial() {
+        for (dim, block) in [(10usize, 4usize), (37, 7), (256, 256), (1000, 16), (530, 64)] {
+            let q = QsgdQuantizer::new(4, block);
+            let mut base = Xoshiro256::seed_from_u64(17 + dim as u64);
+            let mut x: Vec<F> = (0..dim).map(|_| base.next_gaussian()).collect();
+            if dim > 2 * block {
+                x[block..2 * block].fill(0.0);
+            }
+            let mut want_rng = Xoshiro256::seed_from_u64(55);
+            let want = q.compress(&x, &mut want_rng);
+            for threads in [2usize, 7] {
+                for shard in [1usize, 8, 64, 16384] {
+                    let pool = crate::engine::reduce::ReducePool::with_shard(threads, shard);
+                    let mut rng = Xoshiro256::seed_from_u64(55);
+                    let got = q.compress_sharded(&x, &mut rng, &pool);
+                    assert_eq!(got, want, "dim={dim} block={block} threads={threads}");
+                    assert_eq!(
+                        rng.next_u64(),
+                        want_rng.clone().next_u64(),
+                        "RNG exit state drifted (dim={dim} block={block} threads={threads})"
+                    );
+                }
+            }
+        }
     }
 
     /// QSGD level streams concentrate near zero, which is exactly what

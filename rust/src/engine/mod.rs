@@ -101,6 +101,7 @@ pub mod fault;
 mod modelcheck;
 pub mod observer;
 pub mod participation;
+pub(crate) mod pool;
 pub mod protocol;
 pub mod reduce;
 pub mod registry;

@@ -1,0 +1,509 @@
+//! Persistent reduce workers: parked OS threads behind a generation
+//! counter, replacing the per-sweep `std::thread::scope` spawn in
+//! [`super::reduce::ReducePool`].
+//!
+//! A DORE master runs several pool sweeps per round (uplink fold, q-sweep,
+//! e/x̂ fold, downlink compress), and at small dimension the
+//! spawn + join cost of a scoped pool dominates the arithmetic — the
+//! `hotpath` bench's scoped-vs-persistent section records the gap. The
+//! persistent pool spawns its `threads − 1` helpers once, parks them on a
+//! condvar, and hands each sweep over with a single generation bump:
+//!
+//! * **Handoff** is a `Mutex<State>` + two condvars — no atomics, no
+//!   unordered containers, so the TSan gate and `cargo xtask lint` stay
+//!   clean. Workers wait on `work_cv` for `generation` to advance;
+//!   the dispatcher waits on `done_cv` for `remaining` to hit zero.
+//! * **Determinism** is untouched: the pool decides *who* runs a bucket,
+//!   never *what* a bucket computes (see [`super::reduce`] module docs).
+//!   [`dispatch`](PersistentWorkers::dispatch) returns only after every
+//!   participating index `0..nt` has executed, so the happens-before
+//!   edges are exactly those of the scoped pool.
+//! * **Panic safety**: worker panics are caught, recorded, and re-raised
+//!   on the dispatching thread after the sweep completes; the worker
+//!   thread itself survives and keeps serving later sweeps.
+//!
+//! The interleaving-exhaustive model check at the bottom of this file
+//! (same pure-std loom style as [`super::modelcheck`]) proves the
+//! protocol deadlock-free and exactly-once for every schedule of ≤ 2
+//! helpers × ≤ 3 jobs, including non-participating helpers that observe
+//! generations late and back-to-back dispatchers contending for the slot.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The erased per-sweep task: `task(i)` runs bucket `i`. The `'static` is
+/// a lie told only inside [`PersistentWorkers::dispatch`], which outlives
+/// every use (see the SAFETY argument there).
+type Task = &'static (dyn Fn(usize) + Sync);
+
+/// One published sweep: the erased task plus how many indices participate
+/// (the dispatcher runs index 0 itself; helpers `1..nt` join in).
+struct Job {
+    task: Task,
+    nt: usize,
+}
+
+struct State {
+    /// Bumped once per published job; workers park until it advances past
+    /// the generation they last observed.
+    generation: u64,
+    /// The in-flight job. `Some` from publish until *all* participants
+    /// have finished — its `None`→`Some` edge also serializes concurrent
+    /// dispatchers from cloned pools sharing these workers.
+    job: Option<Job>,
+    /// Participating helpers still running the current job.
+    remaining: usize,
+    shutdown: bool,
+    /// Any helper panicked during the current job.
+    panicked: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here; signalled on publish and on shutdown.
+    work_cv: Condvar,
+    /// Dispatchers park here, both waiting for the job slot (`job` is
+    /// `Some`) and waiting for completion (`remaining > 0`).
+    done_cv: Condvar,
+}
+
+/// `threads − 1` parked helper threads shared by every clone of one
+/// [`super::reduce::ReducePool`]. Dropped (and joined) with the last
+/// clone.
+pub(crate) struct PersistentWorkers {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl PersistentWorkers {
+    /// Spawn `helpers` parked worker threads (ids `1..=helpers`; the
+    /// dispatching thread is id 0).
+    pub(crate) fn new(helpers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                generation: 0,
+                job: None,
+                remaining: 0,
+                shutdown: false,
+                panicked: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..=helpers)
+            .map(|id| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("reduce-{id}"))
+                    .spawn(move || worker_loop(&shared, id))
+                    .expect("spawn reduce worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Run `task(0) … task(nt − 1)`, index 0 on the calling thread and the
+    /// rest on parked helpers, returning once **all** have finished.
+    /// Panics (caller's or any helper's) propagate on the calling thread
+    /// after the sweep has fully quiesced.
+    pub(crate) fn dispatch(&self, nt: usize, task: &(dyn Fn(usize) + Sync)) {
+        assert!(nt >= 1, "dispatch needs at least the calling thread");
+        assert!(
+            nt <= self.handles.len() + 1,
+            "dispatch of {nt} indices exceeds {} helpers + caller",
+            self.handles.len()
+        );
+        // SAFETY: the 'static is confined to this call's dynamic extent.
+        // The reference is published under the lock, helpers only read it
+        // while `job` is `Some`, and this function does not return (or
+        // resume a caught panic) until `remaining == 0` AND it has set
+        // `job` back to `None` under the same lock — after which no
+        // worker can observe the pointer again (late observers find
+        // `job == None` and skip). The caller's own `task(0)` runs under
+        // `catch_unwind`, so even a panicking sweep reaches the drain
+        // loop before unwinding past the borrowed data.
+        let task_static = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+        };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            // one job in flight at a time: queue behind any concurrent
+            // dispatcher from a cloned pool
+            while st.job.is_some() {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.generation += 1;
+            st.remaining = nt - 1;
+            st.panicked = false;
+            st.job = Some(Job { task: task_static, nt });
+            self.shared.work_cv.notify_all();
+        }
+        let caller = catch_unwind(AssertUnwindSafe(|| task(0)));
+        let helpers_panicked;
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.remaining > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            helpers_panicked = st.panicked;
+            st.panicked = false;
+            // wake dispatchers queued on the job slot
+            self.shared.done_cv.notify_all();
+        }
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if helpers_panicked {
+            panic!("a reduce worker panicked during the sweep");
+        }
+    }
+
+    pub(crate) fn helpers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for PersistentWorkers {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, id: usize) {
+    let mut seen = 0u64;
+    loop {
+        let mut claimed: Option<Task> = None;
+        {
+            let mut st = shared.state.lock().unwrap();
+            while !st.shutdown && st.generation == seen {
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            if st.generation == seen {
+                return; // shutdown, no unobserved work
+            }
+            seen = st.generation;
+            // `job` is `None` here only if the generation completed
+            // without us (we were not a participant and observed late) —
+            // never for a job that still counts us in `remaining`.
+            if let Some(job) = st.job.as_ref() {
+                if id < job.nt {
+                    claimed = Some(job.task);
+                }
+            }
+        }
+        let Some(task) = claimed else { continue };
+        let result = catch_unwind(AssertUnwindSafe(|| task(id)));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.remaining -= 1;
+        if st.remaining == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn dispatch_runs_every_index_exactly_once() {
+        let pool = PersistentWorkers::new(3);
+        for nt in 1..=4 {
+            let hits: Vec<AtomicUsize> = (0..nt).map(|_| AtomicUsize::new(0)).collect();
+            pool.dispatch(nt, &|i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "nt={nt} index {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_sweeps_reuse_the_same_workers() {
+        let pool = PersistentWorkers::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.dispatch(3, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 600);
+        assert_eq!(pool.helpers(), 2);
+    }
+
+    #[test]
+    fn helper_panic_propagates_and_pool_survives() {
+        let pool = PersistentWorkers::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(3, &|i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "helper panic must surface on the dispatcher");
+        // the pool keeps serving after a panicked sweep
+        let ok = AtomicUsize::new(0);
+        pool.dispatch(3, &|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn caller_panic_propagates_after_helpers_quiesce() {
+        let pool = PersistentWorkers::new(1);
+        let helper_ran = AtomicUsize::new(0);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.dispatch(2, &|i| {
+                if i == 0 {
+                    panic!("caller boom");
+                }
+                helper_ran.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        assert!(caught.is_err());
+        // dispatch drained the helper before unwinding — its stack-borrowed
+        // task reference was never used after the call returned
+        assert_eq!(helper_ran.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn drop_joins_parked_workers() {
+        let pool = PersistentWorkers::new(4);
+        pool.dispatch(5, &|_| {});
+        drop(pool); // must not hang
+    }
+
+    // -----------------------------------------------------------------------
+    // Exhaustive-interleaving model check (pure-std loom style, as in
+    // `engine::modelcheck`): every reachable schedule of the handoff
+    // protocol at lock-region granularity. Condvar waits are modeled as
+    // guarded transitions; the notify audit lives in the impl (every
+    // state change that can enable a wait signals its condvar in the
+    // same lock region).
+    // -----------------------------------------------------------------------
+
+    /// Dispatcher phases per job list entry.
+    #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+    enum DPhase {
+        /// Between jobs (or before the first): next publish pending.
+        Idle,
+        /// Published; own `task(0)` not yet run.
+        RunOwn,
+        /// Own share done; parked until `remaining == 0`, then clears the
+        /// job slot.
+        WaitDone,
+        /// Job list exhausted.
+        Done,
+    }
+
+    /// Helper worker phases.
+    #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+    enum WPhase {
+        /// Parked on `work_cv` (or about to re-check the predicate).
+        Waiting,
+        /// Observed a generation it participates in; task + decrement
+        /// pending (the decrement is the only shared-state effect, so one
+        /// atomic step models both).
+        Running(usize),
+    }
+
+    #[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+    struct MState {
+        /// Per-dispatcher: (next job index into its list, phase).
+        disp: Vec<(usize, DPhase)>,
+        generation: u64,
+        /// `Some((dispatcher, job index, nt))` while a job is in flight.
+        job: Option<(usize, usize, usize)>,
+        remaining: usize,
+        /// Per-helper generation last observed.
+        seen: Vec<u64>,
+        wphase: Vec<WPhase>,
+        /// Sorted audit log of `(dispatcher, job, index)` executions.
+        executed: Vec<(usize, usize, usize)>,
+    }
+
+    struct MModel {
+        /// `jobs[d]` = the `nt` of each job dispatcher `d` runs, in order.
+        jobs: Vec<Vec<usize>>,
+        helpers: usize,
+    }
+
+    fn record(t: &mut MState, entry: (usize, usize, usize)) {
+        let pos = t.executed.binary_search(&entry).unwrap_err();
+        t.executed.insert(pos, entry);
+    }
+
+    fn successors(m: &MModel, s: &MState) -> Vec<MState> {
+        let mut out = Vec::new();
+        for d in 0..m.jobs.len() {
+            let (next, phase) = s.disp[d];
+            match phase {
+                DPhase::Idle => {
+                    if next >= m.jobs[d].len() {
+                        let mut t = s.clone();
+                        t.disp[d] = (next, DPhase::Done);
+                        out.push(t);
+                    } else if s.job.is_none() {
+                        // publish: the wait-while-job-is-some loop exit
+                        let nt = m.jobs[d][next];
+                        let mut t = s.clone();
+                        t.generation += 1;
+                        t.remaining = nt - 1;
+                        t.job = Some((d, next, nt));
+                        t.disp[d] = (next, DPhase::RunOwn);
+                        out.push(t);
+                    }
+                }
+                DPhase::RunOwn => {
+                    let mut t = s.clone();
+                    record(&mut t, (d, next, 0));
+                    t.disp[d] = (next, DPhase::WaitDone);
+                    out.push(t);
+                }
+                DPhase::WaitDone => {
+                    if s.remaining == 0 {
+                        let mut t = s.clone();
+                        assert_eq!(
+                            t.job.map(|(o, j, _)| (o, j)),
+                            Some((d, next)),
+                            "dispatcher {d} cleared a job slot it does not own: {s:?}"
+                        );
+                        t.job = None;
+                        t.disp[d] = (next + 1, DPhase::Idle);
+                        out.push(t);
+                    }
+                }
+                DPhase::Done => {}
+            }
+        }
+        for w in 0..m.helpers {
+            let id = w + 1; // helper ids start at 1; the dispatcher is 0
+            match s.wphase[w] {
+                WPhase::Waiting => {
+                    if s.generation != s.seen[w] {
+                        // observe: seen jumps to the current generation;
+                        // a late observer may find the slot empty or a
+                        // job it does not participate in — both skip
+                        let mut t = s.clone();
+                        t.seen[w] = s.generation;
+                        if let Some((_, _, nt)) = s.job {
+                            if id < nt {
+                                t.wphase[w] = WPhase::Running(id);
+                            }
+                        }
+                        out.push(t);
+                    }
+                }
+                WPhase::Running(idx) => {
+                    let (d, j, _) = s.job.expect("running helper with no job in flight");
+                    let mut t = s.clone();
+                    record(&mut t, (d, j, idx));
+                    t.remaining -= 1;
+                    t.wphase[w] = WPhase::Waiting;
+                    out.push(t);
+                }
+            }
+        }
+        out
+    }
+
+    /// Memoized DFS over every interleaving; asserts deadlock-freedom and
+    /// exactly-once execution of every `(dispatcher, job, index < nt)`.
+    fn exhaust(m: &MModel) -> usize {
+        use std::collections::BTreeSet;
+        let mut expect: Vec<(usize, usize, usize)> = Vec::new();
+        for (d, list) in m.jobs.iter().enumerate() {
+            for (j, &nt) in list.iter().enumerate() {
+                for idx in 0..nt {
+                    expect.push((d, j, idx));
+                }
+            }
+        }
+        expect.sort_unstable();
+        let init = MState {
+            disp: vec![(0, DPhase::Idle); m.jobs.len()],
+            generation: 0,
+            job: None,
+            remaining: 0,
+            seen: vec![0; m.helpers],
+            wphase: vec![WPhase::Waiting; m.helpers],
+            executed: Vec::new(),
+        };
+        let mut visited: BTreeSet<MState> = BTreeSet::new();
+        let mut stack = vec![init];
+        let mut terminals = 0usize;
+        while let Some(s) = stack.pop() {
+            if !visited.insert(s.clone()) {
+                continue;
+            }
+            let next = successors(m, &s);
+            if next.is_empty() {
+                assert!(
+                    s.disp.iter().all(|&(_, p)| p == DPhase::Done),
+                    "deadlock: {s:?}"
+                );
+                assert!(s.job.is_none(), "terminated with a job in flight: {s:?}");
+                assert_eq!(s.executed, expect, "execution set mismatch: {s:?}");
+                terminals += 1;
+                continue;
+            }
+            stack.extend(next);
+        }
+        assert!(terminals > 0, "no terminal state reached");
+        visited.len()
+    }
+
+    #[test]
+    fn model_single_dispatcher_every_interleaving() {
+        // varying nt per job exercises non-participating helpers that
+        // observe the generation late (or skip it entirely)
+        for jobs in [
+            vec![1usize],
+            vec![3],
+            vec![2, 3],
+            vec![3, 1, 2],
+            vec![1, 1, 3],
+        ] {
+            for helpers in 1..=2 {
+                if jobs.iter().any(|&nt| nt > helpers + 1) {
+                    continue;
+                }
+                assert!(exhaust(&MModel { jobs: vec![jobs.clone()], helpers }) > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn model_concurrent_dispatchers_serialize_on_the_job_slot() {
+        // two dispatchers (cloned pools sharing the workers) contend for
+        // the slot; the wait-while-job-is-some loop must serialize them
+        // without deadlock or cross-talk in the execution sets
+        for (a, b) in [(vec![2usize], vec![2usize]), (vec![3], vec![2]), (vec![2, 2], vec![3])] {
+            assert!(exhaust(&MModel { jobs: vec![a, b], helpers: 2 }) > 0);
+        }
+    }
+
+    #[test]
+    fn model_late_observer_skips_completed_generations() {
+        // helper 2 participates only in the nt=3 job; with jobs [3, 1, 1]
+        // it can observe generation 3 directly from 1 — the job=None /
+        // not-a-participant branch must absorb the jump
+        assert!(exhaust(&MModel { jobs: vec![vec![3, 1, 1]], helpers: 2 }) > 0);
+    }
+}

@@ -15,10 +15,16 @@
 //!   happens in the identical order for 1, 2, or N reduce threads, so the
 //!   reduction is **bit-identical** to the serial path (`golden_series` and
 //!   `proptest_reduce` prove it for all seven algorithms).
-//! * shards are driven across a scoped OS-thread pool
-//!   (`std::thread::scope`; thread count from
-//!   [`TrainSpec::reduce_threads`](super::TrainSpec)). Threads only decide
-//!   *who* executes a shard, never *what* a shard computes.
+//! * shards are driven across a **persistent** worker pool
+//!   ([`super::pool::PersistentWorkers`]; thread count from
+//!   [`TrainSpec::reduce_threads`](super::TrainSpec)): `threads − 1`
+//!   helpers are spawned once per pool and parked on a condvar between
+//!   sweeps, so per-sweep dispatch is a generation bump instead of an OS
+//!   spawn + join. [`ReducePool::scoped`] keeps the old per-sweep
+//!   `std::thread::scope` mode alive as the benchmark/test reference —
+//!   both modes run identical buckets, so results are bit-identical by
+//!   construction. Threads only decide *who* executes a shard, never
+//!   *what* a shard computes.
 //!
 //! The payload-side halves of the machinery are
 //! [`Compressed::add_scaled_range_into`] /
@@ -28,8 +34,10 @@
 //! recompression swept over the same shards, consuming the identical RNG
 //! stream as the serial compressor).
 
+use super::pool::PersistentWorkers;
 use crate::compression::Compressed;
 use crate::F;
+use std::sync::{Arc, Mutex};
 
 /// Default shard width in coordinates. Wide enough that the per-shard
 /// dispatch cost vanishes against the decode work, narrow enough that a
@@ -40,12 +48,26 @@ use crate::F;
 /// granularity.
 pub const DEFAULT_SHARD: usize = 16_384;
 
-/// A dimension-sharded reduction driver: fixed shard boundaries, scoped
-/// OS threads, bit-identical results for every thread count.
-#[derive(Clone, Copy, Debug)]
+/// A dimension-sharded reduction driver: fixed shard boundaries,
+/// persistent (or scoped) OS threads, bit-identical results for every
+/// thread count. Cloning is cheap — clones share the same parked workers.
+#[derive(Clone)]
 pub struct ReducePool {
     threads: usize,
     shard: usize,
+    /// `Some` = persistent mode (the default); `None` = per-sweep
+    /// `std::thread::scope`, kept as the reference implementation.
+    workers: Option<Arc<PersistentWorkers>>,
+}
+
+impl std::fmt::Debug for ReducePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ReducePool")
+            .field("threads", &self.threads)
+            .field("shard", &self.shard)
+            .field("mode", &if self.workers.is_some() { "persistent" } else { "scoped" })
+            .finish()
+    }
 }
 
 impl Default for ReducePool {
@@ -62,7 +84,8 @@ impl ReducePool {
     }
 
     /// Pool with `threads` reduce threads (`0` = all available cores) and
-    /// the default shard width.
+    /// the default shard width. Spawns `threads − 1` persistent helpers,
+    /// parked between sweeps; they are joined when the last clone drops.
     pub fn new(threads: usize) -> Self {
         Self::with_shard(threads, DEFAULT_SHARD)
     }
@@ -75,12 +98,30 @@ impl ReducePool {
     /// ‖v‖), whose f64 partials are grouped per shard — still invariant in
     /// the thread count, since the width is fixed per pool.
     pub fn with_shard(threads: usize, shard: usize) -> Self {
-        let threads = if threads == 0 {
+        let threads = Self::resolve(threads);
+        let workers = (threads > 1).then(|| Arc::new(PersistentWorkers::new(threads - 1)));
+        Self { threads, shard: shard.max(1), workers }
+    }
+
+    /// The pre-persistent reference mode: identical sharding and bucket
+    /// assignment, but every sweep spawns fresh scoped threads. Exists so
+    /// tests can assert persistent ≡ scoped and the `hotpath` bench can
+    /// record the dispatch-overhead win.
+    pub fn scoped(threads: usize) -> Self {
+        Self::scoped_with_shard(threads, DEFAULT_SHARD)
+    }
+
+    /// [`Self::scoped`] with an explicit shard width.
+    pub fn scoped_with_shard(threads: usize, shard: usize) -> Self {
+        Self { threads: Self::resolve(threads), shard: shard.max(1), workers: None }
+    }
+
+    fn resolve(threads: usize) -> usize {
+        if threads == 0 {
             std::thread::available_parallelism().map_or(1, |n| n.get())
         } else {
             threads
-        };
-        Self { threads, shard: shard.max(1) }
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -91,14 +132,21 @@ impl ReducePool {
         self.shard
     }
 
+    /// `true` when sweeps dispatch to parked persistent workers rather
+    /// than spawning scoped threads.
+    pub fn is_persistent(&self) -> bool {
+        self.workers.is_some()
+    }
+
     /// Execute one closure call per work item, distributing items across
-    /// the pool's scoped threads. Items must touch pairwise-disjoint data;
-    /// the assignment of items to threads is unspecified and must not
-    /// affect results (which holds for disjoint shards by construction).
-    /// Serial pools (or a single item) run inline with zero overhead;
-    /// otherwise the calling thread works the first contiguous run of
-    /// items itself (it would only block in the scope anyway) and spawns
-    /// `threads − 1` helpers, each owning a contiguous run for locality.
+    /// the pool's threads. Items must touch pairwise-disjoint data; the
+    /// assignment of items to threads is unspecified and must not affect
+    /// results (which holds for disjoint shards by construction). Serial
+    /// pools (or a single item) run inline with zero overhead; otherwise
+    /// the items are cut into `nt` contiguous buckets with boundaries
+    /// `t·len/nt` (a function of the item count alone) and bucket `t` runs
+    /// on thread `t` — bucket 0 on the calling thread, the rest on parked
+    /// persistent workers (or scoped spawns in [`Self::scoped`] mode).
     pub fn run<T: Send>(&self, items: Vec<T>, f: impl Fn(T) + Sync) {
         if self.threads <= 1 || items.len() <= 1 {
             for it in items {
@@ -109,25 +157,35 @@ impl ReducePool {
         let nt = self.threads.min(items.len());
         let len = items.len();
         let mut own = items;
-        // peel contiguous tail runs for the helper threads, back to front;
-        // what remains in `own` is the calling thread's share
-        let mut buckets: Vec<Vec<T>> = Vec::with_capacity(nt - 1);
+        // peel contiguous tail runs, back to front: bucket t covers
+        // items [t·len/nt, (t+1)·len/nt) — the same boundaries for both
+        // dispatch modes and any thread count ≥ bucket count
+        let mut buckets: Vec<Vec<T>> = Vec::with_capacity(nt);
         for t in (1..nt).rev() {
             buckets.push(own.split_off(t * len / nt));
         }
-        let f = &f;
-        std::thread::scope(|s| {
-            for bucket in buckets {
-                s.spawn(move || {
-                    for it in bucket {
-                        f(it);
-                    }
-                });
-            }
-            for it in own {
+        buckets.push(own);
+        buckets.reverse();
+        // hand ownership of bucket t to whichever thread executes index t
+        let buckets: Vec<Mutex<Vec<T>>> = buckets.into_iter().map(Mutex::new).collect();
+        let task = |t: usize| {
+            let bucket = std::mem::take(&mut *buckets[t].lock().unwrap());
+            for it in bucket {
                 f(it);
             }
-        });
+        };
+        match &self.workers {
+            Some(w) => w.dispatch(nt, &task),
+            None => {
+                let task = &task;
+                std::thread::scope(|s| {
+                    for t in 1..nt {
+                        s.spawn(move || task(t));
+                    }
+                    task(0);
+                });
+            }
+        }
     }
 
     /// Sweep one buffer in fixed shards: `f(lo, shard)` receives the
@@ -242,6 +300,52 @@ mod tests {
         assert!(ReducePool::new(0).threads() >= 1);
         assert_eq!(ReducePool::serial().threads(), 1);
         assert_eq!(ReducePool::with_shard(3, 0).shard_width(), 1, "shard width is clamped");
+        assert!(!ReducePool::serial().is_persistent(), "serial pools spawn no workers");
+        assert!(ReducePool::new(2).is_persistent());
+        assert!(!ReducePool::scoped(2).is_persistent());
+    }
+
+    /// Persistent dispatch and per-sweep `thread::scope` run the same
+    /// buckets, so every downlink-side reduction they drive must agree
+    /// bitwise — the dispatch mode is pure scheduling.
+    #[test]
+    fn persistent_and_scoped_modes_agree_bitwise() {
+        for d in [5usize, 37, 257] {
+            let ups = payloads(d, 7);
+            for threads in [2usize, 7] {
+                for shard in [8usize, 64] {
+                    let per = ReducePool::with_shard(threads, shard);
+                    let sco = ReducePool::scoped_with_shard(threads, shard);
+                    let mut a = vec![0.25f32; d];
+                    let mut b = vec![0.25f32; d];
+                    per.accumulate(&ups, 0.5, &mut a);
+                    sco.accumulate(&ups, 0.5, &mut b);
+                    let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(ab, bb, "d={d} threads={threads} shard={shard}");
+                }
+            }
+        }
+    }
+
+    /// Clones share the parked workers (no re-spawn per clone) and many
+    /// back-to-back sweeps through one pool stay correct.
+    #[test]
+    fn clones_share_persistent_workers_across_sweeps() {
+        let pool = ReducePool::with_shard(3, 4);
+        let clone = pool.clone();
+        for round in 0..50 {
+            let mut buf = vec![0.0f32; 64];
+            let p = if round % 2 == 0 { &pool } else { &clone };
+            p.sweep1(&mut buf, |lo, chunk| {
+                for (j, v) in chunk.iter_mut().enumerate() {
+                    *v = (lo + j) as f32;
+                }
+            });
+            for (i, &v) in buf.iter().enumerate() {
+                assert_eq!(v, i as f32, "round {round}");
+            }
+        }
     }
 
     #[test]

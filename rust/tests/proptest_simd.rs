@@ -1,0 +1,422 @@
+//! Property tests for the vectorized hot path: every fixed-width-chunk
+//! kernel consumer (quantizers, chunked decode paths, the masters' fused
+//! q-sweep, the persistent reduce pool) against independent scalar
+//! re-implementations — **bit-for-bit**, across dimensions straddling the
+//! SIMD lane width and the compressor block boundaries ±2, odd shard
+//! widths, partial tail blocks, all-zero blocks, and empty sparse
+//! payloads.
+//!
+//! Like the other proptest suites, the environment has no proptest crate,
+//! so this is a hand-rolled sweep. The scalar references here are written
+//! from the documented per-coordinate expression trees (hoisted per-block
+//! multiplier, `p = |v| · (1/norm)`, `v` decoded once then scaled into
+//! each destination) — NOT by calling the vectorized code — so a chunking
+//! or remainder-peel bug cannot cancel itself out.
+
+#![deny(deprecated)]
+
+use dore::algorithms::{build, AlgorithmKind, HyperParams, MasterNode, WorkerNode};
+use dore::compression::{
+    from_spec, Compressed, Compressor, PNorm, PNormQuantizer, QsgdQuantizer, Xoshiro256,
+};
+use dore::engine::ReducePool;
+
+/// Vector width of the fixed-width kernels (`compression::kernel::LANES`
+/// is crate-private; the value here only picks test dimensions, so drift
+/// would weaken coverage, never correctness).
+const LANES: usize = 16;
+
+/// Dimensions straddling `boundary` ±2 plus a long ragged case.
+fn straddle(boundary: usize) -> Vec<usize> {
+    let mut dims: Vec<usize> = (boundary.saturating_sub(2)..=boundary + 2).collect();
+    dims.push(3 * boundary + 5);
+    dims.retain(|&d| d > 0);
+    dims
+}
+
+fn gaussian_vec(dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    (0..dim).map(|_| rng.next_gaussian()).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Quantizers vs scalar references
+// ---------------------------------------------------------------------------
+
+/// The pre-vectorization ternary quantizer: serial block max, inline
+/// per-coordinate `next_f32` draw, `p = |v| · (1/norm)`.
+fn ternary_scalar(block_size: usize, x: &[f32], rng: &mut Xoshiro256) -> Compressed {
+    let dim = x.len();
+    let mut norms = Vec::with_capacity(dim.div_ceil(block_size));
+    let mut trits = vec![0i8; dim];
+    for (block, tchunk) in x.chunks(block_size).zip(trits.chunks_mut(block_size)) {
+        let mut norm = 0.0f32;
+        for &v in block {
+            norm = norm.max(v.abs());
+        }
+        norms.push(norm);
+        if norm == 0.0 {
+            continue;
+        }
+        let inv = 1.0 / norm;
+        for (&v, t) in block.iter().zip(tchunk.iter_mut()) {
+            if rng.next_f32() < v.abs() * inv {
+                *t = if v < 0.0 { -1 } else { 1 };
+            }
+        }
+    }
+    Compressed::Ternary { dim, block_size, norms, trits }
+}
+
+/// The pre-vectorization QSGD quantizer: serial block 2-norm sum, inline
+/// uniform draw, `r = |v|/norm·s` with the division kept per coordinate.
+fn qsgd_scalar(levels: u8, block_size: usize, x: &[f32], rng: &mut Xoshiro256) -> Compressed {
+    let dim = x.len();
+    let s = levels as f32;
+    let mut norms = Vec::with_capacity(dim.div_ceil(block_size));
+    let mut out = vec![0i8; dim];
+    for (block, lchunk) in x.chunks(block_size).zip(out.chunks_mut(block_size)) {
+        let norm = block.iter().map(|&v| v * v).sum::<f32>().sqrt();
+        norms.push(norm);
+        if norm == 0.0 {
+            continue;
+        }
+        for (&v, o) in block.iter().zip(lchunk.iter_mut()) {
+            let rr = v.abs() / norm * s;
+            let l = rr.floor();
+            let q = (l + if rng.next_f32() < (rr - l) { 1.0 } else { 0.0 }) as i8;
+            *o = if v >= 0.0 { q } else { -q };
+        }
+    }
+    Compressed::Levels { dim, block_size, s: levels, norms, levels: out }
+}
+
+/// Test vectors: gaussian, with an all-zero block carved mid-vector when
+/// the dimension allows, an all-zero vector, and a vector containing
+/// negative zeros (the sign-bit edge of the branchless trit draw).
+fn test_vectors(dim: usize, block: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut cases = Vec::new();
+    let mut x = gaussian_vec(dim, seed);
+    cases.push(x.clone());
+    if dim > 2 * block {
+        x[block..2 * block].fill(0.0);
+        cases.push(x);
+    }
+    cases.push(vec![0.0; dim]);
+    let mut z = gaussian_vec(dim, seed ^ 0xABCD);
+    for v in z.iter_mut().step_by(3) {
+        *v = -0.0;
+    }
+    cases.push(z);
+    cases
+}
+
+#[test]
+fn ternary_quantizer_is_bit_identical_to_scalar_reference() {
+    for block in [7usize, LANES, 256] {
+        let mut dims = straddle(block);
+        dims.extend(straddle(LANES));
+        for dim in dims {
+            for (ci, x) in test_vectors(dim, block, dim as u64).iter().enumerate() {
+                let q = PNormQuantizer::new(PNorm::Inf, block);
+                let mut r_s = Xoshiro256::for_site(41, ci as u64, dim as u64);
+                let mut r_v = r_s.clone();
+                let want = ternary_scalar(block, x, &mut r_s);
+                let got = q.compress(x, &mut r_v);
+                assert_eq!(got, want, "ternary dim={dim} block={block} case={ci}");
+                assert_eq!(
+                    r_s.next_u64(),
+                    r_v.next_u64(),
+                    "ternary RNG exit drifted dim={dim} block={block} case={ci}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn qsgd_quantizer_is_bit_identical_to_scalar_reference() {
+    for (s, block) in [(1u8, 7usize), (4, LANES), (15, 64)] {
+        let mut dims = straddle(block);
+        dims.extend(straddle(LANES));
+        for dim in dims {
+            for (ci, x) in test_vectors(dim, block, 7 * dim as u64).iter().enumerate() {
+                let q = QsgdQuantizer::new(s, block);
+                let mut r_s = Xoshiro256::for_site(43, ci as u64, dim as u64);
+                let mut r_v = r_s.clone();
+                let want = qsgd_scalar(s, block, x, &mut r_s);
+                let got = q.compress(x, &mut r_v);
+                assert_eq!(got, want, "qsgd s={s} dim={dim} block={block} case={ci}");
+                assert_eq!(
+                    r_s.next_u64(),
+                    r_v.next_u64(),
+                    "qsgd RNG exit drifted s={s} dim={dim} block={block} case={ci}"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chunked decode paths vs scalar folds
+// ---------------------------------------------------------------------------
+
+/// One payload of each variant at `dim`: Ternary, Levels, Sparse
+/// (including the empty one an all-zero vector produces), Dense.
+fn payloads(dim: usize) -> Vec<Compressed> {
+    let x = gaussian_vec(dim, 100 + dim as u64);
+    let mut rng = Xoshiro256::seed_from_u64(9);
+    let mut out = vec![
+        PNormQuantizer::new(PNorm::Inf, 7).compress(&x, &mut rng),
+        QsgdQuantizer::new(4, LANES).compress(&x, &mut rng),
+        from_spec("sparse:0.3").unwrap().compress(&x, &mut rng),
+        Compressed::Dense(x.clone()),
+    ];
+    // the empty sparse payload: no stored indices, every coordinate a gap
+    out.push(Compressed::Sparse { dim, idx: Vec::new(), vals: Vec::new() });
+    out
+}
+
+/// Scalar `out[i] += scale · decode(c)[i]` with the per-block multiplier
+/// hoisted exactly as the decode kernels hoist it.
+fn add_scaled_reference(c: &Compressed, scale: f32, out: &mut [f32]) {
+    match c {
+        Compressed::Dense(v) => {
+            for (o, &x) in out.iter_mut().zip(v) {
+                *o += scale * x;
+            }
+        }
+        Compressed::Ternary { block_size, norms, trits, .. } => {
+            for (b, chunk) in trits.chunks(*block_size).enumerate() {
+                let m = scale * norms[b];
+                let base = b * block_size;
+                for (j, &t) in chunk.iter().enumerate() {
+                    out[base + j] += m * t as f32;
+                }
+            }
+        }
+        Compressed::Levels { block_size, s, norms, levels, .. } => {
+            let inv_s = 1.0 / *s as f32;
+            for (b, chunk) in levels.chunks(*block_size).enumerate() {
+                let m = scale * norms[b] * inv_s;
+                let base = b * block_size;
+                for (j, &l) in chunk.iter().enumerate() {
+                    out[base + j] += m * l as f32;
+                }
+            }
+        }
+        Compressed::Sparse { idx, vals, .. } => {
+            for (&i, &v) in idx.iter().zip(vals.iter()) {
+                out[i as usize] += scale * v;
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_decode_paths_match_scalar_folds_bitwise() {
+    for dim in [LANES - 1, LANES + 2, 37, 115] {
+        for (pi, c) in payloads(dim).iter().enumerate() {
+            let tag = format!("payload {pi} dim={dim}");
+            let base = gaussian_vec(dim, 3 * dim as u64);
+
+            // whole-vector decode
+            let mut want = base.clone();
+            add_scaled_reference(c, 0.31, &mut want);
+            let mut got = base.clone();
+            c.add_scaled_into(0.31, &mut got);
+            assert_eq!(bits(&got), bits(&want), "add_scaled_into {tag}");
+
+            // shard-by-shard decode at odd shard widths straddling blocks
+            for shard in [1usize, 13, LANES, 50] {
+                let mut got = base.clone();
+                let mut lo = 0;
+                while lo < dim {
+                    let hi = dim.min(lo + shard);
+                    c.add_scaled_range_into(0.31, lo, &mut got[lo..hi]);
+                    lo = hi;
+                }
+                assert_eq!(bits(&got), bits(&want), "add_scaled_range_into {tag} shard={shard}");
+            }
+
+            // fused two-destination fold vs the decode_each_range closure
+            let src = gaussian_vec(dim, 5 * dim as u64 + 1);
+            for shard in [13usize, 50] {
+                let (mut g1, mut g2) = (base.clone(), src.clone());
+                let (mut w1, mut w2) = (base.clone(), src.clone());
+                let mut lo = 0;
+                while lo < dim {
+                    let hi = dim.min(lo + shard);
+                    c.add_scaled2_range_into(
+                        lo,
+                        0.25,
+                        &mut g1[lo..hi],
+                        -0.75,
+                        &mut g2[lo..hi],
+                    );
+                    c.decode_each_range(lo, hi, |i, v| {
+                        w1[i] += 0.25 * v;
+                        w2[i] += -0.75 * v;
+                    });
+                    lo = hi;
+                }
+                assert_eq!(bits(&g1), bits(&w1), "add_scaled2 out1 {tag} shard={shard}");
+                assert_eq!(bits(&g2), bits(&w2), "add_scaled2 out2 {tag} shard={shard}");
+            }
+
+            // residual fold vs the decode_each_range closure
+            for shard in [13usize, 50] {
+                let (mut ge, mut gx) = (vec![0.0f32; dim], base.clone());
+                let (mut we, mut wx) = (vec![0.0f32; dim], base.clone());
+                let mut lo = 0;
+                while lo < dim {
+                    let hi = dim.min(lo + shard);
+                    c.fold_residual_range(lo, &src[lo..hi], 0.9, &mut ge[lo..hi], &mut gx[lo..hi]);
+                    c.decode_each_range(lo, hi, |i, v| {
+                        we[i] = src[i] - v;
+                        wx[i] += 0.9 * v;
+                    });
+                    lo = hi;
+                }
+                assert_eq!(bits(&ge), bits(&we), "fold_residual e {tag} shard={shard}");
+                assert_eq!(bits(&gx), bits(&wx), "fold_residual x {tag} shard={shard}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Persistent pool + fused q-sweep at the master level
+// ---------------------------------------------------------------------------
+
+/// Delegating wrapper hiding the fused-norm grid, so the same master runs
+/// the unfused q-sweep (separate norms pass inside `compress_sharded`).
+struct NoFuse(PNormQuantizer);
+
+impl Compressor for NoFuse {
+    fn compress(&self, x: &[f32], rng: &mut Xoshiro256) -> Compressed {
+        self.0.compress(x, rng)
+    }
+    fn compress_sharded(&self, x: &[f32], rng: &mut Xoshiro256, pool: &ReducePool) -> Compressed {
+        self.0.compress_sharded(x, rng, pool)
+    }
+    // fused_norm_block stays the default None: the point of the wrapper
+    fn variance_constant(&self, dim: usize) -> f64 {
+        self.0.variance_constant(dim)
+    }
+    fn name(&self) -> &'static str {
+        "pnorm-inf-nofuse"
+    }
+}
+
+/// Drive one DORE fleet for `rounds` lock-step rounds under `master`,
+/// returning (downlink, master model, ‖q‖ bits) per round.
+fn run_dore(
+    d: usize,
+    n: usize,
+    rounds: usize,
+    mut master: Box<dyn MasterNode>,
+    pool: ReducePool,
+) -> Vec<(Compressed, Vec<u32>, u64)> {
+    let hp = HyperParams {
+        lr: 0.05,
+        worker_compressor: "ternary:8".into(),
+        master_compressor: "ternary:8".into(),
+        ..HyperParams::paper_defaults()
+    };
+    let x0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    // build() wires workers + a fresh master; we substitute the master
+    // under test but keep its workers so uplinks are identical streams
+    let (mut ws, _unused) = build(AlgorithmKind::Dore, n, &x0, &hp).unwrap();
+    master.set_reduce_pool(pool);
+    let mut grad_rng = Xoshiro256::seed_from_u64(4242);
+    let mut out = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        let ups: Vec<Option<Compressed>> = ws
+            .iter_mut()
+            .enumerate()
+            .map(|(i, w)| {
+                let g: Vec<f32> = (0..d).map(|_| grad_rng.next_gaussian() * 0.1).collect();
+                let mut rng = Xoshiro256::for_site(77, 1 + i as u64, round as u64);
+                // one worker sits out every third round (partial participation)
+                (round % 3 != 0 || i != 0).then(|| w.round(round, &g, &mut rng))
+            })
+            .collect();
+        let mut mrng = Xoshiro256::for_site(77, 0, round as u64);
+        let down = master.round(round, &ups, &mut mrng);
+        for w in ws.iter_mut() {
+            w.apply_downlink(round, &down);
+        }
+        out.push((down, bits(master.model()), master.last_compressed_norm().to_bits()));
+    }
+    out
+}
+
+/// DORE master factory over an explicit downlink compressor.
+fn dore_master(d: usize, n: usize, mq: dore::compression::BoxedCompressor) -> Box<dyn MasterNode> {
+    let hp = HyperParams {
+        lr: 0.05,
+        worker_compressor: "ternary:8".into(),
+        master_compressor: "ternary:8".into(),
+        ..HyperParams::paper_defaults()
+    };
+    let x0: Vec<f32> = (0..d).map(|i| (i as f32 * 0.37).sin()).collect();
+    Box::new(dore::algorithms::dore::DoreMaster::new(&x0, n, mq, hp))
+}
+
+/// The tentpole's end-to-end contract: for every thread count, the
+/// persistent worker pool, the scoped (spawn-per-sweep) reference mode,
+/// the unfused q-sweep, and a block-misaligned shard grid all produce the
+/// serial master's downlinks, model iterates, and ‖q‖ partial sums —
+/// bit-for-bit, under partial participation.
+#[test]
+fn persistent_scoped_fused_and_unfused_downlinks_are_bit_identical() {
+    let (d, n, rounds) = (115usize, 3usize, 6usize);
+    let mq = || from_spec("ternary:8").unwrap();
+    let nofuse = || -> dore::compression::BoxedCompressor {
+        std::sync::Arc::new(NoFuse(PNormQuantizer::new(PNorm::Inf, 8)))
+    };
+    let want = run_dore(d, n, rounds, dore_master(d, n, mq()), ReducePool::serial());
+    for threads in [1usize, 2, 7] {
+        // shard 64 aligns with block 8 → the fused q-sweep engages;
+        // shard 13 does not → the master must fall back, same bits
+        let variants: Vec<(&str, Box<dyn MasterNode>, ReducePool)> = vec![
+            ("persistent", dore_master(d, n, mq()), ReducePool::with_shard(threads, 64)),
+            ("scoped", dore_master(d, n, mq()), ReducePool::scoped_with_shard(threads, 64)),
+            ("unfused", dore_master(d, n, nofuse()), ReducePool::with_shard(threads, 64)),
+            ("misaligned", dore_master(d, n, mq()), ReducePool::with_shard(threads, 13)),
+        ];
+        for (label, master, pool) in variants {
+            // with_shard pools park persistent workers (threads > 1);
+            // scoped mode never does — the bench's reference dispatch
+            assert_eq!(pool.is_persistent(), label != "scoped" && threads > 1);
+            let got = run_dore(d, n, rounds, master, pool);
+            for (round, ((gd, gm, gq), (wd, wm, wq))) in got.iter().zip(&want).enumerate() {
+                assert_eq!(gd, wd, "{label} threads={threads} downlink round {round}");
+                assert_eq!(gm, wm, "{label} threads={threads} model round {round}");
+                assert_eq!(gq, wq, "{label} threads={threads} ‖q‖ round {round}");
+            }
+        }
+    }
+}
+
+/// The same pool instance must survive many dispatch generations: one
+/// persistent pool shared by two masters via clone, swept repeatedly,
+/// stays bit-identical to fresh scoped pools every round.
+#[test]
+fn one_persistent_pool_survives_many_sweeps_and_masters() {
+    let (d, n, rounds) = (130usize, 2usize, 8usize);
+    let mq = || from_spec("ternary:8").unwrap();
+    let shared = ReducePool::with_shard(7, 32);
+    let a = run_dore(d, n, rounds, dore_master(d, n, mq()), shared.clone());
+    let b = run_dore(d, n, rounds, dore_master(d, n, mq()), shared);
+    let c = run_dore(d, n, rounds, dore_master(d, n, mq()), ReducePool::scoped_with_shard(7, 32));
+    for (round, ((ra, rb), rc)) in a.iter().zip(&b).zip(&c).enumerate() {
+        assert_eq!(ra, rb, "shared-pool run diverged at round {round}");
+        assert_eq!(ra, rc, "persistent vs scoped diverged at round {round}");
+    }
+}

@@ -1,0 +1,397 @@
+//! `cargo xtask bench-delta` — the perf-regression gate.
+//!
+//! Compares a candidate bench snapshot (what CI just measured with
+//! `cargo bench --bench hotpath -- --quick --json cand.json`) against the
+//! committed baseline (`BENCH_hotpath.json`) and fails on any section
+//! that regressed past the tolerance band. The snapshot format is the
+//! hand-rolled JSON the benches emit:
+//!
+//! ```json
+//! { "bench": "hotpath", "quick": true, "sections": { "name": 1.234, ... } }
+//! ```
+//!
+//! Comparison rules:
+//!
+//! * keys ending `_ms` are medians, lower is better — compared only when
+//!   the two snapshots' `quick` flags match (a `--quick` run and a full
+//!   run time different dimensions, so cross-mode deltas are noise);
+//! * keys ending `_speedup` are before/after ratios, higher is better —
+//!   compared unconditionally (a ratio is already normalized to the box);
+//! * sections present in only one snapshot are skipped and reported, so
+//!   adding a bench section never breaks the gate retroactively.
+//!
+//! xtask carries no dependencies by design, hence the small recursive
+//! parser below instead of serde.
+
+use crate::anyhow_lite::Result;
+
+/// One parsed bench snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    pub bench: String,
+    pub quick: bool,
+    /// flat section map, file order preserved
+    pub sections: Vec<(String, f64)>,
+}
+
+impl Snapshot {
+    pub fn get(&self, name: &str) -> Option<f64> {
+        self.sections.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+}
+
+/// One compared section. `ratio` is normalized so that > 1 means the
+/// candidate is worse: `cand/base` for `_ms`, `base/cand` for `_speedup`.
+#[derive(Debug, Clone)]
+pub struct Delta {
+    pub section: String,
+    pub baseline: f64,
+    pub candidate: f64,
+    pub ratio: f64,
+    pub regression: bool,
+}
+
+/// Outcome of a snapshot comparison: per-section deltas plus the names
+/// that could not be compared (missing on one side, non-positive, or an
+/// `_ms` key across mismatched `quick` flags).
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    pub deltas: Vec<Delta>,
+    pub skipped: Vec<String>,
+}
+
+impl Comparison {
+    pub fn regressions(&self) -> impl Iterator<Item = &Delta> {
+        self.deltas.iter().filter(|d| d.regression)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parsing: a recursive-descent reader for the benches' restricted JSON
+// (string/bool/number scalars, one level of object nesting, no escapes).
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    s: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { s: s.as_bytes(), pos: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.s.len() && self.s[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        self.skip_ws();
+        if self.pos < self.s.len() && self.s[self.pos] == b {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!(
+                "expected '{}' at byte {} of bench snapshot",
+                b as char, self.pos
+            ))
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.pos).copied()
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let start = self.pos;
+        while self.pos < self.s.len() && self.s[self.pos] != b'"' {
+            if self.s[self.pos] == b'\\' {
+                return Err("escape sequences are not part of the snapshot format".into());
+            }
+            self.pos += 1;
+        }
+        if self.pos >= self.s.len() {
+            return Err("unterminated string in bench snapshot".into());
+        }
+        let out = String::from_utf8_lossy(&self.s[start..self.pos]).into_owned();
+        self.pos += 1;
+        Ok(out)
+    }
+
+    fn number(&mut self) -> Result<f64> {
+        self.skip_ws();
+        let start = self.pos;
+        while self
+            .s
+            .get(self.pos)
+            .is_some_and(|&b| b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.pos += 1;
+        }
+        std::str::from_utf8(&self.s[start..self.pos])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .ok_or_else(|| format!("bad number at byte {start} of bench snapshot"))
+    }
+
+    fn boolean(&mut self) -> Result<bool> {
+        self.skip_ws();
+        if self.s[self.pos..].starts_with(b"true") {
+            self.pos += 4;
+            Ok(true)
+        } else if self.s[self.pos..].starts_with(b"false") {
+            self.pos += 5;
+            Ok(false)
+        } else {
+            Err(format!("expected a bool at byte {} of bench snapshot", self.pos))
+        }
+    }
+}
+
+/// Parse one bench snapshot. Unknown scalar keys (e.g. `"threads"`, the
+/// legacy flat `_ms` keys) are tolerated and ignored.
+pub fn parse_snapshot(src: &str) -> Result<Snapshot> {
+    let mut r = Reader::new(src);
+    let mut bench = None;
+    let mut quick = None;
+    let mut sections: Vec<(String, f64)> = Vec::new();
+    r.expect(b'{')?;
+    loop {
+        if r.peek() == Some(b'}') {
+            r.expect(b'}')?;
+            break;
+        }
+        let key = r.string()?;
+        r.expect(b':')?;
+        match (key.as_str(), r.peek()) {
+            ("bench", _) => bench = Some(r.string()?),
+            ("quick", _) => quick = Some(r.boolean()?),
+            ("sections", _) => {
+                r.expect(b'{')?;
+                loop {
+                    if r.peek() == Some(b'}') {
+                        r.expect(b'}')?;
+                        break;
+                    }
+                    let name = r.string()?;
+                    r.expect(b':')?;
+                    sections.push((name, r.number()?));
+                    if r.peek() == Some(b',') {
+                        r.expect(b',')?;
+                    }
+                }
+            }
+            (_, Some(b'"')) => {
+                r.string()?;
+            }
+            (_, Some(b't' | b'f')) => {
+                r.boolean()?;
+            }
+            _ => {
+                r.number()?;
+            }
+        }
+        if r.peek() == Some(b',') {
+            r.expect(b',')?;
+        }
+    }
+    Ok(Snapshot {
+        bench: bench.ok_or("bench snapshot has no \"bench\" key")?,
+        quick: quick.ok_or("bench snapshot has no \"quick\" key")?,
+        sections,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Comparison
+// ---------------------------------------------------------------------------
+
+/// Compare `candidate` against `baseline` with a relative `tolerance`
+/// (0.20 = fail on a > 20 % regression). See the module docs for which
+/// sections participate.
+pub fn compare(baseline: &Snapshot, candidate: &Snapshot, tolerance: f64) -> Result<Comparison> {
+    if baseline.bench != candidate.bench {
+        return Err(format!(
+            "bench mismatch: baseline is '{}', candidate is '{}'",
+            baseline.bench, candidate.bench
+        ));
+    }
+    let mut deltas = Vec::new();
+    let mut skipped = Vec::new();
+    for (name, base) in &baseline.sections {
+        let base = *base;
+        let lower_better = name.ends_with("_ms");
+        let higher_better = name.ends_with("_speedup");
+        if !lower_better && !higher_better {
+            skipped.push(format!("{name} (untyped section)"));
+            continue;
+        }
+        if lower_better && baseline.quick != candidate.quick {
+            skipped.push(format!("{name} (quick flags differ; wall-times not comparable)"));
+            continue;
+        }
+        let Some(cand) = candidate.get(name) else {
+            skipped.push(format!("{name} (absent from candidate)"));
+            continue;
+        };
+        if !(base > 0.0) || !(cand > 0.0) {
+            skipped.push(format!("{name} (non-positive value)"));
+            continue;
+        }
+        let ratio = if lower_better { cand / base } else { base / cand };
+        deltas.push(Delta {
+            section: name.clone(),
+            baseline: base,
+            candidate: cand,
+            ratio,
+            regression: ratio > 1.0 + tolerance,
+        });
+    }
+    for (name, _) in &candidate.sections {
+        if baseline.get(name).is_none() {
+            skipped.push(format!("{name} (new section, no baseline yet)"));
+        }
+    }
+    Ok(Comparison { deltas, skipped })
+}
+
+/// Self-test: prove the gate fires. Takes a real snapshot (or a synthetic
+/// one), seeds a regression 2× past the tolerance band into one `_ms` and
+/// one `_speedup` section, and requires `compare` to flag both — plus a
+/// clean copy to pass. Returns the human-readable proof lines.
+pub fn self_test(baseline: &Snapshot, tolerance: f64) -> Result<Vec<String>> {
+    let mut lines = Vec::new();
+    let clean = compare(baseline, baseline, tolerance)?;
+    if clean.regressions().count() != 0 {
+        return Err("self-test: an identical snapshot was flagged as a regression".into());
+    }
+    lines.push(format!(
+        "identical snapshots pass ({} sections compared)",
+        clean.deltas.len()
+    ));
+    let factor = 1.0 + 2.0 * tolerance;
+    for suffix in ["_ms", "_speedup"] {
+        let Some((name, base)) = baseline
+            .sections
+            .iter()
+            .find(|(n, v)| n.ends_with(suffix) && *v > 0.0)
+            .cloned()
+        else {
+            return Err(format!("self-test: baseline has no usable {suffix} section"));
+        };
+        let mut bad = baseline.clone();
+        for (n, v) in bad.sections.iter_mut() {
+            if *n == name {
+                // degrade: slower for _ms, smaller for _speedup
+                *v = if suffix == "_ms" { *v * factor } else { *v / factor };
+            }
+        }
+        let cmp = compare(baseline, &bad, tolerance)?;
+        let caught = cmp.regressions().any(|d| d.section == name);
+        if !caught {
+            return Err(format!(
+                "self-test: seeded {factor:.2}x regression in '{name}' was NOT caught — the gate is dead"
+            ));
+        }
+        lines.push(format!(
+            "seeded {factor:.2}x regression in '{name}' (base {base:.3}) caught"
+        ));
+    }
+    Ok(lines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(quick: bool, sections: &[(&str, f64)]) -> Snapshot {
+        Snapshot {
+            bench: "hotpath".into(),
+            quick,
+            sections: sections.iter().map(|&(n, v)| (n.to_string(), v)).collect(),
+        }
+    }
+
+    #[test]
+    fn parses_the_bench_emitter_format() {
+        let src = r#"{
+  "bench": "hotpath",
+  "quick": true,
+  "threads": 8,
+  "sections": {
+    "quantize_scalar_ms": 12.500,
+    "quantize_vector_ms": 3.125,
+    "quantize_simd_speedup": 4.000
+  }
+}
+"#;
+        let s = parse_snapshot(src).unwrap();
+        assert_eq!(s.bench, "hotpath");
+        assert!(s.quick);
+        assert_eq!(s.sections.len(), 3);
+        assert_eq!(s.get("quantize_vector_ms"), Some(3.125));
+        assert_eq!(s.get("missing"), None);
+    }
+
+    #[test]
+    fn flags_ms_and_speedup_regressions_only_past_tolerance() {
+        let base = snap(true, &[("a_ms", 10.0), ("b_speedup", 4.0)]);
+        // within band: 15% slower, 10% less speedup
+        let ok = snap(true, &[("a_ms", 11.5), ("b_speedup", 3.6)]);
+        let cmp = compare(&base, &ok, 0.20).unwrap();
+        assert_eq!(cmp.regressions().count(), 0, "{:?}", cmp.deltas);
+        // past band: 50% slower, 40% less speedup
+        let bad = snap(true, &[("a_ms", 15.0), ("b_speedup", 2.5)]);
+        let cmp = compare(&base, &bad, 0.20).unwrap();
+        let names: Vec<&str> = cmp.regressions().map(|d| d.section.as_str()).collect();
+        assert_eq!(names, ["a_ms", "b_speedup"]);
+        // improvements never fire
+        let good = snap(true, &[("a_ms", 5.0), ("b_speedup", 8.0)]);
+        assert_eq!(compare(&base, &good, 0.20).unwrap().regressions().count(), 0);
+    }
+
+    #[test]
+    fn quick_mismatch_skips_wall_times_but_keeps_ratios() {
+        let base = snap(false, &[("a_ms", 10.0), ("b_speedup", 4.0)]);
+        let cand = snap(true, &[("a_ms", 99.0), ("b_speedup", 1.0)]);
+        let cmp = compare(&base, &cand, 0.20).unwrap();
+        let names: Vec<&str> = cmp.deltas.iter().map(|d| d.section.as_str()).collect();
+        assert_eq!(names, ["b_speedup"], "only the ratio crosses quick modes");
+        assert!(cmp.deltas[0].regression);
+        assert!(cmp.skipped.iter().any(|s| s.starts_with("a_ms")));
+    }
+
+    #[test]
+    fn asymmetric_sections_are_skipped_not_fatal() {
+        let base = snap(true, &[("old_ms", 1.0), ("a_ms", 10.0)]);
+        let cand = snap(true, &[("a_ms", 10.0), ("new_ms", 2.0)]);
+        let cmp = compare(&base, &cand, 0.20).unwrap();
+        assert_eq!(cmp.deltas.len(), 1);
+        assert!(cmp.skipped.iter().any(|s| s.starts_with("old_ms")));
+        assert!(cmp.skipped.iter().any(|s| s.starts_with("new_ms")));
+    }
+
+    #[test]
+    fn bench_name_mismatch_is_an_error() {
+        let base = snap(true, &[("a_ms", 1.0)]);
+        let mut cand = base.clone();
+        cand.bench = "wirecodec".into();
+        assert!(compare(&base, &cand, 0.2).is_err());
+    }
+
+    #[test]
+    fn self_test_proves_the_gate_fires() {
+        let base = snap(true, &[("a_ms", 10.0), ("b_speedup", 4.0)]);
+        let lines = self_test(&base, 0.20).unwrap();
+        assert_eq!(lines.len(), 3, "{lines:?}");
+        // a gate with an absurd tolerance cannot catch the seeded 1.4x
+        // regression... but self_test seeds 2x past whatever band it gets,
+        // so it still fires. A baseline with no _speedup section errors.
+        let bad = snap(true, &[("a_ms", 10.0)]);
+        assert!(self_test(&bad, 0.20).is_err());
+    }
+}

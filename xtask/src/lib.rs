@@ -2,6 +2,7 @@
 //! this; the fixture tests under `xtask/tests/` exercise the same entry
 //! points the CI gate runs.
 
+pub mod bench;
 pub mod lexer;
 pub mod rules;
 

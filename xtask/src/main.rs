@@ -6,10 +6,19 @@
 //!   job; the README "Determinism contract" section is the human half of
 //!   the same contract.
 //! * `lint --rules` — print the rule table and exit.
+//! * `bench-delta --baseline <json> --candidate <json> [--tolerance 0.20]`
+//!   — the perf-regression gate: compare a fresh bench snapshot against
+//!   the committed baseline, exit 1 on any section past the tolerance
+//!   band (see `xtask/src/bench.rs` for the comparison rules). A missing
+//!   baseline file is a warning, not a failure, so the gate bootstraps
+//!   cleanly before the first snapshot is committed.
+//! * `bench-delta --self-test [--baseline <json>]` — seed a regression
+//!   past the band and require the gate to fire, proving it is live.
 
 use std::path::Path;
 use std::process::ExitCode;
 
+use xtask::bench;
 use xtask::rules::RULE_NAMES;
 
 const RULE_DOCS: &[(&str, &str)] = &[
@@ -49,11 +58,128 @@ fn main() -> ExitCode {
             ExitCode::SUCCESS
         }
         Some("lint") => run_lint(),
+        Some("bench-delta") => run_bench_delta(&args[1..]),
         _ => {
-            eprintln!("usage: cargo xtask lint [--rules]");
+            eprintln!(
+                "usage: cargo xtask lint [--rules]\n       cargo xtask bench-delta \
+                 --baseline <json> --candidate <json> [--tolerance 0.20] [--self-test]"
+            );
             ExitCode::FAILURE
         }
     }
+}
+
+/// Value of `--flag <value>` in `args`, if present.
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn run_bench_delta(args: &[String]) -> ExitCode {
+    let tolerance = match flag_value(args, "--tolerance").map(str::parse::<f64>) {
+        None => 0.20,
+        Some(Ok(t)) if t > 0.0 => t,
+        Some(_) => {
+            eprintln!("error: --tolerance wants a positive number (e.g. 0.20)");
+            return ExitCode::FAILURE;
+        }
+    };
+    let self_test = args.iter().any(|a| a == "--self-test");
+
+    let load = |path: &str| -> Result<bench::Snapshot, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+        bench::parse_snapshot(&src).map_err(|e| format!("{path}: {e}"))
+    };
+
+    if self_test {
+        // a provided baseline exercises the real file; otherwise a
+        // synthetic snapshot proves the comparator logic alone
+        let snap = match flag_value(args, "--baseline") {
+            Some(path) if Path::new(path).exists() => match load(path) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("error: {e}");
+                    return ExitCode::FAILURE;
+                }
+            },
+            _ => bench::Snapshot {
+                bench: "hotpath".into(),
+                quick: true,
+                sections: vec![
+                    ("quantize_vector_ms".into(), 3.125),
+                    ("dore_speedup".into(), 2.5),
+                ],
+            },
+        };
+        return match bench::self_test(&snap, tolerance) {
+            Ok(lines) => {
+                for l in lines {
+                    println!("bench-delta self-test: {l}");
+                }
+                println!("bench-delta self-test: the gate is live");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+
+    let (Some(base_path), Some(cand_path)) =
+        (flag_value(args, "--baseline"), flag_value(args, "--candidate"))
+    else {
+        eprintln!("usage: cargo xtask bench-delta --baseline <json> --candidate <json>");
+        return ExitCode::FAILURE;
+    };
+    if !Path::new(base_path).exists() {
+        // bootstrap mode: the gate arms itself the first time a baseline
+        // snapshot is committed (needs a many-core toolchain box)
+        println!(
+            "bench-delta: no baseline at {base_path} — skipping the gate (commit a snapshot \
+             from `cargo bench --bench hotpath -- --quick --json {base_path}` to arm it)"
+        );
+        return ExitCode::SUCCESS;
+    }
+    let (base, cand) = match (load(base_path), load(cand_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let cmp = match bench::compare(&base, &cand, tolerance) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    println!(
+        "bench-delta: {} vs {} (tolerance {:.0}%)",
+        base_path,
+        cand_path,
+        tolerance * 100.0
+    );
+    for d in &cmp.deltas {
+        let verdict = if d.regression { "REGRESSED" } else { "ok" };
+        println!(
+            "  {:<28} base {:>10.3}  cand {:>10.3}  x{:.3}  {}",
+            d.section, d.baseline, d.candidate, d.ratio, verdict
+        );
+    }
+    for s in &cmp.skipped {
+        println!("  skipped: {s}");
+    }
+    let bad = cmp.regressions().count();
+    if bad > 0 {
+        eprintln!(
+            "error: {bad} bench section(s) regressed past the {:.0}% band",
+            tolerance * 100.0
+        );
+        return ExitCode::FAILURE;
+    }
+    println!("bench-delta: clean ({} sections compared)", cmp.deltas.len());
+    ExitCode::SUCCESS
 }
 
 fn run_lint() -> ExitCode {

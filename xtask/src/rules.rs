@@ -25,7 +25,8 @@ const FLOAT_FOLD_FILE_ALLOWLIST: &[&str] = &["rust/src/engine/reduce.rs"];
 
 /// Modules permitted to contain `unsafe` at all (each block still needs a
 /// `// SAFETY:` comment within [`SAFETY_COMMENT_SPAN`] lines above it).
-const UNSAFE_MODULE_ALLOWLIST: &[&str] = &["rust/src/runtime/lm.rs"];
+const UNSAFE_MODULE_ALLOWLIST: &[&str] =
+    &["rust/src/runtime/lm.rs", "rust/src/engine/pool.rs"];
 const SAFETY_COMMENT_SPAN: usize = 12;
 
 pub const RULE_NAMES: &[&str] =
