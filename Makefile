@@ -23,6 +23,7 @@ test-rust:
 	  --test proptest_pipeline --test proptest_reduce --test proptest_fault \
 	  --test proptest_fastest --test proptest_simd \
 	  --test proptest_codec_entropy --test adversarial_codec \
+	  --test proptest_reactor --test scale_smoke \
 	  --test golden_series
 
 # Regenerate the golden trajectory baseline (rust/tests/golden/series.txt)

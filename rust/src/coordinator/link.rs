@@ -1,23 +1,23 @@
-//! Link layer: per-connection machinery shared by every socket-moving
-//! coordinator — nonblocking reads with a reassembly buffer, a dedicated
-//! downlink writer thread per connection, and the buffered blocking read
-//! used by drain/handshake paths. The frames themselves are the versioned
-//! [`crate::engine::protocol`] wire format; this module owns *how* they
-//! cross one socket, never *what* they mean — sequencing and semantics
-//! stay in [`super::tcp`] (master) and [`super::worker`] (worker).
+//! Link layer: the worker-side view of one master connection. The frames
+//! themselves are the versioned [`crate::engine::protocol`] wire format;
+//! this module owns *how* they cross one blocking socket, never *what*
+//! they mean — sequencing and semantics stay in [`super::worker`].
 //!
-//! Everything here is deadline-free by design: reads are either
-//! nonblocking ([`conn_try_read`], the master's poll loop supplies its own
-//! deadline) or bounded by a plain socket read timeout set by the caller.
-//! That keeps the link layer inside the determinism lint without a single
+//! The master side no longer lives here: every master-side socket —
+//! reassembly buffers, buffered nonblocking writes, readiness dispatch —
+//! is owned by the single reactor in [`super::reactor`], driven from
+//! [`super::tcp`]. There are no per-connection threads anywhere on the
+//! master anymore (the old `Conn` + downlink-writer-thread pair this
+//! module used to host is gone).
+//!
+//! Everything here is deadline-free by design: the blocking reads are
+//! bounded only by whatever socket read timeout the caller set. That
+//! keeps the link layer inside the determinism lint without a single
 //! `lint:allow`.
 
-use crate::engine::protocol::{read_frame, take_frame, write_frame, DownlinkMsg, Frame, FrameKind};
+use crate::engine::protocol::{read_frame, write_frame, Frame, FrameKind};
 use crate::engine::transport::WorkerLink;
-use std::io::{ErrorKind, Read};
 use std::net::TcpStream;
-use std::sync::mpsc::{Receiver, SyncSender};
-use std::thread::JoinHandle;
 
 /// [`WorkerLink`] over one blocking socket: downlinks are read off the
 /// same stream uplinks are written to. Frames move as raw payload bytes —
@@ -60,116 +60,5 @@ impl WorkerLink for SocketLink<'_> {
                 payload: bytes,
             },
         )
-    }
-}
-
-/// One live master-side connection: the nonblocking read half with its
-/// reassembly buffer, plus the writer thread feeding the write half.
-pub(crate) struct Conn {
-    pub(crate) sock: TcpStream,
-    pub(crate) buf: Vec<u8>,
-    pub(crate) writer_tx: Option<SyncSender<DownlinkMsg>>,
-    pub(crate) writer: Option<JoinHandle<anyhow::Result<()>>>,
-}
-
-/// Wire up a connection: clone the socket for the writer thread and bound
-/// its feeding channel at the pipeline depth (a worker that keeps
-/// consuming downlinks never backs the master up, while a wedged fleet
-/// exerts backpressure instead of queueing the whole run's broadcasts).
-pub(crate) fn spawn_conn(sock: TcpStream, id: usize, depth: usize) -> anyhow::Result<Conn> {
-    let w = sock.try_clone()?;
-    let (tx, rx) = std::sync::mpsc::sync_channel::<DownlinkMsg>(depth);
-    let writer = std::thread::Builder::new()
-        .name(format!("dore-link-down-{id}"))
-        .spawn(move || downlink_writer(w, rx))?;
-    Ok(Conn { sock, buf: Vec::new(), writer_tx: Some(tx), writer: Some(writer) })
-}
-
-/// Flush-and-join a connection's writer (its broken-pipe exit is an
-/// expected fault path) and drop the socket.
-pub(crate) fn close_conn(mut conn: Conn) {
-    conn.writer_tx = None;
-    if let Some(h) = conn.writer.take() {
-        let _ = h.join();
-    }
-}
-
-/// The per-connection downlink writer: drains queued broadcasts onto its
-/// write half of the socket so the master's read loop never blocks on a
-/// full send buffer (the depth ≥ 2 deadlock guard — see the
-/// [`super::tcp`] module docs). Exits when the master drops its sender
-/// (remaining queued frames are flushed first) or when the peer vanishes
-/// mid-write — a rejoining replacement gets a fresh writer plus a model
-/// sync, so a broken pipe here is an expected fault, not an error.
-fn downlink_writer(mut sock: TcpStream, rx: Receiver<DownlinkMsg>) -> anyhow::Result<()> {
-    while let Ok(m) = rx.recv() {
-        let frame = Frame {
-            kind: FrameKind::Downlink,
-            round: m.round as u32,
-            worker: 0,
-            residual: 0.0,
-            payload: m.bytes,
-        };
-        if write_frame(&mut sock, &frame).is_err() {
-            return Ok(());
-        }
-    }
-    Ok(())
-}
-
-/// One nonblocking read attempt's outcome.
-pub(crate) enum SockRead {
-    Frame(Frame),
-    WouldBlock,
-    Lost,
-}
-
-/// Pull at most one complete frame off a nonblocking connection,
-/// buffering partial bytes in the reassembly buffer across calls. EOF,
-/// reset and broken-pipe are all `Lost` (the connection-fault path);
-/// anything else is a real error.
-pub(crate) fn conn_try_read(conn: &mut Conn) -> anyhow::Result<SockRead> {
-    loop {
-        if let Some(f) = take_frame(&mut conn.buf)? {
-            return Ok(SockRead::Frame(f));
-        }
-        let mut chunk = [0u8; 16384];
-        match conn.sock.read(&mut chunk) {
-            Ok(0) => return Ok(SockRead::Lost),
-            Ok(k) => conn.buf.extend_from_slice(&chunk[..k]),
-            Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(SockRead::WouldBlock),
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    ErrorKind::ConnectionReset
-                        | ErrorKind::ConnectionAborted
-                        | ErrorKind::BrokenPipe
-                ) =>
-            {
-                return Ok(SockRead::Lost)
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-}
-
-/// Blocking read of the next frame through an existing reassembly buffer:
-/// frames already (partially) buffered by earlier nonblocking reads are
-/// drained first, then the socket is read blockingly. Used by drain and
-/// handshake paths on sockets switched back to blocking mode; bound the
-/// wait with `sock.set_read_timeout` at the call site.
-pub(crate) fn read_frame_buffered(conn: &mut Conn) -> anyhow::Result<Frame> {
-    loop {
-        if let Some(f) = take_frame(&mut conn.buf)? {
-            return Ok(f);
-        }
-        let mut chunk = [0u8; 16384];
-        match conn.sock.read(&mut chunk) {
-            Ok(0) => anyhow::bail!("connection closed mid-frame"),
-            Ok(k) => conn.buf.extend_from_slice(&chunk[..k]),
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e.into()),
-        }
     }
 }

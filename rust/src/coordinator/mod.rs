@@ -11,13 +11,17 @@
 //! * [`protocol`] — the **one** versioned wire format every byte-moving
 //!   transport speaks (re-exported from [`crate::engine::protocol`]):
 //!   frame header + kinds, hello/sync/drain bodies, masked downlinks;
-//! * `link` (crate-private) — per-connection machinery: nonblocking
-//!   reassembly, downlink writer threads, the socket `WorkerLink`;
+//! * `link` (crate-private) — the worker-side socket `WorkerLink` (one
+//!   blocking stream per worker process);
+//! * [`reactor`] — the master's single readiness-driven event loop: a
+//!   hand-rolled epoll poller, slab-keyed connections with reassembly
+//!   buffers and buffered nonblocking writes — no per-worker threads;
 //! * [`worker`] — the worker side: registration handshake, round schedule,
 //!   drain; [`worker::run_remote_worker`] is the `dore-worker` binary's
 //!   entry point;
 //! * [`tcp`] — [`tcp::TcpTransport`], the master: local worker threads or
-//!   an external multi-host fleet (`TcpTransport::bind`);
+//!   an external multi-host fleet (`TcpTransport::bind`), all sockets
+//!   multiplexed onto the one reactor;
 //! * [`checkpoint`] — master-model snapshots with integrity checksums.
 //!
 //! The pre-engine `run_distributed(_blocking)` shims were removed once
@@ -28,6 +32,7 @@
 
 pub mod checkpoint;
 pub(crate) mod link;
+pub mod reactor;
 pub mod tcp;
 pub mod worker;
 

@@ -1,0 +1,1272 @@
+//! A single-threaded readiness reactor for the socket master: one
+//! `epoll`-backed [`Poller`] owns every connection, [`Slab`]-allocated
+//! per-connection state pairs a zero-copy reassembly buffer ([`RecvBuf`])
+//! with a nonblocking write queue ([`SendQueue`]), and [`Reactor`] ties
+//! them together behind an event API ([`IoEvent`]). This is what lets one
+//! coordinator drive 10,000+ workers without a single per-connection
+//! thread — the master's old thread-per-socket reader/writer pairs (see
+//! the git history of `coordinator/link.rs`) died at fleet scale.
+//!
+//! Dependency discipline mirrors `xtask`: no `mio`, no `tokio`, no `libc`
+//! crate — the four epoll syscalls are declared by hand, and every other
+//! platform falls back to a pure-`std` "all ready" poller that reports
+//! every registered connection as readable+writable after a short sleep.
+//! Because all I/O here is nonblocking, a spurious-readiness superset is
+//! *correct* (reads return `WouldBlock`, writes flush nothing) — it only
+//! costs wakeups, and it doubles as a permanent all-spurious-wakeup
+//! torture test for the frame reassembly state machines.
+//!
+//! Determinism: readiness order never feeds the trajectory. The master
+//! assembles uplinks into round-keyed slots and closes each round's
+//! barrier on a *count* (or, under `fastest:k`, records arrival order as
+//! data — the realized mask), so the trained iterates are bit-identical
+//! to the threaded and in-process transports. Wall-clock here only bounds
+//! waits (each site carries a wall-clock lint allow), exactly like the
+//! blocking master it replaced.
+
+use crate::engine::protocol::{parse_frame_header, Frame, FrameHeader, HEADER_BYTES, MAX_PAYLOAD};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+// lint:allow(wall_clock, deadlines bound teardown flushes only; never the trajectory)
+use std::time::Instant;
+
+#[cfg(unix)]
+use std::os::fd::{AsRawFd, RawFd};
+
+/// Fallback fd alias for non-unix targets: the pure-`std` poller never
+/// dereferences fds, it only needs the registration calls to typecheck.
+#[cfg(not(unix))]
+type RawFd = i32;
+#[cfg(not(unix))]
+trait AsRawFd {
+    fn as_raw_fd(&self) -> RawFd {
+        0
+    }
+}
+#[cfg(not(unix))]
+impl AsRawFd for TcpStream {}
+#[cfg(not(unix))]
+impl AsRawFd for TcpListener {}
+
+// ---------------------------------------------------------------------------
+// Slab: token-stable O(1) storage for per-connection state.
+// ---------------------------------------------------------------------------
+
+/// A slab allocator over `Vec<Option<T>>` with a free list: insertion
+/// returns a dense `usize` token that stays valid (and is never handed to
+/// another entry) until removal, after which the slot is recycled.
+/// Deterministic by construction — iteration is index order, tokens are
+/// allocated lowest-free-first.
+pub struct Slab<T> {
+    entries: Vec<Option<T>>,
+    free: Vec<usize>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Slab<T> {
+    pub fn new() -> Self {
+        Slab { entries: Vec::new(), free: Vec::new(), len: 0 }
+    }
+
+    /// Insert, returning the entry's token (lowest recycled slot first).
+    pub fn insert(&mut self, value: T) -> usize {
+        self.len += 1;
+        match self.free.pop() {
+            Some(key) => {
+                debug_assert!(self.entries[key].is_none());
+                self.entries[key] = Some(value);
+                key
+            }
+            None => {
+                self.entries.push(Some(value));
+                self.entries.len() - 1
+            }
+        }
+    }
+
+    pub fn remove(&mut self, key: usize) -> Option<T> {
+        let v = self.entries.get_mut(key)?.take()?;
+        self.len -= 1;
+        self.free.push(key);
+        Some(v)
+    }
+
+    pub fn get(&self, key: usize) -> Option<&T> {
+        self.entries.get(key)?.as_ref()
+    }
+
+    pub fn get_mut(&mut self, key: usize) -> Option<&mut T> {
+        self.entries.get_mut(key)?.as_mut()
+    }
+
+    pub fn contains(&self, key: usize) -> bool {
+        self.entries.get(key).is_some_and(|e| e.is_some())
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Live `(token, &entry)` pairs in token order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &T)> {
+        self.entries.iter().enumerate().filter_map(|(k, e)| e.as_ref().map(|v| (k, v)))
+    }
+
+    /// Live `(token, &mut entry)` pairs in token order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (usize, &mut T)> {
+        self.entries.iter_mut().enumerate().filter_map(|(k, e)| e.as_mut().map(|v| (k, v)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Poller: level-triggered readiness over epoll, with a pure-std fallback.
+// ---------------------------------------------------------------------------
+
+/// One readiness report. `readable` folds in hangup/error conditions — a
+/// read on the fd will resolve them (EOF or a hard error), which is how
+/// the reactor discovers dead peers without a separate teardown path.
+#[derive(Clone, Copy, Debug)]
+pub struct PollEvent {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! Hand-declared epoll + rlimit bindings (no `libc` crate in this
+    //! container; same zero-dep discipline as `xtask`). Constants and
+    //! layouts are the Linux UAPI ones, fixed since 2.6.
+
+    pub const EPOLLIN: u32 = 0x1;
+    pub const EPOLLOUT: u32 = 0x4;
+    pub const EPOLLERR: u32 = 0x8;
+    pub const EPOLLHUP: u32 = 0x10;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+    pub const EPOLL_CTL_ADD: i32 = 1;
+    pub const EPOLL_CTL_DEL: i32 = 2;
+    pub const EPOLL_CTL_MOD: i32 = 3;
+    pub const EPOLL_CLOEXEC: i32 = 0x80000;
+    pub const RLIMIT_NOFILE: i32 = 7;
+
+    /// `struct epoll_event`. The kernel ABI packs it on x86-64 (12 bytes,
+    /// `__EPOLL_PACKED`); other architectures use natural alignment —
+    /// mirroring glibc exactly. Fields are only ever read *by value*
+    /// (never by reference), which is sound for packed structs.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    #[repr(C)]
+    pub struct RLimit {
+        pub cur: u64,
+        pub max: u64,
+    }
+
+    extern "C" {
+        pub fn epoll_create1(flags: i32) -> i32;
+        pub fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        pub fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32)
+            -> i32;
+        pub fn close(fd: i32) -> i32;
+        pub fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+        pub fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    }
+}
+
+/// Level-triggered readiness poller. On Linux this is one epoll instance
+/// (O(ready) wakeups — the property that makes a 10k-connection master's
+/// per-wake work independent of fleet size); elsewhere it is a pure-`std`
+/// all-ready superset poller (see the module docs for why that is
+/// correct, if busier).
+#[cfg(target_os = "linux")]
+pub struct Poller {
+    epfd: i32,
+    /// Scratch buffer reused across `wait` calls.
+    events: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl Poller {
+    pub fn new() -> anyhow::Result<Poller> {
+        // SAFETY: epoll_create1 takes no pointers; the returned fd is
+        // owned by this Poller and closed exactly once, in Drop.
+        let epfd = unsafe { sys::epoll_create1(sys::EPOLL_CLOEXEC) };
+        anyhow::ensure!(epfd >= 0, "epoll_create1 failed: {}", std::io::Error::last_os_error());
+        Ok(Poller { epfd, events: Vec::with_capacity(1024) })
+    }
+
+    fn interest(writable: bool) -> u32 {
+        let mut ev = sys::EPOLLIN | sys::EPOLLRDHUP;
+        if writable {
+            ev |= sys::EPOLLOUT;
+        }
+        ev
+    }
+
+    fn ctl(&mut self, op: i32, fd: RawFd, token: usize, writable: bool) -> anyhow::Result<()> {
+        let mut ev = sys::EpollEvent { events: Self::interest(writable), data: token as u64 };
+        // SAFETY: `ev` outlives the call; the kernel copies it before
+        // returning. `fd` is a live socket owned by the caller.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, op, fd, &mut ev) };
+        anyhow::ensure!(
+            rc == 0,
+            "epoll_ctl(op {op}, fd {fd}) failed: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(())
+    }
+
+    /// Start watching `fd` under `token`; `writable` arms EPOLLOUT too.
+    pub fn register(&mut self, fd: RawFd, token: usize, writable: bool) -> anyhow::Result<()> {
+        self.ctl(sys::EPOLL_CTL_ADD, fd, token, writable)
+    }
+
+    /// Re-arm an already-registered fd (toggle write interest).
+    pub fn rearm(&mut self, fd: RawFd, token: usize, writable: bool) -> anyhow::Result<()> {
+        self.ctl(sys::EPOLL_CTL_MOD, fd, token, writable)
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> anyhow::Result<()> {
+        let mut ev = sys::EpollEvent { events: 0, data: 0 };
+        // SAFETY: pre-2.6.9 kernels required a non-null event pointer for
+        // EPOLL_CTL_DEL; passing one is harmless everywhere else.
+        let rc = unsafe { sys::epoll_ctl(self.epfd, sys::EPOLL_CTL_DEL, fd, &mut ev) };
+        anyhow::ensure!(
+            rc == 0,
+            "epoll_ctl(DEL, fd {fd}) failed: {}",
+            std::io::Error::last_os_error()
+        );
+        Ok(())
+    }
+
+    /// Wait up to `timeout` and append readiness reports to `out`.
+    pub fn wait(&mut self, timeout: Duration, out: &mut Vec<PollEvent>) -> anyhow::Result<()> {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as i32;
+        self.events.clear();
+        let cap = self.events.capacity().max(64) as i32;
+        loop {
+            // SAFETY: the pointer/len pair is the scratch Vec's spare
+            // capacity; `n` entries are initialized by the kernel before
+            // set_len, and n ≤ cap ≤ capacity.
+            let n = unsafe {
+                let n = sys::epoll_wait(self.epfd, self.events.as_mut_ptr(), cap, ms);
+                if n > 0 {
+                    self.events.set_len(n as usize);
+                }
+                n
+            };
+            if n >= 0 {
+                break;
+            }
+            let err = std::io::Error::last_os_error();
+            if err.kind() != ErrorKind::Interrupted {
+                anyhow::bail!("epoll_wait failed: {err}");
+            }
+        }
+        for ev in &self.events {
+            // copy packed fields by value (never by reference)
+            let bits = { *ev }.events;
+            let token = { *ev }.data as usize;
+            out.push(PollEvent {
+                token,
+                readable: bits & (sys::EPOLLIN | sys::EPOLLRDHUP | sys::EPOLLHUP | sys::EPOLLERR)
+                    != 0,
+                writable: bits & (sys::EPOLLOUT | sys::EPOLLHUP | sys::EPOLLERR) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for Poller {
+    fn drop(&mut self) {
+        // SAFETY: epfd was returned by epoll_create1 and closed only here.
+        unsafe {
+            sys::close(self.epfd);
+        }
+    }
+}
+
+/// Pure-`std` fallback poller for non-Linux targets: after a short sleep,
+/// report every registered fd as readable and writable. A strict superset
+/// of true readiness — correct because all reactor I/O is nonblocking.
+#[cfg(not(target_os = "linux"))]
+pub struct Poller {
+    /// `(token, writable)` in registration order.
+    registered: Vec<(usize, bool)>,
+}
+
+#[cfg(not(target_os = "linux"))]
+impl Poller {
+    pub fn new() -> anyhow::Result<Poller> {
+        Ok(Poller { registered: Vec::new() })
+    }
+
+    pub fn register(&mut self, _fd: RawFd, token: usize, writable: bool) -> anyhow::Result<()> {
+        self.registered.push((token, writable));
+        Ok(())
+    }
+
+    pub fn rearm(&mut self, _fd: RawFd, token: usize, writable: bool) -> anyhow::Result<()> {
+        for e in self.registered.iter_mut() {
+            if e.0 == token {
+                e.1 = writable;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn deregister_token(&mut self, token: usize) {
+        self.registered.retain(|e| e.0 != token);
+    }
+
+    pub fn wait(&mut self, timeout: Duration, out: &mut Vec<PollEvent>) -> anyhow::Result<()> {
+        std::thread::sleep(timeout.min(Duration::from_micros(500)));
+        for &(token, writable) in &self.registered {
+            out.push(PollEvent { token, readable: true, writable });
+        }
+        Ok(())
+    }
+}
+
+/// Raise `RLIMIT_NOFILE` toward `want` file descriptors (best effort,
+/// Linux only) and return the resulting soft limit. The 10k-connection
+/// smoke calls this first and clamps its fleet to what it actually got.
+#[cfg(target_os = "linux")]
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let mut rl = sys::RLimit { cur: 0, max: 0 };
+    // SAFETY: getrlimit writes the two-word struct we pass; setrlimit
+    // reads the one we pass; neither retains the pointer.
+    unsafe {
+        if sys::getrlimit(sys::RLIMIT_NOFILE, &mut rl) != 0 {
+            return 1024;
+        }
+        if rl.cur >= want {
+            return rl.cur;
+        }
+        let raised = sys::RLimit { cur: want.max(rl.cur), max: rl.max.max(want) };
+        if sys::setrlimit(sys::RLIMIT_NOFILE, &raised) == 0 {
+            return raised.cur;
+        }
+        // raising the hard limit needs privilege; settle for the hard cap
+        let capped = sys::RLimit { cur: rl.max, max: rl.max };
+        if sys::setrlimit(sys::RLIMIT_NOFILE, &capped) == 0 {
+            return rl.max;
+        }
+        rl.cur
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub fn raise_nofile_limit(_want: u64) -> u64 {
+    1024
+}
+
+// ---------------------------------------------------------------------------
+// RecvBuf: zero-copy frame reassembly off a nonblocking stream.
+// ---------------------------------------------------------------------------
+
+/// Outcome of one [`RecvBuf::try_frame`] attempt.
+pub enum RecvStep {
+    /// A complete frame was assembled.
+    Frame(Frame),
+    /// The peer has nothing more to say right now.
+    WouldBlock,
+    /// EOF / reset / broken pipe — the connection-fault path.
+    Closed,
+}
+
+enum RecvState {
+    /// Accumulating the fixed 24 header bytes.
+    Header { buf: [u8; HEADER_BYTES], have: usize },
+    /// Header parsed; reading `payload_len` bytes **directly into the
+    /// buffer the frame hands to its decoder** — no intermediate
+    /// reassembly `Vec`, no post-hoc payload copy.
+    Payload { head: FrameHeader, buf: Vec<u8>, have: usize },
+}
+
+/// Per-connection reassembly state machine: feeds itself from a
+/// nonblocking `Read` in whatever chunk sizes the kernel delivers, and
+/// yields complete frames. Replaces the old grow-only `Vec` +
+/// `take_frame` pair — the payload is read once, into its final buffer.
+pub struct RecvBuf {
+    state: RecvState,
+    /// Per-connection payload cap. Pre-registration connections get a
+    /// small cap so an unauthenticated peer cannot demand a 1 GiB
+    /// allocation with a forged length field; the cap is lifted to
+    /// [`MAX_PAYLOAD`] once the hello validates.
+    cap: usize,
+}
+
+impl RecvBuf {
+    pub fn new(cap: usize) -> Self {
+        RecvBuf { state: RecvState::Header { buf: [0; HEADER_BYTES], have: 0 }, cap }
+    }
+
+    /// Lift (or lower) the payload cap — e.g. after a validated hello.
+    pub fn set_cap(&mut self, cap: usize) {
+        self.cap = cap.min(MAX_PAYLOAD);
+    }
+
+    /// Pull bytes from `r` until a frame completes, the stream would
+    /// block, or the peer is gone. Protocol errors (bad magic, version
+    /// skew, an over-cap length) surface as `Err`.
+    pub fn try_frame<R: Read>(&mut self, r: &mut R) -> anyhow::Result<RecvStep> {
+        let cap = self.cap;
+        loop {
+            match &mut self.state {
+                RecvState::Header { buf, have } => {
+                    match r.read(&mut buf[*have..]) {
+                        Ok(0) => return Ok(RecvStep::Closed),
+                        Ok(k) => *have += k,
+                        Err(e) => match Self::classify(e)? {
+                            Some(step) => return Ok(step),
+                            None => continue,
+                        },
+                    }
+                    if *have < HEADER_BYTES {
+                        continue;
+                    }
+                    let head = parse_frame_header(buf)?;
+                    anyhow::ensure!(
+                        head.payload_len <= cap,
+                        "frame payload length {} exceeds this connection's {}-byte receive \
+                         cap (unregistered peers may only send hellos)",
+                        head.payload_len,
+                        cap
+                    );
+                    if head.payload_len == 0 {
+                        self.state = RecvState::Header { buf: [0; HEADER_BYTES], have: 0 };
+                        return Ok(RecvStep::Frame(Self::complete(head, Vec::new())));
+                    }
+                    self.state =
+                        RecvState::Payload { head, buf: vec![0u8; head.payload_len], have: 0 };
+                }
+                RecvState::Payload { head, buf, have } => {
+                    match r.read(&mut buf[*have..]) {
+                        Ok(0) => return Ok(RecvStep::Closed),
+                        Ok(k) => *have += k,
+                        Err(e) => match Self::classify(e)? {
+                            Some(step) => return Ok(step),
+                            None => continue,
+                        },
+                    }
+                    if *have < buf.len() {
+                        continue;
+                    }
+                    let head = *head;
+                    let payload = std::mem::take(buf);
+                    self.state = RecvState::Header { buf: [0; HEADER_BYTES], have: 0 };
+                    return Ok(RecvStep::Frame(Self::complete(head, payload)));
+                }
+            }
+        }
+    }
+
+    /// Blocking companion for drain/handshake paths: the caller bounds the
+    /// wait with `set_read_timeout` on the (blocking-mode) socket.
+    pub fn read_frame_blocking<R: Read>(&mut self, r: &mut R) -> anyhow::Result<Frame> {
+        loop {
+            match self.try_frame(r)? {
+                RecvStep::Frame(f) => return Ok(f),
+                // a blocking socket only reports WouldBlock on timeout
+                RecvStep::WouldBlock => anyhow::bail!("timed out waiting for a frame"),
+                RecvStep::Closed => anyhow::bail!("connection closed mid-frame"),
+            }
+        }
+    }
+
+    /// Map an I/O error to a step (`Some`), a retry (`None`), or a real
+    /// error. EOF-ish conditions are `Closed` — the fault path, not a
+    /// failure of the master.
+    fn classify(e: std::io::Error) -> anyhow::Result<Option<RecvStep>> {
+        match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => Ok(Some(RecvStep::WouldBlock)),
+            ErrorKind::Interrupted => Ok(None),
+            ErrorKind::ConnectionReset | ErrorKind::ConnectionAborted | ErrorKind::BrokenPipe => {
+                Ok(Some(RecvStep::Closed))
+            }
+            _ => Err(e.into()),
+        }
+    }
+
+    fn complete(head: FrameHeader, payload: Vec<u8>) -> Frame {
+        Frame {
+            kind: head.kind,
+            round: head.round,
+            worker: head.worker,
+            residual: head.residual,
+            payload,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SendQueue: nonblocking buffered writes, shared broadcast payloads.
+// ---------------------------------------------------------------------------
+
+/// A queued frame's payload: owned bytes for per-peer frames (sync
+/// replies, rejections), or a refcounted slice for broadcasts — one
+/// downlink payload is shared by every connection's queue instead of
+/// being cloned `n` times.
+#[derive(Clone)]
+pub enum SendPayload {
+    Owned(Vec<u8>),
+    Shared(Arc<[u8]>),
+}
+
+impl SendPayload {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            SendPayload::Owned(v) => v,
+            SendPayload::Shared(a) => a,
+        }
+    }
+}
+
+struct QueuedFrame {
+    header: [u8; HEADER_BYTES],
+    payload: SendPayload,
+    /// Write progress across header + payload.
+    off: usize,
+}
+
+/// Outcome of one [`SendQueue::flush`] attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlushStatus {
+    /// Everything queued has hit the socket.
+    Clean,
+    /// The socket would block; re-flush on the next writability report.
+    Pending,
+    /// The peer is gone (any write error — the fault path).
+    Closed,
+}
+
+/// Per-connection nonblocking write queue: frames are queued as a header
+/// array plus a payload slice (the writev split — the payload is written
+/// straight from its original, possibly shared, buffer) and drained
+/// whenever the socket reports writable. Replaces the per-connection
+/// downlink writer thread.
+#[derive(Default)]
+pub struct SendQueue {
+    q: VecDeque<QueuedFrame>,
+    buffered: usize,
+}
+
+impl SendQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push_frame(&mut self, header: [u8; HEADER_BYTES], payload: SendPayload) {
+        self.buffered += HEADER_BYTES + payload.as_slice().len();
+        self.q.push_back(QueuedFrame { header, payload, off: 0 });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// Bytes queued but not yet written.
+    pub fn buffered_bytes(&self) -> usize {
+        self.buffered
+    }
+
+    /// Write as much queued data as the socket accepts right now.
+    pub fn flush<W: Write>(&mut self, w: &mut W) -> FlushStatus {
+        while let Some(front) = self.q.front_mut() {
+            let payload = front.payload.as_slice();
+            let total = HEADER_BYTES + payload.len();
+            while front.off < total {
+                let res = if front.off < HEADER_BYTES {
+                    w.write(&front.header[front.off..])
+                } else {
+                    w.write(&payload[front.off - HEADER_BYTES..])
+                };
+                match res {
+                    Ok(0) => return FlushStatus::Closed,
+                    Ok(k) => {
+                        front.off += k;
+                        self.buffered -= k;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => return FlushStatus::Pending,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    // reset / broken pipe / anything else: the peer is
+                    // gone — an expected fault, mirrored on the old
+                    // writer thread's broken-pipe exit
+                    Err(_) => return FlushStatus::Closed,
+                }
+            }
+            self.q.pop_front();
+        }
+        FlushStatus::Clean
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reactor: poller + slab of connections + the event API.
+// ---------------------------------------------------------------------------
+
+/// The listener's reserved token (connections use slab tokens, which are
+/// dense and can never reach this value).
+pub const LISTENER_TOKEN: usize = usize::MAX;
+
+/// Default pre-registration payload cap: hellos are 16 bytes; anything
+/// claiming more before it authenticates is hostile or lost.
+pub const PRE_HELLO_CAP: usize = 4096;
+
+struct Conn {
+    sock: TcpStream,
+    recv: RecvBuf,
+    send: SendQueue,
+    /// EPOLLOUT currently armed.
+    want_write: bool,
+    /// Close once the send queue drains (stop reading meanwhile) — used
+    /// for rejection replies that should reach the peer before the drop.
+    closing: bool,
+}
+
+/// One I/O cycle's observations, in readiness order.
+pub enum IoEvent {
+    /// The listener produced a new connection (already registered, under
+    /// the returned token, with the pre-hello receive cap).
+    Accepted(usize),
+    /// A complete frame arrived on `token`.
+    Frame { token: usize, frame: Frame },
+    /// The peer on `token` is gone (EOF/reset, or a send hit a dead
+    /// socket). The connection has already been dropped.
+    Closed(usize),
+    /// The peer on `token` violated the protocol (bad magic, version
+    /// skew, over-cap length). The connection has already been dropped;
+    /// the caller decides whether that fails the run.
+    Bad { token: usize, error: anyhow::Error },
+}
+
+/// One readiness-driven event loop owning every master-side socket: the
+/// listener plus a [`Slab`] of connections, each pairing a [`RecvBuf`]
+/// with a [`SendQueue`]. All sockets are nonblocking; `poll_io` turns
+/// readiness into [`IoEvent`]s and opportunistically drains write queues.
+/// Protocol semantics (what a frame *means*) stay with the caller.
+pub struct Reactor {
+    poller: Poller,
+    conns: Slab<Conn>,
+    listener: Option<TcpListener>,
+    /// Scratch readiness buffer reused across polls.
+    scratch: Vec<PollEvent>,
+}
+
+impl Reactor {
+    pub fn new() -> anyhow::Result<Self> {
+        Ok(Reactor {
+            poller: Poller::new()?,
+            conns: Slab::new(),
+            listener: None,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Adopt (and register) the accept listener.
+    pub fn listen(&mut self, listener: TcpListener) -> anyhow::Result<()> {
+        listener.set_nonblocking(true)?;
+        self.poller.register(listener.as_raw_fd(), LISTENER_TOKEN, false)?;
+        self.listener = Some(listener);
+        Ok(())
+    }
+
+    /// Stop accepting: deregister and drop the listener. Reconnects are
+    /// refused from here on — the teardown barrier.
+    pub fn unlisten(&mut self) {
+        if let Some(l) = self.listener.take() {
+            #[cfg(target_os = "linux")]
+            let _ = self.poller.deregister(l.as_raw_fd());
+            #[cfg(not(target_os = "linux"))]
+            self.poller.deregister_token(LISTENER_TOKEN);
+            drop(l);
+        }
+    }
+
+    /// Adopt an established socket: nonblocking, nodelay, registered for
+    /// reads, pre-hello receive cap. Returns its token.
+    pub fn add(&mut self, sock: TcpStream) -> anyhow::Result<usize> {
+        sock.set_nodelay(true)?;
+        sock.set_nonblocking(true)?;
+        let fd = sock.as_raw_fd();
+        let token = self.conns.insert(Conn {
+            sock,
+            recv: RecvBuf::new(PRE_HELLO_CAP),
+            send: SendQueue::new(),
+            want_write: false,
+            closing: false,
+        });
+        if let Err(e) = self.poller.register(fd, token, false) {
+            self.conns.remove(token);
+            return Err(e);
+        }
+        Ok(token)
+    }
+
+    pub fn is_open(&self, token: usize) -> bool {
+        self.conns.contains(token)
+    }
+
+    /// Live connection count (the listener is not a connection).
+    pub fn len(&self) -> usize {
+        self.conns.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.conns.is_empty()
+    }
+
+    /// Lift the receive cap after a validated hello.
+    pub fn set_recv_cap(&mut self, token: usize, cap: usize) {
+        if let Some(c) = self.conns.get_mut(token) {
+            c.recv.set_cap(cap);
+        }
+    }
+
+    /// Queue a frame and eagerly flush. Returns `Ok(false)` if the
+    /// connection is absent or the peer died on the spot (the connection
+    /// is dropped); the caller owns the consequences.
+    pub fn send_frame(
+        &mut self,
+        token: usize,
+        header: [u8; HEADER_BYTES],
+        payload: SendPayload,
+    ) -> anyhow::Result<bool> {
+        let Some(conn) = self.conns.get_mut(token) else { return Ok(false) };
+        conn.send.push_frame(header, payload);
+        match conn.send.flush(&mut conn.sock) {
+            FlushStatus::Clean => {
+                if conn.want_write {
+                    conn.want_write = false;
+                    let fd = conn.sock.as_raw_fd();
+                    self.poller.rearm(fd, token, false)?;
+                }
+                Ok(true)
+            }
+            FlushStatus::Pending => {
+                if !conn.want_write {
+                    conn.want_write = true;
+                    let fd = conn.sock.as_raw_fd();
+                    self.poller.rearm(fd, token, true)?;
+                }
+                Ok(true)
+            }
+            FlushStatus::Closed => {
+                self.drop_conn(token);
+                Ok(false)
+            }
+        }
+    }
+
+    /// Unfinished bytes queued for `token` (0 if absent).
+    pub fn pending_bytes(&self, token: usize) -> usize {
+        self.conns.get(token).map_or(0, |c| c.send.buffered_bytes())
+    }
+
+    /// Drop a connection immediately (deregister + close).
+    pub fn close(&mut self, token: usize) {
+        self.drop_conn(token);
+    }
+
+    /// Close once the send queue drains (the connection stops being read
+    /// either way). Closes immediately if nothing is queued.
+    pub fn close_after_flush(&mut self, token: usize) {
+        let empty = match self.conns.get(token) {
+            Some(c) => c.send.is_empty(),
+            None => return,
+        };
+        if empty {
+            self.drop_conn(token);
+        } else if let Some(c) = self.conns.get_mut(token) {
+            c.closing = true;
+        }
+    }
+
+    /// Detach a connection from the loop and hand back its socket plus
+    /// reassembly state (bytes already buffered mid-frame are preserved)
+    /// — the blocking-drain escape hatch for teardown paths.
+    pub fn detach(&mut self, token: usize) -> Option<(TcpStream, RecvBuf)> {
+        let conn = self.conns.remove(token)?;
+        #[cfg(target_os = "linux")]
+        let _ = self.poller.deregister(conn.sock.as_raw_fd());
+        #[cfg(not(target_os = "linux"))]
+        self.poller.deregister_token(token);
+        Some((conn.sock, conn.recv))
+    }
+
+    fn drop_conn(&mut self, token: usize) {
+        if let Some(conn) = self.conns.remove(token) {
+            #[cfg(target_os = "linux")]
+            let _ = self.poller.deregister(conn.sock.as_raw_fd());
+            #[cfg(not(target_os = "linux"))]
+            self.poller.deregister_token(token);
+            drop(conn);
+        }
+    }
+
+    /// One reactor cycle: wait up to `timeout`, accept anything pending,
+    /// drain every readable connection into frames, flush every writable
+    /// send queue. Events append to `sink` in readiness order.
+    pub fn poll_io(&mut self, timeout: Duration, sink: &mut Vec<IoEvent>) -> anyhow::Result<()> {
+        let mut ready = std::mem::take(&mut self.scratch);
+        ready.clear();
+        let wait = self.poller.wait(timeout, &mut ready);
+        let step = wait.and_then(|()| {
+            for ev in &ready {
+                if ev.token == LISTENER_TOKEN {
+                    self.accept_ready(sink)?;
+                } else {
+                    self.conn_ready(ev.token, ev.readable, ev.writable, sink)?;
+                }
+            }
+            Ok(())
+        });
+        self.scratch = ready;
+        step
+    }
+
+    fn accept_ready(&mut self, sink: &mut Vec<IoEvent>) -> anyhow::Result<()> {
+        loop {
+            let Some(listener) = &self.listener else { return Ok(()) };
+            match listener.accept() {
+                Ok((sock, _)) => {
+                    let token = self.add(sock)?;
+                    sink.push(IoEvent::Accepted(token));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                // a connection that reset between SYN and accept is
+                // nobody we ever met — skip it
+                Err(e) if e.kind() == ErrorKind::ConnectionReset => continue,
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+
+    fn conn_ready(
+        &mut self,
+        token: usize,
+        readable: bool,
+        writable: bool,
+        sink: &mut Vec<IoEvent>,
+    ) -> anyhow::Result<()> {
+        // (the connection may have been dropped earlier in this batch)
+        let Some(conn) = self.conns.get_mut(token) else { return Ok(()) };
+        if readable && !conn.closing {
+            loop {
+                match conn.recv.try_frame(&mut conn.sock) {
+                    Ok(RecvStep::Frame(frame)) => sink.push(IoEvent::Frame { token, frame }),
+                    Ok(RecvStep::WouldBlock) => break,
+                    Ok(RecvStep::Closed) => {
+                        self.drop_conn(token);
+                        sink.push(IoEvent::Closed(token));
+                        return Ok(());
+                    }
+                    Err(error) => {
+                        self.drop_conn(token);
+                        sink.push(IoEvent::Bad { token, error });
+                        return Ok(());
+                    }
+                }
+            }
+        }
+        let Some(conn) = self.conns.get_mut(token) else { return Ok(()) };
+        if writable && !conn.send.is_empty() {
+            match conn.send.flush(&mut conn.sock) {
+                FlushStatus::Clean => {
+                    if conn.closing {
+                        self.drop_conn(token);
+                        return Ok(());
+                    }
+                    if conn.want_write {
+                        conn.want_write = false;
+                        let fd = conn.sock.as_raw_fd();
+                        self.poller.rearm(fd, token, false)?;
+                    }
+                }
+                FlushStatus::Pending => {
+                    if !conn.want_write {
+                        conn.want_write = true;
+                        let fd = conn.sock.as_raw_fd();
+                        self.poller.rearm(fd, token, true)?;
+                    }
+                }
+                FlushStatus::Closed => {
+                    let was_closing = conn.closing;
+                    self.drop_conn(token);
+                    if !was_closing {
+                        sink.push(IoEvent::Closed(token));
+                    }
+                }
+            }
+        } else if writable && conn.closing {
+            self.drop_conn(token);
+        }
+        Ok(())
+    }
+
+    /// Drive the loop until every send queue is clean or `deadline`
+    /// passes; frames read meanwhile (early drain digests, stray
+    /// speculative uplinks) still land in `sink`. Returns the tokens
+    /// whose queues were still dirty at the deadline — the bounded
+    /// replacement for the old flush-and-join teardown that could hang
+    /// `finish()` forever on a peer that stopped reading.
+    #[allow(clippy::disallowed_methods)] // wall-clock: teardown flush deadline only
+    pub fn flush_all(
+        &mut self,
+        // lint:allow(wall_clock, bounded teardown flush; never feeds the trajectory)
+        deadline: Instant,
+        sink: &mut Vec<IoEvent>,
+    ) -> anyhow::Result<Vec<usize>> {
+        loop {
+            let dirty: Vec<usize> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| !c.send.is_empty())
+                .map(|(t, _)| t)
+                .collect();
+            if dirty.is_empty() {
+                return Ok(Vec::new());
+            }
+            // lint:allow(wall_clock, teardown flush deadline check)
+            if Instant::now() >= deadline {
+                return Ok(dirty);
+            }
+            self.poll_io(Duration::from_millis(5), sink)?;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::protocol::{frame_header, take_frame, FrameKind};
+    use std::io::Cursor;
+
+    fn mk_frame(round: u32, len: usize) -> Frame {
+        Frame {
+            kind: FrameKind::Uplink,
+            round,
+            worker: 1,
+            residual: 0.5,
+            payload: (0..len).map(|i| (i % 251) as u8).collect(),
+        }
+    }
+
+    #[test]
+    fn slab_reuses_slots_and_keeps_keys_stable() {
+        let mut s: Slab<&'static str> = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        let c = s.insert("c");
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert_eq!(s.remove(b), Some("b"));
+        assert_eq!(s.len(), 2);
+        assert!(!s.contains(b));
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(c), Some(&"c"));
+        // freed slot is recycled; existing keys untouched
+        let d = s.insert("d");
+        assert_eq!(d, b);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.remove(99), None);
+        let keys: Vec<usize> = s.iter().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec![0, 1, 2]);
+    }
+
+    /// A `Read` that delivers a byte stream in scripted chunk sizes, with
+    /// `0`-sized script entries meaning "WouldBlock here" (a spurious
+    /// wakeup as seen by the reassembly machine).
+    struct ChunkReader {
+        data: Vec<u8>,
+        pos: usize,
+        script: Vec<usize>,
+        step: usize,
+    }
+
+    impl Read for ChunkReader {
+        fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+            let want = self.script.get(self.step).copied().unwrap_or(usize::MAX);
+            self.step += 1;
+            if want == 0 {
+                return Err(std::io::Error::from(ErrorKind::WouldBlock));
+            }
+            let k = want.min(out.len()).min(self.data.len() - self.pos);
+            if k == 0 {
+                return Ok(0); // EOF
+            }
+            out[..k].copy_from_slice(&self.data[self.pos..self.pos + k]);
+            self.pos += k;
+            Ok(k)
+        }
+    }
+
+    #[test]
+    fn recvbuf_reassembles_across_pathological_chunking() {
+        let frames = [mk_frame(0, 0), mk_frame(1, 5), mk_frame(2, 100)];
+        let mut wire = Vec::new();
+        for f in &frames {
+            wire.extend_from_slice(&f.to_bytes());
+        }
+        // byte-at-a-time with a WouldBlock between every byte
+        let script: Vec<usize> = (0..wire.len() * 2).map(|i| i % 2).collect();
+        let mut r = ChunkReader { data: wire, pos: 0, script, step: 0 };
+        let mut rb = RecvBuf::new(MAX_PAYLOAD);
+        let mut got = Vec::new();
+        loop {
+            match rb.try_frame(&mut r).unwrap() {
+                RecvStep::Frame(f) => got.push(f),
+                RecvStep::WouldBlock => continue,
+                RecvStep::Closed => break,
+            }
+        }
+        assert_eq!(got, frames);
+    }
+
+    #[test]
+    fn recvbuf_enforces_its_payload_cap() {
+        let f = mk_frame(0, 64);
+        let mut r = Cursor::new(f.to_bytes());
+        let mut rb = RecvBuf::new(16);
+        let err = rb.try_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("receive cap"), "{err}");
+        // and a lifted cap admits the same frame
+        let mut r = Cursor::new(f.to_bytes());
+        let mut rb = RecvBuf::new(16);
+        rb.set_cap(MAX_PAYLOAD);
+        match rb.try_frame(&mut r).unwrap() {
+            RecvStep::Frame(g) => assert_eq!(g, f),
+            _ => panic!("frame expected"),
+        }
+    }
+
+    /// A `Write` that accepts at most a scripted number of bytes per
+    /// call, interleaving WouldBlock (0 in the script).
+    struct TrickleWriter {
+        out: Vec<u8>,
+        script: Vec<usize>,
+        step: usize,
+    }
+
+    impl Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let want = self.script.get(self.step).copied().unwrap_or(usize::MAX);
+            self.step += 1;
+            if want == 0 {
+                return Err(std::io::Error::from(ErrorKind::WouldBlock));
+            }
+            let k = want.min(buf.len());
+            self.out.extend_from_slice(&buf[..k]);
+            Ok(k)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sendqueue_partial_writes_produce_an_intact_stream() {
+        let broadcast: Arc<[u8]> = vec![7u8; 53].into();
+        let mut q = SendQueue::new();
+        q.push_frame(
+            frame_header(FrameKind::Downlink, 3, 0, 0.0, broadcast.len()),
+            SendPayload::Shared(broadcast.clone()),
+        );
+        q.push_frame(
+            frame_header(FrameKind::Sync, 0, 2, 0.0, 4),
+            SendPayload::Owned(vec![1, 2, 3, 4]),
+        );
+        let total = q.buffered_bytes();
+        assert_eq!(total, 2 * HEADER_BYTES + 53 + 4);
+        // dribble 3 bytes per accepted write, WouldBlock every other call
+        let mut w = TrickleWriter {
+            out: Vec::new(),
+            script: (0..1000).map(|i| if i % 2 == 0 { 0 } else { 3 }).collect(),
+            step: 0,
+        };
+        let mut pending = 0;
+        loop {
+            match q.flush(&mut w) {
+                FlushStatus::Clean => break,
+                FlushStatus::Pending => pending += 1,
+                FlushStatus::Closed => panic!("writer never closes"),
+            }
+        }
+        assert!(pending > 0, "the trickle writer must have exercised Pending");
+        assert_eq!(q.buffered_bytes(), 0);
+        // the byte stream re-frames into exactly the two queued frames
+        let mut buf = w.out;
+        let f1 = take_frame(&mut buf).unwrap().unwrap();
+        assert_eq!((f1.kind, f1.round, f1.payload.len()), (FrameKind::Downlink, 3, 53));
+        assert_eq!(f1.payload, &broadcast[..]);
+        let f2 = take_frame(&mut buf).unwrap().unwrap();
+        assert_eq!((f2.kind, f2.worker, f2.payload), (FrameKind::Sync, 2, vec![1, 2, 3, 4]));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn reactor_accepts_frames_and_replies_over_real_sockets() {
+        use crate::engine::protocol::{read_frame, write_frame};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut reactor = Reactor::new().unwrap();
+        reactor.listen(listener).unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            write_frame(&mut s, &mk_frame(0, 16)).unwrap();
+            // wait for the reactor's reply
+            let reply = read_frame(&mut s).unwrap();
+            (reply.kind, reply.payload)
+        });
+
+        let mut sink = Vec::new();
+        let mut token = None;
+        let mut got_frame = None;
+        for _ in 0..2000 {
+            reactor.poll_io(Duration::from_millis(5), &mut sink).unwrap();
+            for ev in sink.drain(..) {
+                match ev {
+                    IoEvent::Accepted(t) => token = Some(t),
+                    IoEvent::Frame { token: t, frame } => {
+                        assert_eq!(Some(t), token);
+                        got_frame = Some(frame);
+                    }
+                    IoEvent::Closed(_) => {}
+                    IoEvent::Bad { error, .. } => panic!("bad: {error}"),
+                }
+            }
+            if got_frame.is_some() {
+                break;
+            }
+        }
+        let f = got_frame.expect("frame received");
+        assert_eq!(f, mk_frame(0, 16));
+        let t = token.unwrap();
+        let ok = reactor
+            .send_frame(
+                t,
+                frame_header(FrameKind::Sync, 0, 0, 0.0, 3),
+                SendPayload::Owned(vec![9, 9, 9]),
+            )
+            .unwrap();
+        assert!(ok);
+        // drain the queue (eager flush almost certainly already did)
+        // lint:allow(wall_clock, test deadline)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        reactor.flush_all(deadline, &mut sink).unwrap();
+        let (kind, payload) = client.join().unwrap();
+        assert_eq!(kind, FrameKind::Sync);
+        assert_eq!(payload, vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn reactor_reports_bad_peers_and_closed_peers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut reactor = Reactor::new().unwrap();
+        reactor.listen(listener).unwrap();
+        // peer 1: garbage bytes; peer 2: clean immediate close
+        let garbage = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"XX not the dore protocol XX").unwrap();
+            s
+        });
+        let closer = std::thread::spawn(move || {
+            let s = TcpStream::connect(addr).unwrap();
+            drop(s);
+        });
+        let mut sink = Vec::new();
+        let (mut bads, mut closes, mut accepts) = (0, 0, 0);
+        for _ in 0..2000 {
+            reactor.poll_io(Duration::from_millis(5), &mut sink).unwrap();
+            for ev in sink.drain(..) {
+                match ev {
+                    IoEvent::Accepted(_) => accepts += 1,
+                    IoEvent::Bad { error, .. } => {
+                        assert!(error.to_string().contains("magic"), "{error}");
+                        bads += 1;
+                    }
+                    IoEvent::Closed(_) => closes += 1,
+                    IoEvent::Frame { .. } => panic!("no valid frames were sent"),
+                }
+            }
+            if bads == 1 && closes == 1 {
+                break;
+            }
+        }
+        assert_eq!((accepts, bads, closes), (2, 1, 1));
+        assert!(reactor.is_empty(), "both peers must have been dropped");
+        drop(garbage.join().unwrap());
+        closer.join().unwrap();
+    }
+
+    #[test]
+    fn close_after_flush_delivers_the_rejection_first() {
+        use crate::engine::protocol::read_frame;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut reactor = Reactor::new().unwrap();
+        reactor.listen(listener).unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let reply = read_frame(&mut s).unwrap();
+            // after the reply the master hangs up
+            let mut rest = Vec::new();
+            let _ = s.read_to_end(&mut rest);
+            (reply, rest)
+        });
+        let mut sink = Vec::new();
+        let mut token = None;
+        while token.is_none() {
+            reactor.poll_io(Duration::from_millis(5), &mut sink).unwrap();
+            for ev in sink.drain(..) {
+                if let IoEvent::Accepted(t) = ev {
+                    token = Some(t);
+                }
+            }
+        }
+        let t = token.unwrap();
+        reactor
+            .send_frame(
+                t,
+                frame_header(FrameKind::Drain, 0, 0, 0.0, 2),
+                SendPayload::Owned(vec![4, 2]),
+            )
+            .unwrap();
+        reactor.close_after_flush(t);
+        // lint:allow(wall_clock, test deadline)
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while reactor.is_open(t) {
+            // lint:allow(wall_clock, test deadline)
+            assert!(Instant::now() < deadline, "close_after_flush never closed");
+            reactor.poll_io(Duration::from_millis(5), &mut sink).unwrap();
+            sink.clear();
+        }
+        let (reply, rest) = client.join().unwrap();
+        assert_eq!(reply.kind, FrameKind::Drain);
+        assert_eq!(reply.payload, vec![4, 2]);
+        assert!(rest.is_empty(), "EOF follows the flushed reply");
+    }
+}

@@ -5,66 +5,91 @@
 //!
 //! The stack is layered: frames and their serialization live in
 //! [`crate::engine::protocol`] (one versioned wire format for every
-//! byte-moving transport — see its module docs for the header layout),
-//! per-connection machinery (reassembly buffers, writer threads) lives in
-//! [`super::link`], and the worker-side session (registration handshake,
-//! round schedule, drain) lives in [`super::worker`]. This module is the
-//! master: it owns connection admission, round sequencing, and fault
-//! bookkeeping.
+//! byte-moving transport — see its module docs for the header layout and
+//! the writev-friendly header/payload split), the master's readiness
+//! event loop (epoll poller, slab-allocated connections, zero-copy frame
+//! reassembly, nonblocking write queues) lives in [`super::reactor`], the
+//! worker-side socket link lives in [`super::link`], and the worker-side
+//! session (registration handshake, round schedule, drain) lives in
+//! [`super::worker`]. This module is the master: it owns connection
+//! admission, round sequencing, and fault bookkeeping.
+//!
+//! # One reactor, no per-worker threads
+//!
+//! The master is a single readiness-driven event loop: one
+//! [`Reactor`] owns every socket (listener included), each connection
+//! pairs a reassembly buffer that decodes frames straight out of the
+//! kernel's chunks with a nonblocking buffered write queue, and one
+//! broadcast payload is refcounted across every queue instead of being
+//! cloned per worker. The master spawns **no** per-connection thread —
+//! reader or writer — so a 10,000-connection fleet costs 10,000 fds and
+//! slab entries, not 20,000 OS threads (`rust/tests/scale_smoke.rs`
+//! proves registration + a gather round at that scale). Per-wake work is
+//! proportional to the connections with something to say, so a round
+//! costs O(participants), not O(fleet): an idle registered client
+//! contributes nothing to the poll loop.
 //!
 //! Two deployment modes share all of that:
 //!
 //! * **Local** ([`TcpTransport::new`]): binds an ephemeral localhost port
-//!   and spawns one OS thread per worker, each with its own socket — the
+//!   and spawns one worker *node* thread per worker (the compute side —
+//!   the master side stays threadless), each with its own socket — the
 //!   in-tree testing shape.
 //! * **External** ([`TcpTransport::bind`]): binds a caller-chosen address
-//!   and waits (up to [`TcpTransport::registration_timeout`]) for `n`
-//!   `dore-worker` *processes* to register — the real multi-host fleet.
-//!   Registration hellos carry the protocol version (checked by the frame
-//!   header itself), model dimension, fleet size, and a fingerprint of the
-//!   training spec; any mismatch is rejected with an error naming both
-//!   sides. At `finish` each worker sends a drain frame carrying its
-//!   final-model digest, which the master checks against its own iterate.
+//!   and waits (up to [`TcpTransport::registration_timeout`], a monotonic
+//!   wall-clock deadline) for `n` `dore-worker` *processes* to register —
+//!   the real multi-host fleet. Registration hellos carry the protocol
+//!   version (checked by the frame header itself), model dimension, fleet
+//!   size, and a fingerprint of the training spec; any mismatch is
+//!   rejected with an error naming both sides. Hello reads are
+//!   nonblocking and partial-tolerant: a slow or stalled hello parks that
+//!   one socket, it can no longer stall the registration of everyone
+//!   behind it in the accept queue. At `finish` each worker sends a drain
+//!   frame carrying its final-model digest, which the master checks
+//!   against its own iterate; the drain is bounded by
+//!   [`TcpTransport::drain_timeout`] — a peer that stops reading or never
+//!   drains is surfaced through [`Transport::drain_faults`] instead of
+//!   hanging `finish()` forever.
 //!
 //! Pipelining rides the sockets naturally: each worker writes its
 //! round-`k` uplink after reading the round-`k − depth` downlink, so up to
 //! `depth` uplinks are on the wire per link while the master reduces older
-//! rounds. Because a worker emits its uplink frames in round order, the
-//! next unread uplink frame on a socket is always the oldest round the
-//! master still needs — per-socket sequential reads need no reordering
-//! buffer. Downlinks are written by one dedicated writer thread per worker
-//! (fed from a depth-bounded channel), so the master's read loop never
-//! blocks on a full send buffer.
+//! rounds. Frames that arrive ahead of the round being polled are parked
+//! per-round ([`Parked`], shared with the channel transport) until their
+//! turn. Downlink writes are queued per connection and drained on
+//! writability, so the master's loop never blocks on a full send buffer —
+//! the depth ≥ 2 write/write deadlock guard the old per-worker writer
+//! threads existed for, without the threads.
 //!
 //! # Speed-aware participation
 //!
 //! Under [`Participation::Fastest`] every worker computes every round
 //! speculatively and the master's poll barrier closes after the first `k`
-//! uplinks *arrive* — participation is hardware-driven, not seeded. The
-//! downlink then carries the realized mask as a prefix
+//! uplinks *arrive* — participation is hardware-driven, not seeded; the
+//! reactor's event order is the arrival order. The downlink then carries
+//! the realized mask as a prefix
 //! ([`crate::engine::protocol::encode_masked_downlink`]); a worker whose
 //! uplink was dropped rewinds to its pre-round snapshot before applying,
 //! so its state is bit-identical to having never computed. Stale
-//! speculative uplinks left in the socket buffers are discarded at the
-//! next round's poll. The realized masks are recorded by the session (run
-//! log + checkpoints) and replaying them through
-//! [`Participation::Recorded`] reproduces the run bit-identically.
+//! speculative uplinks of older rounds are discarded at the next round's
+//! poll. The realized masks are recorded by the session (run log +
+//! checkpoints) and replaying them through [`Participation::Recorded`]
+//! reproduces the run bit-identically.
 //!
 //! # Fault tolerance
 //!
-//! The master side reads **nonblockingly**: each socket has a reassembly
-//! buffer, and [`Transport::poll_uplinks`] returns `None` (the engine
-//! yields and re-polls) when a round cannot be resolved within the poll
-//! deadline instead of parking the run on a dead `read`. A worker whose
-//! connection drops (EOF / reset mid-frame) is **lost**: its replay cache
-//! is discarded, the loss is reported through [`Transport::drain_faults`],
-//! and the round stalls until a replacement **re-registers** — the
-//! listener stays open, and a reconnect hello is answered with a sync
-//! frame carrying the resume round plus the master's current model (fed
-//! each round via [`Transport::sync_state`]). The rejoined worker starts
-//! with fresh (zeroed) residual state — the master's `h`/error state
-//! carries what the paper's algebra needs, so training proceeds and the
-//! fleet's models stay synchronized — but a run with a real crash is *not*
+//! [`Transport::poll_uplinks`] returns `None` (the engine yields and
+//! re-polls) when a round cannot be resolved within the poll deadline. A
+//! worker whose connection drops (EOF / reset mid-frame, or a dead socket
+//! discovered on write) is **lost**: its replay cache is discarded, the
+//! loss is reported through [`Transport::drain_faults`], and the round
+//! stalls until a replacement **re-registers** — the listener stays in
+//! the reactor, and a reconnect hello is answered with a sync frame
+//! carrying the resume round plus the master's current model (fed each
+//! round via [`Transport::sync_state`]). The rejoined worker starts with
+//! fresh (zeroed) residual state — the master's `h`/error state carries
+//! what the paper's algebra needs, so training proceeds and the fleet's
+//! models stay synchronized — but a run with a real crash is *not*
 //! bit-identical to an uninterrupted one; use [`crate::engine::FaultPlan`]
 //! for deterministic failure injection and
 //! [`crate::engine::Session::checkpoint_every`] for bit-exact kill/resume.
@@ -73,16 +98,16 @@
 //! stays lost past [`TcpTransport::reconnect_timeout`] fails the run with
 //! an actionable error rather than hanging forever.
 
-use super::link::{close_conn, conn_try_read, read_frame_buffered, spawn_conn, Conn, SockRead};
+use super::reactor::{IoEvent, Reactor, SendPayload};
 use super::worker::{tcp_worker_main, WorkerBoot};
 use crate::algorithms::{digest_f32, WorkerNode};
 use crate::compression::{codec, Compressed};
 use crate::engine::protocol::{
-    encode_masked_downlink, parse_drain_digest, read_frame, spec_fingerprint, write_frame,
-    DownlinkMsg, Frame, FrameKind, HelloBody, SyncBody,
+    encode_masked_downlink, frame_header, parse_drain_digest, spec_fingerprint, Frame, FrameKind,
+    HelloBody, SyncBody, MAX_PAYLOAD,
 };
 use crate::engine::registry;
-use crate::engine::transport::{absent_slot_frame, RoundWindow};
+use crate::engine::transport::{absent_slot_frame, Parked, RoundWindow};
 use crate::engine::{
     Participation, RoundCtx, StalePolicy, TrainSpec, Transport, TransportFault, UplinkFrame,
     WirePayload,
@@ -91,30 +116,37 @@ use crate::models::Problem;
 use crate::F;
 use anyhow::Context as _;
 use std::collections::BTreeMap;
-use std::io::ErrorKind;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-// lint:allow(wall_clock, socket poll/reconnect deadlines only; timeouts never feed the trajectory)
+// lint:allow(wall_clock, socket poll/registration/reconnect/drain deadlines only; timeouts never feed the trajectory)
 use std::time::{Duration, Instant};
 
-/// Partially assembled uplink slots of the round currently being polled
-/// (carried across `poll_uplinks → None` returns).
-struct Pending {
-    round: usize,
-    slots: Vec<Option<(Vec<u8>, f64)>>,
-    got: usize,
+/// Which protocol phase the event loop is serving — it decides what an
+/// unregistered peer may say and whether a closed connection is a fault.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// `start` is collecting the fleet's fresh hellos.
+    Registering,
+    /// Rounds are in flight; unregistered peers may only reconnect.
+    Rounds,
+    /// `finish` is flushing tails and collecting drain digests; worker
+    /// exits are expected, not faults.
+    Finishing,
 }
 
 /// Socket master: drives the engine side of a socket fleet (local worker
-/// threads or external `dore-worker` processes) with nonblocking reads.
-/// Bit-identical iterates to every other transport, at every pipeline
-/// depth, on a healthy fleet; see the module docs for the crash/reconnect
-/// semantics and the two deployment modes.
+/// threads or external `dore-worker` processes) from one readiness-driven
+/// reactor — no per-worker master threads. Bit-identical iterates to
+/// every other transport, at every pipeline depth, on a healthy fleet;
+/// see the module docs for the crash/reconnect semantics and the two
+/// deployment modes.
 pub struct TcpTransport {
-    /// Master-side connections, one slot per worker (`None` = lost).
-    conns: Vec<Option<Conn>>,
-    /// Kept open for the whole run so lost workers can re-register.
+    n: usize,
+    /// The event loop owning every master-side socket (listener included).
+    reactor: Option<Reactor>,
+    /// Pre-start listener (external mode binds eagerly in [`Self::bind`];
+    /// `start` moves it into the reactor).
     listener: Option<TcpListener>,
     addr: Option<SocketAddr>,
     /// External fleet ([`TcpTransport::bind`]): workers are real processes
@@ -136,7 +168,20 @@ pub struct TcpTransport {
     /// `(resume round, master iterate)` for reconnect syncs, refreshed
     /// every round via [`Transport::sync_state`].
     model_sync: Option<(usize, Vec<F>)>,
-    pending: Option<Pending>,
+    /// Worker slot → reactor token of its live connection (`None` = lost).
+    slot_token: Vec<Option<usize>>,
+    /// Reactor token → worker slot (registered connections only).
+    token_slot: BTreeMap<usize, usize>,
+    /// Uplinks parked per round: the reactor drains sockets greedily, so
+    /// frames for rounds ahead of the one being polled (pipelining, and
+    /// round-`start` uplinks arriving mid-registration) wait here.
+    parked: BTreeMap<usize, Parked<(Vec<u8>, f64)>>,
+    /// Memoized participation masks of later in-flight rounds.
+    mask_memo: BTreeMap<usize, Vec<bool>>,
+    /// Final-model digests that arrived ahead of (or during) `finish`.
+    drain_digests: BTreeMap<usize, u64>,
+    /// Scratch event buffer reused across reactor polls.
+    sink: Vec<IoEvent>,
     faults: Vec<TransportFault>,
     // lint:allow(wall_clock, reconnect-timeout bookkeeping; never feeds the trajectory)
     lost_since: BTreeMap<usize, Instant>,
@@ -148,6 +193,7 @@ pub struct TcpTransport {
     poll_wait: Duration,
     reconnect_timeout: Duration,
     registration_timeout: Duration,
+    drain_timeout: Duration,
     spec: Option<TrainSpec>,
     problem: Option<Arc<dyn Problem>>,
 }
@@ -163,7 +209,8 @@ impl TcpTransport {
     /// node (spawned at `start`).
     pub fn new() -> Self {
         Self {
-            conns: Vec::new(),
+            n: 0,
+            reactor: None,
             listener: None,
             addr: None,
             external: false,
@@ -173,7 +220,12 @@ impl TcpTransport {
             hello_expect: None,
             boot_sync: Vec::new(),
             model_sync: None,
-            pending: None,
+            slot_token: Vec::new(),
+            token_slot: BTreeMap::new(),
+            parked: BTreeMap::new(),
+            mask_memo: BTreeMap::new(),
+            drain_digests: BTreeMap::new(),
+            sink: Vec::new(),
             faults: Vec::new(),
             lost_since: BTreeMap::new(),
             respawns: BTreeMap::new(),
@@ -182,6 +234,7 @@ impl TcpTransport {
             poll_wait: Duration::from_millis(10),
             reconnect_timeout: Duration::from_secs(30),
             registration_timeout: Duration::from_secs(60),
+            drain_timeout: Duration::from_secs(30),
             spec: None,
             problem: None,
         }
@@ -233,8 +286,10 @@ impl TcpTransport {
         self
     }
 
-    /// How long `start` waits between registrations before giving up on
-    /// the missing workers (default 60 s).
+    /// How long `start` waits for the full fleet to register before
+    /// giving up on the missing workers (default 60 s). A monotonic
+    /// wall-clock deadline: connections that trickle in without
+    /// registering no longer extend it.
     pub fn registration_timeout(mut self, timeout: Duration) -> Self {
         self.registration_timeout = timeout;
         self
@@ -247,27 +302,125 @@ impl TcpTransport {
         self
     }
 
+    /// Bound on `finish`'s teardown: flushing queued tail downlinks plus
+    /// waiting for each worker's drain digest (default 30 s). A peer that
+    /// stops reading mid-drain or never sends its digest is dropped and
+    /// surfaced via [`Transport::drain_faults`] when the deadline passes,
+    /// instead of hanging `finish()` forever.
+    pub fn drain_timeout(mut self, timeout: Duration) -> Self {
+        self.drain_timeout = timeout;
+        self
+    }
+
     fn depth(&self) -> usize {
         self.spec.as_ref().map_or(1, |s| s.pipeline_depth.max(1))
     }
 
-    /// Read and validate a registration hello (fresh or reconnect) off a
-    /// just-accepted socket. A mismatch gets a Drain reply naming both
-    /// sides before the error — the rejected worker prints something
-    /// actionable instead of a dead socket.
-    fn read_hello(&self, s: &mut TcpStream) -> anyhow::Result<(usize, FrameKind)> {
-        // brief blocking handshake (the connector writes its hello first;
-        // sockets accepted from a nonblocking listener may inherit the
-        // flag, so set both explicitly)
-        s.set_nonblocking(false)?;
-        s.set_read_timeout(Some(Duration::from_secs(5)))?;
-        let hello = read_frame(s)?;
-        anyhow::ensure!(
-            matches!(hello.kind, FrameKind::Hello | FrameKind::Reconnect),
-            "expected a hello/reconnect frame on a registering socket, got {:?}",
-            hello.kind
-        );
-        let theirs = HelloBody::decode(&hello.payload)?;
+    fn reactor_mut(&mut self) -> &mut Reactor {
+        self.reactor.as_mut().expect("transport started")
+    }
+
+    /// Remove a token's registration maps; returns the slot it served.
+    fn unmap(&mut self, token: usize) -> Option<usize> {
+        let i = self.token_slot.remove(&token)?;
+        if self.slot_token[i] == Some(token) {
+            self.slot_token[i] = None;
+        }
+        Some(i)
+    }
+
+    /// One reactor cycle plus event dispatch. `current` carries the round
+    /// being polled and its engine-computed mask (polling phase only).
+    fn pump(
+        &mut self,
+        timeout: Duration,
+        phase: Phase,
+        current: Option<(usize, &[bool])>,
+    ) -> anyhow::Result<()> {
+        let mut sink = std::mem::take(&mut self.sink);
+        sink.clear();
+        let mut res = match self.reactor.as_mut() {
+            Some(r) => r.poll_io(timeout, &mut sink),
+            None => Err(anyhow::anyhow!("transport not started")),
+        };
+        if res.is_ok() {
+            for ev in sink.drain(..) {
+                if let Err(e) = self.on_event(ev, phase, current) {
+                    res = Err(e);
+                    break;
+                }
+            }
+        }
+        sink.clear();
+        self.sink = sink;
+        res
+    }
+
+    fn on_event(
+        &mut self,
+        ev: IoEvent,
+        phase: Phase,
+        current: Option<(usize, &[bool])>,
+    ) -> anyhow::Result<()> {
+        match ev {
+            // a fresh connection says nothing until its hello completes
+            IoEvent::Accepted(_) => Ok(()),
+            IoEvent::Frame { token, frame } => match self.token_slot.get(&token).copied() {
+                None => self.process_hello(token, frame, phase),
+                Some(i) => self.on_worker_frame(i, frame, phase, current),
+            },
+            IoEvent::Closed(token) => {
+                let Some(i) = self.unmap(token) else {
+                    return Ok(()); // a stray peer we never admitted
+                };
+                match phase {
+                    // workers exit right after their drain frame
+                    Phase::Finishing => Ok(()),
+                    _ => self.lost(i),
+                }
+            }
+            IoEvent::Bad { token, error } => match self.unmap(token) {
+                Some(i) => Err(error
+                    .context(format!("worker {i}'s connection violated the protocol"))),
+                // an unregistered peer sent garbage: fail fast during
+                // fresh registration (a misconfigured fleet should be
+                // loud), shrug it off mid-run
+                None if phase == Phase::Registering => {
+                    Err(error.context("a registering connection sent garbage"))
+                }
+                None => Ok(()),
+            },
+        }
+    }
+
+    /// First complete frame off an unregistered connection — it must be a
+    /// hello (fresh) or reconnect (mid-run) handshake.
+    fn process_hello(&mut self, token: usize, frame: Frame, phase: Phase) -> anyhow::Result<()> {
+        if phase == Phase::Finishing {
+            // registration is over and the run is tearing down
+            self.reactor_mut().close(token);
+            return Ok(());
+        }
+        let fresh = phase == Phase::Registering;
+        if !matches!(frame.kind, FrameKind::Hello | FrameKind::Reconnect) {
+            self.reactor_mut().close(token);
+            anyhow::ensure!(
+                !fresh,
+                "expected a hello/reconnect frame on a registering socket, got {:?}",
+                frame.kind
+            );
+            return Ok(());
+        }
+        let theirs = match HelloBody::decode(&frame.payload) {
+            Ok(b) => b,
+            Err(e) => {
+                self.reactor_mut().close(token);
+                if fresh {
+                    return Err(e);
+                }
+                return Ok(());
+            }
+        };
         let mine = self.hello_expect.expect("transport started");
         if theirs != mine {
             let text = format!(
@@ -278,177 +431,195 @@ impl TcpTransport {
                 mine.dim,
                 mine.n_workers,
                 mine.fingerprint,
-                hello.worker,
+                frame.worker,
                 theirs.dim,
                 theirs.n_workers,
                 theirs.fingerprint,
             );
-            let _ = write_frame(
-                s,
-                &Frame {
-                    kind: FrameKind::Drain,
-                    round: 0,
-                    worker: hello.worker,
-                    residual: 0.0,
-                    payload: text.clone().into_bytes(),
-                },
+            // the rejected worker prints something actionable instead of a
+            // dead socket: queue the reply, hang up once it flushes
+            let header = frame_header(FrameKind::Drain, 0, frame.worker, 0.0, text.len());
+            let reactor = self.reactor_mut();
+            let _ = reactor.send_frame(token, header, SendPayload::Owned(text.clone().into_bytes()));
+            reactor.close_after_flush(token);
+            anyhow::ensure!(!fresh, "{text}");
+            return Ok(());
+        }
+        let id = frame.worker as usize;
+        if id >= mine.n_workers as usize {
+            self.reactor_mut().close(token);
+            anyhow::ensure!(
+                !fresh,
+                "hello from unknown worker slot {id} (fleet of {})",
+                mine.n_workers
             );
-            anyhow::bail!("{text}");
+            return Ok(());
         }
-        let id = hello.worker as usize;
-        anyhow::ensure!(
-            id < mine.n_workers as usize,
-            "hello from unknown worker slot {id} (fleet of {})",
-            mine.n_workers
-        );
-        Ok((id, hello.kind))
-    }
-
-    /// Accept `n` fresh registrations, mapping sockets to worker slots via
-    /// their hellos. Nonblocking accepts with a count-based idle deadline:
-    /// an external fleet may take a while to launch, and the error names
-    /// what is still missing.
-    fn accept_registrations(&mut self, n: usize, start_round: usize) -> anyhow::Result<()> {
-        let depth = self.depth();
-        let mut conns: Vec<Option<Conn>> = (0..n).map(|_| None).collect();
-        let mut got = 0usize;
-        let max_idle_ticks = (self.registration_timeout.as_millis() as usize / 10).max(1);
-        let mut idle = 0usize;
-        while got < n {
-            let accepted = self
-                .listener
-                .as_ref()
-                .expect("listener bound before registration")
-                .accept();
-            match accepted {
-                Ok((mut s, _)) => {
-                    idle = 0;
-                    s.set_nodelay(true)?;
-                    let (id, kind) = self.read_hello(&mut s)?;
-                    anyhow::ensure!(
-                        kind == FrameKind::Hello,
-                        "worker {id} sent a reconnect hello during fresh registration"
-                    );
-                    anyhow::ensure!(conns[id].is_none(), "duplicate hello for worker slot {id}");
-                    write_frame(
-                        &mut s,
-                        &Frame {
-                            kind: FrameKind::Sync,
-                            round: start_round as u32,
-                            worker: id as u32,
-                            residual: 0.0,
-                            payload: self.boot_sync[id].clone(),
-                        },
-                    )?;
-                    s.set_read_timeout(None)?;
-                    s.set_nonblocking(true)?;
-                    conns[id] = Some(spawn_conn(s, id, depth)?);
-                    got += 1;
-                }
-                Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                    idle += 1;
-                    if idle >= max_idle_ticks {
-                        let missing: Vec<String> = conns
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, c)| c.is_none())
-                            .map(|(i, _)| i.to_string())
-                            .collect();
-                        anyhow::bail!(
-                            "registration timed out: {got} of {n} workers registered within \
-                             {:?} (missing slots: {}) — launch the remaining dore-worker \
-                             processes (--connect <master> --slot <i>) or raise \
-                             TcpTransport::registration_timeout",
-                            self.registration_timeout,
-                            missing.join(", ")
-                        );
-                    }
-                    std::thread::sleep(Duration::from_millis(10));
-                }
-                Err(e) => return Err(e.into()),
+        if fresh {
+            anyhow::ensure!(
+                frame.kind == FrameKind::Hello,
+                "worker {id} sent a reconnect hello during fresh registration"
+            );
+            anyhow::ensure!(self.slot_token[id].is_none(), "duplicate hello for worker slot {id}");
+            let payload = self.boot_sync[id].clone();
+            let start = self.spec.as_ref().expect("transport started").start_round;
+            let header = frame_header(FrameKind::Sync, start as u32, id as u32, 0.0, payload.len());
+            let reactor = self.reactor_mut();
+            if !reactor.send_frame(token, header, SendPayload::Owned(payload))? {
+                return Ok(()); // died mid-handshake: never registered
             }
+            reactor.set_recv_cap(token, MAX_PAYLOAD);
+            self.slot_token[id] = Some(token);
+            self.token_slot.insert(token, id);
+            return Ok(());
         }
-        self.conns = conns;
-        Ok(())
-    }
-
-    /// Nonblockingly accept and admit any waiting reconnect hellos. A
-    /// botched handshake (stray connector, garbage or absent hello, a
-    /// peer that died mid-exchange) drops that socket only — it must
-    /// never take the training run down with it.
-    fn admit_reconnects(&mut self) -> anyhow::Result<()> {
-        let mut fresh: Vec<TcpStream> = Vec::new();
-        if let Some(listener) = &self.listener {
-            loop {
-                match listener.accept() {
-                    Ok((s, _)) => fresh.push(s),
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
-                    Err(e) => return Err(e.into()),
-                }
+        // mid-run: only the reconnect handshake is admitted; anything else
+        // (a stray fresh hello, a rejoiner before any sync state exists)
+        // drops that socket without taking the run down
+        if frame.kind != FrameKind::Reconnect {
+            self.reactor_mut().close(token);
+            return Ok(());
+        }
+        let (resume, body) = match self.model_sync.as_ref() {
+            Some((r, m)) => (*r, SyncBody { model: m.clone(), aux: Vec::new() }.encode()),
+            None => {
+                self.reactor_mut().close(token);
+                return Ok(());
             }
-        }
-        for s in fresh {
-            // the socket is dropped on a failed handshake; the run goes on
-            let _ = self.admit(s);
-        }
-        Ok(())
-    }
-
-    /// The reconnect/re-register handshake: validate the hello, reply
-    /// with the resume round + current model, wire up a fresh writer.
-    fn admit(&mut self, mut s: TcpStream) -> anyhow::Result<()> {
-        s.set_nodelay(true)?;
-        let (id, kind) = self.read_hello(&mut s)?;
-        anyhow::ensure!(
-            kind == FrameKind::Reconnect,
-            "unexpected {kind:?} hello on a mid-run socket (fresh registration is over)"
-        );
-        if let Some(old) = self.conns[id].take() {
+        };
+        if let Some(old) = self.slot_token[id].take() {
             // the re-registration supersedes a connection the master still
             // believed live: an unselected worker's EOF can sit unread for
             // a round or more, and a restarted worker may beat the master
             // to noticing. Retire the old socket and admit the new one.
-            close_conn(old);
+            self.token_slot.remove(&old);
+            self.reactor_mut().close(old);
             self.byte_cache[id] = None;
             self.faults.push(TransportFault { worker: id, rejoined: false });
         }
-        let (resume, model) = self
-            .model_sync
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("no sync state available for a reconnecting worker"))?;
         // a rejoiner is a fresh node: model replayed, residual state zeroed
-        let body = SyncBody { model: model.clone(), aux: Vec::new() };
-        write_frame(
-            &mut s,
-            &Frame {
-                kind: FrameKind::Sync,
-                round: *resume as u32,
-                worker: id as u32,
-                residual: 0.0,
-                payload: body.encode(),
-            },
-        )?;
-        s.set_read_timeout(None)?;
-        s.set_nonblocking(true)?;
-        self.conns[id] = Some(spawn_conn(s, id, self.depth())?);
+        let header = frame_header(FrameKind::Sync, resume as u32, id as u32, 0.0, body.len());
+        let reactor = self.reactor_mut();
+        if !reactor.send_frame(token, header, SendPayload::Owned(body))? {
+            return Ok(()); // died mid-handshake; the run goes on
+        }
+        reactor.set_recv_cap(token, MAX_PAYLOAD);
+        self.slot_token[id] = Some(token);
+        self.token_slot.insert(token, id);
         self.lost_since.remove(&id);
         self.faults.push(TransportFault { worker: id, rejoined: true });
         Ok(())
     }
 
-    /// Record a dead connection: discard its replay cache, report the
-    /// fault, optionally spawn a local replacement.
-    #[allow(clippy::disallowed_methods)] // wall-clock: reconnect-timeout bookkeeping only
-    fn mark_lost(&mut self, id: usize) -> anyhow::Result<()> {
-        if let Some(conn) = self.conns[id].take() {
-            close_conn(conn);
+    /// A frame from a registered worker: an uplink to park, a drain digest
+    /// to stash, or a protocol violation.
+    fn on_worker_frame(
+        &mut self,
+        i: usize,
+        frame: Frame,
+        phase: Phase,
+        current: Option<(usize, &[bool])>,
+    ) -> anyhow::Result<()> {
+        match frame.kind {
+            FrameKind::Uplink => {
+                if phase == Phase::Finishing {
+                    return Ok(()); // stale speculative uplinks ahead of the drain
+                }
+                self.park_uplink(i, frame, current)
+            }
+            FrameKind::Drain => {
+                // the worker's final-model digest, possibly arriving while
+                // the last rounds are still being polled
+                let digest = parse_drain_digest(&frame.payload)?;
+                self.drain_digests.insert(i, digest);
+                Ok(())
+            }
+            other if phase == Phase::Finishing => {
+                anyhow::bail!("unexpected {other:?} frame while draining worker {i}")
+            }
+            other => anyhow::bail!("unexpected {other:?} frame from registered worker {i}"),
         }
-        self.byte_cache[id] = None;
+    }
+
+    /// Park one uplink into its round's slots, mirroring the channel
+    /// transport's validation. The reactor drains sockets greedily, so
+    /// frames up to `depth` rounds ahead of the poll (and round-`start`
+    /// uplinks arriving mid-registration) are legitimate.
+    fn park_uplink(
+        &mut self,
+        i: usize,
+        frame: Frame,
+        current: Option<(usize, &[bool])>,
+    ) -> anyhow::Result<()> {
+        let n = self.n;
+        let r = frame.round as usize;
+        anyhow::ensure!(
+            frame.worker as usize == i,
+            "protocol skew on worker {i}: uplink stamped worker {}",
+            frame.worker
+        );
+        let spec = self.spec.as_ref().expect("transport started");
+        let fastest_k = match &spec.participation {
+            Participation::Fastest { k } => Some(*k),
+            _ => None,
+        };
+        let floor = current.map_or(spec.start_round, |(round, _)| round);
+        let ceiling = self.window.next_begin().max(spec.start_round + self.depth());
+        if let Some(k) = fastest_k {
+            if r < floor {
+                return Ok(()); // a dropped speculative uplink from an earlier round
+            }
+            anyhow::ensure!(
+                r < ceiling,
+                "protocol skew on worker {i}: uplink for round {r} (rounds open through {})",
+                ceiling - 1
+            );
+            let parked = self.parked.entry(r).or_insert_with(|| Parked::empty(n));
+            if parked.got >= k || parked.slots[i].is_some() {
+                return Ok(()); // the barrier already closed: a loser's frame
+            }
+            parked.slots[i] = Some((frame.payload, frame.residual));
+            parked.got += 1;
+            return Ok(());
+        }
+        anyhow::ensure!(
+            r >= floor && r < ceiling,
+            "protocol skew on worker {i}: uplink for round {r} while polling {floor} \
+             (rounds open through {})",
+            ceiling - 1
+        );
+        let selected = match current {
+            Some((round, mask)) if r == round => mask[i],
+            _ => {
+                if !self.mask_memo.contains_key(&r) {
+                    let m = self.spec.as_ref().expect("transport started").round_mask(r, n);
+                    self.mask_memo.insert(r, m);
+                }
+                self.mask_memo[&r][i]
+            }
+        };
+        anyhow::ensure!(selected, "uplink from unselected worker {i} at round {r}");
+        let parked = self.parked.entry(r).or_insert_with(|| Parked::empty(n));
+        anyhow::ensure!(
+            parked.slots[i].is_none(),
+            "duplicate uplink from worker {i} at round {r}"
+        );
+        parked.slots[i] = Some((frame.payload, frame.residual));
+        parked.got += 1;
+        Ok(())
+    }
+
+    /// Record a lost worker whose connection the reactor already dropped:
+    /// discard its replay cache, report the fault, optionally spawn a
+    /// local replacement.
+    #[allow(clippy::disallowed_methods)] // wall-clock: reconnect-timeout bookkeeping only
+    fn lost(&mut self, i: usize) -> anyhow::Result<()> {
+        self.byte_cache[i] = None;
         // lint:allow(wall_clock, reconnect-timeout start mark; never feeds the trajectory)
-        self.lost_since.insert(id, Instant::now());
-        self.faults.push(TransportFault { worker: id, rejoined: false });
+        self.lost_since.insert(i, Instant::now());
+        self.faults.push(TransportFault { worker: i, rejoined: false });
         if self.respawn {
-            self.spawn_replacement(id)?;
+            self.spawn_replacement(i)?;
         }
         Ok(())
     }
@@ -472,7 +643,7 @@ impl TcpTransport {
         let spec = self.spec.clone().expect("transport started");
         let problem = self.problem.clone().expect("transport started");
         let addr = self.addr.expect("transport started");
-        let n = self.conns.len();
+        let n = self.n;
         // cheap registry rebuild; the n − 1 unused siblings are dropped
         let x0 = problem.init();
         let (mut fleet, _master) = match &spec.algo_name {
@@ -489,37 +660,172 @@ impl TcpTransport {
         Ok(())
     }
 
-    /// External-fleet teardown: flush each connection's downlink writer,
-    /// then blockingly read the worker's drain frame (discarding any
-    /// stale speculative uplinks in front of it) and check its digest.
-    fn drain_external(&mut self, expect: Option<u64>) -> anyhow::Result<()> {
-        for i in 0..self.conns.len() {
-            let Some(mut conn) = self.conns[i].take() else { continue };
-            conn.writer_tx = None;
-            if let Some(h) = conn.writer.take() {
-                let _ = h.join();
+    /// Collect `n` fresh registrations against a **monotonic wall-clock
+    /// deadline**. (The old implementation counted consecutive idle
+    /// accept ticks, so a trickle of connections extended the timeout
+    /// without bound and sub-10 ms timeouts collapsed to one tick.)
+    #[allow(clippy::disallowed_methods)] // wall-clock: registration deadline only
+    fn accept_registrations(&mut self, n: usize) -> anyhow::Result<()> {
+        // lint:allow(wall_clock, registration deadline; never feeds the trajectory)
+        let deadline = Instant::now() + self.registration_timeout;
+        while self.token_slot.len() < n {
+            // lint:allow(wall_clock, registration deadline check)
+            let now = Instant::now();
+            if now >= deadline {
+                let missing: Vec<String> = self
+                    .slot_token
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.is_none())
+                    .map(|(i, _)| i.to_string())
+                    .collect();
+                anyhow::bail!(
+                    "registration timed out: {} of {n} workers registered within \
+                     {:?} (missing slots: {}) — launch the remaining dore-worker \
+                     processes (--connect <master> --slot <i>) or raise \
+                     TcpTransport::registration_timeout",
+                    self.token_slot.len(),
+                    self.registration_timeout,
+                    missing.join(", ")
+                );
             }
-            conn.sock.set_nonblocking(false)?;
-            conn.sock.set_read_timeout(Some(Duration::from_secs(30)))?;
-            let digest = loop {
-                match read_frame_buffered(&mut conn) {
-                    Ok(f) if f.kind == FrameKind::Drain => break parse_drain_digest(&f.payload)?,
-                    // stale speculative uplinks ahead of the drain
-                    Ok(f) if f.kind == FrameKind::Uplink => continue,
-                    Ok(f) => anyhow::bail!(
-                        "unexpected {:?} frame while draining worker {i}",
-                        f.kind
-                    ),
-                    Err(e) => {
-                        anyhow::bail!("worker {i} never sent its drain digest: {e}")
+            let step = (deadline - now).min(Duration::from_millis(10));
+            self.pump(step, Phase::Registering, None)?;
+        }
+        Ok(())
+    }
+
+    /// Fail loudly if a lost worker the current round still needs has
+    /// stayed lost past the reconnect timeout.
+    fn check_lost_deadline(&self, round: usize, mask: &[bool]) -> anyhow::Result<()> {
+        let parked = self.parked.get(&round);
+        for (&i, t0) in &self.lost_since {
+            if !mask[i] || parked.is_some_and(|p| p.slots[i].is_some()) {
+                continue;
+            }
+            anyhow::ensure!(
+                t0.elapsed() < self.reconnect_timeout,
+                "worker {i} was lost at round {round} and nothing re-registered within \
+                 {:?} (enable TcpTransport::respawn_lost or restart the worker)",
+                self.reconnect_timeout
+            );
+        }
+        Ok(())
+    }
+
+    /// Drive the reactor until every send queue drained or `deadline`
+    /// passed; queues still dirty at the deadline (a peer that stopped
+    /// reading mid-drain) are dropped — faulted here in local mode, via
+    /// the missing-digest path in external mode (so each drop is surfaced
+    /// exactly once).
+    // lint:allow(wall_clock, bounded flush deadline parameter; never feeds the trajectory)
+    fn flush_or_fault(&mut self, deadline: Instant, fault_stuck: bool) -> anyhow::Result<()> {
+        let mut sink = std::mem::take(&mut self.sink);
+        sink.clear();
+        let flushed = match self.reactor.as_mut() {
+            Some(r) => r.flush_all(deadline, &mut sink),
+            None => Ok(Vec::new()),
+        };
+        let mut res = Ok(());
+        match flushed {
+            Ok(stuck) => {
+                for ev in sink.drain(..) {
+                    if let Err(e) = self.on_event(ev, Phase::Finishing, None) {
+                        res = Err(e);
+                        break;
                     }
                 }
-            };
-            if let Some(e) = expect {
+                if res.is_ok() {
+                    for t in stuck {
+                        if let Some(i) = self.unmap(t) {
+                            if fault_stuck {
+                                self.faults.push(TransportFault { worker: i, rejoined: false });
+                            }
+                        }
+                        self.reactor_mut().close(t);
+                    }
+                }
+            }
+            Err(e) => res = Err(e),
+        }
+        sink.clear();
+        self.sink = sink;
+        res
+    }
+
+    /// External-fleet teardown: flush tail downlinks, then keep the loop
+    /// turning until every surviving worker's drain digest arrived or the
+    /// deadline passed. A worker that never drained becomes a
+    /// [`TransportFault`] (the bounded replacement for the old
+    /// flush-and-join that could hang forever); a digest that *mismatches*
+    /// still fails the run — that is a real desync, not a dead peer.
+    #[allow(clippy::disallowed_methods)] // wall-clock: drain deadline only
+    fn drain_external(
+        &mut self,
+        expect: Option<u64>,
+        // lint:allow(wall_clock, bounded drain deadline; never feeds the trajectory)
+        deadline: Instant,
+    ) -> anyhow::Result<()> {
+        // slots with a live connection at teardown owe us a digest
+        let owed: Vec<usize> = self
+            .slot_token
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| t.map(|_| i))
+            .collect();
+        self.flush_or_fault(deadline, false)?;
+        loop {
+            let missing = owed
+                .iter()
+                .any(|&i| !self.drain_digests.contains_key(&i) && self.slot_token[i].is_some());
+            if !missing {
+                break;
+            }
+            // lint:allow(wall_clock, bounded drain deadline check)
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let step = (deadline - now).min(Duration::from_millis(10));
+            self.pump(step, Phase::Finishing, None)?;
+        }
+        for i in owed {
+            match self.drain_digests.get(&i) {
+                Some(&d) => {
+                    if let Some(e) = expect {
+                        anyhow::ensure!(
+                            d == e,
+                            "worker {i}'s final model desynced from the master's \
+                             (digest {d:016x}, master {e:016x})"
+                        );
+                    }
+                }
+                None => {
+                    // stalled or died mid-drain: bounded and surfaced
+                    // instead of hanging finish() forever
+                    self.faults.push(TransportFault { worker: i, rejoined: false });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Local teardown: flush tails (bounded), drop every socket, join the
+    /// worker threads and check their final-model digests.
+    // lint:allow(wall_clock, bounded teardown deadline parameter; never feeds the trajectory)
+    fn finish_local(&mut self, expect: Option<u64>, deadline: Instant) -> anyhow::Result<()> {
+        self.flush_or_fault(deadline, true)?;
+        let tokens: Vec<usize> = self.token_slot.keys().copied().collect();
+        let reactor = self.reactor_mut();
+        for t in tokens {
+            reactor.close(t);
+        }
+        for h in self.handles.drain(..) {
+            let digest = h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
+            if let (Some(d), Some(e)) = (digest, expect) {
                 anyhow::ensure!(
-                    digest == e,
-                    "worker {i}'s final model desynced from the master's \
-                     (digest {digest:016x}, master {e:016x})"
+                    d == e,
+                    "a worker's final model desynced from the master's (digest mismatch)"
                 );
             }
         }
@@ -551,9 +857,14 @@ impl Transport for TcpTransport {
         );
         let n = workers.len();
         let dim = problem.dim();
+        self.n = n;
         self.byte_cache = (0..n).map(|_| None).collect();
+        self.slot_token = (0..n).map(|_| None).collect();
+        self.token_slot.clear();
         self.window.reset(spec.start_round);
-        self.pending = None;
+        self.parked.clear();
+        self.mask_memo.clear();
+        self.drain_digests.clear();
         self.faults.clear();
         self.lost_since.clear();
         self.respawns.clear();
@@ -572,10 +883,11 @@ impl Transport for TcpTransport {
         };
         let addr = listener.local_addr()?;
         self.addr = Some(addr);
-        // registrations and reconnects arrive on the same listener,
-        // accepted nonblockingly with a count-based deadline
-        listener.set_nonblocking(true)?;
-        self.listener = Some(listener);
+        // registrations and reconnects arrive on the same listener, owned
+        // by the reactor alongside every accepted socket
+        let mut reactor = Reactor::new()?;
+        reactor.listen(listener)?;
+        self.reactor = Some(reactor);
 
         if self.external {
             // real processes own the nodes; ship the restored state on a
@@ -609,7 +921,7 @@ impl Transport for TcpTransport {
                 );
             }
         }
-        self.accept_registrations(n, spec.start_round)
+        self.accept_registrations(n)
     }
 
     fn begin_round(
@@ -618,7 +930,7 @@ impl Transport for TcpTransport {
         ctx: RoundCtx<'_>,
         inject: Vec<UplinkFrame>,
     ) -> anyhow::Result<()> {
-        self.window.begin(round, self.conns.len(), ctx.mask, ctx.spec.stale, inject)
+        self.window.begin(round, self.n, ctx.mask, ctx.spec.stale, inject)
     }
 
     #[allow(clippy::disallowed_methods)] // wall-clock: nonblocking-poll deadlines only
@@ -628,101 +940,48 @@ impl Transport for TcpTransport {
         ctx: RoundCtx<'_>,
     ) -> anyhow::Result<Option<Vec<UplinkFrame>>> {
         self.window.ensure_open(round)?;
-        let n = self.conns.len();
+        let n = self.n;
         let mask = ctx.mask;
         anyhow::ensure!(mask.len() == n, "round mask covers {} of {n} workers", mask.len());
         let fastest_k = match &ctx.spec.participation {
             Participation::Fastest { k } => Some(*k),
             _ => None,
         };
-        let mut pending = match self.pending.take() {
-            Some(p) if p.round == round => p,
-            _ => Pending { round, slots: (0..n).map(|_| None).collect(), got: 0 },
-        };
-        // speed-aware mode closes the barrier after the first k arrivals;
-        // derived masks await exactly the selected subset
+        // drop parked rounds the engine has moved past: under fastest
+        // these are losers' speculative frames, discarded exactly like the
+        // old per-socket reads discarded them
+        let keep = self.parked.split_off(&round);
+        self.parked = keep;
+        let keep = self.mask_memo.split_off(&round);
+        self.mask_memo = keep;
+        // speed-aware mode closes the barrier after the first k arrivals
+        // (arrival order = reactor event order); derived masks await
+        // exactly the selected subset
         let expected = fastest_k.unwrap_or_else(|| mask.iter().filter(|&&m| m).count());
         // lint:allow(wall_clock, nonblocking-poll deadline; bounds the wait, never the result)
         let deadline = Instant::now() + self.poll_wait;
-        // Workers emit uplinks in round order, so the next *fresh* frame
-        // assembled from a socket is exactly round `round`; under fastest,
-        // losers' unconsumed speculative frames of older rounds are
-        // discarded first.
-        while pending.got < expected {
-            self.admit_reconnects()?;
-            let mut progress = false;
-            'conns: for i in 0..n {
-                if !mask[i] || pending.slots[i].is_some() {
-                    continue;
-                }
-                loop {
-                    let outcome = match self.conns[i].as_mut() {
-                        Some(conn) => conn_try_read(conn)?,
-                        None => {
-                            // lost: the round stalls until a replacement
-                            // re-registers; fail loudly if none ever does
-                            if let Some(t0) = self.lost_since.get(&i) {
-                                anyhow::ensure!(
-                                    t0.elapsed() < self.reconnect_timeout,
-                                    "worker {i} was lost at round {round} and nothing \
-                                     re-registered within {:?} (enable \
-                                     TcpTransport::respawn_lost or restart the worker)",
-                                    self.reconnect_timeout
-                                );
-                            }
-                            continue 'conns;
-                        }
-                    };
-                    match outcome {
-                        SockRead::Frame(f) => {
-                            if fastest_k.is_some()
-                                && f.kind == FrameKind::Uplink
-                                && (f.round as usize) < round
-                            {
-                                // a dropped speculative uplink from an
-                                // earlier round: discard and re-read
-                                continue;
-                            }
-                            anyhow::ensure!(
-                                f.kind == FrameKind::Uplink
-                                    && f.round == round as u32
-                                    && f.worker as usize == i,
-                                "protocol skew on worker {i} at round {round}"
-                            );
-                            pending.slots[i] = Some((f.payload, f.residual));
-                            pending.got += 1;
-                            progress = true;
-                            if pending.got >= expected {
-                                break 'conns;
-                            }
-                            continue 'conns;
-                        }
-                        SockRead::WouldBlock => continue 'conns,
-                        SockRead::Lost => {
-                            self.mark_lost(i)?;
-                            continue 'conns;
-                        }
-                    }
-                }
-            }
-            if pending.got >= expected {
-                break;
-            }
+        while self.parked.get(&round).map_or(0, |p| p.got) < expected {
+            // lost: the round stalls until a replacement re-registers;
+            // fail loudly if none ever does
+            self.check_lost_deadline(round, mask)?;
             // lint:allow(wall_clock, nonblocking-poll deadline check; engine re-polls)
-            if Instant::now() >= deadline {
-                // nonblocking contract: not resolvable yet — park the
-                // partial assembly, the engine yields and re-polls
-                self.pending = Some(pending);
+            let now = Instant::now();
+            if now >= deadline {
+                // nonblocking contract: not resolvable yet — the partial
+                // assembly stays parked, the engine yields and re-polls
                 return Ok(None);
             }
-            if !progress {
-                std::thread::sleep(Duration::from_micros(500));
-            }
+            let step = (deadline - now).min(Duration::from_millis(5));
+            self.pump(step, Phase::Rounds, Some((round, mask)))?;
         }
+        let slots = self
+            .parked
+            .remove(&round)
+            .map_or_else(|| (0..n).map(|_| None).collect(), |p| p.slots);
+        self.mask_memo.remove(&round);
         let reuse = ctx.spec.stale == StalePolicy::ReuseLast;
         let mut injected = self.window.take_injected(round, n);
-        let frames = pending
-            .slots
+        let frames = slots
             .into_iter()
             .enumerate()
             .map(|(i, s)| match s {
@@ -762,59 +1021,67 @@ impl Transport for TcpTransport {
         } else {
             bytes
         };
-        // hand off to the per-worker writer threads: the master's loop
-        // stays free to keep reading uplinks, which is what prevents the
-        // depth ≥ 2 write/write deadlock on large payloads. A lost
-        // worker's broadcasts are skipped — the reconnect sync replays
-        // the model it missed.
-        let mut dead: Vec<usize> = Vec::new();
-        for (i, c) in self.conns.iter().enumerate() {
-            let Some(conn) = c else { continue };
-            let Some(tx) = &conn.writer_tx else { continue };
-            if tx.send(DownlinkMsg { round, bytes: wire.clone() }).is_err() {
-                // the writer exited on a broken socket between polls
-                dead.push(i);
+        // one refcounted broadcast payload shared by every connection's
+        // write queue (the writev split: 24 header bytes + the shared
+        // slice, never a per-worker copy); queues drain on writability, so
+        // the master's loop never blocks on a full send buffer — the
+        // depth ≥ 2 write/write deadlock guard. A lost worker's broadcasts
+        // are skipped — the reconnect sync replays the model it missed.
+        let payload: Arc<[u8]> = wire.into();
+        let header = frame_header(FrameKind::Downlink, round as u32, 0, 0.0, payload.len());
+        let targets: Vec<(usize, usize)> = self
+            .slot_token
+            .iter()
+            .enumerate()
+            .filter_map(|(i, t)| t.map(|t| (i, t)))
+            .collect();
+        let mut dead: Vec<(usize, usize)> = Vec::new();
+        for (i, t) in targets {
+            let delivered = self
+                .reactor_mut()
+                .send_frame(t, header, SendPayload::Shared(payload.clone()))?;
+            if !delivered {
+                // the peer died on the spot; the reactor dropped it
+                dead.push((i, t));
             }
         }
-        for i in dead {
-            self.mark_lost(i)?;
+        for (i, t) in dead {
+            self.token_slot.remove(&t);
+            if self.slot_token[i] == Some(t) {
+                self.slot_token[i] = None;
+            }
+            self.lost(i)?;
         }
         Ok(bits)
     }
 
+    #[allow(clippy::disallowed_methods)] // wall-clock: bounded teardown drain only
     fn finish(&mut self) -> anyhow::Result<()> {
-        // stop admitting reconnects first: a straggling replacement
-        // blocked on its sync read sees the connection close and exits
-        // cleanly (returning None) instead of hanging the join below
-        self.listener = None;
+        // stop accepting first: a straggling replacement blocked on its
+        // sync read sees the connection close and exits cleanly
+        // (returning None) instead of hanging the joins below
+        if let Some(r) = self.reactor.as_mut() {
+            r.unlisten();
+        }
         self.addr = None;
         // the cheap invariant that catches any fleet desync a fault path
         // could introduce: every surviving worker reports a digest of its
         // final model, checked against the master's iterate
         let expect = self.model_sync.take().map(|(_, m)| digest_f32(&m));
-        if self.external {
-            self.drain_external(expect)?;
+        // lint:allow(wall_clock, bounded teardown deadline; never feeds the trajectory)
+        let deadline = Instant::now() + self.drain_timeout;
+        let res = if self.external {
+            self.drain_external(expect, deadline)
         } else {
-            // dropping the senders lets each writer flush its queued
-            // downlinks and exit; join writers before workers so the tail
-            // broadcasts the workers are draining actually reach them
-            for conn in self.conns.iter_mut().filter_map(|c| c.take()) {
-                close_conn(conn);
-            }
-            for h in self.handles.drain(..) {
-                let digest =
-                    h.join().map_err(|_| anyhow::anyhow!("tcp worker panicked"))??;
-                if let (Some(d), Some(e)) = (digest, expect) {
-                    anyhow::ensure!(
-                        d == e,
-                        "a worker's final model desynced from the master's (digest mismatch)"
-                    );
-                }
-            }
-        }
-        self.conns.clear();
-        self.pending = None;
-        Ok(())
+            self.finish_local(expect, deadline)
+        };
+        self.reactor = None;
+        self.slot_token.clear();
+        self.token_slot.clear();
+        self.parked.clear();
+        self.mask_memo.clear();
+        self.drain_digests.clear();
+        res
     }
 
     fn sync_state(&mut self, next_round: usize, model: &[F]) {
@@ -842,7 +1109,10 @@ mod tests {
     use super::*;
     use crate::algorithms::AlgorithmKind;
     use crate::data::synth::linreg_problem;
+    use crate::engine::protocol::{read_frame, write_frame};
     use crate::engine::{Session, Threaded};
+    use std::io::Write as _;
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     #[test]
     fn tcp_matches_inproc_and_threaded_bit_for_bit() {
@@ -921,5 +1191,179 @@ mod tests {
         assert_eq!(live.loss, replay.loss);
         assert_eq!(live.final_model_digest, replay.final_model_digest);
         assert_eq!(live.realized_masks, replay.realized_masks);
+    }
+
+    /// Satellite bugfix pin: the registration timeout is a monotonic
+    /// wall-clock deadline. The old idle-tick counter reset on every
+    /// accept, so a trickle of connections that never registered extended
+    /// the timeout without bound.
+    #[test]
+    fn registration_deadline_is_wall_time_not_idle_ticks() {
+        let p = Arc::new(linreg_problem(20, 8, 2, 0.1, 7));
+        let spec = TrainSpec { algo: AlgorithmKind::Dore, iters: 2, ..Default::default() };
+        let mut t = TcpTransport::bind("127.0.0.1:0")
+            .unwrap()
+            .registration_timeout(Duration::from_millis(200));
+        let addr = t.local_addr().unwrap();
+        // a trickle of connections that never send a hello: each accept
+        // reset the old idle counter, deferring the timeout forever
+        let dripper = std::thread::spawn(move || {
+            let mut held = Vec::new();
+            for _ in 0..40 {
+                if let Ok(s) = TcpStream::connect(addr) {
+                    held.push(s); // keep them open so they look alive
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        });
+        let x0 = p.init();
+        let (fleet, _master) = registry::build_algorithm(spec.algo, 2, &x0, &spec.hp).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = t.start(fleet, Some(p.clone()), &spec).unwrap_err().to_string();
+        let waited = t0.elapsed();
+        assert!(err.contains("registration timed out"), "{err}");
+        assert!(err.contains("missing slots: 0, 1"), "{err}");
+        assert!(
+            waited < Duration::from_secs(5),
+            "deadline must not be extended by the connection trickle (waited {waited:?})"
+        );
+        drop(t);
+        dripper.join().unwrap();
+    }
+
+    /// Satellite bugfix pin: a slow-loris peer dribbling a partial hello
+    /// parks only its own socket. The old blocking per-accept hello read
+    /// (5 s `set_read_timeout`) stalled — and on timeout, failed —
+    /// registration of every worker queued behind it.
+    #[test]
+    fn slow_loris_hello_does_not_stall_registration() {
+        use crate::coordinator::run_remote_worker;
+        let p = Arc::new(linreg_problem(40, 10, 2, 0.1, 5));
+        let spec = TrainSpec { algo: AlgorithmKind::Dore, iters: 6, eval_every: 3, ..Default::default() };
+        let inproc = Session::new(p.as_ref()).spec(spec.clone()).run().unwrap();
+
+        let t = TcpTransport::bind("127.0.0.1:0").unwrap();
+        let addr = t.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        // the loris connects FIRST and dribbles 3 bytes of a valid header,
+        // then holds the socket open for the whole run
+        let loris_stop = stop.clone();
+        let loris = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let real = Frame {
+                kind: FrameKind::Hello,
+                round: 0,
+                worker: 0,
+                residual: 0.0,
+                payload: vec![0; 16],
+            }
+            .to_bytes();
+            s.write_all(&real[..3]).unwrap();
+            while !loris_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        });
+        // give the loris the front of the accept queue
+        std::thread::sleep(Duration::from_millis(100));
+        let workers: Vec<_> = (0..2)
+            .map(|slot| {
+                let p = p.clone();
+                let spec = spec.clone();
+                std::thread::spawn(move || {
+                    run_remote_worker(&addr.to_string(), slot, 2, false, None, p, spec)
+                })
+            })
+            .collect();
+        let live = Session::shared(p.clone()).spec(spec).transport(t).run().unwrap();
+        assert_eq!(live.final_model_digest, inproc.final_model_digest);
+        assert_eq!(live.loss, inproc.loss);
+        for w in workers {
+            w.join().unwrap().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        loris.join().unwrap();
+    }
+
+    /// Satellite bugfix pin: `finish()` is bounded. A peer that reads its
+    /// downlink but never drains used to hang the master's teardown; now
+    /// the drain deadline passes, the drop lands in `drain_faults`, and
+    /// `finish` returns.
+    #[test]
+    fn finish_is_bounded_when_a_peer_never_drains() {
+        let p = Arc::new(linreg_problem(20, 6, 1, 0.1, 3));
+        let spec = TrainSpec { algo: AlgorithmKind::Sgd, iters: 1, ..Default::default() };
+        let mut t = TcpTransport::bind("127.0.0.1:0")
+            .unwrap()
+            .drain_timeout(Duration::from_millis(200));
+        let addr = t.local_addr().unwrap();
+        let dim = p.dim();
+        let fp = spec_fingerprint(&spec, dim, 1);
+        let stop = Arc::new(AtomicBool::new(false));
+        let wedge_stop = stop.clone();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let hello = HelloBody { dim: dim as u32, n_workers: 1, fingerprint: fp };
+            write_frame(
+                &mut s,
+                &Frame {
+                    kind: FrameKind::Hello,
+                    round: 0,
+                    worker: 0,
+                    residual: 0.0,
+                    payload: hello.encode(),
+                },
+            )
+            .unwrap();
+            let sync = read_frame(&mut s).unwrap();
+            assert_eq!(sync.kind, FrameKind::Sync);
+            // uplink round 0, then read the downlink — and wedge: no
+            // drain digest, socket held open
+            write_frame(
+                &mut s,
+                &Frame {
+                    kind: FrameKind::Uplink,
+                    round: 0,
+                    worker: 0,
+                    residual: 0.0,
+                    payload: vec![1, 2, 3],
+                },
+            )
+            .unwrap();
+            let down = read_frame(&mut s).unwrap();
+            assert_eq!(down.kind, FrameKind::Downlink);
+            while !wedge_stop.load(Ordering::Relaxed) {
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            drop(s);
+        });
+        let x0 = p.init();
+        let (fleet, _master) = registry::build_algorithm(spec.algo, 1, &x0, &spec.hp).unwrap();
+        t.start(fleet, Some(p.clone()), &spec).unwrap();
+        let mask = vec![true];
+        let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+        t.begin_round(0, ctx, Vec::new()).unwrap();
+        let frames = loop {
+            let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+            if let Some(f) = t.poll_uplinks(0, ctx).unwrap() {
+                break f;
+            }
+        };
+        assert_eq!(frames.len(), 1);
+        let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+        t.push_downlink(0, &Compressed::Dense(vec![0.0; dim]), ctx).unwrap();
+        let t0 = std::time::Instant::now();
+        t.finish().unwrap();
+        let took = t0.elapsed();
+        assert!(
+            took < Duration::from_secs(5),
+            "finish() must be bounded by drain_timeout (took {took:?})"
+        );
+        let faults = t.drain_faults();
+        assert!(
+            faults.iter().any(|f| f.worker == 0 && !f.rejoined),
+            "the wedged peer must surface through drain_faults: {faults:?}"
+        );
+        stop.store(true, Ordering::Relaxed);
+        client.join().unwrap();
     }
 }

@@ -20,6 +20,15 @@
 //! itself). After its last round a worker sends a Drain frame carrying its
 //! final-model digest so an external master can verify fleet sync without
 //! joining threads.
+//!
+//! Workers keep plain blocking sockets: the asymmetry is deliberate. Each
+//! worker owns exactly one connection, so blocking reads cost it nothing,
+//! while the master multiplexes the whole fleet onto the single
+//! readiness-driven reactor in [`super::reactor`] — the worker never
+//! needs to know. One protocol consequence matters for the master's
+//! bookkeeping: a (re)registering worker blocks on the Sync reply before
+//! sending any uplink, so the master may safely treat the hello as the
+//! last small pre-registration frame on that connection.
 
 use super::link::SocketLink;
 use crate::algorithms::{digest_f32, WorkerNode};

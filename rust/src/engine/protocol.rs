@@ -20,6 +20,14 @@
 //! | 16..24 | residual      | f64 LE residual-norm diagnostic (Fig. 6)         |
 //! | 24..   | payload       | `payload_len` bytes, meaning depends on `kind`   |
 //!
+//! The header and the payload are deliberately two independent slices
+//! (built by [`frame_header`], parsed by [`parse_frame_header`]): a
+//! writev-style sender queues the 24 header bytes and the payload bytes
+//! back to back without ever concatenating them, so one broadcast payload
+//! can be shared (refcounted) across every connection's write queue.
+//! [`Frame::to_bytes`] is the single-buffer convenience form for blocking
+//! paths; the event-loop master never calls it on the hot path.
+//!
 //! ## Frame kinds
 //!
 //! | kind        | direction       | payload                                       |
@@ -98,23 +106,60 @@ pub struct Frame {
 
 impl Frame {
     /// Serialize header + payload into one buffer (one `write_all` on the
-    /// socket keeps writer threads from interleaving partial frames).
+    /// socket keeps blocking writers from interleaving partial frames).
+    /// The header half is [`frame_header`]; event-loop senders use that
+    /// directly and queue the payload as a second, shared slice.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(HEADER_BYTES + self.payload.len());
-        out.extend_from_slice(&MAGIC);
-        out.push(PROTOCOL_VERSION);
-        out.push(self.kind.as_byte());
-        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
-        out.extend_from_slice(&self.round.to_le_bytes());
-        out.extend_from_slice(&self.worker.to_le_bytes());
-        out.extend_from_slice(&self.residual.to_le_bytes());
+        out.extend_from_slice(&frame_header(
+            self.kind,
+            self.round,
+            self.worker,
+            self.residual,
+            self.payload.len(),
+        ));
         out.extend_from_slice(&self.payload);
         out
     }
 }
 
-/// Parsed header: (kind, round, worker, residual, payload_len).
-fn parse_header(h: &[u8; HEADER_BYTES]) -> Result<(FrameKind, u32, u32, f64, usize)> {
+/// A parsed frame header, decoupled from its payload bytes: reactor-style
+/// receivers parse the fixed 24 bytes first, then read `payload_len` bytes
+/// of payload *directly into the buffer the decoder will consume* — no
+/// reassembly-to-payload copy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrameHeader {
+    pub kind: FrameKind,
+    pub round: u32,
+    pub worker: u32,
+    pub residual: f64,
+    pub payload_len: usize,
+}
+
+/// Build the 24 fixed header bytes of a frame (the writev-friendly half of
+/// [`Frame::to_bytes`]): senders queue this array and the payload slice
+/// back to back, so a broadcast payload is shared, never copied per peer.
+pub fn frame_header(
+    kind: FrameKind,
+    round: u32,
+    worker: u32,
+    residual: f64,
+    payload_len: usize,
+) -> [u8; HEADER_BYTES] {
+    debug_assert!(payload_len <= MAX_PAYLOAD, "payload exceeds the wire cap");
+    let mut h = [0u8; HEADER_BYTES];
+    h[0..2].copy_from_slice(&MAGIC);
+    h[2] = PROTOCOL_VERSION;
+    h[3] = kind.as_byte();
+    h[4..8].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    h[8..12].copy_from_slice(&round.to_le_bytes());
+    h[12..16].copy_from_slice(&worker.to_le_bytes());
+    h[16..24].copy_from_slice(&residual.to_le_bytes());
+    h
+}
+
+/// Parse and validate the fixed 24 header bytes of a frame.
+pub fn parse_frame_header(h: &[u8; HEADER_BYTES]) -> Result<FrameHeader> {
     if h[0..2] != MAGIC {
         bail!(
             "bad frame magic {:02x}{:02x} (expected {:02x}{:02x} \"DR\"): \
@@ -133,14 +178,14 @@ fn parse_header(h: &[u8; HEADER_BYTES]) -> Result<(FrameKind, u32, u32, f64, usi
         );
     }
     let kind = FrameKind::from_byte(h[3])?;
-    let len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
-    if len > MAX_PAYLOAD {
-        bail!("frame payload length {len} exceeds the 1 GiB cap (corrupt length field)");
+    let payload_len = u32::from_le_bytes([h[4], h[5], h[6], h[7]]) as usize;
+    if payload_len > MAX_PAYLOAD {
+        bail!("frame payload length {payload_len} exceeds the 1 GiB cap (corrupt length field)");
     }
     let round = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
     let worker = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
     let residual = f64::from_le_bytes([h[16], h[17], h[18], h[19], h[20], h[21], h[22], h[23]]);
-    Ok((kind, round, worker, residual, len))
+    Ok(FrameHeader { kind, round, worker, residual, payload_len })
 }
 
 /// Write one frame to a blocking sink.
@@ -153,28 +198,42 @@ pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<()> {
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let mut h = [0u8; HEADER_BYTES];
     r.read_exact(&mut h).context("reading frame header")?;
-    let (kind, round, worker, residual, len) = parse_header(&h)?;
-    let mut payload = vec![0u8; len];
+    let head = parse_frame_header(&h)?;
+    let mut payload = vec![0u8; head.payload_len];
     r.read_exact(&mut payload).context("reading frame payload")?;
-    Ok(Frame { kind, round, worker, residual, payload })
+    Ok(Frame {
+        kind: head.kind,
+        round: head.round,
+        worker: head.worker,
+        residual: head.residual,
+        payload,
+    })
 }
 
 /// Nonblocking reassembly: pop one complete frame off the front of `buf` if
 /// present. Returns `Ok(None)` while the frame is still partial; the caller
-/// keeps appending received bytes and re-polling.
+/// keeps appending received bytes and re-polling. (The event-loop master
+/// uses [`crate::coordinator::reactor::RecvBuf`] instead, which reads the
+/// payload straight into its final buffer.)
 pub fn take_frame(buf: &mut Vec<u8>) -> Result<Option<Frame>> {
     if buf.len() < HEADER_BYTES {
         return Ok(None);
     }
     let mut h = [0u8; HEADER_BYTES];
     h.copy_from_slice(&buf[..HEADER_BYTES]);
-    let (kind, round, worker, residual, len) = parse_header(&h)?;
-    if buf.len() < HEADER_BYTES + len {
+    let head = parse_frame_header(&h)?;
+    if buf.len() < HEADER_BYTES + head.payload_len {
         return Ok(None);
     }
-    let payload = buf[HEADER_BYTES..HEADER_BYTES + len].to_vec();
-    buf.drain(..HEADER_BYTES + len);
-    Ok(Some(Frame { kind, round, worker, residual, payload }))
+    let payload = buf[HEADER_BYTES..HEADER_BYTES + head.payload_len].to_vec();
+    buf.drain(..HEADER_BYTES + head.payload_len);
+    Ok(Some(Frame {
+        kind: head.kind,
+        round: head.round,
+        worker: head.worker,
+        residual: head.residual,
+        payload,
+    }))
 }
 
 /// Hello/Reconnect payload: the worker's view of the run. The master
@@ -450,6 +509,23 @@ mod tests {
         assert_eq!(take_frame(&mut two).unwrap().unwrap().round, 7);
         assert_eq!(take_frame(&mut two).unwrap().unwrap().round, 8);
         assert!(two.is_empty());
+    }
+
+    #[test]
+    fn frame_header_split_matches_to_bytes() {
+        // the writev split: header array + payload slice must concatenate
+        // to exactly the single-buffer serialization
+        let f = frame();
+        let h = frame_header(f.kind, f.round, f.worker, f.residual, f.payload.len());
+        let mut split = h.to_vec();
+        split.extend_from_slice(&f.payload);
+        assert_eq!(split, f.to_bytes());
+        let parsed = parse_frame_header(&h).unwrap();
+        assert_eq!(parsed.kind, f.kind);
+        assert_eq!(parsed.round, f.round);
+        assert_eq!(parsed.worker, f.worker);
+        assert_eq!(parsed.residual, f.residual);
+        assert_eq!(parsed.payload_len, f.payload.len());
     }
 
     #[test]

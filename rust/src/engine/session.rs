@@ -768,6 +768,22 @@ impl<'p> Session<'p> {
         }
         transport.finish()?;
 
+        // Teardown can itself observe connection faults (a peer that never
+        // drained within the transport's bounded shutdown window). Surface
+        // them like in-round faults, stamped with the final round, so the
+        // recovery stream never silently swallows a wedged peer.
+        for tf in transport.drain_faults() {
+            let ev = if tf.rejoined {
+                RecoveryEvent::WorkerRejoined { round: spec.iters, worker: tf.worker }
+            } else {
+                RecoveryEvent::WorkerLost { round: spec.iters, worker: tf.worker }
+            };
+            metrics.on_recovery(&ev);
+            for o in observers.iter_mut() {
+                o.on_recovery(&ev);
+            }
+        }
+
         // metrics accumulated the per-round bits through its Observer impl;
         // the summary reuses those totals rather than keeping a second
         // accumulator that could drift from what observers saw.

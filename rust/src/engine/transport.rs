@@ -835,10 +835,18 @@ impl Transport for InProc {
 
 /// One round's received-but-unassembled uplinks (filled-slot count kept
 /// alongside so the poll barrier doesn't rescan the slots per message).
-#[derive(Default)]
-struct ParkedRound {
-    got: usize,
-    slots: Vec<Option<UplinkMsg>>,
+/// Shared by every self-paced transport: the channel master parks whole
+/// [`UplinkMsg`]s, the socket master parks `(payload, residual)` pairs
+/// assembled by its reactor.
+pub(crate) struct Parked<T> {
+    pub(crate) got: usize,
+    pub(crate) slots: Vec<Option<T>>,
+}
+
+impl<T> Parked<T> {
+    pub(crate) fn empty(n: usize) -> Self {
+        Parked { got: 0, slots: (0..n).map(|_| None).collect() }
+    }
 }
 
 /// Channel transport: one master-side engine plus one OS thread per worker,
@@ -858,7 +866,7 @@ pub struct Threaded {
     down_txs: Vec<SyncSender<DownlinkMsg>>,
     handles: Vec<JoinHandle<anyhow::Result<()>>>,
     /// Frames received ahead of their round's poll, keyed by round.
-    parked: BTreeMap<usize, ParkedRound>,
+    parked: BTreeMap<usize, Parked<UplinkMsg>>,
     /// Memoized participation masks of later in-flight rounds (computed at
     /// most once per round, dropped when the round is assembled).
     mask_memo: BTreeMap<usize, Vec<bool>>,
@@ -1032,10 +1040,7 @@ impl Transport for Threaded {
                 msg.worker,
                 msg.round
             );
-            let parked = self.parked.entry(msg.round).or_insert_with(|| ParkedRound {
-                got: 0,
-                slots: (0..n).map(|_| None).collect(),
-            });
+            let parked = self.parked.entry(msg.round).or_insert_with(|| Parked::empty(n));
             anyhow::ensure!(parked.slots[msg.worker].is_none(), "duplicate uplink");
             let w = msg.worker;
             parked.slots[w] = Some(msg);

@@ -1,0 +1,372 @@
+//! Reactor properties (ISSUE 10). Like the other proptest suites, the
+//! environment has no proptest crate, so this is a hand-rolled driver
+//! over randomized cases drawn from a fixed-seed LCG.
+//!
+//! The properties:
+//! 1. **Reassembly is chunking-invariant.** A `RecvBuf` fed any random
+//!    partition of a multi-frame byte stream — including 0-byte
+//!    `WouldBlock` interruptions straddling header and payload
+//!    boundaries — yields exactly the original frame sequence.
+//! 2. **Buffered sends are quota-invariant.** A `SendQueue` drained
+//!    through a writer that accepts an arbitrary number of bytes per
+//!    call (including `WouldBlock` stalls mid-header and mid-payload)
+//!    produces a byte stream that re-parses into the original frames,
+//!    shared broadcast payloads included.
+//! 3. **The slab is a map.** Random insert/remove interleavings agree
+//!    with a `BTreeMap` model: same lookups, same lengths, and freed
+//!    keys are reused without ever aliasing a live entry.
+//! 4. **The event loop survives adversarial scheduling.** N real
+//!    localhost clients interleave M frames each in random chunk sizes
+//!    while the reactor is polled with tiny timeouts (spurious wakeups);
+//!    every frame arrives intact, every echoed reply comes back, and no
+//!    event names a dropped token.
+
+#![deny(deprecated)]
+
+use dore::coordinator::reactor::{
+    FlushStatus, IoEvent, Reactor, RecvBuf, RecvStep, SendPayload, SendQueue, Slab,
+};
+use dore::engine::protocol::{
+    frame_header, take_frame, Frame, FrameKind, MAX_PAYLOAD,
+};
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fixed-seed splitmix-style generator: deterministic cases, no OS
+/// entropy (the same discipline the determinism lint enforces in-crate).
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Self {
+        Lcg(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(1))
+    }
+
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let x = self.0;
+        (x ^ (x >> 33)).wrapping_mul(0xff51_afd7_ed55_8ccd)
+    }
+
+    /// Uniform in `[0, bound)`; `bound` must be nonzero.
+    fn below(&mut self, bound: usize) -> usize {
+        (self.next() % bound as u64) as usize
+    }
+}
+
+fn random_frame(rng: &mut Lcg, max_payload: usize) -> Frame {
+    let kinds = [
+        FrameKind::Uplink,
+        FrameKind::Downlink,
+        FrameKind::Hello,
+        FrameKind::Reconnect,
+        FrameKind::Sync,
+        FrameKind::Drain,
+    ];
+    let len = rng.below(max_payload + 1);
+    Frame {
+        kind: kinds[rng.below(kinds.len())],
+        round: rng.next() as u32,
+        worker: rng.next() as u32,
+        residual: (rng.next() % 1_000_000) as f64 / 997.0,
+        payload: (0..len).map(|_| rng.next() as u8).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 1: RecvBuf reassembly is chunking-invariant.
+// ---------------------------------------------------------------------------
+
+/// A `Read` that serves a fixed byte string according to a chunk script:
+/// each entry is either a byte count to deliver or a `WouldBlock` stall
+/// (encoded as 0). After the script runs dry it blocks forever.
+struct ChunkScript {
+    data: Vec<u8>,
+    pos: usize,
+    script: Vec<usize>,
+    step: usize,
+}
+
+impl Read for ChunkScript {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if self.step >= self.script.len() {
+            return Err(ErrorKind::WouldBlock.into());
+        }
+        let want = self.script[self.step];
+        self.step += 1;
+        if want == 0 {
+            return Err(ErrorKind::WouldBlock.into());
+        }
+        let k = want.min(out.len()).min(self.data.len() - self.pos);
+        if k == 0 {
+            return Err(ErrorKind::WouldBlock.into());
+        }
+        out[..k].copy_from_slice(&self.data[self.pos..self.pos + k]);
+        self.pos += k;
+        Ok(k)
+    }
+}
+
+#[test]
+fn recvbuf_reassembly_is_chunking_invariant() {
+    let mut rng = Lcg::new(0x5eed_0001);
+    for case in 0..60 {
+        let frames: Vec<Frame> =
+            (0..1 + rng.below(6)).map(|_| random_frame(&mut rng, 200)).collect();
+        let mut data = Vec::new();
+        for f in &frames {
+            data.extend_from_slice(&f.to_bytes());
+        }
+        // random partition of the stream, salted with WouldBlock stalls
+        let mut script = Vec::new();
+        let mut covered = 0usize;
+        while covered < data.len() {
+            if rng.below(4) == 0 {
+                script.push(0); // a spurious-wakeup stall
+            }
+            let k = 1 + rng.below(37);
+            script.push(k);
+            covered += k;
+        }
+        script.push(0);
+        let mut src = ChunkScript { data, pos: 0, script, step: 0 };
+        let mut buf = RecvBuf::new(MAX_PAYLOAD);
+        let mut got = Vec::new();
+        loop {
+            match buf.try_frame(&mut src).unwrap() {
+                RecvStep::Frame(f) => got.push(f),
+                RecvStep::WouldBlock => {
+                    if src.step >= src.script.len() {
+                        break;
+                    }
+                }
+                RecvStep::Closed => panic!("case {case}: spurious Closed"),
+            }
+        }
+        assert_eq!(got, frames, "case {case}: reassembly diverged from the source frames");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 2: SendQueue byte stream is quota-invariant.
+// ---------------------------------------------------------------------------
+
+/// A `Write` that accepts at most its scripted quota per call; a quota of
+/// 0 is a `WouldBlock` stall. After the script runs dry it accepts
+/// everything (so the final flush can complete).
+struct QuotaWriter {
+    out: Vec<u8>,
+    script: Vec<usize>,
+    step: usize,
+}
+
+impl Write for QuotaWriter {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let quota = if self.step < self.script.len() {
+            let q = self.script[self.step];
+            self.step += 1;
+            q
+        } else {
+            buf.len()
+        };
+        if quota == 0 {
+            return Err(ErrorKind::WouldBlock.into());
+        }
+        let k = quota.min(buf.len());
+        self.out.extend_from_slice(&buf[..k]);
+        Ok(k)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn sendqueue_stream_is_quota_invariant() {
+    let mut rng = Lcg::new(0x5eed_0002);
+    for case in 0..60 {
+        let frames: Vec<Frame> =
+            (0..1 + rng.below(6)).map(|_| random_frame(&mut rng, 160)).collect();
+        // a shared broadcast payload rides along in every case, queued as
+        // Shared the way push_downlink queues it for every peer
+        let shared: Arc<[u8]> = frames[0].payload.clone().into();
+        let mut q = SendQueue::new();
+        for f in &frames {
+            q.push_frame(
+                frame_header(f.kind, f.round, f.worker, f.residual, f.payload.len()),
+                SendPayload::Owned(f.payload.clone()),
+            );
+        }
+        q.push_frame(
+            frame_header(FrameKind::Downlink, 7, 0, 0.0, shared.len()),
+            SendPayload::Shared(shared.clone()),
+        );
+        let script: Vec<usize> = (0..rng.below(200)).map(|_| rng.below(23)).collect();
+        let mut w = QuotaWriter { out: Vec::new(), script, step: 0 };
+        loop {
+            match q.flush(&mut w) {
+                FlushStatus::Clean => break,
+                FlushStatus::Pending => continue,
+                FlushStatus::Closed => panic!("case {case}: writer never closes"),
+            }
+        }
+        assert!(q.is_empty() && q.buffered_bytes() == 0, "case {case}: queue not drained");
+        let mut stream = w.out;
+        let mut got = Vec::new();
+        while let Some(f) = take_frame(&mut stream).unwrap() {
+            got.push(f);
+        }
+        assert!(stream.is_empty(), "case {case}: trailing bytes after the last frame");
+        assert_eq!(got.len(), frames.len() + 1, "case {case}");
+        assert_eq!(&got[..frames.len()], &frames[..], "case {case}: owned frames diverged");
+        assert_eq!(got[frames.len()].payload, &shared[..], "case {case}: shared payload diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property 3: Slab == BTreeMap under random interleavings.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn slab_agrees_with_a_btreemap_model() {
+    let mut rng = Lcg::new(0x5eed_0003);
+    let mut slab: Slab<u64> = Slab::new();
+    let mut model: BTreeMap<usize, u64> = BTreeMap::new();
+    let mut live: Vec<usize> = Vec::new();
+    for step in 0..4000 {
+        if live.is_empty() || rng.below(3) != 0 {
+            let v = rng.next();
+            let k = slab.insert(v);
+            assert!(
+                model.insert(k, v).is_none(),
+                "step {step}: slab reused key {k} while it was still live"
+            );
+            live.push(k);
+        } else {
+            let k = live.swap_remove(rng.below(live.len()));
+            assert_eq!(slab.remove(k), model.remove(&k), "step {step}: removed value diverged");
+            assert!(!slab.contains(k), "step {step}: key {k} survives its removal");
+        }
+        assert_eq!(slab.len(), model.len(), "step {step}");
+        assert_eq!(slab.is_empty(), model.is_empty(), "step {step}");
+        // spot-check lookups on a few random keys, live or dead
+        for _ in 0..4 {
+            let k = rng.below(live.len().max(1) * 2 + 1);
+            assert_eq!(slab.get(k).copied(), model.get(&k).copied(), "step {step}, key {k}");
+        }
+    }
+    let from_iter: BTreeMap<usize, u64> = slab.iter().map(|(k, v)| (k, *v)).collect();
+    assert_eq!(from_iter, model, "iteration must visit exactly the live entries");
+}
+
+// ---------------------------------------------------------------------------
+// Property 4: the event loop under adversarial client scheduling.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reactor_survives_interleaved_clients_and_spurious_wakeups() {
+    const CLIENTS: usize = 7;
+    const FRAMES_EACH: usize = 5;
+    let mut rng = Lcg::new(0x5eed_0004);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let mut reactor = Reactor::new().unwrap();
+    reactor.listen(listener).unwrap();
+
+    // per-client frame schedules, precomputed so the writer threads stay
+    // deterministic given the seed
+    let mut schedules = Vec::new();
+    for c in 0..CLIENTS {
+        let frames: Vec<Frame> = (0..FRAMES_EACH)
+            .map(|i| {
+                let mut f = random_frame(&mut rng, 120);
+                f.kind = FrameKind::Uplink;
+                f.worker = c as u32;
+                f.round = i as u32;
+                f
+            })
+            .collect();
+        let chunks: Vec<usize> = (0..64).map(|_| 1 + rng.below(29)).collect();
+        schedules.push((frames, chunks));
+    }
+
+    let mut writers = Vec::new();
+    let mut expected: BTreeMap<u32, Vec<Frame>> = BTreeMap::new();
+    for (c, (frames, chunks)) in schedules.into_iter().enumerate() {
+        expected.insert(c as u32, frames.clone());
+        writers.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let mut bytes = Vec::new();
+            for f in &frames {
+                bytes.extend_from_slice(&f.to_bytes());
+            }
+            let mut at = 0usize;
+            let mut turn = 0usize;
+            while at < bytes.len() {
+                let k = chunks[turn % chunks.len()].min(bytes.len() - at);
+                turn += 1;
+                s.write_all(&bytes[at..at + k]).unwrap();
+                at += k;
+                if turn % 3 == 0 {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+            // read the per-client echo receipt the reactor side sends once
+            // it has seen all of this client's frames
+            let mut receipt = [0u8; 24];
+            s.read_exact(&mut receipt).unwrap();
+            receipt
+        }));
+    }
+
+    // drive the loop with deliberately tiny timeouts: most cycles are
+    // spurious wakeups that must observe nothing and corrupt nothing
+    let mut got: BTreeMap<u32, Vec<Frame>> = BTreeMap::new();
+    let mut token_done: BTreeMap<u32, usize> = BTreeMap::new();
+    let mut sink: Vec<IoEvent> = Vec::new();
+    let mut receipts = 0usize;
+    let mut cycles = 0usize;
+    while receipts < CLIENTS {
+        cycles += 1;
+        assert!(cycles < 200_000, "event loop failed to converge: {receipts}/{CLIENTS} receipts");
+        reactor.poll_io(Duration::from_millis(1), &mut sink).unwrap();
+        for ev in sink.drain(..) {
+            match ev {
+                IoEvent::Accepted(tok) => {
+                    // lift the pre-hello cap: these synthetic uplinks are
+                    // not hellos and may exceed it
+                    reactor.set_recv_cap(tok, MAX_PAYLOAD);
+                }
+                IoEvent::Frame { token, frame } => {
+                    let worker = frame.worker;
+                    let bucket = got.entry(worker).or_default();
+                    bucket.push(frame);
+                    if bucket.len() == FRAMES_EACH {
+                        token_done.insert(worker, token);
+                    }
+                }
+                IoEvent::Closed(_) => {}
+                IoEvent::Bad { error, .. } => panic!("protocol violation reported: {error:#}"),
+            }
+        }
+        // send each finished client its empty receipt frame exactly once
+        for (worker, token) in std::mem::take(&mut token_done) {
+            let head = frame_header(FrameKind::Sync, 0, worker, 0.0, 0);
+            assert!(
+                reactor.send_frame(token, head, SendPayload::Owned(Vec::new())).unwrap(),
+                "receipt send to live client {worker} failed"
+            );
+            receipts += 1;
+        }
+    }
+
+    assert_eq!(got, expected, "frames must survive interleaving bit for bit");
+    for w in writers {
+        let receipt = w.join().unwrap();
+        assert_eq!(receipt[3], FrameKind::Sync.as_byte(), "client got a non-receipt frame");
+    }
+}

@@ -1,0 +1,317 @@
+//! The 10k-connection smoke (ISSUE 10): one master event loop, ten
+//! thousand registered workers, zero per-worker master threads.
+//!
+//! This is the test the old thread-per-connection master could not run —
+//! 10k reader threads plus 10k downlink-writer threads is 20k OS threads
+//! before the first round. The reactor master holds the whole fleet as
+//! slab entries in a single epoll loop, so the process thread count stays
+//! flat at "test thread + a handful of client-driver threads" while
+//! registration, one full gather round, a broadcast, and the drain
+//! barrier all complete.
+//!
+//! Like the fleet suite this binds real sockets at real scale, so it is
+//! opt-in: set `DORE_SCALE_TESTS=1` (CI's fleet-smoke job runs it with a
+//! reduced `DORE_SCALE_N`; the default fleet is 10_000). The fleet size
+//! self-clamps to the `RLIMIT_NOFILE` actually granted — master and
+//! clients share one process here, so every worker costs two
+//! descriptors.
+
+#![deny(deprecated)]
+
+use dore::compression::Compressed;
+use dore::coordinator::reactor::raise_nofile_limit;
+use dore::coordinator::tcp::TcpTransport;
+use dore::data::synth::linreg_problem;
+use dore::engine::protocol::{
+    drain_digest_payload, read_frame, spec_fingerprint, write_frame, Frame, FrameKind, HelloBody,
+};
+use dore::engine::registry::build_algorithm;
+use dore::engine::{RoundCtx, TrainSpec, Transport};
+use dore::models::Problem;
+use std::io::ErrorKind;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const CLIENT_THREADS: usize = 8;
+
+fn enabled(test: &str) -> bool {
+    if std::env::var("DORE_SCALE_TESTS").ok().as_deref() == Some("1") {
+        true
+    } else {
+        eprintln!("skipping {test}: set DORE_SCALE_TESTS=1 to run the 10k-connection smoke");
+        false
+    }
+}
+
+/// Current thread count of this process (Linux; `None` elsewhere, which
+/// skips the flat-thread-count assertion but still runs the I/O smoke).
+fn process_threads() -> Option<usize> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("Threads:"))
+        .and_then(|v| v.trim().parse().ok())
+}
+
+/// Connect with retry: under a 10k-connection stampede individual
+/// connects may be refused transiently while the accept queue churns.
+fn connect_patiently(addr: std::net::SocketAddr, deadline: Instant) -> TcpStream {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "could not connect a smoke client before the deadline: {e}"
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+#[test]
+fn ten_thousand_workers_register_and_gather_with_no_per_worker_thread() {
+    if !enabled("ten_thousand_workers_register_and_gather_with_no_per_worker_thread") {
+        return;
+    }
+
+    // Master + clients live in one process, so each worker costs two fds
+    // (plus listener/epoll/stdio slack); clamp the fleet to what the
+    // kernel actually grants.
+    let want: usize = std::env::var("DORE_SCALE_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(10_000);
+    let limit = raise_nofile_limit(2 * want as u64 + 512);
+    let n = want.min(((limit.saturating_sub(512)) / 2) as usize).max(64);
+    if n < want {
+        eprintln!("scale smoke: RLIMIT_NOFILE {limit} clamps the fleet to {n} (wanted {want})");
+    }
+
+    let p: Arc<dyn Problem> = Arc::new(linreg_problem(2 * n, 16, n, 0.1, 7));
+    let dim = p.dim();
+    let spec = TrainSpec { iters: 1, ..Default::default() };
+    let fp = spec_fingerprint(&spec, dim, n);
+
+    let mut t = TcpTransport::bind("127.0.0.1:0")
+        .unwrap()
+        .registration_timeout(Duration::from_secs(300))
+        .drain_timeout(Duration::from_secs(120));
+    let addr = t.local_addr().unwrap();
+
+    let baseline_threads = process_threads();
+
+    // Client drivers: each owns an interleaved shard of the fleet and
+    // walks it through hello → sync → uplink → downlink → drain. They
+    // must be running before start(), which blocks until all n register.
+    let deadline = Instant::now() + Duration::from_secs(280);
+    let mut drivers = Vec::new();
+    for lane in 0..CLIENT_THREADS {
+        drivers.push(std::thread::spawn(move || {
+            let slots: Vec<usize> = (lane..n).step_by(CLIENT_THREADS).collect();
+            let mut socks = Vec::with_capacity(slots.len());
+            for &slot in &slots {
+                let mut s = connect_patiently(addr, deadline);
+                s.set_read_timeout(Some(Duration::from_secs(280))).unwrap();
+                let hello = HelloBody { dim: dim as u32, n_workers: n as u32, fingerprint: fp };
+                write_frame(
+                    &mut s,
+                    &Frame {
+                        kind: FrameKind::Hello,
+                        round: 0,
+                        worker: slot as u32,
+                        residual: 0.0,
+                        payload: hello.encode(),
+                    },
+                )
+                .unwrap();
+                let sync = read_frame(&mut s).unwrap();
+                assert_eq!(sync.kind, FrameKind::Sync, "slot {slot}");
+                socks.push((slot, s));
+            }
+            // registration done for this lane; round 0
+            for (slot, s) in socks.iter_mut() {
+                write_frame(
+                    s,
+                    &Frame {
+                        kind: FrameKind::Uplink,
+                        round: 0,
+                        worker: *slot as u32,
+                        residual: 0.0,
+                        payload: vec![*slot as u8, 0xd0, 0x7e],
+                    },
+                )
+                .unwrap();
+            }
+            for (slot, s) in socks.iter_mut() {
+                let down = read_frame(s).unwrap();
+                assert_eq!(down.kind, FrameKind::Downlink, "slot {slot}");
+                assert_eq!(down.round, 0, "slot {slot}");
+                write_frame(
+                    s,
+                    &Frame {
+                        kind: FrameKind::Drain,
+                        round: 0,
+                        worker: *slot as u32,
+                        residual: 0.0,
+                        payload: drain_digest_payload(0),
+                    },
+                )
+                .unwrap();
+            }
+            socks.len()
+        }));
+    }
+
+    // The master: registration + one gather/broadcast round, driven
+    // directly through the Transport interface on this one thread.
+    let x0 = p.init();
+    let (fleet, _master) = build_algorithm(spec.algo, n, &x0, &spec.hp).unwrap();
+    t.start(fleet, Some(p.clone()), &spec).unwrap();
+
+    // every worker is registered and no round has begun: if the master
+    // were thread-per-worker this is where ~2n threads would exist
+    if let (Some(before), Some(during)) = (baseline_threads, process_threads()) {
+        let added = during.saturating_sub(before);
+        assert!(
+            added <= CLIENT_THREADS + 4,
+            "master must not spawn per-worker threads: {added} threads appeared for a \
+             fleet of {n} (baseline {before}, now {during})"
+        );
+    }
+
+    let mask = vec![true; n];
+    let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+    t.begin_round(0, ctx, Vec::new()).unwrap();
+    let frames = loop {
+        let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+        match t.poll_uplinks(0, ctx).unwrap() {
+            Some(f) => break f,
+            None => continue,
+        }
+    };
+    assert_eq!(frames.len(), n, "the gather must assemble the whole fleet");
+    for (i, f) in frames.iter().enumerate() {
+        assert_eq!(f.worker, i, "gather order must be slot order");
+        assert_eq!(f.round, 0);
+    }
+
+    let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+    t.push_downlink(0, &Compressed::Dense(vec![0.0; dim]), ctx).unwrap();
+    t.finish().unwrap();
+    let faults = t.drain_faults();
+    assert!(
+        faults.is_empty(),
+        "a clean fleet must drain without connection faults: {faults:?}"
+    );
+
+    for d in drivers {
+        match d.join() {
+            Ok(count) => assert!(count > 0),
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+}
+
+/// Absent-socket hygiene at scale: the listener refuses nothing while
+/// registering, so a connection that dials in and immediately leaves must
+/// not consume a slot or wedge the fleet. (A cheap adjunct to the big
+/// smoke — it reuses its gate so CI runs both together.)
+#[test]
+fn drive_by_connections_do_not_poison_registration() {
+    if !enabled("drive_by_connections_do_not_poison_registration") {
+        return;
+    }
+    let n = 16usize;
+    let p: Arc<dyn Problem> = Arc::new(linreg_problem(64, 8, n, 0.1, 11));
+    let dim = p.dim();
+    let spec = TrainSpec { iters: 1, ..Default::default() };
+    let fp = spec_fingerprint(&spec, dim, n);
+    let mut t = TcpTransport::bind("127.0.0.1:0")
+        .unwrap()
+        .registration_timeout(Duration::from_secs(60));
+    let addr = t.local_addr().unwrap();
+
+    let driver = std::thread::spawn(move || {
+        // a burst of drive-bys: connect and vanish without a byte
+        for _ in 0..32 {
+            drop(TcpStream::connect(addr));
+        }
+        let mut socks = Vec::new();
+        for slot in 0..n {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+            let hello = HelloBody { dim: dim as u32, n_workers: n as u32, fingerprint: fp };
+            write_frame(
+                &mut s,
+                &Frame {
+                    kind: FrameKind::Hello,
+                    round: 0,
+                    worker: slot as u32,
+                    residual: 0.0,
+                    payload: hello.encode(),
+                },
+            )
+            .unwrap();
+            let sync = read_frame(&mut s).unwrap();
+            assert_eq!(sync.kind, FrameKind::Sync);
+            socks.push((slot, s));
+        }
+        for (slot, s) in socks.iter_mut() {
+            write_frame(
+                s,
+                &Frame {
+                    kind: FrameKind::Uplink,
+                    round: 0,
+                    worker: *slot as u32,
+                    residual: 0.0,
+                    payload: vec![7],
+                },
+            )
+            .unwrap();
+            let down = read_frame(s).unwrap();
+            assert_eq!(down.kind, FrameKind::Downlink);
+            write_frame(
+                s,
+                &Frame {
+                    kind: FrameKind::Drain,
+                    round: 0,
+                    worker: *slot as u32,
+                    residual: 0.0,
+                    payload: drain_digest_payload(0),
+                },
+            )
+            .unwrap();
+        }
+    });
+
+    let x0 = p.init();
+    let (fleet, _master) = build_algorithm(spec.algo, n, &x0, &spec.hp).unwrap();
+    t.start(fleet, Some(p.clone()), &spec).unwrap();
+    let mask = vec![true; n];
+    let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+    t.begin_round(0, ctx, Vec::new()).unwrap();
+    let frames = loop {
+        let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+        match t.poll_uplinks(0, ctx).unwrap() {
+            Some(f) => break f,
+            None => continue,
+        }
+    };
+    assert_eq!(frames.len(), n);
+    let ctx = RoundCtx { problem: p.as_ref(), spec: &spec, mask: &mask };
+    t.push_downlink(0, &Compressed::Dense(vec![0.0; dim]), ctx).unwrap();
+    t.finish().unwrap();
+    driver.join().unwrap();
+
+    // finish() drops the listener, so a late dial must be refused
+    match TcpStream::connect(addr) {
+        Ok(_) => panic!("the master's listener must be gone after finish()"),
+        Err(e) => assert!(
+            matches!(e.kind(), ErrorKind::ConnectionRefused | ErrorKind::TimedOut),
+            "unexpected post-finish connect error: {e}"
+        ),
+    }
+}
